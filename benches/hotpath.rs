@@ -1,0 +1,115 @@
+//! §Perf micro-benchmarks for the request hot path, per layer:
+//!
+//!   L3  — plan/bias construction, Segment Means (rust), tensor
+//!         slice/concat, message codec, batcher-side row stacking,
+//!         end-to-end block dispatch overhead (engine.run minus XLA time)
+//!   L2  — AOT block executables (xla flavor): per-block latency across
+//!         strategies/batch sizes
+//!   L1  — pallas-flavor block vs xla-flavor block (interpret-mode cost
+//!         on CPU; on TPU the pallas kernel is the optimized path)
+//!
+//! Results feed EXPERIMENTS.md §Perf.
+
+use anyhow::Result;
+
+use prism::bench_util::{bench, require_artifacts};
+use prism::coordinator::plan::plans;
+use prism::coordinator::segmeans::segment_means;
+use prism::net::message::Msg;
+use prism::runtime::{Engine, Tensor, WeightSet};
+use prism::util::rng::Rng;
+
+fn main() -> Result<()> {
+    let Some(m) = require_artifacts() else { return Ok(()) };
+    let mut rng = Rng::new(1);
+
+    println!("== L3 substrate micro-benches ==");
+    {
+        let st = bench(10, 200, || {
+            let pls = plans(65, 3, 5, true).unwrap();
+            for pl in &pls {
+                std::hint::black_box(pl.bias().unwrap());
+            }
+        });
+        println!("plan+bias build (N=65,P=3,L=5,causal): {}", st.per_op());
+
+        let x = Tensor::from_f32(vec![16, 33, 128],
+                                 rng.normal_vec(16 * 33 * 128, 1.0))?;
+        let st = bench(10, 200, || {
+            std::hint::black_box(segment_means(&x, 6).unwrap());
+        });
+        println!("segment_means (16x33x128 -> L=6):      {}", st.per_op());
+
+        let st = bench(10, 200, || {
+            let a = x.slice1(0, 16).unwrap();
+            let b = x.slice1(16, 33).unwrap();
+            std::hint::black_box(Tensor::concat1(&[&a, &b]).unwrap());
+        });
+        println!("slice1 + concat1 (16x33x128):          {}", st.per_op());
+
+        let z = Tensor::from_f32(vec![16, 6, 128],
+                                 rng.normal_vec(16 * 6 * 128, 1.0))?;
+        let msg = Msg::Exchange { layer: 0, from: 0, data: z };
+        let st = bench(10, 500, || {
+            let buf = msg.encode();
+            std::hint::black_box(Msg::decode(&buf).unwrap());
+        });
+        println!("exchange codec roundtrip (48 KiB):     {}", st.per_op());
+    }
+
+    println!("\n== L2 block executables (xla flavor, steady state) ==");
+    let mut engine = Engine::new(m.clone())?;
+    let ws = WeightSet::load(&m, "vit_synth10")?;
+    let gws = WeightSet::load(&m, "gpt2")?;
+    let cases = [
+        ("vit_single_part0_b16_xla", "vit single   b16", &ws),
+        ("vit_voltage_p2_part0_b16_xla", "vit voltage  b16", &ws),
+        ("vit_prism_p2l6_part0_b16_xla", "vit prism    b16", &ws),
+        ("vit_prism_p2l6_part0_b1_xla", "vit prism    b1 ", &ws),
+        ("gpt2_prism_p2l16_part0_b16_xla", "gpt2 prism   b16", &gws),
+    ];
+    for (exec, label, wsx) in cases {
+        let spec = m.exec(exec)?.clone();
+        let args: Vec<Tensor> = spec
+            .args
+            .iter()
+            .map(|a| {
+                let numel: usize = a.shape.iter().product();
+                Tensor::from_f32(a.shape.clone(),
+                                 rng.normal_vec(numel, 0.3)).unwrap()
+            })
+            .collect();
+        let refs: Vec<&Tensor> = args.iter().collect();
+        engine.ensure_compiled(exec)?;
+        let st = bench(3, 30, || {
+            std::hint::black_box(
+                engine.run(exec, wsx, 1, &refs).unwrap());
+        });
+        println!("{label}: {}", st.per_op());
+    }
+
+    println!("\n== L1 pallas (interpret) vs xla fused flavor ==");
+    for flavor in ["xla", "pallas"] {
+        let exec = format!("vit_prism_p2l6_part0_b16_{flavor}");
+        let spec = m.exec(&exec)?.clone();
+        let args: Vec<Tensor> = spec
+            .args
+            .iter()
+            .map(|a| {
+                let numel: usize = a.shape.iter().product();
+                Tensor::from_f32(a.shape.clone(),
+                                 rng.normal_vec(numel, 0.3)).unwrap()
+            })
+            .collect();
+        let refs: Vec<&Tensor> = args.iter().collect();
+        engine.ensure_compiled(&exec)?;
+        let st = bench(3, 20, || {
+            std::hint::black_box(engine.run(&exec, &ws, 1, &refs).unwrap());
+        });
+        println!("vit prism block b16 [{flavor:>6}]: {}", st.per_op());
+    }
+    println!("\n(engine stats: {} compiles, {:.0} ms compiling, {} \
+              executions)", engine.stats.compiles,
+             engine.stats.compile_ms, engine.stats.executions);
+    Ok(())
+}

@@ -1,0 +1,93 @@
+//! Reproduces paper Table V: BERT over the 8 GLUE-proxy tasks.
+//!
+//! GFLOPs at paper scale (BERT-Base, N = 256); task metrics measured
+//! end-to-end on the AOT artifacts (Acc / F1 / MCC / Spearman, matching
+//! the paper's per-task metric choices).
+
+use anyhow::Result;
+
+use prism::bench_util::{eval_limit, require_artifacts};
+use prism::coordinator::plan::{effective_cr, landmarks_for_cr};
+use prism::coordinator::{Mode, Runner};
+use prism::data::Dataset;
+use prism::eval::{evaluate, EvalOpts};
+use prism::metrics::report::{f2, opt, pct, Table};
+use prism::model::paper::BERT_BASE;
+use prism::model::{comm, flops};
+use prism::runtime::WeightSet;
+
+const TASKS: [&str; 8] =
+    ["stsbp", "sst2p", "rtep", "qqpp", "qnlip", "mrpcp", "colap", "mnlip"];
+
+fn main() -> Result<()> {
+    let Some(m) = require_artifacts() else { return Ok(()) };
+    let limit = eval_limit(256);
+    let n = m.model("bert")?.n;
+    let ws = WeightSet::load(&m, "bert")?;
+    let mut runner = Runner::new(m.clone(), "xla")?;
+    let datasets: Vec<Dataset> = TASKS
+        .iter()
+        .map(|t| Dataset::load(&m.root, t))
+        .collect::<Result<_>>()?;
+
+    let rows: Vec<(&str, Mode)> = vec![
+        ("No partition", Mode::Single),
+        ("Voltage", Mode::Voltage { p: 2 }),
+        ("Voltage", Mode::Voltage { p: 3 }),
+        ("PRISM", Mode::Prism { p: 2, l: 3, duplicated: true }),
+        ("PRISM", Mode::Prism { p: 2, l: 1, duplicated: true }),
+        ("PRISM", Mode::Prism { p: 3, l: 2, duplicated: true }),
+        ("PRISM", Mode::Prism { p: 3, l: 1, duplicated: true }),
+    ];
+
+    let mut headers = vec!["Strategy", "P", "GFLOPs", "GFLOPs/dev",
+                           "CompSU%", "CR", "CommSU%"];
+    headers.extend(TASKS);
+    let mut table = Table::new(
+        "Table V — BERT computation & communication efficiency \
+         (GFLOPs at paper scale; metrics measured)",
+        &headers,
+    );
+    let single = flops::single_total(&BERT_BASE);
+    for (label, mode) in rows {
+        let p = mode.p();
+        let (total, per_dev, cr, comm_su) = match mode {
+            Mode::Single => (single, single, None, None),
+            Mode::Voltage { p } => {
+                let t = flops::voltage_total(&BERT_BASE, p);
+                (t, t / p as f64, None, None)
+            }
+            Mode::Prism { p, l, .. } => {
+                let cr = effective_cr(n, p, l);
+                let lp = landmarks_for_cr(BERT_BASE.n, p, cr);
+                let t = flops::prism_total(&BERT_BASE, p, lp);
+                (t, t / p as f64, Some(cr),
+                 Some(comm::comm_speedup(BERT_BASE.n, p, lp)))
+            }
+        };
+        let mut cells = vec![
+            label.to_string(),
+            p.to_string(),
+            f2(total / 1e9),
+            f2(per_dev / 1e9),
+            if matches!(mode, Mode::Single) { "-".into() }
+            else { pct(flops::comp_speedup(per_dev, single)) },
+            opt(cr, f2),
+            opt(comm_su, pct),
+        ];
+        for ds in &datasets {
+            let res =
+                evaluate(&mut runner, &ws, ds, &EvalOpts { mode, limit })?;
+            eprintln!("  [{label} p={p}] {} ({}) -> {:.4} ({:.1}s)",
+                      ds.name, res.metric_name, res.metric,
+                      res.total_secs);
+            cells.push(pct(res.metric));
+        }
+        table.row(cells);
+    }
+    table.print();
+    println!("\npaper reference (Table V): encoder classification is \
+              robust — at P=2 CR=128 comm drops 99.22% with scores \
+              virtually unchanged; only RTE/MNLI dip slightly.");
+    Ok(())
+}

@@ -1,0 +1,114 @@
+//! Reproduces paper Table VI: GPT-2 under compression rates CR = 2..10
+//! with P in {2, 3}.
+//!
+//! GFLOPs at paper scale (GPT-2 small, N = 256, LM head counted);
+//! CBT-CN / CBT-NE cloze accuracies and BPB / BPC measured end-to-end on
+//! the AOT artifacts with the partition-aware causal mask (Eq. 17).
+//!
+//! `PRISM_EVAL_LIMIT` caps BPC windows & cloze groups (default 48).
+
+use anyhow::Result;
+use std::collections::BTreeMap;
+
+use prism::bench_util::{eval_limit, require_artifacts};
+use prism::coordinator::plan::landmarks_for_cr;
+use prism::coordinator::{Mode, Runner};
+use prism::data::Dataset;
+use prism::eval::{evaluate, EvalOpts};
+use prism::metrics::report::{f2, opt, pct, Table};
+use prism::model::paper::GPT2_SMALL;
+use prism::model::{comm, flops};
+use prism::runtime::WeightSet;
+
+fn main() -> Result<()> {
+    let Some(m) = require_artifacts() else { return Ok(()) };
+    // cap: 21 distinct geometries x 4 metrics dominate bench
+    // wallclock; 32 windows / cloze groups is enough for the trend.
+    let limit = eval_limit(32).min(48);
+    let n = m.model("gpt2")?.n;
+    let ws = WeightSet::load(&m, "gpt2")?;
+    let mut runner = Runner::new(m.clone(), "xla")?;
+    let cbtcn = Dataset::load(&m.root, "cbtcn")?;
+    let cbtne = Dataset::load(&m.root, "cbtne")?;
+    let enwik = Dataset::load(&m.root, "enwik8p")?;
+    let text8 = Dataset::load(&m.root, "text8p")?;
+
+    let mut rows: Vec<(String, Mode, Option<usize>)> = vec![
+        ("No partition".into(), Mode::Single, None),
+        ("Voltage".into(), Mode::Voltage { p: 2 }, None),
+        ("Voltage".into(), Mode::Voltage { p: 3 }, None),
+    ];
+    for p in [2usize, 3] {
+        for cr in 2..=10usize {
+            let l = landmarks_for_cr(n, p, cr as f64);
+            rows.push((format!("PRISM"),
+                       Mode::Prism { p, l, duplicated: true }, Some(cr)));
+        }
+    }
+
+    let mut table = Table::new(
+        "Table VI — GPT-2 computation & communication efficiency \
+         (GFLOPs at paper scale; metrics measured)",
+        &["Strategy", "P", "GFLOPs", "GFLOPs/dev", "CompSU%", "CR",
+          "CommSU%", "CBT-CN", "CBT-NE", "BPB", "BPC"],
+    );
+    let single = flops::single_total(&GPT2_SMALL);
+    // identical (p, l) pairs appear for several nominal CRs (Eq. 16 floor)
+    // — evaluate each distinct geometry once.
+    let mut cache: BTreeMap<(usize, usize, &'static str), (f64, f64, f64,
+                                                           f64)> =
+        BTreeMap::new();
+    for (label, mode, nominal_cr) in rows {
+        let p = mode.p();
+        let key = (p, mode.l(), mode.name());
+        let (cn, ne, bpb, bpc) = if let Some(v) = cache.get(&key) {
+            *v
+        } else {
+            let cn = evaluate(&mut runner, &ws, &cbtcn,
+                              &EvalOpts { mode, limit })?.metric;
+            let ne = evaluate(&mut runner, &ws, &cbtne,
+                              &EvalOpts { mode, limit })?.metric;
+            let bpb = evaluate(&mut runner, &ws, &enwik,
+                               &EvalOpts { mode, limit })?.metric;
+            let bpc = evaluate(&mut runner, &ws, &text8,
+                               &EvalOpts { mode, limit })?.metric;
+            eprintln!("  [{label} p={p} l={}] cn {:.3} ne {:.3} bpb \
+                       {:.3} bpc {:.3}", mode.l(), cn, ne, bpb, bpc);
+            cache.insert(key, (cn, ne, bpb, bpc));
+            (cn, ne, bpb, bpc)
+        };
+        let (total, per_dev, comm_su) = match mode {
+            Mode::Single => (single, single, None),
+            Mode::Voltage { p } => {
+                let t = flops::voltage_total(&GPT2_SMALL, p);
+                (t, t / p as f64, None)
+            }
+            Mode::Prism { p, .. } => {
+                let cr = nominal_cr.unwrap() as f64;
+                let lp = landmarks_for_cr(GPT2_SMALL.n, p, cr);
+                let t = flops::prism_total(&GPT2_SMALL, p, lp);
+                (t, t / p as f64,
+                 Some(comm::comm_speedup(GPT2_SMALL.n, p, lp)))
+            }
+        };
+        table.row(vec![
+            label,
+            p.to_string(),
+            f2(total / 1e9),
+            f2(per_dev / 1e9),
+            if matches!(mode, Mode::Single) { "-".into() }
+            else { pct(flops::comp_speedup(per_dev, single)) },
+            nominal_cr.map(|c| c.to_string()).unwrap_or("-".into()),
+            opt(comm_su, pct),
+            pct(cn),
+            pct(ne),
+            f2(bpb),
+            f2(bpc),
+        ]);
+    }
+    table.print();
+    println!("\npaper reference (Table VI): baseline CBT 79/80, BPB 1.34, \
+              BPC 1.21; accuracy and BPC degrade smoothly as CR rises \
+              (P=3 CR=10: 70/67, BPC 1.32); Voltage matches baseline.");
+    Ok(())
+}

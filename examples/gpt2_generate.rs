@@ -1,0 +1,102 @@
+//! Distributed autoregressive generation with the partition-aware causal
+//! mask (paper §IV-D): greedy-decode text from the tiny char-GPT while the
+//! sequence is split across P = 2 devices exchanging Segment Means.
+//!
+//!     make artifacts && cargo run --release --example gpt2_generate
+//!
+//! Because the causal mask guarantees position t ignores everything after
+//! t, right-padding is safe: we keep the AOT shape fixed at N = 128 and
+//! read logits at the current frontier. The same prompt is also decoded
+//! single-device to show the two causal paths agree.
+
+use anyhow::Result;
+use prism::bench_util::require_artifacts;
+use prism::coordinator::{Mode, Runner};
+use prism::runtime::{Tensor, WeightSet};
+
+/// Charset must mirror python/compile/data.py (0 = pad).
+const CHARSET: &str =
+    " ,.ABCDEFGHIJKLMNOPQRSTUVWXYZabcdefghijklmnopqrstuvwxyz";
+
+fn encode(s: &str) -> Vec<i32> {
+    s.chars()
+        .map(|c| CHARSET.find(c).map(|i| i as i32 + 1).unwrap_or(1))
+        .collect()
+}
+
+fn decode_char(id: usize) -> char {
+    if id == 0 {
+        '·'
+    } else {
+        CHARSET.chars().nth(id - 1).unwrap_or('?')
+    }
+}
+
+fn generate(runner: &mut Runner, ws: &WeightSet, mode: Mode, prompt: &str,
+            steps: usize, n: usize, vocab: usize) -> Result<String> {
+    let mut ids = encode(prompt);
+    let start = ids.len();
+    for _ in 0..steps {
+        let frontier = ids.len().min(n) - 1;
+        let mut padded = ids.clone();
+        padded.resize(n, 0); // safe under the causal mask
+        if ids.len() > n {
+            padded.copy_from_slice(&ids[ids.len() - n..]);
+        }
+        let raw = Tensor::from_i32(vec![1, n], padded)?;
+        let (logits, _) = runner.forward("gpt2", ws, "lm", &raw, mode)?;
+        let row = &logits.f32s()?[frontier * vocab..(frontier + 1) * vocab];
+        // greedy, but never emit pad
+        let mut best = 1;
+        for (i, v) in row.iter().enumerate().skip(1) {
+            if *v > row[best] {
+                best = i;
+            }
+        }
+        ids.push(best as i32);
+    }
+    Ok(ids[start..]
+        .iter()
+        .map(|&i| decode_char(i as usize))
+        .collect())
+}
+
+fn main() -> Result<()> {
+    let Some(manifest) = require_artifacts() else { return Ok(()) };
+    let cfg = manifest.model("gpt2")?.clone();
+    let mut runner = Runner::new(manifest.clone(), "xla")?;
+    let ws = WeightSet::load(&manifest, "gpt2")?;
+
+    let prompt = "the old bridge ";
+    let steps = 60;
+    println!("gpt2_generate — distributed causal decoding (N={}, P=2, \
+              L=16, CR=4)", cfg.n);
+    println!("  prompt: {prompt:?}");
+
+    let dist_mode = Mode::Prism { p: 2, l: 16, duplicated: true };
+    let dist = generate(&mut runner, &ws, dist_mode, prompt, steps, cfg.n,
+                        cfg.vocab)?;
+    println!("  prism  (2 devices) : {prompt}{dist}");
+
+    let single = generate(&mut runner, &ws, Mode::Single, prompt, steps,
+                          cfg.n, cfg.vocab)?;
+    println!("  single (1 device)  : {prompt}{single}");
+
+    let agree = dist
+        .chars()
+        .zip(single.chars())
+        .take_while(|(a, b)| a == b)
+        .count();
+    println!("  agreement          : first {agree}/{steps} generated \
+              chars identical");
+    println!("  (CR=4 compresses the cross-device context; token-level \
+              divergence beyond the prefix is the accuracy/communication \
+              trade-off of Table VI, not a masking bug — Voltage mode \
+              reproduces single-device decoding exactly.)");
+
+    // sanity: voltage (lossless partitioning) must match single exactly
+    let voltage = generate(&mut runner, &ws, Mode::Voltage { p: 2 },
+                           prompt, steps, cfg.n, cfg.vocab)?;
+    println!("  voltage == single  : {}", voltage == single);
+    Ok(())
+}

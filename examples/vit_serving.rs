@@ -1,0 +1,97 @@
+//! End-to-end serving driver (the repo's validation workload): load the
+//! trained tiny ViT, start the threaded master/worker runtime (P = 2
+//! PRISM devices, dynamic batcher, mpsc mesh), push a Poisson stream of
+//! single-image requests through it, and report latency percentiles,
+//! throughput, and online accuracy.
+//!
+//!     make artifacts && cargo run --release --example vit_serving
+//!
+//! Flags via env: PRISM_REQUESTS (default 192), PRISM_RATE (default 300/s).
+//! Results are recorded in EXPERIMENTS.md §End-to-end.
+
+use std::sync::mpsc::channel;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+use prism::bench_util::require_artifacts;
+use prism::coordinator::Mode;
+use prism::data::Dataset;
+use prism::eval::metrics::argmax_rows;
+use prism::metrics::Histogram;
+use prism::runtime::WeightSet;
+use prism::server::{Request, Response, ServeConfig, Server};
+use prism::util::rng::Rng;
+
+fn env_usize(k: &str, d: usize) -> usize {
+    std::env::var(k).ok().and_then(|v| v.parse().ok()).unwrap_or(d)
+}
+
+fn main() -> Result<()> {
+    let Some(manifest) = require_artifacts() else { return Ok(()) };
+    let n_requests = env_usize("PRISM_REQUESTS", 192);
+    let rate = env_usize("PRISM_RATE", 50) as f64;
+    let ds = Dataset::load(&manifest.root, "synth10")?;
+    let _ = WeightSet::load(&manifest, "vit_synth10")?; // fail fast
+
+    let cfg = ServeConfig {
+        model: "vit".into(),
+        task: "synth10".into(),
+        weights: "vit_synth10".into(),
+        mode: Mode::Prism { p: 2, l: 6, duplicated: true },
+        flavor: "xla".into(),
+        flush_after: Duration::from_millis(4),
+        pace: None,
+    };
+    println!("vit_serving — threaded PRISM serving (P=2, L=6, batch {}), \
+              {} requests @ ~{:.0}/s Poisson",
+             manifest.eval_batch, n_requests, rate);
+    let server = Server::start(manifest.clone(), cfg)?;
+
+    let (tx, rx) = channel::<Response>();
+    let mut rng = Rng::new(42);
+    let mut truth = vec![0usize; n_requests];
+    let t0 = Instant::now();
+    let feeder = {
+        let requests = server.requests.clone();
+        let labels = ds.y.as_ref().unwrap().i32s()?.to_vec();
+        let x = ds.x.clone();
+        let mut truth_fill: Vec<usize> = Vec::with_capacity(n_requests);
+        std::thread::spawn(move || -> Result<Vec<usize>> {
+            for id in 0..n_requests {
+                let i = rng.below(labels.len());
+                truth_fill.push(labels[i] as usize);
+                requests.send(Request {
+                    id: id as u64,
+                    raw: x.slice0(i, i + 1)?,
+                    enqueued: Instant::now(),
+                    respond: tx.clone(),
+                })?;
+                std::thread::sleep(Duration::from_secs_f64(
+                    rng.exponential(rate)));
+            }
+            Ok(truth_fill)
+        })
+    };
+
+    let mut hist = Histogram::new();
+    let mut preds = vec![0usize; n_requests];
+    for _ in 0..n_requests {
+        let resp = rx.recv()?;
+        hist.record(resp.latency.as_secs_f64());
+        preds[resp.id as usize] =
+            argmax_rows(resp.logits.f32s()?, resp.logits.shape[0])[0];
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let truth_filled = feeder.join().expect("feeder panicked")?;
+    truth.copy_from_slice(&truth_filled);
+    server.shutdown()?;
+
+    let correct =
+        preds.iter().zip(&truth).filter(|(a, b)| a == b).count();
+    println!("  throughput : {:.1} req/s ({} requests in {:.2} s)",
+             n_requests as f64 / wall, n_requests, wall);
+    println!("  latency    : {}", hist.summary_ms());
+    println!("  accuracy   : {:.2}% online", 100.0 * correct as f64
+             / n_requests as f64);
+    Ok(())
+}

@@ -1,0 +1,421 @@
+"""AOT export: lower every executable variant to HLO text + manifests.
+
+This is the only bridge between python and rust. It produces, under
+``artifacts/``:
+
+  manifest.json          — the full python→rust contract: model configs,
+                           weight-blob layouts, executable inventory
+                           (inputs/outputs/shapes), experiment variants
+                           (CR/PDPLC bookkeeping), dataset registry.
+  <model>/*.hlo.txt      — HLO text per executable (text, NOT serialized
+                           proto: xla_extension 0.5.1 rejects jax>=0.5's
+                           64-bit instruction ids; text re-assigns ids).
+  weights_<tag>.bin      — flat little-endian f32 blobs.
+  data/<name>/*          — exported evaluation datasets.
+  fixtures/*             — input/output pairs for rust parity tests.
+
+Executable flavors: ``xla`` lowers the block with the pure-jnp attention
+(XLA fuses it; fastest on this 1-core CPU target) and ``pallas`` with the
+Layer-1 Pallas kernels under interpret=True (the TPU hot-path expression;
+~4.6x slower on CPU because interpret mode emulates the grid). Both flavors
+are bit-compared against the same oracle; accuracy sweeps default to xla,
+kernel-proof paths and examples to pallas. See DESIGN.md.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import data as D
+from . import layers, model as M, train as T
+from .configs import (BERT, BERT_TASKS, EVAL_B, GPT2, LAT_B, MODELS, VIT,
+                      VIT_DATASETS, Variant, all_variants, effective_cr,
+                      partition_sizes, pdplc_prism, pdplc_voltage,
+                      vit_variants)
+from .plan import PartitionPlan, plans, single_plan
+
+ROOT = os.path.normpath(os.path.join(os.path.dirname(__file__), "..", ".."))
+ART = os.path.join(ROOT, "artifacts")
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+# -------------------------------------------------------------- weights ---
+
+def flatten_params(params: dict) -> list[tuple[str, np.ndarray]]:
+    out: list[tuple[str, np.ndarray]] = []
+
+    def walk(prefix, obj):
+        if isinstance(obj, dict):
+            for k in sorted(obj):
+                walk(f"{prefix}.{k}" if prefix else k, obj[k])
+        elif isinstance(obj, list):
+            for i, v in enumerate(obj):
+                walk(f"{prefix}.{i}", v)
+        else:
+            out.append((prefix, np.asarray(obj, dtype=np.float32)))
+
+    walk("", params)
+    return out
+
+
+def write_weight_blob(tag: str, params: dict) -> dict:
+    tensors = flatten_params(params)
+    path = os.path.join(ART, f"weights_{tag}.bin")
+    meta, off = [], 0
+    with open(path, "wb") as f:
+        for name, arr in tensors:
+            f.write(arr.astype("<f4").tobytes())
+            meta.append({"name": name, "shape": list(arr.shape),
+                         "offset": off})
+            off += arr.size
+    return {"file": f"weights_{tag}.bin", "elements": off, "tensors": meta}
+
+
+# ---------------------------------------------------------- executables ---
+
+class Exporter:
+    def __init__(self):
+        self.entries: list[dict] = []
+        self.t0 = time.time()
+
+    def lower(self, model: str, name: str, fn, arg_specs, meta: dict,
+              log=print):
+        """jit-lower fn(*args) with ShapeDtypeStructs and write HLO text."""
+        os.makedirs(os.path.join(ART, model), exist_ok=True)
+        np_dt = {"f32": np.float32, "i32": np.int32}
+        specs = [jax.ShapeDtypeStruct(s, np_dt[d]) for s, d in arg_specs]
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        rel = f"{model}/{name}.hlo.txt"
+        with open(os.path.join(ART, rel), "w") as f:
+            f.write(text)
+        out_avals = lowered.out_info
+        outs = [{"shape": list(o.shape), "dtype": _dt(o.dtype)}
+                for o in jax.tree.leaves(out_avals)]
+        entry = dict(meta)
+        entry.update({"name": name, "file": rel, "outputs": outs})
+        self.entries.append(entry)
+        log(f"[aot] {rel} ({len(text) / 1024:.0f} KiB, "
+            f"{time.time() - self.t0:.0f}s)")
+        return entry
+
+
+def _dt(dtype) -> str:
+    return {"float32": "f32", "int32": "i32"}[np.dtype(dtype).name]
+
+
+def block_fn(cfg, mode: str, l: int, use_pallas: bool):
+    """Returns (fn, n_weight_inputs) for one block executable."""
+    names = [n for n, _ in layers.BLOCK_TENSORS]
+
+    def fn(*args):
+        w = dict(zip(names, args[:len(names)]))
+        rest = args[len(names):]
+        if mode == "single":
+            x_p, bias = rest
+            ctx = None
+        else:
+            x_p, ctx, bias = rest
+        x, z = M.block_apply(w, cfg, x_p, ctx, bias,
+                             l_out=(l if mode == "prism" else 0),
+                             use_pallas=use_pallas)
+        return (x, z) if mode == "prism" else (x,)
+
+    return fn, len(names)
+
+
+def embed_fn(cfg):
+    ts = layers.embed_tensors(cfg)
+    names = [n for n, _ in ts]
+
+    def fn(*args):
+        w = dict(zip(names, args[:len(names)]))
+        raw = args[len(names)]
+        return (M.embed({"embed": w}, cfg, raw),)
+
+    return fn, names
+
+
+def head_fn(cfg, pool: str):
+    names = [n for n, _ in layers.HEAD_TENSORS]
+
+    def fn(*args):
+        w = dict(zip(names, args[:len(names)]))
+        x = args[len(names)]
+        return (layers.head_apply(w, cfg, x, pool=pool),)
+
+    return fn, names
+
+
+def weight_specs(cfg, tensors, classes=None):
+    return [(fn(cfg) if classes is None else fn(cfg, classes), "f32")
+            for _, fn in tensors]
+
+
+def export_block(ex: Exporter, cfg, var: Variant, part: int, batch: int,
+                 flavor: str, log):
+    mode, l = var.mode, var.l
+    if mode == "single":
+        pl = single_plan(cfg.n, cfg.causal)
+    else:
+        pl = plans(cfg.n, var.p, l if mode == "prism" else 0,
+                   cfg.causal)[part]
+    fn, nw = block_fn(cfg, mode, l, flavor == "pallas")
+    specs = weight_specs(cfg, layers.BLOCK_TENSORS)
+    specs.append(((batch, pl.n_p, cfg.d), "f32"))              # x_p
+    if mode != "single":
+        specs.append(((batch, pl.ctx_len, cfg.d), "f32"))       # ctx
+    specs.append(((pl.n_p, pl.n_hat), "f32"))                   # bias
+    name = f"{var.key()}_part{part}_b{batch}_{flavor}"
+    args = [{"name": "x_p", "shape": [batch, pl.n_p, cfg.d], "dtype": "f32"}]
+    if mode != "single":
+        args.append({"name": "ctx", "shape": [batch, pl.ctx_len, cfg.d],
+                     "dtype": "f32"})
+    args.append({"name": "bias", "shape": [pl.n_p, pl.n_hat],
+                 "dtype": "f32"})
+    ex.lower(cfg.name, name, fn, specs, {
+        "kind": "block", "model": cfg.name, "mode": mode, "p": var.p,
+        "l": l, "part": part, "batch": batch, "flavor": flavor,
+        "weight_inputs": [f"blocks.{{layer}}.{n}"
+                          for n, _ in layers.BLOCK_TENSORS],
+        "args": args,
+    }, log)
+
+
+def export_model(ex: Exporter, cfg, variants, batches, log):
+    # embed + heads per batch size
+    raw_spec = ((None, cfg.img, cfg.img, 3), "f32") if cfg.img else \
+        ((None, cfg.n), "i32")
+    heads = (VIT_DATASETS if cfg.name == "vit"
+             else {t: c for t, (c, _) in BERT_TASKS.items()}
+             if cfg.name == "bert" else {"lm": cfg.vocab})
+    for b in batches:
+        fn, names = embed_fn(cfg)
+        shape = (b, cfg.img, cfg.img, 3) if cfg.img else (b, cfg.n)
+        dtype = "f32" if cfg.img else "i32"
+        specs = weight_specs(cfg, layers.embed_tensors(cfg))
+        specs.append((shape, dtype))
+        ex.lower(cfg.name, f"{cfg.name}_embed_b{b}", fn, specs, {
+            "kind": "embed", "model": cfg.name, "batch": b,
+            "mode": "", "p": 0, "l": 0, "part": 0, "flavor": "xla",
+            "weight_inputs": [f"embed.{n}" for n in names],
+            "args": [{"name": "raw", "shape": list(shape), "dtype": dtype}],
+        }, log)
+        for task, classes in heads.items():
+            classes = classes if classes > 1 else 1
+            fn, names = head_fn(cfg, "all" if cfg.causal else "cls")
+            specs = weight_specs(cfg, layers.HEAD_TENSORS, classes)
+            specs.append(((b, cfg.n, cfg.d), "f32"))
+            ex.lower(cfg.name, f"{cfg.name}_head_{task}_b{b}", fn, specs, {
+                "kind": "head", "model": cfg.name, "batch": b, "task": task,
+                "classes": classes, "mode": "", "p": 0, "l": 0, "part": 0,
+                "flavor": "xla",
+                "weight_inputs": [f"head_{task}.{n}" for n in names],
+                "args": [{"name": "x", "shape": [b, cfg.n, cfg.d],
+                          "dtype": "f32"}],
+            }, log)
+    # blocks
+    for var in variants:
+        parts = 1 if var.mode == "single" else var.p
+        flavors = ["xla"]
+        # pallas flavor: the headline ViT model everywhere; one gpt2 config
+        # (used by the generation example / kernel-proof tests).
+        if cfg.name == "vit" or (cfg.name == "gpt2" and var.mode == "prism"
+                                 and var.p == 2 and var.l == 16):
+            flavors.append("pallas")
+        for b in batches:
+            for part in range(parts):
+                for flavor in flavors:
+                    export_block(ex, cfg, var, part, b, flavor, log)
+
+
+# ------------------------------------------------------------- datasets ---
+
+def export_datasets(log):
+    dd = os.path.join(ART, "data")
+    os.makedirs(dd, exist_ok=True)
+
+    def write(name, arrays, meta):
+        d = os.path.join(dd, name)
+        os.makedirs(d, exist_ok=True)
+        for fname, arr in arrays.items():
+            arr.tofile(os.path.join(d, fname))
+        meta["count"] = int(next(iter(arrays.values())).shape[0])
+        with open(os.path.join(d, "meta.json"), "w") as f:
+            json.dump(meta, f, indent=1)
+        log(f"[data] {name}: {meta}")
+
+    for ds in VIT_DATASETS:
+        _, _, xte, yte = D.make_vision(ds)
+        write(ds, {"x.bin": xte.astype("<f4"), "y.bin": yte.astype("<i4")},
+              {"kind": "vision", "model": "vit", "classes":
+               VIT_DATASETS[ds], "shape": list(xte.shape[1:])})
+    for task, (classes, metric) in BERT_TASKS.items():
+        ids, ys = D.make_glue(task, 512, "test")
+        write(task, {"x.bin": ids.astype("<i4"),
+                     "y.bin": ys.astype("<f4")},
+              {"kind": "glue", "model": "bert", "classes": classes,
+               "metric": metric, "shape": [BERT.n]})
+    # char-LM: held-out windows for BPC (lowercase view) and BPB (raw view)
+    corpus = D.make_corpus()
+    split = int(0.9 * len(corpus))
+    held = corpus[split:]
+    raw_ids = D.encode_chars(held)
+    low_ids = D.encode_chars(held.lower())
+    for name, ids in (("enwik8p", raw_ids), ("text8p", low_ids)):
+        win = D.lm_windows(ids, GPT2.n, 128, name)
+        write(name, {"x.bin": win.astype("<i4")},
+              {"kind": "charlm", "model": "gpt2", "shape": [GPT2.n + 1]})
+    # cloze sets
+    for kind, name in (("cn", "cbtcn"), ("ne", "cbtne")):
+        cz = D.make_cloze(kind, 64)
+        rows, spans, answers = [], [], []
+        for pre, suf, cands, ans in zip(cz.prefixes, cz.suffixes,
+                                        cz.candidates, cz.answers):
+            for c in cands:
+                text = pre + c + suf
+                ids = D.encode_chars(text)
+                start = len(D.encode_chars(pre))
+                end = start + len(D.encode_chars(c))
+                # fit into N+1 window ending at the candidate end
+                hi = min(len(ids), max(end, GPT2.n + 1))
+                lo = hi - (GPT2.n + 1)
+                if lo < 0:  # left-pad with corpus text to fill the window
+                    pad = D.encode_chars(corpus[:(-lo)])
+                    ids = np.concatenate([pad, ids]); lo, hi = 0, GPT2.n + 1
+                    start += len(pad); end += len(pad)
+                rows.append(ids[lo:hi + 1][:GPT2.n + 1])
+                spans.append([start - lo, end - lo])
+            answers.append(ans)
+        write(name, {"x.bin": np.stack(rows).astype("<i4"),
+                     "spans.bin": np.asarray(spans, "<i4"),
+                     "y.bin": np.asarray(answers, "<i4")},
+              {"kind": "cloze", "model": "gpt2", "candidates": 10,
+               "shape": [GPT2.n + 1]})
+
+
+# ------------------------------------------------------------- fixtures ---
+
+def export_fixtures(weight_sets: dict, log):
+    """Dump (inputs, expected outputs) for rust ↔ python parity tests."""
+    fd = os.path.join(ART, "fixtures")
+    os.makedirs(fd, exist_ok=True)
+    rng = np.random.default_rng(7)
+    fixtures = []
+
+    def dump(tag, arrays):
+        for i, a in enumerate(arrays):
+            np.asarray(a).astype("<f4" if a.dtype.kind == "f"
+                                 else "<i4").tofile(
+                os.path.join(fd, f"{tag}_{i}.bin"))
+
+    cases = [("vit", Variant("vit", "prism", 2, 6), 0, "xla"),
+             ("vit", Variant("vit", "prism", 2, 6), 1, "pallas"),
+             ("vit", Variant("vit", "voltage", 3), 1, "xla"),
+             ("gpt2", Variant("gpt2", "prism", 3, 10), 1, "xla"),
+             ("gpt2", Variant("gpt2", "single"), 0, "xla")]
+    for mname, var, part, flavor in cases:
+        cfg = MODELS[mname]
+        if var.mode == "single":
+            pl = single_plan(cfg.n, cfg.causal)
+        else:
+            pl = plans(cfg.n, var.p, var.l if var.mode == "prism" else 0,
+                       cfg.causal)[part]
+        params = weight_sets[("vit_synth10" if mname == "vit" else mname)]
+        blk = params["blocks"][1]
+        x_p = rng.normal(size=(EVAL_B, pl.n_p, cfg.d)).astype(np.float32)
+        ctx = rng.normal(size=(EVAL_B, pl.ctx_len, cfg.d)).astype(np.float32)
+        bias = pl.bias()
+        x, z = M.block_apply(blk, cfg, jnp.asarray(x_p),
+                             None if var.mode == "single"
+                             else jnp.asarray(ctx), jnp.asarray(bias),
+                             l_out=(var.l if var.mode == "prism" else 0),
+                             use_pallas=(flavor == "pallas"))
+        name = f"{var.key()}_part{part}_b{EVAL_B}_{flavor}"
+        ins = [x_p] + ([] if var.mode == "single" else [ctx]) + [bias]
+        outs = [np.asarray(x)] + ([np.asarray(z)] if z is not None else [])
+        dump(f"{name}_in", ins)
+        dump(f"{name}_out", outs)
+        fixtures.append({
+            "executable": name, "layer": 1,
+            "weights": "vit_synth10" if mname == "vit" else mname,
+            "inputs": [f"{name}_in_{i}.bin" for i in range(len(ins))],
+            "expected": [f"{name}_out_{i}.bin" for i in range(len(outs))],
+            "tolerance": 2e-4})
+        log(f"[fixture] {name}")
+    with open(os.path.join(fd, "fixtures.json"), "w") as f:
+        json.dump(fixtures, f, indent=1)
+
+
+# ----------------------------------------------------------------- main ---
+
+def variant_record(cfg, var: Variant) -> dict:
+    rec = {"key": var.key(), "model": var.model, "mode": var.mode,
+           "p": var.p, "l": var.l}
+    if var.mode == "prism":
+        rec["cr"] = effective_cr(cfg.n, var.p, var.l)
+        rec["pdplc"] = pdplc_prism(var.p, var.l)
+    elif var.mode == "voltage":
+        rec["cr"] = 1.0
+        rec["pdplc"] = pdplc_voltage(cfg.n, var.p)
+    return rec
+
+
+def main(log=print):
+    os.makedirs(ART, exist_ok=True)
+    T.main(log=log)  # ensure weights exist (cached if already trained)
+
+    weight_sets = {tag: T.load_params(tag) for tag in
+                   [f"vit_{ds}" for ds in VIT_DATASETS] +
+                   [f"vit_{ds}_ft" for ds in VIT_DATASETS] +
+                   ["bert", "gpt2"]}
+    weights_meta = {tag: write_weight_blob(tag, params)
+                    for tag, params in weight_sets.items()}
+    log(f"[aot] wrote {len(weights_meta)} weight blobs")
+
+    ex = Exporter()
+    from .configs import bert_variants, gpt2_variants
+    export_model(ex, VIT, vit_variants(), [EVAL_B, LAT_B], log)
+    export_model(ex, BERT, bert_variants(), [EVAL_B], log)
+    export_model(ex, GPT2, gpt2_variants(), [EVAL_B, LAT_B], log)
+
+    export_datasets(log)
+    export_fixtures(weight_sets, log)
+
+    manifest = {
+        "format": 1,
+        "models": {name: {
+            "name": name, "kind": cfg.kind, "n": cfg.n, "d": cfg.d,
+            "heads": cfg.heads, "layers": cfg.layers, "ffn": cfg.ffn,
+            "vocab": cfg.vocab, "img": cfg.img, "patch": cfg.patch,
+            "causal": cfg.causal,
+        } for name, cfg in MODELS.items()},
+        "weights": weights_meta,
+        "executables": ex.entries,
+        "variants": [variant_record(MODELS[v.model], v)
+                     for v in all_variants()],
+        "eval_batch": EVAL_B,
+        "latency_batch": LAT_B,
+    }
+    with open(os.path.join(ART, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    log(f"[aot] manifest: {len(ex.entries)} executables")
+
+
+if __name__ == "__main__":
+    argparse.ArgumentParser(description=__doc__).parse_args()
+    main()

@@ -1,0 +1,200 @@
+"""Shared configuration for models, partitioning variants, and AOT export.
+
+This module is the single source of truth for every shape that crosses the
+python -> rust boundary. ``aot.py`` serializes the relevant parts to
+``artifacts/config.json`` so the rust coordinator never re-derives a shape
+independently (it *does* re-derive partition plans, and tests assert both
+sides agree).
+
+Paper mapping (PRISM, Qazi et al. 2025):
+  * partitioning  -> Algorithm 1 (sequence split, last partition takes the
+    remainder)
+  * segment plan  -> Algorithm 2 + Eq. 16 (L = floor(N / (CR * P)))
+  * PDPLC         -> per-device per-layer communication in tokens,
+    (P-1) * L for PRISM, (P-1) * floor(N/P) for Voltage
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+
+# Batch sizes baked into the AOT executables. ``EVAL_B`` amortizes
+# throughput-style evaluation; ``LAT_B`` is the paper's Fig. 5 single-query
+# latency setting (batch size 1).
+EVAL_B = 16
+LAT_B = 1
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Architecture of one tiny Transformer used in the reproduction."""
+
+    name: str              # "vit" | "bert" | "gpt2"
+    kind: str              # "encoder" | "decoder"
+    n: int                 # sequence length N (tokens incl. CLS for encoders)
+    d: int                 # embedding dim D
+    heads: int             # attention heads H (head dim = D // H)
+    layers: int            # Transformer blocks
+    ffn_mult: int = 4      # FFN hidden = ffn_mult * D
+    vocab: int = 0         # token vocabulary (0 => image model)
+    img: int = 0           # image side (vision models)
+    patch: int = 0         # patch side (vision models)
+    causal: bool = False   # partition-aware causal mask (decoder models)
+
+    @property
+    def dh(self) -> int:
+        assert self.d % self.heads == 0
+        return self.d // self.heads
+
+    @property
+    def ffn(self) -> int:
+        return self.ffn_mult * self.d
+
+
+VIT = ModelConfig(name="vit", kind="encoder", n=65, d=128, heads=4, layers=4,
+                  img=32, patch=4)
+BERT = ModelConfig(name="bert", kind="encoder", n=64, d=128, heads=4,
+                   layers=4, vocab=256)
+GPT2 = ModelConfig(name="gpt2", kind="decoder", n=128, d=128, heads=4,
+                   layers=4, vocab=96, causal=True)
+
+MODELS = {m.name: m for m in (VIT, BERT, GPT2)}
+
+
+def partition_sizes(n: int, p: int) -> list[int]:
+    """Algorithm 1: split N tokens into P contiguous partitions.
+
+    Every partition gets floor(N/P) tokens; the last one also takes the
+    remainder, exactly as in the paper's Algorithm 1.
+    """
+    if p <= 0 or n < p:
+        raise ValueError(f"invalid partitioning N={n} P={p}")
+    s, r = divmod(n, p)
+    return [s] * (p - 1) + [s + r]
+
+
+def segment_counts(n_p: int, l: int) -> list[int]:
+    """Algorithm 2: per-segment token counts for one partition.
+
+    Segments 0..L-2 hold ``s = floor(N_p / L)`` tokens; the last segment
+    holds ``s + (N_p mod L)``. The counts are what the scaling-aware softmax
+    uses as its repetition vector ``g``.
+    """
+    if l <= 0 or n_p < l:
+        raise ValueError(f"invalid segment plan N_p={n_p} L={l}")
+    s, r = divmod(n_p, l)
+    return [s] * (l - 1) + [s + r]
+
+
+def landmarks_for_cr(n: int, p: int, cr: float) -> int:
+    """Eq. 16: L = floor(N / (CR * P)), clamped to >= 1."""
+    return max(1, int(n / (cr * p)))
+
+
+def effective_cr(n: int, p: int, l: int) -> float:
+    """Actual compression rate achieved by L landmarks: CR = N / (L * P)."""
+    return n / (l * p)
+
+
+def pdplc_prism(p: int, l: int) -> int:
+    """Per-device per-layer communication, in tokens (PRISM)."""
+    return (p - 1) * l
+
+
+def pdplc_voltage(n: int, p: int) -> int:
+    """Per-device per-layer communication, in tokens (Voltage baseline)."""
+    return (p - 1) * (n // p)
+
+
+@dataclasses.dataclass(frozen=True)
+class Variant:
+    """One distributed-inference configuration to AOT-compile.
+
+    ``mode`` is one of:
+      * "single"  — P = 1 baseline, full attention on one device
+      * "voltage" — position-wise partitioning with full AllGather [20]
+      * "prism"   — the paper's system (segment means + scaling-aware attn)
+    """
+
+    model: str
+    mode: str
+    p: int = 1
+    l: int = 0             # landmarks per partition (prism only)
+
+    def key(self) -> str:
+        if self.mode == "single":
+            return f"{self.model}_single"
+        if self.mode == "voltage":
+            return f"{self.model}_voltage_p{self.p}"
+        return f"{self.model}_prism_p{self.p}l{self.l}"
+
+    def cr(self) -> Optional[float]:
+        if self.mode != "prism":
+            return None
+        return effective_cr(MODELS[self.model].n, self.p, self.l)
+
+
+def vit_variants() -> list[Variant]:
+    """Table IV rows (plus Table II / Fig. 4 points) for the ViT model."""
+    vs = [Variant("vit", "single")]
+    vs += [Variant("vit", "voltage", p) for p in (2, 3)]
+    # P=2: L in {3, 6, 10}  -> CR in {10.8, 5.4, 3.25}  (paper: 9.9/4.95/3.3)
+    vs += [Variant("vit", "prism", 2, l) for l in (3, 6, 10)]
+    # P=3: L in {3, 5, 10}  -> CR in {7.2, 4.3, 2.2}    (paper: 6.55/3.28/2.18)
+    vs += [Variant("vit", "prism", 3, l) for l in (3, 5, 10)]
+    return vs
+
+
+def bert_variants() -> list[Variant]:
+    """Table V rows for the BERT model."""
+    vs = [Variant("bert", "single")]
+    vs += [Variant("bert", "voltage", p) for p in (2, 3)]
+    # P=2: L=3 (CR~10.7, paper CR=9.5) and L=1 (max compression, paper CR=128)
+    vs += [Variant("bert", "prism", 2, l) for l in (3, 1)]
+    # P=3: L=2 (CR~10.7) and L=1 (CR~21.3, paper CR=85.5)
+    vs += [Variant("bert", "prism", 3, l) for l in (2, 1)]
+    return vs
+
+
+GPT2_CRS = list(range(2, 11))  # Table VI sweeps CR = 2..10
+
+
+def gpt2_variants() -> list[Variant]:
+    """Table VI rows for the GPT-2 model (CR = 2..10, P in {2, 3})."""
+    vs = [Variant("gpt2", "single")]
+    vs += [Variant("gpt2", "voltage", p) for p in (2, 3)]
+    seen = set()
+    for p in (2, 3):
+        for cr in GPT2_CRS:
+            l = landmarks_for_cr(GPT2.n, p, cr)
+            if (p, l) not in seen:
+                seen.add((p, l))
+                vs.append(Variant("gpt2", "prism", p, l))
+    return vs
+
+
+def all_variants() -> list[Variant]:
+    return vit_variants() + bert_variants() + gpt2_variants()
+
+
+# Datasets -> (model, head name, number of classes / output dim).
+VIT_DATASETS = {
+    # CIFAR-10 / CIFAR-100 / ImageNet-1K stand-ins (see DESIGN.md).
+    "synth10": 10,
+    "synth100": 100,
+    "synthhard": 100,
+}
+
+# GLUE stand-ins: task -> (classes, metric). Regression tasks use classes=1.
+BERT_TASKS = {
+    "sst2p": (2, "acc"),
+    "mnlip": (3, "acc"),
+    "qnlip": (2, "acc"),
+    "rtep": (2, "acc"),
+    "mrpcp": (2, "f1"),
+    "qqpp": (2, "f1"),
+    "colap": (2, "mcc"),
+    "stsbp": (1, "spearman"),
+}

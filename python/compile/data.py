@@ -1,0 +1,305 @@
+"""Synthetic datasets standing in for the paper's corpora (see DESIGN.md).
+
+Everything is deterministic given the seed constants below, self-contained,
+and exercises the same task shapes / metrics as the paper:
+
+  vision   : synth10 / synth100 / synthhard   (CIFAR-10 / CIFAR-100 /
+             ImageNet-1K stand-ins) — class-conditioned low-res templates,
+             random shift, additive noise.
+  language : 8 GLUE-proxy sequence tasks over a shared token generator.
+  charlm   : grammar-generated English-like corpus for the GPT-2 model —
+             BPC/BPB held-out evaluation + CBT-style cloze sets (common
+             nouns vs named entities).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from .configs import BERT, GPT2, VIT
+
+SEED = 20250710
+
+def _seed_of(*parts) -> int:
+    """Deterministic cross-process seed (python's hash() is randomized)."""
+    import hashlib
+    h = hashlib.md5(repr(parts).encode()).digest()
+    return int.from_bytes(h[:4], "little")
+
+
+# ---------------------------------------------------------------- vision --
+
+VISION_SPECS = {
+    # name: (classes, noise sigma, max shift, contrast jitter)
+    "synth10": (10, 0.55, 3, 0.0),
+    "synth100": (100, 0.55, 3, 0.0),
+    "synthhard": (100, 0.85, 5, 0.35),
+}
+
+
+def _class_templates(classes: int, tag: str) -> np.ndarray:
+    """Per-class 8x8x3 pattern, bilinearly upsampled to 32x32x3."""
+    rng = np.random.default_rng(_seed_of(*(SEED, "vision", tag)))
+    low = rng.normal(size=(classes, 8, 8, 3)).astype(np.float32)
+    # bilinear 4x upsample
+    t = np.repeat(np.repeat(low, 4, axis=1), 4, axis=2)
+    k = np.array([0.25, 0.5, 0.25], dtype=np.float32)
+    for ax in (1, 2):
+        t = (np.take(t, np.clip(np.arange(32) - 1, 0, 31), axis=ax) * k[0]
+             + t * k[1]
+             + np.take(t, np.clip(np.arange(32) + 1, 0, 31), axis=ax) * k[2])
+    return t
+
+
+def make_vision(name: str, n_train: int = 4096, n_test: int = 512):
+    """Returns (x_train, y_train, x_test, y_test); images in [-2, 2]-ish."""
+    classes, sigma, shift, jitter = VISION_SPECS[name]
+    tmpl = _class_templates(classes, name)
+    rng = np.random.default_rng(_seed_of(*(SEED, "vsamp", name)))
+
+    def sample(n, salt):
+        r = np.random.default_rng(
+            _seed_of(*(SEED, "vsamp", name, salt)))
+        y = r.integers(0, classes, size=n)
+        x = tmpl[y].copy()
+        for i in range(n):
+            dx, dy = r.integers(-shift, shift + 1, size=2)
+            x[i] = np.roll(x[i], (dx, dy), axis=(0, 1))
+        if jitter:
+            x *= (1.0 + jitter * r.normal(size=(n, 1, 1, 1))).astype(
+                np.float32)
+        x += sigma * r.normal(size=x.shape).astype(np.float32)
+        return x.astype(np.float32), y.astype(np.int32)
+
+    xtr, ytr = sample(n_train, "train")
+    xte, yte = sample(n_test, "test")
+    return xtr, ytr, xte, yte
+
+
+# -------------------------------------------------------------- language --
+
+PAD, CLS, SEP = 0, 1, 2
+_POS_WORDS = np.arange(3, 43)       # sst2p positive lexicon
+_NEG_WORDS = np.arange(43, 83)      # sst2p negative lexicon
+_CONTENT = np.arange(83, 233)       # content words for pair tasks
+_FILLER = np.arange(233, 256)
+_DET_CLASS = np.arange(43, 53)   # colap "determiners"
+_NOUN_CLASS = np.arange(53, 73)  # colap "nouns"
+
+
+def _pack(a: np.ndarray, b: np.ndarray | None) -> np.ndarray:
+    """[CLS] a [SEP] b [SEP] pad  -> fixed length BERT.n."""
+    seq = [CLS, *a.tolist(), SEP]
+    if b is not None:
+        seq += [*b.tolist(), SEP]
+    seq = seq[: BERT.n]
+    return np.asarray(seq + [PAD] * (BERT.n - len(seq)), dtype=np.int32)
+
+
+def _rng(task: str, salt: str) -> np.random.Generator:
+    return np.random.default_rng(_seed_of(*(SEED, "glue", task, salt)))
+
+
+def _sample_content(r, lo=8, hi=24):
+    return r.choice(_CONTENT, size=r.integers(lo, hi), replace=False)
+
+
+def make_glue(task: str, n: int, salt: str):
+    """Returns (ids (n, 64) int32, labels float32 (n,)).
+
+    Labels are class indices for classification tasks and the 0..5 score
+    for stsbp.
+    """
+    r = _rng(task, salt)
+    xs, ys = [], []
+    for _ in range(n):
+        if task == "sst2p":
+            npos, nneg = r.integers(1, 12, size=2)
+            words = np.concatenate([r.choice(_POS_WORDS, npos),
+                                    r.choice(_NEG_WORDS, nneg),
+                                    r.choice(_FILLER, r.integers(2, 8))])
+            r.shuffle(words)
+            xs.append(_pack(words, None)); ys.append(float(npos > nneg))
+        elif task == "colap":
+            # "grammatical" = starts with a determiner-class token and ends
+            # with a noun-class token (a simple acceptability rule)
+            n_tok = int(r.integers(8, 24))
+            seq = r.choice(_FILLER, size=n_tok)
+            label = float(r.random() < 0.7)
+            if label == 1.0:
+                seq[0] = r.choice(_DET_CLASS)
+                seq[-1] = r.choice(_NOUN_CLASS)
+            else:
+                if r.random() < 0.5:
+                    seq[0] = r.choice(_NOUN_CLASS)  # wrong opener
+                    seq[-1] = r.choice(_NOUN_CLASS)
+                else:
+                    seq[0] = r.choice(_DET_CLASS)
+                    seq[-1] = r.choice(_DET_CLASS)  # wrong closer
+            xs.append(_pack(seq, None))
+            ys.append(label)
+        elif task in ("mrpcp", "qqpp"):
+            a = _sample_content(r)
+            pos_rate = 0.67 if task == "mrpcp" else 0.37
+            label = float(r.random() < pos_rate)
+            if label == 1.0:
+                b = a.copy(); r.shuffle(b)
+                drop = r.random(size=len(b)) < 0.15
+                b = np.where(drop, r.choice(_CONTENT, len(b)), b)
+            else:
+                b = _sample_content(r)
+            xs.append(_pack(a, b)); ys.append(label)
+        elif task in ("rtep", "qnlip"):
+            a = _sample_content(r, 10, 24)
+            label = float(r.random() < 0.5)
+            take = r.integers(3, max(4, len(a) // 2))
+            b = (r.choice(a, take, replace=False) if label == 1.0
+                 else r.choice(np.setdiff1d(_CONTENT, a), take))
+            xs.append(_pack(a, b)); ys.append(label)
+        elif task == "mnlip":
+            a = _sample_content(r, 12, 24)
+            cls3 = int(r.integers(0, 3))
+            if cls3 == 0:      # entailment: b subset of a
+                b = r.choice(a, r.integers(4, 8), replace=False)
+            elif cls3 == 1:    # neutral: half overlap
+                half = r.choice(a, 3, replace=False)
+                rest = r.choice(np.setdiff1d(_CONTENT, a), 3)
+                b = np.concatenate([half, rest])
+            else:              # contradiction: disjoint
+                b = r.choice(np.setdiff1d(_CONTENT, a), r.integers(4, 8))
+            xs.append(_pack(a, b)); ys.append(float(cls3))
+        elif task == "stsbp":
+            a = _sample_content(r, 10, 20)
+            keep = r.random()
+            nkeep = int(round(keep * len(a)))
+            b = np.concatenate([
+                r.choice(a, nkeep, replace=False) if nkeep else
+                np.empty(0, np.int64),
+                r.choice(np.setdiff1d(_CONTENT, a), len(a) - nkeep)])
+            r.shuffle(b)
+            inter = len(np.intersect1d(a, b))
+            union = len(np.union1d(a, b))
+            xs.append(_pack(a, b)); ys.append(5.0 * inter / union)
+        else:
+            raise ValueError(task)
+    return np.stack(xs), np.asarray(ys, dtype=np.float32)
+
+
+# ---------------------------------------------------------------- charlm --
+
+_NOUNS = ("river bridge garden stone castle forest valley market street "
+          "harbor mountain meadow lantern window door table chair bottle "
+          "letter book road cloud shadow tower wall farm mill barn field "
+          "boat horse wagon bell rope basket candle mirror clock").split()
+_NAMES = ("Alice Bruno Clara Dmitri Elena Farid Greta Henrik Ingrid Jonas "
+          "Karim Lena Marko Nadia Oskar Petra Quentin Rosa Stefan Tara").split()
+_VERBS = ("watches crosses builds paints guards opens closes carries finds "
+          "follows leaves repairs draws sells buys remembers forgets "
+          "visits").split()
+_ADJS = ("old quiet bright narrow broken golden heavy silent green distant "
+         "small wooden").split()
+_ADVS = "slowly often quietly rarely carefully again".split()
+
+CHARSET = sorted(set("abcdefghijklmnopqrstuvwxyz"
+                     "ABCDEFGHIJKLMNOPQRSTUVWXYZ ., "))
+CHAR2ID = {c: i + 1 for i, c in enumerate(CHARSET)}  # 0 = pad
+assert len(CHAR2ID) + 1 <= GPT2.vocab
+
+
+def _adj_nouns(adj: str) -> list[str]:
+    """Each adjective licenses 3 nouns (deterministic): the statistical
+    signal that makes the CBT-style common-noun cloze *learnable* — a
+    char-LM can sharpen P(noun | adjective) far above the 10% floor."""
+    r = np.random.default_rng(_seed_of(SEED, "adjmap", adj))
+    return [str(x) for x in r.choice(_NOUNS, 3, replace=False)]
+
+
+def _np(r, protagonist=None) -> str:
+    if protagonist is not None:
+        return protagonist
+    adj = r.choice(_ADJS)
+    return f"the {adj} {r.choice(_adj_nouns(adj))}"
+
+
+def _sentence(r, protagonist=None) -> str:
+    use_name = protagonist is not None and r.random() < 0.8
+    subj = protagonist if use_name else _np(r)
+    obj = _np(r)
+    s = f"{subj} {r.choice(_VERBS)} {obj}"
+    if r.random() < 0.3:
+        s += f" {r.choice(_ADVS)}"
+    return s + ". "
+
+
+def _paragraph(r) -> str:
+    """3-6 sentences sharing a protagonist name: cross-sentence signal
+    for the named-entity cloze (the paper's CBT-NE proxy)."""
+    hero = str(r.choice(_NAMES))
+    return "".join(_sentence(r, hero)
+                   for _ in range(int(r.integers(3, 7))))
+
+
+def make_corpus(n_sentences: int = 24000) -> str:
+    r = np.random.default_rng(_seed_of(*(SEED, "corpus")))
+    out = []
+    produced = 0
+    while produced < n_sentences:
+        para = _paragraph(r)
+        produced += para.count(".")
+        out.append(para)
+    return "".join(out)
+
+
+def encode_chars(text: str) -> np.ndarray:
+    return np.asarray([CHAR2ID[c] for c in text], dtype=np.int32)
+
+
+def lm_windows(ids: np.ndarray, n: int, count: int, salt: str) -> np.ndarray:
+    r = np.random.default_rng(_seed_of(*(SEED, "lmwin", salt)))
+    starts = r.integers(0, len(ids) - n - 1, size=count)
+    return np.stack([ids[s:s + n + 1] for s in starts])  # (count, n+1)
+
+
+@dataclasses.dataclass
+class ClozeSet:
+    """CBT-style cloze: predict the held-out word among 10 candidates."""
+    prefixes: list[str]     # text up to and including the blank position
+    suffixes: list[str]     # text after the candidate
+    candidates: list[list[str]]  # 10 candidates, index 0 = truth shuffled in
+    answers: list[int]      # index of the true candidate
+
+
+def make_cloze(kind: str, n: int = 64) -> ClozeSet:
+    """kind = "cn" (common nouns) or "ne" (named entities)."""
+    r = np.random.default_rng(_seed_of(*(SEED, "cloze", kind)))
+    prefixes, suffixes, cands, answers = [], [], [], []
+    for _ in range(n):
+        if kind == "cn":
+            # the adjective licenses the noun: distractors are nouns the
+            # adjective never co-occurs with in the corpus.
+            hero = str(r.choice(_NAMES))
+            ctx = "".join(_sentence(r, hero) for _ in range(3))
+            adj = str(r.choice(_ADJS))
+            allowed = _adj_nouns(adj)
+            truth = str(r.choice(allowed))
+            pre = ctx + f"{hero} {r.choice(_VERBS)} the {adj} "
+            suf = "."
+            pool = [w for w in _NOUNS if w not in allowed]
+        else:
+            # the paragraph's protagonist is the blanked subject.
+            hero = str(r.choice(_NAMES))
+            ctx = "".join(_sentence(r, hero) for _ in range(4))
+            truth = hero
+            pre = ctx
+            suf = f" {r.choice(_VERBS)} {_np(r)}."
+            pool = [w for w in _NAMES if w != truth]
+        distract = list(r.choice(pool, 9, replace=False))
+        cs = distract + [truth]
+        r.shuffle(cs)
+        prefixes.append(pre)
+        suffixes.append(suf)
+        cands.append([str(c) for c in cs])
+        answers.append(cs.index(truth))
+    return ClozeSet(prefixes, suffixes, cands, answers)

@@ -1,0 +1,90 @@
+"""Layer-1 Pallas kernel: PRISM scaling-aware attention.
+
+Computes ``softmax(Q K̂ᵀ/√dh + bias) V̂`` where ``bias`` already folds the
+paper's repetition vector (``ln g``, Eq. 13–15) and the partition-aware
+causal mask (Eq. 17, as −1e30). A single fused pass per Q tile: row-max →
+exp → row-sum → contraction with V̂.
+
+TPU mapping (see DESIGN.md §Hardware-Adaptation): K̂/V̂ are *small* in PRISM
+(N̂_p = N_p + (P−1)·L ≪ N) — that is the paper's point — so they stay fully
+VMEM-resident while Q/output tiles stream via the grid. Both contractions
+(Q·K̂ᵀ and S·V̂) hit the MXU. The repetition vector enters as an additive
+bias row: no gathers, no physical duplication.
+
+CPU note: ``interpret=True`` is mandatory on this image — real TPU lowering
+emits Mosaic custom-calls the CPU PJRT plugin cannot execute. Interpret mode
+lowers to plain HLO, so the AOT artifact runs anywhere.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _tile(n: int, cap: int) -> int:
+    """Largest divisor of ``n`` that is <= cap (grid must cover Nq exactly)."""
+    for t in range(min(cap, n), 0, -1):
+        if n % t == 0:
+            return t
+    return n
+
+
+def _attn_body(q_ref, k_ref, v_ref, b_ref, o_ref, *, scale: float):
+    q = q_ref[0, 0]            # (bq, dh)
+    k = k_ref[0, 0]            # (nk, dh) — VMEM-resident, shared over grid
+    v = v_ref[0, 0]            # (nk, dh)
+    bias = b_ref[...]          # (bq, nk)  = ln g + causal(-1e30)
+    logits = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    logits = logits + bias
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    p = jnp.exp(logits - m)
+    num = jnp.dot(p, v, preferred_element_type=jnp.float32)
+    o_ref[0, 0] = (num / jnp.sum(p, axis=-1, keepdims=True)).astype(
+        o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_q", "interpret"))
+def prism_attention(q, k, v, bias, *, block_q: int = 32,
+                    interpret: bool = True):
+    """Fused PRISM attention.
+
+    q: (B, H, Nq, dh); k, v: (B, H, Nk, dh); bias: (Nq, Nk) shared across
+    batch and heads. Returns (B, H, Nq, dh).
+    """
+    b, h, nq, dh = q.shape
+    nk = k.shape[-2]
+    bq = _tile(nq, block_q)
+    grid = (b, h, nq // bq)
+    scale = 1.0 / (dh ** 0.5)
+    return pl.pallas_call(
+        functools.partial(_attn_body, scale=scale),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, dh), lambda i, j, t: (i, j, t, 0)),
+            pl.BlockSpec((1, 1, nk, dh), lambda i, j, t: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1, nk, dh), lambda i, j, t: (i, j, 0, 0)),
+            pl.BlockSpec((bq, nk), lambda i, j, t: (t, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, dh), lambda i, j, t: (i, j, t, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, nq, dh), q.dtype),
+        interpret=interpret,
+    )(q, k, v, bias)
+
+
+def vmem_footprint_bytes(nq: int, nk: int, dh: int, block_q: int = 32,
+                         fp_bytes: int = 4) -> int:
+    """Estimated VMEM working set per grid step (perf model for DESIGN.md).
+
+    Q tile + resident K̂ + V̂ + bias tile + logits scratch + output tile.
+    """
+    bq = _tile(nq, block_q)
+    return fp_bytes * (bq * dh + 2 * nk * dh + bq * nk + bq * nk + bq * dh)
+
+
+def mxu_flops(nq: int, nk: int, dh: int) -> int:
+    """MXU-eligible FLOPs (2×MAC) for one (batch, head) attention instance."""
+    return 2 * nq * nk * dh * 2

@@ -1,0 +1,94 @@
+"""Pure-jnp oracles for the PRISM kernels.
+
+Everything in this file is the *specification*: the Pallas kernels
+(`prism_attention.py`, `segment_means.py`) and the rust-executed AOT
+artifacts are tested against these functions. No pallas, no tricks — just
+the paper's equations written plainly.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def segment_means_ref(x, l: int):
+    """Algorithm 2: column-wise means of L contiguous segments.
+
+    x: (..., N_p, D) -> (..., L, D). Segments 0..L-2 have s = N_p // L rows,
+    the last has s + (N_p mod L).
+    """
+    n_p = x.shape[-2]
+    s, r = divmod(n_p, l)
+    means = []
+    for i in range(l):
+        lo = i * s
+        hi = lo + s + (r if i == l - 1 else 0)
+        means.append(jnp.mean(x[..., lo:hi, :], axis=-2))
+    return jnp.stack(means, axis=-2)
+
+
+def attention_ref(q, k, v, bias):
+    """Vanilla biased attention: softmax(q kᵀ / sqrt(dh) + bias) v.
+
+    q: (..., Nq, dh), k/v: (..., Nk, dh), bias: broadcastable to (Nq, Nk).
+    With bias = ln g this *is* the scaling-aware softmax of Eq. 13–15:
+    softmax(logits + ln g) == rownorm(exp(logits) ⊙ g).
+    """
+    dh = q.shape[-1]
+    logits = jnp.einsum("...qd,...kd->...qk", q, k) / jnp.sqrt(
+        jnp.asarray(dh, q.dtype))
+    logits = logits + bias
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    p = jnp.exp(logits - m)
+    return jnp.einsum("...qk,...kd->...qd", p, v) / jnp.sum(
+        p, axis=-1, keepdims=True)
+
+
+def prism_attention_scaled_ref(q, k_hat, v_hat, g, mask=None):
+    """Eq. 13–15 exactly as written: Ψ = exp(logits); E = Ψ ⊙ g; A = S(E) V̂.
+
+    ``g`` is the repetition-count vector over K̂/V̂ rows; ``mask`` (optional,
+    1 = visible) is the partition-aware causal mask of Eq. 17. Numerically
+    un-stabilized on purpose — it mirrors the paper's algebra; use small
+    logits in tests.
+    """
+    dh = q.shape[-1]
+    logits = jnp.einsum("...qd,...kd->...qk", q, k_hat) / jnp.sqrt(
+        jnp.asarray(dh, q.dtype))
+    psi = jnp.exp(logits)
+    if mask is not None:
+        psi = psi * mask
+    e = psi * g  # column broadcast (Eq. 14)
+    s = e / jnp.sum(e, axis=-1, keepdims=True)
+    return jnp.einsum("...qk,...kd->...qd", s, v_hat)
+
+
+def duplicated_attention_ref(q, k_hat, v_hat, counts, mask_rows=None):
+    """Eq. 11/12: physically duplicate each K̂/V̂ row ``counts[j]`` times.
+
+    The ground truth that the scaling-aware form must match. ``mask_rows``
+    (optional, per original K̂ row, 1 = visible) is expanded alongside.
+    """
+    counts = np.asarray(counts, dtype=np.int64)
+    idx = np.repeat(np.arange(len(counts)), counts)
+    k_dup = jnp.take(k_hat, idx, axis=-2)
+    v_dup = jnp.take(v_hat, idx, axis=-2)
+    if mask_rows is None:
+        bias = jnp.zeros((q.shape[-2], len(idx)), dtype=q.dtype)
+    else:
+        mrow = jnp.take(jnp.asarray(mask_rows), jnp.asarray(idx), axis=-1)
+        bias = jnp.where(mrow > 0, 0.0, -1e30).astype(q.dtype)
+    return attention_ref(q, k_dup, v_dup, bias)
+
+
+def layernorm_ref(x, gamma, beta, eps: float = 1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * gamma + beta
+
+
+def gelu_ref(x):
+    """tanh-approximated GELU (GPT-2 style)."""
+    c = jnp.sqrt(jnp.asarray(2.0 / np.pi, x.dtype))
+    return 0.5 * x * (1.0 + jnp.tanh(c * (x + 0.044715 * x ** 3)))

@@ -1,0 +1,43 @@
+"""Layer-1 Pallas kernel: Segment Means compression (paper Algorithm 2).
+
+Reduces a partition's block output (B, N_p, D) to its L landmark vectors
+(B, L, D): contiguous segments of s = N_p // L rows (the last segment takes
+the remainder), each reduced by a column-wise mean.
+
+TPU mapping: lane dimension = D (vector-register aligned), the per-segment
+reduction is a strided-window sum over sublanes; segment boundaries are
+static per AOT variant, so the loop fully unrolls — no dynamic shapes.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _means_body(x_ref, z_ref, *, l: int, n_p: int):
+    x = x_ref[0]  # (N_p, D)
+    s, r = divmod(n_p, l)
+    rows = []
+    for i in range(l):  # static unroll: boundaries known at trace time
+        lo = i * s
+        hi = lo + s + (r if i == l - 1 else 0)
+        rows.append(jnp.mean(x[lo:hi, :], axis=0))
+    z_ref[0] = jnp.stack(rows, axis=0).astype(z_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("l", "interpret"))
+def segment_means(x, *, l: int, interpret: bool = True):
+    """x: (B, N_p, D) -> (B, L, D) segment means."""
+    b, n_p, d = x.shape
+    return pl.pallas_call(
+        functools.partial(_means_body, l=l, n_p=n_p),
+        grid=(b,),
+        in_specs=[pl.BlockSpec((1, n_p, d), lambda i: (i, 0, 0))],
+        out_specs=pl.BlockSpec((1, l, d), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, l, d), x.dtype),
+        interpret=interpret,
+    )(x)

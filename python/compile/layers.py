@@ -1,0 +1,130 @@
+"""Layer-2 building blocks: layernorm, FFN, embeddings, parameter init.
+
+Parameter layout is the python ↔ rust contract: ``BLOCK_TENSORS`` /
+``*_EMBED_TENSORS`` / ``HEAD_TENSORS`` fix both the order in which tensors
+are flattened into ``weights.bin`` and the order in which the AOT block
+executables expect them as inputs (weights first, then data arguments).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .configs import ModelConfig
+from .kernels.ref import gelu_ref, layernorm_ref
+
+# Per-block tensors in flattening/executable-input order.
+# Shapes as functions of the model config.
+BLOCK_TENSORS = [
+    ("ln1_g", lambda c: (c.d,)),
+    ("ln1_b", lambda c: (c.d,)),
+    ("wq", lambda c: (c.d, c.d)),
+    ("bq", lambda c: (c.d,)),
+    ("wk", lambda c: (c.d, c.d)),
+    ("bk", lambda c: (c.d,)),
+    ("wv", lambda c: (c.d, c.d)),
+    ("bv", lambda c: (c.d,)),
+    ("wo", lambda c: (c.d, c.d)),
+    ("bo", lambda c: (c.d,)),
+    ("ln2_g", lambda c: (c.d,)),
+    ("ln2_b", lambda c: (c.d,)),
+    ("w1", lambda c: (c.d, c.ffn)),
+    ("b1", lambda c: (c.ffn,)),
+    ("w2", lambda c: (c.ffn, c.d)),
+    ("b2", lambda c: (c.d,)),
+]
+
+VIT_EMBED_TENSORS = [
+    ("patch_w", lambda c: (c.patch * c.patch * 3, c.d)),
+    ("patch_b", lambda c: (c.d,)),
+    ("cls", lambda c: (c.d,)),
+    ("pos", lambda c: (c.n, c.d)),
+]
+
+TOK_EMBED_TENSORS = [
+    ("tok", lambda c: (c.vocab, c.d)),
+    ("pos", lambda c: (c.n, c.d)),
+]
+
+# Head output dim is task-dependent -> shape fns take (cfg, classes).
+HEAD_TENSORS = [
+    ("ln_g", lambda c, k: (c.d,)),
+    ("ln_b", lambda c, k: (c.d,)),
+    ("w", lambda c, k: (c.d, k)),
+    ("b", lambda c, k: (k,)),
+]
+
+
+def embed_tensors(cfg: ModelConfig):
+    return VIT_EMBED_TENSORS if cfg.img else TOK_EMBED_TENSORS
+
+
+def _init_tensor(key, name: str, shape) -> jnp.ndarray:
+    if name.endswith(("_g",)) or name == "ln_g":
+        return jnp.ones(shape, jnp.float32)
+    if name.endswith(("_b",)) or name in ("bq", "bk", "bv", "bo", "b1",
+                                          "b2", "b", "patch_b", "cls"):
+        return jnp.zeros(shape, jnp.float32)
+    fan_in = shape[0] if len(shape) > 1 else shape[-1]
+    scale = 0.02 if name in ("tok", "pos") else 1.0 / np.sqrt(fan_in)
+    return scale * jax.random.normal(key, shape, jnp.float32)
+
+
+def init_block(key, cfg: ModelConfig) -> dict:
+    keys = jax.random.split(key, len(BLOCK_TENSORS))
+    return {n: _init_tensor(k, n, fn(cfg))
+            for k, (n, fn) in zip(keys, BLOCK_TENSORS)}
+
+
+def init_embed(key, cfg: ModelConfig) -> dict:
+    ts = embed_tensors(cfg)
+    keys = jax.random.split(key, len(ts))
+    return {n: _init_tensor(k, n, fn(cfg)) for k, (n, fn) in zip(keys, ts)}
+
+
+def init_head(key, cfg: ModelConfig, classes: int) -> dict:
+    keys = jax.random.split(key, len(HEAD_TENSORS))
+    return {n: _init_tensor(k, n, fn(cfg, classes))
+            for k, (n, fn) in zip(keys, HEAD_TENSORS)}
+
+
+def ffn(blk: dict, x):
+    return gelu_ref(x @ blk["w1"] + blk["b1"]) @ blk["w2"] + blk["b2"]
+
+
+def ln1(blk: dict, x):
+    return layernorm_ref(x, blk["ln1_g"], blk["ln1_b"])
+
+
+def ln2(blk: dict, x):
+    return layernorm_ref(x, blk["ln2_g"], blk["ln2_b"])
+
+
+def embed_images(emb: dict, cfg: ModelConfig, imgs):
+    """(B, img, img, 3) float32 -> (B, N, D): patchify + linear + CLS + pos."""
+    b = imgs.shape[0]
+    p, side = cfg.patch, cfg.img // cfg.patch
+    x = imgs.reshape(b, side, p, side, p, 3)
+    x = x.transpose(0, 1, 3, 2, 4, 5).reshape(b, side * side, p * p * 3)
+    x = x @ emb["patch_w"] + emb["patch_b"]
+    cls = jnp.broadcast_to(emb["cls"][None, None, :], (b, 1, cfg.d))
+    return jnp.concatenate([cls, x], axis=1) + emb["pos"][None]
+
+
+def embed_tokens(emb: dict, cfg: ModelConfig, ids):
+    """(B, N) int32 -> (B, N, D): lookup + learned positions."""
+    return jnp.take(emb["tok"], ids, axis=0) + emb["pos"][None]
+
+
+def head_apply(head: dict, cfg: ModelConfig, x, *, pool: str):
+    """Final layernorm + linear head.
+
+    pool = "cls": classify from token 0 (encoders).
+    pool = "all": per-position logits (decoder LM).
+    """
+    h = layernorm_ref(x, head["ln_g"], head["ln_b"])
+    if pool == "cls":
+        h = h[:, 0, :]
+    return h @ head["w"] + head["b"]

@@ -1,0 +1,168 @@
+"""Layer-2 model: the PRISM Transformer in its three inference modes.
+
+``block_apply`` is the unit that gets AOT-compiled (one invocation per
+layer per device). The ``forward_*`` functions chain blocks the way the
+rust coordinator does at runtime — they exist for training, for tests, and
+as executable documentation of the distributed protocol:
+
+  single  : X -> block -> ... -> head                       (P = 1)
+  voltage : devices exchange full partition outputs (AllGather) per block
+  prism   : devices exchange Segment Means only; attention uses the
+            scaling-aware softmax via an additive ``ln g`` bias
+
+All three share identical weights; voltage == single exactly (position-wise
+partitioning is lossless), prism == single exactly when L == N_p (CR = 1).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import layers
+from .configs import ModelConfig, partition_sizes
+from .kernels.prism_attention import prism_attention
+from .kernels.ref import attention_ref, segment_means_ref
+from .kernels.segment_means import segment_means as segment_means_pl
+from .plan import PartitionPlan, plans, single_plan
+
+
+def _split_heads(cfg: ModelConfig, x):
+    b, n, _ = x.shape
+    return x.reshape(b, n, cfg.heads, cfg.dh).transpose(0, 2, 1, 3)
+
+
+def _merge_heads(cfg: ModelConfig, x):
+    b, h, n, dh = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(b, n, h * dh)
+
+
+def block_apply(blk: dict, cfg: ModelConfig, x_p, ctx, bias, *,
+                l_out: int = 0, use_pallas: bool = False):
+    """One pre-LN Transformer block on one device.
+
+    x_p:  (B, N_p, D) local partition.
+    ctx:  (B, C, D) context rows appended to K/V — peers' segment means
+          (prism), peers' full partitions (voltage), or None (single).
+    bias: (N_p, N_p + C) additive attention bias = ln g + causal(-1e30).
+    l_out: if > 0, also return the Segment Means of the block output
+          (what this device transmits for the *next* layer).
+
+    Returns (x_out, z_out) with z_out = None when l_out == 0.
+    """
+    n_p = x_p.shape[1]
+    xhat = x_p if ctx is None else jnp.concatenate([x_p, ctx], axis=1)
+    h = layers.ln1(blk, xhat)
+    q = _split_heads(cfg, h[:, :n_p, :] @ blk["wq"] + blk["bq"])
+    k = _split_heads(cfg, h @ blk["wk"] + blk["bk"])
+    v = _split_heads(cfg, h @ blk["wv"] + blk["bv"])
+    if use_pallas:
+        attn = prism_attention(q, k, v, bias)
+    else:
+        attn = attention_ref(q, k, v, bias)
+    x = x_p + _merge_heads(cfg, attn) @ blk["wo"] + blk["bo"]
+    x = x + layers.ffn(blk, layers.ln2(blk, x))
+    if l_out > 0:
+        z = (segment_means_pl(x, l=l_out) if use_pallas
+             else segment_means_ref(x, l_out))
+        return x, z
+    return x, None
+
+
+def _zero_bias(plan: PartitionPlan) -> jnp.ndarray:
+    return jnp.asarray(plan.bias())
+
+
+def forward_single(params: dict, cfg: ModelConfig, x, *,
+                   use_pallas: bool = False):
+    """P=1 reference stack over embedded input x: (B, N, D) -> (B, N, D)."""
+    bias = jnp.asarray(single_plan(cfg.n, cfg.causal).bias())
+    for blk in params["blocks"]:
+        x, _ = block_apply(blk, cfg, x, None, bias, use_pallas=use_pallas)
+    return x
+
+
+def forward_voltage(params: dict, cfg: ModelConfig, x, p: int, *,
+                    use_pallas: bool = False):
+    """Voltage [20] baseline: full AllGather of partition outputs per block.
+
+    Simulates the P-device protocol in-process; output is the re-assembled
+    (B, N, D) sequence. Exactly equals ``forward_single`` — position-wise
+    partitioning is lossless; only communication differs.
+    """
+    pls = plans(cfg.n, p, 0, cfg.causal)
+    parts = _partition(x, pls)
+    biases = [jnp.asarray(pl.bias()) for pl in pls]
+    for blk in params["blocks"]:
+        outs = []
+        for pl, xp in zip(pls, parts):
+            ctx = jnp.concatenate([parts[j] for j in pl.peers], axis=1)
+            out, _ = block_apply(blk, cfg, xp, ctx, biases[pl.p],
+                                 use_pallas=use_pallas)
+            outs.append(out)
+        parts = outs  # the AllGather
+    return jnp.concatenate(parts, axis=1)
+
+
+def forward_prism(params: dict, cfg: ModelConfig, x, p: int, l: int, *,
+                  use_pallas: bool = False, duplicated: bool = True):
+    """PRISM distributed forward (in-process simulation of the protocol).
+
+    Per block: each device attends over [X_p ; Z_peers] with the scaling-
+    aware bias, then computes the Segment Means of its output and
+    "transmits" them (here: collects into a list) for the next block.
+
+    duplicated=False ablates Table II's "No duplication" row: segment means
+    are used without repetition counts (g = 1 for context columns).
+    """
+    pls = plans(cfg.n, p, l, cfg.causal)
+    parts = _partition(x, pls)
+    # Master computes the first exchange from the embedded input (Fig. 1).
+    zs = [segment_means_ref(xp, l) for xp in parts]
+    biases = []
+    for pl in pls:
+        b = pl.bias()
+        if not duplicated:
+            # keep the causal part, drop ln g (counts -> 1)
+            import numpy as np
+            b = np.where(b < -1e29, b, 0.0).astype(np.float32)
+        biases.append(jnp.asarray(b))
+    for blk in params["blocks"]:
+        outs, zouts = [], []
+        for pl, xp in zip(pls, parts):
+            ctx = jnp.concatenate([zs[j] for j in pl.peers], axis=1)
+            out, z = block_apply(blk, cfg, xp, ctx, biases[pl.p],
+                                 l_out=l, use_pallas=use_pallas)
+            outs.append(out)
+            zouts.append(z)
+        parts, zs = outs, zouts  # the Segment-Means exchange
+    return jnp.concatenate(parts, axis=1)
+
+
+def _partition(x, pls: list[PartitionPlan]):
+    return [x[:, pl.start:pl.start + pl.n_p, :] for pl in pls]
+
+
+def embed(params: dict, cfg: ModelConfig, raw):
+    if cfg.img:
+        return layers.embed_images(params["embed"], cfg, raw)
+    return layers.embed_tokens(params["embed"], cfg, raw)
+
+
+def logits(params: dict, cfg: ModelConfig, x, head: str):
+    pool = "all" if cfg.causal else "cls"
+    return layers.head_apply(params[f"head_{head}"], cfg, x, pool=pool)
+
+
+def init_params(key, cfg: ModelConfig, heads: dict[str, int]) -> dict:
+    """heads: name -> output classes (1 for regression / vocab for LM)."""
+    k_e, k_b, k_h = jax.random.split(key, 3)
+    params = {
+        "embed": layers.init_embed(k_e, cfg),
+        "blocks": [layers.init_block(k, cfg)
+                   for k in jax.random.split(k_b, cfg.layers)],
+    }
+    for name, classes in heads.items():
+        k_h, k = jax.random.split(k_h)
+        params[f"head_{name}"] = layers.init_head(k, cfg, classes)
+    return params

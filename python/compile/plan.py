@@ -1,0 +1,132 @@
+"""Partition / exchange planning: the request-independent geometry of PRISM.
+
+For a given (N, P, L, causal) configuration this module derives, for every
+partition index ``p``:
+
+  * the local token span ``[start_p, start_p + N_p)`` in the global sequence,
+  * the context layout — which peers' segment means are concatenated after
+    the local tokens (global order, skipping ``p``),
+  * the repetition vector ``g`` (Eq. 11/12's duplication counts),
+  * the additive attention bias ``B[i, j] = ln g[j] + mask`` that folds the
+    scaling-aware softmax (Eq. 13–15) and the partition-aware causal mask
+    (Eq. 17) into a single tensor.
+
+The rust coordinator re-implements this in ``rust/src/coordinator/plan.rs``;
+fixtures exported by ``aot.py`` keep the two in lock-step.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import numpy as np
+
+from .configs import partition_sizes, segment_counts
+
+# Large negative bias standing in for -inf: exp(-1e30) == 0.0 in f32 without
+# producing NaNs via (-inf) - (-inf) in the row-max subtraction.
+NEG_INF = -1e30
+
+
+@dataclasses.dataclass(frozen=True)
+class PartitionPlan:
+    """Geometry for one device's view of one (N, P, L) configuration."""
+
+    p: int                    # this device's partition index (0-based)
+    n: int                    # global sequence length
+    sizes: list[int]          # all partition sizes (Algorithm 1)
+    l: int                    # landmarks per partition (0 => voltage/single)
+    causal: bool
+
+    @property
+    def n_p(self) -> int:
+        return self.sizes[self.p]
+
+    @property
+    def start(self) -> int:
+        return sum(self.sizes[: self.p])
+
+    @property
+    def peers(self) -> list[int]:
+        """Peer partition indices in global order (the Z_cat layout)."""
+        return [j for j in range(len(self.sizes)) if j != self.p]
+
+    @property
+    def ctx_len(self) -> int:
+        """Rows of context concatenated after the local partition."""
+        if self.l == 0:  # voltage: full peer partitions
+            return self.n - self.n_p
+        return self.l * (len(self.sizes) - 1)
+
+    @property
+    def n_hat(self) -> int:
+        return self.n_p + self.ctx_len
+
+    def g(self) -> np.ndarray:
+        """Repetition vector over the N_hat columns of K_hat/V_hat.
+
+        Local tokens and voltage context rows count once; each peer segment
+        mean counts as many times as the tokens it summarizes (Eq. 11).
+        """
+        parts = [np.ones(self.n_p, dtype=np.float32)]
+        for j in self.peers:
+            if self.l == 0:
+                parts.append(np.ones(self.sizes[j], dtype=np.float32))
+            else:
+                parts.append(np.asarray(segment_counts(self.sizes[j], self.l),
+                                        dtype=np.float32))
+        return np.concatenate(parts)
+
+    def col_positions(self) -> np.ndarray:
+        """Global position of the *last* token covered by each K/V column.
+
+        Used by the causal mask: a query at global position ``t`` may attend
+        to column ``j`` iff ``col_pos[j] <= t``. For a segment mean this is
+        the position of the last token in the segment — a mean is visible
+        only once every token it aggregates is in the past (Eq. 17 admits
+        only whole earlier *partitions*, which this generalizes exactly: all
+        of an earlier partition's segments end before any local token).
+        """
+        cols = [np.arange(self.start, self.start + self.n_p, dtype=np.int64)]
+        for j in self.peers:
+            base = sum(self.sizes[:j])
+            if self.l == 0:
+                cols.append(np.arange(base, base + self.sizes[j],
+                                      dtype=np.int64))
+            else:
+                ends = np.cumsum(segment_counts(self.sizes[j], self.l)) - 1
+                cols.append(base + ends.astype(np.int64))
+        return np.concatenate(cols)
+
+    def bias(self) -> np.ndarray:
+        """Additive attention bias, shape (N_p, N_hat): ln g + causal mask."""
+        b = np.broadcast_to(np.log(self.g())[None, :],
+                            (self.n_p, self.n_hat)).copy()
+        if self.causal:
+            qpos = np.arange(self.start, self.start + self.n_p)[:, None]
+            visible = self.col_positions()[None, :] <= qpos
+            b = np.where(visible, b, np.float32(NEG_INF))
+        return b.astype(np.float32)
+
+
+def plans(n: int, p: int, l: int, causal: bool) -> list[PartitionPlan]:
+    """One plan per device for an (N, P, L) configuration."""
+    sizes = partition_sizes(n, p)
+    return [PartitionPlan(i, n, sizes, l, causal) for i in range(p)]
+
+
+def single_plan(n: int, causal: bool) -> PartitionPlan:
+    """P=1 degenerate plan: no context, optional plain causal mask."""
+    return PartitionPlan(0, n, [n], 0, causal)
+
+
+def bytes_per_exchange(d: int, l: int, p: int, fp_bytes: int = 4) -> int:
+    """Unicast payload bytes one device sends per layer: (P-1) * L * D."""
+    return (p - 1) * l * d * fp_bytes
+
+
+def bytes_per_exchange_voltage(n: int, d: int, p: int,
+                               fp_bytes: int = 4) -> int:
+    """Voltage baseline: (P-1) * floor(N/P) * D elements per device-layer."""
+    return (p - 1) * (n // p) * d * fp_bytes

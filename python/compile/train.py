@@ -1,0 +1,298 @@
+"""Build-time training of the tiny models (python never runs at serve time).
+
+Produces ``artifacts/weights/<tag>.npz`` for:
+
+  vit_synth10 / vit_synth100 / vit_synthhard      — per-dataset ViT
+  vit_<ds>_ft                                     — PRISM-finetuned ViT
+                                                    (P=3, L=3; Table IV's
+                                                    "PRISM (Finetuned)" row)
+  bert                                            — multi-task GLUE-proxy
+  gpt2                                            — char-level LM
+
+Training is deliberately small (1 CPU core): a few hundred Adam steps each.
+Absolute accuracies are recorded in EXPERIMENTS.md; the paper comparison is
+about *relative* degradation vs. compression rate.
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import data as D
+from . import model as M
+from .configs import BERT, GPT2, VIT, BERT_TASKS, VIT_DATASETS
+
+WEIGHTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..",
+                           "artifacts", "weights")
+
+
+# ------------------------------------------------------------------ adam --
+
+def adam_init(params):
+    z = jax.tree.map(jnp.zeros_like, params)
+    return {"m": z, "v": jax.tree.map(jnp.zeros_like, params), "t": 0}
+
+
+def adam_update(params, grads, state, lr, b1=0.9, b2=0.999, eps=1e-8):
+    t = state["t"] + 1
+    m = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state["m"], grads)
+    v = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * g * g, state["v"],
+                     grads)
+    mh = jax.tree.map(lambda m: m / (1 - b1 ** t), m)
+    vh = jax.tree.map(lambda v: v / (1 - b2 ** t), v)
+    params = jax.tree.map(lambda p, m, v: p - lr * m / (jnp.sqrt(v) + eps),
+                          params, mh, vh)
+    return params, {"m": m, "v": v, "t": t}
+
+
+def ce_loss(lg, y):
+    lse = jax.scipy.special.logsumexp(lg, axis=-1)
+    picked = jnp.take_along_axis(lg, y[..., None], axis=-1)[..., 0]
+    return jnp.mean(lse - picked)
+
+
+# ----------------------------------------------------------- npz helpers --
+
+def save_params(tag: str, params: dict) -> str:
+    os.makedirs(WEIGHTS_DIR, exist_ok=True)
+    flat = {}
+
+    def walk(prefix, obj):
+        if isinstance(obj, dict):
+            for k, v in obj.items():
+                walk(f"{prefix}.{k}" if prefix else k, v)
+        elif isinstance(obj, list):
+            for i, v in enumerate(obj):
+                walk(f"{prefix}.{i}", v)
+        else:
+            flat[prefix] = np.asarray(obj)
+
+    walk("", params)
+    path = os.path.join(WEIGHTS_DIR, f"{tag}.npz")
+    np.savez(path, **flat)
+    return path
+
+
+def load_params(tag: str) -> dict:
+    path = os.path.join(WEIGHTS_DIR, f"{tag}.npz")
+    z = np.load(path)
+    params: dict = {}
+    for key in z.files:
+        parts = key.split(".")
+        cur = params
+        for i, part in enumerate(parts[:-1]):
+            nxt = parts[i + 1]
+            default = [] if nxt.isdigit() else {}
+            if part.isdigit():
+                idx = int(part)
+                while len(cur) <= idx:
+                    cur.append({} if not isinstance(default, list) else [])
+                if not cur[idx]:
+                    cur[idx] = default
+                cur = cur[idx]
+            else:
+                cur = cur.setdefault(part, default)
+        last = parts[-1]
+        arr = jnp.asarray(z[key])
+        if last.isdigit():
+            idx = int(last)
+            while len(cur) <= idx:
+                cur.append(None)
+            cur[idx] = arr
+        else:
+            cur[last] = arr
+    return params
+
+
+def have(tag: str) -> bool:
+    return os.path.exists(os.path.join(WEIGHTS_DIR, f"{tag}.npz"))
+
+
+# -------------------------------------------------------------- training --
+
+def _batches(n, bs, rng):
+    idx = rng.permutation(n)
+    for i in range(0, n - bs + 1, bs):
+        yield idx[i:i + bs]
+
+
+def train_vit(ds: str, steps: int = 300, bs: int = 32, lr: float = 1e-3,
+              log=print):
+    classes = VIT_DATASETS[ds]
+    xtr, ytr, xte, yte = D.make_vision(ds)
+    params = M.init_params(jax.random.PRNGKey(0), VIT, {ds: classes})
+
+    def loss_fn(p, xb, yb):
+        x = M.embed(p, VIT, xb)
+        x = M.forward_single(p, VIT, x)
+        return ce_loss(M.logits(p, VIT, x, ds), yb)
+
+    step = jax.jit(lambda p, s, xb, yb: _sgd_step(p, s, xb, yb, loss_fn, lr))
+    state = adam_init(params)
+    rng = np.random.default_rng(0)
+    t0, i = time.time(), 0
+    while i < steps:
+        for bidx in _batches(len(xtr), bs, rng):
+            params, state, lv = step(params, state, xtr[bidx], ytr[bidx])
+            i += 1
+            if i % 100 == 0:
+                log(f"  [{ds}] step {i} loss {float(lv):.4f} "
+                    f"({time.time() - t0:.0f}s)")
+            if i >= steps:
+                break
+    acc = eval_vit(params, ds, xte, yte)
+    log(f"  [{ds}] test acc {acc:.4f}")
+    return params, acc
+
+
+def _sgd_step(p, s, xb, yb, loss_fn, lr):
+    lv, g = jax.value_and_grad(loss_fn)(p, xb, yb)
+    p, s = adam_update(p, g, s, lr)
+    return p, s, lv
+
+
+def eval_vit(params, ds, xte, yte, mode="single", p=1, l=0) -> float:
+    @jax.jit
+    def fwd(xb):
+        x = M.embed(params, VIT, xb)
+        if mode == "single":
+            x = M.forward_single(params, VIT, x)
+        elif mode == "voltage":
+            x = M.forward_voltage(params, VIT, x, p)
+        else:
+            x = M.forward_prism(params, VIT, x, p, l)
+        return jnp.argmax(M.logits(params, VIT, x, ds), -1)
+
+    hits = 0
+    for i in range(0, len(xte), 64):
+        hits += int(jnp.sum(fwd(xte[i:i + 64]) == yte[i:i + 64]))
+    return hits / len(xte)
+
+
+def finetune_vit_prism(params, ds: str, p: int, l: int, steps: int = 120,
+                       bs: int = 32, lr: float = 3e-4, log=print):
+    """Fine-tune with the PRISM forward in the loop (Table IV last row)."""
+    xtr, ytr, _, _ = D.make_vision(ds)
+
+    def loss_fn(pp, xb, yb):
+        x = M.embed(pp, VIT, xb)
+        x = M.forward_prism(pp, VIT, x, p, l)
+        return ce_loss(M.logits(pp, VIT, x, ds), yb)
+
+    step = jax.jit(lambda pp, s, xb, yb: _sgd_step(pp, s, xb, yb, loss_fn,
+                                                   lr))
+    state = adam_init(params)
+    rng = np.random.default_rng(1)
+    i = 0
+    while i < steps:
+        for bidx in _batches(len(xtr), bs, rng):
+            params, state, lv = step(params, state, xtr[bidx], ytr[bidx])
+            i += 1
+            if i >= steps:
+                break
+    log(f"  [{ds}] finetune(p={p},l={l}) done loss {float(lv):.4f}")
+    return params
+
+
+def train_bert(steps: int = 2800, bs: int = 32, lr: float = 1e-3, log=print):
+    heads = {t: (c if c > 1 else 1) for t, (c, _) in BERT_TASKS.items()}
+    params = M.init_params(jax.random.PRNGKey(1), BERT, heads)
+    train_sets = {t: D.make_glue(t, 2048, "train") for t in BERT_TASKS}
+
+    def loss_fn(p, task, xb, yb):
+        x = M.embed(p, BERT, xb)
+        x = M.forward_single(p, BERT, x)
+        lg = M.logits(p, BERT, x, task)
+        if BERT_TASKS[task][0] == 1:  # regression
+            return jnp.mean((lg[:, 0] - yb) ** 2) * 0.5
+        return ce_loss(lg, yb.astype(jnp.int32))
+
+    steps_fns = {t: jax.jit(
+        lambda p, s, xb, yb, _t=t: _sgd_step(p, s, xb, yb,
+                                             lambda pp, a, b: loss_fn(
+                                                 pp, _t, a, b), lr))
+        for t in BERT_TASKS}
+    state = adam_init(params)
+    rng = np.random.default_rng(2)
+    tasks = list(BERT_TASKS)
+    t0 = time.time()
+    for i in range(steps):
+        task = tasks[i % len(tasks)]
+        xs, ys = train_sets[task]
+        bidx = rng.integers(0, len(xs), bs)
+        params, state, lv = steps_fns[task](params, state, xs[bidx],
+                                            ys[bidx])
+        if (i + 1) % 100 == 0:
+            log(f"  [bert/{task}] step {i + 1} loss {float(lv):.4f} "
+                f"({time.time() - t0:.0f}s)")
+    return params
+
+
+def train_gpt2(steps: int = 700, bs: int = 16, lr: float = 1e-3, log=print):
+    corpus = D.make_corpus()
+    ids = D.encode_chars(corpus)
+    split = int(0.9 * len(ids))
+    train_ids = ids[:split]
+    params = M.init_params(jax.random.PRNGKey(2), GPT2, {"lm": GPT2.vocab})
+
+    def loss_fn(p, wb):
+        x = M.embed(p, GPT2, wb[:, :-1])
+        x = M.forward_single(p, GPT2, x)
+        lg = M.logits(p, GPT2, x, "lm")
+        return ce_loss(lg.reshape(-1, GPT2.vocab), wb[:, 1:].reshape(-1))
+
+    step = jax.jit(lambda p, s, wb: _sgd_step(
+        p, s, wb, None, lambda pp, a, _b: loss_fn(pp, a), lr))
+    state = adam_init(params)
+    rng = np.random.default_rng(3)
+    t0 = time.time()
+    for i in range(steps):
+        starts = rng.integers(0, len(train_ids) - GPT2.n - 1, bs)
+        wb = np.stack([train_ids[s:s + GPT2.n + 1] for s in starts])
+        params, state, lv = step(params, state, wb)
+        if (i + 1) % 100 == 0:
+            bpc = float(lv) / np.log(2)
+            log(f"  [gpt2] step {i + 1} loss {float(lv):.4f} "
+                f"(~{bpc:.3f} bpc) ({time.time() - t0:.0f}s)")
+    return params
+
+
+def _sgd_step3(p, s, a, b, loss_fn, lr):  # pragma: no cover - alias
+    return _sgd_step(p, s, a, b, loss_fn, lr)
+
+
+def main(force: bool = False, log=print):
+    jobs = []
+    for ds in VIT_DATASETS:
+        jobs.append((f"vit_{ds}", lambda ds=ds: train_vit(ds, log=log)[0]))
+    jobs.append(("bert", lambda: train_bert(log=log)))
+    jobs.append(("gpt2", lambda: train_gpt2(log=log)))
+    trained = {}
+    for tag, fn in jobs:
+        if have(tag) and not force:
+            log(f"[train] {tag}: cached")
+            continue
+        log(f"[train] {tag} ...")
+        params = fn()
+        save_params(tag, params)
+        trained[tag] = params
+    # PRISM finetuning needs the base ViT weights.
+    for ds in VIT_DATASETS:
+        tag = f"vit_{ds}_ft"
+        if have(tag) and not force:
+            log(f"[train] {tag}: cached")
+            continue
+        base = trained.get(f"vit_{ds}") or load_params(f"vit_{ds}")
+        log(f"[train] {tag} ...")
+        ft = finetune_vit_prism(base, ds, p=3, l=3, log=log)
+        save_params(tag, ft)
+
+
+if __name__ == "__main__":
+    main(force="--force" in sys.argv)

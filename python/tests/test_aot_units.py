@@ -1,0 +1,89 @@
+"""Unit tests for the AOT exporter's pure helpers (no lowering)."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from compile import aot, layers
+from compile.configs import GPT2, VIT, Variant
+from compile import model as M
+
+
+def test_flatten_params_is_sorted_and_stable():
+    params = {
+        "embed": {"b": np.zeros(2), "a": np.ones(3)},
+        "blocks": [{"w": np.zeros((2, 2))}, {"w": np.ones((2, 2))}],
+    }
+    flat = aot.flatten_params(params)
+    names = [n for n, _ in flat]
+    assert names == ["blocks.0.w", "blocks.1.w", "embed.a", "embed.b"]
+    # idempotent
+    assert [n for n, _ in aot.flatten_params(params)] == names
+
+
+def test_write_weight_blob_offsets(tmp_path, monkeypatch):
+    monkeypatch.setattr(aot, "ART", str(tmp_path))
+    params = {"a": np.arange(6, dtype=np.float32).reshape(2, 3),
+              "b": np.full((4,), 7.0, dtype=np.float32)}
+    meta = aot.write_weight_blob("t", params)
+    assert meta["elements"] == 10
+    tensors = {t["name"]: t for t in meta["tensors"]}
+    assert tensors["a"]["offset"] == 0 and tensors["a"]["shape"] == [2, 3]
+    assert tensors["b"]["offset"] == 6
+    raw = np.fromfile(tmp_path / "weights_t.bin", dtype="<f4")
+    assert raw.tolist() == [0, 1, 2, 3, 4, 5, 7, 7, 7, 7]
+
+
+def test_variant_record_fields():
+    rec = aot.variant_record(VIT, Variant("vit", "prism", 2, 6))
+    assert rec["cr"] == 65 / 12
+    assert rec["pdplc"] == 6
+    rec = aot.variant_record(VIT, Variant("vit", "voltage", 3))
+    assert rec["pdplc"] == 2 * (65 // 3)
+    rec = aot.variant_record(VIT, Variant("vit", "single"))
+    assert "cr" not in rec
+
+
+def test_block_fn_signature_and_outputs():
+    fn, nw = aot.block_fn(VIT, "prism", 3, use_pallas=False)
+    assert nw == len(layers.BLOCK_TENSORS)
+    params = M.init_params(jax.random.PRNGKey(0), VIT, {"t": 2})
+    blk = params["blocks"][0]
+    w = [blk[n] for n, _ in layers.BLOCK_TENSORS]
+    x = jnp.zeros((2, 32, VIT.d))
+    ctx = jnp.zeros((2, 3, VIT.d))
+    bias = jnp.zeros((32, 35))
+    outs = fn(*w, x, ctx, bias)
+    assert len(outs) == 2  # (x_out, z_out)
+    assert outs[0].shape == (2, 32, VIT.d)
+    assert outs[1].shape == (2, 3, VIT.d)
+
+    fn_s, _ = aot.block_fn(GPT2, "single", 0, use_pallas=False)
+    params = M.init_params(jax.random.PRNGKey(0), GPT2, {"lm": 5})
+    w = [params["blocks"][0][n] for n, _ in layers.BLOCK_TENSORS]
+    x = jnp.zeros((1, GPT2.n, GPT2.d))
+    bias = jnp.zeros((GPT2.n, GPT2.n))
+    outs = fn_s(*w, x, bias)
+    assert len(outs) == 1
+
+
+def test_embed_and_head_fns():
+    fn, names = aot.embed_fn(VIT)
+    assert names == [n for n, _ in layers.VIT_EMBED_TENSORS]
+    params = M.init_params(jax.random.PRNGKey(0), VIT, {"t": 2})
+    w = [params["embed"][n] for n in names]
+    out = fn(*w, jnp.zeros((2, 32, 32, 3)))
+    assert out[0].shape == (2, VIT.n, VIT.d)
+
+    hfn, hnames = aot.head_fn(VIT, "cls")
+    hw = [params["head_t"][n] for n in hnames]
+    lg = hfn(*hw, jnp.zeros((2, VIT.n, VIT.d)))
+    assert lg[0].shape == (2, 2)
+
+
+def test_hlo_text_is_parseable_hlo():
+    lowered = jax.jit(lambda a: (a * 2,)).lower(
+        jax.ShapeDtypeStruct((2, 2), jnp.float32))
+    text = aot.to_hlo_text(lowered)
+    assert text.startswith("HloModule")
+    assert "ENTRY" in text

@@ -1,0 +1,63 @@
+"""Variant enumeration / CR bookkeeping (the manifest contract)."""
+
+import pytest
+
+from compile.configs import (BERT, GPT2, MODELS, VIT, Variant,
+                             all_variants, bert_variants, effective_cr,
+                             gpt2_variants, landmarks_for_cr,
+                             vit_variants)
+
+
+def test_model_registry():
+    assert set(MODELS) == {"vit", "bert", "gpt2"}
+    assert VIT.n == 65 and VIT.img == 32 and VIT.patch == 4
+    assert BERT.vocab == 256 and not BERT.causal
+    assert GPT2.causal and GPT2.kind == "decoder"
+    assert VIT.dh * VIT.heads == VIT.d
+    assert VIT.ffn == 4 * VIT.d
+
+
+def test_variant_keys_are_unique():
+    keys = [v.key() for v in all_variants()]
+    assert len(keys) == len(set(keys))
+
+
+def test_vit_variants_cover_table4_rows():
+    vs = vit_variants()
+    assert Variant("vit", "single") in vs
+    assert Variant("vit", "voltage", 2) in vs
+    assert Variant("vit", "voltage", 3) in vs
+    prism = [v for v in vs if v.mode == "prism"]
+    assert {(v.p, v.l) for v in prism} == {(2, 3), (2, 6), (2, 10),
+                                           (3, 3), (3, 5), (3, 10)}
+
+
+def test_bert_variants_include_max_compression():
+    vs = bert_variants()
+    assert Variant("bert", "prism", 2, 1) in vs  # PDPLC = 1 (paper CR=128)
+    assert Variant("bert", "prism", 3, 1) in vs
+
+
+def test_gpt2_variants_dedupe_equal_geometry():
+    vs = [v for v in gpt2_variants() if v.mode == "prism"]
+    assert len({(v.p, v.l) for v in vs}) == len(vs)
+    # Eq. 16: P=2 CR=2 -> L=32; P=3 CR=10 -> L=4
+    assert Variant("gpt2", "prism", 2, 32) in vs
+    assert Variant("gpt2", "prism", 3, 4) in vs
+
+
+def test_variant_key_format():
+    assert Variant("vit", "single").key() == "vit_single"
+    assert Variant("vit", "voltage", 3).key() == "vit_voltage_p3"
+    assert Variant("gpt2", "prism", 2, 16).key() == "gpt2_prism_p2l16"
+
+
+def test_cr_round_trip():
+    for p in (2, 3):
+        for cr in range(2, 11):
+            l = landmarks_for_cr(GPT2.n, p, cr)
+            eff = effective_cr(GPT2.n, p, l)
+            # floor in Eq. 16 => effective CR >= nominal
+            assert eff >= cr - 1e-9
+    assert Variant("vit", "prism", 2, 6).cr() == pytest.approx(65 / 12)
+    assert Variant("vit", "single").cr() is None

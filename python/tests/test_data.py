@@ -1,0 +1,101 @@
+"""Synthetic dataset generators: determinism, balance, learnability hooks."""
+
+import numpy as np
+
+from compile import data as D
+from compile.configs import BERT, GPT2
+
+
+def test_vision_deterministic_and_shaped():
+    x1, y1, xt1, yt1 = D.make_vision("synth10", 64, 32)
+    x2, y2, xt2, yt2 = D.make_vision("synth10", 64, 32)
+    np.testing.assert_array_equal(x1, x2)
+    np.testing.assert_array_equal(y1, y2)
+    assert x1.shape == (64, 32, 32, 3) and x1.dtype == np.float32
+    assert y1.max() < 10
+
+
+def test_vision_train_test_disjoint_noise():
+    xtr, _, xte, _ = D.make_vision("synth10", 64, 64)
+    assert not np.allclose(xtr[:16], xte[:16])
+
+
+def test_vision_classes_distinguishable():
+    """Class templates must differ far more than sample noise floor."""
+    t = D._class_templates(10, "synth10")
+    d = np.linalg.norm((t[0] - t[1]).ravel())
+    assert d > 5.0
+
+
+def test_vision_hard_is_noisier():
+    a = D.make_vision("synth10", 32, 8)[0]
+    b = D.make_vision("synthhard", 32, 8)[0]
+    assert b.std() > a.std()
+
+
+def test_glue_all_tasks_generate():
+    for task in ("sst2p", "colap", "mrpcp", "qqpp", "rtep", "qnlip",
+                 "mnlip", "stsbp"):
+        x, y = D.make_glue(task, 96, "t")
+        assert x.shape == (96, BERT.n) and x.dtype == np.int32
+        assert x.max() < BERT.vocab and x.min() >= 0
+        assert (x[:, 0] == D.CLS).all()
+        if task == "mnlip":
+            assert set(np.unique(y)) <= {0.0, 1.0, 2.0}
+        elif task == "stsbp":
+            assert 0.0 <= y.min() and y.max() <= 5.0
+        else:
+            assert set(np.unique(y)) <= {0.0, 1.0}
+
+
+def test_glue_deterministic():
+    a = D.make_glue("mnlip", 16, "x")[0]
+    b = D.make_glue("mnlip", 16, "x")[0]
+    np.testing.assert_array_equal(a, b)
+    c = D.make_glue("mnlip", 16, "y")[0]
+    assert not np.array_equal(a, c)
+
+
+def test_glue_imbalance_targets():
+    _, y_mrpc = D.make_glue("mrpcp", 1000, "bal")
+    assert 0.55 < y_mrpc.mean() < 0.8  # positives dominate (like MRPC)
+    _, y_qqp = D.make_glue("qqpp", 1000, "bal")
+    assert 0.25 < y_qqp.mean() < 0.5
+
+
+def test_corpus_charset_and_determinism():
+    c1 = D.make_corpus(200)
+    c2 = D.make_corpus(200)
+    assert c1 == c2
+    ids = D.encode_chars(c1)
+    assert ids.min() >= 1 and ids.max() < GPT2.vocab
+    assert c1.count(".") >= 200  # one per sentence
+
+
+def test_lm_windows_shape():
+    ids = D.encode_chars(D.make_corpus(500))
+    w = D.lm_windows(ids, GPT2.n, 10, "t")
+    assert w.shape == (10, GPT2.n + 1)
+    # windows are corpus slices
+    s = w[0]
+    joined = "".join(
+        {v: k for k, v in D.CHAR2ID.items()}[i] for i in s.tolist())
+    assert joined in D.make_corpus(500)
+
+
+def test_cloze_sets():
+    for kind, vocab in (("cn", D._NOUNS), ("ne", D._NAMES)):
+        cz = D.make_cloze(kind, 8)
+        assert len(cz.answers) == 8
+        for cands, ans in zip(cz.candidates, cz.answers):
+            assert len(cands) == 10 and len(set(cands)) == 10
+            assert cands[ans] in vocab
+
+
+def test_cloze_truth_is_plausible():
+    """The true candidate completes text drawn from the same grammar."""
+    cz = D.make_cloze("cn", 4)
+    for pre, suf, cands, ans in zip(cz.prefixes, cz.suffixes,
+                                    cz.candidates, cz.answers):
+        assert pre.endswith(" ")
+        assert (pre + cands[ans] + suf).count(".") >= 2

@@ -1,0 +1,168 @@
+"""Layer-1 Pallas kernels vs the pure-jnp oracle (hypothesis sweeps)."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.prism_attention import (mxu_flops, prism_attention,
+                                             vmem_footprint_bytes)
+from compile.kernels.ref import (attention_ref, duplicated_attention_ref,
+                                 gelu_ref, layernorm_ref,
+                                 prism_attention_scaled_ref,
+                                 segment_means_ref)
+from compile.kernels.segment_means import segment_means
+from compile.plan import plans
+
+S = settings(max_examples=25, deadline=None)
+
+
+def _rand(rng, *shape, scale=1.0):
+    return (scale * rng.normal(size=shape)).astype(np.float32)
+
+
+@given(st.integers(0, 2 ** 31 - 1), st.integers(1, 3), st.integers(1, 4),
+       st.integers(1, 48), st.integers(1, 48),
+       st.sampled_from([4, 8, 16, 32]))
+@S
+def test_pallas_attention_matches_oracle(seed, b, h, nq, nk, dh):
+    rng = np.random.default_rng(seed)
+    q = _rand(rng, b, h, nq, dh)
+    k = _rand(rng, b, h, nk, dh)
+    v = _rand(rng, b, h, nk, dh)
+    bias = _rand(rng, nq, nk)
+    out = prism_attention(q, k, v, bias)
+    ref = attention_ref(q, k, v, bias)
+    np.testing.assert_allclose(out, ref, atol=2e-5, rtol=2e-5)
+
+
+@given(st.integers(0, 2 ** 31 - 1), st.sampled_from([1, 2, 7, 16, 64]))
+@S
+def test_pallas_attention_block_q_invariant(seed, block_q):
+    """Tiling must not change the numbers (HBM↔VMEM schedule only)."""
+    rng = np.random.default_rng(seed)
+    q = _rand(rng, 2, 2, 33, 16)
+    k = _rand(rng, 2, 2, 20, 16)
+    v = _rand(rng, 2, 2, 20, 16)
+    bias = _rand(rng, 33, 20)
+    a = prism_attention(q, k, v, bias, block_q=block_q)
+    b = prism_attention(q, k, v, bias, block_q=33)
+    np.testing.assert_allclose(a, b, atol=1e-6)
+
+
+def test_attention_masked_columns_are_ignored():
+    rng = np.random.default_rng(0)
+    q, k, v = (_rand(rng, 1, 1, 5, 8) for _ in range(3))
+    bias = np.zeros((5, 10), np.float32)
+    bias[:, 5:] = -1e30
+    k2 = np.concatenate([k, _rand(rng, 1, 1, 5, 8)], axis=2)
+    v2 = np.concatenate([v, _rand(rng, 1, 1, 5, 8)], axis=2)
+    full = prism_attention(q, k2, v2, bias)
+    only = prism_attention(q, k, v, np.zeros((5, 5), np.float32))
+    np.testing.assert_allclose(full, only, atol=1e-5)
+
+
+@given(st.integers(0, 2 ** 31 - 1), st.integers(1, 3),
+       st.integers(1, 70), st.integers(1, 12), st.sampled_from([4, 8, 33]))
+@S
+def test_pallas_segment_means_matches_oracle(seed, b, n_p, l, d):
+    if n_p < l:
+        return
+    rng = np.random.default_rng(seed)
+    x = _rand(rng, b, n_p, d)
+    out = segment_means(x, l=l)
+    ref = segment_means_ref(x, l)
+    np.testing.assert_allclose(out, ref, atol=1e-5, rtol=1e-5)
+
+
+def test_segment_means_constant_preserved():
+    x = np.full((2, 13, 5), 3.25, np.float32)
+    z = segment_means(x, l=4)
+    np.testing.assert_allclose(z, 3.25)
+
+
+def test_segment_means_identity_when_l_equals_n():
+    rng = np.random.default_rng(1)
+    x = _rand(rng, 2, 9, 6)
+    np.testing.assert_allclose(segment_means(x, l=9), x, atol=0)
+
+
+# ---- the paper's core algebra: Eq. 13-15 == Eq. 11/12 == softmax(+ln g) --
+
+@given(st.integers(0, 2 ** 31 - 1), st.integers(2, 30), st.integers(1, 10),
+       st.integers(1, 8))
+@S
+def test_scaling_aware_equals_duplicated(seed, nq, nk, maxcount):
+    rng = np.random.default_rng(seed)
+    counts = rng.integers(1, maxcount + 1, size=nk)
+    q = _rand(rng, nq, 8, scale=0.4)
+    k = _rand(rng, nk, 8, scale=0.4)
+    v = _rand(rng, nk, 8)
+    a_scaled = prism_attention_scaled_ref(q, k, v,
+                                          counts.astype(np.float32))
+    a_dup = duplicated_attention_ref(q, k, v, counts)
+    np.testing.assert_allclose(a_scaled, a_dup, atol=1e-5, rtol=1e-4)
+
+
+@given(st.integers(0, 2 ** 31 - 1))
+@S
+def test_scaling_aware_equals_log_bias_form(seed):
+    """softmax(logits + ln g) == rownorm(exp(logits) ⊙ g): what the AOT
+    executables actually compute vs the paper's literal Eq. 13-15."""
+    rng = np.random.default_rng(seed)
+    g = rng.integers(1, 12, size=17).astype(np.float32)
+    q = _rand(rng, 9, 8, scale=0.4)
+    k = _rand(rng, 17, 8, scale=0.4)
+    v = _rand(rng, 17, 8)
+    a1 = prism_attention_scaled_ref(q, k, v, g)
+    a2 = attention_ref(q, k, v, jnp.log(g)[None, :])
+    np.testing.assert_allclose(a1, a2, atol=1e-5, rtol=1e-4)
+
+
+@given(st.integers(0, 2 ** 31 - 1))
+@S
+def test_permutation_invariance_eq5(seed):
+    """Eq. 5: attention is invariant to a joint permutation of K/V rows
+    (with bias columns permuted alongside) — the property that makes
+    out-of-order Segment-Means delivery safe."""
+    rng = np.random.default_rng(seed)
+    q = _rand(rng, 1, 2, 7, 8)
+    k = _rand(rng, 1, 2, 13, 8)
+    v = _rand(rng, 1, 2, 13, 8)
+    bias = _rand(rng, 7, 13)
+    perm = rng.permutation(13)
+    a = prism_attention(q, k, v, bias)
+    b = prism_attention(q, k[:, :, perm], v[:, :, perm], bias[:, perm])
+    np.testing.assert_allclose(a, b, atol=1e-5)
+
+
+def test_scaling_aware_with_plan_geometry():
+    """End-to-end over a real plan: scaled form vs duplicating each peer
+    segment mean back to its segment length (Table II's 'Yes' column)."""
+    rng = np.random.default_rng(3)
+    for p, l in ((2, 3), (3, 4)):
+        for pl in plans(65, p, l, False):
+            g = pl.g()
+            q = _rand(rng, pl.n_p, 16, scale=0.3)
+            k = _rand(rng, pl.n_hat, 16, scale=0.3)
+            v = _rand(rng, pl.n_hat, 16)
+            a1 = prism_attention_scaled_ref(q, k, v, g)
+            a2 = duplicated_attention_ref(q, k, v, g.astype(int))
+            np.testing.assert_allclose(a1, a2, atol=1e-5, rtol=1e-4)
+
+
+def test_layernorm_and_gelu_sanity():
+    rng = np.random.default_rng(0)
+    x = _rand(rng, 4, 9)
+    y = layernorm_ref(x, np.ones(9, np.float32), np.zeros(9, np.float32))
+    np.testing.assert_allclose(np.mean(y, -1), 0, atol=1e-5)
+    np.testing.assert_allclose(np.var(np.asarray(y), -1), 1, atol=1e-3)
+    assert float(gelu_ref(jnp.asarray(0.0))) == 0.0
+    assert float(gelu_ref(jnp.asarray(10.0))) > 9.99
+
+
+def test_perf_model_helpers():
+    # VMEM estimate must scale with Nk (the PRISM win) and stay < 16 MiB
+    small = vmem_footprint_bytes(33, 39, 32)
+    big = vmem_footprint_bytes(33, 330, 32)
+    assert small < big < 16 * 2 ** 20
+    assert mxu_flops(10, 20, 32) == 2 * 10 * 20 * 32 * 2

@@ -1,0 +1,154 @@
+"""Layer-2 model invariants across the three inference modes."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile.configs import BERT, GPT2, VIT, ModelConfig
+from compile.plan import plans
+
+TINY = ModelConfig(name="tiny", kind="encoder", n=24, d=32, heads=2,
+                   layers=2)
+TINYC = ModelConfig(name="tinyc", kind="decoder", n=24, d=32, heads=2,
+                    layers=2, vocab=11, causal=True)
+
+
+@pytest.fixture(scope="module")
+def tiny_setup():
+    params = M.init_params(jax.random.PRNGKey(0), TINY, {"t": 3})
+    x = 0.5 * jax.random.normal(jax.random.PRNGKey(1), (2, TINY.n, TINY.d))
+    return params, x
+
+
+@pytest.fixture(scope="module")
+def tinyc_setup():
+    params = M.init_params(jax.random.PRNGKey(2), TINYC, {"lm": 11})
+    x = 0.5 * jax.random.normal(jax.random.PRNGKey(3), (2, TINYC.n, TINYC.d))
+    return params, x
+
+
+def test_voltage_equals_single_encoder(tiny_setup):
+    """Position-wise partitioning is lossless (paper §II-B3)."""
+    params, x = tiny_setup
+    s = M.forward_single(params, TINY, x)
+    for p in (2, 3, 4):
+        v = M.forward_voltage(params, TINY, x, p)
+        np.testing.assert_allclose(v, s, atol=2e-5, rtol=1e-4)
+
+
+def test_voltage_equals_single_causal(tinyc_setup):
+    params, x = tinyc_setup
+    s = M.forward_single(params, TINYC, x)
+    for p in (2, 3):
+        v = M.forward_voltage(params, TINYC, x, p)
+        np.testing.assert_allclose(v, s, atol=2e-5, rtol=1e-4)
+
+
+def test_prism_equals_single_at_cr1(tiny_setup):
+    """L = N_p (one token per segment) makes Segment Means the identity."""
+    params, x = tiny_setup
+    s = M.forward_single(params, TINY, x)
+    for p in (2, 3):  # 24 divisible by both -> all partitions equal size
+        pr = M.forward_prism(params, TINY, x, p, TINY.n // p)
+        np.testing.assert_allclose(pr, s, atol=2e-5, rtol=1e-4)
+
+
+def test_prism_equals_single_at_cr1_causal(tinyc_setup):
+    params, x = tinyc_setup
+    s = M.forward_single(params, TINYC, x)
+    pr = M.forward_prism(params, TINYC, x, 2, TINYC.n // 2)
+    np.testing.assert_allclose(pr, s, atol=2e-5, rtol=1e-4)
+
+
+def test_prism_pallas_matches_ref_path(tiny_setup):
+    params, x = tiny_setup
+    a = M.forward_prism(params, TINY, x, 2, 3, use_pallas=False)
+    b = M.forward_prism(params, TINY, x, 2, 3, use_pallas=True)
+    np.testing.assert_allclose(a, b, atol=2e-5, rtol=1e-4)
+
+
+def test_prism_compression_error_decreases_with_l(tiny_setup):
+    """More landmarks (lower CR) => closer to the exact output."""
+    params, x = tiny_setup
+    s = M.forward_single(params, TINY, x)
+    errs = []
+    for l in (1, 3, 6, 12):
+        pr = M.forward_prism(params, TINY, x, 2, l)
+        errs.append(float(jnp.mean(jnp.abs(pr - s))))
+    assert errs[-1] < errs[1] < errs[0] * 1.001
+    assert errs[-1] < 1e-5  # L = N_p is exact
+
+
+def test_prism_duplicated_flag_changes_output(tiny_setup):
+    """Table II ablation: dropping the repetition counts changes attention."""
+    params, x = tiny_setup
+    a = M.forward_prism(params, TINY, x, 2, 3, duplicated=True)
+    b = M.forward_prism(params, TINY, x, 2, 3, duplicated=False)
+    assert float(jnp.max(jnp.abs(a - b))) > 1e-4
+
+
+def test_causal_no_future_leak(tinyc_setup):
+    """Perturbing a future token must not change earlier positions, in
+    BOTH single and PRISM-distributed causal forward passes."""
+    params, x = tinyc_setup
+    t = 10
+    x2 = x.at[:, t + 2, :].add(5.0)
+    for fwd in (lambda z: M.forward_single(params, TINYC, z),
+                lambda z: M.forward_prism(params, TINYC, z, 2, 4),
+                lambda z: M.forward_voltage(params, TINYC, z, 3)):
+        a, b = fwd(x), fwd(x2)
+        np.testing.assert_allclose(a[:, :t + 2], b[:, :t + 2],
+                                   atol=2e-5, rtol=1e-4)
+        assert float(jnp.max(jnp.abs(a[:, t + 2:] - b[:, t + 2:]))) > 1e-3
+
+
+def test_encoder_not_causal_by_default(tiny_setup):
+    """Encoders see the whole sequence: early positions do change."""
+    params, x = tiny_setup
+    x2 = x.at[:, -1, :].add(100.0)
+    a = M.forward_single(params, TINY, x)
+    b = M.forward_single(params, TINY, x2)
+    # the computation is deterministic, so ANY nonzero difference at
+    # position 0 is genuine cross-token information flow (the untrained
+    # residual stream attenuates it to ~1e-6); causal models are exactly
+    # zero here (see test_causal_no_future_leak).
+    assert float(jnp.max(jnp.abs(a[:, 0] - b[:, 0]))) > 1e-7
+
+
+def test_block_apply_shapes():
+    params = M.init_params(jax.random.PRNGKey(0), TINY, {"t": 3})
+    pls = plans(TINY.n, 3, 2, False)
+    pl = pls[1]
+    x_p = jnp.zeros((4, pl.n_p, TINY.d))
+    ctx = jnp.zeros((4, pl.ctx_len, TINY.d))
+    bias = jnp.asarray(pl.bias())
+    x, z = M.block_apply(params["blocks"][0], TINY, x_p, ctx, bias, l_out=2)
+    assert x.shape == (4, pl.n_p, TINY.d)
+    assert z.shape == (4, 2, TINY.d)
+
+
+def test_embed_shapes_real_models():
+    pv = M.init_params(jax.random.PRNGKey(0), VIT, {"synth10": 10})
+    img = jnp.zeros((2, VIT.img, VIT.img, 3))
+    assert M.embed(pv, VIT, img).shape == (2, VIT.n, VIT.d)
+
+    pb = M.init_params(jax.random.PRNGKey(0), BERT, {"sst2p": 2})
+    ids = jnp.zeros((2, BERT.n), jnp.int32)
+    assert M.embed(pb, BERT, ids).shape == (2, BERT.n, BERT.d)
+
+    pg = M.init_params(jax.random.PRNGKey(0), GPT2, {"lm": GPT2.vocab})
+    ids = jnp.zeros((2, GPT2.n), jnp.int32)
+    x = M.embed(pg, GPT2, ids)
+    assert x.shape == (2, GPT2.n, GPT2.d)
+    assert M.logits(pg, GPT2, x, "lm").shape == (2, GPT2.n, GPT2.vocab)
+
+
+def test_cls_head_uses_token_zero(tiny_setup):
+    params, x = tiny_setup
+    lg1 = M.logits(params, TINY, x, "t")
+    x2 = x.at[:, 5:, :].add(1.0)  # CLS untouched
+    lg2 = M.logits(params, TINY, x2, "t")
+    np.testing.assert_allclose(lg1, lg2, atol=1e-6)
+    assert lg1.shape == (2, 3)

@@ -1,0 +1,146 @@
+"""Partition / segment-plan geometry (paper Algorithm 1, 2; Eq. 16, 17)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.configs import (effective_cr, landmarks_for_cr,
+                             partition_sizes, pdplc_prism, pdplc_voltage,
+                             segment_counts)
+from compile.plan import NEG_INF, PartitionPlan, plans, single_plan
+
+
+@given(st.integers(2, 512), st.integers(1, 8))
+def test_partition_sizes_cover_sequence(n, p):
+    if n < p:
+        return
+    sizes = partition_sizes(n, p)
+    assert len(sizes) == p
+    assert sum(sizes) == n
+    # Algorithm 1: all but the last are floor(N/P); last takes the remainder
+    assert all(s == n // p for s in sizes[:-1])
+    assert sizes[-1] == n // p + n % p
+
+
+@given(st.integers(1, 300), st.integers(1, 32))
+def test_segment_counts_cover_partition(n_p, l):
+    if n_p < l:
+        return
+    counts = segment_counts(n_p, l)
+    assert len(counts) == l
+    assert sum(counts) == n_p
+    assert all(c == n_p // l for c in counts[:-1])
+
+
+def test_partition_rejects_invalid():
+    with pytest.raises(ValueError):
+        partition_sizes(3, 5)
+    with pytest.raises(ValueError):
+        segment_counts(2, 4)
+    with pytest.raises(ValueError):
+        partition_sizes(10, 0)
+
+
+def test_eq16_landmarks():
+    # paper: ViT N=197, P=2, CR=9.9 -> L = 9.9; PDPLC 10 tokens
+    assert landmarks_for_cr(197, 2, 9.9) == 9
+    assert landmarks_for_cr(128, 2, 2) == 32
+    assert landmarks_for_cr(128, 3, 10) == 4
+    assert landmarks_for_cr(16, 4, 100) == 1  # clamped to >= 1
+
+
+def test_pdplc_matches_paper_convention():
+    # Table IV: Voltage P=2 on N=197 -> 98 tokens/device/layer (paper: 99
+    # with ceil); we follow floor(N/P) of Algorithm 1.
+    assert pdplc_voltage(197, 2) == 98
+    assert pdplc_prism(2, 10) == 10
+    assert pdplc_prism(3, 10) == 20
+
+
+@given(st.integers(8, 200), st.integers(2, 4), st.integers(1, 6),
+       st.booleans())
+@settings(max_examples=60)
+def test_g_vector_sums_to_n(n, p, l, causal):
+    if n // p < max(l, 1):
+        return
+    for pl in plans(n, p, l, causal):
+        g = pl.g()
+        assert g.shape == (pl.n_hat,)
+        # local tokens count 1; peers' counts reconstruct their partitions
+        assert int(g.sum()) == n
+        assert np.all(g >= 1)
+
+
+@given(st.integers(8, 200), st.integers(2, 4), st.integers(1, 6))
+@settings(max_examples=60)
+def test_causal_bias_no_future(n, p, l):
+    """No column whose last covered token is in the future is visible."""
+    if n // p < max(l, 1):
+        return
+    for pl in plans(n, p, l, True):
+        b = pl.bias()
+        cols = pl.col_positions()
+        for i in range(pl.n_p):
+            t = pl.start + i
+            visible = b[i] > NEG_INF / 2
+            assert np.array_equal(visible, cols <= t)
+
+
+def test_causal_bias_matches_eq17_block_structure():
+    """Eq. 17: all segment means of earlier partitions visible, later masked."""
+    pls = plans(120, 3, 4, True)
+    mid = pls[1]
+    b = mid.bias()
+    n_p = mid.n_p
+    # local part: lower-triangular
+    local = b[:, :n_p] > NEG_INF / 2
+    assert np.array_equal(local, np.tril(np.ones((n_p, n_p), bool)))
+    # earlier partition's L means: fully visible; later partition's: masked
+    earlier = b[:, n_p:n_p + 4] > NEG_INF / 2
+    later = b[:, n_p + 4:] > NEG_INF / 2
+    assert earlier.all()
+    assert not later.any()
+
+
+def test_encoder_bias_is_log_g():
+    pl = plans(65, 2, 3, False)[0]
+    b = pl.bias()
+    g = pl.g()
+    assert np.allclose(b, np.log(g)[None, :].repeat(pl.n_p, 0))
+
+
+def test_single_plan_causal_is_lower_triangular():
+    pl = single_plan(16, True)
+    vis = pl.bias() > NEG_INF / 2
+    assert np.array_equal(vis, np.tril(np.ones((16, 16), bool)))
+    assert np.allclose(single_plan(16, False).bias(), 0.0)
+
+
+@given(st.integers(10, 120), st.integers(2, 3), st.integers(1, 5))
+@settings(max_examples=40)
+def test_effective_cr_and_ctx_len(n, p, l):
+    if n // p < l:
+        return
+    cr = effective_cr(n, p, l)
+    assert cr == pytest.approx(n / (l * p))
+    for pl in plans(n, p, l, False):
+        assert pl.ctx_len == (p - 1) * l
+        assert pl.n_hat == pl.n_p + (p - 1) * l
+
+
+def test_voltage_plan_ctx_is_rest_of_sequence():
+    for pl in plans(100, 3, 0, False):
+        assert pl.ctx_len == 100 - pl.n_p
+        assert pl.n_hat == 100
+        assert np.all(pl.g() == 1.0)
+
+
+def test_bytes_per_exchange_helpers():
+    from compile.plan import bytes_per_exchange, bytes_per_exchange_voltage
+    # PRISM: (P-1) * L * D * 4 bytes; Voltage: (P-1) * floor(N/P) * D * 4
+    assert bytes_per_exchange(128, 6, 2) == 1 * 6 * 128 * 4
+    assert bytes_per_exchange(128, 6, 3) == 2 * 6 * 128 * 4
+    assert bytes_per_exchange_voltage(65, 128, 2) == 32 * 128 * 4
+    # PRISM always cheaper when L < floor(N/P)
+    assert bytes_per_exchange(128, 6, 2) < \
+        bytes_per_exchange_voltage(65, 128, 2)

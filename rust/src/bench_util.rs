@@ -1,0 +1,115 @@
+//! Timing harness for the `benches/` binaries (criterion is not in the
+//! offline vendor set): warmup + fixed-iteration timing with
+//! median/p95, plus shared helpers for locating artifacts and reading
+//! bench parameters from the environment.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::runtime::Manifest;
+
+#[derive(Debug, Clone)]
+pub struct BenchStats {
+    pub iters: usize,
+    pub mean_secs: f64,
+    pub median_secs: f64,
+    pub p95_secs: f64,
+    pub min_secs: f64,
+}
+
+impl BenchStats {
+    pub fn per_op(&self) -> String {
+        fn fmt(s: f64) -> String {
+            if s >= 1.0 {
+                format!("{s:.3} s")
+            } else if s >= 1e-3 {
+                format!("{:.3} ms", s * 1e3)
+            } else {
+                format!("{:.1} µs", s * 1e6)
+            }
+        }
+        format!("median {} (mean {}, p95 {}, n={})",
+                fmt(self.median_secs), fmt(self.mean_secs),
+                fmt(self.p95_secs), self.iters)
+    }
+}
+
+/// Run `f` `iters` times after `warmup` unmeasured runs.
+pub fn bench(warmup: usize, iters: usize, mut f: impl FnMut())
+             -> BenchStats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    samples.sort_by(f64::total_cmp);
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    BenchStats {
+        iters,
+        mean_secs: mean,
+        median_secs: samples[samples.len() / 2],
+        p95_secs: samples[(samples.len() * 95 / 100)
+            .min(samples.len() - 1)],
+        min_secs: samples[0],
+    }
+}
+
+/// Artifacts root: $PRISM_ARTIFACTS or ./artifacts.
+pub fn artifacts_root() -> PathBuf {
+    std::env::var("PRISM_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+/// Load the manifest or explain how to produce it.
+pub fn load_manifest() -> Result<Arc<Manifest>> {
+    Ok(Arc::new(Manifest::load(&artifacts_root())?))
+}
+
+/// Sample cap for accuracy sweeps: $PRISM_EVAL_LIMIT (0 = full dataset).
+pub fn eval_limit(default: usize) -> usize {
+    std::env::var("PRISM_EVAL_LIMIT")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+/// True when artifacts exist; benches print a pointer and exit otherwise.
+pub fn require_artifacts() -> Option<Arc<Manifest>> {
+    match load_manifest() {
+        Ok(m) => Some(m),
+        Err(e) => {
+            eprintln!("skipping: {e:#}\n(run `make artifacts` first)");
+            None
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_counts_and_orders() {
+        let mut n = 0;
+        let st = bench(2, 10, || n += 1);
+        assert_eq!(n, 12);
+        assert_eq!(st.iters, 10);
+        assert!(st.min_secs <= st.median_secs);
+        assert!(st.median_secs <= st.p95_secs);
+        assert!(!st.per_op().is_empty());
+    }
+
+    #[test]
+    fn eval_limit_default() {
+        std::env::remove_var("PRISM_EVAL_LIMIT");
+        assert_eq!(eval_limit(77), 77);
+    }
+}

@@ -1,0 +1,118 @@
+//! Minimal CLI argument parsing (no clap in the offline vendor set).
+//!
+//! Grammar: `prism <command> [--flag value | --flag] [positional...]`.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+#[derive(Debug, Default)]
+pub struct Args {
+    pub command: String,
+    pub positional: Vec<String>,
+    pub flags: BTreeMap<String, String>,
+}
+
+impl Args {
+    /// Parse raw argv (without the program name).
+    pub fn parse(argv: &[String]) -> Result<Args> {
+        let mut args = Args::default();
+        let mut it = argv.iter().peekable();
+        args.command = it.next().cloned().unwrap_or_default();
+        while let Some(a) = it.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                if name.is_empty() {
+                    bail!("bare '--' not supported");
+                }
+                if let Some((k, v)) = name.split_once('=') {
+                    args.flags.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    args.flags
+                        .insert(name.to_string(),
+                                it.next().unwrap().clone());
+                } else {
+                    args.flags.insert(name.to_string(), "true".to_string());
+                }
+            } else {
+                args.positional.push(a.clone());
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.flags.get(key).cloned()
+            .unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn req(&self, key: &str) -> Result<&str> {
+        self.flags
+            .get(key)
+            .map(|s| s.as_str())
+            .ok_or_else(|| anyhow!("missing required flag --{key}"))
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow!("--{key} wants an integer, got '{v}'")),
+        }
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> Result<f64> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow!("--{key} wants a number, got '{v}'")),
+        }
+    }
+
+    pub fn bool(&self, key: &str) -> bool {
+        self.flags.get(key).map(|v| v != "false").unwrap_or(false)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        let v: Vec<String> = s.split_whitespace().map(String::from)
+            .collect();
+        Args::parse(&v).unwrap()
+    }
+
+    #[test]
+    fn parses_command_flags_positionals() {
+        let a = parse("eval --model vit --p 2 synth10 --verbose");
+        assert_eq!(a.command, "eval");
+        assert_eq!(a.req("model").unwrap(), "vit");
+        assert_eq!(a.usize_or("p", 1).unwrap(), 2);
+        assert_eq!(a.positional, vec!["synth10"]);
+        assert!(a.bool("verbose"));
+        assert!(!a.bool("quiet"));
+    }
+
+    #[test]
+    fn equals_form_and_defaults() {
+        let a = parse("latency --bandwidth=200.5 --mode=prism");
+        assert_eq!(a.f64_or("bandwidth", 0.0).unwrap(), 200.5);
+        assert_eq!(a.str_or("mode", "x"), "prism");
+        assert_eq!(a.str_or("nope", "dflt"), "dflt");
+        assert!(a.req("missing").is_err());
+        assert!(a.usize_or("bandwidth", 1).is_err());
+    }
+
+    #[test]
+    fn empty_args() {
+        let a = Args::parse(&[]).unwrap();
+        assert_eq!(a.command, "");
+    }
+}

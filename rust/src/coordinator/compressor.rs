@@ -1,0 +1,152 @@
+//! Context compressors: Segment Means (the paper) and ablation baselines.
+//!
+//! The paper compares PRISM only against Voltage (no compression). To
+//! place Segment Means itself, this module implements alternative
+//! fixed-rate compressors with the *same* wire footprint (L rows of D per
+//! partition) that drop into the same AOT executables — only the context
+//! tensor and the repetition semantics change:
+//!
+//!   * `SegmentMeans` — Algorithm 2 (the paper's choice);
+//!   * `CenterToken`  — transmit each segment's middle row verbatim
+//!                      (subsampling; counts still apply);
+//!   * `FirstToken`   — each segment's first row (strided subsampling);
+//!   * `GlobalMean`   — L copies of the partition mean (rate-matched
+//!                      degenerate baseline; lower bound).
+//!
+//! Because the block executables compute Segment Means of their outputs
+//! internally (the Layer-1 kernel), non-default compressors are applied
+//! by the coordinator on the returned partition outputs instead — same
+//! bytes on the wire, measured in the same way.
+
+use anyhow::Result;
+
+use super::plan::segment_counts;
+use super::segmeans::segment_means;
+use crate::runtime::Tensor;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Compressor {
+    SegmentMeans,
+    CenterToken,
+    FirstToken,
+    GlobalMean,
+}
+
+impl Compressor {
+    pub fn parse(s: &str) -> Result<Compressor> {
+        Ok(match s {
+            "segment-means" | "means" => Compressor::SegmentMeans,
+            "center" | "center-token" => Compressor::CenterToken,
+            "first" | "first-token" => Compressor::FirstToken,
+            "global-mean" => Compressor::GlobalMean,
+            other => anyhow::bail!("unknown compressor '{other}'"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Compressor::SegmentMeans => "segment-means",
+            Compressor::CenterToken => "center-token",
+            Compressor::FirstToken => "first-token",
+            Compressor::GlobalMean => "global-mean",
+        }
+    }
+
+    /// Compress (B, N_p, D) -> (B, L, D).
+    pub fn compress(&self, x: &Tensor, l: usize) -> Result<Tensor> {
+        match self {
+            Compressor::SegmentMeans => segment_means(x, l),
+            Compressor::CenterToken => pick_rows(x, l, RowPick::Center),
+            Compressor::FirstToken => pick_rows(x, l, RowPick::First),
+            Compressor::GlobalMean => {
+                let m = segment_means(x, 1)?; // (B, 1, D)
+                let (b, _, d) = (x.shape[0], x.shape[1], x.shape[2]);
+                let src = m.f32s()?;
+                let mut out = Vec::with_capacity(b * l * d);
+                for bi in 0..b {
+                    for _ in 0..l {
+                        out.extend_from_slice(&src[bi * d..(bi + 1) * d]);
+                    }
+                }
+                Tensor::from_f32(vec![b, l, d], out)
+            }
+        }
+    }
+}
+
+enum RowPick {
+    Center,
+    First,
+}
+
+fn pick_rows(x: &Tensor, l: usize, pick: RowPick) -> Result<Tensor> {
+    let (b, n_p, d) = (x.shape[0], x.shape[1], x.shape[2]);
+    let counts = segment_counts(n_p, l)?;
+    let src = x.f32s()?;
+    let mut out = Vec::with_capacity(b * l * d);
+    for bi in 0..b {
+        let base = bi * n_p * d;
+        let mut row = 0usize;
+        for &c in &counts {
+            let r = match pick {
+                RowPick::Center => row + c / 2,
+                RowPick::First => row,
+            };
+            out.extend_from_slice(&src[base + r * d..base + (r + 1) * d]);
+            row += c;
+        }
+    }
+    Tensor::from_f32(vec![b, l, d], out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t(rows: &[f32]) -> Tensor {
+        Tensor::from_f32(vec![1, rows.len(), 1], rows.to_vec()).unwrap()
+    }
+
+    #[test]
+    fn center_and_first_pick_expected_rows() {
+        // N_p=5, L=2 -> segments [0,1], [2,3,4]
+        let x = t(&[10., 20., 30., 40., 50.]);
+        let c = Compressor::CenterToken.compress(&x, 2).unwrap();
+        assert_eq!(c.f32s().unwrap(), &[20., 40.]); // centers 1, 3
+        let f = Compressor::FirstToken.compress(&x, 2).unwrap();
+        assert_eq!(f.f32s().unwrap(), &[10., 30.]);
+    }
+
+    #[test]
+    fn global_mean_repeats_partition_mean() {
+        let x = t(&[1., 2., 3., 6.]);
+        let g = Compressor::GlobalMean.compress(&x, 3).unwrap();
+        assert_eq!(g.f32s().unwrap(), &[3., 3., 3.]);
+    }
+
+    #[test]
+    fn segment_means_is_default_algorithm2() {
+        let x = t(&[2., 4., 6., 8.]);
+        let z = Compressor::SegmentMeans.compress(&x, 2).unwrap();
+        assert_eq!(z.f32s().unwrap(), &[3., 7.]);
+    }
+
+    #[test]
+    fn parse_names() {
+        for n in ["segment-means", "center-token", "first-token",
+                  "global-mean"] {
+            assert_eq!(Compressor::parse(n).unwrap().name(), n);
+        }
+        assert!(Compressor::parse("zzz").is_err());
+    }
+
+    #[test]
+    fn all_compressors_same_shape() {
+        let x = Tensor::from_f32(vec![2, 7, 3], vec![0.5; 42]).unwrap();
+        for c in [Compressor::SegmentMeans, Compressor::CenterToken,
+                  Compressor::FirstToken, Compressor::GlobalMean] {
+            let z = c.compress(&x, 3).unwrap();
+            assert_eq!(z.shape, vec![2, 3, 3], "{}", c.name());
+        }
+    }
+}

@@ -1,0 +1,359 @@
+//! Partition / exchange planning (rust mirror of `python/compile/plan.py`).
+//!
+//! Derives the request-independent geometry of one (N, P, L) configuration:
+//! Algorithm 1 partition spans, Algorithm 2 segment counts, the repetition
+//! vector `g` (Eq. 11/12), and the additive attention bias that folds the
+//! scaling-aware softmax (`ln g`, Eq. 13–15) and the partition-aware causal
+//! mask (Eq. 17). AOT fixtures keep this in lock-step with the python side.
+
+use anyhow::{bail, Result};
+
+use crate::runtime::Tensor;
+
+/// exp(NEG_INF - max) == 0.0 in f32 without NaN hazards.
+pub const NEG_INF: f32 = -1e30;
+
+/// Algorithm 1: split N tokens into P contiguous partitions; every
+/// partition gets floor(N/P), the last also takes the remainder.
+pub fn partition_sizes(n: usize, p: usize) -> Result<Vec<usize>> {
+    if p == 0 || n < p {
+        bail!("invalid partitioning N={n} P={p}");
+    }
+    let s = n / p;
+    let r = n % p;
+    let mut sizes = vec![s; p];
+    sizes[p - 1] += r;
+    Ok(sizes)
+}
+
+/// Algorithm 2: per-segment token counts for one partition.
+pub fn segment_counts(n_p: usize, l: usize) -> Result<Vec<usize>> {
+    if l == 0 || n_p < l {
+        bail!("invalid segment plan N_p={n_p} L={l}");
+    }
+    let s = n_p / l;
+    let r = n_p % l;
+    let mut counts = vec![s; l];
+    counts[l - 1] += r;
+    Ok(counts)
+}
+
+/// Heterogeneity extension (paper future work): split N proportionally
+/// to device speeds (largest-remainder rounding; every device gets >= 1
+/// token). Degenerates to Algorithm 1 when speeds are equal only in the
+/// balanced-N case; tests pin the invariants instead.
+pub fn weighted_partition_sizes(n: usize, speeds: &[f64])
+                                -> Result<Vec<usize>> {
+    let p = speeds.len();
+    if p == 0 || n < p || speeds.iter().any(|&s| s <= 0.0) {
+        bail!("invalid weighted partitioning N={n} speeds={speeds:?}");
+    }
+    let total: f64 = speeds.iter().sum();
+    let ideal: Vec<f64> =
+        speeds.iter().map(|s| n as f64 * s / total).collect();
+    let mut sizes: Vec<usize> =
+        ideal.iter().map(|x| (x.floor() as usize).max(1)).collect();
+    let mut assigned: usize = sizes.iter().sum();
+    // largest remainder first
+    let mut order: Vec<usize> = (0..p).collect();
+    order.sort_by(|&a, &b| {
+        (ideal[b] - ideal[b].floor())
+            .total_cmp(&(ideal[a] - ideal[a].floor()))
+    });
+    let mut k = 0;
+    while assigned < n {
+        sizes[order[k % p]] += 1;
+        assigned += 1;
+        k += 1;
+    }
+    while assigned > n {
+        // rare: the max(1) floor overshot; shave the largest
+        let i = (0..p).max_by_key(|&i| sizes[i]).unwrap();
+        if sizes[i] > 1 {
+            sizes[i] -= 1;
+            assigned -= 1;
+        }
+    }
+    Ok(sizes)
+}
+
+/// Eq. 16: L = floor(N / (CR * P)), clamped to >= 1.
+pub fn landmarks_for_cr(n: usize, p: usize, cr: f64) -> usize {
+    ((n as f64 / (cr * p as f64)) as usize).max(1)
+}
+
+/// Effective compression rate achieved by L landmarks.
+pub fn effective_cr(n: usize, p: usize, l: usize) -> f64 {
+    n as f64 / (l * p) as f64
+}
+
+/// One device's view of an (N, P, L) configuration.
+///
+/// `l == 0` encodes the Voltage baseline (full partitions as context);
+/// `sizes.len() == 1` the single-device degenerate plan.
+#[derive(Debug, Clone)]
+pub struct PartitionPlan {
+    pub p: usize,
+    pub n: usize,
+    pub sizes: Vec<usize>,
+    pub l: usize,
+    pub causal: bool,
+}
+
+impl PartitionPlan {
+    pub fn new(p: usize, n: usize, sizes: Vec<usize>, l: usize,
+               causal: bool) -> Self {
+        PartitionPlan { p, n, sizes, l, causal }
+    }
+
+    pub fn n_p(&self) -> usize {
+        self.sizes[self.p]
+    }
+
+    pub fn start(&self) -> usize {
+        self.sizes[..self.p].iter().sum()
+    }
+
+    /// Peer partition indices in global order (the Z_cat layout).
+    pub fn peers(&self) -> Vec<usize> {
+        (0..self.sizes.len()).filter(|&j| j != self.p).collect()
+    }
+
+    /// Rows of context concatenated after the local partition.
+    pub fn ctx_len(&self) -> usize {
+        if self.l == 0 {
+            self.n - self.n_p()
+        } else {
+            self.l * (self.sizes.len() - 1)
+        }
+    }
+
+    pub fn n_hat(&self) -> usize {
+        self.n_p() + self.ctx_len()
+    }
+
+    /// Repetition vector over K̂/V̂ columns (Eq. 11): local tokens count 1,
+    /// each peer segment mean counts its segment length.
+    pub fn g(&self) -> Result<Vec<f32>> {
+        let mut g = vec![1.0f32; self.n_p()];
+        for j in self.peers() {
+            if self.l == 0 {
+                g.extend(std::iter::repeat(1.0).take(self.sizes[j]));
+            } else {
+                g.extend(segment_counts(self.sizes[j], self.l)?
+                    .into_iter()
+                    .map(|c| c as f32));
+            }
+        }
+        Ok(g)
+    }
+
+    /// Global position of the last token covered by each K/V column.
+    pub fn col_positions(&self) -> Result<Vec<usize>> {
+        let start = self.start();
+        let mut cols: Vec<usize> =
+            (start..start + self.n_p()).collect();
+        for j in self.peers() {
+            let base: usize = self.sizes[..j].iter().sum();
+            if self.l == 0 {
+                cols.extend(base..base + self.sizes[j]);
+            } else {
+                let mut acc = 0;
+                for c in segment_counts(self.sizes[j], self.l)? {
+                    acc += c;
+                    cols.push(base + acc - 1);
+                }
+            }
+        }
+        Ok(cols)
+    }
+
+    /// Additive attention bias, shape (N_p, N_hat): ln g + causal mask.
+    pub fn bias(&self) -> Result<Tensor> {
+        let n_p = self.n_p();
+        let n_hat = self.n_hat();
+        let g = self.g()?;
+        let lng: Vec<f32> = g.iter().map(|x| x.ln()).collect();
+        let mut out = Vec::with_capacity(n_p * n_hat);
+        if self.causal {
+            let cols = self.col_positions()?;
+            let start = self.start();
+            for i in 0..n_p {
+                let t = start + i;
+                for j in 0..n_hat {
+                    out.push(if cols[j] <= t { lng[j] } else { NEG_INF });
+                }
+            }
+        } else {
+            for _ in 0..n_p {
+                out.extend_from_slice(&lng);
+            }
+        }
+        Tensor::from_f32(vec![n_p, n_hat], out)
+    }
+}
+
+/// One plan per device for an (N, P, L) configuration.
+pub fn plans(n: usize, p: usize, l: usize, causal: bool)
+             -> Result<Vec<PartitionPlan>> {
+    let sizes = partition_sizes(n, p)?;
+    Ok((0..p)
+        .map(|i| PartitionPlan::new(i, n, sizes.clone(), l, causal))
+        .collect())
+}
+
+/// P=1 degenerate plan.
+pub fn single_plan(n: usize, causal: bool) -> PartitionPlan {
+    PartitionPlan::new(0, n, vec![n], 0, causal)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::{property, Rng};
+
+    #[test]
+    fn partition_matches_algorithm1() {
+        assert_eq!(partition_sizes(65, 2).unwrap(), vec![32, 33]);
+        assert_eq!(partition_sizes(65, 3).unwrap(), vec![21, 21, 23]);
+        assert_eq!(partition_sizes(128, 2).unwrap(), vec![64, 64]);
+        assert!(partition_sizes(2, 3).is_err());
+        assert!(partition_sizes(5, 0).is_err());
+    }
+
+    #[test]
+    fn segment_counts_match_algorithm2() {
+        assert_eq!(segment_counts(33, 3).unwrap(), vec![11, 11, 11]);
+        assert_eq!(segment_counts(32, 3).unwrap(), vec![10, 10, 12]);
+        assert!(segment_counts(2, 3).is_err());
+    }
+
+    #[test]
+    fn weighted_partitioning_invariants() {
+        property("weighted-partition", 150, |rng: &mut Rng| {
+            let p = rng.range(2, 5);
+            let n = rng.range(p * 2, 300);
+            let speeds: Vec<f64> =
+                (0..p).map(|_| 0.25 + rng.f64() * 4.0).collect();
+            let sizes = weighted_partition_sizes(n, &speeds).unwrap();
+            assert_eq!(sizes.iter().sum::<usize>(), n);
+            assert!(sizes.iter().all(|&s| s >= 1));
+        });
+        // 2x faster device gets ~2x the tokens
+        let sizes = weighted_partition_sizes(90, &[2.0, 1.0]).unwrap();
+        assert_eq!(sizes, vec![60, 30]);
+        assert!(weighted_partition_sizes(1, &[1.0, 1.0]).is_err());
+        assert!(weighted_partition_sizes(10, &[1.0, -1.0]).is_err());
+    }
+
+    #[test]
+    fn eq16_examples() {
+        assert_eq!(landmarks_for_cr(197, 2, 9.9), 9);
+        assert_eq!(landmarks_for_cr(128, 3, 10.0), 4);
+        assert_eq!(landmarks_for_cr(16, 4, 100.0), 1);
+        assert!((effective_cr(65, 2, 3) - 10.8333).abs() < 1e-3);
+    }
+
+    #[test]
+    fn properties_cover_and_sum() {
+        property("plan-geometry", 200, |rng: &mut Rng| {
+            let p = rng.range(2, 5);
+            let n = rng.range(p * 2, 300);
+            let l = rng.range(1, (n / p).min(8) + 1);
+            let causal = rng.below(2) == 1;
+            let pls = plans(n, p, l, causal).unwrap();
+            let total: usize = pls.iter().map(|pl| pl.n_p()).sum();
+            assert_eq!(total, n);
+            for pl in &pls {
+                let g = pl.g().unwrap();
+                assert_eq!(g.len(), pl.n_hat());
+                // duplication counts reconstruct the full sequence length
+                let sum: f32 = g.iter().sum();
+                assert_eq!(sum as usize, n);
+                assert_eq!(pl.ctx_len(), (p - 1) * l);
+                let cols = pl.col_positions().unwrap();
+                assert_eq!(cols.len(), pl.n_hat());
+                assert!(cols.iter().all(|&c| c < n));
+            }
+        });
+    }
+
+    #[test]
+    fn causal_bias_never_sees_future() {
+        property("causal-no-future", 100, |rng: &mut Rng| {
+            let p = rng.range(2, 4);
+            let n = rng.range(p * 4, 200);
+            let l = rng.range(1, 5).min(n / p);
+            for pl in plans(n, p, l, true).unwrap() {
+                let bias = pl.bias().unwrap();
+                let b = bias.f32s().unwrap();
+                let cols = pl.col_positions().unwrap();
+                for i in 0..pl.n_p() {
+                    let t = pl.start() + i;
+                    for j in 0..pl.n_hat() {
+                        let visible = b[i * pl.n_hat() + j] > NEG_INF / 2.0;
+                        assert_eq!(visible, cols[j] <= t,
+                                   "row {i} col {j} t {t}");
+                    }
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn encoder_bias_is_log_g() {
+        let pl = &plans(65, 2, 3, false).unwrap()[0];
+        let bias = pl.bias().unwrap();
+        let b = bias.f32s().unwrap();
+        let g = pl.g().unwrap();
+        for i in 0..pl.n_p() {
+            for j in 0..pl.n_hat() {
+                assert!((b[i * pl.n_hat() + j] - g[j].ln()).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn eq17_block_structure() {
+        // middle partition of 3: local lower-triangular, earlier partition's
+        // L means fully visible, later partition's fully masked.
+        let pl = &plans(120, 3, 4, true).unwrap()[1];
+        let bias = pl.bias().unwrap();
+        let b = bias.f32s().unwrap();
+        let (n_p, n_hat) = (pl.n_p(), pl.n_hat());
+        for i in 0..n_p {
+            for j in 0..n_p {
+                assert_eq!(b[i * n_hat + j] > NEG_INF / 2.0, j <= i);
+            }
+            for j in n_p..n_p + 4 {
+                assert!(b[i * n_hat + j] > NEG_INF / 2.0); // earlier peer
+            }
+            for j in n_p + 4..n_hat {
+                assert!(b[i * n_hat + j] <= NEG_INF / 2.0); // later peer
+            }
+        }
+    }
+
+    #[test]
+    fn voltage_plan_geometry() {
+        for pl in plans(100, 3, 0, false).unwrap() {
+            assert_eq!(pl.ctx_len(), 100 - pl.n_p());
+            assert_eq!(pl.n_hat(), 100);
+            assert!(pl.g().unwrap().iter().all(|&x| x == 1.0));
+        }
+    }
+
+    #[test]
+    fn single_plan_bias() {
+        let pl = single_plan(8, true);
+        let bias = pl.bias().unwrap();
+        let b = bias.f32s().unwrap();
+        for i in 0..8 {
+            for j in 0..8 {
+                assert_eq!(b[i * 8 + j] > NEG_INF / 2.0, j <= i);
+            }
+        }
+        let enc = single_plan(8, false).bias().unwrap();
+        assert!(enc.f32s().unwrap().iter().all(|&x| x == 0.0));
+    }
+}

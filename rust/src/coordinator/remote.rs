@@ -1,0 +1,119 @@
+//! Multi-process distributed forward: the master drives P remote workers
+//! over TCP (`prism worker --listen ...`), relaying the Segment-Means
+//! exchange. Physically meshed edge devices would exchange peer-to-peer;
+//! the relay preserves every payload size, so the byte accounting (what
+//! the paper's comm columns measure) is identical.
+
+use anyhow::{Context, Result};
+
+use super::plan::plans;
+use super::runner::{bias_for, Mode};
+use super::segmeans::segment_means;
+use crate::net::tcp::{ExecRequest, RemoteWorker};
+use crate::runtime::{Manifest, Tensor};
+
+/// Coordinator over TCP workers. Embed/head run wherever the caller's
+/// local engine lives; this drives the per-layer block protocol.
+pub struct RemoteCoordinator {
+    pub workers: Vec<RemoteWorker>,
+    pub manifest: std::sync::Arc<Manifest>,
+    pub flavor: String,
+}
+
+impl RemoteCoordinator {
+    pub fn connect(manifest: std::sync::Arc<Manifest>, addrs: &[String],
+                   flavor: &str) -> Result<RemoteCoordinator> {
+        let workers = addrs
+            .iter()
+            .map(|a| RemoteWorker::connect(a))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(RemoteCoordinator {
+            workers,
+            manifest,
+            flavor: flavor.to_string(),
+        })
+    }
+
+    /// Distributed PRISM/Voltage blocks over the remote workers.
+    /// `x` is the embedded (B, N, D) batch; returns the re-assembled
+    /// output.
+    pub fn blocks(&mut self, model: &str, weights_tag: &str, x: &Tensor,
+                  mode: Mode) -> Result<Tensor> {
+        let cfg = self.manifest.model(model)?.clone();
+        let p = mode.p();
+        anyhow::ensure!(self.workers.len() >= p,
+                        "need {p} workers, have {}", self.workers.len());
+        let l = mode.l();
+        let batch = x.shape[0];
+        let pls = plans(cfg.n, p, l, cfg.causal)?;
+        let duplicated =
+            !matches!(mode, Mode::Prism { duplicated: false, .. });
+        let biases: Vec<Tensor> = pls
+            .iter()
+            .map(|pl| bias_for(pl, duplicated))
+            .collect::<Result<_>>()?;
+        let execs: Vec<String> = (0..p)
+            .map(|i| {
+                self.manifest.block_name(model, mode.name(), p, l, i,
+                                         batch, &self.flavor)
+            })
+            .collect();
+        let mut parts: Vec<Tensor> = pls
+            .iter()
+            .map(|pl| x.slice1(pl.start(), pl.start() + pl.n_p()))
+            .collect::<Result<_>>()?;
+        // shares[j]: what device j currently contributes to peers' K/V
+        let mut shares: Vec<Tensor> = if l > 0 {
+            parts
+                .iter()
+                .map(|t| segment_means(t, l))
+                .collect::<Result<_>>()?
+        } else {
+            parts.clone()
+        };
+        for layer in 0..cfg.layers {
+            let mut outs = Vec::with_capacity(p);
+            let mut new_shares = Vec::with_capacity(p);
+            for (i, pl) in pls.iter().enumerate() {
+                let peer_shares: Vec<&Tensor> =
+                    pl.peers().into_iter().map(|j| &shares[j]).collect();
+                let ctx = Tensor::concat1(&peer_shares)?;
+                let mut out = self.workers[i]
+                    .call(&ExecRequest {
+                        exec: execs[i].clone(),
+                        weights: weights_tag.to_string(),
+                        layer: layer as u32,
+                        args: vec![parts[i].clone(), ctx,
+                                   biases[i].clone()],
+                    })
+                    .with_context(|| format!("worker {i} layer {layer}"))?;
+                let x_out = out.remove(0);
+                let share = if l > 0 {
+                    out.remove(0)
+                } else {
+                    x_out.clone()
+                };
+                outs.push(x_out);
+                new_shares.push(share);
+            }
+            parts = outs;
+            shares = new_shares;
+        }
+        let refs: Vec<&Tensor> = parts.iter().collect();
+        Tensor::concat1(&refs)
+    }
+
+    pub fn bytes(&self) -> (usize, usize) {
+        self.workers
+            .iter()
+            .fold((0, 0), |(s, r), w| (s + w.sent_bytes,
+                                       r + w.recv_bytes))
+    }
+
+    pub fn shutdown(&mut self) -> Result<()> {
+        for w in &mut self.workers {
+            w.shutdown()?;
+        }
+        Ok(())
+    }
+}

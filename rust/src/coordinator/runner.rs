@@ -1,0 +1,451 @@
+//! Deterministic distributed-forward executor.
+//!
+//! Runs the full master/worker protocol of Fig. 1 on one thread (this
+//! testbed has a single core — see DESIGN.md), invoking each device's AOT
+//! block executable in turn and recording a `RunTrace` of per-device
+//! compute times and exchange payloads. The trace replays against any
+//! `LinkModel` via the virtual-clock `SimClock` to produce the Fig. 5
+//! latency sweep; accuracy evaluation uses the outputs directly.
+//!
+//! The *threaded* serving runtime (`coordinator::server`) shares the same
+//! plans/executables but runs real worker threads and channels.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use super::compressor::Compressor;
+use super::plan::{plans, single_plan, PartitionPlan};
+use crate::util::quant::{requantize, WireFmt};
+use crate::net::model::LinkModel;
+use crate::net::sim::SimClock;
+use crate::runtime::{Engine, Manifest, ModelCfg, Tensor, WeightSet};
+
+/// Which inference strategy to run.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Mode {
+    Single,
+    Voltage { p: usize },
+    /// `duplicated = false` drops the repetition counts (Table II "No").
+    Prism { p: usize, l: usize, duplicated: bool },
+}
+
+impl Mode {
+    pub fn p(&self) -> usize {
+        match self {
+            Mode::Single => 1,
+            Mode::Voltage { p } => *p,
+            Mode::Prism { p, .. } => *p,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Mode::Single => "single",
+            Mode::Voltage { .. } => "voltage",
+            Mode::Prism { .. } => "prism",
+        }
+    }
+
+    pub fn l(&self) -> usize {
+        match self {
+            Mode::Prism { l, .. } => *l,
+            _ => 0,
+        }
+    }
+}
+
+/// Timing/byte record of one forward pass, replayable against a LinkModel.
+#[derive(Debug, Clone, Default)]
+pub struct RunTrace {
+    pub embed_secs: f64,
+    pub head_secs: f64,
+    /// [layer][device] block compute seconds.
+    pub compute_secs: Vec<Vec<f64>>,
+    /// [layer][device] exchange payload bytes (per peer).
+    pub exchange_bytes: Vec<Vec<usize>>,
+    /// master -> device initial payload (partition + peer context).
+    pub scatter_bytes: Vec<usize>,
+    /// device -> master final partition output.
+    pub gather_bytes: Vec<usize>,
+}
+
+impl RunTrace {
+    /// End-to-end latency under a network model. Master runs embed/head on
+    /// device 0's clock (the terminal device also participates as a
+    /// worker, the common edge deployment); scatter/gather cross the
+    /// network for devices > 0 only.
+    pub fn latency_secs(&self, link: LinkModel) -> f64 {
+        let p = self.scatter_bytes.len().max(1);
+        let mut clock = SimClock::new(p, link);
+        clock.compute(0, self.embed_secs);
+        for d in 1..p {
+            clock.send(0, d, self.scatter_bytes[d]);
+        }
+        for (layer, secs) in self.compute_secs.iter().enumerate() {
+            for (d, &s) in secs.iter().enumerate() {
+                clock.compute(d, s);
+            }
+            if p > 1 {
+                clock.exchange_all(&self.exchange_bytes[layer]);
+            }
+        }
+        for d in 1..p {
+            clock.send(d, 0, self.gather_bytes[d]);
+        }
+        let t_head_start = clock.makespan();
+        drop(clock);
+        t_head_start + self.head_secs
+    }
+
+    /// Total bytes one device sends across all block exchanges (the
+    /// measured PDPLC × layers × 4 bytes × D).
+    pub fn device_exchange_bytes(&self, d: usize) -> usize {
+        let peers = self.scatter_bytes.len().saturating_sub(1);
+        self.exchange_bytes.iter().map(|l| l[d] * peers).sum()
+    }
+
+    pub fn total_compute_secs(&self) -> f64 {
+        self.embed_secs
+            + self.head_secs
+            + self
+                .compute_secs
+                .iter()
+                .map(|l| l.iter().sum::<f64>())
+                .sum::<f64>()
+    }
+}
+
+/// One model forward (embed -> blocks -> head) over AOT executables.
+pub struct Runner {
+    pub engine: Engine,
+    pub manifest: Arc<Manifest>,
+    pub flavor: String,
+    /// Context compressor (paper default: Segment Means; others are
+    /// rate-matched ablation baselines — see `compressor.rs`).
+    pub compressor: Compressor,
+    /// Wire precision for the exchanged landmarks (f32 | f16 | i8).
+    pub wire: WireFmt,
+}
+
+impl Runner {
+    pub fn new(manifest: Arc<Manifest>, flavor: &str) -> Result<Runner> {
+        let engine = Engine::new(manifest.clone())?;
+        Ok(Runner {
+            engine,
+            manifest,
+            flavor: flavor.to_string(),
+            compressor: Compressor::SegmentMeans,
+            wire: WireFmt::F32,
+        })
+    }
+
+    pub fn cfg(&self, model: &str) -> Result<ModelCfg> {
+        Ok(self.manifest.model(model)?.clone())
+    }
+
+    fn timed(
+        engine: &mut Engine,
+        name: &str,
+        ws: &WeightSet,
+        layer: usize,
+        args: &[&Tensor],
+    ) -> Result<(Vec<Tensor>, f64)> {
+        // compile outside the timed window: traces model steady-state
+        // compute, not one-time JIT cost (tracked in EngineStats).
+        engine.ensure_compiled(name)?;
+        let t0 = Instant::now();
+        let out = engine
+            .run(name, ws, layer, args)
+            .with_context(|| format!("running {name}"))?;
+        Ok((out, t0.elapsed().as_secs_f64()))
+    }
+
+    /// Embed raw input (image batch f32 / token ids i32) to (B, N, D).
+    pub fn embed(&mut self, model: &str, ws: &WeightSet, raw: &Tensor)
+                 -> Result<(Tensor, f64)> {
+        let batch = raw.shape[0];
+        let name = self.manifest.embed_name(model, batch);
+        let (mut out, secs) =
+            Self::timed(&mut self.engine, &name, ws, 0, &[raw])?;
+        Ok((out.remove(0), secs))
+    }
+
+    /// Apply a task head to the re-assembled sequence.
+    pub fn head(&mut self, model: &str, ws: &WeightSet, task: &str,
+                x: &Tensor) -> Result<(Tensor, f64)> {
+        let batch = x.shape[0];
+        let name = self.manifest.head_name(model, task, batch);
+        let (mut out, secs) =
+            Self::timed(&mut self.engine, &name, ws, 0, &[x])?;
+        Ok((out.remove(0), secs))
+    }
+
+    /// Run the block stack in the given mode. Returns the re-assembled
+    /// (B, N, D) output and the run trace.
+    pub fn blocks(&mut self, model: &str, ws: &WeightSet, x: &Tensor,
+                  mode: Mode) -> Result<(Tensor, RunTrace)> {
+        match mode {
+            Mode::Single => self.blocks_single(model, ws, x),
+            Mode::Voltage { p } => self.blocks_voltage(model, ws, x, p),
+            Mode::Prism { p, l, duplicated } => {
+                self.blocks_prism(model, ws, x, p, l, duplicated)
+            }
+        }
+    }
+
+    fn block_exec(&self, model: &str, mode: &str, p: usize, l: usize,
+                  part: usize, batch: usize) -> Result<String> {
+        let name = self
+            .manifest
+            .block_name(model, mode, p, l, part, batch, &self.flavor);
+        if !self.manifest.executables.contains_key(&name) {
+            bail!("no AOT artifact '{name}' (flavor '{}'); re-run `make \
+                   artifacts` or pick --kernel xla", self.flavor);
+        }
+        Ok(name)
+    }
+
+    fn blocks_single(&mut self, model: &str, ws: &WeightSet, x: &Tensor)
+                     -> Result<(Tensor, RunTrace)> {
+        let cfg = self.cfg(model)?;
+        let batch = x.shape[0];
+        let name = self.block_exec(model, "single", 1, 0, 0, batch)?;
+        let bias = single_plan(cfg.n, cfg.causal).bias()?;
+        let mut trace = RunTrace {
+            scatter_bytes: vec![0],
+            gather_bytes: vec![0],
+            ..Default::default()
+        };
+        let mut x = x.clone();
+        for layer in 0..cfg.layers {
+            let (mut out, secs) = Self::timed(&mut self.engine, &name, ws,
+                                              layer, &[&x, &bias])?;
+            x = out.remove(0);
+            trace.compute_secs.push(vec![secs]);
+            trace.exchange_bytes.push(vec![0]);
+        }
+        Ok((x, trace))
+    }
+
+    fn blocks_voltage(&mut self, model: &str, ws: &WeightSet, x: &Tensor,
+                      p: usize) -> Result<(Tensor, RunTrace)> {
+        let cfg = self.cfg(model)?;
+        let batch = x.shape[0];
+        let pls = plans(cfg.n, p, 0, cfg.causal)?;
+        let biases: Vec<Tensor> =
+            pls.iter().map(|pl| pl.bias()).collect::<Result<_>>()?;
+        let names: Vec<String> = (0..p)
+            .map(|i| self.block_exec(model, "voltage", p, 0, i, batch))
+            .collect::<Result<_>>()?;
+        let mut parts: Vec<Tensor> = pls
+            .iter()
+            .map(|pl| x.slice1(pl.start(), pl.start() + pl.n_p()))
+            .collect::<Result<_>>()?;
+        let mut trace = RunTrace::default();
+        // master scatters each partition (it will gather full outputs).
+        trace.scatter_bytes = parts.iter().map(|t| t.byte_len()).collect();
+        trace.gather_bytes = parts.iter().map(|t| t.byte_len()).collect();
+        for layer in 0..cfg.layers {
+            let mut outs = Vec::with_capacity(p);
+            let mut secs_l = Vec::with_capacity(p);
+            for (i, pl) in pls.iter().enumerate() {
+                let peer_parts: Vec<&Tensor> =
+                    pl.peers().into_iter().map(|j| &parts[j]).collect();
+                let ctx = Tensor::concat1(&peer_parts)?;
+                let (mut out, secs) = Self::timed(
+                    &mut self.engine, &names[i], ws, layer,
+                    &[&parts[i], &ctx, &biases[i]],
+                )?;
+                outs.push(out.remove(0));
+                secs_l.push(secs);
+            }
+            // AllGather: each device ships its full partition output.
+            trace
+                .exchange_bytes
+                .push(outs.iter().map(|t| t.byte_len()).collect());
+            trace.compute_secs.push(secs_l);
+            parts = outs;
+        }
+        let refs: Vec<&Tensor> = parts.iter().collect();
+        Ok((Tensor::concat1(&refs)?, trace))
+    }
+
+    fn blocks_prism(&mut self, model: &str, ws: &WeightSet, x: &Tensor,
+                    p: usize, l: usize, duplicated: bool)
+                    -> Result<(Tensor, RunTrace)> {
+        let cfg = self.cfg(model)?;
+        let batch = x.shape[0];
+        let pls = plans(cfg.n, p, l, cfg.causal)?;
+        let biases: Vec<Tensor> = pls
+            .iter()
+            .map(|pl| bias_for(pl, duplicated))
+            .collect::<Result<_>>()?;
+        let names: Vec<String> = (0..p)
+            .map(|i| self.block_exec(model, "prism", p, l, i, batch))
+            .collect::<Result<_>>()?;
+        let mut parts: Vec<Tensor> = pls
+            .iter()
+            .map(|pl| x.slice1(pl.start(), pl.start() + pl.n_p()))
+            .collect::<Result<_>>()?;
+        // Fig. 1: master computes the first landmark exchange.
+        let mut zs: Vec<Tensor> = parts
+            .iter()
+            .map(|t| {
+                requantize(&self.compressor.compress(t, l)?, self.wire)
+            })
+            .collect::<Result<_>>()?;
+        let mut trace = RunTrace::default();
+        trace.scatter_bytes = pls
+            .iter()
+            .enumerate()
+            .map(|(i, pl)| {
+                parts[i].byte_len()
+                    + pl.peers().iter().map(|&j| zs[j].byte_len())
+                        .sum::<usize>()
+            })
+            .collect();
+        trace.gather_bytes = parts.iter().map(|t| t.byte_len()).collect();
+        for layer in 0..cfg.layers {
+            let mut outs = Vec::with_capacity(p);
+            let mut zouts = Vec::with_capacity(p);
+            let mut secs_l = Vec::with_capacity(p);
+            for (i, pl) in pls.iter().enumerate() {
+                let peer_zs: Vec<&Tensor> =
+                    pl.peers().into_iter().map(|j| &zs[j]).collect();
+                let ctx = Tensor::concat1(&peer_zs)?;
+                let (mut out, secs) = Self::timed(
+                    &mut self.engine, &names[i], ws, layer,
+                    &[&parts[i], &ctx, &biases[i]],
+                )?;
+                let x_out = out.remove(0);
+                // the default compressor's landmarks come from the
+                // Layer-1 kernel inside the executable; ablation
+                // compressors recompute from the block output.
+                let z = if self.compressor == Compressor::SegmentMeans {
+                    out.remove(0)
+                } else {
+                    self.compressor.compress(&x_out, l)?
+                };
+                zouts.push(requantize(&z, self.wire)?);
+                outs.push(x_out);
+                secs_l.push(secs);
+            }
+            // the landmark exchange: L·D values per device per peer, at
+            // wire precision.
+            trace.exchange_bytes.push(
+                zouts
+                    .iter()
+                    .map(|t| {
+                        self.wire.wire_bytes(
+                            t.elements(),
+                            t.shape[..t.shape.len() - 1].iter()
+                                .product())
+                    })
+                    .collect(),
+            );
+            trace.compute_secs.push(secs_l);
+            parts = outs;
+            zs = zouts;
+        }
+        let refs: Vec<&Tensor> = parts.iter().collect();
+        Ok((Tensor::concat1(&refs)?, trace))
+    }
+
+    /// Full pipeline: embed -> blocks -> head. Returns logits + trace.
+    pub fn forward(&mut self, model: &str, ws: &WeightSet, task: &str,
+                   raw: &Tensor, mode: Mode) -> Result<(Tensor, RunTrace)> {
+        let (x, embed_secs) = self.embed(model, ws, raw)?;
+        let (x, mut trace) = self.blocks(model, ws, &x, mode)?;
+        let (logits, head_secs) = self.head(model, ws, task, &x)?;
+        trace.embed_secs = embed_secs;
+        trace.head_secs = head_secs;
+        Ok((logits, trace))
+    }
+}
+
+/// Bias for a plan; `duplicated = false` replaces ln g with 0 (keeps the
+/// causal mask), ablating the repetition counts (Table II "No" column).
+pub fn bias_for(pl: &PartitionPlan, duplicated: bool) -> Result<Tensor> {
+    let bias = pl.bias()?;
+    if duplicated {
+        return Ok(bias);
+    }
+    let data: Vec<f32> = bias
+        .f32s()?
+        .iter()
+        .map(|&v| if v < super::plan::NEG_INF / 2.0 { v } else { 0.0 })
+        .collect();
+    Tensor::from_f32(bias.shape.clone(), data)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::plan::plans;
+
+    #[test]
+    fn trace_latency_single_is_pure_compute() {
+        let t = RunTrace {
+            embed_secs: 0.1,
+            head_secs: 0.2,
+            compute_secs: vec![vec![0.5], vec![0.5]],
+            exchange_bytes: vec![vec![0], vec![0]],
+            scatter_bytes: vec![0],
+            gather_bytes: vec![0],
+        };
+        let l = LinkModel::new(100.0, 5.0);
+        assert!((t.latency_secs(l) - 1.3).abs() < 1e-9);
+        assert!((t.total_compute_secs() - 1.3).abs() < 1e-9);
+    }
+
+    #[test]
+    fn trace_latency_depends_on_bandwidth() {
+        let t = RunTrace {
+            embed_secs: 0.0,
+            head_secs: 0.0,
+            compute_secs: vec![vec![0.1, 0.1]],
+            exchange_bytes: vec![vec![1_250_000, 1_250_000]],
+            scatter_bytes: vec![0, 1_250_000],
+            gather_bytes: vec![0, 1_250_000],
+        };
+        let slow = t.latency_secs(LinkModel::new(100.0, 0.0));
+        let fast = t.latency_secs(LinkModel::new(1000.0, 0.0));
+        assert!(slow > fast);
+        // 100 Mbps: scatter 0.1 + compute 0.1 + exchange 0.1 + gather 0.1
+        assert!((slow - 0.4).abs() < 1e-6, "{slow}");
+    }
+
+    #[test]
+    fn device_exchange_bytes_counts_peers() {
+        let t = RunTrace {
+            exchange_bytes: vec![vec![10, 20], vec![10, 20]],
+            scatter_bytes: vec![0, 0],
+            gather_bytes: vec![0, 0],
+            ..Default::default()
+        };
+        assert_eq!(t.device_exchange_bytes(0), 20);
+        assert_eq!(t.device_exchange_bytes(1), 40);
+    }
+
+    #[test]
+    fn bias_for_ablation_zeroes_ln_g_keeps_mask() {
+        let pl = &plans(24, 2, 3, true).unwrap()[1];
+        let full = bias_for(pl, true).unwrap();
+        let abl = bias_for(pl, false).unwrap();
+        let (f, a) = (full.f32s().unwrap(), abl.f32s().unwrap());
+        let mut saw_lng = false;
+        for (x, y) in f.iter().zip(a) {
+            if *x < super::super::plan::NEG_INF / 2.0 {
+                assert_eq!(x, y); // mask preserved
+            } else {
+                assert_eq!(*y, 0.0);
+                if *x != 0.0 {
+                    saw_lng = true;
+                }
+            }
+        }
+        assert!(saw_lng, "expected some ln g > 0 entries");
+    }
+}

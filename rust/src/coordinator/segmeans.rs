@@ -1,0 +1,106 @@
+//! Segment Means on the coordinator (paper Fig. 1: the *master* computes
+//! the first exchange from the embedded input; workers compute subsequent
+//! ones inside their AOT block executables via the Layer-1 kernel).
+
+use anyhow::Result;
+
+use super::plan::segment_counts;
+use crate::runtime::Tensor;
+
+/// Column-wise means of L contiguous segments: (B, N_p, D) -> (B, L, D).
+/// Matches Algorithm 2 and the jnp oracle (sequential f32 accumulation).
+pub fn segment_means(x: &Tensor, l: usize) -> Result<Tensor> {
+    let (b, n_p, d) = (x.shape[0], x.shape[1], x.shape[2]);
+    let counts = segment_counts(n_p, l)?;
+    let src = x.f32s()?;
+    let mut out = vec![0.0f32; b * l * d];
+    for bi in 0..b {
+        let base = bi * n_p * d;
+        let mut row = 0usize;
+        for (si, &c) in counts.iter().enumerate() {
+            let dst = &mut out[bi * l * d + si * d..bi * l * d + (si + 1) * d];
+            for r in 0..c {
+                let s = &src[base + (row + r) * d..base + (row + r + 1) * d];
+                for (o, v) in dst.iter_mut().zip(s) {
+                    *o += v;
+                }
+            }
+            let inv = 1.0 / c as f32;
+            for o in dst.iter_mut() {
+                *o *= inv;
+            }
+            row += c;
+        }
+    }
+    Tensor::from_f32(vec![b, l, d], out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::{property, Rng};
+
+    #[test]
+    fn identity_when_l_equals_n() {
+        let x = Tensor::from_f32(vec![1, 3, 2],
+                                 vec![1., 2., 3., 4., 5., 6.]).unwrap();
+        let z = segment_means(&x, 3).unwrap();
+        assert_eq!(z, x.clone().reshaped(vec![1, 3, 2]).unwrap());
+    }
+
+    #[test]
+    fn means_with_remainder() {
+        // N_p = 5, L = 2 -> segments of 2 and 3 rows
+        let x = Tensor::from_f32(
+            vec![1, 5, 1],
+            vec![1., 3., 6., 9., 12.],
+        )
+        .unwrap();
+        let z = segment_means(&x, 2).unwrap();
+        assert_eq!(z.f32s().unwrap(), &[2.0, 9.0]);
+    }
+
+    #[test]
+    fn batch_independent() {
+        let x = Tensor::from_f32(vec![2, 2, 1], vec![1., 3., 10., 30.])
+            .unwrap();
+        let z = segment_means(&x, 1).unwrap();
+        assert_eq!(z.f32s().unwrap(), &[2.0, 20.0]);
+    }
+
+    #[test]
+    fn constant_preserved_property() {
+        property("segmeans-constant", 50, |rng: &mut Rng| {
+            let n_p = rng.range(2, 40);
+            let l = rng.range(1, n_p + 1);
+            let d = rng.range(1, 6);
+            let c = rng.f32_in(-5.0, 5.0);
+            let x = Tensor::from_f32(vec![1, n_p, d],
+                                     vec![c; n_p * d]).unwrap();
+            let z = segment_means(&x, l).unwrap();
+            assert!(z.f32s().unwrap().iter().all(|v| (v - c).abs() < 1e-5));
+        });
+    }
+
+    #[test]
+    fn mean_of_means_weighted_matches_global_mean() {
+        property("segmeans-weighted", 50, |rng: &mut Rng| {
+            let n_p = rng.range(3, 50);
+            let l = rng.range(1, n_p + 1);
+            let data = rng.normal_vec(n_p, 1.0);
+            let x = Tensor::from_f32(vec![1, n_p, 1], data.clone()).unwrap();
+            let z = segment_means(&x, l).unwrap();
+            let counts = segment_counts(n_p, l).unwrap();
+            let weighted: f32 = z
+                .f32s()
+                .unwrap()
+                .iter()
+                .zip(&counts)
+                .map(|(m, &c)| m * c as f32)
+                .sum();
+            let total: f32 = data.iter().sum();
+            assert!((weighted - total).abs() < 1e-3,
+                    "{weighted} vs {total}");
+        });
+    }
+}

@@ -1,0 +1,137 @@
+//! Dataset loading: `meta.json` + flat `.bin` arrays (numpy `tofile`
+//! little-endian layout).
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::runtime::Tensor;
+use crate::util::json::Json;
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum DatasetKind {
+    /// Image classification: x f32 (count, H, W, 3), y i32 (count,).
+    Vision,
+    /// GLUE-proxy: x i32 (count, N), y f32 (count,).
+    Glue,
+    /// Char-LM windows: x i32 (count, N+1) — no labels (next-char target).
+    CharLm,
+    /// CBT-proxy cloze: x i32 (groups*10, N+1), spans i32 (groups*10, 2),
+    /// y i32 (groups,) — index of the true candidate.
+    Cloze,
+}
+
+#[derive(Debug)]
+pub struct Dataset {
+    pub name: String,
+    pub kind: DatasetKind,
+    pub model: String,
+    pub classes: usize,
+    pub metric: String,
+    pub x: Tensor,
+    pub y: Option<Tensor>,
+    pub spans: Option<Tensor>,
+}
+
+impl Dataset {
+    pub fn load(artifacts_root: &Path, name: &str) -> Result<Dataset> {
+        let dir = artifacts_root.join("data").join(name);
+        let meta_text = std::fs::read_to_string(dir.join("meta.json"))
+            .with_context(|| format!("dataset '{name}' missing; run `make \
+                                      artifacts`"))?;
+        let meta = Json::parse(&meta_text)?;
+        let kind = match meta.req("kind")?.as_str().unwrap_or("") {
+            "vision" => DatasetKind::Vision,
+            "glue" => DatasetKind::Glue,
+            "charlm" => DatasetKind::CharLm,
+            "cloze" => DatasetKind::Cloze,
+            other => bail!("unknown dataset kind '{other}'"),
+        };
+        let count = meta.req("count")?.as_usize().context("count")?;
+        let inner = meta.req("shape")?.usize_array()?;
+        let mut xshape = vec![count];
+        xshape.extend(inner);
+        let x = match kind {
+            DatasetKind::Vision => {
+                Tensor::read_f32_file(&dir.join("x.bin"), xshape)?
+            }
+            _ => Tensor::read_i32_file(&dir.join("x.bin"), xshape)?,
+        };
+        let y = match kind {
+            DatasetKind::Vision => Some(Tensor::read_i32_file(
+                &dir.join("y.bin"), vec![count])?),
+            DatasetKind::Glue => Some(Tensor::read_f32_file(
+                &dir.join("y.bin"), vec![count])?),
+            DatasetKind::CharLm => None,
+            DatasetKind::Cloze => {
+                let groups = count / 10;
+                Some(Tensor::read_i32_file(&dir.join("y.bin"),
+                                           vec![groups])?)
+            }
+        };
+        let spans = match kind {
+            DatasetKind::Cloze => Some(Tensor::read_i32_file(
+                &dir.join("spans.bin"), vec![count, 2])?),
+            _ => None,
+        };
+        Ok(Dataset {
+            name: name.to_string(),
+            kind,
+            model: meta.req("model")?.as_str().unwrap_or("").to_string(),
+            classes: meta.get("classes").and_then(|c| c.as_usize())
+                .unwrap_or(0),
+            metric: meta.get("metric").and_then(|m| m.as_str())
+                .unwrap_or("acc").to_string(),
+            x,
+            y,
+            spans,
+        })
+    }
+
+    pub fn count(&self) -> usize {
+        self.x.shape[0]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_vision_fixture(dir: &Path) {
+        std::fs::create_dir_all(dir.join("data/v")).unwrap();
+        std::fs::write(
+            dir.join("data/v/meta.json"),
+            r#"{"kind": "vision", "model": "vit", "classes": 3,
+                "shape": [2, 2, 3], "count": 2}"#,
+        )
+        .unwrap();
+        Tensor::from_f32(vec![2, 2, 2, 3], vec![0.5; 24])
+            .unwrap()
+            .write_file(&dir.join("data/v/x.bin"))
+            .unwrap();
+        Tensor::from_i32(vec![2], vec![0, 2])
+            .unwrap()
+            .write_file(&dir.join("data/v/y.bin"))
+            .unwrap();
+    }
+
+    #[test]
+    fn loads_vision() {
+        let dir = std::env::temp_dir().join("prism_ds_test");
+        write_vision_fixture(&dir);
+        let ds = Dataset::load(&dir, "v").unwrap();
+        assert_eq!(ds.kind, DatasetKind::Vision);
+        assert_eq!(ds.count(), 2);
+        assert_eq!(ds.x.shape, vec![2, 2, 2, 3]);
+        assert_eq!(ds.y.as_ref().unwrap().i32s().unwrap(), &[0, 2]);
+        assert_eq!(ds.classes, 3);
+    }
+
+    #[test]
+    fn missing_dataset_is_helpful() {
+        let err = Dataset::load(Path::new("/nonexistent"), "zz")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("make artifacts"), "{err}");
+    }
+}

@@ -1,0 +1,7 @@
+//! Evaluation datasets exported by `python/compile/aot.py` under
+//! `artifacts/data/<name>/` (synthetic stand-ins for CIFAR / GLUE / CBT /
+//! text8 — see DESIGN.md's substitution log).
+
+pub mod loader;
+
+pub use loader::{Dataset, DatasetKind};

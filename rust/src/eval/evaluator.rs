@@ -1,0 +1,283 @@
+//! End-to-end evaluation drivers: run a dataset through the distributed
+//! pipeline in a given mode and compute its paper metric. These power the
+//! accuracy columns of every reproduced table.
+
+use anyhow::{bail, Context, Result};
+
+use super::metrics;
+use crate::coordinator::{Mode, RunTrace, Runner};
+use crate::data::{Dataset, DatasetKind};
+use crate::runtime::{Tensor, TensorData, WeightSet};
+
+#[derive(Debug, Clone)]
+pub struct EvalResult {
+    /// The dataset's paper metric (accuracy / F1 / MCC / Spearman / BPC).
+    pub metric: f64,
+    pub metric_name: String,
+    pub samples: usize,
+    /// Trace of the last (warm) batch — all batches share geometry;
+    /// used for latency replay.
+    pub trace: RunTrace,
+    pub total_secs: f64,
+}
+
+/// Options controlling an evaluation sweep.
+#[derive(Debug, Clone)]
+pub struct EvalOpts {
+    pub mode: Mode,
+    /// Cap on evaluated samples (cloze: groups). 0 = whole dataset.
+    pub limit: usize,
+}
+
+/// Pad a batch to `batch` rows by repeating the last row.
+fn pad_rows(x: &Tensor, batch: usize) -> Result<Tensor> {
+    let have = x.shape[0];
+    if have == batch {
+        return Ok(x.clone());
+    }
+    let row: usize = x.shape[1..].iter().product();
+    let mut shape = x.shape.clone();
+    shape[0] = batch;
+    Ok(match &x.data {
+        TensorData::F32(v) => {
+            let mut out = v.clone();
+            let last = v[(have - 1) * row..].to_vec();
+            for _ in have..batch {
+                out.extend_from_slice(&last);
+            }
+            Tensor::from_f32(shape, out)?
+        }
+        TensorData::I32(v) => {
+            let mut out = v.clone();
+            let last = v[(have - 1) * row..].to_vec();
+            for _ in have..batch {
+                out.extend_from_slice(&last);
+            }
+            Tensor::from_i32(shape, out)?
+        }
+    })
+}
+
+pub fn evaluate(runner: &mut Runner, ws: &WeightSet, ds: &Dataset,
+                opts: &EvalOpts) -> Result<EvalResult> {
+    let t0 = std::time::Instant::now();
+    let mut result = match ds.kind {
+        DatasetKind::Vision | DatasetKind::Glue => {
+            eval_classify(runner, ws, ds, opts)
+        }
+        DatasetKind::CharLm => eval_bpc(runner, ws, ds, opts),
+        DatasetKind::Cloze => eval_cloze(runner, ws, ds, opts),
+    }?;
+    result.total_secs = t0.elapsed().as_secs_f64();
+    Ok(result)
+}
+
+/// Run `raw` through embed->blocks->head and return per-row logits.
+fn forward_logits(runner: &mut Runner, ws: &WeightSet, model: &str,
+                  task: &str, raw: &Tensor, mode: Mode)
+                  -> Result<(Tensor, RunTrace)> {
+    runner.forward(model, ws, task, raw, mode)
+}
+
+fn eval_classify(runner: &mut Runner, ws: &WeightSet, ds: &Dataset,
+                 opts: &EvalOpts) -> Result<EvalResult> {
+    let batch = runner.manifest.eval_batch;
+    let total = if opts.limit > 0 {
+        ds.count().min(opts.limit)
+    } else {
+        ds.count()
+    };
+    let y = ds.y.as_ref().context("classification needs labels")?;
+    let regression = ds.metric == "spearman";
+    let mut preds: Vec<usize> = Vec::with_capacity(total);
+    let mut scores: Vec<f64> = Vec::with_capacity(total);
+    let mut first_trace: Option<RunTrace> = None;
+    let mut i = 0;
+    while i < total {
+        let hi = (i + batch).min(total);
+        let xb = pad_rows(&ds.x.slice0(i, hi)?, batch)?;
+        let (logits, trace) =
+            forward_logits(runner, ws, &ds.model, &ds.name, &xb,
+                           opts.mode)?;
+        let classes = *logits.shape.last().unwrap();
+        let lf = logits.f32s()?;
+        if regression {
+            for r in 0..hi - i {
+                scores.push(lf[r * classes] as f64);
+            }
+        } else {
+            let am = metrics::argmax_rows(lf, classes);
+            preds.extend_from_slice(&am[..hi - i]);
+        }
+        first_trace = Some(trace);
+        i = hi;
+    }
+    let (metric, name) = if regression {
+        let truth: Vec<f64> = y.f32s()?[..total].iter()
+            .map(|&v| v as f64).collect();
+        (metrics::spearman(&scores, &truth), "spearman".to_string())
+    } else {
+        let truth: Vec<usize> = match &y.data {
+            TensorData::I32(v) => v[..total].iter()
+                .map(|&t| t as usize).collect(),
+            TensorData::F32(v) => v[..total].iter()
+                .map(|&t| t as usize).collect(),
+        };
+        match ds.metric.as_str() {
+            "f1" => (metrics::f1_binary(&preds, &truth), "f1".to_string()),
+            "mcc" => (metrics::mcc(&preds, &truth), "mcc".to_string()),
+            _ => (metrics::accuracy(&preds, &truth), "acc".to_string()),
+        }
+    };
+    Ok(EvalResult {
+        metric,
+        metric_name: name,
+        samples: total,
+        trace: first_trace.unwrap_or_default(),
+        total_secs: 0.0,
+    })
+}
+
+/// Bits-per-character over held-out windows: x rows are (N+1) ids;
+/// feed x[:, :N], score targets x[:, 1:].
+fn eval_bpc(runner: &mut Runner, ws: &WeightSet, ds: &Dataset,
+            opts: &EvalOpts) -> Result<EvalResult> {
+    let batch = runner.manifest.eval_batch;
+    let cfg = runner.cfg(&ds.model)?;
+    let total = if opts.limit > 0 {
+        ds.count().min(opts.limit)
+    } else {
+        ds.count()
+    };
+    let mut target_lps: Vec<f64> = Vec::new();
+    let mut first_trace: Option<RunTrace> = None;
+    let mut i = 0;
+    while i < total {
+        let hi = (i + batch).min(total);
+        let rows = pad_rows(&ds.x.slice0(i, hi)?, batch)?;
+        let ids = rows.i32s()?;
+        let n1 = rows.shape[1]; // N + 1
+        let inputs: Vec<i32> = ids
+            .chunks_exact(n1)
+            .flat_map(|r| r[..n1 - 1].iter().copied())
+            .collect();
+        let xb = Tensor::from_i32(vec![batch, n1 - 1], inputs)?;
+        let (logits, trace) =
+            forward_logits(runner, ws, &ds.model, "lm", &xb, opts.mode)?;
+        let v = cfg.vocab;
+        let lsm = metrics::log_softmax_rows(logits.f32s()?, v);
+        for r in 0..hi - i {
+            let row_ids = &ids[r * n1..(r + 1) * n1];
+            for t in 0..n1 - 1 {
+                let target = row_ids[t + 1] as usize;
+                let lp = lsm[(r * (n1 - 1) + t) * v + target];
+                target_lps.push(lp as f64);
+            }
+        }
+        first_trace = Some(trace);
+        i = hi;
+    }
+    Ok(EvalResult {
+        metric: metrics::bits_per_char(&target_lps),
+        metric_name: "bpc".to_string(),
+        samples: total,
+        trace: first_trace.unwrap_or_default(),
+        total_secs: 0.0,
+    })
+}
+
+/// CBT-style cloze: rows come in groups of 10 candidates; score each by
+/// the sum of target log-probs over its candidate span, take the argmax.
+fn eval_cloze(runner: &mut Runner, ws: &WeightSet, ds: &Dataset,
+              opts: &EvalOpts) -> Result<EvalResult> {
+    let batch = runner.manifest.eval_batch;
+    let cfg = runner.cfg(&ds.model)?;
+    let y = ds.y.as_ref().context("cloze needs answers")?;
+    let spans = ds.spans.as_ref().context("cloze needs spans")?;
+    let groups_total = y.shape[0];
+    let groups = if opts.limit > 0 {
+        groups_total.min(opts.limit)
+    } else {
+        groups_total
+    };
+    let rows_total = groups * 10;
+    if ds.x.shape[0] < rows_total {
+        bail!("cloze rows < groups*10");
+    }
+    let n1 = ds.x.shape[1];
+    let v = cfg.vocab;
+    let mut scores = vec![0.0f64; rows_total];
+    let mut first_trace: Option<RunTrace> = None;
+    let mut i = 0;
+    while i < rows_total {
+        let hi = (i + batch).min(rows_total);
+        let rows = pad_rows(&ds.x.slice0(i, hi)?, batch)?;
+        let ids = rows.i32s()?.to_vec();
+        let inputs: Vec<i32> = ids
+            .chunks_exact(n1)
+            .flat_map(|r| r[..n1 - 1].iter().copied())
+            .collect();
+        let xb = Tensor::from_i32(vec![batch, n1 - 1], inputs)?;
+        let (logits, trace) =
+            forward_logits(runner, ws, &ds.model, "lm", &xb, opts.mode)?;
+        let lsm = metrics::log_softmax_rows(logits.f32s()?, v);
+        let sp = spans.i32s()?;
+        for r in 0..hi - i {
+            let row = i + r;
+            let (start, end) =
+                (sp[row * 2] as usize, sp[row * 2 + 1] as usize);
+            let row_ids = &ids[r * n1..(r + 1) * n1];
+            let mut s = 0.0f64;
+            let mut cnt = 0usize;
+            // token at position t is predicted by logits at t-1
+            for t in start.max(1)..end.min(n1) {
+                let target = row_ids[t] as usize;
+                s += lsm[(r * (n1 - 1) + (t - 1)) * v + target] as f64;
+                cnt += 1;
+            }
+            // mean log-prob per character: candidates differ in length,
+            // and un-normalized sums systematically favor short ones.
+            scores[row] = s / cnt.max(1) as f64;
+        }
+        first_trace = Some(trace);
+        i = hi;
+    }
+    let answers = y.i32s()?;
+    let mut hits = 0;
+    for g in 0..groups {
+        let group = &scores[g * 10..(g + 1) * 10];
+        let pick = group
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.total_cmp(b.1))
+            .map(|(i, _)| i)
+            .unwrap();
+        if pick == answers[g] as usize {
+            hits += 1;
+        }
+    }
+    Ok(EvalResult {
+        metric: hits as f64 / groups as f64,
+        metric_name: "acc".to_string(),
+        samples: groups,
+        trace: first_trace.unwrap_or_default(),
+        total_secs: 0.0,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pad_rows_repeats_last() {
+        let x = Tensor::from_f32(vec![2, 2], vec![1., 2., 3., 4.]).unwrap();
+        let p = pad_rows(&x, 4).unwrap();
+        assert_eq!(p.shape, vec![4, 2]);
+        assert_eq!(p.f32s().unwrap(), &[1., 2., 3., 4., 3., 4., 3., 4.]);
+        let same = pad_rows(&x, 2).unwrap();
+        assert_eq!(same, x);
+        let i = Tensor::from_i32(vec![1, 2], vec![7, 8]).unwrap();
+        assert_eq!(pad_rows(&i, 2).unwrap().i32s().unwrap(), &[7, 8, 7, 8]);
+    }
+}

@@ -1,0 +1,190 @@
+//! Task metrics (paper §V-C): accuracy, F1, Matthews correlation,
+//! Spearman ρ, bits-per-character/byte, cloze accuracy.
+
+/// Accuracy: Eq. 18.
+pub fn accuracy(pred: &[usize], truth: &[usize]) -> f64 {
+    assert_eq!(pred.len(), truth.len());
+    if pred.is_empty() {
+        return 0.0;
+    }
+    let hits = pred.iter().zip(truth).filter(|(a, b)| a == b).count();
+    hits as f64 / pred.len() as f64
+}
+
+/// Binary F1 (positive class = 1): Eq. 19–20.
+pub fn f1_binary(pred: &[usize], truth: &[usize]) -> f64 {
+    let (mut tp, mut fp, mut fne) = (0f64, 0f64, 0f64);
+    for (&p, &t) in pred.iter().zip(truth) {
+        match (p, t) {
+            (1, 1) => tp += 1.0,
+            (1, 0) => fp += 1.0,
+            (0, 1) => fne += 1.0,
+            _ => {}
+        }
+    }
+    if tp == 0.0 {
+        return 0.0;
+    }
+    let precision = tp / (tp + fp);
+    let recall = tp / (tp + fne);
+    2.0 * precision * recall / (precision + recall)
+}
+
+/// Matthews correlation coefficient: Eq. 21.
+pub fn mcc(pred: &[usize], truth: &[usize]) -> f64 {
+    let (mut tp, mut tn, mut fp, mut fne) = (0f64, 0f64, 0f64, 0f64);
+    for (&p, &t) in pred.iter().zip(truth) {
+        match (p, t) {
+            (1, 1) => tp += 1.0,
+            (0, 0) => tn += 1.0,
+            (1, 0) => fp += 1.0,
+            (0, 1) => fne += 1.0,
+            _ => {}
+        }
+    }
+    let denom =
+        ((tp + fp) * (tp + fne) * (tn + fp) * (tn + fne)).sqrt();
+    if denom == 0.0 {
+        return 0.0;
+    }
+    (tp * tn - fp * fne) / denom
+}
+
+fn ranks(xs: &[f64]) -> Vec<f64> {
+    let mut idx: Vec<usize> = (0..xs.len()).collect();
+    idx.sort_by(|&a, &b| xs[a].total_cmp(&xs[b]));
+    let mut r = vec![0.0; xs.len()];
+    let mut i = 0;
+    while i < idx.len() {
+        // average ranks over ties
+        let mut j = i;
+        while j + 1 < idx.len() && xs[idx[j + 1]] == xs[idx[i]] {
+            j += 1;
+        }
+        let avg = (i + j) as f64 / 2.0 + 1.0;
+        for k in i..=j {
+            r[idx[k]] = avg;
+        }
+        i = j + 1;
+    }
+    r
+}
+
+/// Spearman rank correlation: Eq. 22 (tie-aware via Pearson on ranks).
+pub fn spearman(a: &[f64], b: &[f64]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    let (ra, rb) = (ranks(a), ranks(b));
+    let n = a.len() as f64;
+    let (ma, mb) = (ra.iter().sum::<f64>() / n, rb.iter().sum::<f64>() / n);
+    let mut cov = 0.0;
+    let mut va = 0.0;
+    let mut vb = 0.0;
+    for i in 0..a.len() {
+        let (da, db) = (ra[i] - ma, rb[i] - mb);
+        cov += da * db;
+        va += da * da;
+        vb += db * db;
+    }
+    if va == 0.0 || vb == 0.0 {
+        return 0.0;
+    }
+    cov / (va * vb).sqrt()
+}
+
+/// Row-wise log-softmax over logits (row-major, `classes` columns).
+pub fn log_softmax_rows(logits: &[f32], classes: usize) -> Vec<f32> {
+    let mut out = Vec::with_capacity(logits.len());
+    for row in logits.chunks_exact(classes) {
+        let m = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let lse: f32 =
+            row.iter().map(|x| (x - m).exp()).sum::<f32>().ln() + m;
+        out.extend(row.iter().map(|x| x - lse));
+    }
+    out
+}
+
+/// Row-wise argmax.
+pub fn argmax_rows(logits: &[f32], classes: usize) -> Vec<usize> {
+    logits
+        .chunks_exact(classes)
+        .map(|row| {
+            // first maximum wins on ties (numpy argmax convention)
+            let mut best = 0;
+            for (i, v) in row.iter().enumerate().skip(1) {
+                if *v > row[best] {
+                    best = i;
+                }
+            }
+            best
+        })
+        .collect()
+}
+
+/// Bits per character (Eq. 23/24) from per-position log-softmax scores:
+/// mean of −log2 p(target_t) over all positions.
+pub fn bits_per_char(log_probs_of_targets: &[f64]) -> f64 {
+    if log_probs_of_targets.is_empty() {
+        return 0.0;
+    }
+    let nats: f64 = log_probs_of_targets.iter().sum::<f64>()
+        / log_probs_of_targets.len() as f64;
+    -nats / std::f64::consts::LN_2
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accuracy_basic() {
+        assert_eq!(accuracy(&[1, 2, 3], &[1, 0, 3]), 2.0 / 3.0);
+        assert_eq!(accuracy(&[], &[]), 0.0);
+    }
+
+    #[test]
+    fn f1_matches_hand_computation() {
+        // tp=2 fp=1 fn=1 -> precision 2/3, recall 2/3, f1 = 2/3
+        let pred = [1, 1, 1, 0, 0];
+        let truth = [1, 1, 0, 1, 0];
+        assert!((f1_binary(&pred, &truth) - 2.0 / 3.0).abs() < 1e-12);
+        assert_eq!(f1_binary(&[0, 0], &[1, 1]), 0.0);
+    }
+
+    #[test]
+    fn mcc_perfect_and_inverse() {
+        assert!((mcc(&[1, 0, 1, 0], &[1, 0, 1, 0]) - 1.0).abs() < 1e-12);
+        assert!((mcc(&[0, 1, 0, 1], &[1, 0, 1, 0]) + 1.0).abs() < 1e-12);
+        assert_eq!(mcc(&[1, 1], &[1, 1]), 0.0); // degenerate
+    }
+
+    #[test]
+    fn spearman_monotone_and_ties() {
+        let a = [1.0, 2.0, 3.0, 4.0];
+        let up = [10.0, 20.0, 30.0, 40.0];
+        let down = [4.0, 3.0, 2.0, 1.0];
+        assert!((spearman(&a, &up) - 1.0).abs() < 1e-12);
+        assert!((spearman(&a, &down) + 1.0).abs() < 1e-12);
+        let tied = [1.0, 1.0, 2.0, 2.0];
+        let r = spearman(&tied, &[1.0, 1.0, 2.0, 2.0]);
+        assert!(r > 0.99);
+    }
+
+    #[test]
+    fn log_softmax_and_argmax() {
+        let logits = [0.0f32, 0.0, 1.0, 0.0];
+        let ls = log_softmax_rows(&logits, 2);
+        assert!((ls[0] - (-std::f32::consts::LN_2)).abs() < 1e-6);
+        assert!(ls[2] > ls[3]);
+        assert_eq!(argmax_rows(&logits, 2), vec![0, 0]);
+        assert_eq!(argmax_rows(&[1.0, 3.0, 2.0, 0.0, 5.0, 1.0], 3),
+                   vec![1, 1]);
+    }
+
+    #[test]
+    fn bpc_uniform_distribution() {
+        // uniform over 4 symbols: exactly 2 bits
+        let lp = vec![(0.25f64).ln(); 10];
+        assert!((bits_per_char(&lp) - 2.0).abs() < 1e-12);
+        assert_eq!(bits_per_char(&[]), 0.0);
+    }
+}

@@ -1,0 +1,5 @@
+//! Evaluation: paper metrics (§V-C) and end-to-end dataset drivers.
+pub mod evaluator;
+pub mod metrics;
+
+pub use evaluator::{evaluate, EvalOpts, EvalResult};

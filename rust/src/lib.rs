@@ -1,0 +1,30 @@
+//! # PRISM — distributed Transformer inference at the edge
+//!
+//! Reproduction of *PRISM: Distributed Inference for Foundation Models at
+//! Edge* (Qazi, Iosifidis, Zhang, 2025) as a three-layer rust + JAX +
+//! Pallas stack:
+//!
+//! * **Layer 3 (this crate)** — master/worker coordinator, request
+//!   router/batcher, network substrate (in-process, TCP, simulated),
+//!   analytical FLOP/communication models, evaluation drivers that
+//!   regenerate every table and figure of the paper.
+//! * **Layer 2** — JAX Transformer blocks (`python/compile/model.py`),
+//!   AOT-lowered to HLO text at build time.
+//! * **Layer 1** — Pallas kernels: scaling-aware PRISM attention and
+//!   Segment Means (`python/compile/kernels/`).
+//!
+//! Python never runs at serve time: `make artifacts` produces
+//! `artifacts/` once, and the rust binary is self-contained after that.
+//! See DESIGN.md for the system inventory and EXPERIMENTS.md for the
+//! paper-vs-measured record.
+pub mod bench_util;
+pub mod coordinator;
+pub mod data;
+pub mod eval;
+pub mod metrics;
+pub mod model;
+pub mod net;
+pub mod runtime;
+pub mod server;
+pub mod util;
+pub mod cli;

@@ -1,0 +1,314 @@
+//! `prism` — CLI entry point for the PRISM distributed-inference runtime.
+//!
+//! Subcommands:
+//!   info                         manifest / artifact summary
+//!   eval                         run a dataset through a strategy, print
+//!                                the paper metric + measured comm bytes
+//!   latency                      Fig.5-style latency at one bandwidth
+//!   serve                        threaded master/worker serving demo
+//!   worker --listen ADDR         TCP block-execution worker process
+//!
+//! Common flags: --artifacts DIR (default ./artifacts), --model,
+//! --dataset, --mode single|voltage|prism, --p, --l, --cr, --kernel
+//! xla|pallas, --limit N, --finetuned, --no-dup.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use prism::cli::Args;
+use prism::coordinator::plan::landmarks_for_cr;
+use prism::coordinator::{Mode, Runner};
+use prism::data::Dataset;
+use prism::eval::{evaluate, EvalOpts};
+use prism::model::{comm, flops, paper};
+use prism::net::LinkModel;
+use prism::runtime::{Engine, Manifest, WeightSet};
+use prism::server;
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = run(&argv) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run(argv: &[String]) -> Result<()> {
+    let args = Args::parse(argv)?;
+    match args.command.as_str() {
+        "info" => cmd_info(&args),
+        "eval" => cmd_eval(&args),
+        "latency" => cmd_latency(&args),
+        "serve" => server::cmd_serve(&args),
+        "worker" => cmd_worker(&args),
+        "remote-eval" => cmd_remote_eval(&args),
+        "" | "help" | "--help" => {
+            println!("{}", HELP);
+            Ok(())
+        }
+        other => bail!("unknown command '{other}' (try `prism help`)"),
+    }
+}
+
+const HELP: &str = "prism — distributed Transformer inference at the edge
+commands: info | eval | latency | serve | worker
+examples:
+  prism info
+  prism eval --model vit --dataset synth10 --mode prism --p 2 --l 6
+  prism eval --model gpt2 --dataset text8p --mode prism --p 3 --cr 10
+  prism latency --model vit --mode prism --p 3 --l 3 --bandwidth 200
+  prism serve --model vit --dataset synth10 --p 2 --l 6 --requests 64
+  prism worker --listen 127.0.0.1:7070
+  prism remote-eval --workers 127.0.0.1:7070,127.0.0.1:7071 \\
+        --model vit --mode prism --p 2 --l 6 --limit 64";
+
+pub fn manifest_from(args: &Args) -> Result<Arc<Manifest>> {
+    let root = PathBuf::from(args.str_or("artifacts", "artifacts"));
+    Ok(Arc::new(Manifest::load(&root)?))
+}
+
+/// Resolve (model, dataset, weight tag) with per-model defaults.
+pub fn resolve_workload(args: &Args, m: &Manifest)
+                        -> Result<(String, String, String)> {
+    let model = args.str_or("model", "vit");
+    let dataset = args.str_or("dataset", match model.as_str() {
+        "vit" => "synth10",
+        "bert" => "sst2p",
+        _ => "text8p",
+    });
+    let mut tag = match model.as_str() {
+        "vit" => format!("vit_{dataset}"),
+        other => other.to_string(),
+    };
+    if args.bool("finetuned") {
+        tag = format!("{tag}_ft");
+    }
+    if let Some(w) = args.flags.get("weights") {
+        tag = w.clone();
+    }
+    if !m.weights.contains_key(&tag) {
+        bail!("no weight set '{tag}' in manifest (have: {:?})",
+              m.weights.keys().collect::<Vec<_>>());
+    }
+    Ok((model, dataset, tag))
+}
+
+/// Resolve the strategy from --mode / --p / --l / --cr.
+pub fn resolve_mode(args: &Args, n: usize) -> Result<Mode> {
+    let p = args.usize_or("p", 2)?;
+    Ok(match args.str_or("mode", "prism").as_str() {
+        "single" => Mode::Single,
+        "voltage" => Mode::Voltage { p },
+        "prism" => {
+            let l = if let Some(cr) = args.flags.get("cr") {
+                landmarks_for_cr(n, p, cr.parse::<f64>()
+                    .context("--cr wants a number")?)
+            } else {
+                args.usize_or("l", 0)?
+            };
+            if l == 0 {
+                bail!("prism mode needs --l or --cr");
+            }
+            Mode::Prism { p, l, duplicated: !args.bool("no-dup") }
+        }
+        other => bail!("unknown mode '{other}'"),
+    })
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let m = manifest_from(args)?;
+    let engine = Engine::new(m.clone())?;
+    println!("platform        : {}", engine.platform());
+    println!("models          : {}",
+             m.models.keys().cloned().collect::<Vec<_>>().join(", "));
+    println!("weight sets     : {}",
+             m.weights.keys().cloned().collect::<Vec<_>>().join(", "));
+    println!("executables     : {}", m.executables.len());
+    println!("variants        : {}", m.variants.len());
+    println!("eval batch      : {}", m.eval_batch);
+    for (name, cfg) in &m.models {
+        let dims = paper::dims_from_cfg(cfg);
+        let pdims = paper::paper_dims(name);
+        println!(
+            "  {name}: N={} D={} H={} layers={} causal={} | tiny {:.3} \
+             GFLOPs, paper-scale {:.2} GFLOPs",
+            cfg.n, cfg.d, cfg.heads, cfg.layers, cfg.causal,
+            flops::single_total(&dims) / 1e9,
+            pdims.map(|d| flops::single_total(&d) / 1e9).unwrap_or(0.0),
+        );
+    }
+    Ok(())
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let m = manifest_from(args)?;
+    let (model, dataset, tag) = resolve_workload(args, &m)?;
+    let cfg = m.model(&model)?.clone();
+    let mode = resolve_mode(args, cfg.n)?;
+    let flavor = args.str_or("kernel", "xla");
+    let limit = args.usize_or("limit", 0)?;
+
+    let mut runner = Runner::new(m.clone(), &flavor)?;
+    let ws = WeightSet::load(&m, &tag)?;
+    let ds = Dataset::load(&m.root, &dataset)?;
+    if ds.model != model {
+        bail!("dataset '{dataset}' belongs to model '{}'", ds.model);
+    }
+    println!("eval {model}/{dataset} weights={tag} mode={:?} kernel={flavor}",
+             mode);
+    let res = evaluate(&mut runner, &ws, &ds, &EvalOpts { mode, limit })?;
+    println!("{:>10} : {:.4}", res.metric_name, res.metric);
+    println!("{:>10} : {}", "samples", res.samples);
+    println!("{:>10} : {:.2}s total, {:.1}ms compute/batch", "time",
+             res.total_secs, res.trace.total_compute_secs() * 1e3);
+    if mode.p() > 1 {
+        let bytes = res.trace.device_exchange_bytes(0);
+        println!("{:>10} : {} B/device across {} layers", "exchange",
+                 bytes, cfg.layers);
+        if let Mode::Prism { p, l, .. } = mode {
+            println!("{:>10} : CR={:.2} PDPLC={} tokens, comm speed-up \
+                      {:.2}% vs Voltage", "comm",
+                     prism::coordinator::plan::effective_cr(cfg.n, p, l),
+                     comm::pdplc_tokens_prism(p, l),
+                     comm::comm_speedup(cfg.n, p, l) * 100.0);
+        }
+    }
+    Ok(())
+}
+
+fn cmd_latency(args: &Args) -> Result<()> {
+    let m = manifest_from(args)?;
+    let (model, dataset, tag) = resolve_workload(args, &m)?;
+    let cfg = m.model(&model)?.clone();
+    let mode = resolve_mode(args, cfg.n)?;
+    let flavor = args.str_or("kernel", "xla");
+    let bw = args.f64_or("bandwidth", 200.0)?;
+    let lat = args.f64_or("link-latency-ms", 2.0)?;
+    let reps = args.usize_or("reps", 3)?;
+
+    let mut runner = Runner::new(m.clone(), &flavor)?;
+    let ws = WeightSet::load(&m, &tag)?;
+    let ds = Dataset::load(&m.root, &dataset)?;
+    let batch = m.latency_batch;
+    // single-query latency (paper Fig. 5 uses batch size 1)
+    let raw = match ds.kind {
+        prism::data::DatasetKind::Vision => ds.x.slice0(0, batch)?,
+        _ => {
+            let n1 = ds.x.shape[1];
+            let row = ds.x.slice0(0, batch)?;
+            let take = cfg.n.min(n1);
+            let mut ids = Vec::with_capacity(batch * cfg.n);
+            for b in 0..batch {
+                let r = &row.i32s()?[b * n1..b * n1 + take];
+                ids.extend_from_slice(r);
+                ids.extend(std::iter::repeat(0).take(cfg.n - take));
+            }
+            prism::runtime::Tensor::from_i32(vec![batch, cfg.n], ids)?
+        }
+    };
+    let task = if cfg.causal { "lm".to_string() } else { dataset.clone() };
+    let mut best = f64::INFINITY;
+    let mut trace = None;
+    for _ in 0..reps.max(1) {
+        let (_, t) = runner.forward(&model, &ws, &task, &raw, mode)?;
+        if t.total_compute_secs() < best {
+            best = t.total_compute_secs();
+            trace = Some(t);
+        }
+    }
+    let trace = trace.unwrap();
+    let link = LinkModel::new(bw, lat);
+    println!("latency {model} mode={mode:?} bw={bw} Mbps link-lat={lat} ms \
+              batch={batch}");
+    println!("  compute  : {:.2} ms", trace.total_compute_secs() * 1e3);
+    println!("  end2end  : {:.2} ms (modeled)",
+             trace.latency_secs(link) * 1e3);
+    Ok(())
+}
+
+fn cmd_worker(args: &Args) -> Result<()> {
+    let m = manifest_from(args)?;
+    let addr = args.req("listen")?.to_string();
+    let mut engine = Engine::new(m.clone())?;
+    let mut cache: std::collections::BTreeMap<String, WeightSet> =
+        Default::default();
+    prism::net::tcp::serve(&addr, move |req| {
+        let ws = match cache.entry(req.weights.clone()) {
+            std::collections::btree_map::Entry::Occupied(e) => e.into_mut(),
+            std::collections::btree_map::Entry::Vacant(v) => {
+                match WeightSet::load(&m, &req.weights) {
+                    Ok(w) => v.insert(w),
+                    Err(e) => {
+                        return prism::net::tcp::ExecResponse::Err(
+                            format!("{e:#}"))
+                    }
+                }
+            }
+        };
+        let refs: Vec<&prism::runtime::Tensor> = req.args.iter().collect();
+        match engine.run(&req.exec, ws, req.layer as usize, &refs) {
+            Ok(outs) => prism::net::tcp::ExecResponse::Ok(outs),
+            Err(e) => prism::net::tcp::ExecResponse::Err(format!("{e:#}")),
+        }
+    })
+}
+
+/// Distributed evaluation over TCP workers (start them first with
+/// `prism worker --listen ...`). Embed/head run locally; blocks run on
+/// the remote devices; accuracy must match local `prism eval` exactly.
+fn cmd_remote_eval(args: &Args) -> Result<()> {
+    use prism::coordinator::RemoteCoordinator;
+    use prism::eval::metrics::argmax_rows;
+    let m = manifest_from(args)?;
+    let (model, dataset, tag) = resolve_workload(args, &m)?;
+    let cfg = m.model(&model)?.clone();
+    let mode = resolve_mode(args, cfg.n)?;
+    let addrs: Vec<String> = args
+        .req("workers")?
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .collect();
+    let flavor = args.str_or("kernel", "xla");
+    let limit = args.usize_or("limit", 64)?;
+    let batch = m.eval_batch;
+
+    let mut engine = Engine::new(m.clone())?;
+    let ws = WeightSet::load(&m, &tag)?;
+    let ds = prism::data::Dataset::load(&m.root, &dataset)?;
+    let mut coord = RemoteCoordinator::connect(m.clone(), &addrs,
+                                               &flavor)?;
+    let embed_name = m.embed_name(&model, batch);
+    let task = if cfg.causal { "lm".to_string() } else { dataset.clone() };
+    let head_name = m.head_name(&model, &task, batch);
+
+    let total = ds.count().min(if limit == 0 { ds.count() } else { limit });
+    let y = ds.y.as_ref().context("labels required")?;
+    let mut hits = 0usize;
+    let mut seen = 0usize;
+    let mut i = 0;
+    while i + batch <= total {
+        let raw = ds.x.slice0(i, i + batch)?;
+        let x = engine.run(&embed_name, &ws, 0, &[&raw])?.remove(0);
+        let out = coord.blocks(&model, &tag, &x, mode)?;
+        let logits = engine.run(&head_name, &ws, 0, &[&out])?.remove(0);
+        let classes = *logits.shape.last().unwrap();
+        let preds = argmax_rows(logits.f32s()?, classes);
+        for (r, pred) in preds.iter().enumerate().take(batch) {
+            let t = match &y.data {
+                prism::runtime::TensorData::I32(v) => v[i + r] as usize,
+                prism::runtime::TensorData::F32(v) => v[i + r] as usize,
+            };
+            hits += (*pred == t) as usize;
+            seen += 1;
+        }
+        i += batch;
+    }
+    let (sent, recv) = coord.bytes();
+    coord.shutdown()?;
+    println!("remote-eval {model}/{dataset} over {} workers: acc {:.4} \
+              ({seen} samples), rpc bytes sent {sent} recv {recv}",
+             addrs.len(), hits as f64 / seen.max(1) as f64);
+    Ok(())
+}

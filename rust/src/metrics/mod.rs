@@ -1,0 +1,8 @@
+//! Serving metrics: streaming latency histograms, throughput counters,
+//! and plain-text report tables.
+
+pub mod histogram;
+pub mod report;
+
+pub use histogram::Histogram;
+pub use report::Table;

@@ -1,0 +1,6 @@
+//! Analytical cost models: FLOPs (paper's 2xMAC convention), communication
+//! (PDPLC / speed-up columns), and the full-scale paper dimensions.
+pub mod comm;
+pub mod flops;
+pub mod paper;
+pub mod predict;

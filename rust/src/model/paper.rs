@@ -1,0 +1,74 @@
+//! Full-scale model dimensions used by the paper's evaluation tables.
+//!
+//! Reverse-engineered from the GFLOPs columns (2 FLOPs/MAC convention):
+//!   * ViT-Base @ 224px: N = 197, D = 768, F = 3072, 12 layers, patch
+//!     16×16×3 embedding  -> 35.1 GFLOPs (paper: 35.15).
+//!   * BERT-Base @ N = 256: -> 45.9 GFLOPs (paper: 45.93); N = 256 also
+//!     reproduces Voltage's PDPLC = 128 tokens at P = 2 (Table V).
+//!   * GPT-2 small @ N = 256 with the 50257-way LM head counted
+//!     -> 65.7 GFLOPs (paper: 65.71).
+
+use super::flops::Dims;
+
+pub const VIT_BASE: Dims = Dims {
+    n: 197,
+    d: 768,
+    f: 3072,
+    layers: 12,
+    head_vocab: 0,
+    embed_in: 16 * 16 * 3,
+};
+
+pub const BERT_BASE: Dims = Dims {
+    n: 256,
+    d: 768,
+    f: 3072,
+    layers: 12,
+    head_vocab: 0,
+    embed_in: 0,
+};
+
+pub const GPT2_SMALL: Dims = Dims {
+    n: 256,
+    d: 768,
+    f: 3072,
+    layers: 12,
+    head_vocab: 50257,
+    embed_in: 0,
+};
+
+/// Paper dims by model name ("vit" | "bert" | "gpt2").
+pub fn paper_dims(model: &str) -> Option<Dims> {
+    match model {
+        "vit" => Some(VIT_BASE),
+        "bert" => Some(BERT_BASE),
+        "gpt2" => Some(GPT2_SMALL),
+        _ => None,
+    }
+}
+
+/// Dims of the *tiny* models actually executed in this repo, from the
+/// manifest (used to predict measured wall times and roofline ratios).
+pub fn dims_from_cfg(cfg: &crate::runtime::ModelCfg) -> Dims {
+    Dims {
+        n: cfg.n,
+        d: cfg.d,
+        f: cfg.ffn,
+        layers: cfg.layers,
+        head_vocab: if cfg.causal { cfg.vocab } else { 0 },
+        embed_in: if cfg.img > 0 { cfg.patch * cfg.patch * 3 } else { 0 },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lookup() {
+        assert_eq!(paper_dims("vit").unwrap().n, 197);
+        assert_eq!(paper_dims("bert").unwrap().n, 256);
+        assert_eq!(paper_dims("gpt2").unwrap().head_vocab, 50257);
+        assert!(paper_dims("nope").is_none());
+    }
+}

@@ -1,0 +1,154 @@
+//! In-process transport: a full mesh of mpsc channels between the master
+//! and the worker threads. Every send is byte-accounted; an optional
+//! `LinkModel` makes sends *pace* like the modeled network (useful to
+//! demo end-to-end behaviour without a real link; benches use the
+//! virtual-clock `SimClock` instead, which is deterministic).
+
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{anyhow, Result};
+
+use super::message::Msg;
+use super::model::LinkModel;
+use super::stats::NetStats;
+
+#[derive(Debug)]
+pub struct Envelope {
+    pub from: usize,
+    pub to: usize,
+    pub msg: Msg,
+}
+
+/// One participant's handle into the mesh. Device ids `0..p` are workers,
+/// id `p` is the master.
+pub struct Endpoint {
+    pub id: usize,
+    rx: Receiver<Envelope>,
+    txs: Vec<Sender<Envelope>>,
+    pub stats: Arc<NetStats>,
+    pub pace: Option<LinkModel>,
+}
+
+impl Endpoint {
+    pub fn send(&self, to: usize, msg: Msg) -> Result<()> {
+        let bytes = msg.wire_bytes();
+        self.stats.record(self.id, to, bytes);
+        if let Some(link) = &self.pace {
+            let secs = link.transfer_secs(bytes);
+            if secs > 0.0 {
+                std::thread::sleep(Duration::from_secs_f64(secs));
+            }
+        }
+        self.txs[to]
+            .send(Envelope { from: self.id, to, msg })
+            .map_err(|_| anyhow!("endpoint {to} hung up"))
+    }
+
+    /// Send the same message to every worker except self (the exchange).
+    pub fn send_peers(&self, workers: usize, msg: &Msg) -> Result<()> {
+        for to in 0..workers {
+            if to != self.id {
+                self.send(to, msg.clone())?;
+            }
+        }
+        Ok(())
+    }
+
+    pub fn recv(&self) -> Result<Envelope> {
+        self.rx.recv().map_err(|_| anyhow!("mesh closed"))
+    }
+
+    pub fn recv_timeout(&self, d: Duration) -> Result<Option<Envelope>> {
+        match self.rx.recv_timeout(d) {
+            Ok(e) => Ok(Some(e)),
+            Err(RecvTimeoutError::Timeout) => Ok(None),
+            Err(RecvTimeoutError::Disconnected) => {
+                Err(anyhow!("mesh closed"))
+            }
+        }
+    }
+}
+
+/// Build a mesh of `p` workers + 1 master (id `p`). Returns one endpoint
+/// per participant, workers first.
+pub fn mesh(p: usize, pace: Option<LinkModel>) -> Vec<Endpoint> {
+    let stats = NetStats::new(p + 1);
+    let (txs, rxs): (Vec<_>, Vec<_>) = (0..=p).map(|_| channel()).unzip();
+    rxs.into_iter()
+        .enumerate()
+        .map(|(id, rx)| Endpoint {
+            id,
+            rx,
+            txs: txs.clone(),
+            stats: stats.clone(),
+            pace,
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::Tensor;
+
+    fn t(n: usize) -> Tensor {
+        Tensor::from_f32(vec![n], vec![1.0; n]).unwrap()
+    }
+
+    #[test]
+    fn mesh_routes_and_counts() {
+        let mut eps = mesh(2, None);
+        let master = eps.pop().unwrap();
+        let w1 = eps.pop().unwrap();
+        let w0 = eps.pop().unwrap();
+        w0.send(2, Msg::FinalPart { from: 0, data: t(4) }).unwrap();
+        w1.send(0, Msg::Exchange { layer: 0, from: 1, data: t(2) }).unwrap();
+        let e = master.recv().unwrap();
+        assert_eq!(e.from, 0);
+        let e = w0.recv().unwrap();
+        assert!(matches!(e.msg, Msg::Exchange { from: 1, .. }));
+        assert_eq!(master.stats.sent(0), 16);
+        assert_eq!(master.stats.sent(1), 8);
+    }
+
+    #[test]
+    fn send_peers_skips_self() {
+        let eps = mesh(3, None);
+        eps[1].send_peers(3, &Msg::Shutdown).unwrap();
+        assert!(eps[0].recv().is_ok());
+        assert!(eps[2].recv().is_ok());
+        assert!(eps[1]
+            .recv_timeout(Duration::from_millis(10))
+            .unwrap()
+            .is_none());
+    }
+
+    #[test]
+    fn cross_thread() {
+        let mut eps = mesh(1, None);
+        let master = eps.pop().unwrap();
+        let w0 = eps.pop().unwrap();
+        let h = std::thread::spawn(move || {
+            let e = w0.recv().unwrap();
+            assert!(matches!(e.msg, Msg::Shutdown));
+            w0.send(1, Msg::FinalPart { from: 0, data: t(1) }).unwrap();
+        });
+        master.send(0, Msg::Shutdown).unwrap();
+        let e = master.recv().unwrap();
+        assert_eq!(e.from, 0);
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn paced_send_sleeps() {
+        let eps = mesh(1, Some(LinkModel::new(8.0, 0.0))); // 1 MB/s
+        let t0 = std::time::Instant::now();
+        // 40 KB at 1 MB/s ≈ 40 ms
+        eps[0]
+            .send(1, Msg::FinalPart { from: 0, data: t(10_000) })
+            .unwrap();
+        assert!(t0.elapsed().as_millis() >= 30);
+    }
+}

@@ -1,0 +1,255 @@
+//! Wire messages for the coordinator protocol + a compact binary codec
+//! (used by the TCP transport; in-process transports pass them directly).
+
+use anyhow::{bail, Context, Result};
+
+use crate::runtime::{Tensor, TensorData};
+
+/// Messages exchanged during one distributed forward pass.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Msg {
+    /// Segment-Means (PRISM) or full-partition (Voltage) exchange after
+    /// one Transformer block.
+    Exchange { layer: u32, from: u32, data: Tensor },
+    /// A worker's final partition output, returned to the master.
+    FinalPart { from: u32, data: Tensor },
+    /// Master -> worker: start a forward pass (local partition + initial
+    /// context rows, one tensor per peer in global order).
+    Job { request: u64, x_p: Tensor, ctx: Vec<Tensor> },
+    /// Orderly shutdown.
+    Shutdown,
+}
+
+impl Msg {
+    /// Payload bytes that would cross the network (tensor data only; the
+    /// few bytes of header are negligible and identical across modes).
+    pub fn wire_bytes(&self) -> usize {
+        match self {
+            Msg::Exchange { data, .. } => data.byte_len(),
+            Msg::FinalPart { data, .. } => data.byte_len(),
+            Msg::Job { x_p, ctx, .. } => {
+                x_p.byte_len() + ctx.iter().map(|t| t.byte_len()).sum::<usize>()
+            }
+            Msg::Shutdown => 0,
+        }
+    }
+}
+
+// ------------------------- binary codec (TCP framing) --------------------
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+pub fn encode_tensor(out: &mut Vec<u8>, t: &Tensor) {
+    out.push(match t.data {
+        TensorData::F32(_) => 0u8,
+        TensorData::I32(_) => 1u8,
+    });
+    out.push(t.shape.len() as u8);
+    for &d in &t.shape {
+        put_u32(out, d as u32);
+    }
+    match &t.data {
+        TensorData::F32(v) => {
+            for x in v {
+                out.extend_from_slice(&x.to_le_bytes());
+            }
+        }
+        TensorData::I32(v) => {
+            for x in v {
+                out.extend_from_slice(&x.to_le_bytes());
+            }
+        }
+    }
+}
+
+pub struct Cursor<'a> {
+    pub buf: &'a [u8],
+    pub pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        Cursor { buf, pos: 0 }
+    }
+
+    pub fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.pos + n > self.buf.len() {
+            bail!("message truncated at {}", self.pos);
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn u32(&mut self) -> Result<u32> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    pub fn u64(&mut self) -> Result<u64> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes(b.try_into().unwrap()))
+    }
+}
+
+pub fn decode_tensor(c: &mut Cursor) -> Result<Tensor> {
+    let dtype = c.u8()?;
+    let ndim = c.u8()? as usize;
+    let mut shape = Vec::with_capacity(ndim);
+    for _ in 0..ndim {
+        shape.push(c.u32()? as usize);
+    }
+    let n: usize = shape.iter().product();
+    let raw = c.take(n * 4)?;
+    match dtype {
+        0 => {
+            let v = raw
+                .chunks_exact(4)
+                .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+                .collect();
+            Tensor::from_f32(shape, v)
+        }
+        1 => {
+            let v = raw
+                .chunks_exact(4)
+                .map(|b| i32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+                .collect();
+            Tensor::from_i32(shape, v)
+        }
+        other => bail!("unknown tensor dtype tag {other}"),
+    }
+}
+
+impl Msg {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        match self {
+            Msg::Exchange { layer, from, data } => {
+                out.push(0);
+                put_u32(&mut out, *layer);
+                put_u32(&mut out, *from);
+                encode_tensor(&mut out, data);
+            }
+            Msg::FinalPart { from, data } => {
+                out.push(1);
+                put_u32(&mut out, *from);
+                encode_tensor(&mut out, data);
+            }
+            Msg::Job { request, x_p, ctx } => {
+                out.push(2);
+                put_u64(&mut out, *request);
+                encode_tensor(&mut out, x_p);
+                put_u32(&mut out, ctx.len() as u32);
+                for t in ctx {
+                    encode_tensor(&mut out, t);
+                }
+            }
+            Msg::Shutdown => out.push(3),
+        }
+        out
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<Msg> {
+        let mut c = Cursor::new(buf);
+        let tag = c.u8().context("empty message")?;
+        let msg = match tag {
+            0 => Msg::Exchange {
+                layer: c.u32()?,
+                from: c.u32()?,
+                data: decode_tensor(&mut c)?,
+            },
+            1 => Msg::FinalPart { from: c.u32()?, data: decode_tensor(&mut c)? },
+            2 => {
+                let request = c.u64()?;
+                let x_p = decode_tensor(&mut c)?;
+                let n = c.u32()? as usize;
+                let mut ctx = Vec::with_capacity(n);
+                for _ in 0..n {
+                    ctx.push(decode_tensor(&mut c)?);
+                }
+                Msg::Job { request, x_p, ctx }
+            }
+            3 => Msg::Shutdown,
+            other => bail!("unknown message tag {other}"),
+        };
+        if c.pos != buf.len() {
+            bail!("trailing bytes in message");
+        }
+        Ok(msg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t(shape: Vec<usize>) -> Tensor {
+        let n: usize = shape.iter().product();
+        Tensor::from_f32(shape, (0..n).map(|i| i as f32 * 0.5).collect())
+            .unwrap()
+    }
+
+    #[test]
+    fn tensor_codec_roundtrip() {
+        for shape in [vec![3], vec![2, 4], vec![1, 2, 3, 4]] {
+            let a = t(shape);
+            let mut buf = Vec::new();
+            encode_tensor(&mut buf, &a);
+            let b = decode_tensor(&mut Cursor::new(&buf)).unwrap();
+            assert_eq!(a, b);
+        }
+        let i = Tensor::from_i32(vec![2, 2], vec![1, -2, 3, -4]).unwrap();
+        let mut buf = Vec::new();
+        encode_tensor(&mut buf, &i);
+        assert_eq!(decode_tensor(&mut Cursor::new(&buf)).unwrap(), i);
+    }
+
+    #[test]
+    fn msg_codec_roundtrip() {
+        let msgs = vec![
+            Msg::Exchange { layer: 3, from: 1, data: t(vec![2, 3]) },
+            Msg::FinalPart { from: 2, data: t(vec![4]) },
+            Msg::Job {
+                request: 99,
+                x_p: t(vec![1, 2, 3]),
+                ctx: vec![t(vec![2]), t(vec![3])],
+            },
+            Msg::Shutdown,
+        ];
+        for m in msgs {
+            let buf = m.encode();
+            assert_eq!(Msg::decode(&buf).unwrap(), m);
+        }
+    }
+
+    #[test]
+    fn rejects_corrupt() {
+        assert!(Msg::decode(&[]).is_err());
+        assert!(Msg::decode(&[9]).is_err());
+        let mut buf = Msg::Shutdown.encode();
+        buf.push(0);
+        assert!(Msg::decode(&buf).is_err()); // trailing bytes
+        let good = Msg::FinalPart { from: 0, data: t(vec![3]) }.encode();
+        assert!(Msg::decode(&good[..good.len() - 2]).is_err()); // truncated
+    }
+
+    #[test]
+    fn wire_bytes_counts_tensor_payload() {
+        let m = Msg::Exchange { layer: 0, from: 0, data: t(vec![2, 3]) };
+        assert_eq!(m.wire_bytes(), 24);
+        assert_eq!(Msg::Shutdown.wire_bytes(), 0);
+        let j = Msg::Job { request: 1, x_p: t(vec![2]),
+                           ctx: vec![t(vec![3])] };
+        assert_eq!(j.wire_bytes(), 20);
+    }
+}

@@ -1,0 +1,13 @@
+//! Network substrate: wire messages, in-process mesh transport, TCP
+//! multi-process transport, the analytical link model, the virtual-clock
+//! simulator, and byte accounting.
+pub mod inproc;
+pub mod message;
+pub mod model;
+pub mod sim;
+pub mod stats;
+pub mod tcp;
+
+pub use model::LinkModel;
+pub use sim::SimClock;
+pub use stats::NetStats;

@@ -1,0 +1,74 @@
+//! Analytical link model: the bandwidth/latency network the paper's Fig. 5
+//! sweeps (50–1000 Mbps edge links), plus unicast/broadcast accounting.
+
+/// A symmetric full-mesh edge network.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LinkModel {
+    pub bandwidth_mbps: f64,
+    pub latency_ms: f64,
+    /// Unicast (paper's comparison assumption) or broadcast exchange.
+    pub broadcast: bool,
+    /// Shared wireless medium: all transmissions serialize globally
+    /// (edge deployments on one AP); false = independent full-duplex
+    /// links.
+    pub shared_medium: bool,
+}
+
+impl LinkModel {
+    pub fn new(bandwidth_mbps: f64, latency_ms: f64) -> Self {
+        LinkModel { bandwidth_mbps, latency_ms, broadcast: false,
+                    shared_medium: false }
+    }
+
+    /// Seconds to push `bytes` over one link.
+    pub fn transfer_secs(&self, bytes: usize) -> f64 {
+        self.latency_ms / 1e3
+            + (bytes as f64 * 8.0) / (self.bandwidth_mbps * 1e6)
+    }
+
+    /// Seconds for one device to deliver its payload to `peers` receivers.
+    /// Unicast serializes on the sender's uplink; broadcast sends once.
+    pub fn exchange_secs(&self, bytes_per_peer: usize, peers: usize) -> f64 {
+        if peers == 0 {
+            return 0.0;
+        }
+        if self.broadcast {
+            self.transfer_secs(bytes_per_peer)
+        } else {
+            self.latency_ms / 1e3
+                + peers as f64 * (bytes_per_peer as f64 * 8.0)
+                    / (self.bandwidth_mbps * 1e6)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transfer_time_scales_with_bytes_and_bandwidth() {
+        let m = LinkModel::new(100.0, 0.0);
+        // 100 Mbps = 12.5 MB/s -> 1.25 MB takes 0.1 s
+        assert!((m.transfer_secs(1_250_000) - 0.1).abs() < 1e-9);
+        let fast = LinkModel::new(1000.0, 0.0);
+        assert!(fast.transfer_secs(1_250_000) < m.transfer_secs(1_250_000));
+    }
+
+    #[test]
+    fn latency_floor() {
+        let m = LinkModel::new(1000.0, 5.0);
+        assert!(m.transfer_secs(0) >= 0.005);
+    }
+
+    #[test]
+    fn unicast_serializes_broadcast_does_not() {
+        let mut m = LinkModel::new(100.0, 1.0);
+        let uni = m.exchange_secs(1_250_000, 2);
+        m.broadcast = true;
+        let bc = m.exchange_secs(1_250_000, 2);
+        assert!((uni - (0.001 + 0.2)).abs() < 1e-9);
+        assert!((bc - (0.001 + 0.1)).abs() < 1e-9);
+        assert_eq!(m.exchange_secs(123, 0), 0.0);
+    }
+}

@@ -1,0 +1,187 @@
+//! Virtual-clock network simulation.
+//!
+//! The deterministic executor (`coordinator::pipeline`) runs every device's
+//! compute on one thread (this testbed has a single core — real threads
+//! would only add scheduler noise) and advances per-device virtual clocks:
+//! compute time from measured PJRT wall time, transfer time from the
+//! analytical `LinkModel`. The paper's Fig. 5 latency sweep is exactly this
+//! model evaluated at different bandwidths.
+
+use super::model::LinkModel;
+use super::stats::NetStats;
+use std::sync::Arc;
+
+/// Per-device virtual clocks plus byte accounting.
+#[derive(Debug)]
+pub struct SimClock {
+    t: Vec<f64>,
+    pub link: LinkModel,
+    pub stats: Arc<NetStats>,
+}
+
+impl SimClock {
+    pub fn new(devices: usize, link: LinkModel) -> SimClock {
+        SimClock { t: vec![0.0; devices], link,
+                   stats: NetStats::new(devices) }
+    }
+
+    pub fn devices(&self) -> usize {
+        self.t.len()
+    }
+
+    /// Device `d` spends `secs` computing.
+    pub fn compute(&mut self, d: usize, secs: f64) {
+        self.t[d] += secs;
+    }
+
+    /// All-to-all exchange: every device sends `bytes[d]` to every other
+    /// device, then waits for all its peers' payloads (the per-layer
+    /// barrier of position-wise partitioning).
+    ///
+    /// Unicast: each sender serializes its (P-1) copies on its uplink.
+    /// Arrival of d's payload everywhere = t_d + exchange time; each
+    /// receiver resumes at the max over its own send completion and all
+    /// arrivals.
+    pub fn exchange_all(&mut self, bytes: &[usize]) {
+        let p = self.t.len();
+        assert_eq!(bytes.len(), p);
+        if p == 1 {
+            return;
+        }
+        let done: Vec<f64> = if self.link.shared_medium {
+            // one AP: transmissions serialize in device order of readiness
+            let mut order: Vec<usize> = (0..p).collect();
+            order.sort_by(|&a, &b| self.t[a].total_cmp(&self.t[b]));
+            let mut medium_free = 0.0f64;
+            let mut done = vec![0.0; p];
+            for &d in &order {
+                let start = self.t[d].max(medium_free);
+                let dur = self.link.exchange_secs(bytes[d], p - 1);
+                done[d] = start + dur;
+                medium_free = done[d];
+            }
+            done
+        } else {
+            (0..p)
+                .map(|d| {
+                    self.t[d] + self.link.exchange_secs(bytes[d], p - 1)
+                })
+                .collect()
+        };
+        for d in 0..p {
+            for peer in 0..p {
+                if peer != d {
+                    self.stats.record(d, peer, bytes[d]);
+                }
+            }
+        }
+        for d in 0..p {
+            let arrivals = (0..p).filter(|&j| j != d).map(|j| done[j]);
+            self.t[d] = arrivals.fold(done[d], f64::max);
+        }
+    }
+
+    /// One-way transfer (master -> worker scatter, worker -> master gather).
+    pub fn send(&mut self, from: usize, to: usize, bytes: usize) {
+        // the sender's uplink is busy for the duration (sequential
+        // scatter/gather semantics)
+        self.t[from] += self.link.transfer_secs(bytes);
+        self.stats.record(from, to, bytes);
+        self.t[to] = self.t[to].max(self.t[from]);
+    }
+
+    /// Current virtual time of a device.
+    pub fn now(&self, d: usize) -> f64 {
+        self.t[d]
+    }
+
+    /// Virtual makespan: when the last device finishes.
+    pub fn makespan(&self) -> f64 {
+        self.t.iter().cloned().fold(0.0, f64::max)
+    }
+
+    pub fn reset(&mut self) {
+        self.t.iter_mut().for_each(|t| *t = 0.0);
+        self.stats.reset();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn clock(p: usize, mbps: f64) -> SimClock {
+        SimClock::new(p, LinkModel::new(mbps, 0.0))
+    }
+
+    #[test]
+    fn compute_advances_one_device() {
+        let mut c = clock(2, 100.0);
+        c.compute(0, 0.5);
+        assert_eq!(c.now(0), 0.5);
+        assert_eq!(c.now(1), 0.0);
+        assert_eq!(c.makespan(), 0.5);
+    }
+
+    #[test]
+    fn exchange_synchronizes_to_slowest() {
+        let mut c = clock(2, 100.0); // 12.5 MB/s
+        c.compute(0, 1.0);
+        // each sends 1.25 MB to 1 peer => 0.1 s transfer
+        c.exchange_all(&[1_250_000, 1_250_000]);
+        // device 1 waits for device 0's payload: 1.0 + 0.1
+        assert!((c.now(1) - 1.1).abs() < 1e-9);
+        assert!((c.now(0) - 1.1).abs() < 1e-9);
+        assert_eq!(c.stats.sent(0), 1_250_000);
+    }
+
+    #[test]
+    fn unicast_scales_with_peer_count() {
+        let mut c2 = clock(3, 100.0);
+        c2.exchange_all(&[1_250_000; 3]);
+        // two copies per sender => 0.2 s
+        assert!((c2.makespan() - 0.2).abs() < 1e-9);
+        let mut cb = SimClock::new(3, LinkModel {
+            bandwidth_mbps: 100.0, latency_ms: 0.0, broadcast: true,
+            shared_medium: false });
+        cb.exchange_all(&[1_250_000; 3]);
+        assert!((cb.makespan() - 0.1).abs() < 1e-9);
+    }
+
+    #[test]
+    fn scatter_gather() {
+        let mut c = clock(3, 1000.0);
+        c.send(0, 1, 125_000_000); // 1 Gbps = 125 MB/s -> 1 s
+        assert!((c.now(1) - 1.0).abs() < 1e-9);
+        assert!((c.now(0) - 1.0).abs() < 1e-9); // sender uplink was busy
+        assert_eq!(c.now(2), 0.0);
+        c.reset();
+        assert_eq!(c.makespan(), 0.0);
+        assert_eq!(c.stats.total_bytes(), 0);
+    }
+
+    #[test]
+    fn single_device_exchange_is_noop() {
+        let mut c = clock(1, 10.0);
+        c.compute(0, 0.3);
+        c.exchange_all(&[999]);
+        assert_eq!(c.makespan(), 0.3);
+    }
+}
+
+#[cfg(test)]
+mod shared_medium_tests {
+    use super::*;
+
+    #[test]
+    fn shared_medium_serializes_senders() {
+        let link = LinkModel { bandwidth_mbps: 100.0, latency_ms: 0.0,
+                               broadcast: false, shared_medium: true };
+        let mut c = SimClock::new(2, link);
+        c.exchange_all(&[1_250_000, 1_250_000]); // 0.1 s each, serialized
+        assert!((c.makespan() - 0.2).abs() < 1e-9, "{}", c.makespan());
+        let mut free = SimClock::new(2, LinkModel::new(100.0, 0.0));
+        free.exchange_all(&[1_250_000, 1_250_000]);
+        assert!((free.makespan() - 0.1).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,85 @@
+//! Per-device communication accounting: the measured counterpart of the
+//! paper's PDPLC / communication-speed-up columns.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+/// Thread-safe byte/message counters, one slot per device.
+#[derive(Debug)]
+pub struct NetStats {
+    sent_bytes: Vec<AtomicUsize>,
+    recv_bytes: Vec<AtomicUsize>,
+    messages: Vec<AtomicUsize>,
+}
+
+impl NetStats {
+    pub fn new(devices: usize) -> Arc<NetStats> {
+        Arc::new(NetStats {
+            sent_bytes: (0..devices).map(|_| AtomicUsize::new(0)).collect(),
+            recv_bytes: (0..devices).map(|_| AtomicUsize::new(0)).collect(),
+            messages: (0..devices).map(|_| AtomicUsize::new(0)).collect(),
+        })
+    }
+
+    pub fn record(&self, from: usize, to: usize, bytes: usize) {
+        self.sent_bytes[from].fetch_add(bytes, Ordering::Relaxed);
+        self.recv_bytes[to].fetch_add(bytes, Ordering::Relaxed);
+        self.messages[from].fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn sent(&self, device: usize) -> usize {
+        self.sent_bytes[device].load(Ordering::Relaxed)
+    }
+
+    pub fn received(&self, device: usize) -> usize {
+        self.recv_bytes[device].load(Ordering::Relaxed)
+    }
+
+    pub fn messages_from(&self, device: usize) -> usize {
+        self.messages[device].load(Ordering::Relaxed)
+    }
+
+    pub fn total_bytes(&self) -> usize {
+        self.sent_bytes.iter().map(|a| a.load(Ordering::Relaxed)).sum()
+    }
+
+    /// Max over devices of bytes sent — the per-device communication the
+    /// paper's speed-up columns are about.
+    pub fn max_device_sent(&self) -> usize {
+        self.sent_bytes
+            .iter()
+            .map(|a| a.load(Ordering::Relaxed))
+            .max()
+            .unwrap_or(0)
+    }
+
+    pub fn reset(&self) {
+        for a in self.sent_bytes.iter()
+            .chain(self.recv_bytes.iter())
+            .chain(self.messages.iter())
+        {
+            a.store(0, Ordering::Relaxed);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_per_device() {
+        let s = NetStats::new(3);
+        s.record(0, 1, 100);
+        s.record(0, 2, 100);
+        s.record(1, 0, 7);
+        assert_eq!(s.sent(0), 200);
+        assert_eq!(s.received(1), 100);
+        assert_eq!(s.received(0), 7);
+        assert_eq!(s.messages_from(0), 2);
+        assert_eq!(s.total_bytes(), 207);
+        assert_eq!(s.max_device_sent(), 200);
+        s.reset();
+        assert_eq!(s.total_bytes(), 0);
+    }
+}

@@ -1,0 +1,200 @@
+//! PJRT execution engine: load AOT HLO text, compile once, execute many.
+//!
+//! One `Engine` per coordinator thread (the xla crate's handles are not
+//! `Send`); each worker owns its engine, compiled-executable cache, and
+//! cached weight literals, so the request path never recompiles and never
+//! re-uploads weights.
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Context, Result};
+use std::sync::Mutex;
+
+/// Process-wide execution lock: several engines (one per worker thread)
+/// share a single physical core on this testbed; serializing `execute`
+/// calls prevents PJRT CPU thread pools from trampling each other (8x
+/// slowdown observed without it). Virtual-clock latency accounting is
+/// unaffected — per-device compute is timed inside the lock.
+static EXEC_LOCK: Mutex<()> = Mutex::new(());
+
+use super::manifest::{ExecSpec, Manifest};
+use super::tensor::{Tensor, TensorData};
+use super::weights::WeightSet;
+
+/// Cumulative engine counters (exposed via `prism info` / benches).
+#[derive(Debug, Default, Clone)]
+pub struct EngineStats {
+    pub compiles: usize,
+    pub compile_ms: f64,
+    pub executions: usize,
+    pub execute_ms: f64,
+    pub bytes_in: usize,
+    pub bytes_out: usize,
+}
+
+pub struct Engine {
+    client: xla::PjRtClient,
+    manifest: Arc<Manifest>,
+    compiled: HashMap<String, xla::PjRtLoadedExecutable>,
+    weight_literals: HashMap<(String, String), xla::Literal>,
+    pub stats: EngineStats,
+}
+
+fn xerr(e: xla::Error) -> anyhow::Error {
+    anyhow!("xla: {e}")
+}
+
+impl Engine {
+    pub fn new(manifest: Arc<Manifest>) -> Result<Engine> {
+        let client = xla::PjRtClient::cpu().map_err(xerr)?;
+        Ok(Engine {
+            client,
+            manifest,
+            compiled: HashMap::new(),
+            weight_literals: HashMap::new(),
+            stats: EngineStats::default(),
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch from cache) one executable by manifest name.
+    pub fn ensure_compiled(&mut self, name: &str) -> Result<()> {
+        if self.compiled.contains_key(name) {
+            return Ok(());
+        }
+        let spec = self.manifest.exec(name)?.clone();
+        let path: PathBuf = self.manifest.root.join(&spec.file);
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(xerr)
+            .with_context(|| format!("loading HLO {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).map_err(xerr)
+            .with_context(|| format!("compiling {name}"))?;
+        self.stats.compiles += 1;
+        self.stats.compile_ms += t0.elapsed().as_secs_f64() * 1e3;
+        self.compiled.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    fn tensor_literal(t: &Tensor) -> Result<xla::Literal> {
+        let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
+        let lit = match &t.data {
+            TensorData::F32(v) => xla::Literal::vec1(v),
+            TensorData::I32(v) => xla::Literal::vec1(v),
+        };
+        lit.reshape(&dims).map_err(xerr)
+    }
+
+    fn literal_tensor(lit: &xla::Literal, shape: &[usize], dtype: &str)
+                      -> Result<Tensor> {
+        match dtype {
+            "f32" => Tensor::from_f32(shape.to_vec(),
+                                      lit.to_vec::<f32>().map_err(xerr)?),
+            "i32" => Tensor::from_i32(shape.to_vec(),
+                                      lit.to_vec::<i32>().map_err(xerr)?),
+            other => bail!("unsupported output dtype {other}"),
+        }
+    }
+
+    fn weight_literal(&mut self, ws: &WeightSet, name: &str)
+                      -> Result<()> {
+        let key = (ws.tag.clone(), name.to_string());
+        if self.weight_literals.contains_key(&key) {
+            return Ok(());
+        }
+        let lit = Self::tensor_literal(ws.get(name)?)?;
+        self.weight_literals.insert(key, lit);
+        Ok(())
+    }
+
+    /// Execute `name` with the given weight set / layer index / data args.
+    ///
+    /// Weight inputs come first (per the manifest's `weight_inputs`, with
+    /// `{layer}` resolved), then `args` in manifest order. Returns the
+    /// decomposed output tuple as host tensors.
+    pub fn run(&mut self, name: &str, ws: &WeightSet, layer: usize,
+               args: &[&Tensor]) -> Result<Vec<Tensor>> {
+        self.ensure_compiled(name)?;
+        let spec: ExecSpec = self.manifest.exec(name)?.clone();
+        self.validate_args(&spec, args)?;
+
+        let resolved: Vec<String> = spec
+            .weight_inputs
+            .iter()
+            .map(|t| WeightSet::resolve(t, layer))
+            .collect();
+        for n in &resolved {
+            self.weight_literal(ws, n)?;
+        }
+        let arg_literals: Vec<xla::Literal> = args
+            .iter()
+            .map(|t| Self::tensor_literal(t))
+            .collect::<Result<_>>()?;
+
+        let mut inputs: Vec<&xla::Literal> = Vec::with_capacity(
+            resolved.len() + args.len());
+        for n in &resolved {
+            inputs.push(&self.weight_literals[&(ws.tag.clone(), n.clone())]);
+        }
+        inputs.extend(arg_literals.iter());
+
+        let exe = &self.compiled[name];
+        let _guard = EXEC_LOCK.lock().unwrap();
+        let t0 = Instant::now();
+        let result = exe.execute::<&xla::Literal>(&inputs).map_err(xerr)
+            .with_context(|| format!("executing {name}"))?;
+        let tuple = result[0][0].to_literal_sync().map_err(xerr)?;
+        self.stats.executions += 1;
+        self.stats.execute_ms += t0.elapsed().as_secs_f64() * 1e3;
+        self.stats.bytes_in += args.iter().map(|t| t.byte_len()).sum::<usize>();
+
+        // aot.py lowers with return_tuple=True: always a tuple, even 1-ary.
+        let parts = tuple.to_tuple().map_err(xerr)?;
+        if parts.len() != spec.outputs.len() {
+            bail!("{name}: {} outputs, manifest says {}", parts.len(),
+                  spec.outputs.len());
+        }
+        let outs = parts
+            .iter()
+            .zip(&spec.outputs)
+            .map(|(lit, o)| Self::literal_tensor(lit, &o.shape, &o.dtype))
+            .collect::<Result<Vec<_>>>()?;
+        self.stats.bytes_out +=
+            outs.iter().map(|t| t.byte_len()).sum::<usize>();
+        Ok(outs)
+    }
+
+    fn validate_args(&self, spec: &ExecSpec, args: &[&Tensor]) -> Result<()> {
+        if args.len() != spec.args.len() {
+            bail!("{}: expected {} args, got {}", spec.name, spec.args.len(),
+                  args.len());
+        }
+        for (a, s) in args.iter().zip(&spec.args) {
+            if a.shape != s.shape {
+                bail!("{}: arg '{}' shape {:?} != manifest {:?}", spec.name,
+                      s.name, a.shape, s.shape);
+            }
+            if a.dtype() != s.dtype {
+                bail!("{}: arg '{}' dtype {} != manifest {}", spec.name,
+                      s.name, a.dtype(), s.dtype);
+            }
+        }
+        Ok(())
+    }
+
+    /// Number of executables compiled so far.
+    pub fn compiled_count(&self) -> usize {
+        self.compiled.len()
+    }
+}

@@ -1,0 +1,335 @@
+//! The python → rust contract: parse `artifacts/manifest.json`.
+//!
+//! The manifest is produced by `python/compile/aot.py` and enumerates model
+//! configurations, weight-blob layouts, the AOT executable inventory with
+//! all input/output shapes, and the experiment variants (CR / PDPLC
+//! bookkeeping for the paper tables).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+#[derive(Debug, Clone)]
+pub struct ModelCfg {
+    pub name: String,
+    pub kind: String,
+    pub n: usize,
+    pub d: usize,
+    pub heads: usize,
+    pub layers: usize,
+    pub ffn: usize,
+    pub vocab: usize,
+    pub img: usize,
+    pub patch: usize,
+    pub causal: bool,
+}
+
+#[derive(Debug, Clone)]
+pub struct TensorMeta {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset: usize, // in f32 elements
+}
+
+#[derive(Debug, Clone)]
+pub struct WeightSetMeta {
+    pub file: String,
+    pub elements: usize,
+    pub tensors: Vec<TensorMeta>,
+}
+
+#[derive(Debug, Clone)]
+pub struct ArgSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+#[derive(Debug, Clone)]
+pub struct OutSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+/// One AOT executable (block / embed / head variant).
+#[derive(Debug, Clone)]
+pub struct ExecSpec {
+    pub name: String,
+    pub file: String,
+    pub kind: String,   // "block" | "embed" | "head"
+    pub model: String,
+    pub mode: String,   // "single" | "voltage" | "prism" | "" (embed/head)
+    pub p: usize,
+    pub l: usize,
+    pub part: usize,
+    pub batch: usize,
+    pub flavor: String, // "xla" | "pallas"
+    pub task: Option<String>,
+    /// Weight tensor names; block entries contain a `{layer}` placeholder.
+    pub weight_inputs: Vec<String>,
+    pub args: Vec<ArgSpec>,
+    pub outputs: Vec<OutSpec>,
+}
+
+/// One experiment variant row (Table IV/V/VI bookkeeping).
+#[derive(Debug, Clone)]
+pub struct VariantRec {
+    pub key: String,
+    pub model: String,
+    pub mode: String,
+    pub p: usize,
+    pub l: usize,
+    pub cr: Option<f64>,
+    pub pdplc: Option<usize>,
+}
+
+#[derive(Debug)]
+pub struct Manifest {
+    pub root: PathBuf,
+    pub models: BTreeMap<String, ModelCfg>,
+    pub weights: BTreeMap<String, WeightSetMeta>,
+    pub executables: BTreeMap<String, ExecSpec>,
+    pub variants: Vec<VariantRec>,
+    pub eval_batch: usize,
+    pub latency_batch: usize,
+}
+
+impl Manifest {
+    pub fn load(artifacts_root: &Path) -> Result<Manifest> {
+        let path = artifacts_root.join("manifest.json");
+        let text = std::fs::read_to_string(&path).with_context(|| {
+            format!("reading {} (run `make artifacts` first)", path.display())
+        })?;
+        let j = Json::parse(&text).context("parsing manifest.json")?;
+        Self::from_json(artifacts_root.to_path_buf(), &j)
+    }
+
+    pub fn from_json(root: PathBuf, j: &Json) -> Result<Manifest> {
+        let mut models = BTreeMap::new();
+        for (name, m) in j.req("models")?.as_obj().context("models")? {
+            models.insert(name.clone(), ModelCfg {
+                name: name.clone(),
+                kind: m.req("kind")?.as_str().unwrap_or("").into(),
+                n: field(m, "n")?,
+                d: field(m, "d")?,
+                heads: field(m, "heads")?,
+                layers: field(m, "layers")?,
+                ffn: field(m, "ffn")?,
+                vocab: field(m, "vocab")?,
+                img: field(m, "img")?,
+                patch: field(m, "patch")?,
+                causal: m.req("causal")?.as_bool().unwrap_or(false),
+            });
+        }
+        let mut weights = BTreeMap::new();
+        for (tag, w) in j.req("weights")?.as_obj().context("weights")? {
+            let tensors = w
+                .req("tensors")?
+                .as_arr()
+                .context("tensors")?
+                .iter()
+                .map(|t| {
+                    Ok(TensorMeta {
+                        name: t.req("name")?.as_str().unwrap_or("").into(),
+                        shape: t.req("shape")?.usize_array()?,
+                        offset: field(t, "offset")?,
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?;
+            weights.insert(tag.clone(), WeightSetMeta {
+                file: w.req("file")?.as_str().unwrap_or("").into(),
+                elements: field(w, "elements")?,
+                tensors,
+            });
+        }
+        let mut executables = BTreeMap::new();
+        for e in j.req("executables")?.as_arr().context("executables")? {
+            let spec = ExecSpec {
+                name: e.req("name")?.as_str().unwrap_or("").into(),
+                file: e.req("file")?.as_str().unwrap_or("").into(),
+                kind: e.req("kind")?.as_str().unwrap_or("").into(),
+                model: e.req("model")?.as_str().unwrap_or("").into(),
+                mode: e.req("mode")?.as_str().unwrap_or("").into(),
+                p: field(e, "p")?,
+                l: field(e, "l")?,
+                part: field(e, "part")?,
+                batch: field(e, "batch")?,
+                flavor: e.req("flavor")?.as_str().unwrap_or("").into(),
+                task: e.get("task").and_then(|t| t.as_str()).map(Into::into),
+                weight_inputs: e
+                    .req("weight_inputs")?
+                    .as_arr()
+                    .context("weight_inputs")?
+                    .iter()
+                    .map(|s| s.as_str().unwrap_or("").to_string())
+                    .collect(),
+                args: e
+                    .req("args")?
+                    .as_arr()
+                    .context("args")?
+                    .iter()
+                    .map(|a| {
+                        Ok(ArgSpec {
+                            name: a.req("name")?.as_str().unwrap_or("")
+                                .into(),
+                            shape: a.req("shape")?.usize_array()?,
+                            dtype: a.req("dtype")?.as_str().unwrap_or("")
+                                .into(),
+                        })
+                    })
+                    .collect::<Result<Vec<_>>>()?,
+                outputs: e
+                    .req("outputs")?
+                    .as_arr()
+                    .context("outputs")?
+                    .iter()
+                    .map(|o| {
+                        Ok(OutSpec {
+                            shape: o.req("shape")?.usize_array()?,
+                            dtype: o.req("dtype")?.as_str().unwrap_or("")
+                                .into(),
+                        })
+                    })
+                    .collect::<Result<Vec<_>>>()?,
+            };
+            executables.insert(spec.name.clone(), spec);
+        }
+        let variants = j
+            .req("variants")?
+            .as_arr()
+            .context("variants")?
+            .iter()
+            .map(|v| {
+                Ok(VariantRec {
+                    key: v.req("key")?.as_str().unwrap_or("").into(),
+                    model: v.req("model")?.as_str().unwrap_or("").into(),
+                    mode: v.req("mode")?.as_str().unwrap_or("").into(),
+                    p: field(v, "p")?,
+                    l: field(v, "l")?,
+                    cr: v.get("cr").and_then(|c| c.as_f64()),
+                    pdplc: v.get("pdplc").and_then(|c| c.as_usize()),
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Manifest {
+            root,
+            models,
+            weights,
+            executables,
+            variants,
+            eval_batch: field(j, "eval_batch")?,
+            latency_batch: field(j, "latency_batch")?,
+        })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelCfg> {
+        self.models.get(name).ok_or_else(|| anyhow!("no model '{name}'"))
+    }
+
+    pub fn exec(&self, name: &str) -> Result<&ExecSpec> {
+        self.executables
+            .get(name)
+            .ok_or_else(|| anyhow!("no executable '{name}' in manifest"))
+    }
+
+    /// Naming convention used by aot.py for block executables.
+    pub fn block_name(&self, model: &str, mode: &str, p: usize, l: usize,
+                      part: usize, batch: usize, flavor: &str) -> String {
+        let stem = match mode {
+            "single" => format!("{model}_single"),
+            "voltage" => format!("{model}_voltage_p{p}"),
+            _ => format!("{model}_prism_p{p}l{l}"),
+        };
+        format!("{stem}_part{part}_b{batch}_{flavor}")
+    }
+
+    pub fn embed_name(&self, model: &str, batch: usize) -> String {
+        format!("{model}_embed_b{batch}")
+    }
+
+    pub fn head_name(&self, model: &str, task: &str, batch: usize)
+                     -> String {
+        format!("{model}_head_{task}_b{batch}")
+    }
+
+    pub fn variant(&self, key: &str) -> Result<&VariantRec> {
+        self.variants
+            .iter()
+            .find(|v| v.key == key)
+            .ok_or_else(|| anyhow!("no variant '{key}'"))
+    }
+}
+
+fn field(j: &Json, key: &str) -> Result<usize> {
+    match j.get(key) {
+        Some(v) => v
+            .as_usize()
+            .ok_or_else(|| anyhow!("field '{key}' is not a usize")),
+        None => bail!("missing json field '{key}'"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_manifest_json() -> String {
+        r#"{
+  "format": 1,
+  "models": {"vit": {"name": "vit", "kind": "encoder", "n": 65, "d": 128,
+    "heads": 4, "layers": 4, "ffn": 512, "vocab": 0, "img": 32,
+    "patch": 4, "causal": false}},
+  "weights": {"vit_synth10": {"file": "weights_vit_synth10.bin",
+    "elements": 10,
+    "tensors": [{"name": "embed.cls", "shape": [128], "offset": 0}]}},
+  "executables": [{"name": "vit_single_part0_b16_xla",
+    "file": "vit/vit_single_part0_b16_xla.hlo.txt", "kind": "block",
+    "model": "vit", "mode": "single", "p": 1, "l": 0, "part": 0,
+    "batch": 16, "flavor": "xla",
+    "weight_inputs": ["blocks.{layer}.ln1_g"],
+    "args": [{"name": "x_p", "shape": [16, 65, 128], "dtype": "f32"}],
+    "outputs": [{"shape": [16, 65, 128], "dtype": "f32"}]}],
+  "variants": [{"key": "vit_single", "model": "vit", "mode": "single",
+    "p": 1, "l": 0}],
+  "eval_batch": 16,
+  "latency_batch": 1
+}"#
+        .to_string()
+    }
+
+    #[test]
+    fn parses_tiny_manifest() {
+        let j = Json::parse(&tiny_manifest_json()).unwrap();
+        let m = Manifest::from_json(PathBuf::from("/tmp"), &j).unwrap();
+        assert_eq!(m.model("vit").unwrap().n, 65);
+        assert!(m.model("bert").is_err());
+        let e = m.exec("vit_single_part0_b16_xla").unwrap();
+        assert_eq!(e.args[0].shape, vec![16, 65, 128]);
+        assert_eq!(e.weight_inputs[0], "blocks.{layer}.ln1_g");
+        assert_eq!(m.variant("vit_single").unwrap().mode, "single");
+        assert!(m.variant("nope").is_err());
+    }
+
+    #[test]
+    fn naming_convention() {
+        let j = Json::parse(&tiny_manifest_json()).unwrap();
+        let m = Manifest::from_json(PathBuf::from("/tmp"), &j).unwrap();
+        assert_eq!(m.block_name("vit", "prism", 2, 6, 1, 16, "xla"),
+                   "vit_prism_p2l6_part1_b16_xla");
+        assert_eq!(m.block_name("vit", "single", 1, 0, 0, 16, "pallas"),
+                   "vit_single_part0_b16_pallas");
+        assert_eq!(m.block_name("gpt2", "voltage", 3, 0, 2, 1, "xla"),
+                   "gpt2_voltage_p3_part2_b1_xla");
+        assert_eq!(m.embed_name("vit", 16), "vit_embed_b16");
+        assert_eq!(m.head_name("bert", "sst2p", 16), "bert_head_sst2p_b16");
+    }
+
+    #[test]
+    fn rejects_missing_fields() {
+        let j = Json::parse(r#"{"models": {}}"#).unwrap();
+        assert!(Manifest::from_json(PathBuf::from("/tmp"), &j).is_err());
+    }
+}

@@ -1,0 +1,11 @@
+//! Runtime layer: AOT artifact loading + PJRT execution (the only layer
+//! that touches XLA). Python never runs here — artifacts are prebuilt.
+pub mod engine;
+pub mod manifest;
+pub mod tensor;
+pub mod weights;
+
+pub use engine::{Engine, EngineStats};
+pub use manifest::{ExecSpec, Manifest, ModelCfg, VariantRec};
+pub use tensor::{Tensor, TensorData};
+pub use weights::WeightSet;

@@ -1,0 +1,257 @@
+//! Host-side tensors: the coordinator's currency between PJRT executions,
+//! network transfers, and dataset files.
+
+use anyhow::{bail, Context, Result};
+
+/// Element storage. Everything crossing the AOT boundary is f32 or i32.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TensorData {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+/// A dense host tensor (row-major).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: TensorData,
+}
+
+impl Tensor {
+    pub fn from_f32(shape: Vec<usize>, data: Vec<f32>) -> Result<Self> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            bail!("shape {:?} wants {} elements, got {}", shape, n,
+                  data.len());
+        }
+        Ok(Tensor { shape, data: TensorData::F32(data) })
+    }
+
+    pub fn from_i32(shape: Vec<usize>, data: Vec<i32>) -> Result<Self> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            bail!("shape {:?} wants {} elements, got {}", shape, n,
+                  data.len());
+        }
+        Ok(Tensor { shape, data: TensorData::I32(data) })
+    }
+
+    pub fn zeros_f32(shape: Vec<usize>) -> Self {
+        let n = shape.iter().product();
+        Tensor { shape, data: TensorData::F32(vec![0.0; n]) }
+    }
+
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn byte_len(&self) -> usize {
+        self.elements() * 4
+    }
+
+    pub fn dtype(&self) -> &'static str {
+        match self.data {
+            TensorData::F32(_) => "f32",
+            TensorData::I32(_) => "i32",
+        }
+    }
+
+    pub fn f32s(&self) -> Result<&[f32]> {
+        match &self.data {
+            TensorData::F32(v) => Ok(v),
+            _ => bail!("tensor is not f32"),
+        }
+    }
+
+    pub fn i32s(&self) -> Result<&[i32]> {
+        match &self.data {
+            TensorData::I32(v) => Ok(v),
+            _ => bail!("tensor is not i32"),
+        }
+    }
+
+    /// Reinterpret with a new shape (same element count).
+    pub fn reshaped(mut self, shape: Vec<usize>) -> Result<Self> {
+        let n: usize = shape.iter().product();
+        if n != self.elements() {
+            bail!("reshape {:?} -> {:?} changes element count", self.shape,
+                  shape);
+        }
+        self.shape = shape;
+        Ok(self)
+    }
+
+    /// Slice along axis 0: rows `[lo, hi)`.
+    pub fn slice0(&self, lo: usize, hi: usize) -> Result<Tensor> {
+        if self.shape.is_empty() || hi > self.shape[0] || lo > hi {
+            bail!("slice0 [{lo},{hi}) out of bounds for {:?}", self.shape);
+        }
+        let row: usize = self.shape[1..].iter().product();
+        let mut shape = self.shape.clone();
+        shape[0] = hi - lo;
+        Ok(match &self.data {
+            TensorData::F32(v) => Tensor {
+                shape,
+                data: TensorData::F32(v[lo * row..hi * row].to_vec()),
+            },
+            TensorData::I32(v) => Tensor {
+                shape,
+                data: TensorData::I32(v[lo * row..hi * row].to_vec()),
+            },
+        })
+    }
+
+    /// Slice along axis 1 (e.g. tokens of a (B, N, D) batch).
+    pub fn slice1(&self, lo: usize, hi: usize) -> Result<Tensor> {
+        if self.shape.len() < 2 || hi > self.shape[1] || lo > hi {
+            bail!("slice1 [{lo},{hi}) out of bounds for {:?}", self.shape);
+        }
+        let b = self.shape[0];
+        let n = self.shape[1];
+        let inner: usize = self.shape[2..].iter().product();
+        let mut shape = self.shape.clone();
+        shape[1] = hi - lo;
+        let src = self.f32s()?;
+        let mut out = Vec::with_capacity(b * (hi - lo) * inner);
+        for i in 0..b {
+            let base = i * n * inner;
+            out.extend_from_slice(&src[base + lo * inner..base + hi * inner]);
+        }
+        Tensor::from_f32(shape, out)
+    }
+
+    /// Concatenate along axis 1. All tensors must be f32 (B, *, inner).
+    pub fn concat1(parts: &[&Tensor]) -> Result<Tensor> {
+        let first = parts.first().context("concat1 of nothing")?;
+        let b = first.shape[0];
+        let inner: usize = first.shape[2..].iter().product();
+        let total: usize = parts.iter().map(|t| t.shape[1]).sum();
+        let mut out = Vec::with_capacity(b * total * inner);
+        for i in 0..b {
+            for t in parts {
+                let n = t.shape[1];
+                let src = t.f32s()?;
+                out.extend_from_slice(&src[i * n * inner..(i + 1) * n * inner]);
+            }
+        }
+        let mut shape = first.shape.clone();
+        shape[1] = total;
+        Tensor::from_f32(shape, out)
+    }
+
+    /// Max |a - b| over all elements (parity tests).
+    pub fn max_abs_diff(&self, other: &Tensor) -> Result<f32> {
+        let (a, b) = (self.f32s()?, other.f32s()?);
+        if a.len() != b.len() {
+            bail!("size mismatch {} vs {}", a.len(), b.len());
+        }
+        Ok(a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f32::max))
+    }
+
+    // ----- flat binary I/O (little-endian, matching numpy .tofile) ----
+
+    pub fn read_f32_file(path: &std::path::Path, shape: Vec<usize>)
+                         -> Result<Tensor> {
+        let bytes = std::fs::read(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let data = bytes_to_f32(&bytes);
+        Tensor::from_f32(shape, data)
+    }
+
+    pub fn read_i32_file(path: &std::path::Path, shape: Vec<usize>)
+                         -> Result<Tensor> {
+        let bytes = std::fs::read(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let data: Vec<i32> = bytes
+            .chunks_exact(4)
+            .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        Tensor::from_i32(shape, data)
+    }
+
+    pub fn write_file(&self, path: &std::path::Path) -> Result<()> {
+        let mut bytes = Vec::with_capacity(self.byte_len());
+        match &self.data {
+            TensorData::F32(v) => {
+                for x in v {
+                    bytes.extend_from_slice(&x.to_le_bytes());
+                }
+            }
+            TensorData::I32(v) => {
+                for x in v {
+                    bytes.extend_from_slice(&x.to_le_bytes());
+                }
+            }
+        }
+        std::fs::write(path, bytes)
+            .with_context(|| format!("writing {}", path.display()))
+    }
+}
+
+pub fn bytes_to_f32(bytes: &[u8]) -> Vec<f32> {
+    bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_checks() {
+        assert!(Tensor::from_f32(vec![2, 3], vec![0.0; 6]).is_ok());
+        assert!(Tensor::from_f32(vec![2, 3], vec![0.0; 5]).is_err());
+    }
+
+    #[test]
+    fn slice0_rows() {
+        let t = Tensor::from_f32(vec![3, 2],
+                                 vec![0., 1., 2., 3., 4., 5.]).unwrap();
+        let s = t.slice0(1, 3).unwrap();
+        assert_eq!(s.shape, vec![2, 2]);
+        assert_eq!(s.f32s().unwrap(), &[2., 3., 4., 5.]);
+        assert!(t.slice0(2, 4).is_err());
+    }
+
+    #[test]
+    fn slice1_and_concat1_roundtrip() {
+        // (2, 4, 1) batch
+        let t = Tensor::from_f32(vec![2, 4, 1],
+                                 (0..8).map(|x| x as f32).collect()).unwrap();
+        let a = t.slice1(0, 2).unwrap();
+        let b = t.slice1(2, 4).unwrap();
+        assert_eq!(a.f32s().unwrap(), &[0., 1., 4., 5.]);
+        let back = Tensor::concat1(&[&a, &b]).unwrap();
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn concat1_uneven() {
+        let a = Tensor::from_f32(vec![1, 1, 2], vec![1., 2.]).unwrap();
+        let b = Tensor::from_f32(vec![1, 2, 2], vec![3., 4., 5., 6.]).unwrap();
+        let c = Tensor::concat1(&[&a, &b]).unwrap();
+        assert_eq!(c.shape, vec![1, 3, 2]);
+        assert_eq!(c.f32s().unwrap(), &[1., 2., 3., 4., 5., 6.]);
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let dir = std::env::temp_dir().join("prism_tensor_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("t.bin");
+        let t = Tensor::from_f32(vec![2, 2], vec![1.5, -2.0, 0.0, 7.25])
+            .unwrap();
+        t.write_file(&p).unwrap();
+        let u = Tensor::read_f32_file(&p, vec![2, 2]).unwrap();
+        assert_eq!(t, u);
+    }
+
+    #[test]
+    fn max_abs_diff() {
+        let a = Tensor::from_f32(vec![2], vec![1.0, 2.0]).unwrap();
+        let b = Tensor::from_f32(vec![2], vec![1.5, 2.0]).unwrap();
+        assert_eq!(a.max_abs_diff(&b).unwrap(), 0.5);
+    }
+}

@@ -1,0 +1,133 @@
+//! Weight blobs: load `artifacts/weights_<tag>.bin` and serve tensors by
+//! name (`embed.cls`, `blocks.2.wq`, `head_synth10.w`, ...).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::{anyhow, Context, Result};
+
+use super::manifest::{Manifest, WeightSetMeta};
+use super::tensor::{bytes_to_f32, Tensor};
+
+/// An immutable, shareable weight set.
+#[derive(Debug, Clone)]
+pub struct WeightSet {
+    pub tag: String,
+    tensors: Arc<BTreeMap<String, Tensor>>,
+}
+
+impl WeightSet {
+    pub fn load(manifest: &Manifest, tag: &str) -> Result<WeightSet> {
+        let meta = manifest
+            .weights
+            .get(tag)
+            .ok_or_else(|| anyhow!("no weight set '{tag}' in manifest"))?;
+        Self::load_meta(&manifest.root, tag, meta)
+    }
+
+    pub fn load_meta(root: &Path, tag: &str, meta: &WeightSetMeta)
+                     -> Result<WeightSet> {
+        let path = root.join(&meta.file);
+        let bytes = std::fs::read(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let all = bytes_to_f32(&bytes);
+        if all.len() != meta.elements {
+            anyhow::bail!("weight blob '{tag}': {} elements on disk, \
+                           manifest says {}", all.len(), meta.elements);
+        }
+        let mut tensors = BTreeMap::new();
+        for t in &meta.tensors {
+            let n: usize = t.shape.iter().product();
+            if t.offset + n > all.len() {
+                anyhow::bail!("tensor {} overruns blob", t.name);
+            }
+            tensors.insert(
+                t.name.clone(),
+                Tensor::from_f32(t.shape.clone(),
+                                 all[t.offset..t.offset + n].to_vec())?,
+            );
+        }
+        Ok(WeightSet { tag: tag.to_string(), tensors: Arc::new(tensors) })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Tensor> {
+        self.tensors
+            .get(name)
+            .ok_or_else(|| anyhow!("weight set '{}' has no tensor '{name}'",
+                                   self.tag))
+    }
+
+    pub fn names(&self) -> impl Iterator<Item = &String> {
+        self.tensors.keys()
+    }
+
+    pub fn len(&self) -> usize {
+        self.tensors.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tensors.is_empty()
+    }
+
+    /// Resolve a manifest weight-input template for a concrete layer:
+    /// `blocks.{layer}.wq` + 2 -> `blocks.2.wq`.
+    pub fn resolve(template: &str, layer: usize) -> String {
+        template.replace("{layer}", &layer.to_string())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::TensorMeta;
+
+    fn fake_set(dir: &Path) -> WeightSetMeta {
+        let data: Vec<f32> = (0..10).map(|i| i as f32).collect();
+        let mut bytes = Vec::new();
+        for x in &data {
+            bytes.extend_from_slice(&x.to_le_bytes());
+        }
+        std::fs::write(dir.join("weights_t.bin"), bytes).unwrap();
+        WeightSetMeta {
+            file: "weights_t.bin".into(),
+            elements: 10,
+            tensors: vec![
+                TensorMeta { name: "a".into(), shape: vec![2, 3], offset: 0 },
+                TensorMeta { name: "b.0.c".into(), shape: vec![4], offset: 6 },
+            ],
+        }
+    }
+
+    #[test]
+    fn loads_and_slices() {
+        let dir = std::env::temp_dir().join("prism_weights_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let meta = fake_set(&dir);
+        let ws = WeightSet::load_meta(&dir, "t", &meta).unwrap();
+        assert_eq!(ws.len(), 2);
+        assert_eq!(ws.get("a").unwrap().f32s().unwrap(),
+                   &[0., 1., 2., 3., 4., 5.]);
+        assert_eq!(ws.get("b.0.c").unwrap().f32s().unwrap(),
+                   &[6., 7., 8., 9.]);
+        assert!(ws.get("zzz").is_err());
+    }
+
+    #[test]
+    fn detects_overrun_and_bad_count() {
+        let dir = std::env::temp_dir().join("prism_weights_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut meta = fake_set(&dir);
+        meta.tensors[1].offset = 8; // 8 + 4 > 10
+        assert!(WeightSet::load_meta(&dir, "t", &meta).is_err());
+        let mut meta2 = fake_set(&dir);
+        meta2.elements = 11;
+        assert!(WeightSet::load_meta(&dir, "t", &meta2).is_err());
+    }
+
+    #[test]
+    fn template_resolution() {
+        assert_eq!(WeightSet::resolve("blocks.{layer}.wq", 3), "blocks.3.wq");
+        assert_eq!(WeightSet::resolve("embed.cls", 7), "embed.cls");
+    }
+}

@@ -1,0 +1,441 @@
+//! Threaded serving runtime: request router + dynamic batcher + the
+//! master/worker protocol of Fig. 1 over real threads and channels.
+//!
+//! Topology: one master thread (embed, partition, initial Segment Means,
+//! head, response routing), P worker threads (one per edge device, each
+//! owning its own PJRT engine and compiled block executables), a full
+//! mpsc mesh between workers for the per-layer Segment-Means exchange,
+//! and a batcher thread that groups single-sample requests up to the AOT
+//! batch size with a flush timeout.
+//!
+//! An optional `LinkModel` paces sends to emulate an edge network in wall
+//! time; the deterministic virtual-clock path (`RunTrace::latency_secs`)
+//! is what the benches use.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use crate::cli::Args;
+use crate::coordinator::plan::plans;
+use crate::coordinator::runner::bias_for;
+use crate::coordinator::segmeans::segment_means;
+use crate::coordinator::Mode;
+use crate::data::{Dataset, DatasetKind};
+use crate::metrics::Histogram;
+use crate::net::inproc::{mesh, Endpoint};
+use crate::net::message::Msg;
+use crate::net::LinkModel;
+use crate::runtime::{Engine, Manifest, Tensor, TensorData, WeightSet};
+use crate::util::rng::Rng;
+
+/// One inference request: a single sample (image row / token row).
+pub struct Request {
+    pub id: u64,
+    pub raw: Tensor, // shape (1, ...)
+    pub enqueued: Instant,
+    pub respond: Sender<Response>,
+}
+
+pub struct Response {
+    pub id: u64,
+    pub logits: Tensor, // shape (classes,) or (N, vocab)
+    pub latency: Duration,
+}
+
+/// Serving configuration fixed at startup.
+#[derive(Clone)]
+pub struct ServeConfig {
+    pub model: String,
+    pub task: String,
+    pub weights: String,
+    pub mode: Mode,
+    pub flavor: String,
+    pub flush_after: Duration,
+    pub pace: Option<LinkModel>,
+}
+
+/// Handle to a running server.
+pub struct Server {
+    pub requests: Sender<Request>,
+    handles: Vec<std::thread::JoinHandle<Result<()>>>,
+}
+
+impl Server {
+    /// Spawn batcher + master + P workers.
+    pub fn start(manifest: Arc<Manifest>, cfg: ServeConfig)
+                 -> Result<Server> {
+        let model = manifest.model(&cfg.model)?.clone();
+        let p = cfg.mode.p();
+        let batch = manifest.eval_batch;
+        let mut endpoints = mesh(p, cfg.pace);
+        let master_ep = endpoints.pop().unwrap(); // id == p
+
+        // request intake -> batcher -> master
+        let (req_tx, req_rx) = channel::<Request>();
+        let (batch_tx, batch_rx) = channel::<Vec<Request>>();
+        let flush = cfg.flush_after;
+        let batcher = std::thread::Builder::new()
+            .name("prism-batcher".into())
+            .spawn(move || batcher_loop(req_rx, batch_tx, batch, flush))?;
+
+        let mut handles = vec![batcher];
+        // workers own their engines; spawn before the master.
+        for (wid, ep) in endpoints.into_iter().enumerate() {
+            let manifest = manifest.clone();
+            let cfg = cfg.clone();
+            let h = std::thread::Builder::new()
+                .name(format!("prism-worker-{wid}"))
+                .spawn(move || worker_loop(manifest, cfg, ep))?;
+            handles.push(h);
+        }
+        let manifest2 = manifest.clone();
+        let cfg2 = cfg.clone();
+        let master = std::thread::Builder::new()
+            .name("prism-master".into())
+            .spawn(move || {
+                master_loop(manifest2, cfg2, model.layers, batch_rx,
+                            master_ep)
+            })?;
+        handles.push(master);
+        Ok(Server { requests: req_tx, handles })
+    }
+
+    /// Drop the intake and join all threads.
+    pub fn shutdown(self) -> Result<()> {
+        drop(self.requests);
+        for h in self.handles {
+            match h.join() {
+                Ok(r) => r?,
+                Err(_) => bail!("server thread panicked"),
+            }
+        }
+        Ok(())
+    }
+}
+
+fn batcher_loop(rx: Receiver<Request>, tx: Sender<Vec<Request>>,
+                batch: usize, flush: Duration) -> Result<()> {
+    let mut pending: Vec<Request> = Vec::new();
+    loop {
+        let timeout = if pending.is_empty() {
+            Duration::from_secs(3600)
+        } else {
+            flush
+        };
+        match rx.recv_timeout(timeout) {
+            Ok(r) => {
+                pending.push(r);
+                if pending.len() >= batch
+                    && tx.send(std::mem::take(&mut pending)).is_err()
+                {
+                    return Ok(());
+                }
+            }
+            Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {
+                if !pending.is_empty()
+                    && tx.send(std::mem::take(&mut pending)).is_err()
+                {
+                    return Ok(());
+                }
+            }
+            Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => {
+                if !pending.is_empty() {
+                    let _ = tx.send(std::mem::take(&mut pending));
+                }
+                return Ok(()); // intake closed -> drain and stop
+            }
+        }
+    }
+}
+
+fn stack_rows(rows: &[&Tensor], batch: usize) -> Result<Tensor> {
+    let first = rows.first().context("empty batch")?;
+    let mut shape = first.shape.clone();
+    shape[0] = batch;
+    let row_elems: usize = first.shape[1..].iter().product();
+    match &first.data {
+        TensorData::F32(_) => {
+            let mut out = Vec::with_capacity(batch * row_elems);
+            for r in rows {
+                out.extend_from_slice(r.f32s()?);
+            }
+            let last = rows.last().unwrap().f32s()?;
+            for _ in rows.len()..batch {
+                out.extend_from_slice(last);
+            }
+            Tensor::from_f32(shape, out)
+        }
+        TensorData::I32(_) => {
+            let mut out = Vec::with_capacity(batch * row_elems);
+            for r in rows {
+                out.extend_from_slice(r.i32s()?);
+            }
+            let last = rows.last().unwrap().i32s()?;
+            for _ in rows.len()..batch {
+                out.extend_from_slice(last);
+            }
+            Tensor::from_i32(shape, out)
+        }
+    }
+}
+
+fn master_loop(manifest: Arc<Manifest>, cfg: ServeConfig, layers: usize,
+               batches: Receiver<Vec<Request>>, ep: Endpoint)
+               -> Result<()> {
+    let model = manifest.model(&cfg.model)?.clone();
+    let p = cfg.mode.p();
+    let batch = manifest.eval_batch;
+    let mut engine = Engine::new(manifest.clone())?;
+    let ws = WeightSet::load(&manifest, &cfg.weights)?;
+    let embed_name = manifest.embed_name(&cfg.model, batch);
+    let head_name = manifest.head_name(&cfg.model, &cfg.task, batch);
+    let pls = plans(model.n, p, cfg.mode.l(), model.causal)?;
+
+    let mut job_id = 0u64;
+    while let Ok(reqs) = batches.recv() {
+        let rows: Vec<&Tensor> = reqs.iter().map(|r| &r.raw).collect();
+        let raw = stack_rows(&rows, batch)?;
+        let mut x = engine.run(&embed_name, &ws, 0, &[&raw])?.remove(0);
+
+        if p > 1 {
+            // scatter: local partition + initial ctx (Fig. 1).
+            let parts: Vec<Tensor> = pls
+                .iter()
+                .map(|pl| x.slice1(pl.start(), pl.start() + pl.n_p()))
+                .collect::<Result<_>>()?;
+            let ctxs: Vec<Vec<Tensor>> = pls
+                .iter()
+                .map(|pl| -> Result<Vec<Tensor>> {
+                    pl.peers()
+                        .into_iter()
+                        .map(|j| {
+                            if cfg.mode.l() > 0 {
+                                segment_means(&parts[j], cfg.mode.l())
+                            } else {
+                                Ok(parts[j].clone())
+                            }
+                        })
+                        .collect()
+                })
+                .collect::<Result<_>>()?;
+            for (wid, (part, ctx)) in
+                parts.into_iter().zip(ctxs).enumerate()
+            {
+                ep.send(wid, Msg::Job { request: job_id, x_p: part,
+                                        ctx })?;
+            }
+            // gather final partitions (any order).
+            let mut finals: Vec<Option<Tensor>> = vec![None; p];
+            let mut got = 0;
+            while got < p {
+                let env = ep.recv()?;
+                if let Msg::FinalPart { from, data } = env.msg {
+                    if finals[from as usize].replace(data).is_none() {
+                        got += 1;
+                    }
+                } else {
+                    bail!("master expected FinalPart, got {:?}", env.msg);
+                }
+            }
+            let parts: Vec<Tensor> =
+                finals.into_iter().map(|t| t.unwrap()).collect();
+            let refs: Vec<&Tensor> = parts.iter().collect();
+            x = Tensor::concat1(&refs)?;
+        } else {
+            // single-device: master runs the whole stack itself.
+            let name = manifest.block_name(&cfg.model, "single", 1, 0, 0,
+                                           batch, &cfg.flavor);
+            let bias =
+                crate::coordinator::single_plan(model.n, model.causal)
+                    .bias()?;
+            for layer in 0..layers {
+                x = engine.run(&name, &ws, layer, &[&x, &bias])?.remove(0);
+            }
+        }
+        let logits = engine.run(&head_name, &ws, 0, &[&x])?.remove(0);
+        // route responses: row i of the batch -> request i.
+        let per_row: usize = logits.shape[1..].iter().product();
+        let lf = logits.f32s()?;
+        for (i, req) in reqs.into_iter().enumerate() {
+            let row = lf[i * per_row..(i + 1) * per_row].to_vec();
+            let shape: Vec<usize> = logits.shape[1..].to_vec();
+            let _ = req.respond.send(Response {
+                id: req.id,
+                logits: Tensor::from_f32(shape, row)?,
+                latency: req.enqueued.elapsed(),
+            });
+        }
+        job_id += 1;
+    }
+    // intake closed: stop workers.
+    for wid in 0..p {
+        if p > 1 {
+            ep.send(wid, Msg::Shutdown)?;
+        }
+    }
+    Ok(())
+}
+
+fn worker_loop(manifest: Arc<Manifest>, cfg: ServeConfig, ep: Endpoint)
+               -> Result<()> {
+    let model = manifest.model(&cfg.model)?.clone();
+    let p = cfg.mode.p();
+    if p <= 1 {
+        return Ok(()); // single-device: master does everything
+    }
+    let wid = ep.id;
+    let batch = manifest.eval_batch;
+    let l = cfg.mode.l();
+    let mode_name = cfg.mode.name();
+    let pl = plans(model.n, p, l, model.causal)?[wid].clone();
+    let duplicated = !matches!(cfg.mode,
+                               Mode::Prism { duplicated: false, .. });
+    let bias = bias_for(&pl, duplicated)?;
+    let exec = manifest.block_name(&cfg.model, mode_name, p, l, wid, batch,
+                                   &cfg.flavor);
+    let mut engine = Engine::new(manifest.clone())?;
+    engine.ensure_compiled(&exec)?;
+    let ws = WeightSet::load(&manifest, &cfg.weights)?;
+
+    loop {
+        let env = ep.recv()?;
+        let (x_p, ctx0) = match env.msg {
+            Msg::Job { x_p, ctx, .. } => (x_p, ctx),
+            Msg::Shutdown => return Ok(()),
+            other => bail!("worker {wid} expected Job, got {other:?}"),
+        };
+        let mut x = x_p;
+        // peer index -> position in ctx vec (global order, self skipped)
+        let peers = pl.peers();
+        let mut peer_ctx: Vec<Tensor> = ctx0;
+        for layer in 0..model.layers {
+            let refs: Vec<&Tensor> = peer_ctx.iter().collect();
+            let ctx = Tensor::concat1(&refs)?;
+            let mut out = engine.run(&exec, &ws, layer, &[&x, &ctx,
+                                                          &bias])?;
+            x = out.remove(0);
+            let share = if mode_name == "prism" {
+                out.remove(0) // Segment Means of the block output
+            } else {
+                x.clone() // Voltage: full partition output
+            };
+            ep.send_peers(p, &Msg::Exchange { layer: layer as u32,
+                                              from: wid as u32,
+                                              data: share })?;
+            if layer + 1 < model.layers {
+                // barrier: collect this layer's share from every peer.
+                let mut got = 0;
+                while got < peers.len() {
+                    let env = ep.recv()?;
+                    match env.msg {
+                        Msg::Exchange { layer: ll, from, data }
+                            if ll as usize == layer =>
+                        {
+                            let slot = peers
+                                .iter()
+                                .position(|&j| j == from as usize)
+                                .context("unknown peer")?;
+                            peer_ctx[slot] = data;
+                            got += 1;
+                        }
+                        other => bail!("worker {wid} unexpected {other:?}"),
+                    }
+                }
+            } else {
+                // last layer: drain peers' final exchange (unused).
+                for _ in 0..peers.len() {
+                    let _ = ep.recv()?;
+                }
+            }
+        }
+        ep.send(p, Msg::FinalPart { from: wid as u32, data: x })?;
+    }
+}
+
+/// `prism serve`: drive the threaded server with a synthetic request
+/// stream drawn from a dataset; print latency/throughput.
+pub fn cmd_serve(args: &Args) -> Result<()> {
+    let root = std::path::PathBuf::from(args.str_or("artifacts",
+                                                    "artifacts"));
+    let manifest = Arc::new(Manifest::load(&root)?);
+    let model = args.str_or("model", "vit");
+    let dataset = args.str_or("dataset", match model.as_str() {
+        "vit" => "synth10",
+        "bert" => "sst2p",
+        _ => "text8p",
+    });
+    let cfgm = manifest.model(&model)?.clone();
+    let p = args.usize_or("p", 2)?;
+    let l = args.usize_or("l", if model == "gpt2" { 16 } else { 6 })?;
+    let mode = match args.str_or("mode", "prism").as_str() {
+        "single" => Mode::Single,
+        "voltage" => Mode::Voltage { p },
+        _ => Mode::Prism { p, l, duplicated: true },
+    };
+    let n_requests = args.usize_or("requests", 64)?;
+    let rate = args.f64_or("rate", 50.0)?; // requests/sec
+    let weights = match model.as_str() {
+        "vit" => format!("vit_{dataset}"),
+        other => other.to_string(),
+    };
+    let task = if cfgm.causal { "lm".into() } else { dataset.clone() };
+    let pace = args
+        .flags
+        .get("bandwidth")
+        .map(|b| LinkModel::new(b.parse().unwrap_or(200.0), 1.0));
+
+    let ds = Dataset::load(&root, &dataset)?;
+    let serve_cfg = ServeConfig {
+        model: model.clone(),
+        task,
+        weights,
+        mode,
+        flavor: args.str_or("kernel", "xla"),
+        flush_after: Duration::from_millis(
+            args.usize_or("flush-ms", 4)? as u64),
+        pace,
+    };
+    println!("serving {model}/{dataset} mode={mode:?} \
+              requests={n_requests} rate={rate}/s");
+    let server = Server::start(manifest.clone(), serve_cfg)?;
+
+    let (resp_tx, resp_rx) = channel::<Response>();
+    let mut rng = Rng::new(7);
+    let t0 = Instant::now();
+    let n1 = ds.x.shape[1];
+    for id in 0..n_requests {
+        let i = rng.below(ds.count());
+        let raw = match ds.kind {
+            DatasetKind::Vision => ds.x.slice0(i, i + 1)?,
+            _ => {
+                let take = cfgm.n.min(n1);
+                let ids = &ds.x.i32s()?[i * n1..i * n1 + take];
+                let mut v = ids.to_vec();
+                v.resize(cfgm.n, 0);
+                Tensor::from_i32(vec![1, cfgm.n], v)?
+            }
+        };
+        server.requests.send(Request {
+            id: id as u64,
+            raw,
+            enqueued: Instant::now(),
+            respond: resp_tx.clone(),
+        })?;
+        std::thread::sleep(Duration::from_secs_f64(
+            rng.exponential(rate)));
+    }
+    let mut hist = Histogram::new();
+    for _ in 0..n_requests {
+        let resp = resp_rx.recv()?;
+        hist.record(resp.latency.as_secs_f64());
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    server.shutdown()?;
+    println!("throughput : {:.1} req/s ({} requests in {:.2}s)",
+             n_requests as f64 / wall, n_requests, wall);
+    println!("latency    : {}", hist.summary_ms());
+    Ok(())
+}

@@ -1,0 +1,4 @@
+//! Self-built substrates: JSON, RNG/property harness (no external crates).
+pub mod json;
+pub mod quant;
+pub mod rng;

@@ -1,0 +1,256 @@
+//! Wire quantization for the Segment-Means exchange.
+//!
+//! PRISM's contribution is *what* to send (L landmark rows instead of N/P
+//! token rows); this module is the natural extension the paper's
+//! conclusion gestures at — *how* to send it. The exchanged landmarks
+//! tolerate much lower precision than the residual stream: f16 halves the
+//! exchange bytes again and int8 (per-row absmax scaling) quarters them,
+//! multiplying the paper's communication speed-up.
+//!
+//! Quantization applies only on the wire: executables stay f32; the
+//! coordinator encodes before "transmitting" and decodes after.
+
+use anyhow::{bail, Result};
+
+use crate::runtime::Tensor;
+
+/// Wire precision for exchanged tensors.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WireFmt {
+    F32,
+    F16,
+    I8,
+}
+
+impl WireFmt {
+    pub fn parse(s: &str) -> Result<WireFmt> {
+        Ok(match s {
+            "f32" => WireFmt::F32,
+            "f16" => WireFmt::F16,
+            "i8" | "int8" => WireFmt::I8,
+            other => bail!("unknown wire format '{other}' \
+                            (f32 | f16 | i8)"),
+        })
+    }
+
+    /// Payload bytes for `elements` f32 values (+ per-row scales for i8).
+    pub fn wire_bytes(&self, elements: usize, rows: usize) -> usize {
+        match self {
+            WireFmt::F32 => elements * 4,
+            WireFmt::F16 => elements * 2,
+            WireFmt::I8 => elements + rows * 4,
+        }
+    }
+}
+
+// ---- f16 (IEEE binary16) scalar conversions, no external crates -------
+
+pub fn f32_to_f16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let mut exp = ((bits >> 23) & 0xff) as i32 - 127 + 15;
+    let mut frac = bits & 0x007f_ffff;
+    if ((bits >> 23) & 0xff) == 0xff {
+        // inf / nan
+        return sign | 0x7c00 | if frac != 0 { 0x200 } else { 0 };
+    }
+    if exp >= 0x1f {
+        return sign | 0x7c00; // overflow -> inf
+    }
+    if exp <= 0 {
+        // subnormal or underflow to zero
+        if exp < -10 {
+            return sign;
+        }
+        frac |= 0x0080_0000; // implicit leading 1
+        let shift = (14 - exp) as u32;
+        let half = frac >> shift;
+        // round to nearest even
+        let rem = frac & ((1 << shift) - 1);
+        let halfway = 1u32 << (shift - 1);
+        let rounded = half
+            + u32::from(rem > halfway || (rem == halfway && (half & 1) == 1));
+        return sign | rounded as u16;
+    }
+    let mut half = ((exp as u32) << 10) | (frac >> 13);
+    // round to nearest even on the dropped 13 bits
+    let rem = frac & 0x1fff;
+    if rem > 0x1000 || (rem == 0x1000 && (half & 1) == 1) {
+        half += 1;
+    }
+    let _ = &mut exp;
+    sign | half as u16
+}
+
+pub fn f16_bits_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1f) as u32;
+    let frac = (h & 0x3ff) as u32;
+    let bits = if exp == 0 {
+        if frac == 0 {
+            sign
+        } else {
+            // subnormal: normalize
+            let mut e = -1i32;
+            let mut f = frac;
+            while f & 0x400 == 0 {
+                f <<= 1;
+                e -= 1;
+            }
+            f &= 0x3ff;
+            sign | (((127 - 15 + e + 1) as u32) << 23) | (f << 13)
+        }
+    } else if exp == 0x1f {
+        sign | 0x7f80_0000 | (frac << 13)
+    } else {
+        sign | ((exp + 127 - 15) << 23) | (frac << 13)
+    };
+    f32::from_bits(bits)
+}
+
+// ---- tensor codecs -----------------------------------------------------
+
+/// Encode the last-axis rows of an f32 tensor at the given precision.
+pub fn encode(t: &Tensor, fmt: WireFmt) -> Result<Vec<u8>> {
+    let data = t.f32s()?;
+    match fmt {
+        WireFmt::F32 => {
+            let mut out = Vec::with_capacity(data.len() * 4);
+            for x in data {
+                out.extend_from_slice(&x.to_le_bytes());
+            }
+            Ok(out)
+        }
+        WireFmt::F16 => {
+            let mut out = Vec::with_capacity(data.len() * 2);
+            for x in data {
+                out.extend_from_slice(&f32_to_f16_bits(*x).to_le_bytes());
+            }
+            Ok(out)
+        }
+        WireFmt::I8 => {
+            let d = *t.shape.last().unwrap_or(&1);
+            let rows = data.len() / d.max(1);
+            let mut out = Vec::with_capacity(rows * 4 + data.len());
+            for r in 0..rows {
+                let row = &data[r * d..(r + 1) * d];
+                let absmax =
+                    row.iter().fold(0f32, |m, x| m.max(x.abs())).max(1e-12);
+                let scale = absmax / 127.0;
+                out.extend_from_slice(&scale.to_le_bytes());
+                for x in row {
+                    out.push((x / scale).round().clamp(-127.0, 127.0)
+                             as i8 as u8);
+                }
+            }
+            Ok(out)
+        }
+    }
+}
+
+/// Decode back to an f32 tensor of the given shape.
+pub fn decode(bytes: &[u8], shape: &[usize], fmt: WireFmt)
+              -> Result<Tensor> {
+    let n: usize = shape.iter().product();
+    let data = match fmt {
+        WireFmt::F32 => bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect::<Vec<_>>(),
+        WireFmt::F16 => bytes
+            .chunks_exact(2)
+            .map(|c| f16_bits_to_f32(u16::from_le_bytes([c[0], c[1]])))
+            .collect::<Vec<_>>(),
+        WireFmt::I8 => {
+            let d = *shape.last().unwrap_or(&1);
+            let rows = n / d.max(1);
+            if bytes.len() != rows * (4 + d) {
+                bail!("i8 payload size mismatch");
+            }
+            let mut out = Vec::with_capacity(n);
+            for r in 0..rows {
+                let base = r * (4 + d);
+                let scale = f32::from_le_bytes(
+                    bytes[base..base + 4].try_into().unwrap());
+                for i in 0..d {
+                    out.push(bytes[base + 4 + i] as i8 as f32 * scale);
+                }
+            }
+            out
+        }
+    };
+    if data.len() != n {
+        bail!("decoded {} elements, shape wants {n}", data.len());
+    }
+    Tensor::from_f32(shape.to_vec(), data)
+}
+
+/// Round-trip a tensor through the wire format (what the coordinator does
+/// to each exchanged landmark block).
+pub fn requantize(t: &Tensor, fmt: WireFmt) -> Result<Tensor> {
+    if fmt == WireFmt::F32 {
+        return Ok(t.clone());
+    }
+    decode(&encode(t, fmt)?, &t.shape, fmt)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::{property, Rng};
+
+    #[test]
+    fn f16_known_values() {
+        for (x, bits) in [(0.0f32, 0x0000u16), (1.0, 0x3c00),
+                          (-2.0, 0xc000), (0.5, 0x3800),
+                          (65504.0, 0x7bff)] {
+            assert_eq!(f32_to_f16_bits(x), bits, "{x}");
+            assert_eq!(f16_bits_to_f32(bits), x, "{bits:#x}");
+        }
+        assert_eq!(f32_to_f16_bits(1e6), 0x7c00); // overflow -> inf
+        assert!(f16_bits_to_f32(0x7c00).is_infinite());
+    }
+
+    #[test]
+    fn f16_roundtrip_error_bounded() {
+        property("f16-roundtrip", 200, |rng: &mut Rng| {
+            let x = rng.f32_in(-8.0, 8.0);
+            let y = f16_bits_to_f32(f32_to_f16_bits(x));
+            assert!((x - y).abs() <= x.abs() * 1e-3 + 1e-4,
+                    "{x} -> {y}");
+        });
+    }
+
+    #[test]
+    fn tensor_roundtrips() {
+        let mut rng = Rng::new(5);
+        let t = Tensor::from_f32(vec![4, 16], rng.normal_vec(64, 2.0))
+            .unwrap();
+        let f16 = requantize(&t, WireFmt::F16).unwrap();
+        assert!(t.max_abs_diff(&f16).unwrap() < 0.01);
+        let i8t = requantize(&t, WireFmt::I8).unwrap();
+        assert!(t.max_abs_diff(&i8t).unwrap() < 0.06);
+        let f32t = requantize(&t, WireFmt::F32).unwrap();
+        assert_eq!(t, f32t);
+    }
+
+    #[test]
+    fn i8_scales_per_row() {
+        // one huge row must not destroy a small row's precision
+        let t = Tensor::from_f32(vec![2, 2],
+                                 vec![1000.0, -500.0, 0.01, 0.02]).unwrap();
+        let q = requantize(&t, WireFmt::I8).unwrap();
+        let q2 = q.f32s().unwrap();
+        assert!((q2[2] - 0.01).abs() < 2e-4);
+        assert!((q2[0] - 1000.0).abs() < 8.0);
+    }
+
+    #[test]
+    fn wire_bytes_accounting() {
+        assert_eq!(WireFmt::F32.wire_bytes(128, 2), 512);
+        assert_eq!(WireFmt::F16.wire_bytes(128, 2), 256);
+        assert_eq!(WireFmt::I8.wire_bytes(128, 2), 136);
+        assert!(WireFmt::parse("f16").is_ok());
+        assert!(WireFmt::parse("nope").is_err());
+    }
+}

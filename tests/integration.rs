@@ -1,0 +1,460 @@
+//! Integration tests over the real AOT artifacts (require
+//! `make artifacts`; each test skips gracefully when artifacts are
+//! absent so `cargo test` stays green on a fresh checkout).
+
+use std::sync::Arc;
+
+use prism::coordinator::{Mode, Runner};
+use prism::data::Dataset;
+use prism::eval::{evaluate, EvalOpts};
+use prism::net::tcp::{ExecRequest, ExecResponse, RemoteWorker};
+use prism::runtime::{Engine, Manifest, Tensor, WeightSet};
+use prism::util::json::Json;
+use prism::util::rng::Rng;
+
+fn manifest() -> Option<Arc<Manifest>> {
+    let root = std::path::PathBuf::from(
+        std::env::var("PRISM_ARTIFACTS").unwrap_or("artifacts".into()));
+    match Manifest::load(&root) {
+        Ok(m) => Some(Arc::new(m)),
+        Err(_) => {
+            eprintln!("skipping (no artifacts; run `make artifacts`)");
+            None
+        }
+    }
+}
+
+fn rand_like(rng: &mut Rng, shape: &[usize], scale: f32) -> Tensor {
+    let n: usize = shape.iter().product();
+    Tensor::from_f32(shape.to_vec(), rng.normal_vec(n, scale)).unwrap()
+}
+
+/// Invariant 5 (DESIGN.md): the rust runtime reproduces python's outputs
+/// on fixed inputs for every exported fixture (xla AND pallas flavors).
+#[test]
+fn fixtures_match_python_outputs() {
+    let Some(m) = manifest() else { return };
+    let fx_dir = m.root.join("fixtures");
+    let text = std::fs::read_to_string(fx_dir.join("fixtures.json"))
+        .expect("fixtures.json");
+    let fixtures = Json::parse(&text).unwrap();
+    let mut engine = Engine::new(m.clone()).unwrap();
+    let mut checked = 0;
+    for fx in fixtures.as_arr().unwrap() {
+        let exec = fx.req("executable").unwrap().as_str().unwrap();
+        let layer = fx.get("layer").unwrap().as_usize().unwrap();
+        let wtag = fx.req("weights").unwrap().as_str().unwrap();
+        let tol = fx.req("tolerance").unwrap().as_f64().unwrap() as f32;
+        let ws = WeightSet::load(&m, wtag).unwrap();
+        let spec = m.exec(exec).unwrap().clone();
+        let inputs: Vec<Tensor> = fx
+            .req("inputs")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .zip(&spec.args)
+            .map(|(f, a)| {
+                Tensor::read_f32_file(
+                    &fx_dir.join(f.as_str().unwrap()), a.shape.clone())
+                    .unwrap()
+            })
+            .collect();
+        let refs: Vec<&Tensor> = inputs.iter().collect();
+        let outs = engine.run(exec, &ws, layer, &refs).unwrap();
+        for (i, (out, expected)) in outs
+            .iter()
+            .zip(fx.req("expected").unwrap().as_arr().unwrap())
+            .enumerate()
+        {
+            let exp = Tensor::read_f32_file(
+                &fx_dir.join(expected.as_str().unwrap()),
+                out.shape.clone())
+                .unwrap();
+            let err = out.max_abs_diff(&exp).unwrap();
+            assert!(err <= tol, "{exec} output {i}: err {err} > {tol}");
+        }
+        checked += 1;
+    }
+    assert!(checked >= 4, "expected >= 4 fixtures, got {checked}");
+}
+
+/// Voltage (full AllGather) is lossless: equals single-device exactly
+/// (up to f32 reassociation) on random embedded inputs.
+#[test]
+fn voltage_equals_single() {
+    let Some(m) = manifest() else { return };
+    let mut rng = Rng::new(11);
+    let cfg = m.model("vit").unwrap().clone();
+    let mut runner = Runner::new(m.clone(), "xla").unwrap();
+    let ws = WeightSet::load(&m, "vit_synth10").unwrap();
+    let x = rand_like(&mut rng, &[m.eval_batch, cfg.n, cfg.d], 0.5);
+    let (s, _) = runner.blocks("vit", &ws, &x, Mode::Single).unwrap();
+    for p in [2, 3] {
+        let (v, _) =
+            runner.blocks("vit", &ws, &x, Mode::Voltage { p }).unwrap();
+        let err = s.max_abs_diff(&v).unwrap();
+        assert!(err < 2e-4, "P={p}: voltage err {err}");
+    }
+}
+
+/// The pallas-flavor artifact (Layer-1 kernel, interpret mode) computes
+/// the same numbers as the xla-flavor artifact.
+#[test]
+fn pallas_flavor_matches_xla_flavor() {
+    let Some(m) = manifest() else { return };
+    let mut rng = Rng::new(12);
+    let cfg = m.model("vit").unwrap().clone();
+    let ws = WeightSet::load(&m, "vit_synth10").unwrap();
+    let x = rand_like(&mut rng, &[m.eval_batch, cfg.n, cfg.d], 0.5);
+    let mode = Mode::Prism { p: 2, l: 6, duplicated: true };
+    let mut rx = Runner::new(m.clone(), "xla").unwrap();
+    let mut rp = Runner::new(m.clone(), "pallas").unwrap();
+    let (a, _) = rx.blocks("vit", &ws, &x, mode).unwrap();
+    let (b, _) = rp.blocks("vit", &ws, &x, mode).unwrap();
+    let err = a.max_abs_diff(&b).unwrap();
+    assert!(err < 2e-4, "pallas vs xla err {err}");
+}
+
+/// More landmarks (lower CR) => closer to the exact output; dropping the
+/// repetition counts (Table II "No") changes the result.
+#[test]
+fn prism_approximation_ordering_and_ablation() {
+    let Some(m) = manifest() else { return };
+    let mut rng = Rng::new(13);
+    let cfg = m.model("vit").unwrap().clone();
+    let mut runner = Runner::new(m.clone(), "xla").unwrap();
+    let ws = WeightSet::load(&m, "vit_synth10").unwrap();
+    let x = rand_like(&mut rng, &[m.eval_batch, cfg.n, cfg.d], 0.5);
+    let (s, _) = runner.blocks("vit", &ws, &x, Mode::Single).unwrap();
+    let mut errs = Vec::new();
+    for l in [3usize, 10] {
+        let (pr, _) = runner
+            .blocks("vit", &ws, &x,
+                    Mode::Prism { p: 2, l, duplicated: true })
+            .unwrap();
+        errs.push(s.max_abs_diff(&pr).unwrap());
+    }
+    assert!(errs[1] < errs[0], "L=10 ({}) should beat L=3 ({})",
+            errs[1], errs[0]);
+    let (dup, _) = runner
+        .blocks("vit", &ws, &x, Mode::Prism { p: 2, l: 6,
+                                              duplicated: true })
+        .unwrap();
+    let (nodup, _) = runner
+        .blocks("vit", &ws, &x, Mode::Prism { p: 2, l: 6,
+                                              duplicated: false })
+        .unwrap();
+    assert!(dup.max_abs_diff(&nodup).unwrap() > 1e-4);
+}
+
+/// Partition-aware causal mask: perturbing a future token never changes
+/// earlier positions, in single AND distributed PRISM mode (Eq. 17).
+#[test]
+fn causal_no_future_leak_distributed() {
+    let Some(m) = manifest() else { return };
+    let mut rng = Rng::new(14);
+    let cfg = m.model("gpt2").unwrap().clone();
+    let mut runner = Runner::new(m.clone(), "xla").unwrap();
+    let ws = WeightSet::load(&m, "gpt2").unwrap();
+    let x = rand_like(&mut rng, &[m.eval_batch, cfg.n, cfg.d], 0.5);
+    let t = 70; // inside partition 1 of 2
+    let mut x2 = x.clone();
+    {
+        let base = t * cfg.d;
+        if let prism::runtime::TensorData::F32(v) = &mut x2.data {
+            for b in 0..m.eval_batch {
+                let off = b * cfg.n * cfg.d + base;
+                for j in 0..cfg.d {
+                    v[off + j] += 4.0;
+                }
+            }
+        }
+    }
+    for mode in [Mode::Single,
+                 Mode::Prism { p: 2, l: 16, duplicated: true },
+                 Mode::Voltage { p: 3 }] {
+        let (a, _) = runner.blocks("gpt2", &ws, &x, mode).unwrap();
+        let (b, _) = runner.blocks("gpt2", &ws, &x2, mode).unwrap();
+        let pre_a = a.slice1(0, t).unwrap();
+        let pre_b = b.slice1(0, t).unwrap();
+        let err = pre_a.max_abs_diff(&pre_b).unwrap();
+        assert!(err < 2e-4, "{mode:?}: past changed by {err}");
+        let post_a = a.slice1(t, cfg.n).unwrap();
+        let post_b = b.slice1(t, cfg.n).unwrap();
+        assert!(post_a.max_abs_diff(&post_b).unwrap() > 1e-3,
+                "{mode:?}: perturbation had no effect at all");
+    }
+}
+
+/// The threaded server computes exactly what the sequential runner does.
+#[test]
+fn server_matches_runner() {
+    let Some(m) = manifest() else { return };
+    use prism::server::{Request, Response, ServeConfig, Server};
+    use std::sync::mpsc::channel;
+    use std::time::{Duration, Instant};
+
+    let ds = Dataset::load(&m.root, "synth10").unwrap();
+    let ws = WeightSet::load(&m, "vit_synth10").unwrap();
+    let mode = Mode::Prism { p: 2, l: 6, duplicated: true };
+    let batch = m.eval_batch;
+
+    let server = Server::start(m.clone(), ServeConfig {
+        model: "vit".into(),
+        task: "synth10".into(),
+        weights: "vit_synth10".into(),
+        mode,
+        flavor: "xla".into(),
+        flush_after: Duration::from_millis(2),
+        pace: None,
+    })
+    .unwrap();
+    let (tx, rx) = channel::<Response>();
+    for i in 0..batch {
+        server
+            .requests
+            .send(Request {
+                id: i as u64,
+                raw: ds.x.slice0(i, i + 1).unwrap(),
+                enqueued: Instant::now(),
+                respond: tx.clone(),
+            })
+            .unwrap();
+    }
+    let mut got: Vec<Option<Tensor>> = vec![None; batch];
+    for _ in 0..batch {
+        let r = rx.recv_timeout(Duration::from_secs(120)).unwrap();
+        got[r.id as usize] = Some(r.logits);
+    }
+    server.shutdown().unwrap();
+
+    let mut runner = Runner::new(m.clone(), "xla").unwrap();
+    let raw = ds.x.slice0(0, batch).unwrap();
+    let (expect, _) =
+        runner.forward("vit", &ws, "synth10", &raw, mode).unwrap();
+    let ef = expect.f32s().unwrap();
+    let classes = *expect.shape.last().unwrap();
+    for (i, logits) in got.into_iter().enumerate() {
+        let l = logits.unwrap();
+        let row = &ef[i * classes..(i + 1) * classes];
+        let diff = l
+            .f32s()
+            .unwrap()
+            .iter()
+            .zip(row)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        assert!(diff < 1e-4, "row {i}: server vs runner diff {diff}");
+    }
+}
+
+/// TCP remote worker returns exactly what a local engine computes.
+#[test]
+fn tcp_worker_matches_local() {
+    let Some(m) = manifest() else { return };
+    let exec = "vit_prism_p2l6_part0_b16_xla";
+    let spec = m.exec(exec).unwrap().clone();
+    let mut rng = Rng::new(15);
+    let args: Vec<Tensor> = spec
+        .args
+        .iter()
+        .map(|a| rand_like(&mut rng, &a.shape, 0.4))
+        .collect();
+
+    let addr = "127.0.0.1:47911";
+    let m2 = m.clone();
+    let server = std::thread::spawn(move || {
+        let mut engine = Engine::new(m2.clone()).unwrap();
+        let ws = WeightSet::load(&m2, "vit_synth10").unwrap();
+        prism::net::tcp::serve(addr, move |req: ExecRequest| {
+            let refs: Vec<&Tensor> = req.args.iter().collect();
+            match engine.run(&req.exec, &ws, req.layer as usize, &refs) {
+                Ok(outs) => ExecResponse::Ok(outs),
+                Err(e) => ExecResponse::Err(format!("{e:#}")),
+            }
+        })
+        .unwrap();
+    });
+    std::thread::sleep(std::time::Duration::from_millis(300));
+    let mut remote = RemoteWorker::connect(addr).unwrap();
+    let outs = remote
+        .call(&ExecRequest {
+            exec: exec.into(),
+            weights: "vit_synth10".into(),
+            layer: 2,
+            args: args.clone(),
+        })
+        .unwrap();
+    remote.shutdown().unwrap();
+    server.join().unwrap();
+
+    let mut engine = Engine::new(m.clone()).unwrap();
+    let ws = WeightSet::load(&m, "vit_synth10").unwrap();
+    let refs: Vec<&Tensor> = args.iter().collect();
+    let local = engine.run(exec, &ws, 2, &refs).unwrap();
+    assert_eq!(local.len(), outs.len());
+    for (a, b) in local.iter().zip(&outs) {
+        assert!(a.max_abs_diff(b).unwrap() < 1e-6);
+    }
+}
+
+/// Every dataset kind evaluates end-to-end with small limits and returns
+/// a sane metric.
+#[test]
+fn eval_all_dataset_kinds() {
+    let Some(m) = manifest() else { return };
+    let mut runner = Runner::new(m.clone(), "xla").unwrap();
+    let cases: Vec<(&str, &str, Mode)> = vec![
+        ("vit_synth10", "synth10",
+         Mode::Prism { p: 2, l: 6, duplicated: true }),
+        ("bert", "stsbp", Mode::Single),
+        ("gpt2", "text8p",
+         Mode::Prism { p: 3, l: 10, duplicated: true }),
+        ("gpt2", "cbtcn", Mode::Single),
+    ];
+    for (tag, ds_name, mode) in cases {
+        let ws = WeightSet::load(&m, tag).unwrap();
+        let ds = Dataset::load(&m.root, ds_name).unwrap();
+        let res = evaluate(&mut runner, &ws, &ds,
+                           &EvalOpts { mode, limit: 20 })
+            .unwrap();
+        assert!(res.samples > 0);
+        if res.metric_name == "bpc" {
+            assert!(res.metric > 0.0 && res.metric < 8.0,
+                    "{ds_name}: bpc {}", res.metric);
+        } else {
+            assert!((-1.0..=1.0).contains(&res.metric),
+                    "{ds_name}: {} {}", res.metric_name, res.metric);
+        }
+        assert!(res.trace.total_compute_secs() > 0.0);
+    }
+}
+
+/// The engine rejects wrong shapes/dtypes instead of feeding XLA garbage.
+#[test]
+fn engine_validates_arguments() {
+    let Some(m) = manifest() else { return };
+    let mut engine = Engine::new(m.clone()).unwrap();
+    let ws = WeightSet::load(&m, "vit_synth10").unwrap();
+    let exec = "vit_single_part0_b16_xla";
+    let bad = Tensor::zeros_f32(vec![1, 2, 3]);
+    let spec = m.exec(exec).unwrap().clone();
+    let good_x = Tensor::zeros_f32(spec.args[0].shape.clone());
+    // wrong arity
+    assert!(engine.run(exec, &ws, 0, &[&good_x]).is_err());
+    // wrong shape
+    assert!(engine.run(exec, &ws, 0, &[&bad, &good_x]).is_err());
+    // unknown executable
+    assert!(engine.run("nope", &ws, 0, &[]).is_err());
+    // unknown weight set
+    assert!(WeightSet::load(&m, "nope").is_err());
+}
+
+/// Measured exchange bytes equal the analytical PDPLC model.
+#[test]
+fn measured_bytes_match_comm_model() {
+    let Some(m) = manifest() else { return };
+    use prism::model::comm;
+    let mut rng = Rng::new(16);
+    let cfg = m.model("vit").unwrap().clone();
+    let mut runner = Runner::new(m.clone(), "xla").unwrap();
+    let ws = WeightSet::load(&m, "vit_synth10").unwrap();
+    let x = rand_like(&mut rng, &[m.eval_batch, cfg.n, cfg.d], 0.5);
+    let (p, l) = (3usize, 5usize);
+    let (_, trace) = runner
+        .blocks("vit", &ws, &x,
+                Mode::Prism { p, l, duplicated: true })
+        .unwrap();
+    // per device per layer: (P-1) * L * D floats * batch
+    let expect =
+        comm::bytes_prism(cfg.d, p, l) * m.eval_batch * cfg.layers;
+    assert_eq!(trace.device_exchange_bytes(0), expect);
+    let (_, vtrace) = runner
+        .blocks("vit", &ws, &x, Mode::Voltage { p })
+        .unwrap();
+    let vexpect =
+        comm::bytes_voltage(cfg.n, cfg.d, p) * m.eval_batch * cfg.layers;
+    assert_eq!(vtrace.device_exchange_bytes(0), vexpect);
+}
+
+
+/// Wire quantization: f16 exchange leaves ViT predictions unchanged and
+/// i8 stays within a small logit perturbation; compressor baselines run
+/// end-to-end and segment-means is at least as accurate.
+#[test]
+fn wire_and_compressor_ablations_run() {
+    let Some(m) = manifest() else { return };
+    use prism::coordinator::Compressor;
+    use prism::util::quant::WireFmt;
+    let ds = Dataset::load(&m.root, "synth10").unwrap();
+    let ws = WeightSet::load(&m, "vit_synth10").unwrap();
+    let mode = Mode::Prism { p: 2, l: 6, duplicated: true };
+    let mut runner = Runner::new(m.clone(), "xla").unwrap();
+    let base = evaluate(&mut runner, &ws, &ds,
+                        &EvalOpts { mode, limit: 48 }).unwrap();
+    runner.wire = WireFmt::F16;
+    let f16 = evaluate(&mut runner, &ws, &ds,
+                       &EvalOpts { mode, limit: 48 }).unwrap();
+    assert!((f16.metric - base.metric).abs() <= 0.05,
+            "f16 changed accuracy too much: {} vs {}", f16.metric,
+            base.metric);
+    // f16 exchange is half the bytes
+    assert_eq!(f16.trace.device_exchange_bytes(0) * 2,
+               base.trace.device_exchange_bytes(0));
+    runner.wire = WireFmt::F32;
+    runner.compressor = Compressor::GlobalMean;
+    let gm = evaluate(&mut runner, &ws, &ds,
+                      &EvalOpts { mode, limit: 48 }).unwrap();
+    assert!(gm.metric <= base.metric + 0.05,
+            "global-mean should not beat segment means: {} vs {}",
+            gm.metric, base.metric);
+}
+
+/// Remote TCP coordinator equals the in-process runner bit-for-bit.
+#[test]
+fn remote_coordinator_matches_runner() {
+    let Some(m) = manifest() else { return };
+    use prism::coordinator::RemoteCoordinator;
+    let mode = Mode::Prism { p: 2, l: 6, duplicated: true };
+    let mut rng = Rng::new(21);
+    let cfg = m.model("vit").unwrap().clone();
+    let x = rand_like(&mut rng, &[m.eval_batch, cfg.n, cfg.d], 0.5);
+
+    let addrs = ["127.0.0.1:47921", "127.0.0.1:47922"];
+    let servers: Vec<_> = addrs
+        .iter()
+        .map(|addr| {
+            let m2 = m.clone();
+            let addr = addr.to_string();
+            std::thread::spawn(move || {
+                let mut engine = Engine::new(m2.clone()).unwrap();
+                let ws = WeightSet::load(&m2, "vit_synth10").unwrap();
+                prism::net::tcp::serve(&addr, move |req| {
+                    let refs: Vec<&Tensor> = req.args.iter().collect();
+                    match engine.run(&req.exec, &ws, req.layer as usize,
+                                     &refs) {
+                        Ok(outs) => ExecResponse::Ok(outs),
+                        Err(e) => ExecResponse::Err(format!("{e:#}")),
+                    }
+                })
+                .unwrap();
+            })
+        })
+        .collect();
+    std::thread::sleep(std::time::Duration::from_millis(400));
+    let addr_strings: Vec<String> =
+        addrs.iter().map(|s| s.to_string()).collect();
+    let mut coord =
+        RemoteCoordinator::connect(m.clone(), &addr_strings, "xla")
+            .unwrap();
+    let remote = coord.blocks("vit", "vit_synth10", &x, mode).unwrap();
+    coord.shutdown().unwrap();
+    for s in servers {
+        s.join().unwrap();
+    }
+    let mut runner = Runner::new(m.clone(), "xla").unwrap();
+    let ws = WeightSet::load(&m, "vit_synth10").unwrap();
+    let (local, _) = runner.blocks("vit", &ws, &x, mode).unwrap();
+    assert!(remote.max_abs_diff(&local).unwrap() < 1e-6);
+}
