@@ -1,0 +1,32 @@
+# PRISM build entry points. Tier-1 verification: `make verify`
+# (== cargo build --release && cargo test -q from the repo root).
+
+CARGO ?= cargo
+PYTHON ?= python3
+
+.PHONY: all build test verify bench-decode artifacts lint clean
+
+all: build
+
+build:
+	$(CARGO) build --release
+
+test:
+	$(CARGO) test -q
+
+verify: build test
+
+# Decode-subsystem throughput/bytes-per-token bench (artifact-free).
+bench-decode:
+	$(CARGO) bench --bench decode_throughput
+
+# Layer-1/2 AOT lowering: produces artifacts/ (HLO text, weights,
+# datasets, fixtures, manifest.json). Requires the JAX/Pallas toolchain.
+artifacts:
+	$(PYTHON) python/compile/aot.py
+
+lint:
+	$(CARGO) clippy -- -D warnings
+
+clean:
+	$(CARGO) clean

@@ -1,0 +1,88 @@
+//! §Perf decode bench: incremental `DecodeSession` vs full-recompute
+//! autoregressive decoding on the reference backend (artifact-free, so
+//! this runs on any checkout).
+//!
+//! Reports tokens/sec and wire bytes per generated token at the
+//! acceptance geometry P=2, L=4, and checks the decode subsystem's
+//! contract: >= 5x fewer exchanged bytes per token than full recompute.
+//!
+//!     cargo bench --bench decode_throughput
+
+use std::sync::Arc;
+
+use anyhow::Result;
+use prism::bench_util::bench;
+use prism::decode::{full_recompute_bytes_per_token, DecodeSession, RefCfg,
+                    RefGpt};
+use prism::util::quant::WireFmt;
+
+fn main() -> Result<()> {
+    let cfg = RefCfg {
+        vocab: 56,
+        n: 128,
+        d: 64,
+        heads: 4,
+        layers: 4,
+        ffn: 128,
+    };
+    let (p, l) = (2usize, 4usize);
+    let wire = WireFmt::F32;
+    let prompt: Vec<i32> = (0..8).map(|i| (i % 50) + 1).collect();
+    let steps = 24usize;
+    let model = Arc::new(RefGpt::tiny(31, cfg)?);
+
+    println!("== decode throughput (reference backend, N={} d={} \
+              layers={} P={p} L={l}) ==", cfg.n, cfg.d, cfg.layers);
+
+    // correctness gate first: identical token streams.
+    let (full_toks, _) =
+        model.greedy_decode_full(&prompt, steps, p, l, wire)?;
+    let mut sess = DecodeSession::new(model.clone(), p, l, wire)?;
+    sess.prefill(&prompt)?;
+    let inc_toks: Vec<i32> =
+        (0..steps).map(|_| sess.generate_next()).collect::<Result<_>>()?;
+    assert_eq!(inc_toks, full_toks,
+               "incremental decode diverged from full recompute");
+    println!("correctness : incremental == full recompute \
+              ({steps}/{steps} tokens)");
+
+    // tokens/sec: full recompute re-runs the whole window per token.
+    let full_stats = bench(1, 5, || {
+        model
+            .greedy_decode_full(&prompt, steps, p, l, wire)
+            .unwrap();
+    });
+    let full_tps = steps as f64 / full_stats.median_secs;
+    println!("full recompute : {} | {:.1} tok/s", full_stats.per_op(),
+             full_tps);
+
+    let inc_stats = bench(1, 5, || {
+        let mut s = DecodeSession::new(model.clone(), p, l, wire).unwrap();
+        s.prefill(&prompt).unwrap();
+        for _ in 0..steps {
+            s.generate_next().unwrap();
+        }
+    });
+    let inc_tps = steps as f64 / inc_stats.median_secs;
+    println!("incremental    : {} | {:.1} tok/s ({:.1}x faster)",
+             inc_stats.per_op(), inc_tps, inc_tps / full_tps);
+
+    // bytes per generated token (prefill charged to the session).
+    let st = sess.stats();
+    let inc_total = st.wire_bytes();
+    let full_per_tok =
+        full_recompute_bytes_per_token(cfg.layers, p, l, cfg.d, wire);
+    let full_total = full_per_tok * steps;
+    let ratio = full_total as f64 / inc_total as f64;
+    println!("bytes/token    : incremental {:.0} (total {inc_total} incl. \
+              prefill) vs full {full_per_tok} (total {full_total})",
+             inc_total as f64 / steps as f64);
+    println!("byte reduction : {ratio:.1}x");
+    assert!(
+        ratio >= 5.0,
+        "decode subsystem contract: >= 5x fewer exchanged bytes per \
+         token at P=2 L=4 (got {ratio:.2}x)"
+    );
+    println!("contract       : >= 5x fewer bytes/token OK");
+    Ok(())
+}

@@ -1,18 +1,30 @@
 //! Distributed autoregressive generation with the partition-aware causal
-//! mask (paper §IV-D): greedy-decode text from the tiny char-GPT while the
-//! sequence is split across P = 2 devices exchanging Segment Means.
+//! mask (paper §IV-D), two ways:
 //!
-//!     make artifacts && cargo run --release --example gpt2_generate
+//! 1. **Incremental decode** (always runs, artifact-free): a
+//!    `decode::DecodeSession` keeps per-device KV caches and broadcasts
+//!    one Segment-Means delta row per layer per token, verified here to
+//!    emit the *identical* token stream as full recompute while
+//!    exchanging ~2L x fewer bytes per token.
+//! 2. **AOT full recompute** (when `make artifacts` has run): the
+//!    original trained char-GPT path over `Runner`, now through the
+//!    shared `Runner::greedy_decode` baseline.
 //!
-//! Because the causal mask guarantees position t ignores everything after
-//! t, right-padding is safe: we keep the AOT shape fixed at N = 128 and
-//! read logits at the current frontier. The same prompt is also decoded
-//! single-device to show the two causal paths agree.
+//!     cargo run --release --example gpt2_generate
+//!
+//! Both use `decode::window`: the AOT shape stays fixed at N, right-pads
+//! with id 0 (safe under the causal mask), and reads logits at the
+//! frontier row.
+
+use std::sync::Arc;
 
 use anyhow::Result;
 use prism::bench_util::require_artifacts;
 use prism::coordinator::{Mode, Runner};
-use prism::runtime::{Tensor, WeightSet};
+use prism::decode::{full_recompute_bytes_per_token, DecodeSession, RefCfg,
+                    RefGpt};
+use prism::runtime::WeightSet;
+use prism::util::quant::WireFmt;
 
 /// Charset must mirror python/compile/data.py (0 = pad).
 const CHARSET: &str =
@@ -24,67 +36,88 @@ fn encode(s: &str) -> Vec<i32> {
         .collect()
 }
 
-fn decode_char(id: usize) -> char {
-    if id == 0 {
-        '·'
-    } else {
-        CHARSET.chars().nth(id - 1).unwrap_or('?')
-    }
-}
-
-fn generate(runner: &mut Runner, ws: &WeightSet, mode: Mode, prompt: &str,
-            steps: usize, n: usize, vocab: usize) -> Result<String> {
-    let mut ids = encode(prompt);
-    let start = ids.len();
-    for _ in 0..steps {
-        let frontier = ids.len().min(n) - 1;
-        let mut padded = ids.clone();
-        padded.resize(n, 0); // safe under the causal mask
-        if ids.len() > n {
-            padded.copy_from_slice(&ids[ids.len() - n..]);
-        }
-        let raw = Tensor::from_i32(vec![1, n], padded)?;
-        let (logits, _) = runner.forward("gpt2", ws, "lm", &raw, mode)?;
-        let row = &logits.f32s()?[frontier * vocab..(frontier + 1) * vocab];
-        // greedy, but never emit pad
-        let mut best = 1;
-        for (i, v) in row.iter().enumerate().skip(1) {
-            if *v > row[best] {
-                best = i;
+fn decode_chars(ids: &[i32]) -> String {
+    ids.iter()
+        .map(|&id| {
+            if id == 0 {
+                '·'
+            } else {
+                CHARSET.chars().nth(id as usize - 1).unwrap_or('?')
             }
-        }
-        ids.push(best as i32);
-    }
-    Ok(ids[start..]
-        .iter()
-        .map(|&i| decode_char(i as usize))
-        .collect())
+        })
+        .collect()
 }
 
-fn main() -> Result<()> {
+/// Part 1: incremental vs full-recompute decode on the deterministic
+/// reference backend — the decode subsystem's correctness + bytes story.
+fn incremental_demo(prompt: &str, steps: usize) -> Result<()> {
+    let cfg = RefCfg {
+        vocab: CHARSET.len() + 1,
+        n: 64,
+        d: 32,
+        heads: 4,
+        layers: 4,
+        ffn: 64,
+    };
+    let (p, l) = (2, 4);
+    let model = Arc::new(RefGpt::tiny(23, cfg)?);
+    let ids = encode(prompt);
+    println!("== incremental decode (reference backend, N={} P={p} L={l}) \
+              ==", cfg.n);
+
+    let (full, full_bytes) =
+        model.greedy_decode_full(&ids, steps, p, l, WireFmt::F32)?;
+    let mut sess = DecodeSession::new(model.clone(), p, l, WireFmt::F32)?;
+    sess.prefill(&ids)?;
+    let inc: Vec<i32> =
+        (0..steps).map(|_| sess.generate_next()).collect::<Result<_>>()?;
+    let stats = sess.stats();
+
+    println!("  full    : {prompt}{}", decode_chars(&full));
+    println!("  incr    : {prompt}{}", decode_chars(&inc));
+    let agree = inc.iter().zip(&full).take_while(|(a, b)| a == b).count();
+    println!("  agreement          : {agree}/{steps} tokens identical");
+    assert_eq!(inc, full, "incremental decode must match full recompute");
+
+    let inc_bytes = stats.wire_bytes();
+    println!("  bytes/token        : incremental {:.0} (prefill incl.) vs \
+              full recompute {} ({:.1}x less overall)",
+             stats.bytes_per_generated(),
+             full_recompute_bytes_per_token(cfg.layers, p, l, cfg.d,
+                                            WireFmt::F32),
+             full_bytes as f64 / inc_bytes as f64);
+    println!("  kv cache           : {} B resident across {} devices",
+             sess.cache_bytes(), p);
+    println!("  seg deltas         : {} messages, {} B",
+             stats.delta_messages, stats.delta_bytes);
+    Ok(())
+}
+
+/// Part 2: the trained char-GPT over AOT artifacts (full recompute; the
+/// incremental AOT step needs (1, 1, D) executables — see decode/mod.rs).
+fn aot_demo(prompt: &str, steps: usize) -> Result<()> {
     let Some(manifest) = require_artifacts() else { return Ok(()) };
     let cfg = manifest.model("gpt2")?.clone();
     let mut runner = Runner::new(manifest.clone(), "xla")?;
     let ws = WeightSet::load(&manifest, "gpt2")?;
+    println!("== AOT char-GPT (full recompute, N={}, P=2, L=16, CR=4) ==",
+             cfg.n);
 
-    let prompt = "the old bridge ";
-    let steps = 60;
-    println!("gpt2_generate — distributed causal decoding (N={}, P=2, \
-              L=16, CR=4)", cfg.n);
-    println!("  prompt: {prompt:?}");
-
+    let ids = encode(prompt);
     let dist_mode = Mode::Prism { p: 2, l: 16, duplicated: true };
-    let dist = generate(&mut runner, &ws, dist_mode, prompt, steps, cfg.n,
-                        cfg.vocab)?;
-    println!("  prism  (2 devices) : {prompt}{dist}");
+    let (dist, dist_bytes) =
+        runner.greedy_decode("gpt2", &ws, &ids, steps, dist_mode)?;
+    println!("  prism  (2 devices) : {prompt}{}", decode_chars(&dist));
+    println!("  exchanged          : {} B total, {:.0} B/token",
+             dist_bytes, dist_bytes as f64 / steps as f64);
 
-    let single = generate(&mut runner, &ws, Mode::Single, prompt, steps,
-                          cfg.n, cfg.vocab)?;
-    println!("  single (1 device)  : {prompt}{single}");
+    let (single, _) =
+        runner.greedy_decode("gpt2", &ws, &ids, steps, Mode::Single)?;
+    println!("  single (1 device)  : {prompt}{}", decode_chars(&single));
 
     let agree = dist
-        .chars()
-        .zip(single.chars())
+        .iter()
+        .zip(&single)
         .take_while(|(a, b)| a == b)
         .count();
     println!("  agreement          : first {agree}/{steps} generated \
@@ -95,8 +128,17 @@ fn main() -> Result<()> {
               reproduces single-device decoding exactly.)");
 
     // sanity: voltage (lossless partitioning) must match single exactly
-    let voltage = generate(&mut runner, &ws, Mode::Voltage { p: 2 },
-                           prompt, steps, cfg.n, cfg.vocab)?;
+    let (voltage, _) = runner.greedy_decode("gpt2", &ws, &ids, steps,
+                                            Mode::Voltage { p: 2 })?;
     println!("  voltage == single  : {}", voltage == single);
     Ok(())
+}
+
+fn main() -> Result<()> {
+    let prompt = "the old bridge ";
+    println!("gpt2_generate — distributed causal decoding");
+    println!("  prompt: {prompt:?}\n");
+    incremental_demo(prompt, 40)?;
+    println!();
+    aot_demo(prompt, 60)
 }

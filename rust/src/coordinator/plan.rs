@@ -168,6 +168,26 @@ impl PartitionPlan {
         Ok(cols)
     }
 
+    /// One row of `bias()` for global position `t` (must lie inside this
+    /// plan's partition). The incremental decode path biases only the
+    /// frontier row instead of materialising the full (N_p, N_hat) mask.
+    pub fn bias_row(&self, t: usize) -> Result<Vec<f32>> {
+        let start = self.start();
+        if t < start || t >= start + self.n_p() {
+            bail!("position {t} outside partition [{start}, {})",
+                  start + self.n_p());
+        }
+        let g = self.g()?;
+        let lng: Vec<f32> = g.iter().map(|x| x.ln()).collect();
+        if !self.causal {
+            return Ok(lng);
+        }
+        let cols = self.col_positions()?;
+        Ok((0..self.n_hat())
+            .map(|j| if cols[j] <= t { lng[j] } else { NEG_INF })
+            .collect())
+    }
+
     /// Additive attention bias, shape (N_p, N_hat): ln g + causal mask.
     pub fn bias(&self) -> Result<Tensor> {
         let n_p = self.n_p();
@@ -244,6 +264,100 @@ mod tests {
         assert_eq!(sizes, vec![60, 30]);
         assert!(weighted_partition_sizes(1, &[1.0, 1.0]).is_err());
         assert!(weighted_partition_sizes(10, &[1.0, -1.0]).is_err());
+    }
+
+    #[test]
+    fn weighted_degenerates_to_algorithm1_for_equal_speeds() {
+        // balanced N: exact agreement with Algorithm 1
+        property("weighted-equal-balanced", 100, |rng: &mut Rng| {
+            let p = rng.range(2, 6);
+            let n = p * rng.range(2, 60);
+            let eq = vec![1.0; p];
+            assert_eq!(weighted_partition_sizes(n, &eq).unwrap(),
+                       partition_sizes(n, p).unwrap());
+        });
+        // unbalanced N: same multiset of sizes (remainder placement
+        // differs: Algorithm 1 piles it on the last device, largest-
+        // remainder spreads it), same total, max spread 1.
+        property("weighted-equal-remainder", 100, |rng: &mut Rng| {
+            let p = rng.range(2, 6);
+            let n = rng.range(p * 2, 300);
+            let eq = vec![1.0; p];
+            let w = weighted_partition_sizes(n, &eq).unwrap();
+            assert_eq!(w.iter().sum::<usize>(), n);
+            let (lo, hi) = (w.iter().min().unwrap(), w.iter().max().unwrap());
+            assert!(hi - lo <= 1, "equal speeds must stay balanced: {w:?}");
+            assert_eq!(*lo, n / p);
+        });
+        // scaling all speeds by a constant changes nothing
+        let a = weighted_partition_sizes(97, &[1.0, 2.0, 3.0]).unwrap();
+        let b = weighted_partition_sizes(97, &[10.0, 20.0, 30.0]).unwrap();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn causal_bias_partition_boundary_rows() {
+        // First row of each partition p_i > 0: its own column visible,
+        // every earlier peer's segments fully visible, all later-peer
+        // segments and all later local columns masked.
+        for (n, p, l) in [(120, 3, 4), (128, 2, 16), (65, 2, 3)] {
+            let pls = plans(n, p, l, true).unwrap();
+            for pl in pls.iter().skip(1) {
+                let t = pl.start(); // boundary row
+                let row = pl.bias_row(t).unwrap();
+                let cols = pl.col_positions().unwrap();
+                // local: only the first local column (t itself) visible
+                assert!(row[0] > NEG_INF / 2.0);
+                for j in 1..pl.n_p() {
+                    assert!(row[j] <= NEG_INF / 2.0,
+                            "local col {j} leaks at boundary t={t}");
+                }
+                // peers: visible iff the segment ends at or before t
+                for j in pl.n_p()..pl.n_hat() {
+                    let visible = row[j] > NEG_INF / 2.0;
+                    assert_eq!(visible, cols[j] <= t,
+                               "peer col {j} t={t} n={n} p={p} l={l}");
+                    // earlier peers' ln g survives the mask
+                    if visible {
+                        assert!(row[j] > 0.0,
+                                "visible peer segment should carry ln g");
+                    }
+                }
+            }
+            // last row of partition 0 sees its whole partition, no peers
+            let pl0 = &pls[0];
+            let t = pl0.n_p() - 1;
+            let row = pl0.bias_row(t).unwrap();
+            for j in 0..pl0.n_p() {
+                assert!(row[j] > NEG_INF / 2.0);
+            }
+            let cols = pl0.col_positions().unwrap();
+            for j in pl0.n_p()..pl0.n_hat() {
+                assert_eq!(row[j] > NEG_INF / 2.0, cols[j] <= t);
+            }
+        }
+    }
+
+    #[test]
+    fn bias_row_matches_full_bias() {
+        property("bias-row-slice", 60, |rng: &mut Rng| {
+            let p = rng.range(2, 5);
+            let n = rng.range(p * 4, 160);
+            let l = rng.range(1, 5).min(n / p);
+            let causal = rng.below(2) == 1;
+            for pl in plans(n, p, l, causal).unwrap() {
+                let full = pl.bias().unwrap();
+                let f = full.f32s().unwrap();
+                let n_hat = pl.n_hat();
+                let i = rng.below(pl.n_p());
+                let t = pl.start() + i;
+                let row = pl.bias_row(t).unwrap();
+                assert_eq!(&f[i * n_hat..(i + 1) * n_hat], &row[..]);
+            }
+        });
+        let pl = &plans(64, 2, 4, true).unwrap()[1];
+        assert!(pl.bias_row(0).is_err()); // outside partition 1
+        assert!(pl.bias_row(64).is_err());
     }
 
     #[test]

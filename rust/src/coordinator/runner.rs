@@ -363,6 +363,47 @@ impl Runner {
         trace.head_secs = head_secs;
         Ok((logits, trace))
     }
+
+    /// Greedy autoregressive decode by full recompute over the AOT
+    /// executables: one entire distributed forward per emitted token.
+    ///
+    /// This is the communication *baseline* of the decode subsystem
+    /// (`crate::decode`): it shares the same fixed-window geometry
+    /// (`decode::window`), pad-safe causal masking, and greedy selection
+    /// (`decode::greedy_pick`) as `decode::DecodeSession`, so its token
+    /// stream and per-token exchanged bytes are directly comparable. The
+    /// AOT block shapes are fixed at (B, N_p, D), which is why the
+    /// incremental per-row step runs on the reference backend until
+    /// (1, 1, D) decode executables are lowered (see decode/mod.rs).
+    ///
+    /// Returns the generated ids and the total bytes every device put on
+    /// the wire across all steps (the measured RunTrace exchanges).
+    pub fn greedy_decode(&mut self, model: &str, ws: &WeightSet,
+                         prompt: &[i32], steps: usize, mode: Mode)
+                         -> Result<(Vec<i32>, usize)> {
+        let cfg = self.cfg(model)?;
+        if !cfg.causal {
+            bail!("greedy_decode needs a causal model, '{model}' is not");
+        }
+        let mut ids = prompt.to_vec();
+        let mut out = Vec::with_capacity(steps);
+        let mut exchanged = 0usize;
+        for _ in 0..steps {
+            let (padded, frontier) = crate::decode::window(&ids, cfg.n)?;
+            let raw = Tensor::from_i32(vec![1, cfg.n], padded)?;
+            let (logits, trace) =
+                self.forward(model, ws, "lm", &raw, mode)?;
+            exchanged += (0..mode.p())
+                .map(|d| trace.device_exchange_bytes(d))
+                .sum::<usize>();
+            let row = &logits.f32s()?
+                [frontier * cfg.vocab..(frontier + 1) * cfg.vocab];
+            let tok = crate::decode::greedy_pick(row) as i32;
+            ids.push(tok);
+            out.push(tok);
+        }
+        Ok((out, exchanged))
+    }
 }
 
 /// Bias for a plan; `duplicated = false` replaces ln g with 0 (keeps the

@@ -1,0 +1,240 @@
+//! Incremental Segment-Means (Eq. 11/12 over a fixed padded window).
+//!
+//! The decode window keeps the AOT-fixed sequence length N, so partition
+//! and segment geometry (Algorithm 1/2) never move during a session:
+//! appending the frontier token fills the next local row of its
+//! partition, and exactly **one** segment's mean changes. The state keeps
+//! per-segment running sums accumulated in position order — the same
+//! order `coordinator::segmeans::segment_means` sums a full partition —
+//! so a fully-filled segment's mean is bit-identical to the full
+//! recompute, and partially-filled segments only ever sit behind the
+//! partition-aware causal mask (a segment is visible to row t only once
+//! its last covered position <= t, i.e. once it is fully real).
+
+use anyhow::{bail, Result};
+
+use crate::coordinator::plan::segment_counts;
+use crate::runtime::Tensor;
+
+/// The single-segment update produced by appending one row.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SegDeltaRow {
+    /// Index of the (only) segment whose mean changed.
+    pub segment: usize,
+    /// Fresh mean of that segment, shape (D,).
+    pub mean: Tensor,
+    /// Real rows absorbed into the segment so far (== the Eq. 11
+    /// repetition count once the segment is full).
+    pub filled: usize,
+}
+
+/// Authoritative per-partition state on the device that owns it.
+pub struct SegMeansState {
+    counts: Vec<usize>,
+    /// Flattened (L, D) running sums in appended-row order.
+    sums: Vec<f32>,
+    /// Flattened (L, D) means (= sums * 1/c, refreshed on append).
+    means: Vec<f32>,
+    filled: Vec<usize>,
+    appended: usize,
+    d: usize,
+}
+
+impl SegMeansState {
+    /// Geometry for one partition of `n_p` padded rows and L segments.
+    pub fn new(n_p: usize, l: usize, d: usize) -> Result<SegMeansState> {
+        let counts = segment_counts(n_p, l)?;
+        Ok(SegMeansState {
+            counts,
+            sums: vec![0.0; l * d],
+            means: vec![0.0; l * d],
+            filled: vec![0; l],
+            appended: 0,
+            d,
+        })
+    }
+
+    pub fn l(&self) -> usize {
+        self.counts.len()
+    }
+
+    pub fn d(&self) -> usize {
+        self.d
+    }
+
+    /// Rows appended so far (the partition-local frontier).
+    pub fn appended(&self) -> usize {
+        self.appended
+    }
+
+    /// Segment that the next appended row lands in.
+    pub fn next_segment(&self) -> Option<usize> {
+        let mut acc = 0;
+        for (s, &c) in self.counts.iter().enumerate() {
+            acc += c;
+            if self.appended < acc {
+                return Some(s);
+            }
+        }
+        None
+    }
+
+    /// Append the next local row (strictly in position order) and return
+    /// the one-segment delta to broadcast.
+    pub fn append(&mut self, row: &[f32]) -> Result<SegDeltaRow> {
+        if row.len() != self.d {
+            bail!("row has {} elements, expected {}", row.len(), self.d);
+        }
+        let Some(seg) = self.next_segment() else {
+            bail!("partition full: {} rows already appended", self.appended);
+        };
+        let base = seg * self.d;
+        for (o, x) in self.sums[base..base + self.d].iter_mut().zip(row) {
+            *o += x;
+        }
+        // identical op order to segment_means: sum rows, then scale.
+        let inv = 1.0 / self.counts[seg] as f32;
+        for i in 0..self.d {
+            self.means[base + i] = self.sums[base + i] * inv;
+        }
+        self.filled[seg] += 1;
+        self.appended += 1;
+        Ok(SegDeltaRow {
+            segment: seg,
+            mean: Tensor::from_f32(
+                vec![self.d], self.means[base..base + self.d].to_vec())?,
+            filled: self.filled[seg],
+        })
+    }
+
+    /// Current mean row of one segment (partial segments are only ever
+    /// read from behind the causal mask).
+    pub fn mean_row(&self, segment: usize) -> &[f32] {
+        &self.means[segment * self.d..(segment + 1) * self.d]
+    }
+
+    /// True once every row of `segment` is real (its mean is final and
+    /// equals the full-recompute mean bit-for-bit).
+    pub fn segment_full(&self, segment: usize) -> bool {
+        self.filled[segment] == self.counts[segment]
+    }
+
+    pub fn counts(&self) -> &[usize] {
+        &self.counts
+    }
+}
+
+/// A peer's view of another device's segment means, kept in sync by
+/// applying `SegDelta` rows in arrival order.
+pub struct SegMirror {
+    means: Vec<f32>,
+    filled: Vec<usize>,
+    d: usize,
+}
+
+impl SegMirror {
+    pub fn new(l: usize, d: usize) -> SegMirror {
+        SegMirror { means: vec![0.0; l * d], filled: vec![0; l], d }
+    }
+
+    /// Install one received delta (mean already de-quantized).
+    pub fn apply(&mut self, segment: usize, mean: &[f32], filled: usize)
+                 -> Result<()> {
+        if mean.len() != self.d {
+            bail!("delta row has {} elements, expected {}", mean.len(),
+                  self.d);
+        }
+        if segment * self.d >= self.means.len() {
+            bail!("segment {segment} out of range");
+        }
+        self.means[segment * self.d..(segment + 1) * self.d]
+            .copy_from_slice(mean);
+        self.filled[segment] = filled;
+        Ok(())
+    }
+
+    pub fn mean_row(&self, segment: usize) -> &[f32] {
+        &self.means[segment * self.d..(segment + 1) * self.d]
+    }
+
+    pub fn filled(&self, segment: usize) -> usize {
+        self.filled[segment]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::segmeans::segment_means;
+    use crate::util::rng::{property, Rng};
+
+    #[test]
+    fn one_segment_changes_per_append() {
+        let mut st = SegMeansState::new(6, 2, 1).unwrap(); // segments 3+3
+        let deltas: Vec<usize> = (0..6)
+            .map(|i| st.append(&[i as f32]).unwrap().segment)
+            .collect();
+        assert_eq!(deltas, vec![0, 0, 0, 1, 1, 1]);
+        assert!(st.append(&[9.0]).is_err()); // full
+        assert!(st.segment_full(0) && st.segment_full(1));
+        // mean of 0,1,2 and 3,4,5
+        assert_eq!(st.mean_row(0), &[1.0]);
+        assert_eq!(st.mean_row(1), &[4.0]);
+    }
+
+    #[test]
+    fn full_segments_match_segment_means_bitwise() {
+        property("incremental-vs-full", 60, |rng: &mut Rng| {
+            let n_p = rng.range(4, 40);
+            let l = rng.range(1, n_p.min(8) + 1);
+            let d = rng.range(1, 5);
+            let rows: Vec<Vec<f32>> =
+                (0..n_p).map(|_| rng.normal_vec(d, 2.0)).collect();
+            let mut st = SegMeansState::new(n_p, l, d).unwrap();
+            for r in &rows {
+                st.append(r).unwrap();
+            }
+            let flat: Vec<f32> =
+                rows.iter().flatten().copied().collect();
+            let x = Tensor::from_f32(vec![1, n_p, d], flat).unwrap();
+            let full = segment_means(&x, l).unwrap();
+            let f = full.f32s().unwrap();
+            for s in 0..l {
+                assert!(st.segment_full(s));
+                // bit-identical, not approximately equal
+                assert_eq!(st.mean_row(s), &f[s * d..(s + 1) * d],
+                           "segment {s} n_p={n_p} l={l} d={d}");
+            }
+        });
+    }
+
+    #[test]
+    fn partial_segment_tracks_real_rows_only() {
+        let mut st = SegMeansState::new(4, 2, 1).unwrap();
+        let d = st.append(&[8.0]).unwrap();
+        assert_eq!((d.segment, d.filled), (0, 1));
+        // mean over the *fixed* count (2), not the filled count
+        assert_eq!(st.mean_row(0), &[4.0]);
+        assert_eq!(st.next_segment(), Some(0));
+        assert_eq!(st.counts(), &[2, 2]);
+        assert_eq!((st.l(), st.d(), st.appended()), (2, 1, 1));
+        assert!(st.append(&[0.0; 3]).is_err()); // wrong width
+    }
+
+    #[test]
+    fn mirror_applies_deltas() {
+        let mut st = SegMeansState::new(4, 2, 2).unwrap();
+        let mut mirror = SegMirror::new(2, 2);
+        for r in [[1.0f32, 2.0], [3.0, 4.0], [5.0, 6.0]] {
+            let delta = st.append(&r).unwrap();
+            mirror.apply(delta.segment, delta.mean.f32s().unwrap(),
+                         delta.filled).unwrap();
+        }
+        assert_eq!(mirror.mean_row(0), st.mean_row(0));
+        assert_eq!(mirror.mean_row(1), st.mean_row(1));
+        assert_eq!(mirror.filled(0), 2);
+        assert_eq!(mirror.filled(1), 1);
+        assert!(mirror.apply(5, &[0.0; 2], 0).is_err());
+        assert!(mirror.apply(0, &[0.0; 3], 0).is_err());
+    }
+}

@@ -1,0 +1,162 @@
+//! Per-device KV cache: one K and one V tensor per layer, shape
+//! (position, heads, head_dim) in the `runtime::tensor` row-major layout
+//! (position-major, so appending the frontier token is one
+//! `Tensor::push_row_f32`). Positions are partition-local: device d
+//! caches only rows for the token span `plan.start() .. start + n_p`.
+
+use anyhow::{bail, Result};
+
+use crate::runtime::Tensor;
+
+pub struct KvCache {
+    heads: usize,
+    head_dim: usize,
+    capacity: usize,
+    /// [layer] -> (K, V), each (len, heads, head_dim).
+    layers: Vec<(Tensor, Tensor)>,
+}
+
+impl KvCache {
+    /// Empty cache for `layers` Transformer layers; `capacity` is the
+    /// partition width (appends beyond it are rejected — the window is
+    /// full and the session must re-prefill on a slid window).
+    pub fn new(layers: usize, heads: usize, head_dim: usize,
+               capacity: usize) -> KvCache {
+        KvCache {
+            heads,
+            head_dim,
+            capacity,
+            layers: (0..layers)
+                .map(|_| {
+                    (Tensor::zeros_f32(vec![0, heads, head_dim]),
+                     Tensor::zeros_f32(vec![0, heads, head_dim]))
+                })
+                .collect(),
+        }
+    }
+
+    pub fn layers(&self) -> usize {
+        self.layers.len()
+    }
+
+    /// Cached positions at one layer (identical across layers once a
+    /// step completes; differs transiently mid-step).
+    pub fn len(&self, layer: usize) -> usize {
+        self.layers[layer].0.rows()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.layers.is_empty() || self.len(0) == 0
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Append the frontier token's K/V rows at one layer.
+    pub fn append(&mut self, layer: usize, k_row: &[f32], v_row: &[f32])
+                  -> Result<()> {
+        if layer >= self.layers.len() {
+            bail!("layer {layer} out of range ({})", self.layers.len());
+        }
+        if self.len(layer) >= self.capacity {
+            bail!("KV cache full at layer {layer} \
+                   (capacity {})", self.capacity);
+        }
+        let (k, v) = &mut self.layers[layer];
+        k.push_row_f32(k_row)?;
+        v.push_row_f32(v_row)
+    }
+
+    /// K row of a cached local position.
+    pub fn k_row(&self, layer: usize, pos: usize) -> Result<&[f32]> {
+        self.layers[layer].0.row_f32(pos)
+    }
+
+    pub fn v_row(&self, layer: usize, pos: usize) -> Result<&[f32]> {
+        self.layers[layer].1.row_f32(pos)
+    }
+
+    /// Cache contents of one layer as a `CacheSync` payload pair.
+    pub fn layer_tensors(&self, layer: usize) -> (&Tensor, &Tensor) {
+        (&self.layers[layer].0, &self.layers[layer].1)
+    }
+
+    /// Install rows received via `CacheSync` (session migration): the
+    /// sync must start exactly at the current frontier of this cache.
+    pub fn install(&mut self, layer: usize, start: usize, k: &Tensor,
+                   v: &Tensor) -> Result<()> {
+        if start != self.len(layer) {
+            bail!("CacheSync start {start} != cached len {}",
+                  self.len(layer));
+        }
+        if k.rows() != v.rows() {
+            bail!("CacheSync K/V row mismatch: {} vs {}", k.rows(),
+                  v.rows());
+        }
+        for r in 0..k.rows() {
+            self.append(layer, k.row_f32(r)?, v.row_f32(r)?)?;
+        }
+        Ok(())
+    }
+
+    /// Resident bytes across all layers (K + V).
+    pub fn byte_len(&self) -> usize {
+        self.layers.iter().map(|(k, v)| k.byte_len() + v.byte_len()).sum()
+    }
+
+    pub fn heads(&self) -> usize {
+        self.heads
+    }
+
+    pub fn head_dim(&self) -> usize {
+        self.head_dim
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn append_and_read_back() {
+        let mut c = KvCache::new(2, 2, 3, 4);
+        assert!(c.is_empty());
+        let k0: Vec<f32> = (0..6).map(|x| x as f32).collect();
+        let v0: Vec<f32> = (0..6).map(|x| x as f32 + 10.0).collect();
+        c.append(0, &k0, &v0).unwrap();
+        c.append(1, &k0, &v0).unwrap();
+        assert_eq!(c.len(0), 1);
+        assert_eq!(c.k_row(0, 0).unwrap(), &k0[..]);
+        assert_eq!(c.v_row(1, 0).unwrap(), &v0[..]);
+        assert!(!c.is_empty());
+        assert_eq!(c.byte_len(), 2 * 2 * 6 * 4);
+        assert_eq!((c.heads(), c.head_dim(), c.layers()), (2, 3, 2));
+    }
+
+    #[test]
+    fn capacity_enforced() {
+        let mut c = KvCache::new(1, 1, 2, 2);
+        c.append(0, &[1., 2.], &[3., 4.]).unwrap();
+        c.append(0, &[5., 6.], &[7., 8.]).unwrap();
+        assert!(c.append(0, &[9., 10.], &[11., 12.]).is_err());
+        assert!(c.append(1, &[0., 0.], &[0., 0.]).is_err()); // bad layer
+        assert_eq!(c.capacity(), 2);
+    }
+
+    #[test]
+    fn install_appends_contiguously() {
+        let mut a = KvCache::new(1, 1, 2, 8);
+        a.append(0, &[1., 2.], &[3., 4.]).unwrap();
+        let mut b = KvCache::new(1, 1, 2, 8);
+        b.append(0, &[1., 2.], &[3., 4.]).unwrap();
+        a.append(0, &[5., 6.], &[7., 8.]).unwrap();
+        let (k, v) = a.layer_tensors(0);
+        let (k2, v2) = (k.slice0(1, 2).unwrap(), v.slice0(1, 2).unwrap());
+        b.install(0, 1, &k2, &v2).unwrap();
+        assert_eq!(b.len(0), 2);
+        assert_eq!(b.k_row(0, 1).unwrap(), &[5., 6.]);
+        // non-contiguous sync rejected
+        assert!(b.install(0, 0, &k2, &v2).is_err());
+    }
+}

@@ -1,0 +1,133 @@
+//! Decode-session subsystem: distributed KV cache + incremental
+//! Segment-Means for autoregressive serving.
+//!
+//! The baseline GPT-2 path (`examples/gpt2_generate.rs` over
+//! `coordinator::Runner`) re-runs a *full* N-token distributed forward per
+//! emitted token — every K/V recomputed, every Segment-Means block
+//! re-exchanged, every step. This module makes decode incremental while
+//! keeping the partition-aware causal mask (§IV-D) semantics:
+//!
+//! * [`kvcache::KvCache`] — per-device layer × head × position K/V
+//!   tensors in the `runtime::tensor` layout, grown with the new
+//!   `Tensor::push_row_f32` append op;
+//! * [`incremental::SegMeansState`] — running per-segment sums over the
+//!   fixed Algorithm-2 geometry of the padded window, so appending the
+//!   frontier token changes exactly **one** segment mean, broadcast as a
+//!   single [`crate::net::message::Msg::SegDelta`] row (quantized via
+//!   `util::quant`) instead of the full L×D block;
+//! * [`session::DecodeSession`] — owns the caches and mirrors, runs the
+//!   per-token incremental forward (frontier row only, biased by
+//!   `PartitionPlan::bias_row`), and accounts wire bytes against the
+//!   full-recompute equivalent;
+//! * [`refmodel::RefGpt`] — a pure-rust row-wise reference Transformer
+//!   sharing `coordinator::plan` geometry and
+//!   `coordinator::segmeans::segment_means`. Row-wise computation makes
+//!   the incremental path **bit-identical** to full recompute (causal
+//!   invariance: a row's value never depends on later positions), which
+//!   the tests assert token-for-token.
+//!
+//! Why a reference model: the AOT executables are fixed-shape (B, N_p, D)
+//! block programs, so a per-token incremental step needs (1, 1, D)-shaped
+//! artifacts that `python/compile/aot.py` does not lower yet. The session
+//! therefore runs on the reference backend; `Runner::greedy_decode` is
+//! the AOT full-recompute baseline, and both share the same window/plan/
+//! bias/segment-means code so the AOT incremental step only needs the new
+//! executables dropped in. The serving layer integration lives in
+//! `server::DecodeScheduler` (continuous batching of active decode
+//! streams alongside prefill).
+
+pub mod incremental;
+pub mod kvcache;
+pub mod refmodel;
+pub mod session;
+
+pub use incremental::{SegDeltaRow, SegMeansState, SegMirror};
+pub use kvcache::KvCache;
+pub use refmodel::{RefCfg, RefGpt};
+pub use session::{full_recompute_bytes_per_token, DecodeSession,
+                  DecodeStats};
+
+use anyhow::{bail, Result};
+
+/// Fixed-width decode window: right-pad `ids` with the pad token (0) up
+/// to `n`, or keep the trailing `n` tokens once the sequence outgrows the
+/// window, and return the frontier row whose logits drive the next token.
+///
+/// Right-padding is safe under the partition-aware causal mask (§IV-D):
+/// position t ignores everything after t. This replaces the convoluted
+/// inline resize-then-overwrite in `gpt2_generate` (functionally correct,
+/// but it truncated the clone to the *first* n ids only to overwrite all
+/// of them with the last n) with a tested helper, and pins the frontier
+/// clamp `min(len, n) - 1` behind tests.
+pub fn window(ids: &[i32], n: usize) -> Result<(Vec<i32>, usize)> {
+    if ids.is_empty() || n == 0 {
+        bail!("window needs a non-empty id stream and n > 0 \
+               (len={}, n={n})", ids.len());
+    }
+    let frontier = ids.len().min(n) - 1;
+    let padded = if ids.len() >= n {
+        ids[ids.len() - n..].to_vec()
+    } else {
+        let mut p = ids.to_vec();
+        p.resize(n, 0);
+        p
+    };
+    Ok((padded, frontier))
+}
+
+/// Greedy pick over a logits row that never emits the pad token (id 0):
+/// the highest-logit id in `1..vocab`, ties to the lowest id. Shared by
+/// the incremental session and the full-recompute baselines so the two
+/// streams are comparable token-for-token.
+pub fn greedy_pick(row: &[f32]) -> usize {
+    let mut best = 1;
+    for (i, v) in row.iter().enumerate().skip(2) {
+        if *v > row[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn window_pads_short_sequences() {
+        let (padded, frontier) = window(&[5, 6, 7], 8).unwrap();
+        assert_eq!(padded, vec![5, 6, 7, 0, 0, 0, 0, 0]);
+        assert_eq!(frontier, 2);
+    }
+
+    #[test]
+    fn window_exact_fit() {
+        let ids: Vec<i32> = (1..=4).collect();
+        let (padded, frontier) = window(&ids, 4).unwrap();
+        assert_eq!(padded, ids);
+        assert_eq!(frontier, 3);
+    }
+
+    #[test]
+    fn window_slides_to_trailing_tokens() {
+        let ids: Vec<i32> = (1..=10).collect();
+        let (padded, frontier) = window(&ids, 4).unwrap();
+        assert_eq!(padded, vec![7, 8, 9, 10]);
+        assert_eq!(frontier, 3); // clamped to the last row
+    }
+
+    #[test]
+    fn window_rejects_degenerate_inputs() {
+        assert!(window(&[], 4).is_err());
+        assert!(window(&[1], 0).is_err());
+    }
+
+    #[test]
+    fn greedy_never_picks_pad() {
+        assert_eq!(greedy_pick(&[100.0, 1.0, 2.0, 0.5]), 2);
+        // pad has the max logit but is skipped
+        assert_eq!(greedy_pick(&[9.0, 3.0, 1.0]), 1);
+        // ties resolve to the lowest non-pad id (matches the old loop)
+        assert_eq!(greedy_pick(&[0.0, 5.0, 5.0]), 1);
+    }
+}

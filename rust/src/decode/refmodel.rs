@@ -1,0 +1,418 @@
+//! Pure-rust row-wise reference Transformer (`RefGpt`).
+//!
+//! The decode subsystem needs a forward path it can run one *row* at a
+//! time: the AOT executables are fixed-shape (B, N_p, D) block programs,
+//! so they can only full-recompute. `RefGpt` computes every position as
+//! an independent sequence of scalar ops (LayerNorm, Q/K/V projections,
+//! masked multi-head attention, GELU MLP), sharing the partition
+//! geometry, attention bias, and Segment-Means code of
+//! `coordinator::plan` / `coordinator::segmeans`. Because a row's value
+//! never depends on later positions (the partition-aware causal mask
+//! zeroes their softmax weight exactly — exp(-1e30) == 0.0 in f32), the
+//! incremental decode path reproduces the full-recompute path
+//! bit-for-bit; `session` tests assert identical token streams.
+//!
+//! Weights are deterministic (seeded `util::rng`), sized for testbed
+//! demos — this is a correctness/throughput vehicle for the decode
+//! protocol, not a trained model. The trained GPT-2 weights stay on the
+//! AOT path (`Runner::greedy_decode`).
+
+use anyhow::{bail, Result};
+
+use crate::coordinator::plan::plans;
+use crate::coordinator::segmeans::segment_means;
+use crate::runtime::Tensor;
+use crate::util::quant::{requantize, WireFmt};
+use crate::util::rng::Rng;
+
+use super::{greedy_pick, window};
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RefCfg {
+    pub vocab: usize,
+    pub n: usize,
+    pub d: usize,
+    pub heads: usize,
+    pub layers: usize,
+    pub ffn: usize,
+}
+
+struct LayerW {
+    ln1_g: Vec<f32>,
+    ln1_b: Vec<f32>,
+    /// (d, d) row-major (out, in).
+    wq: Vec<f32>,
+    wk: Vec<f32>,
+    wv: Vec<f32>,
+    wo: Vec<f32>,
+    ln2_g: Vec<f32>,
+    ln2_b: Vec<f32>,
+    /// (ffn, d) and (d, ffn).
+    w1: Vec<f32>,
+    b1: Vec<f32>,
+    w2: Vec<f32>,
+    b2: Vec<f32>,
+}
+
+pub struct RefGpt {
+    pub cfg: RefCfg,
+    tok_emb: Vec<f32>,
+    pos_emb: Vec<f32>,
+    blocks: Vec<LayerW>,
+    lnf_g: Vec<f32>,
+    lnf_b: Vec<f32>,
+    /// (vocab, d).
+    w_head: Vec<f32>,
+}
+
+fn layer_norm(x: &[f32], g: &[f32], b: &[f32]) -> Vec<f32> {
+    let n = x.len() as f32;
+    let mut mean = 0.0f32;
+    for v in x {
+        mean += v;
+    }
+    mean /= n;
+    let mut var = 0.0f32;
+    for v in x {
+        var += (v - mean) * (v - mean);
+    }
+    var /= n;
+    let inv = 1.0 / (var + 1e-5).sqrt();
+    x.iter()
+        .zip(g.iter().zip(b))
+        .map(|(v, (gg, bb))| (v - mean) * inv * gg + bb)
+        .collect()
+}
+
+/// w is (out_dim, in) row-major; sequential accumulation per output.
+fn matvec(w: &[f32], x: &[f32], out_dim: usize) -> Vec<f32> {
+    let d = x.len();
+    let mut out = Vec::with_capacity(out_dim);
+    for o in 0..out_dim {
+        let row = &w[o * d..(o + 1) * d];
+        let mut acc = 0.0f32;
+        for (a, b) in row.iter().zip(x) {
+            acc += a * b;
+        }
+        out.push(acc);
+    }
+    out
+}
+
+fn gelu(x: f32) -> f32 {
+    // tanh approximation; deterministic and identical across call sites.
+    let c = (2.0f32 / std::f32::consts::PI).sqrt();
+    0.5 * x * (1.0 + (c * (x + 0.044715 * x * x * x)).tanh())
+}
+
+impl RefGpt {
+    /// Deterministically initialised model (same seed -> same weights).
+    pub fn tiny(seed: u64, cfg: RefCfg) -> Result<RefGpt> {
+        if cfg.d == 0 || cfg.heads == 0 || cfg.d % cfg.heads != 0 {
+            bail!("d={} must be a positive multiple of heads={}", cfg.d,
+                  cfg.heads);
+        }
+        if cfg.vocab < 2 || cfg.n == 0 || cfg.layers == 0 || cfg.ffn == 0 {
+            bail!("degenerate RefCfg {cfg:?}");
+        }
+        let mut rng = Rng::new(seed);
+        let ws = 1.0 / (cfg.d as f32).sqrt();
+        let mut mat = |rows: usize, cols: usize, scale: f32| {
+            rng.normal_vec(rows * cols, scale)
+        };
+        let tok_emb = mat(cfg.vocab, cfg.d, 0.5);
+        let pos_emb = mat(cfg.n, cfg.d, 0.25);
+        let mut blocks = Vec::with_capacity(cfg.layers);
+        for _ in 0..cfg.layers {
+            blocks.push(LayerW {
+                ln1_g: vec![1.0; cfg.d],
+                ln1_b: vec![0.0; cfg.d],
+                wq: mat(cfg.d, cfg.d, ws),
+                wk: mat(cfg.d, cfg.d, ws),
+                wv: mat(cfg.d, cfg.d, ws),
+                wo: mat(cfg.d, cfg.d, ws),
+                ln2_g: vec![1.0; cfg.d],
+                ln2_b: vec![0.0; cfg.d],
+                w1: mat(cfg.ffn, cfg.d, ws),
+                b1: vec![0.0; cfg.ffn],
+                w2: mat(cfg.d, cfg.ffn, 1.0 / (cfg.ffn as f32).sqrt()),
+                b2: vec![0.0; cfg.d],
+            });
+        }
+        let lnf_g = vec![1.0; cfg.d];
+        let lnf_b = vec![0.0; cfg.d];
+        let w_head = mat(cfg.vocab, cfg.d, ws);
+        Ok(RefGpt { cfg, tok_emb, pos_emb, blocks, lnf_g, lnf_b, w_head })
+    }
+
+    /// Token + position embedding for one row.
+    pub fn embed_row(&self, token: i32, pos: usize) -> Result<Vec<f32>> {
+        let t = token as usize;
+        if token < 0 || t >= self.cfg.vocab || pos >= self.cfg.n {
+            bail!("embed out of range: token {token} pos {pos} \
+                   (vocab {}, n {})", self.cfg.vocab, self.cfg.n);
+        }
+        let d = self.cfg.d;
+        Ok(self.tok_emb[t * d..(t + 1) * d]
+            .iter()
+            .zip(&self.pos_emb[pos * d..(pos + 1) * d])
+            .map(|(a, b)| a + b)
+            .collect())
+    }
+
+    /// This layer's K/V projection of one (local or context) row.
+    pub fn kv_row(&self, layer: usize, x: &[f32]) -> (Vec<f32>, Vec<f32>) {
+        let blk = &self.blocks[layer];
+        let h = layer_norm(x, &blk.ln1_g, &blk.ln1_b);
+        (matvec(&blk.wk, &h, self.cfg.d), matvec(&blk.wv, &h, self.cfg.d))
+    }
+
+    pub fn q_row(&self, layer: usize, x: &[f32]) -> Vec<f32> {
+        let blk = &self.blocks[layer];
+        let h = layer_norm(x, &blk.ln1_g, &blk.ln1_b);
+        matvec(&blk.wq, &h, self.cfg.d)
+    }
+
+    /// One row through block `layer`: masked multi-head attention over
+    /// the assembled (n_hat, d) `keys`/`vals` columns with the plan bias
+    /// row, attention output projection, residual, and the GELU MLP.
+    /// Masked columns carry exactly zero softmax weight, so zero-filled
+    /// (uncached) column rows reproduce the full recompute bit-for-bit.
+    pub fn attn_mlp_row(&self, layer: usize, x: &[f32], q: &[f32],
+                        keys: &[f32], vals: &[f32], bias: &[f32])
+                        -> Vec<f32> {
+        let d = self.cfg.d;
+        let heads = self.cfg.heads;
+        let hd = d / heads;
+        let n_hat = bias.len();
+        let inv_sqrt = 1.0 / (hd as f32).sqrt();
+        let blk = &self.blocks[layer];
+        let mut attn = vec![0.0f32; d];
+        let mut scores = vec![0.0f32; n_hat];
+        let mut wts = vec![0.0f32; n_hat];
+        for h in 0..heads {
+            let qh = &q[h * hd..(h + 1) * hd];
+            let mut maxs = f32::NEG_INFINITY;
+            for (j, s) in scores.iter_mut().enumerate() {
+                let kh = &keys[j * d + h * hd..j * d + (h + 1) * hd];
+                let mut dot = 0.0f32;
+                for (a, b) in qh.iter().zip(kh) {
+                    dot += a * b;
+                }
+                *s = dot * inv_sqrt + bias[j];
+                if *s > maxs {
+                    maxs = *s;
+                }
+            }
+            let mut denom = 0.0f32;
+            for (w, s) in wts.iter_mut().zip(&scores) {
+                *w = (s - maxs).exp();
+                denom += *w;
+            }
+            let inv_denom = 1.0 / denom;
+            for e in 0..hd {
+                let mut acc = 0.0f32;
+                for (j, w) in wts.iter().enumerate() {
+                    acc += w * vals[j * d + h * hd + e];
+                }
+                attn[h * hd + e] = acc * inv_denom;
+            }
+        }
+        let proj = matvec(&blk.wo, &attn, d);
+        let mut y: Vec<f32> =
+            x.iter().zip(&proj).map(|(a, b)| a + b).collect();
+        let h2 = layer_norm(&y, &blk.ln2_g, &blk.ln2_b);
+        let mut ff = matvec(&blk.w1, &h2, self.cfg.ffn);
+        for (f, b) in ff.iter_mut().zip(&blk.b1) {
+            *f = gelu(*f + b);
+        }
+        let f2 = matvec(&blk.w2, &ff, d);
+        for i in 0..d {
+            y[i] += f2[i] + blk.b2[i];
+        }
+        y
+    }
+
+    /// LM head over one final hidden row.
+    pub fn logits_row(&self, x: &[f32]) -> Vec<f32> {
+        let h = layer_norm(x, &self.lnf_g, &self.lnf_b);
+        matvec(&self.w_head, &h, self.cfg.vocab)
+    }
+
+    /// Full-recompute distributed forward over a padded window of
+    /// exactly `cfg.n` ids: the PRISM protocol (partition, per-layer
+    /// Segment-Means context exchange at `wire` precision, partition-
+    /// aware causal bias) computed row-wise. Returns the (n * d) final
+    /// hidden rows. This is the baseline the incremental session is
+    /// verified against, and mirrors `Runner::blocks_prism` over plans
+    /// from `coordinator::plan`.
+    pub fn forward_full(&self, padded: &[i32], p: usize, l: usize,
+                        wire: WireFmt) -> Result<Vec<f32>> {
+        let RefCfg { n, d, layers, .. } = self.cfg;
+        if padded.len() != n {
+            bail!("forward_full wants exactly {n} ids, got {}",
+                  padded.len());
+        }
+        let pls = plans(n, p, l, true)?;
+        let mut x = Vec::with_capacity(n * d);
+        for (pos, &id) in padded.iter().enumerate() {
+            x.extend(self.embed_row(id, pos)?);
+        }
+        for layer in 0..layers {
+            // the per-layer landmark exchange: Segment Means of every
+            // partition's current hidden rows, at wire precision.
+            let mut zs = Vec::with_capacity(p);
+            for pl in &pls {
+                let part = Tensor::from_f32(
+                    vec![1, pl.n_p(), d],
+                    x[pl.start() * d..(pl.start() + pl.n_p()) * d].to_vec(),
+                )?;
+                zs.push(requantize(&segment_means(&part, l)?, wire)?);
+            }
+            let mut x_new = vec![0.0f32; n * d];
+            for pl in &pls {
+                let n_hat = pl.n_hat();
+                let mut cols = Vec::with_capacity(n_hat * d);
+                cols.extend_from_slice(
+                    &x[pl.start() * d..(pl.start() + pl.n_p()) * d]);
+                for j in pl.peers() {
+                    cols.extend_from_slice(zs[j].f32s()?);
+                }
+                let mut keys = vec![0.0f32; n_hat * d];
+                let mut vals = vec![0.0f32; n_hat * d];
+                for c in 0..n_hat {
+                    let (k, v) =
+                        self.kv_row(layer, &cols[c * d..(c + 1) * d]);
+                    keys[c * d..(c + 1) * d].copy_from_slice(&k);
+                    vals[c * d..(c + 1) * d].copy_from_slice(&v);
+                }
+                let bias = pl.bias()?;
+                let bias_f = bias.f32s()?;
+                for i in 0..pl.n_p() {
+                    let t = pl.start() + i;
+                    let xr = &x[t * d..(t + 1) * d];
+                    let q = self.q_row(layer, xr);
+                    let out = self.attn_mlp_row(
+                        layer, xr, &q, &keys, &vals,
+                        &bias_f[i * n_hat..(i + 1) * n_hat]);
+                    x_new[t * d..(t + 1) * d].copy_from_slice(&out);
+                }
+            }
+            x = x_new;
+        }
+        Ok(x)
+    }
+
+    /// Greedy decode by full recompute: one `forward_full` per emitted
+    /// token (what the AOT path does today). Returns the generated ids
+    /// and the total Segment-Means bytes a real deployment would have
+    /// exchanged (layers x P x (P-1) peers x L rows at wire precision,
+    /// per step — the `model::comm` PDPLC accounting).
+    pub fn greedy_decode_full(&self, prompt: &[i32], steps: usize,
+                              p: usize, l: usize, wire: WireFmt)
+                              -> Result<(Vec<i32>, usize)> {
+        let d = self.cfg.d;
+        let mut ids = prompt.to_vec();
+        let mut out = Vec::with_capacity(steps);
+        let mut bytes = 0usize;
+        for _ in 0..steps {
+            let (padded, frontier) = window(&ids, self.cfg.n)?;
+            let x = self.forward_full(&padded, p, l, wire)?;
+            let logits =
+                self.logits_row(&x[frontier * d..(frontier + 1) * d]);
+            bytes += super::session::full_recompute_bytes_per_token(
+                self.cfg.layers, p, l, d, wire);
+            let tok = greedy_pick(&logits) as i32;
+            ids.push(tok);
+            out.push(tok);
+        }
+        Ok((out, bytes))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn model() -> RefGpt {
+        RefGpt::tiny(7, RefCfg {
+            vocab: 12,
+            n: 16,
+            d: 8,
+            heads: 2,
+            layers: 2,
+            ffn: 16,
+        })
+        .unwrap()
+    }
+
+    #[test]
+    fn deterministic_and_validated() {
+        let a = model();
+        let b = model();
+        assert_eq!(a.embed_row(3, 2).unwrap(), b.embed_row(3, 2).unwrap());
+        assert!(a.embed_row(99, 0).is_err());
+        assert!(a.embed_row(0, 99).is_err());
+        assert!(RefGpt::tiny(1, RefCfg {
+            vocab: 12, n: 16, d: 9, heads: 2, layers: 1, ffn: 4
+        }).is_err());
+    }
+
+    #[test]
+    fn forward_shapes_and_finite() {
+        let m = model();
+        let ids = vec![1i32; 16];
+        let x = m.forward_full(&ids, 2, 4, WireFmt::F32).unwrap();
+        assert_eq!(x.len(), 16 * 8);
+        assert!(x.iter().all(|v| v.is_finite()));
+        let logits = m.logits_row(&x[..8]);
+        assert_eq!(logits.len(), 12);
+        assert!(m.forward_full(&ids[..8], 2, 4, WireFmt::F32).is_err());
+    }
+
+    #[test]
+    fn causal_invariance_under_append() {
+        // Rows at positions < t are bit-identical whether later positions
+        // hold pads or real tokens — the property the KV cache relies on.
+        let m = model();
+        let (a, _) = window(&[3, 4, 5], 16).unwrap();
+        let (b, _) = window(&[3, 4, 5, 6, 7], 16).unwrap();
+        for (p, l) in [(1, 1), (2, 4), (2, 8)] {
+            let xa = m.forward_full(&a, p, l, WireFmt::F32).unwrap();
+            let xb = m.forward_full(&b, p, l, WireFmt::F32).unwrap();
+            assert_eq!(&xa[..3 * 8], &xb[..3 * 8], "p={p} l={l}");
+            // and the later real token does change its own row
+            assert_ne!(&xa[3 * 8..4 * 8], &xb[3 * 8..4 * 8]);
+        }
+    }
+
+    #[test]
+    fn distributed_approximates_single() {
+        let m = model();
+        let ids: Vec<i32> = (0..16).map(|i| (i % 11) as i32 + 1).collect();
+        let single = m.forward_full(&ids, 1, 1, WireFmt::F32).unwrap();
+        let dist = m.forward_full(&ids, 2, 4, WireFmt::F32).unwrap();
+        let err = single
+            .iter()
+            .zip(&dist)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        assert!(err > 0.0, "compression should perturb something");
+        assert!(err < 50.0, "but not explode: {err}");
+    }
+
+    #[test]
+    fn greedy_decode_full_counts_bytes() {
+        let m = model();
+        let (toks, bytes) =
+            m.greedy_decode_full(&[1, 2], 3, 2, 4, WireFmt::F32).unwrap();
+        assert_eq!(toks.len(), 3);
+        assert!(toks.iter().all(|&t| t > 0 && (t as usize) < 12));
+        // layers(2) x p(2) x peers(1) x L*D(32) floats x 3 steps
+        assert_eq!(bytes, 2 * 2 * 32 * 4 * 3);
+        // single-device decode exchanges nothing
+        let (_, b1) =
+            m.greedy_decode_full(&[1, 2], 3, 1, 1, WireFmt::F32).unwrap();
+        assert_eq!(b1, 0);
+    }
+}

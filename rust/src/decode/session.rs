@@ -1,0 +1,501 @@
+//! `DecodeSession`: incremental distributed autoregressive decoding.
+//!
+//! One session owns the full decode-time state of Fig. 1's device mesh
+//! for a single stream: per-device KV caches (`KvCache`), the
+//! authoritative per-device Segment-Means states plus every device's
+//! mirror of its peers (`SegMeansState` / projected context K/V), and
+//! the sequence frontier. Per absorbed token only the frontier device
+//! computes — embed row, per-layer Q/K/V of the new position, attention
+//! over cached local K/V plus mirrored peer context with the causal-mask
+//! bias sliced to the frontier row (`PartitionPlan::bias_row`) — and per
+//! layer broadcasts a single `Msg::SegDelta` row (the one segment whose
+//! mean changed, quantized at the session's wire format) instead of the
+//! full L x D Segment-Means block. Deltas go through the real message
+//! codec so the accounted bytes are the bytes a TCP mesh would carry.
+//!
+//! The window is fixed at `cfg.n` (right-padded; §IV-D makes padding
+//! safe), so partition/segment geometry never moves and the incremental
+//! stream is bit-identical to `RefGpt::greedy_decode_full` — asserted
+//! token-for-token in the tests below, including across the partition
+//! boundary. Once `n` positions are absorbed the session is full and the
+//! caller re-prefills on a slid `window` (positions shift, invalidating
+//! every cache — the classic sliding-window refill).
+
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::plan::{plans, PartitionPlan};
+use crate::net::message::Msg;
+use crate::util::quant::WireFmt;
+
+use super::incremental::{SegMeansState, SegMirror};
+use super::kvcache::KvCache;
+use super::refmodel::RefGpt;
+use super::greedy_pick;
+
+/// Wire-byte accounting for one session.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct DecodeStats {
+    /// Positions absorbed (prefill + generated).
+    pub absorbed: usize,
+    /// Tokens emitted by `generate_next`.
+    pub generated: usize,
+    /// SegDelta payload bytes broadcast to peers.
+    pub delta_bytes: usize,
+    /// Token-id broadcasts keeping peers' streams in sync.
+    pub sync_bytes: usize,
+    /// SegDelta messages sent.
+    pub delta_messages: usize,
+}
+
+impl DecodeStats {
+    /// Total bytes this session put on the wire.
+    pub fn wire_bytes(&self) -> usize {
+        self.delta_bytes + self.sync_bytes
+    }
+
+    /// Fold another session's counters into this aggregate (scheduler
+    /// totals). Lives here so a new field cannot be silently dropped
+    /// from aggregation elsewhere.
+    pub fn merge(&mut self, other: &DecodeStats) {
+        let DecodeStats { absorbed, generated, delta_bytes, sync_bytes,
+                          delta_messages } = *other;
+        self.absorbed += absorbed;
+        self.generated += generated;
+        self.delta_bytes += delta_bytes;
+        self.sync_bytes += sync_bytes;
+        self.delta_messages += delta_messages;
+    }
+
+    /// Average wire bytes per absorbed position (prefill + generated).
+    pub fn bytes_per_token(&self) -> f64 {
+        if self.absorbed == 0 {
+            0.0
+        } else {
+            self.wire_bytes() as f64 / self.absorbed as f64
+        }
+    }
+
+    /// Average wire bytes per *generated* token, charging prefill to the
+    /// generation — the directly comparable counterpart of
+    /// `full_recompute_bytes_per_token` (which is per emitted token).
+    pub fn bytes_per_generated(&self) -> f64 {
+        if self.generated == 0 {
+            0.0
+        } else {
+            self.wire_bytes() as f64 / self.generated as f64
+        }
+    }
+}
+
+/// Segment-Means bytes one *full recompute* step exchanges for the same
+/// geometry (layers x devices x peers x L rows of D at wire precision):
+/// the per-token cost of the baseline the session replaces.
+pub fn full_recompute_bytes_per_token(layers: usize, p: usize, l: usize,
+                                      d: usize, wire: WireFmt) -> usize {
+    layers * p * p.saturating_sub(1) * wire.wire_bytes(l * d, l)
+}
+
+struct DeviceCtx {
+    /// Projection cache over the mirror: this layer's K/V of each of the
+    /// device's segment-mean rows, flattened (L, D). Only the one row
+    /// named by an arriving SegDelta is re-projected.
+    ctx_k: Vec<f32>,
+    ctx_v: Vec<f32>,
+}
+
+pub struct DecodeSession {
+    model: Arc<RefGpt>,
+    p: usize,
+    l: usize,
+    wire: WireFmt,
+    pls: Vec<PartitionPlan>,
+    /// [device] -> flattened (n_p, n_hat) bias rows (ln g + causal mask),
+    /// precomputed once from `PartitionPlan::bias_row` — geometry is
+    /// fixed for the session's lifetime, so the per-token path only
+    /// indexes.
+    biases: Vec<Vec<f32>>,
+    /// [device] -> peer indices in global (Z_cat) order.
+    peer_lists: Vec<Vec<usize>>,
+    ids: Vec<i32>,
+    /// [device] -> KV cache over its own positions (layer x head x pos).
+    caches: Vec<KvCache>,
+    /// [layer][device] -> authoritative Segment-Means running state.
+    segs: Vec<Vec<SegMeansState>>,
+    /// [layer][device] -> every peer's mirror of `device`'s segment
+    /// means, maintained by applying decoded SegDelta rows
+    /// (single-process: one shared copy, byte-accounted as the
+    /// (P-1)-way broadcast it stands for).
+    mirrors: Vec<Vec<SegMirror>>,
+    /// [layer][device] -> projected context K/V derived from `mirrors`.
+    ctx: Vec<Vec<DeviceCtx>>,
+    last_logits: Option<Vec<f32>>,
+    stats: DecodeStats,
+}
+
+impl DecodeSession {
+    pub fn new(model: Arc<RefGpt>, p: usize, l: usize, wire: WireFmt)
+               -> Result<DecodeSession> {
+        let cfg = model.cfg;
+        if p == 0 || l == 0 {
+            bail!("DecodeSession needs P >= 1 and L >= 1 (got P={p} L={l})");
+        }
+        let pls = plans(cfg.n, p, l, true)?;
+        let hd = cfg.d / cfg.heads;
+        let caches = pls
+            .iter()
+            .map(|pl| KvCache::new(cfg.layers, cfg.heads, hd, pl.n_p()))
+            .collect();
+        let segs = (0..cfg.layers)
+            .map(|_| {
+                pls.iter()
+                    .map(|pl| SegMeansState::new(pl.n_p(), l, cfg.d))
+                    .collect::<Result<Vec<_>>>()
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let biases = pls
+            .iter()
+            .map(|pl| -> Result<Vec<f32>> {
+                let mut rows = Vec::with_capacity(pl.n_p() * pl.n_hat());
+                for t in pl.start()..pl.start() + pl.n_p() {
+                    rows.extend(pl.bias_row(t)?);
+                }
+                Ok(rows)
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let peer_lists = pls.iter().map(|pl| pl.peers()).collect();
+        let mirrors = (0..cfg.layers)
+            .map(|_| (0..p).map(|_| SegMirror::new(l, cfg.d)).collect())
+            .collect();
+        let ctx = (0..cfg.layers)
+            .map(|_| {
+                (0..p)
+                    .map(|_| DeviceCtx {
+                        ctx_k: vec![0.0; l * cfg.d],
+                        ctx_v: vec![0.0; l * cfg.d],
+                    })
+                    .collect()
+            })
+            .collect();
+        Ok(DecodeSession {
+            model,
+            p,
+            l,
+            wire,
+            pls,
+            biases,
+            peer_lists,
+            ids: Vec::new(),
+            caches,
+            segs,
+            mirrors,
+            ctx,
+            last_logits: None,
+            stats: DecodeStats::default(),
+        })
+    }
+
+    pub fn len(&self) -> usize {
+        self.ids.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ids.is_empty()
+    }
+
+    /// Window positions still available before the session is full.
+    pub fn remaining(&self) -> usize {
+        self.model.cfg.n - self.ids.len()
+    }
+
+    pub fn stats(&self) -> DecodeStats {
+        self.stats
+    }
+
+    pub fn ids(&self) -> &[i32] {
+        &self.ids
+    }
+
+    /// Resident KV-cache bytes across all devices.
+    pub fn cache_bytes(&self) -> usize {
+        self.caches.iter().map(|c| c.byte_len()).sum()
+    }
+
+    fn device_of(&self, pos: usize) -> usize {
+        self.pls
+            .iter()
+            .position(|pl| pos >= pl.start() && pos < pl.start() + pl.n_p())
+            .expect("position inside the window")
+    }
+
+    /// Absorb one token at the frontier: the incremental forward.
+    /// Returns the logits row at the new position (the next-token
+    /// distribution).
+    fn absorb(&mut self, token: i32) -> Result<Vec<f32>> {
+        let cfg = self.model.cfg;
+        let pos = self.ids.len();
+        if pos >= cfg.n {
+            bail!("decode window full ({} positions): slide the window \
+                   and re-prefill", cfg.n);
+        }
+        let dev = self.device_of(pos);
+        let (start, n_p, n_hat) = {
+            let pl = &self.pls[dev];
+            (pl.start(), pl.n_p(), pl.n_hat())
+        };
+        let local = pos - start;
+        if self.caches[dev].len(0) != local {
+            bail!("cache frontier {} out of sync with position {pos}",
+                  self.caches[dev].len(0));
+        }
+        let d = cfg.d;
+        let mut x = self.model.embed_row(token, pos)?;
+        for layer in 0..cfg.layers {
+            // 1. incremental Segment Means: one segment changes; its
+            //    quantized row is what every peer's mirror installs.
+            let delta = self.segs[layer][dev].append(&x)?;
+            let msg = Msg::seg_delta(layer as u32, dev as u32,
+                                     delta.segment as u32,
+                                     delta.filled as u32, &delta.mean,
+                                     self.wire)?;
+            if self.p > 1 {
+                self.stats.delta_bytes += msg.wire_bytes() * (self.p - 1);
+                self.stats.delta_messages += self.p - 1;
+            }
+            let qmean = msg.seg_delta_mean()?;
+            self.mirrors[layer][dev].apply(delta.segment,
+                                           qmean.f32s()?,
+                                           delta.filled)?;
+            let (ck, cv) = self.model.kv_row(
+                layer, self.mirrors[layer][dev].mean_row(delta.segment));
+            let base = delta.segment * d;
+            let slot = &mut self.ctx[layer][dev];
+            slot.ctx_k[base..base + d].copy_from_slice(&ck);
+            slot.ctx_v[base..base + d].copy_from_slice(&cv);
+
+            // 2. the frontier row's Q/K/V; K/V join the device cache.
+            let q = self.model.q_row(layer, &x);
+            let (k, v) = self.model.kv_row(layer, &x);
+            self.caches[dev].append(layer, &k, &v)?;
+
+            // 3. assemble attention columns: cached local rows (later
+            //    local positions stay zero — exactly masked), then each
+            //    peer's mirrored context rows in global order.
+            let mut keys = vec![0.0f32; n_hat * d];
+            let mut vals = vec![0.0f32; n_hat * d];
+            for j in 0..=local {
+                keys[j * d..(j + 1) * d]
+                    .copy_from_slice(self.caches[dev].k_row(layer, j)?);
+                vals[j * d..(j + 1) * d]
+                    .copy_from_slice(self.caches[dev].v_row(layer, j)?);
+            }
+            let mut col = n_p;
+            for &peer in &self.peer_lists[dev] {
+                let pc = &self.ctx[layer][peer];
+                keys[col * d..(col + self.l) * d]
+                    .copy_from_slice(&pc.ctx_k);
+                vals[col * d..(col + self.l) * d]
+                    .copy_from_slice(&pc.ctx_v);
+                col += self.l;
+            }
+
+            // 4. one-row block compute, biased to the frontier row.
+            let bias =
+                &self.biases[dev][local * n_hat..(local + 1) * n_hat];
+            x = self.model.attn_mlp_row(layer, &x, &q, &keys, &vals,
+                                        bias);
+        }
+        self.ids.push(token);
+        if self.p > 1 {
+            self.stats.sync_bytes += (self.p - 1) * 4; // token broadcast
+        }
+        self.stats.absorbed += 1;
+        Ok(self.model.logits_row(&x))
+    }
+
+    /// Absorb the prompt token-by-token (chunkable by the scheduler).
+    pub fn prefill(&mut self, prompt: &[i32]) -> Result<()> {
+        if prompt.is_empty() {
+            bail!("empty prompt");
+        }
+        for &t in prompt {
+            let logits = self.absorb(t)?;
+            self.last_logits = Some(logits);
+        }
+        Ok(())
+    }
+
+    /// Emit the next greedy token and absorb it.
+    pub fn generate_next(&mut self) -> Result<i32> {
+        let logits = self
+            .last_logits
+            .as_ref()
+            .context("generate_next before prefill")?;
+        let tok = greedy_pick(logits) as i32;
+        let logits = self.absorb(tok)?;
+        self.last_logits = Some(logits);
+        self.stats.generated += 1;
+        Ok(tok)
+    }
+
+    /// `CacheSync` messages that would ship this session's KV state to a
+    /// replacement device (migration): one message per layer per device.
+    pub fn cache_sync_msgs(&self) -> Vec<Msg> {
+        let mut out = Vec::new();
+        for (dev, cache) in self.caches.iter().enumerate() {
+            for layer in 0..cache.layers() {
+                let (k, v) = cache.layer_tensors(layer);
+                out.push(Msg::CacheSync {
+                    from: dev as u32,
+                    layer: layer as u32,
+                    start: 0,
+                    k: k.clone(),
+                    v: v.clone(),
+                });
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::decode::refmodel::RefCfg;
+    use crate::decode::window;
+
+    fn model() -> Arc<RefGpt> {
+        Arc::new(RefGpt::tiny(11, RefCfg {
+            vocab: 20,
+            n: 32,
+            d: 16,
+            heads: 2,
+            layers: 2,
+            ffn: 32,
+        })
+        .unwrap())
+    }
+
+    /// The acceptance criterion: incremental greedy decode emits a token
+    /// stream *identical* to the full-recompute baseline — across the
+    /// P=2 partition boundary (position 16 of 32) and at every wire
+    /// precision (quantization is deterministic, so it commutes with the
+    /// identity).
+    #[test]
+    fn incremental_matches_full_recompute_stream() {
+        let m = model();
+        let prompt = vec![3i32, 7, 1, 12, 5, 9];
+        let steps = 22; // 6 + 22 = 28 <= 32, crosses position 16
+        for wire in [WireFmt::F32, WireFmt::F16, WireFmt::I8] {
+            let (full, _) = m
+                .greedy_decode_full(&prompt, steps, 2, 4, wire)
+                .unwrap();
+            let mut sess =
+                DecodeSession::new(m.clone(), 2, 4, wire).unwrap();
+            sess.prefill(&prompt).unwrap();
+            let inc: Vec<i32> = (0..steps)
+                .map(|_| sess.generate_next().unwrap())
+                .collect();
+            assert_eq!(inc, full, "wire {wire:?}");
+            assert_eq!(sess.stats().generated, steps);
+            assert_eq!(sess.stats().absorbed, prompt.len() + steps);
+        }
+    }
+
+    #[test]
+    fn incremental_matches_full_at_p3() {
+        let m = model();
+        let prompt = vec![2i32, 8, 8, 4];
+        let steps = 18;
+        let (full, _) = m
+            .greedy_decode_full(&prompt, steps, 3, 3, WireFmt::F32)
+            .unwrap();
+        let mut sess =
+            DecodeSession::new(m.clone(), 3, 3, WireFmt::F32).unwrap();
+        sess.prefill(&prompt).unwrap();
+        let inc: Vec<i32> =
+            (0..steps).map(|_| sess.generate_next().unwrap()).collect();
+        assert_eq!(inc, full);
+    }
+
+    #[test]
+    fn delta_bytes_beat_full_recompute_by_5x() {
+        let m = model();
+        let cfg = m.cfg;
+        let (p, l) = (2, 4);
+        let mut sess =
+            DecodeSession::new(m.clone(), p, l, WireFmt::F32).unwrap();
+        sess.prefill(&[1, 2, 3, 4]).unwrap();
+        for _ in 0..20 {
+            sess.generate_next().unwrap();
+        }
+        let st = sess.stats();
+        let full_per_tok = full_recompute_bytes_per_token(
+            cfg.layers, p, l, cfg.d, WireFmt::F32);
+        let full_total = full_per_tok * st.generated;
+        assert!(st.wire_bytes() * 5 <= full_total,
+                "incremental {} vs full {}", st.wire_bytes(), full_total);
+        // exact accounting: layers x (P-1) x D floats per absorbed token
+        assert_eq!(st.delta_bytes,
+                   st.absorbed * cfg.layers * (p - 1) * cfg.d * 4);
+        assert_eq!(st.sync_bytes, st.absorbed * (p - 1) * 4);
+        assert!(st.bytes_per_token() > 0.0);
+        // KV cache holds K+V per layer per absorbed position
+        assert_eq!(sess.cache_bytes(),
+                   2 * cfg.layers * st.absorbed * cfg.d * 4);
+    }
+
+    #[test]
+    fn window_full_is_reported() {
+        let m = model();
+        let mut sess =
+            DecodeSession::new(m.clone(), 2, 4, WireFmt::F32).unwrap();
+        let prompt: Vec<i32> = (0..31).map(|i| (i % 19) as i32 + 1).collect();
+        sess.prefill(&prompt).unwrap();
+        assert_eq!(sess.remaining(), 1);
+        sess.generate_next().unwrap(); // fills position 31
+        let err = sess.generate_next().unwrap_err();
+        assert!(format!("{err}").contains("window full"), "{err}");
+        // a slid window re-prefills a fresh session and keeps decoding
+        let (padded, _) = window(sess.ids(), 16).unwrap();
+        let mut slid =
+            DecodeSession::new(m.clone(), 2, 4, WireFmt::F32).unwrap();
+        slid.prefill(&padded).unwrap();
+        assert!(slid.generate_next().is_ok());
+    }
+
+    #[test]
+    fn session_guards() {
+        let m = model();
+        assert!(DecodeSession::new(m.clone(), 0, 4, WireFmt::F32).is_err());
+        assert!(DecodeSession::new(m.clone(), 2, 0, WireFmt::F32).is_err());
+        let mut sess =
+            DecodeSession::new(m.clone(), 2, 4, WireFmt::F32).unwrap();
+        assert!(sess.generate_next().is_err()); // no prefill yet
+        assert!(sess.prefill(&[]).is_err());
+        assert!(sess.is_empty());
+        sess.prefill(&[5]).unwrap();
+        assert_eq!((sess.len(), sess.ids()), (1, &[5i32][..]));
+    }
+
+    #[test]
+    fn cache_sync_roundtrips_through_codec() {
+        let m = model();
+        let mut sess =
+            DecodeSession::new(m.clone(), 2, 4, WireFmt::F32).unwrap();
+        sess.prefill(&[4, 4, 2]).unwrap();
+        let msgs = sess.cache_sync_msgs();
+        assert_eq!(msgs.len(), 2 * m.cfg.layers); // devices x layers
+        let mut synced = 0usize;
+        for msg in &msgs {
+            let back = Msg::decode(&msg.encode()).unwrap();
+            assert_eq!(&back, msg);
+            if let Msg::CacheSync { k, .. } = &back {
+                synced += k.rows();
+            }
+        }
+        // 3 absorbed positions, all on device 0, per layer
+        assert_eq!(synced, 3 * m.cfg.layers);
+    }
+}

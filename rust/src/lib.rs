@@ -20,6 +20,7 @@
 pub mod bench_util;
 pub mod coordinator;
 pub mod data;
+pub mod decode;
 pub mod eval;
 pub mod metrics;
 pub mod model;

@@ -6,6 +6,8 @@
 //!                                the paper metric + measured comm bytes
 //!   latency                      Fig.5-style latency at one bandwidth
 //!   serve                        threaded master/worker serving demo
+//!   decode                       continuous-batching decode-stream demo
+//!                                (incremental KV-cache sessions)
 //!   worker --listen ADDR         TCP block-execution worker process
 //!
 //! Common flags: --artifacts DIR (default ./artifacts), --model,
@@ -42,6 +44,7 @@ fn run(argv: &[String]) -> Result<()> {
         "eval" => cmd_eval(&args),
         "latency" => cmd_latency(&args),
         "serve" => server::cmd_serve(&args),
+        "decode" => server::cmd_decode(&args),
         "worker" => cmd_worker(&args),
         "remote-eval" => cmd_remote_eval(&args),
         "" | "help" | "--help" => {
@@ -53,13 +56,14 @@ fn run(argv: &[String]) -> Result<()> {
 }
 
 const HELP: &str = "prism — distributed Transformer inference at the edge
-commands: info | eval | latency | serve | worker
+commands: info | eval | latency | serve | decode | worker
 examples:
   prism info
   prism eval --model vit --dataset synth10 --mode prism --p 2 --l 6
   prism eval --model gpt2 --dataset text8p --mode prism --p 3 --cr 10
   prism latency --model vit --mode prism --p 3 --l 3 --bandwidth 200
   prism serve --model vit --dataset synth10 --p 2 --l 6 --requests 64
+  prism decode --sessions 4 --steps 32 --p 2 --l 4 --wire f16
   prism worker --listen 127.0.0.1:7070
   prism remote-eval --workers 127.0.0.1:7070,127.0.0.1:7071 \\
         --model vit --mode prism --p 2 --l 6 --limit 64";

@@ -4,6 +4,7 @@
 use anyhow::{bail, Context, Result};
 
 use crate::runtime::{Tensor, TensorData};
+use crate::util::quant::{self, WireFmt};
 
 /// Messages exchanged during one distributed forward pass.
 #[derive(Debug, Clone, PartialEq)]
@@ -18,6 +19,24 @@ pub enum Msg {
     Job { request: u64, x_p: Tensor, ctx: Vec<Tensor> },
     /// Orderly shutdown.
     Shutdown,
+    /// Incremental Segment-Means update (decode subsystem): after the
+    /// frontier device appends one token at one layer, exactly one
+    /// segment mean changes; only that row crosses the wire, quantized
+    /// at `fmt` (`util::quant`). `filled` is the segment's running count
+    /// of absorbed real tokens (the Eq. 11/12 repetition vector itself is
+    /// fixed by the padded-window geometry).
+    SegDelta {
+        layer: u32,
+        from: u32,
+        segment: u32,
+        filled: u32,
+        fmt: u8,
+        d: u32,
+        payload: Vec<u8>,
+    },
+    /// Bulk KV-cache transfer (decode-session migration / late worker
+    /// join): rows `[start, start + k.rows())` of one layer's K and V.
+    CacheSync { from: u32, layer: u32, start: u32, k: Tensor, v: Tensor },
 }
 
 impl Msg {
@@ -31,6 +50,35 @@ impl Msg {
                 x_p.byte_len() + ctx.iter().map(|t| t.byte_len()).sum::<usize>()
             }
             Msg::Shutdown => 0,
+            Msg::SegDelta { payload, .. } => payload.len(),
+            Msg::CacheSync { k, v, .. } => k.byte_len() + v.byte_len(),
+        }
+    }
+
+    /// Build a `SegDelta` from an f32 mean row, quantizing at `fmt`.
+    pub fn seg_delta(layer: u32, from: u32, segment: u32, filled: u32,
+                     mean: &Tensor, fmt: WireFmt) -> Result<Msg> {
+        if mean.shape.len() != 1 {
+            bail!("SegDelta mean must be a (D,) row, got {:?}", mean.shape);
+        }
+        Ok(Msg::SegDelta {
+            layer,
+            from,
+            segment,
+            filled,
+            fmt: fmt.tag(),
+            d: mean.elements() as u32,
+            payload: quant::encode(mean, fmt)?,
+        })
+    }
+
+    /// Decode a `SegDelta` payload back to the (D,) f32 mean row the
+    /// receiver installs in its peer mirror.
+    pub fn seg_delta_mean(&self) -> Result<Tensor> {
+        match self {
+            Msg::SegDelta { fmt, d, payload, .. } => quant::decode(
+                payload, &[*d as usize], WireFmt::from_tag(*fmt)?),
+            other => bail!("not a SegDelta: {other:?}"),
         }
     }
 }
@@ -155,6 +203,26 @@ impl Msg {
                 }
             }
             Msg::Shutdown => out.push(3),
+            Msg::SegDelta { layer, from, segment, filled, fmt, d,
+                            payload } => {
+                out.push(4);
+                put_u32(&mut out, *layer);
+                put_u32(&mut out, *from);
+                put_u32(&mut out, *segment);
+                put_u32(&mut out, *filled);
+                out.push(*fmt);
+                put_u32(&mut out, *d);
+                put_u32(&mut out, payload.len() as u32);
+                out.extend_from_slice(payload);
+            }
+            Msg::CacheSync { from, layer, start, k, v } => {
+                out.push(5);
+                put_u32(&mut out, *from);
+                put_u32(&mut out, *layer);
+                put_u32(&mut out, *start);
+                encode_tensor(&mut out, k);
+                encode_tensor(&mut out, v);
+            }
         }
         out
     }
@@ -180,6 +248,25 @@ impl Msg {
                 Msg::Job { request, x_p, ctx }
             }
             3 => Msg::Shutdown,
+            4 => {
+                let layer = c.u32()?;
+                let from = c.u32()?;
+                let segment = c.u32()?;
+                let filled = c.u32()?;
+                let fmt = c.u8()?;
+                let d = c.u32()?;
+                let len = c.u32()? as usize;
+                let payload = c.take(len)?.to_vec();
+                Msg::SegDelta { layer, from, segment, filled, fmt, d,
+                                payload }
+            }
+            5 => Msg::CacheSync {
+                from: c.u32()?,
+                layer: c.u32()?,
+                start: c.u32()?,
+                k: decode_tensor(&mut c)?,
+                v: decode_tensor(&mut c)?,
+            },
             other => bail!("unknown message tag {other}"),
         };
         if c.pos != buf.len() {
@@ -241,6 +328,48 @@ mod tests {
         assert!(Msg::decode(&buf).is_err()); // trailing bytes
         let good = Msg::FinalPart { from: 0, data: t(vec![3]) }.encode();
         assert!(Msg::decode(&good[..good.len() - 2]).is_err()); // truncated
+    }
+
+    #[test]
+    fn seg_delta_roundtrip_all_wire_formats() {
+        use crate::util::quant::WireFmt;
+        let mean =
+            Tensor::from_f32(vec![8], (0..8).map(|i| i as f32 * 0.25 - 1.0)
+                .collect()).unwrap();
+        for fmt in [WireFmt::F32, WireFmt::F16, WireFmt::I8] {
+            let m = Msg::seg_delta(3, 1, 2, 7, &mean, fmt).unwrap();
+            assert_eq!(m.wire_bytes(), fmt.wire_bytes(8, 1));
+            let back = Msg::decode(&m.encode()).unwrap();
+            assert_eq!(back, m);
+            let got = back.seg_delta_mean().unwrap();
+            assert_eq!(got.shape, vec![8]);
+            let err = mean.max_abs_diff(&got).unwrap();
+            let tol = match fmt {
+                WireFmt::F32 => 0.0,
+                WireFmt::F16 => 1e-3,
+                WireFmt::I8 => 0.02,
+            };
+            assert!(err <= tol, "{fmt:?}: err {err}");
+        }
+        // f32 deltas are bit-exact
+        let m = Msg::seg_delta(0, 0, 0, 1, &mean, WireFmt::F32).unwrap();
+        assert_eq!(m.seg_delta_mean().unwrap(), mean);
+        assert!(Msg::Shutdown.seg_delta_mean().is_err());
+        let bad = Tensor::from_f32(vec![2, 4], vec![0.0; 8]).unwrap();
+        assert!(Msg::seg_delta(0, 0, 0, 1, &bad, WireFmt::F32).is_err());
+    }
+
+    #[test]
+    fn cache_sync_roundtrip() {
+        let m = Msg::CacheSync {
+            from: 1,
+            layer: 2,
+            start: 16,
+            k: t(vec![3, 4]),
+            v: t(vec![3, 4]),
+        };
+        assert_eq!(m.wire_bytes(), 2 * 3 * 4 * 4);
+        assert_eq!(Msg::decode(&m.encode()).unwrap(), m);
     }
 
     #[test]

@@ -139,6 +139,66 @@ impl Tensor {
         Tensor::from_f32(shape, out)
     }
 
+    /// Number of axis-0 rows.
+    pub fn rows(&self) -> usize {
+        self.shape.first().copied().unwrap_or(0)
+    }
+
+    /// Elements per axis-0 row (0 for a scalar tensor, which has no rows).
+    pub fn row_elems(&self) -> usize {
+        match self.shape.get(1..) {
+            Some(rest) => rest.iter().product(),
+            None => 0,
+        }
+    }
+
+    /// Borrow one axis-0 row of an f32 tensor (KV-cache reads).
+    pub fn row_f32(&self, i: usize) -> Result<&[f32]> {
+        if i >= self.rows() {
+            bail!("row {i} out of bounds for {:?}", self.shape);
+        }
+        let stride = self.row_elems();
+        Ok(&self.f32s()?[i * stride..(i + 1) * stride])
+    }
+
+    /// Append one row along axis 0 (the KV-cache append op). The tensor
+    /// must be f32 with at least one axis; `row` must match the row size.
+    pub fn push_row_f32(&mut self, row: &[f32]) -> Result<()> {
+        if self.shape.is_empty() {
+            bail!("push_row_f32 on a scalar tensor");
+        }
+        let stride = self.row_elems();
+        if row.len() != stride {
+            bail!("push_row_f32: row has {} elements, tensor rows have \
+                   {stride}", row.len());
+        }
+        match &mut self.data {
+            TensorData::F32(v) => v.extend_from_slice(row),
+            _ => bail!("push_row_f32 on non-f32 tensor"),
+        }
+        self.shape[0] += 1;
+        Ok(())
+    }
+
+    /// Overwrite one axis-0 row in place (decode-window updates).
+    pub fn set_row_f32(&mut self, i: usize, row: &[f32]) -> Result<()> {
+        if i >= self.rows() {
+            bail!("row {i} out of bounds for {:?}", self.shape);
+        }
+        let stride = self.row_elems();
+        if row.len() != stride {
+            bail!("set_row_f32: row has {} elements, tensor rows have \
+                   {stride}", row.len());
+        }
+        match &mut self.data {
+            TensorData::F32(v) => {
+                v[i * stride..(i + 1) * stride].copy_from_slice(row);
+            }
+            _ => bail!("set_row_f32 on non-f32 tensor"),
+        }
+        Ok(())
+    }
+
     /// Max |a - b| over all elements (parity tests).
     pub fn max_abs_diff(&self, other: &Tensor) -> Result<f32> {
         let (a, b) = (self.f32s()?, other.f32s()?);
@@ -246,6 +306,27 @@ mod tests {
         t.write_file(&p).unwrap();
         let u = Tensor::read_f32_file(&p, vec![2, 2]).unwrap();
         assert_eq!(t, u);
+    }
+
+    #[test]
+    fn row_ops_append_read_write() {
+        let mut t = Tensor::zeros_f32(vec![0, 2, 3]); // empty KV cache
+        assert_eq!(t.rows(), 0);
+        assert_eq!(t.row_elems(), 6);
+        t.push_row_f32(&[1., 2., 3., 4., 5., 6.]).unwrap();
+        t.push_row_f32(&[7., 8., 9., 10., 11., 12.]).unwrap();
+        assert_eq!(t.shape, vec![2, 2, 3]);
+        assert_eq!(t.row_f32(1).unwrap()[0], 7.0);
+        assert!(t.row_f32(2).is_err());
+        assert!(t.push_row_f32(&[0.0; 5]).is_err());
+        t.set_row_f32(0, &[0.; 6]).unwrap();
+        assert_eq!(t.row_f32(0).unwrap(), &[0.0; 6]);
+        assert!(t.set_row_f32(5, &[0.; 6]).is_err());
+        // scalar tensors have no rows
+        let s = Tensor::from_f32(vec![], vec![1.0]).unwrap();
+        assert_eq!((s.rows(), s.row_elems()), (0, 0));
+        let mut i = Tensor::from_i32(vec![1, 2], vec![1, 2]).unwrap();
+        assert!(i.push_row_f32(&[0.0; 2]).is_err());
     }
 
     #[test]

@@ -12,7 +12,8 @@
 //! time; the deterministic virtual-clock path (`RunTrace::latency_secs`)
 //! is what the benches use.
 
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::collections::VecDeque;
+use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
@@ -24,11 +25,13 @@ use crate::coordinator::runner::bias_for;
 use crate::coordinator::segmeans::segment_means;
 use crate::coordinator::Mode;
 use crate::data::{Dataset, DatasetKind};
+use crate::decode::{DecodeSession, DecodeStats, RefCfg, RefGpt};
 use crate::metrics::Histogram;
 use crate::net::inproc::{mesh, Endpoint};
 use crate::net::message::Msg;
 use crate::net::LinkModel;
 use crate::runtime::{Engine, Manifest, Tensor, TensorData, WeightSet};
+use crate::util::quant::WireFmt;
 use crate::util::rng::Rng;
 
 /// One inference request: a single sample (image row / token row).
@@ -355,6 +358,235 @@ fn worker_loop(manifest: Arc<Manifest>, cfg: ServeConfig, ep: Endpoint)
     }
 }
 
+// ------------------- decode-stream scheduler ---------------------------
+
+/// One autoregressive decode stream: prefill the prompt, then emit
+/// `steps` greedy tokens, one `DecodeEvent` per token.
+pub struct DecodeRequest {
+    pub id: u64,
+    pub prompt: Vec<i32>,
+    pub steps: usize,
+    pub respond: Sender<DecodeEvent>,
+}
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct DecodeEvent {
+    pub id: u64,
+    /// 0-based index of the generated token within its stream.
+    pub index: usize,
+    /// Generated token id; a negative value means the stream ended
+    /// without one (aborted on window-full / internal error, or steps
+    /// == 0) — every stream's final event has `done` set either way.
+    pub token: i32,
+    pub done: bool,
+}
+
+/// Continuous-batching scheduler for decode streams: every tick advances
+/// each active session by one quantum — up to `prefill_chunk` prompt
+/// tokens for sessions still prefilling (so long prompts cannot starve
+/// running decodes), or one generated token otherwise — and new streams
+/// are admitted mid-flight between ticks. All sessions share one
+/// `decode::DecodeSession` backend configuration (P, L, wire format)
+/// fixed at scheduler start; each stream owns its distributed KV caches
+/// and Segment-Means mirrors.
+///
+/// The engine-backed analogue slots in here once per-token AOT shapes
+/// exist (decode/mod.rs); the scheduling policy is backend-independent.
+pub struct DecodeScheduler {
+    pub requests: Sender<DecodeRequest>,
+    handle: std::thread::JoinHandle<Result<DecodeStats>>,
+}
+
+impl DecodeScheduler {
+    pub fn start(model: Arc<RefGpt>, p: usize, l: usize, wire: WireFmt,
+                 prefill_chunk: usize) -> Result<DecodeScheduler> {
+        // validate the (model, P, L) geometry once, up front
+        DecodeSession::new(model.clone(), p, l, wire)?;
+        let (tx, rx) = channel::<DecodeRequest>();
+        let chunk = prefill_chunk.max(1);
+        let handle = std::thread::Builder::new()
+            .name("prism-decode".into())
+            .spawn(move || decode_loop(model, p, l, wire, chunk, rx))?;
+        Ok(DecodeScheduler { requests: tx, handle })
+    }
+
+    /// Close intake, drain remaining streams, and return the wire-byte
+    /// stats aggregated over every completed session.
+    ///
+    /// `requests` is a multi-producer sender: every clone handed out must
+    /// be dropped before calling this, or the scheduler keeps serving the
+    /// surviving clones and the join blocks until they disconnect.
+    pub fn shutdown(self) -> Result<DecodeStats> {
+        drop(self.requests);
+        match self.handle.join() {
+            Ok(r) => r,
+            Err(_) => bail!("decode scheduler thread panicked"),
+        }
+    }
+}
+
+struct ActiveStream {
+    id: u64,
+    session: DecodeSession,
+    prompt: Vec<i32>,
+    prefilled: usize,
+    emitted: usize,
+    steps: usize,
+    respond: Sender<DecodeEvent>,
+}
+
+/// Advance one stream by one quantum. Ok(true) == stream finished.
+fn decode_tick(s: &mut ActiveStream, chunk: usize) -> Result<bool> {
+    if s.prefilled < s.prompt.len() {
+        let hi = (s.prefilled + chunk).min(s.prompt.len());
+        s.session.prefill(&s.prompt[s.prefilled..hi])?;
+        s.prefilled = hi;
+        return Ok(false);
+    }
+    if s.emitted >= s.steps {
+        // only reachable for steps == 0 (the final token's event already
+        // carried done=true otherwise): still close the stream visibly.
+        let _ = s.respond.send(DecodeEvent {
+            id: s.id, index: 0, token: -1, done: true,
+        });
+        return Ok(true);
+    }
+    let token = s.session.generate_next()?;
+    let index = s.emitted;
+    s.emitted += 1;
+    let done = s.emitted == s.steps;
+    if s.respond.send(DecodeEvent { id: s.id, index, token, done })
+        .is_err()
+    {
+        return Ok(true); // listener hung up: retire quietly
+    }
+    Ok(done)
+}
+
+fn decode_loop(model: Arc<RefGpt>, p: usize, l: usize, wire: WireFmt,
+               chunk: usize, rx: Receiver<DecodeRequest>)
+               -> Result<DecodeStats> {
+    let mut active: VecDeque<ActiveStream> = VecDeque::new();
+    let mut total = DecodeStats::default();
+    let mut open = true;
+    let mut admit = |req: DecodeRequest,
+                     active: &mut VecDeque<ActiveStream>| {
+        match DecodeSession::new(model.clone(), p, l, wire) {
+            Ok(session) => active.push_back(ActiveStream {
+                id: req.id,
+                session,
+                prompt: req.prompt,
+                prefilled: 0,
+                emitted: 0,
+                steps: req.steps,
+                respond: req.respond,
+            }),
+            Err(_) => {
+                let _ = req.respond.send(DecodeEvent {
+                    id: req.id, index: 0, token: -1, done: true,
+                });
+            }
+        }
+    };
+    loop {
+        if open && active.is_empty() {
+            // idle: block for the next stream
+            match rx.recv() {
+                Ok(r) => admit(r, &mut active),
+                Err(_) => open = false,
+            }
+        }
+        while open {
+            // running: admit whatever queued up since the last tick
+            match rx.try_recv() {
+                Ok(r) => admit(r, &mut active),
+                Err(TryRecvError::Empty) => break,
+                Err(TryRecvError::Disconnected) => open = false,
+            }
+        }
+        if active.is_empty() {
+            if !open {
+                return Ok(total);
+            }
+            continue;
+        }
+        // one scheduling tick over every active stream
+        let mut still = VecDeque::with_capacity(active.len());
+        while let Some(mut s) = active.pop_front() {
+            match decode_tick(&mut s, chunk) {
+                Ok(false) => still.push_back(s),
+                Ok(true) => total.merge(&s.session.stats()),
+                Err(_) => {
+                    let _ = s.respond.send(DecodeEvent {
+                        id: s.id, index: s.emitted, token: -1, done: true,
+                    });
+                    total.merge(&s.session.stats());
+                }
+            }
+        }
+        active = still;
+    }
+}
+
+/// `prism decode`: stream N concurrent greedy decodes through the
+/// scheduler on the deterministic reference model (artifact-free) and
+/// report tokens/sec and wire bytes/token against the full-recompute
+/// equivalent.
+pub fn cmd_decode(args: &Args) -> Result<()> {
+    let p = args.usize_or("p", 2)?;
+    let l = args.usize_or("l", 4)?;
+    let steps = args.usize_or("steps", 32)?;
+    let sessions = args.usize_or("sessions", 4)?;
+    let wire = WireFmt::parse(&args.str_or("wire", "f32"))?;
+    let cfg = RefCfg {
+        vocab: 64,
+        n: args.usize_or("n", 128)?,
+        d: args.usize_or("d", 64)?,
+        heads: 4,
+        layers: args.usize_or("layers", 4)?,
+        ffn: 128,
+    };
+    let model = Arc::new(RefGpt::tiny(17, cfg)?);
+    println!("decode: {sessions} streams, N={} d={} layers={} P={p} L={l} \
+              wire={wire:?}", cfg.n, cfg.d, cfg.layers);
+    let sched = DecodeScheduler::start(model, p, l, wire, 4)?;
+    let (tx, rx) = channel::<DecodeEvent>();
+    let mut rng = Rng::new(29);
+    let t0 = Instant::now();
+    for id in 0..sessions as u64 {
+        let prompt: Vec<i32> =
+            (0..8).map(|_| rng.range(1, cfg.vocab) as i32).collect();
+        sched.requests.send(DecodeRequest {
+            id, prompt, steps, respond: tx.clone(),
+        })?;
+    }
+    // every live sender now belongs to the scheduler: if its thread dies,
+    // recv() errors instead of hanging this loop forever.
+    drop(tx);
+    let mut done = 0;
+    let mut tokens = 0usize;
+    while done < sessions {
+        let ev = rx.recv()?;
+        if ev.token >= 0 {
+            tokens += 1;
+        }
+        if ev.done {
+            done += 1;
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let stats = sched.shutdown()?;
+    let full = crate::decode::full_recompute_bytes_per_token(
+        cfg.layers, p, l, cfg.d, wire);
+    println!("generated  : {tokens} tokens in {wall:.2}s \
+              ({:.1} tok/s aggregate)", tokens as f64 / wall);
+    println!("wire bytes : {:.0} /generated token incremental (prefill \
+              included) vs {full} /token full recompute ({:.1}x less)",
+             stats.bytes_per_generated(),
+             full as f64 / stats.bytes_per_generated().max(1e-9));
+    Ok(())
+}
+
 /// `prism serve`: drive the threaded server with a synthetic request
 /// stream drawn from a dataset; print latency/throughput.
 pub fn cmd_serve(args: &Args) -> Result<()> {
@@ -438,4 +670,131 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
              n_requests as f64 / wall, n_requests, wall);
     println!("latency    : {}", hist.summary_ms());
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::BTreeMap;
+
+    fn tiny_model() -> Arc<RefGpt> {
+        Arc::new(RefGpt::tiny(11, RefCfg {
+            vocab: 20,
+            n: 32,
+            d: 16,
+            heads: 2,
+            layers: 2,
+            ffn: 32,
+        })
+        .unwrap())
+    }
+
+    /// Interleaved streams produce exactly the token streams standalone
+    /// sessions produce, and the aggregate stats cover both.
+    #[test]
+    fn scheduler_matches_standalone_sessions() {
+        let m = tiny_model();
+        let (p, l, wire) = (2, 4, WireFmt::F32);
+        let cases: Vec<(u64, Vec<i32>, usize)> = vec![
+            (0, vec![3, 7, 1, 12, 5], 8),
+            (1, vec![2, 2, 9], 12),
+        ];
+        let sched =
+            DecodeScheduler::start(m.clone(), p, l, wire, 2).unwrap();
+        let (tx, rx) = channel::<DecodeEvent>();
+        for (id, prompt, steps) in &cases {
+            sched.requests.send(DecodeRequest {
+                id: *id,
+                prompt: prompt.clone(),
+                steps: *steps,
+                respond: tx.clone(),
+            })
+            .unwrap();
+        }
+        let mut got: BTreeMap<u64, Vec<i32>> = BTreeMap::new();
+        let mut done = 0;
+        while done < cases.len() {
+            let ev = rx.recv_timeout(Duration::from_secs(60)).unwrap();
+            assert!(ev.token >= 0, "stream {} aborted", ev.id);
+            let stream = got.entry(ev.id).or_default();
+            assert_eq!(ev.index, stream.len(), "per-stream order");
+            stream.push(ev.token);
+            if ev.done {
+                done += 1;
+            }
+        }
+        let stats = sched.shutdown().unwrap();
+        let mut want_absorbed = 0;
+        for (id, prompt, steps) in &cases {
+            let mut sess =
+                DecodeSession::new(m.clone(), p, l, wire).unwrap();
+            sess.prefill(prompt).unwrap();
+            let expect: Vec<i32> =
+                (0..*steps).map(|_| sess.generate_next().unwrap()).collect();
+            assert_eq!(got[id], expect, "stream {id}");
+            want_absorbed += prompt.len() + steps;
+        }
+        assert_eq!(stats.absorbed, want_absorbed);
+        assert_eq!(stats.generated, cases.iter().map(|c| c.2).sum::<usize>());
+        assert!(stats.delta_bytes > 0);
+    }
+
+    /// Streams admitted while another is mid-decode still complete, and
+    /// an overlong stream aborts with a done event instead of hanging.
+    #[test]
+    fn scheduler_admits_midflight_and_reports_aborts() {
+        let m = tiny_model();
+        let sched =
+            DecodeScheduler::start(m.clone(), 2, 4, WireFmt::F32, 4)
+                .unwrap();
+        let (tx, rx) = channel::<DecodeEvent>();
+        sched.requests.send(DecodeRequest {
+            id: 7,
+            prompt: vec![1, 2, 3],
+            steps: 10,
+            respond: tx.clone(),
+        })
+        .unwrap();
+        // wait until stream 7 starts emitting, then admit stream 8 whose
+        // prompt + steps overflow the N=32 window -> must abort cleanly.
+        let first = rx.recv_timeout(Duration::from_secs(60)).unwrap();
+        assert_eq!(first.id, 7);
+        sched.requests.send(DecodeRequest {
+            id: 8,
+            prompt: vec![4; 30],
+            steps: 10,
+            respond: tx.clone(),
+        })
+        .unwrap();
+        let mut aborted = false;
+        let mut done7 = false;
+        let mut toks7 = 1;
+        while !(aborted && done7) {
+            let ev = rx.recv_timeout(Duration::from_secs(60)).unwrap();
+            match ev.id {
+                7 => {
+                    assert!(ev.token >= 0);
+                    toks7 += 1;
+                    done7 |= ev.done;
+                }
+                8 => {
+                    if ev.token < 0 {
+                        assert!(ev.done);
+                        aborted = true;
+                    }
+                }
+                other => panic!("unexpected stream {other}"),
+            }
+        }
+        assert_eq!(toks7, 10);
+        sched.shutdown().unwrap();
+    }
+
+    #[test]
+    fn scheduler_rejects_bad_geometry_up_front() {
+        let m = tiny_model();
+        assert!(DecodeScheduler::start(m.clone(), 0, 4, WireFmt::F32, 1)
+            .is_err());
+        assert!(DecodeScheduler::start(m, 2, 0, WireFmt::F32, 1).is_err());
+    }
 }

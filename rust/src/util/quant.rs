@@ -33,6 +33,24 @@ impl WireFmt {
         })
     }
 
+    /// Wire tag used by the message codec (`Msg::SegDelta`).
+    pub fn tag(&self) -> u8 {
+        match self {
+            WireFmt::F32 => 0,
+            WireFmt::F16 => 1,
+            WireFmt::I8 => 2,
+        }
+    }
+
+    pub fn from_tag(tag: u8) -> Result<WireFmt> {
+        Ok(match tag {
+            0 => WireFmt::F32,
+            1 => WireFmt::F16,
+            2 => WireFmt::I8,
+            other => bail!("unknown wire-format tag {other}"),
+        })
+    }
+
     /// Payload bytes for `elements` f32 values (+ per-row scales for i8).
     pub fn wire_bytes(&self, elements: usize, rows: usize) -> usize {
         match self {
@@ -252,5 +270,13 @@ mod tests {
         assert_eq!(WireFmt::I8.wire_bytes(128, 2), 136);
         assert!(WireFmt::parse("f16").is_ok());
         assert!(WireFmt::parse("nope").is_err());
+    }
+
+    #[test]
+    fn tag_roundtrip() {
+        for fmt in [WireFmt::F32, WireFmt::F16, WireFmt::I8] {
+            assert_eq!(WireFmt::from_tag(fmt.tag()).unwrap(), fmt);
+        }
+        assert!(WireFmt::from_tag(9).is_err());
     }
 }

@@ -1,0 +1,194 @@
+//! Vendored offline stub of the `xla` (PJRT) bindings.
+//!
+//! Mirrors the API surface `prism::runtime::engine` compiles against:
+//! `PjRtClient`, `PjRtLoadedExecutable`, `PjRtBuffer`, `Literal`,
+//! `HloModuleProto`, `XlaComputation`, `Error`. Host-side literal
+//! handling works for real; anything that would need the PJRT runtime
+//! (loading HLO text, compiling, executing) returns a descriptive
+//! error, so artifact-backed paths fail with "stub xla backend" and the
+//! artifact-free paths (all unit tests, the decode subsystem, the
+//! reference model) run normally. Deployments swap in the real crate
+//! via the root Cargo.toml; no prism source change is needed.
+
+use std::fmt;
+use std::path::Path;
+
+const STUB: &str = "stub xla backend (vendored third_party/xla): PJRT is \
+                    unavailable in this build; install the real `xla` \
+                    crate to run AOT artifacts";
+
+#[derive(Debug)]
+pub struct Error(String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+#[derive(Debug, Clone, PartialEq)]
+enum Data {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+/// Element types a `Literal` can hold (f32 / i32 are all PRISM moves
+/// across the AOT boundary).
+pub trait NativeType: Copy {
+    fn literal_from(v: &[Self]) -> Literal;
+    fn extract(lit: &Literal) -> Option<Vec<Self>>;
+}
+
+impl NativeType for f32 {
+    fn literal_from(v: &[Self]) -> Literal {
+        Literal { data: Data::F32(v.to_vec()), dims: vec![v.len() as i64] }
+    }
+
+    fn extract(lit: &Literal) -> Option<Vec<Self>> {
+        match &lit.data {
+            Data::F32(v) => Some(v.clone()),
+            _ => None,
+        }
+    }
+}
+
+impl NativeType for i32 {
+    fn literal_from(v: &[Self]) -> Literal {
+        Literal { data: Data::I32(v.to_vec()), dims: vec![v.len() as i64] }
+    }
+
+    fn extract(lit: &Literal) -> Option<Vec<Self>> {
+        match &lit.data {
+            Data::I32(v) => Some(v.clone()),
+            _ => None,
+        }
+    }
+}
+
+/// Host-side literal: dense data + dims (row-major).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Literal {
+    data: Data,
+    dims: Vec<i64>,
+}
+
+impl Literal {
+    pub fn vec1<T: NativeType>(v: &[T]) -> Literal {
+        T::literal_from(v)
+    }
+
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let want: i64 = dims.iter().product();
+        let have = match &self.data {
+            Data::F32(v) => v.len() as i64,
+            Data::I32(v) => v.len() as i64,
+        };
+        if want != have {
+            return Err(Error(format!(
+                "reshape to {dims:?} wants {want} elements, literal has \
+                 {have}"
+            )));
+        }
+        Ok(Literal { data: self.data.clone(), dims: dims.to_vec() })
+    }
+
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::extract(self).ok_or_else(|| {
+            Error("literal element type mismatch".to_string())
+        })
+    }
+
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        Err(Error(STUB.to_string()))
+    }
+}
+
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file<P: AsRef<Path>>(path: P) -> Result<HloModuleProto> {
+        Err(Error(format!("{STUB}; cannot load HLO '{}'",
+                          path.as_ref().display())))
+    }
+}
+
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error(STUB.to_string()))
+    }
+}
+
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: std::borrow::Borrow<Literal>>(
+        &self,
+        _args: &[L],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error(STUB.to_string()))
+    }
+}
+
+pub struct PjRtClient;
+
+impl PjRtClient {
+    /// Succeeds so engines can be constructed; only artifact execution
+    /// is unavailable.
+    pub fn cpu() -> Result<PjRtClient> {
+        Ok(PjRtClient)
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub-cpu".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation)
+                   -> Result<PjRtLoadedExecutable> {
+        Err(Error(STUB.to_string()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_and_reshape() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]);
+        let r = l.reshape(&[2, 2]).unwrap();
+        assert_eq!(r.dims(), &[2, 2]);
+        assert_eq!(r.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(r.to_vec::<i32>().is_err());
+        assert!(l.reshape(&[3, 3]).is_err());
+        let i = Literal::vec1(&[7i32]);
+        assert_eq!(i.to_vec::<i32>().unwrap(), vec![7]);
+    }
+
+    #[test]
+    fn runtime_paths_report_stub() {
+        let c = PjRtClient::cpu().unwrap();
+        assert_eq!(c.platform_name(), "stub-cpu");
+        let e = HloModuleProto::from_text_file("/tmp/x.hlo").unwrap_err();
+        assert!(e.to_string().contains("stub xla backend"));
+        assert!(c.compile(&XlaComputation).is_err());
+        assert!(PjRtBuffer.to_literal_sync().is_err());
+    }
+}
