@@ -4,7 +4,11 @@
 CARGO ?= cargo
 PYTHON ?= python3
 
-.PHONY: all build test verify bench-decode artifacts lint clean
+# Fixed seed matrix for the deterministic chaos suite (tests/chaos.rs);
+# mirrors the fan-out in .github/workflows/ci.yml.
+CHAOS_SEEDS ?= 11,23,37,41,53,67,79,97,101,113
+
+.PHONY: all build test verify chaos bench-decode artifacts lint clean
 
 all: build
 
@@ -15,6 +19,12 @@ test:
 	$(CARGO) test -q
 
 verify: build test
+
+# Fault-injection suite: drop/delay/reorder/duplicate/disconnect over
+# the virtual clock, decode failover bit-identity, across the seed
+# matrix. Deterministic and sleep-free; finishes in seconds.
+chaos:
+	CHAOS_SEEDS=$(CHAOS_SEEDS) $(CARGO) test --test chaos
 
 # Decode-subsystem throughput/bytes-per-token bench (artifact-free).
 bench-decode:

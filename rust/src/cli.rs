@@ -74,6 +74,20 @@ impl Args {
         }
     }
 
+    /// Millisecond flag as a `Duration` (deadlines, flush intervals).
+    pub fn duration_ms_or(&self, key: &str, default_ms: u64)
+                          -> Result<std::time::Duration> {
+        match self.flags.get(key) {
+            None => Ok(std::time::Duration::from_millis(default_ms)),
+            Some(v) => v
+                .parse()
+                .map(std::time::Duration::from_millis)
+                .map_err(|_| {
+                    anyhow!("--{key} wants milliseconds, got '{v}'")
+                }),
+        }
+    }
+
     pub fn bool(&self, key: &str) -> bool {
         self.flags.get(key).map(|v| v != "false").unwrap_or(false)
     }
@@ -114,5 +128,16 @@ mod tests {
     fn empty_args() {
         let a = Args::parse(&[]).unwrap();
         assert_eq!(a.command, "");
+    }
+
+    #[test]
+    fn duration_flags() {
+        let a = parse("serve --gather-timeout-ms 2500");
+        assert_eq!(a.duration_ms_or("gather-timeout-ms", 1).unwrap(),
+                   std::time::Duration::from_millis(2500));
+        assert_eq!(a.duration_ms_or("absent", 40).unwrap(),
+                   std::time::Duration::from_millis(40));
+        let bad = parse("serve --gather-timeout-ms soon");
+        assert!(bad.duration_ms_or("gather-timeout-ms", 1).is_err());
     }
 }

@@ -10,4 +10,4 @@ pub mod segmeans;
 pub use compressor::Compressor;
 pub use remote::RemoteCoordinator;
 pub use plan::{plans, single_plan, PartitionPlan};
-pub use runner::{bias_for, Mode, RunTrace, Runner};
+pub use runner::{bias_for, degraded_mode, Mode, RunTrace, Runner};

@@ -227,6 +227,27 @@ pub fn single_plan(n: usize, causal: bool) -> PartitionPlan {
     PartitionPlan::new(0, n, vec![n], 0, causal)
 }
 
+/// Re-run the partition-to-device assignment over the surviving device
+/// set: partition geometry (Algorithm 1 spans, segment counts, biases)
+/// is frozen for a decode session's lifetime, so failover keeps every
+/// partition where it is *logically* and only re-homes partitions whose
+/// device died — each to the next live device in ring order (its
+/// replication buddy). Returns `hosts[partition] = device`.
+pub fn assign_hosts(alive: &[bool]) -> Result<Vec<usize>> {
+    let p = alive.len();
+    if !alive.iter().any(|&a| a) {
+        bail!("no live devices left to host {p} partitions");
+    }
+    (0..p)
+        .map(|i| {
+            (i..i + p)
+                .map(|j| j % p)
+                .find(|&j| alive[j])
+                .ok_or_else(|| anyhow::anyhow!("unreachable: no live host"))
+        })
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -455,6 +476,35 @@ mod tests {
             assert_eq!(pl.n_hat(), 100);
             assert!(pl.g().unwrap().iter().all(|&x| x == 1.0));
         }
+    }
+
+    #[test]
+    fn assign_hosts_rehomes_dead_partitions_ring_order() {
+        // everyone alive: identity
+        assert_eq!(assign_hosts(&[true; 4]).unwrap(), vec![0, 1, 2, 3]);
+        // device 1 dead: its partition moves to the next live device
+        assert_eq!(assign_hosts(&[true, false, true, true]).unwrap(),
+                   vec![0, 2, 2, 3]);
+        // cascading failures keep wrapping the ring
+        assert_eq!(assign_hosts(&[false, false, true, false]).unwrap(),
+                   vec![2, 2, 2, 2]);
+        assert_eq!(assign_hosts(&[true, false, false, false]).unwrap(),
+                   vec![0, 0, 0, 0]);
+        // no survivors is an error, not a panic
+        assert!(assign_hosts(&[false, false]).is_err());
+        property("assign-hosts", 80, |rng: &mut Rng| {
+            let p = rng.range(1, 7);
+            let mut alive: Vec<bool> =
+                (0..p).map(|_| rng.chance(0.6)).collect();
+            alive[rng.below(p)] = true; // at least one survivor
+            let hosts = assign_hosts(&alive).unwrap();
+            for (i, &h) in hosts.iter().enumerate() {
+                assert!(alive[h], "partition {i} on dead device {h}");
+                if alive[i] {
+                    assert_eq!(h, i, "live device must keep its partition");
+                }
+            }
+        });
     }
 
     #[test]

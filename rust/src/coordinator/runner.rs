@@ -406,6 +406,25 @@ impl Runner {
     }
 }
 
+/// The strategy to fall back to after peer loss leaves `survivors`
+/// devices: the same family, shrunk to the surviving count (P=1
+/// collapses every mode to `Single`). The serving master uses this when
+/// a gather deadline declares workers dead — re-running `plan::plans`
+/// over the shrunk P is exactly "re-run PartitionPlan over the
+/// surviving device set". Adaptive L re-selection (Eq. 16 against the
+/// new P) is a ROADMAP follow-up; L is kept, clamped by plan validity.
+pub fn degraded_mode(mode: Mode, survivors: usize) -> Mode {
+    let s = survivors.max(1);
+    match mode {
+        _ if s == 1 => Mode::Single,
+        Mode::Single => Mode::Single,
+        Mode::Voltage { p } => Mode::Voltage { p: p.min(s) },
+        Mode::Prism { p, l, duplicated } => {
+            Mode::Prism { p: p.min(s), l, duplicated }
+        }
+    }
+}
+
 /// Bias for a plan; `duplicated = false` replaces ln g with 0 (keeps the
 /// causal mask), ablating the repetition counts (Table II "No" column).
 pub fn bias_for(pl: &PartitionPlan, duplicated: bool) -> Result<Tensor> {
@@ -468,6 +487,20 @@ mod tests {
         };
         assert_eq!(t.device_exchange_bytes(0), 20);
         assert_eq!(t.device_exchange_bytes(1), 40);
+    }
+
+    #[test]
+    fn degraded_mode_shrinks_to_survivors() {
+        let prism = Mode::Prism { p: 3, l: 4, duplicated: true };
+        assert_eq!(degraded_mode(prism, 2),
+                   Mode::Prism { p: 2, l: 4, duplicated: true });
+        assert_eq!(degraded_mode(prism, 1), Mode::Single);
+        assert_eq!(degraded_mode(prism, 0), Mode::Single); // clamped
+        assert_eq!(degraded_mode(Mode::Voltage { p: 4 }, 2),
+                   Mode::Voltage { p: 2 });
+        assert_eq!(degraded_mode(Mode::Voltage { p: 2 }, 5),
+                   Mode::Voltage { p: 2 }); // never grows
+        assert_eq!(degraded_mode(Mode::Single, 8), Mode::Single);
     }
 
     #[test]

@@ -47,12 +47,19 @@ pub struct DecodeStats {
     pub sync_bytes: usize,
     /// SegDelta messages sent.
     pub delta_messages: usize,
+    /// Buddy-replication bytes (per-layer frontier rows shipped to the
+    /// next device so its state survives this device's death).
+    pub replica_bytes: usize,
+    /// `Msg::CacheSync` bytes shipped during failover migration.
+    pub migrated_bytes: usize,
 }
 
 impl DecodeStats {
-    /// Total bytes this session put on the wire.
+    /// Total bytes this session put on the wire (fault tolerance —
+    /// replication and failover migration — included).
     pub fn wire_bytes(&self) -> usize {
-        self.delta_bytes + self.sync_bytes
+        self.delta_bytes + self.sync_bytes + self.replica_bytes
+            + self.migrated_bytes
     }
 
     /// Fold another session's counters into this aggregate (scheduler
@@ -60,12 +67,15 @@ impl DecodeStats {
     /// from aggregation elsewhere.
     pub fn merge(&mut self, other: &DecodeStats) {
         let DecodeStats { absorbed, generated, delta_bytes, sync_bytes,
-                          delta_messages } = *other;
+                          delta_messages, replica_bytes,
+                          migrated_bytes } = *other;
         self.absorbed += absorbed;
         self.generated += generated;
         self.delta_bytes += delta_bytes;
         self.sync_bytes += sync_bytes;
         self.delta_messages += delta_messages;
+        self.replica_bytes += replica_bytes;
+        self.migrated_bytes += migrated_bytes;
     }
 
     /// Average wire bytes per absorbed position (prefill + generated).
@@ -132,6 +142,15 @@ pub struct DecodeSession {
     ctx: Vec<Vec<DeviceCtx>>,
     last_logits: Option<Vec<f32>>,
     stats: DecodeStats,
+    /// Physical device liveness; partitions of dead devices re-home via
+    /// `coordinator::plan::assign_hosts`.
+    alive: Vec<bool>,
+    /// [partition] -> hosting device (identity until a failover).
+    hosts: Vec<usize>,
+    /// Buddy replication: each absorbed frontier row is also shipped to
+    /// the next live device (accounted per layer), so that device can
+    /// adopt this partition's KV cache and Segment-Means state on death.
+    replicate: bool,
 }
 
 impl DecodeSession {
@@ -193,7 +212,41 @@ impl DecodeSession {
             ctx,
             last_logits: None,
             stats: DecodeStats::default(),
+            alive: vec![true; p],
+            hosts: (0..p).collect(),
+            replicate: false,
         })
+    }
+
+    /// Turn on buddy replication (must happen before any token is
+    /// absorbed — a replica that missed the prefix is useless). Costs
+    /// `layers * D * 4` wire bytes per absorbed token while more than
+    /// one device is live; buys `fail_device` survival.
+    pub fn enable_replication(&mut self) -> Result<()> {
+        if self.stats.absorbed > 0 {
+            bail!("replication must be enabled before the first absorb \
+                   ({} positions already in)", self.stats.absorbed);
+        }
+        self.replicate = true;
+        Ok(())
+    }
+
+    pub fn replicated(&self) -> bool {
+        self.replicate
+    }
+
+    /// Live physical devices.
+    pub fn live_devices(&self) -> usize {
+        self.alive.iter().filter(|a| **a).count()
+    }
+
+    pub fn device_alive(&self, dev: usize) -> bool {
+        self.alive.get(dev).copied().unwrap_or(false)
+    }
+
+    /// Current partition -> device mapping.
+    pub fn hosts(&self) -> &[usize] {
+        &self.hosts
     }
 
     pub fn len(&self) -> usize {
@@ -250,6 +303,11 @@ impl DecodeSession {
                   self.caches[dev].len(0));
         }
         let d = cfg.d;
+        // Wire fan-out follows *live devices*, not partitions: after a
+        // failover the adopter hosts two partitions on one box, so its
+        // deltas reach one peer fewer (none, at P=2) — and replication
+        // rows only cross the wire while a buddy exists to receive them.
+        let live = self.live_devices();
         let mut x = self.model.embed_row(token, pos)?;
         for layer in 0..cfg.layers {
             // 1. incremental Segment Means: one segment changes; its
@@ -259,9 +317,14 @@ impl DecodeSession {
                                      delta.segment as u32,
                                      delta.filled as u32, &delta.mean,
                                      self.wire)?;
-            if self.p > 1 {
-                self.stats.delta_bytes += msg.wire_bytes() * (self.p - 1);
-                self.stats.delta_messages += self.p - 1;
+            if live > 1 {
+                self.stats.delta_bytes += msg.wire_bytes() * (live - 1);
+                self.stats.delta_messages += live - 1;
+                if self.replicate {
+                    // frontier row to the buddy, always at f32: the
+                    // replica must rebuild bit-identical state.
+                    self.stats.replica_bytes += d * 4;
+                }
             }
             let qmean = msg.seg_delta_mean()?;
             self.mirrors[layer][dev].apply(delta.segment,
@@ -307,8 +370,8 @@ impl DecodeSession {
                                         bias);
         }
         self.ids.push(token);
-        if self.p > 1 {
-            self.stats.sync_bytes += (self.p - 1) * 4; // token broadcast
+        if live > 1 {
+            self.stats.sync_bytes += (live - 1) * 4; // token broadcast
         }
         self.stats.absorbed += 1;
         Ok(self.model.logits_row(&x))
@@ -337,6 +400,75 @@ impl DecodeSession {
         self.last_logits = Some(logits);
         self.stats.generated += 1;
         Ok(tok)
+    }
+
+    /// Fail over away from a dead device: re-run the partition-to-host
+    /// assignment over the surviving set (`plan::assign_hosts` — the
+    /// Algorithm-1 spans themselves are frozen, so every surviving
+    /// partition state stays valid), and migrate each re-homed
+    /// partition's KV cache to its adopter through the real
+    /// `Msg::CacheSync` codec, byte-accounted. The adopter's buddy
+    /// replica supplies the bytes (each absorbed frontier row was
+    /// streamed to it — `enable_replication`), which is why failing a
+    /// device that already holds tokens requires replication: without
+    /// it the partition's KV rows died with the hardware and the stream
+    /// must abort.
+    ///
+    /// Everything that survives is bit-exact (replication and CacheSync
+    /// both carry f32), so the resumed greedy stream is *bit-identical*
+    /// to an uninterrupted session — and hence to full recompute. The
+    /// chaos suite (`tests/chaos.rs`) asserts this under every injected
+    /// fault class.
+    ///
+    /// Returns the adopting device id.
+    pub fn fail_device(&mut self, dead: usize) -> Result<usize> {
+        if dead >= self.p {
+            bail!("device {dead} out of range (P={})", self.p);
+        }
+        if !self.alive[dead] {
+            bail!("device {dead} is already dead");
+        }
+        if self.live_devices() == 1 {
+            bail!("device {dead} is the last one live: nothing can adopt \
+                   its partitions");
+        }
+        let moving: Vec<usize> = (0..self.p)
+            .filter(|&i| self.hosts[i] == dead)
+            .collect();
+        let lost_state =
+            moving.iter().any(|&i| !self.caches[i].is_empty());
+        if lost_state && !self.replicate {
+            bail!("device {dead} held live KV state and replication is \
+                   off: the session cannot fail over");
+        }
+        self.alive[dead] = false;
+        self.hosts = crate::coordinator::plan::assign_hosts(&self.alive)?;
+        let adopter = self.hosts[moving[0]];
+        for &pi in &moving {
+            // Route the replica's rows through the wire codec into the
+            // adopter's fresh cache — the bytes a real migration ships.
+            let src = &self.caches[pi];
+            let mut fresh = KvCache::new(src.layers(), src.heads(),
+                                         src.head_dim(), src.capacity());
+            for layer in 0..src.layers() {
+                let (k, v) = src.layer_tensors(layer);
+                let msg = Msg::CacheSync {
+                    from: pi as u32,
+                    layer: layer as u32,
+                    start: 0,
+                    k: k.clone(),
+                    v: v.clone(),
+                };
+                self.stats.migrated_bytes += msg.wire_bytes();
+                match Msg::decode(&msg.encode())? {
+                    Msg::CacheSync { layer, start, k, v, .. } => fresh
+                        .install(layer as usize, start as usize, &k, &v)?,
+                    other => bail!("CacheSync decoded as {other:?}"),
+                }
+            }
+            self.caches[pi] = fresh;
+        }
+        Ok(adopter)
     }
 
     /// `CacheSync` messages that would ship this session's KV state to a
@@ -477,6 +609,137 @@ mod tests {
         assert!(sess.is_empty());
         sess.prefill(&[5]).unwrap();
         assert_eq!((sess.len(), sess.ids()), (1, &[5i32][..]));
+    }
+
+    /// Failover acceptance: kill a device mid-stream and the resumed
+    /// greedy stream stays bit-identical to full recompute, with the
+    /// migration having crossed the real CacheSync codec.
+    #[test]
+    fn failover_mid_stream_is_bit_identical() {
+        let m = model();
+        let prompt = vec![3i32, 7, 1, 12, 5, 9];
+        let steps = 20; // 6 + 20 = 26 <= 32
+        let (full, _) = m
+            .greedy_decode_full(&prompt, steps, 2, 4, WireFmt::F32)
+            .unwrap();
+        for kill_at in [0usize, 5, 13] {
+            for victim in [0usize, 1] {
+                let mut sess =
+                    DecodeSession::new(m.clone(), 2, 4, WireFmt::F32)
+                        .unwrap();
+                sess.enable_replication().unwrap();
+                sess.prefill(&prompt).unwrap();
+                let mut got = Vec::with_capacity(steps);
+                for step in 0..steps {
+                    if step == kill_at {
+                        let before = sess.stats();
+                        let adopter = sess.fail_device(victim).unwrap();
+                        assert_eq!(adopter, 1 - victim);
+                        assert_eq!(sess.live_devices(), 1);
+                        assert!(!sess.device_alive(victim));
+                        assert_eq!(sess.hosts(),
+                                   &[1 - victim, 1 - victim][..]);
+                        let after = sess.stats();
+                        // migration bytes cross the codec iff the dead
+                        // device's partition had absorbed rows (victim
+                        // 1's span [16, 32) fills only late)
+                        let victim_rows = victim == 0
+                            || prompt.len() + kill_at > 16;
+                        assert_eq!(after.migrated_bytes
+                                       > before.migrated_bytes,
+                                   victim_rows,
+                                   "kill@{kill_at} victim {victim}");
+                    }
+                    got.push(sess.generate_next().unwrap());
+                }
+                assert_eq!(got, full,
+                           "kill@{kill_at} victim {victim} diverged");
+                // single survivor: the delta exchange went quiet
+                let st = sess.stats();
+                let solo_tokens = steps - kill_at;
+                let expect_delta = (st.absorbed - solo_tokens)
+                    * m.cfg.layers * m.cfg.d * 4;
+                assert_eq!(st.delta_bytes, expect_delta);
+            }
+        }
+    }
+
+    #[test]
+    fn failover_p3_then_p2_keeps_decoding() {
+        let m = model();
+        let prompt = vec![2i32, 8, 8, 4];
+        let steps = 15;
+        let (full, _) = m
+            .greedy_decode_full(&prompt, steps, 3, 3, WireFmt::F32)
+            .unwrap();
+        let mut sess =
+            DecodeSession::new(m.clone(), 3, 3, WireFmt::F32).unwrap();
+        sess.enable_replication().unwrap();
+        sess.prefill(&prompt).unwrap();
+        let mut got = Vec::new();
+        for step in 0..steps {
+            if step == 4 {
+                // device 1's partition re-homes to device 2
+                assert_eq!(sess.fail_device(1).unwrap(), 2);
+                assert_eq!(sess.hosts(), &[0, 2, 2][..]);
+            }
+            if step == 9 {
+                // cascading: device 2 now carries partitions 1 and 2,
+                // both re-home to the ring's next survivor, device 0
+                assert_eq!(sess.fail_device(2).unwrap(), 0);
+                assert_eq!(sess.hosts(), &[0, 0, 0][..]);
+                assert_eq!(sess.live_devices(), 1);
+            }
+            got.push(sess.generate_next().unwrap());
+        }
+        assert_eq!(got, full);
+        // the last survivor cannot fail
+        assert!(sess.fail_device(0).is_err());
+        // nor can the already-dead fail twice
+        assert!(sess.fail_device(1).is_err());
+    }
+
+    #[test]
+    fn failover_needs_replication_once_state_exists() {
+        let m = model();
+        let mut sess =
+            DecodeSession::new(m.clone(), 2, 4, WireFmt::F32).unwrap();
+        // before any tokens, nothing is lost: failover works bare
+        assert_eq!(sess.fail_device(0).unwrap(), 1);
+        let mut sess =
+            DecodeSession::new(m.clone(), 2, 4, WireFmt::F32).unwrap();
+        sess.prefill(&[4, 4, 2]).unwrap();
+        let err = sess.fail_device(0).unwrap_err();
+        assert!(format!("{err}").contains("replication"), "{err}");
+        // replication cannot be bolted on after the fact
+        assert!(sess.enable_replication().is_err());
+        // and out-of-range devices are rejected
+        assert!(sess.fail_device(9).is_err());
+    }
+
+    #[test]
+    fn replication_bytes_are_accounted() {
+        let m = model();
+        let mut plain =
+            DecodeSession::new(m.clone(), 2, 4, WireFmt::F32).unwrap();
+        let mut repl =
+            DecodeSession::new(m.clone(), 2, 4, WireFmt::F32).unwrap();
+        repl.enable_replication().unwrap();
+        assert!(repl.replicated() && !plain.replicated());
+        plain.prefill(&[1, 2, 3]).unwrap();
+        repl.prefill(&[1, 2, 3]).unwrap();
+        for _ in 0..5 {
+            assert_eq!(plain.generate_next().unwrap(),
+                       repl.generate_next().unwrap());
+        }
+        let (ps, rs) = (plain.stats(), repl.stats());
+        assert_eq!(ps.replica_bytes, 0);
+        // one f32 frontier row per layer per absorbed token
+        assert_eq!(rs.replica_bytes,
+                   rs.absorbed * m.cfg.layers * m.cfg.d * 4);
+        // replication changes accounting only, never the stream
+        assert_eq!(ps.delta_bytes, rs.delta_bytes);
+        assert!(rs.wire_bytes() > ps.wire_bytes());
     }
 
     #[test]

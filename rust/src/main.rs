@@ -62,11 +62,16 @@ examples:
   prism eval --model vit --dataset synth10 --mode prism --p 2 --l 6
   prism eval --model gpt2 --dataset text8p --mode prism --p 3 --cr 10
   prism latency --model vit --mode prism --p 3 --l 3 --bandwidth 200
-  prism serve --model vit --dataset synth10 --p 2 --l 6 --requests 64
+  prism serve --model vit --dataset synth10 --p 2 --l 6 --requests 64 \\
+        --gather-timeout-ms 30000
   prism decode --sessions 4 --steps 32 --p 2 --l 4 --wire f16
+  prism decode --sessions 4 --replicate --fail-device 0 --fail-after 8
   prism worker --listen 127.0.0.1:7070
   prism remote-eval --workers 127.0.0.1:7070,127.0.0.1:7071 \\
-        --model vit --mode prism --p 2 --l 6 --limit 64";
+        --model vit --mode prism --p 2 --l 6 --limit 64
+fault tolerance: serve degrades to single-device when a worker blows the
+gather deadline; decode streams with --replicate survive --fail-device
+via CacheSync migration (see tests/chaos.rs for the full fault matrix)";
 
 pub fn manifest_from(args: &Args) -> Result<Arc<Manifest>> {
     let root = PathBuf::from(args.str_or("artifacts", "artifacts"));

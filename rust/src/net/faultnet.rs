@@ -1,0 +1,341 @@
+//! `FaultNet`: deterministic fault injection over any [`Transport`].
+//!
+//! Wraps a transport and perturbs traffic according to a seeded
+//! `util::rng` schedule: message drops, delivery delays, pairwise
+//! reorders, duplicates, and a scheduled one-way peer disconnect. All
+//! decisions come from the decorator's own RNG, so a (seed, protocol)
+//! pair replays the exact same fault sequence — the chaos suite
+//! (`tests/chaos.rs`) runs a fixed seed matrix and asserts behaviour is
+//! identical run-to-run. Nothing here sleeps: delays are realized by
+//! holding a message and releasing it on a later transport operation,
+//! i.e. at a later *virtual* time when the inner transport is
+//! `SimEndpoint`.
+
+use std::collections::VecDeque;
+use std::time::Duration;
+
+use super::message::Msg;
+use super::transport::{Envelope, Transport, TransportError};
+use crate::util::rng::Rng;
+
+/// Fault schedule knobs. Probabilities are per message; `none()` is the
+/// identity decorator.
+#[derive(Debug, Clone)]
+pub struct FaultCfg {
+    /// P(message silently lost on send).
+    pub drop_p: f64,
+    /// P(message held back and released a few operations later).
+    pub delay_p: f64,
+    /// Max extra operations a delayed message is held for.
+    pub delay_ops: usize,
+    /// P(received message swapped with the next one).
+    pub reorder_p: f64,
+    /// P(message delivered twice).
+    pub dup_p: f64,
+    /// After `disconnect_after` operations, this peer counts as gone:
+    /// sends to it fail with `PeerDown`, receives from it are swallowed.
+    pub disconnect_peer: Option<usize>,
+    pub disconnect_after: usize,
+}
+
+impl FaultCfg {
+    pub fn none() -> FaultCfg {
+        FaultCfg {
+            drop_p: 0.0,
+            delay_p: 0.0,
+            delay_ops: 0,
+            reorder_p: 0.0,
+            dup_p: 0.0,
+            disconnect_peer: None,
+            disconnect_after: 0,
+        }
+    }
+
+    pub fn drops(p: f64) -> FaultCfg {
+        FaultCfg { drop_p: p, ..FaultCfg::none() }
+    }
+
+    pub fn delays(p: f64, ops: usize) -> FaultCfg {
+        FaultCfg { delay_p: p, delay_ops: ops, ..FaultCfg::none() }
+    }
+
+    pub fn reorders(p: f64) -> FaultCfg {
+        FaultCfg { reorder_p: p, ..FaultCfg::none() }
+    }
+
+    pub fn dups(p: f64) -> FaultCfg {
+        FaultCfg { dup_p: p, ..FaultCfg::none() }
+    }
+
+    pub fn disconnects(peer: usize, after_ops: usize) -> FaultCfg {
+        FaultCfg {
+            disconnect_peer: Some(peer),
+            disconnect_after: after_ops,
+            ..FaultCfg::none()
+        }
+    }
+}
+
+/// The decorator. One per participant; seed it distinctly per device so
+/// schedules differ across the mesh but replay per seed.
+pub struct FaultNet<T: Transport> {
+    inner: T,
+    rng: Rng,
+    cfg: FaultCfg,
+    /// Operation counter: every send/recv ticks it; delayed messages and
+    /// the disconnect schedule key off it.
+    ops: usize,
+    delayed: VecDeque<(usize, usize, Msg)>, // (release_op, to, msg)
+    held: Option<Envelope>,                 // reorder buffer
+}
+
+impl<T: Transport> FaultNet<T> {
+    pub fn new(inner: T, seed: u64, cfg: FaultCfg) -> FaultNet<T> {
+        FaultNet {
+            inner,
+            rng: Rng::new(seed),
+            cfg,
+            ops: 0,
+            delayed: VecDeque::new(),
+            held: None,
+        }
+    }
+
+    pub fn into_inner(self) -> T {
+        self.inner
+    }
+
+    pub fn inner(&self) -> &T {
+        &self.inner
+    }
+
+    fn cut(&self, peer: usize) -> bool {
+        self.cfg.disconnect_peer == Some(peer)
+            && self.ops >= self.cfg.disconnect_after
+    }
+
+    /// Release every delayed message whose time has come. Failures are
+    /// swallowed: a delayed frame to a now-dead peer is simply lost.
+    fn flush_delayed(&mut self) {
+        while let Some(&(release, _, _)) = self.delayed.front() {
+            if release > self.ops {
+                break;
+            }
+            let (_, to, msg) = self.delayed.pop_front().unwrap();
+            if !self.cut(to) {
+                let _ = self.inner.send(to, msg);
+            }
+        }
+    }
+}
+
+impl<T: Transport> Transport for FaultNet<T> {
+    fn local_id(&self) -> usize {
+        self.inner.local_id()
+    }
+
+    fn peers(&self) -> Vec<usize> {
+        self.inner
+            .peers()
+            .into_iter()
+            .filter(|&p| !self.cut(p))
+            .collect()
+    }
+
+    fn send(&mut self, to: usize, msg: Msg) -> Result<(), TransportError> {
+        self.ops += 1;
+        self.flush_delayed();
+        if self.cut(to) {
+            return Err(TransportError::PeerDown { peer: to });
+        }
+        if self.rng.chance(self.cfg.drop_p) {
+            return Ok(()); // lost on the wire; sender cannot tell
+        }
+        if self.rng.chance(self.cfg.delay_p) {
+            let hold = 1 + self.rng.below(self.cfg.delay_ops.max(1));
+            self.delayed.push_back((self.ops + hold, to, msg));
+            return Ok(());
+        }
+        self.inner.send(to, msg.clone())?;
+        if self.rng.chance(self.cfg.dup_p) {
+            self.inner.send(to, msg)?;
+        }
+        Ok(())
+    }
+
+    fn recv_deadline(&mut self, timeout: Duration)
+                     -> Result<Envelope, TransportError> {
+        self.ops += 1;
+        self.flush_delayed();
+        if let Some(h) = self.held.take() {
+            return Ok(h);
+        }
+        let env = self.inner.recv_deadline(timeout)?;
+        if self.cut(env.from) {
+            // one-way partition: pretend the frame never arrived
+            return Err(TransportError::Timeout { after: timeout });
+        }
+        if self.rng.chance(self.cfg.reorder_p) {
+            // probe for an already-delivered follower with a zero
+            // deadline: re-spending the caller's timeout would silently
+            // burn an extra interval of (virtual) time per reorder.
+            if let Ok(next) = self.inner.recv_deadline(Duration::ZERO) {
+                if !self.cut(next.from) {
+                    self.held = Some(env);
+                    return Ok(next);
+                }
+            }
+        }
+        Ok(env)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::model::LinkModel;
+    use crate::net::simnet::SimNet;
+
+    fn pair(cfg: FaultCfg, seed: u64)
+            -> (FaultNet<crate::net::simnet::SimEndpoint>,
+                FaultNet<crate::net::simnet::SimEndpoint>) {
+        let net = SimNet::new(2, LinkModel::new(1000.0, 0.0));
+        (FaultNet::new(net.endpoint(0), seed, FaultCfg::none()),
+         FaultNet::new(net.endpoint(1), seed ^ 1, cfg))
+    }
+
+    fn hb(seq: u64) -> Msg {
+        Msg::Heartbeat { from: 0, seq }
+    }
+
+    fn d(ms: u64) -> Duration {
+        Duration::from_millis(ms)
+    }
+
+    #[test]
+    fn identity_when_no_faults() {
+        let (mut a, mut b) = pair(FaultCfg::none(), 7);
+        for s in 0..20 {
+            a.send(1, hb(s)).unwrap();
+        }
+        for s in 0..20 {
+            let env = b.recv_deadline(d(10)).unwrap();
+            assert_eq!(env.msg, hb(s));
+        }
+        assert_eq!(b.local_id(), 1);
+        assert_eq!(b.peers(), vec![0]);
+    }
+
+    #[test]
+    fn drops_lose_some_but_not_all() {
+        let net = SimNet::new(2, LinkModel::new(1000.0, 0.0));
+        let mut a = FaultNet::new(net.endpoint(0), 3,
+                                  FaultCfg::drops(0.4));
+        let mut b = net.endpoint(1);
+        for s in 0..50 {
+            a.send(1, hb(s)).unwrap();
+        }
+        let mut got = 0;
+        while b.recv_deadline(d(1)).is_ok() {
+            got += 1;
+        }
+        assert!(got > 10 && got < 50, "got {got}");
+    }
+
+    #[test]
+    fn dups_deliver_extras() {
+        let net = SimNet::new(2, LinkModel::new(1000.0, 0.0));
+        let mut a = FaultNet::new(net.endpoint(0), 5, FaultCfg::dups(0.5));
+        let mut b = net.endpoint(1);
+        for s in 0..40 {
+            a.send(1, hb(s)).unwrap();
+        }
+        let mut got = 0;
+        while b.recv_deadline(d(1)).is_ok() {
+            got += 1;
+        }
+        assert!(got > 40, "got {got}");
+    }
+
+    #[test]
+    fn delays_release_later_not_never() {
+        let net = SimNet::new(2, LinkModel::new(1000.0, 0.0));
+        let mut a = FaultNet::new(net.endpoint(0), 11,
+                                  FaultCfg::delays(1.0, 3));
+        let mut b = net.endpoint(1);
+        a.send(1, hb(0)).unwrap(); // held
+        assert!(b.recv_deadline(d(1)).is_err());
+        // later operations on the sender release it
+        for s in 1..6 {
+            a.send(1, hb(s)).unwrap();
+        }
+        let mut got = 0;
+        while b.recv_deadline(d(1)).is_ok() {
+            got += 1;
+        }
+        assert!(got >= 1, "delayed message never released");
+    }
+
+    #[test]
+    fn reorder_swaps_but_loses_nothing() {
+        let (mut a, mut b) = pair(FaultCfg::reorders(1.0), 13);
+        for s in 0..6 {
+            a.send(1, hb(s)).unwrap();
+        }
+        let mut seqs = Vec::new();
+        while let Ok(env) = b.recv_deadline(d(1)) {
+            if let Msg::Heartbeat { seq, .. } = env.msg {
+                seqs.push(seq);
+            }
+        }
+        let mut sorted = seqs.clone();
+        sorted.sort();
+        assert_eq!(sorted, (0..6).collect::<Vec<u64>>());
+        assert_ne!(seqs, sorted, "reorder_p=1.0 must permute something");
+    }
+
+    #[test]
+    fn scheduled_disconnect_cuts_the_link() {
+        let net = SimNet::new(2, LinkModel::new(1000.0, 0.0));
+        let mut a = FaultNet::new(net.endpoint(0), 17,
+                                  FaultCfg::disconnects(1, 3));
+        a.send(1, hb(0)).unwrap();
+        a.send(1, hb(1)).unwrap();
+        // third op crosses the schedule
+        assert_eq!(a.send(1, hb(2)),
+                   Err(TransportError::PeerDown { peer: 1 }));
+        assert_eq!(a.peers(), Vec::<usize>::new());
+        // inbound from the cut peer is swallowed too
+        let mut b = net.endpoint(1);
+        b.send(0, hb(9)).unwrap();
+        assert!(matches!(a.recv_deadline(d(1)),
+                         Err(TransportError::Timeout { .. })));
+    }
+
+    #[test]
+    fn same_seed_same_schedule() {
+        for cfg in [FaultCfg::drops(0.3), FaultCfg::dups(0.3),
+                    FaultCfg::delays(0.5, 4), FaultCfg::reorders(0.5)] {
+            let run = |seed: u64| -> Vec<u64> {
+                let net = SimNet::new(2, LinkModel::new(1000.0, 0.0));
+                let mut a = FaultNet::new(net.endpoint(0), seed,
+                                          cfg.clone());
+                let mut b = net.endpoint(1);
+                for s in 0..30 {
+                    a.send(1, hb(s)).unwrap();
+                }
+                let mut seqs = Vec::new();
+                while let Ok(env) = b.recv_deadline(d(1)) {
+                    if let Msg::Heartbeat { seq, .. } = env.msg {
+                        seqs.push(seq);
+                    }
+                }
+                seqs
+            };
+            assert_eq!(run(23), run(23));
+            assert_ne!(run(23), (0..30).collect::<Vec<u64>>(),
+                       "{cfg:?}: schedule was a no-op at p>=0.3 over 30 \
+                        sends (astronomically unlikely unless broken)");
+        }
+    }
+}

@@ -13,13 +13,9 @@ use anyhow::{anyhow, Result};
 use super::message::Msg;
 use super::model::LinkModel;
 use super::stats::NetStats;
+use super::transport::{Transport, TransportError};
 
-#[derive(Debug)]
-pub struct Envelope {
-    pub from: usize,
-    pub to: usize,
-    pub msg: Msg,
-}
+pub use super::transport::Envelope;
 
 /// One participant's handle into the mesh. Device ids `0..p` are workers,
 /// id `p` is the master.
@@ -66,6 +62,41 @@ impl Endpoint {
             Err(RecvTimeoutError::Timeout) => Ok(None),
             Err(RecvTimeoutError::Disconnected) => {
                 Err(anyhow!("mesh closed"))
+            }
+        }
+    }
+}
+
+/// The mpsc mesh as a [`Transport`]: sends to a hung-up endpoint surface
+/// as `PeerDown`, a drained-and-disconnected mesh as `Closed`, and the
+/// deadline is wall-clock (`mpsc::recv_timeout`). Inherent methods keep
+/// the historical anyhow-based signatures for existing callers.
+impl Transport for Endpoint {
+    fn local_id(&self) -> usize {
+        self.id
+    }
+
+    fn peers(&self) -> Vec<usize> {
+        (0..self.txs.len()).filter(|&j| j != self.id).collect()
+    }
+
+    fn send(&mut self, to: usize, msg: Msg) -> Result<(), TransportError> {
+        if to >= self.txs.len() {
+            return Err(TransportError::PeerDown { peer: to });
+        }
+        Endpoint::send(self, to, msg)
+            .map_err(|_| TransportError::PeerDown { peer: to })
+    }
+
+    fn recv_deadline(&mut self, timeout: Duration)
+                     -> Result<Envelope, TransportError> {
+        match self.rx.recv_timeout(timeout) {
+            Ok(e) => Ok(e),
+            Err(RecvTimeoutError::Timeout) => {
+                Err(TransportError::Timeout { after: timeout })
+            }
+            Err(RecvTimeoutError::Disconnected) => {
+                Err(TransportError::Closed)
             }
         }
     }
@@ -139,6 +170,30 @@ mod tests {
         let e = master.recv().unwrap();
         assert_eq!(e.from, 0);
         h.join().unwrap();
+    }
+
+    #[test]
+    fn endpoint_implements_transport() {
+        use crate::net::transport::{Transport, TransportError};
+        let mut eps = mesh(1, None);
+        let mut master = eps.pop().unwrap();
+        let mut w0 = eps.pop().unwrap();
+        assert_eq!(Transport::local_id(&master), 1);
+        assert_eq!(Transport::peers(&w0), vec![1]);
+        Transport::send(&mut w0, 1, Msg::Shutdown).unwrap();
+        let env = Transport::recv_deadline(
+            &mut master, Duration::from_secs(5)).unwrap();
+        assert_eq!(env.from, 0);
+        assert!(matches!(
+            Transport::recv_deadline(&mut master,
+                                     Duration::from_millis(5)),
+            Err(TransportError::Timeout { .. })));
+        // out-of-range and hung-up peers surface as PeerDown
+        assert_eq!(Transport::send(&mut master, 9, Msg::Shutdown),
+                   Err(TransportError::PeerDown { peer: 9 }));
+        drop(w0);
+        assert_eq!(Transport::send(&mut master, 0, Msg::Shutdown),
+                   Err(TransportError::PeerDown { peer: 0 }));
     }
 
     #[test]

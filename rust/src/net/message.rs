@@ -37,6 +37,9 @@ pub enum Msg {
     /// Bulk KV-cache transfer (decode-session migration / late worker
     /// join): rows `[start, start + k.rows())` of one layer's K and V.
     CacheSync { from: u32, layer: u32, start: u32, k: Tensor, v: Tensor },
+    /// Liveness beacon for peer-loss detection (`transport::PeerHealth`).
+    /// `seq` increments per beat so duplicates/reorders are visible.
+    Heartbeat { from: u32, seq: u64 },
 }
 
 impl Msg {
@@ -52,6 +55,7 @@ impl Msg {
             Msg::Shutdown => 0,
             Msg::SegDelta { payload, .. } => payload.len(),
             Msg::CacheSync { k, v, .. } => k.byte_len() + v.byte_len(),
+            Msg::Heartbeat { .. } => 0,
         }
     }
 
@@ -126,8 +130,15 @@ impl<'a> Cursor<'a> {
         Cursor { buf, pos: 0 }
     }
 
+    /// Bytes left to consume.
+    pub fn remaining(&self) -> usize {
+        self.buf.len().saturating_sub(self.pos)
+    }
+
     pub fn take(&mut self, n: usize) -> Result<&'a [u8]> {
-        if self.pos + n > self.buf.len() {
+        // compare against `remaining` instead of computing `pos + n`:
+        // a hostile length field must not overflow the check itself.
+        if n > self.remaining() {
             bail!("message truncated at {}", self.pos);
         }
         let s = &self.buf[self.pos..self.pos + n];
@@ -157,8 +168,18 @@ pub fn decode_tensor(c: &mut Cursor) -> Result<Tensor> {
     for _ in 0..ndim {
         shape.push(c.u32()? as usize);
     }
-    let n: usize = shape.iter().product();
-    let raw = c.take(n * 4)?;
+    // Hostile headers can declare shapes whose element count overflows
+    // usize or dwarfs the frame; fail closed before any allocation.
+    let n = shape
+        .iter()
+        .try_fold(1usize, |acc, &d| acc.checked_mul(d))
+        .context("tensor shape overflows")?;
+    let bytes = n.checked_mul(4).context("tensor size overflows")?;
+    if bytes > c.remaining() {
+        bail!("tensor data truncated: {bytes} B declared, {} B left",
+              c.remaining());
+    }
+    let raw = c.take(bytes)?;
     match dtype {
         0 => {
             let v = raw
@@ -223,6 +244,11 @@ impl Msg {
                 encode_tensor(&mut out, k);
                 encode_tensor(&mut out, v);
             }
+            Msg::Heartbeat { from, seq } => {
+                out.push(6);
+                put_u32(&mut out, *from);
+                put_u64(&mut out, *seq);
+            }
         }
         out
     }
@@ -241,6 +267,13 @@ impl Msg {
                 let request = c.u64()?;
                 let x_p = decode_tensor(&mut c)?;
                 let n = c.u32()? as usize;
+                // every tensor costs >= 2 header bytes: a count beyond
+                // the remaining bytes is garbage — reject before
+                // reserving capacity for it.
+                if n > c.remaining() {
+                    bail!("Job declares {n} ctx tensors, {} bytes left",
+                          c.remaining());
+                }
                 let mut ctx = Vec::with_capacity(n);
                 for _ in 0..n {
                     ctx.push(decode_tensor(&mut c)?);
@@ -267,6 +300,7 @@ impl Msg {
                 k: decode_tensor(&mut c)?,
                 v: decode_tensor(&mut c)?,
             },
+            6 => Msg::Heartbeat { from: c.u32()?, seq: c.u64()? },
             other => bail!("unknown message tag {other}"),
         };
         if c.pos != buf.len() {
@@ -380,5 +414,169 @@ mod tests {
         let j = Msg::Job { request: 1, x_p: t(vec![2]),
                            ctx: vec![t(vec![3])] };
         assert_eq!(j.wire_bytes(), 20);
+        assert_eq!(Msg::Heartbeat { from: 2, seq: 9 }.wire_bytes(), 0);
+    }
+
+    #[test]
+    fn heartbeat_roundtrip() {
+        let m = Msg::Heartbeat { from: 3, seq: u64::MAX };
+        assert_eq!(Msg::decode(&m.encode()).unwrap(), m);
+    }
+}
+
+#[cfg(test)]
+mod property_tests {
+    use super::*;
+    use crate::runtime::Tensor;
+    use crate::util::quant::WireFmt;
+    use crate::util::rng::{property, Rng};
+
+    fn rand_tensor(rng: &mut Rng) -> Tensor {
+        let ndim = rng.range(1, 4);
+        let shape: Vec<usize> = (0..ndim).map(|_| rng.range(1, 5)).collect();
+        let n: usize = shape.iter().product();
+        if rng.chance(0.5) {
+            Tensor::from_f32(shape, rng.normal_vec(n, 3.0)).unwrap()
+        } else {
+            let v: Vec<i32> =
+                (0..n).map(|_| rng.next_u64() as i32).collect();
+            Tensor::from_i32(shape, v).unwrap()
+        }
+    }
+
+    fn rand_f32_row(rng: &mut Rng) -> Tensor {
+        let d = rng.range(1, 12);
+        Tensor::from_f32(vec![d], rng.normal_vec(d, 2.0)).unwrap()
+    }
+
+    /// One random instance of every wire variant per call index, so the
+    /// property loop covers the full enum many times over.
+    fn rand_msg(rng: &mut Rng) -> Msg {
+        match rng.below(7) {
+            0 => Msg::Exchange {
+                layer: rng.next_u64() as u32,
+                from: rng.next_u64() as u32,
+                data: rand_tensor(rng),
+            },
+            1 => Msg::FinalPart {
+                from: rng.next_u64() as u32,
+                data: rand_tensor(rng),
+            },
+            2 => Msg::Job {
+                request: rng.next_u64(),
+                x_p: rand_tensor(rng),
+                ctx: (0..rng.below(4)).map(|_| rand_tensor(rng)).collect(),
+            },
+            3 => Msg::Shutdown,
+            4 => {
+                let fmt = match rng.below(3) {
+                    0 => WireFmt::F32,
+                    1 => WireFmt::F16,
+                    _ => WireFmt::I8,
+                };
+                Msg::seg_delta(rng.next_u64() as u32, rng.next_u64() as u32,
+                               rng.next_u64() as u32, rng.next_u64() as u32,
+                               &rand_f32_row(rng), fmt)
+                    .unwrap()
+            }
+            5 => {
+                let rows = rng.range(1, 5);
+                let d = rng.range(1, 6);
+                let mk = |rng: &mut Rng| {
+                    Tensor::from_f32(vec![rows, d],
+                                     rng.normal_vec(rows * d, 1.5))
+                        .unwrap()
+                };
+                Msg::CacheSync {
+                    from: rng.next_u64() as u32,
+                    layer: rng.next_u64() as u32,
+                    start: rng.next_u64() as u32,
+                    k: mk(rng),
+                    v: mk(rng),
+                }
+            }
+            _ => Msg::Heartbeat {
+                from: rng.next_u64() as u32,
+                seq: rng.next_u64(),
+            },
+        }
+    }
+
+    #[test]
+    fn every_variant_roundtrips() {
+        property("msg-roundtrip", 300, |rng: &mut Rng| {
+            let m = rand_msg(rng);
+            let buf = m.encode();
+            let back = Msg::decode(&buf).unwrap();
+            assert_eq!(back, m);
+            // wire accounting survives the codec
+            assert_eq!(back.wire_bytes(), m.wire_bytes());
+        });
+    }
+
+    #[test]
+    fn truncated_frames_error_never_panic() {
+        property("msg-truncation", 120, |rng: &mut Rng| {
+            let buf = rand_msg(rng).encode();
+            // every strict prefix must fail loudly (the full-consumption
+            // check means no prefix can masquerade as a valid message)
+            for cut in 0..buf.len() {
+                assert!(Msg::decode(&buf[..cut]).is_err(),
+                        "prefix of {cut}/{} decoded", buf.len());
+            }
+        });
+    }
+
+    #[test]
+    fn oversized_frames_error_never_panic() {
+        property("msg-trailing", 120, |rng: &mut Rng| {
+            let mut buf = rand_msg(rng).encode();
+            buf.push(rng.next_u64() as u8);
+            assert!(Msg::decode(&buf).is_err());
+        });
+    }
+
+    #[test]
+    fn garbage_frames_error_never_panic() {
+        property("msg-garbage", 400, |rng: &mut Rng| {
+            let len = rng.below(96);
+            let buf: Vec<u8> =
+                (0..len).map(|_| rng.next_u64() as u8).collect();
+            // must return (almost surely Err), never panic or abort
+            let _ = Msg::decode(&buf);
+        });
+        // bit-flip corruption of valid frames
+        property("msg-bitflip", 200, |rng: &mut Rng| {
+            let mut buf = rand_msg(rng).encode();
+            if buf.is_empty() {
+                return;
+            }
+            let i = rng.below(buf.len());
+            buf[i] ^= 1 << rng.below(8);
+            let _ = Msg::decode(&buf); // Err or a different valid Msg; no panic
+        });
+    }
+
+    #[test]
+    fn hostile_tensor_headers_fail_closed() {
+        // Exchange whose tensor header declares 2^128-ish elements: the
+        // checked shape math must bail before allocating anything.
+        let mut buf = vec![0u8]; // Exchange tag
+        buf.extend_from_slice(&0u32.to_le_bytes()); // layer
+        buf.extend_from_slice(&0u32.to_le_bytes()); // from
+        buf.push(0); // dtype f32
+        buf.push(4); // ndim
+        for _ in 0..4 {
+            buf.extend_from_slice(&u32::MAX.to_le_bytes());
+        }
+        assert!(Msg::decode(&buf).is_err());
+        // Job that declares 4 billion ctx tensors with no bytes behind it
+        let mut buf = vec![2u8];
+        buf.extend_from_slice(&1u64.to_le_bytes()); // request
+        buf.push(0); // x_p dtype
+        buf.push(1); // ndim 1
+        buf.extend_from_slice(&0u32.to_le_bytes()); // dim 0 (empty tensor)
+        buf.extend_from_slice(&u32::MAX.to_le_bytes()); // ctx count
+        assert!(Msg::decode(&buf).is_err());
     }
 }

@@ -1,13 +1,22 @@
-//! Network substrate: wire messages, in-process mesh transport, TCP
-//! multi-process transport, the analytical link model, the virtual-clock
-//! simulator, and byte accounting.
+//! Network substrate: wire messages, the unified `Transport` trait with
+//! typed errors, the in-process mesh transport, TCP multi-process
+//! transport (deadlines + reconnect), the analytical link model, the
+//! virtual-clock simulator (`SimClock` for timing, `SimNet` for
+//! deterministic message routing), the `FaultNet` chaos decorator, and
+//! byte accounting.
+pub mod faultnet;
 pub mod inproc;
 pub mod message;
 pub mod model;
 pub mod sim;
+pub mod simnet;
 pub mod stats;
 pub mod tcp;
+pub mod transport;
 
+pub use faultnet::{FaultCfg, FaultNet};
 pub use model::LinkModel;
 pub use sim::SimClock;
+pub use simnet::{SimEndpoint, SimNet};
 pub use stats::NetStats;
+pub use transport::{Envelope, PeerHealth, Transport, TransportError};

@@ -1,0 +1,262 @@
+//! Deterministic message-passing mesh on a virtual clock.
+//!
+//! `SimClock` (net/sim.rs) models *timing* of the fixed per-layer
+//! exchange schedule; chaos testing needs the dual: actual `Msg` routing
+//! with delivery times, peer death, and deadline-bounded receives, still
+//! with zero wall-clock sleeps. `SimNet` provides that: one global
+//! virtual clock shared by every endpoint, per-peer inboxes ordered by
+//! (arrival time, send sequence), transfer times from the analytical
+//! `LinkModel`, and byte accounting through the same `NetStats` the real
+//! transports use.
+//!
+//! Endpoints share state via `Rc<RefCell<..>>`: the mesh is
+//! single-threaded by design — a chaos test drives every participant
+//! from one loop, which is exactly what makes a seeded fault schedule
+//! reproducible. `recv_deadline` advances the clock either to the
+//! message's arrival time or by the full timeout, so waiting costs
+//! virtual time, never wall time.
+
+use std::cell::RefCell;
+use std::rc::Rc;
+use std::sync::Arc;
+use std::time::Duration;
+
+use super::message::Msg;
+use super::model::LinkModel;
+use super::stats::NetStats;
+use super::transport::{Envelope, Transport, TransportError};
+
+struct Pending {
+    at: f64,
+    seq: u64,
+    env: Envelope,
+}
+
+struct Inner {
+    now: f64,
+    seq: u64,
+    alive: Vec<bool>,
+    inboxes: Vec<Vec<Pending>>,
+    link: LinkModel,
+    stats: Arc<NetStats>,
+}
+
+/// The shared mesh; hand out one [`SimEndpoint`] per participant.
+pub struct SimNet {
+    inner: Rc<RefCell<Inner>>,
+}
+
+impl SimNet {
+    pub fn new(devices: usize, link: LinkModel) -> SimNet {
+        SimNet {
+            inner: Rc::new(RefCell::new(Inner {
+                now: 0.0,
+                seq: 0,
+                alive: vec![true; devices],
+                inboxes: (0..devices).map(|_| Vec::new()).collect(),
+                link,
+                stats: NetStats::new(devices),
+            })),
+        }
+    }
+
+    pub fn endpoint(&self, id: usize) -> SimEndpoint {
+        SimEndpoint { id, inner: self.inner.clone() }
+    }
+
+    pub fn devices(&self) -> usize {
+        self.inner.borrow().alive.len()
+    }
+
+    /// Kill a device: its queued mail is dropped, sends to it fail with
+    /// `PeerDown`, and nothing it "sends" afterwards goes anywhere.
+    pub fn disconnect(&self, id: usize) {
+        let mut inner = self.inner.borrow_mut();
+        if id < inner.alive.len() {
+            inner.alive[id] = false;
+            inner.inboxes[id].clear();
+        }
+    }
+
+    pub fn is_alive(&self, id: usize) -> bool {
+        self.inner.borrow().alive.get(id).copied().unwrap_or(false)
+    }
+
+    /// Current virtual time in seconds.
+    pub fn now_secs(&self) -> f64 {
+        self.inner.borrow().now
+    }
+
+    pub fn now(&self) -> Duration {
+        Duration::from_secs_f64(self.now_secs())
+    }
+
+    pub fn stats(&self) -> Arc<NetStats> {
+        self.inner.borrow().stats.clone()
+    }
+}
+
+/// One participant's handle; implements [`Transport`].
+pub struct SimEndpoint {
+    id: usize,
+    inner: Rc<RefCell<Inner>>,
+}
+
+impl SimEndpoint {
+    /// Virtual now as seen by this endpoint (global clock).
+    pub fn now(&self) -> Duration {
+        Duration::from_secs_f64(self.inner.borrow().now)
+    }
+}
+
+impl Transport for SimEndpoint {
+    fn local_id(&self) -> usize {
+        self.id
+    }
+
+    fn peers(&self) -> Vec<usize> {
+        let inner = self.inner.borrow();
+        (0..inner.alive.len())
+            .filter(|&j| j != self.id && inner.alive[j])
+            .collect()
+    }
+
+    fn send(&mut self, to: usize, msg: Msg) -> Result<(), TransportError> {
+        let mut inner = self.inner.borrow_mut();
+        if !inner.alive.get(self.id).copied().unwrap_or(false) {
+            return Err(TransportError::Closed);
+        }
+        if !inner.alive.get(to).copied().unwrap_or(false) {
+            return Err(TransportError::PeerDown { peer: to });
+        }
+        let bytes = msg.wire_bytes();
+        let at = inner.now + inner.link.transfer_secs(bytes);
+        let seq = inner.seq;
+        inner.seq += 1;
+        inner.stats.record(self.id, to, bytes);
+        inner.inboxes[to].push(Pending {
+            at,
+            seq,
+            env: Envelope { from: self.id, to, msg },
+        });
+        Ok(())
+    }
+
+    fn recv_deadline(&mut self, timeout: Duration)
+                     -> Result<Envelope, TransportError> {
+        let mut inner = self.inner.borrow_mut();
+        if !inner.alive.get(self.id).copied().unwrap_or(false) {
+            return Err(TransportError::Closed);
+        }
+        let horizon = inner.now + timeout.as_secs_f64();
+        // earliest (arrival, seq) in this endpoint's inbox
+        let best = inner.inboxes[self.id]
+            .iter()
+            .enumerate()
+            .min_by(|(_, a), (_, b)| {
+                a.at.total_cmp(&b.at).then(a.seq.cmp(&b.seq))
+            })
+            .map(|(i, p)| (i, p.at));
+        match best {
+            Some((i, at)) if at <= horizon => {
+                inner.now = inner.now.max(at);
+                let p = inner.inboxes[self.id].remove(i);
+                Ok(p.env)
+            }
+            _ => {
+                // waiting out the deadline costs virtual time
+                inner.now = horizon;
+                Err(TransportError::Timeout { after: timeout })
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn net(p: usize) -> SimNet {
+        // 100 Mbps, zero propagation latency: 12.5 bytes per virtual us
+        SimNet::new(p, LinkModel::new(100.0, 0.0))
+    }
+
+    fn tensor_msg(n: usize) -> Msg {
+        Msg::FinalPart {
+            from: 0,
+            data: crate::runtime::Tensor::from_f32(
+                vec![n], vec![1.0; n]).unwrap(),
+        }
+    }
+
+    #[test]
+    fn delivery_advances_virtual_clock() {
+        let net = net(2);
+        let mut a = net.endpoint(0);
+        let mut b = net.endpoint(1);
+        // 1.25 MB at 12.5 MB/s = 0.1 virtual seconds
+        a.send(1, tensor_msg(312_500)).unwrap();
+        let env = b.recv_deadline(Duration::from_secs(1)).unwrap();
+        assert_eq!(env.from, 0);
+        assert!((net.now_secs() - 0.1).abs() < 1e-9, "{}", net.now_secs());
+        assert_eq!(net.stats().sent(0), 1_250_000);
+    }
+
+    #[test]
+    fn timeout_costs_exactly_the_deadline() {
+        let net = net(2);
+        let mut b = net.endpoint(1);
+        let err = b.recv_deadline(Duration::from_millis(250)).unwrap_err();
+        assert!(matches!(err, TransportError::Timeout { .. }));
+        assert!((net.now_secs() - 0.25).abs() < 1e-9);
+        // a message arriving *after* the horizon stays queued
+        let mut a = net.endpoint(0);
+        a.send(1, tensor_msg(312_500)).unwrap(); // arrives at 0.35
+        let err = b.recv_deadline(Duration::from_millis(50)).unwrap_err();
+        assert!(matches!(err, TransportError::Timeout { .. }));
+        let env = b.recv_deadline(Duration::from_millis(100)).unwrap();
+        assert_eq!(env.from, 0);
+        assert!((net.now_secs() - 0.35).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fifo_between_equal_arrivals() {
+        let net = net(3);
+        let mut a = net.endpoint(0);
+        let mut c = net.endpoint(2);
+        a.send(2, Msg::Shutdown).unwrap(); // 0 bytes: arrives at now
+        a.send(2, Msg::Heartbeat { from: 0, seq: 1 }).unwrap();
+        let first = c.recv_deadline(Duration::from_secs(1)).unwrap();
+        let second = c.recv_deadline(Duration::from_secs(1)).unwrap();
+        assert!(matches!(first.msg, Msg::Shutdown));
+        assert!(matches!(second.msg, Msg::Heartbeat { .. }));
+    }
+
+    #[test]
+    fn disconnect_surfaces_peer_down() {
+        let net = net(2);
+        let mut a = net.endpoint(0);
+        let mut b = net.endpoint(1);
+        a.send(1, Msg::Shutdown).unwrap();
+        net.disconnect(1);
+        assert!(!net.is_alive(1));
+        assert_eq!(a.peers(), Vec::<usize>::new());
+        assert_eq!(a.send(1, Msg::Shutdown),
+                   Err(TransportError::PeerDown { peer: 1 }));
+        // the dead endpoint itself is closed (and its mail was dropped)
+        assert_eq!(b.recv_deadline(Duration::from_millis(1)),
+                   Err(TransportError::Closed));
+        assert_eq!(b.send(0, Msg::Shutdown), Err(TransportError::Closed));
+    }
+
+    #[test]
+    fn send_all_reaches_live_peers_only() {
+        let net = net(3);
+        let mut a = net.endpoint(0);
+        net.disconnect(1);
+        a.send_all(&Msg::Shutdown).unwrap();
+        let mut c = net.endpoint(2);
+        assert!(c.recv_deadline(Duration::from_millis(1)).is_ok());
+        assert!(c.recv_deadline(Duration::from_millis(1)).is_err());
+    }
+}

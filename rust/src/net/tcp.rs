@@ -7,33 +7,190 @@
 //! communication accounting measures).
 //!
 //! Framing: u32 LE length prefix + `Msg`/RPC payload (see `message.rs`).
+//!
+//! Fault tolerance: every socket carries read/write deadlines (a silent
+//! peer used to wedge the master forever — `read_exact` on a default
+//! `TcpStream` blocks indefinitely), timeouts surface as the typed
+//! `TransportError::Timeout`, and `connect_retry` rides out a worker
+//! that is still coming up. `TcpChannel` is one hub edge (master<->
+//! worker pair) speaking `Msg` frames through the [`Transport`] trait.
+//! A timeout mid-frame poisons the byte stream (the length prefix and
+//! body can tear), so recovery after `Timeout`/`PeerDown` is
+//! `reconnect`, not resume.
 
-use std::io::{Read, Write};
+use std::io::{ErrorKind, Read, Write};
 use std::net::{TcpListener, TcpStream};
+use std::time::Duration;
 
-use anyhow::{bail, Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
-use super::message::{decode_tensor, encode_tensor, Cursor};
+use super::message::{decode_tensor, encode_tensor, Cursor, Msg};
+use super::transport::{Envelope, Transport, TransportError};
 use crate::runtime::Tensor;
 
+/// Default socket deadline: long enough for any block execution on this
+/// testbed, short enough that a dead peer is detected the same minute.
+pub const DEFAULT_IO_TIMEOUT: Duration = Duration::from_secs(30);
+
+fn is_timeout(e: &std::io::Error) -> bool {
+    matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut)
+}
+
+fn stream_deadline(stream: &TcpStream) -> Duration {
+    stream.read_timeout().ok().flatten().unwrap_or(Duration::ZERO)
+}
+
+fn write_frame_typed(stream: &mut TcpStream, payload: &[u8], peer: usize)
+                     -> Result<(), TransportError> {
+    let write = |stream: &mut TcpStream, bytes: &[u8]| {
+        stream.write_all(bytes).map_err(|e| if is_timeout(&e) {
+            TransportError::Timeout { after: stream_deadline(stream) }
+        } else {
+            TransportError::PeerDown { peer }
+        })
+    };
+    write(stream, &(payload.len() as u32).to_le_bytes())?;
+    write(stream, payload)
+}
+
+fn read_frame_typed(stream: &mut TcpStream, peer: usize)
+                    -> Result<Vec<u8>, TransportError> {
+    let read = |stream: &mut TcpStream, buf: &mut [u8]| {
+        stream.read_exact(buf).map_err(|e| if is_timeout(&e) {
+            TransportError::Timeout { after: stream_deadline(stream) }
+        } else {
+            TransportError::PeerDown { peer }
+        })
+    };
+    let mut len = [0u8; 4];
+    read(stream, &mut len)?;
+    let n = u32::from_le_bytes(len) as usize;
+    if n > 1 << 30 {
+        return Err(TransportError::Codec(format!("frame too large: {n} \
+                                                  bytes")));
+    }
+    let mut buf = vec![0u8; n];
+    read(stream, &mut buf)?;
+    Ok(buf)
+}
+
 pub fn write_frame(stream: &mut TcpStream, payload: &[u8]) -> Result<()> {
-    stream
-        .write_all(&(payload.len() as u32).to_le_bytes())
-        .context("writing frame length")?;
-    stream.write_all(payload).context("writing frame body")?;
-    Ok(())
+    write_frame_typed(stream, payload, 0).context("writing frame")
 }
 
 pub fn read_frame(stream: &mut TcpStream) -> Result<Vec<u8>> {
-    let mut len = [0u8; 4];
-    stream.read_exact(&mut len).context("reading frame length")?;
-    let n = u32::from_le_bytes(len) as usize;
-    if n > 1 << 30 {
-        bail!("frame too large: {n} bytes");
+    read_frame_typed(stream, 0).context("reading frame")
+}
+
+/// Dial `addr`, retrying while the peer is still binding (worker
+/// processes race the master at startup; reconnect reuses this too).
+pub fn connect_retry(addr: &str, attempts: usize, backoff: Duration)
+                     -> Result<TcpStream> {
+    let tries = attempts.max(1);
+    let mut last = None;
+    for attempt in 0..tries {
+        match TcpStream::connect(addr) {
+            Ok(s) => return Ok(s),
+            Err(e) => last = Some(e),
+        }
+        if attempt + 1 < tries {
+            std::thread::sleep(backoff);
+        }
     }
-    let mut buf = vec![0u8; n];
-    stream.read_exact(&mut buf).context("reading frame body")?;
-    Ok(buf)
+    Err(anyhow!("connecting {addr} failed after {tries} attempts: {}",
+                last.unwrap()))
+}
+
+/// Set the socket options every PRISM stream uses (shared by the
+/// `Transport` and RPC paths so they cannot drift).
+fn configure_stream(stream: &TcpStream, io_timeout: Duration)
+                    -> Result<()> {
+    stream.set_nodelay(true).ok();
+    stream
+        .set_read_timeout(Some(io_timeout))
+        .context("setting read deadline")?;
+    stream
+        .set_write_timeout(Some(io_timeout))
+        .context("setting write deadline")?;
+    Ok(())
+}
+
+/// One hub edge as a [`Transport`]: a framed `Msg` stream between this
+/// participant and a single peer, with socket deadlines on both
+/// directions.
+pub struct TcpChannel {
+    id: usize,
+    peer: usize,
+    addr: Option<String>, // dialing side keeps it for reconnect
+    /// Configured deadline; `recv_deadline` overrides the read timeout
+    /// per call, so reconnect restores from here, not from the socket.
+    io_timeout: Duration,
+    stream: TcpStream,
+}
+
+impl TcpChannel {
+    /// Dial the peer (with retry) and set socket deadlines.
+    pub fn connect(addr: &str, id: usize, peer: usize,
+                   io_timeout: Duration, attempts: usize,
+                   backoff: Duration) -> Result<TcpChannel> {
+        let stream = connect_retry(addr, attempts, backoff)?;
+        configure_stream(&stream, io_timeout)?;
+        Ok(TcpChannel {
+            id,
+            peer,
+            addr: Some(addr.to_string()),
+            io_timeout,
+            stream,
+        })
+    }
+
+    /// Wrap an accepted stream (listening side; cannot reconnect).
+    pub fn accepted(stream: TcpStream, id: usize, peer: usize,
+                    io_timeout: Duration) -> Result<TcpChannel> {
+        configure_stream(&stream, io_timeout)?;
+        Ok(TcpChannel { id, peer, addr: None, io_timeout, stream })
+    }
+
+    /// Drop the (possibly torn) stream and dial the peer again with the
+    /// originally configured deadlines. Only the dialing side can
+    /// reconnect.
+    pub fn reconnect(&mut self, attempts: usize, backoff: Duration)
+                     -> Result<()> {
+        let addr = self
+            .addr
+            .clone()
+            .context("accepted channels cannot reconnect")?;
+        let stream = connect_retry(&addr, attempts, backoff)?;
+        configure_stream(&stream, self.io_timeout)?;
+        self.stream = stream;
+        Ok(())
+    }
+}
+
+impl Transport for TcpChannel {
+    fn local_id(&self) -> usize {
+        self.id
+    }
+
+    fn peers(&self) -> Vec<usize> {
+        vec![self.peer]
+    }
+
+    fn send(&mut self, to: usize, msg: Msg) -> Result<(), TransportError> {
+        if to != self.peer {
+            return Err(TransportError::PeerDown { peer: to });
+        }
+        write_frame_typed(&mut self.stream, &msg.encode(), self.peer)
+    }
+
+    fn recv_deadline(&mut self, timeout: Duration)
+                     -> Result<Envelope, TransportError> {
+        self.stream.set_read_timeout(Some(timeout)).ok();
+        let frame = read_frame_typed(&mut self.stream, self.peer)?;
+        let msg = Msg::decode(&frame)
+            .map_err(|e| TransportError::Codec(format!("{e:#}")))?;
+        Ok(Envelope { from: self.peer, to: self.id, msg })
+    }
 }
 
 /// RPC request: execute one AOT executable on the remote worker.
@@ -83,6 +240,10 @@ impl ExecRequest {
         let weights = get_str(&mut c)?;
         let layer = c.u32()?;
         let n = c.u32()? as usize;
+        if n > c.remaining() {
+            bail!("ExecRequest declares {n} args, {} bytes left",
+                  c.remaining());
+        }
         let mut args = Vec::with_capacity(n);
         for _ in 0..n {
             args.push(decode_tensor(&mut c)?);
@@ -115,6 +276,10 @@ impl ExecResponse {
         match c.u8()? {
             0 => {
                 let n = c.u32()? as usize;
+                if n > c.remaining() {
+                    bail!("ExecResponse declares {n} tensors, {} bytes \
+                           left", c.remaining());
+                }
                 let mut ts = Vec::with_capacity(n);
                 for _ in 0..n {
                     ts.push(decode_tensor(&mut c)?);
@@ -163,17 +328,27 @@ pub struct RemoteWorker {
 
 impl RemoteWorker {
     pub fn connect(addr: &str) -> Result<RemoteWorker> {
-        let stream = TcpStream::connect(addr)
-            .with_context(|| format!("connecting {addr}"))?;
-        stream.set_nodelay(true).ok();
+        Self::connect_with(addr, DEFAULT_IO_TIMEOUT, 1,
+                           Duration::from_millis(0))
+    }
+
+    /// Connect with explicit socket deadlines and dial retries. A worker
+    /// that accepts but never answers now fails `call` with a typed
+    /// timeout instead of hanging the master forever.
+    pub fn connect_with(addr: &str, io_timeout: Duration, attempts: usize,
+                        backoff: Duration) -> Result<RemoteWorker> {
+        let stream = connect_retry(addr, attempts, backoff)?;
+        configure_stream(&stream, io_timeout)?;
         Ok(RemoteWorker { stream, sent_bytes: 0, recv_bytes: 0 })
     }
 
     pub fn call(&mut self, req: &ExecRequest) -> Result<Vec<Tensor>> {
         let payload = req.encode();
         self.sent_bytes += payload.len();
-        write_frame(&mut self.stream, &payload)?;
-        let frame = read_frame(&mut self.stream)?;
+        write_frame_typed(&mut self.stream, &payload, 0)
+            .context("sending request")?;
+        let frame = read_frame_typed(&mut self.stream, 0)
+            .context("awaiting response")?;
         self.recv_bytes += frame.len();
         match ExecResponse::decode(&frame)? {
             ExecResponse::Ok(ts) => Ok(ts),
@@ -250,5 +425,115 @@ mod tests {
         assert!(w.sent_bytes > 0 && w.recv_bytes > 0);
         w.shutdown().unwrap();
         server.join().unwrap();
+    }
+
+    /// Regression (the wedge this PR removes): a peer that accepts the
+    /// connection and then goes silent must produce a typed timeout, not
+    /// hang the caller forever.
+    #[test]
+    fn silent_peer_times_out_with_typed_error() {
+        let addr = "127.0.0.1:47955";
+        let server = std::thread::spawn({
+            let addr = addr.to_string();
+            move || {
+                let listener = TcpListener::bind(&addr).unwrap();
+                let (mut stream, _) = listener.accept().unwrap();
+                // read the request, answer nothing, hold the socket open
+                let _ = read_frame(&mut stream);
+                std::thread::sleep(Duration::from_millis(600));
+            }
+        });
+        std::thread::sleep(Duration::from_millis(100));
+        let mut w = RemoteWorker::connect_with(
+            addr, Duration::from_millis(150), 3,
+            Duration::from_millis(20)).unwrap();
+        let err = w
+            .call(&ExecRequest {
+                exec: "e".into(),
+                weights: "w".into(),
+                layer: 0,
+                args: vec![t(2)],
+            })
+            .unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("timed out"), "wanted typed timeout: {msg}");
+        server.join().unwrap();
+    }
+
+    #[test]
+    fn tcp_channel_speaks_msgs_and_times_out() {
+        let addr = "127.0.0.1:47957";
+        let server = std::thread::spawn({
+            let addr = addr.to_string();
+            move || {
+                let listener = TcpListener::bind(&addr).unwrap();
+                let (stream, _) = listener.accept().unwrap();
+                let mut ch = TcpChannel::accepted(
+                    stream, 1, 0, Duration::from_secs(5)).unwrap();
+                let env =
+                    ch.recv_deadline(Duration::from_secs(5)).unwrap();
+                assert_eq!(env.from, 0);
+                let Msg::Exchange { layer, .. } = env.msg else {
+                    panic!("wanted Exchange, got {:?}", env.msg)
+                };
+                ch.send(0, Msg::Heartbeat { from: 1, seq: layer as u64 })
+                    .unwrap();
+            }
+        });
+        std::thread::sleep(Duration::from_millis(100));
+        let mut ch = TcpChannel::connect(
+            addr, 0, 1, Duration::from_secs(5), 5,
+            Duration::from_millis(20)).unwrap();
+        assert_eq!((ch.local_id(), ch.peers()), (0, vec![1]));
+        // wrong peer id is rejected before touching the socket
+        assert!(matches!(ch.send(7, Msg::Shutdown),
+                         Err(TransportError::PeerDown { peer: 7 })));
+        ch.send(1, Msg::Exchange { layer: 42, from: 0, data: t(3) })
+            .unwrap();
+        let env = ch.recv_deadline(Duration::from_secs(5)).unwrap();
+        assert_eq!(env.msg, Msg::Heartbeat { from: 1, seq: 42 });
+        // nothing more queued: deadline surfaces as Timeout
+        assert!(matches!(ch.recv_deadline(Duration::from_millis(80)),
+                         Err(TransportError::Timeout { .. })));
+        server.join().unwrap();
+    }
+
+    #[test]
+    fn connect_retries_until_listener_appears() {
+        let addr = "127.0.0.1:47959";
+        let server = std::thread::spawn({
+            let addr = addr.to_string();
+            move || {
+                std::thread::sleep(Duration::from_millis(150));
+                let listener = TcpListener::bind(&addr).unwrap();
+                let (mut stream, _) = listener.accept().unwrap();
+                let frame = read_frame(&mut stream).unwrap();
+                assert!(frame.is_empty());
+            }
+        });
+        // immediate single attempt fails; retrying rides out the race
+        assert!(connect_retry(addr, 1, Duration::from_millis(1)).is_err());
+        let mut stream =
+            connect_retry(addr, 20, Duration::from_millis(50)).unwrap();
+        write_frame(&mut stream, &[]).unwrap();
+        server.join().unwrap();
+    }
+
+    #[test]
+    fn rpc_decode_rejects_garbage_counts() {
+        // ExecResponse claiming 4 billion tensors with an empty body
+        let mut buf = vec![0u8];
+        buf.extend_from_slice(&u32::MAX.to_le_bytes());
+        assert!(ExecResponse::decode(&buf).is_err());
+        let mut buf = ExecRequest {
+            exec: "e".into(),
+            weights: "w".into(),
+            layer: 0,
+            args: vec![],
+        }
+        .encode();
+        let n = buf.len();
+        buf[n - 4..].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(ExecRequest::decode(&buf).is_err());
     }
 }

@@ -1,0 +1,202 @@
+//! The unified transport abstraction the fault-tolerance stack builds on.
+//!
+//! Three concrete transports implement [`Transport`]: the in-process mpsc
+//! mesh (`inproc::Endpoint`), the TCP hub edge (`tcp::TcpChannel`), and
+//! the deterministic virtual-clock mesh (`simnet::SimEndpoint`). The
+//! [`FaultNet`](super::faultnet::FaultNet) decorator wraps any of them to
+//! inject faults from a seeded schedule, and [`PeerHealth`] turns a
+//! heartbeat stream plus a clock (wall or virtual) into peer-loss
+//! verdicts.
+//!
+//! Errors are *typed* ([`TransportError`]) rather than stringly anyhow
+//! chains: the recovery paths in `server.rs` and `decode::session` need
+//! to distinguish "slow" (retry) from "dead" (fail over), and the
+//! vendored `anyhow` has no downcast. `TransportError` implements
+//! `std::error::Error`, so `?` still lifts it into `anyhow::Error` at
+//! the CLI boundary.
+
+use std::fmt;
+use std::time::Duration;
+
+use super::message::Msg;
+
+/// One routed message.
+#[derive(Debug, PartialEq)]
+pub struct Envelope {
+    pub from: usize,
+    pub to: usize,
+    pub msg: Msg,
+}
+
+/// Typed transport failure. `Timeout` is transient (retry / keep
+/// counting misses); `PeerDown` and `Closed` are terminal for the peer
+/// or the whole transport; `Codec` means bytes arrived but did not parse
+/// (treat the link as poisoned).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum TransportError {
+    /// No message arrived inside the deadline.
+    Timeout { after: Duration },
+    /// The peer is known to be gone (hung up, disconnected, refused).
+    PeerDown { peer: usize },
+    /// The transport itself is shut down.
+    Closed,
+    /// Framing or message decode failed.
+    Codec(String),
+}
+
+impl fmt::Display for TransportError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            TransportError::Timeout { after } => {
+                write!(f, "transport timed out after {after:?}")
+            }
+            TransportError::PeerDown { peer } => {
+                write!(f, "peer {peer} is down")
+            }
+            TransportError::Closed => write!(f, "transport closed"),
+            TransportError::Codec(e) => write!(f, "codec error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for TransportError {}
+
+impl TransportError {
+    /// Transient errors are worth retrying; terminal ones mean the peer
+    /// (or transport) should be written off.
+    pub fn is_transient(&self) -> bool {
+        matches!(self, TransportError::Timeout { .. })
+    }
+}
+
+/// Uniform send/recv/peer surface over every PRISM transport.
+///
+/// Deadline semantics: `recv_deadline` returns `Timeout` once at least
+/// `timeout` has elapsed on the transport's own clock — wall time for
+/// the inproc/TCP transports, virtual time for `SimEndpoint` (which is
+/// what makes chaos tests deterministic and sleep-free).
+pub trait Transport {
+    /// This participant's device id.
+    fn local_id(&self) -> usize;
+
+    /// Ids of every other participant this transport can currently
+    /// address (dead peers are excluded where the transport knows).
+    fn peers(&self) -> Vec<usize>;
+
+    fn send(&mut self, to: usize, msg: Msg) -> Result<(), TransportError>;
+
+    fn recv_deadline(&mut self, timeout: Duration)
+                     -> Result<Envelope, TransportError>;
+
+    /// Broadcast to every current peer; first terminal error wins.
+    fn send_all(&mut self, msg: &Msg) -> Result<(), TransportError> {
+        for to in self.peers() {
+            self.send(to, msg.clone())?;
+        }
+        Ok(())
+    }
+}
+
+/// Heartbeat bookkeeping: callers feed observed beats plus "now" from
+/// whatever clock drives the transport, and ask which peers have been
+/// silent past the detection threshold. Detection latency is therefore
+/// bounded by `interval * (misses_allowed + 1)` on that clock.
+#[derive(Debug, Clone)]
+pub struct PeerHealth {
+    interval: Duration,
+    misses_allowed: u32,
+    last: Vec<Duration>,
+}
+
+impl PeerHealth {
+    /// Track `peers` peers from time `t0`; a peer is declared dead after
+    /// `misses_allowed` whole intervals of silence beyond the first.
+    pub fn new(peers: usize, interval: Duration, misses_allowed: u32,
+               t0: Duration) -> PeerHealth {
+        PeerHealth { interval, misses_allowed, last: vec![t0; peers] }
+    }
+
+    pub fn beat(&mut self, peer: usize, now: Duration) {
+        if let Some(t) = self.last.get_mut(peer) {
+            if now > *t {
+                *t = now;
+            }
+        }
+    }
+
+    /// Silence threshold after which a peer counts as dead.
+    pub fn deadline(&self) -> Duration {
+        self.interval * (self.misses_allowed + 1)
+    }
+
+    /// Peers whose last beat is further than `deadline()` in the past.
+    pub fn dead_peers(&self, now: Duration) -> Vec<usize> {
+        let limit = self.deadline();
+        self.last
+            .iter()
+            .enumerate()
+            .filter(|(_, &t)| now.saturating_sub(t) > limit)
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    pub fn last_seen(&self, peer: usize) -> Duration {
+        self.last[peer]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ms(v: u64) -> Duration {
+        Duration::from_millis(v)
+    }
+
+    #[test]
+    fn error_display_and_class() {
+        let t = TransportError::Timeout { after: ms(50) };
+        assert!(t.is_transient());
+        assert!(format!("{t}").contains("timed out"));
+        let d = TransportError::PeerDown { peer: 3 };
+        assert!(!d.is_transient());
+        assert!(format!("{d}").contains("peer 3"));
+        assert!(!TransportError::Closed.is_transient());
+        assert!(format!("{}", TransportError::Codec("bad tag".into()))
+            .contains("bad tag"));
+    }
+
+    #[test]
+    fn transport_error_lifts_into_anyhow() {
+        fn f() -> anyhow::Result<()> {
+            Err(TransportError::Timeout { after: ms(10) })?;
+            Ok(())
+        }
+        let e = f().unwrap_err();
+        assert!(format!("{e:#}").contains("timed out"), "{e:#}");
+    }
+
+    #[test]
+    fn peer_health_detects_silence() {
+        let mut h = PeerHealth::new(2, ms(100), 2, ms(0));
+        assert_eq!(h.deadline(), ms(300));
+        // both quiet but inside the threshold
+        assert!(h.dead_peers(ms(300)).is_empty());
+        h.beat(0, ms(250));
+        // peer 1 silent since t0: dead at t > 300
+        assert_eq!(h.dead_peers(ms(301)), vec![1]);
+        // peer 0 beat at 250: dead only after 550
+        assert_eq!(h.dead_peers(ms(550)), vec![1]);
+        assert_eq!(h.dead_peers(ms(551)), vec![0, 1]);
+        assert_eq!(h.last_seen(0), ms(250));
+    }
+
+    #[test]
+    fn peer_health_ignores_stale_and_unknown_beats() {
+        let mut h = PeerHealth::new(1, ms(10), 0, ms(100));
+        h.beat(0, ms(50)); // stale: must not move time backwards
+        assert_eq!(h.last_seen(0), ms(100));
+        h.beat(7, ms(500)); // unknown peer: no panic
+        assert_eq!(h.dead_peers(ms(121)), vec![0]);
+    }
+}

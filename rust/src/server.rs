@@ -17,11 +17,11 @@ use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use anyhow::{bail, Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
 use crate::cli::Args;
-use crate::coordinator::plan::plans;
-use crate::coordinator::runner::bias_for;
+use crate::coordinator::plan::{plans, PartitionPlan};
+use crate::coordinator::runner::{bias_for, degraded_mode};
 use crate::coordinator::segmeans::segment_means;
 use crate::coordinator::Mode;
 use crate::data::{Dataset, DatasetKind};
@@ -60,6 +60,34 @@ pub struct ServeConfig {
     pub pace: Option<LinkModel>,
 }
 
+/// Failure-handling knobs for the threaded runtime. Detection in the
+/// wall-clock server is deadline-based: the master bounds its gather
+/// wait, workers bound their exchange-barrier waits, and a blown
+/// deadline is treated as peer loss (the virtual-clock chaos suite
+/// exercises the heartbeat-interval variant of the same policy —
+/// `net::transport::PeerHealth`).
+#[derive(Clone)]
+pub struct FaultPolicy {
+    /// Master-side wait for a worker's `FinalPart` before declaring it
+    /// dead and degrading to single-device serving.
+    pub gather_deadline: Duration,
+    /// Worker-side wait at the per-layer exchange barrier.
+    pub exchange_deadline: Duration,
+    /// Test hook: this worker exits silently on its first job, modeling
+    /// a device crash mid-batch.
+    pub chaos_exit_worker: Option<usize>,
+}
+
+impl Default for FaultPolicy {
+    fn default() -> FaultPolicy {
+        FaultPolicy {
+            gather_deadline: Duration::from_secs(30),
+            exchange_deadline: Duration::from_secs(30),
+            chaos_exit_worker: None,
+        }
+    }
+}
+
 /// Handle to a running server.
 pub struct Server {
     pub requests: Sender<Request>,
@@ -67,9 +95,15 @@ pub struct Server {
 }
 
 impl Server {
-    /// Spawn batcher + master + P workers.
+    /// Spawn batcher + master + P workers with default fault handling.
     pub fn start(manifest: Arc<Manifest>, cfg: ServeConfig)
                  -> Result<Server> {
+        Self::start_with(manifest, cfg, FaultPolicy::default())
+    }
+
+    /// Spawn with an explicit [`FaultPolicy`].
+    pub fn start_with(manifest: Arc<Manifest>, cfg: ServeConfig,
+                      faults: FaultPolicy) -> Result<Server> {
         let model = manifest.model(&cfg.model)?.clone();
         let p = cfg.mode.p();
         let batch = manifest.eval_batch;
@@ -89,9 +123,10 @@ impl Server {
         for (wid, ep) in endpoints.into_iter().enumerate() {
             let manifest = manifest.clone();
             let cfg = cfg.clone();
+            let faults = faults.clone();
             let h = std::thread::Builder::new()
                 .name(format!("prism-worker-{wid}"))
-                .spawn(move || worker_loop(manifest, cfg, ep))?;
+                .spawn(move || worker_loop(manifest, cfg, ep, faults))?;
             handles.push(h);
         }
         let manifest2 = manifest.clone();
@@ -100,7 +135,7 @@ impl Server {
             .name("prism-master".into())
             .spawn(move || {
                 master_loop(manifest2, cfg2, model.layers, batch_rx,
-                            master_ep)
+                            master_ep, faults)
             })?;
         handles.push(master);
         Ok(Server { requests: req_tx, handles })
@@ -185,9 +220,86 @@ fn stack_rows(rows: &[&Tensor], batch: usize) -> Result<Tensor> {
     }
 }
 
+/// Scatter one embedded batch across the worker mesh and gather the
+/// final partitions, bounding every wait by `gather_deadline`. A blown
+/// deadline names the missing workers — the master treats that as peer
+/// loss and degrades.
+fn distributed_pass(cfg: &ServeConfig, pls: &[PartitionPlan],
+                    ep: &Endpoint, p: usize, x: &Tensor, job_id: u64,
+                    gather_deadline: Duration) -> Result<Tensor> {
+    // scatter: local partition + initial ctx (Fig. 1).
+    let parts: Vec<Tensor> = pls
+        .iter()
+        .map(|pl| x.slice1(pl.start(), pl.start() + pl.n_p()))
+        .collect::<Result<_>>()?;
+    let ctxs: Vec<Vec<Tensor>> = pls
+        .iter()
+        .map(|pl| -> Result<Vec<Tensor>> {
+            pl.peers()
+                .into_iter()
+                .map(|j| {
+                    if cfg.mode.l() > 0 {
+                        segment_means(&parts[j], cfg.mode.l())
+                    } else {
+                        Ok(parts[j].clone())
+                    }
+                })
+                .collect()
+        })
+        .collect::<Result<_>>()?;
+    for (wid, (part, ctx)) in parts.into_iter().zip(ctxs).enumerate() {
+        ep.send(wid, Msg::Job { request: job_id, x_p: part, ctx })?;
+    }
+    // gather final partitions (any order, deadline-bounded).
+    let mut finals: Vec<Option<Tensor>> = vec![None; p];
+    let mut got = 0;
+    while got < p {
+        match ep.recv_timeout(gather_deadline)? {
+            Some(env) => match env.msg {
+                Msg::FinalPart { from, data } => {
+                    if finals[from as usize].replace(data).is_none() {
+                        got += 1;
+                    }
+                }
+                other => bail!("master expected FinalPart, got {other:?}"),
+            },
+            None => {
+                let missing: Vec<usize> = finals
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, f)| f.is_none())
+                    .map(|(i, _)| i)
+                    .collect();
+                bail!("no FinalPart from workers {missing:?} within \
+                       {gather_deadline:?}: treating them as dead");
+            }
+        }
+    }
+    let parts: Vec<Tensor> =
+        finals.into_iter().map(|t| t.unwrap()).collect();
+    let refs: Vec<&Tensor> = parts.iter().collect();
+    Tensor::concat1(&refs)
+}
+
+/// The degraded path: the master (always a surviving device — it hosts
+/// embed/head anyway) runs the whole stack on the P=1 plan.
+fn single_pass(engine: &mut Engine, manifest: &Manifest,
+               cfg: &ServeConfig, ws: &WeightSet, layers: usize,
+               n: usize, causal: bool, batch: usize, x0: &Tensor)
+               -> Result<Tensor> {
+    let name = manifest.block_name(&cfg.model, "single", 1, 0, 0, batch,
+                                   &cfg.flavor);
+    let bias = crate::coordinator::single_plan(n, causal).bias()?;
+    let mut x = x0.clone();
+    for layer in 0..layers {
+        x = engine.run(&name, ws, layer, &[&x, &bias])?.remove(0);
+    }
+    Ok(x)
+}
+
 fn master_loop(manifest: Arc<Manifest>, cfg: ServeConfig, layers: usize,
-               batches: Receiver<Vec<Request>>, ep: Endpoint)
-               -> Result<()> {
+               batches: Receiver<Vec<Request>>, ep: Endpoint,
+               faults: FaultPolicy) -> Result<()> {
     let model = manifest.model(&cfg.model)?.clone();
     let p = cfg.mode.p();
     let batch = manifest.eval_batch;
@@ -198,66 +310,37 @@ fn master_loop(manifest: Arc<Manifest>, cfg: ServeConfig, layers: usize,
     let pls = plans(model.n, p, cfg.mode.l(), model.causal)?;
 
     let mut job_id = 0u64;
+    let mut degraded = p <= 1;
     while let Ok(reqs) = batches.recv() {
         let rows: Vec<&Tensor> = reqs.iter().map(|r| &r.raw).collect();
         let raw = stack_rows(&rows, batch)?;
-        let mut x = engine.run(&embed_name, &ws, 0, &[&raw])?.remove(0);
-
-        if p > 1 {
-            // scatter: local partition + initial ctx (Fig. 1).
-            let parts: Vec<Tensor> = pls
-                .iter()
-                .map(|pl| x.slice1(pl.start(), pl.start() + pl.n_p()))
-                .collect::<Result<_>>()?;
-            let ctxs: Vec<Vec<Tensor>> = pls
-                .iter()
-                .map(|pl| -> Result<Vec<Tensor>> {
-                    pl.peers()
-                        .into_iter()
-                        .map(|j| {
-                            if cfg.mode.l() > 0 {
-                                segment_means(&parts[j], cfg.mode.l())
-                            } else {
-                                Ok(parts[j].clone())
-                            }
-                        })
-                        .collect()
-                })
-                .collect::<Result<_>>()?;
-            for (wid, (part, ctx)) in
-                parts.into_iter().zip(ctxs).enumerate()
-            {
-                ep.send(wid, Msg::Job { request: job_id, x_p: part,
-                                        ctx })?;
-            }
-            // gather final partitions (any order).
-            let mut finals: Vec<Option<Tensor>> = vec![None; p];
-            let mut got = 0;
-            while got < p {
-                let env = ep.recv()?;
-                if let Msg::FinalPart { from, data } = env.msg {
-                    if finals[from as usize].replace(data).is_none() {
-                        got += 1;
+        let x0 = engine.run(&embed_name, &ws, 0, &[&raw])?.remove(0);
+        let x = if degraded {
+            single_pass(&mut engine, &manifest, &cfg, &ws, layers,
+                        model.n, model.causal, batch, &x0)?
+        } else {
+            match distributed_pass(&cfg, &pls, &ep, p, &x0, job_id,
+                                   faults.gather_deadline) {
+                Ok(x) => x,
+                Err(e) => {
+                    // Peer loss: release the survivors (a Shutdown in
+                    // the barrier is a clean exit for them), re-plan
+                    // over the surviving device set — the master itself,
+                    // i.e. the P=1 plan — and re-run the wedged batch
+                    // there. No request is lost; later batches skip
+                    // straight to the degraded path.
+                    eprintln!("[master] {e:#}; degrading {:?} -> {:?}",
+                              cfg.mode, degraded_mode(cfg.mode, 1));
+                    for wid in 0..p {
+                        let _ = ep.send(wid, Msg::Shutdown);
                     }
-                } else {
-                    bail!("master expected FinalPart, got {:?}", env.msg);
+                    degraded = true;
+                    single_pass(&mut engine, &manifest, &cfg, &ws,
+                                layers, model.n, model.causal, batch,
+                                &x0)?
                 }
             }
-            let parts: Vec<Tensor> =
-                finals.into_iter().map(|t| t.unwrap()).collect();
-            let refs: Vec<&Tensor> = parts.iter().collect();
-            x = Tensor::concat1(&refs)?;
-        } else {
-            // single-device: master runs the whole stack itself.
-            let name = manifest.block_name(&cfg.model, "single", 1, 0, 0,
-                                           batch, &cfg.flavor);
-            let bias =
-                crate::coordinator::single_plan(model.n, model.causal)
-                    .bias()?;
-            for layer in 0..layers {
-                x = engine.run(&name, &ws, layer, &[&x, &bias])?.remove(0);
-            }
-        }
+        };
         let logits = engine.run(&head_name, &ws, 0, &[&x])?.remove(0);
         // route responses: row i of the batch -> request i.
         let per_row: usize = logits.shape[1..].iter().product();
@@ -273,17 +356,18 @@ fn master_loop(manifest: Arc<Manifest>, cfg: ServeConfig, layers: usize,
         }
         job_id += 1;
     }
-    // intake closed: stop workers.
-    for wid in 0..p {
-        if p > 1 {
-            ep.send(wid, Msg::Shutdown)?;
+    // intake closed: stop workers (already gone if we degraded — their
+    // endpoints may have hung up, so sends are best-effort).
+    if p > 1 {
+        for wid in 0..p {
+            let _ = ep.send(wid, Msg::Shutdown);
         }
     }
     Ok(())
 }
 
-fn worker_loop(manifest: Arc<Manifest>, cfg: ServeConfig, ep: Endpoint)
-               -> Result<()> {
+fn worker_loop(manifest: Arc<Manifest>, cfg: ServeConfig, ep: Endpoint,
+               faults: FaultPolicy) -> Result<()> {
     let model = manifest.model(&cfg.model)?.clone();
     let p = cfg.mode.p();
     if p <= 1 {
@@ -310,6 +394,9 @@ fn worker_loop(manifest: Arc<Manifest>, cfg: ServeConfig, ep: Endpoint)
             Msg::Shutdown => return Ok(()),
             other => bail!("worker {wid} expected Job, got {other:?}"),
         };
+        if faults.chaos_exit_worker == Some(wid) {
+            return Ok(()); // test hook: crash silently mid-batch
+        }
         let mut x = x_p;
         // peer index -> position in ctx vec (global order, self skipped)
         let peers = pl.peers();
@@ -325,14 +412,33 @@ fn worker_loop(manifest: Arc<Manifest>, cfg: ServeConfig, ep: Endpoint)
             } else {
                 x.clone() // Voltage: full partition output
             };
-            ep.send_peers(p, &Msg::Exchange { layer: layer as u32,
-                                              from: wid as u32,
-                                              data: share })?;
+            // best-effort exchange: a dead peer just misses its copy
+            // (the master notices the wedge via its gather deadline).
+            let share_msg = Msg::Exchange { layer: layer as u32,
+                                            from: wid as u32,
+                                            data: share };
+            for to in 0..p {
+                if to != wid {
+                    let _ = ep.send(to, share_msg.clone());
+                }
+            }
             if layer + 1 < model.layers {
-                // barrier: collect this layer's share from every peer.
+                // barrier: collect this layer's share from every peer,
+                // bounding the wait — a dead peer must not wedge the
+                // mesh. A Shutdown here is the master releasing us
+                // after it detected that death; a blown deadline means
+                // we noticed first. Either way: exit cleanly and let
+                // the master's gather deadline drive the recovery.
                 let mut got = 0;
                 while got < peers.len() {
-                    let env = ep.recv()?;
+                    let Some(env) =
+                        ep.recv_timeout(faults.exchange_deadline)?
+                    else {
+                        eprintln!("[worker {wid}] no layer-{layer} \
+                                   exchange within {:?}: peer loss, \
+                                   exiting", faults.exchange_deadline);
+                        return Ok(());
+                    };
                     match env.msg {
                         Msg::Exchange { layer: ll, from, data }
                             if ll as usize == layer =>
@@ -344,17 +450,30 @@ fn worker_loop(manifest: Arc<Manifest>, cfg: ServeConfig, ep: Endpoint)
                             peer_ctx[slot] = data;
                             got += 1;
                         }
+                        Msg::Shutdown => return Ok(()),
                         other => bail!("worker {wid} unexpected {other:?}"),
                     }
                 }
             } else {
-                // last layer: drain peers' final exchange (unused).
+                // last layer: drain peers' final exchange (unused); dead
+                // peers simply never show up, so stop at the deadline.
                 for _ in 0..peers.len() {
-                    let _ = ep.recv()?;
+                    match ep.recv_timeout(faults.exchange_deadline)? {
+                        None => break,
+                        Some(env) if matches!(env.msg, Msg::Shutdown) => {
+                            return Ok(())
+                        }
+                        Some(_) => {}
+                    }
                 }
             }
         }
-        ep.send(p, Msg::FinalPart { from: wid as u32, data: x })?;
+        // master gone == server over: exit without drama either way
+        if ep.send(p, Msg::FinalPart { from: wid as u32, data: x })
+            .is_err()
+        {
+            return Ok(());
+        }
     }
 }
 
@@ -366,6 +485,9 @@ pub struct DecodeRequest {
     pub id: u64,
     pub prompt: Vec<i32>,
     pub steps: usize,
+    /// Buddy-replicate session state so the stream survives
+    /// `DecodeScheduler::fail_device` (costs replica wire bytes).
+    pub replicate: bool,
     pub respond: Sender<DecodeEvent>,
 }
 
@@ -394,6 +516,8 @@ pub struct DecodeEvent {
 /// exist (decode/mod.rs); the scheduling policy is backend-independent.
 pub struct DecodeScheduler {
     pub requests: Sender<DecodeRequest>,
+    control: Sender<usize>,
+    p: usize,
     handle: std::thread::JoinHandle<Result<DecodeStats>>,
 }
 
@@ -403,11 +527,29 @@ impl DecodeScheduler {
         // validate the (model, P, L) geometry once, up front
         DecodeSession::new(model.clone(), p, l, wire)?;
         let (tx, rx) = channel::<DecodeRequest>();
+        let (ctl_tx, ctl_rx) = channel::<usize>();
         let chunk = prefill_chunk.max(1);
         let handle = std::thread::Builder::new()
             .name("prism-decode".into())
-            .spawn(move || decode_loop(model, p, l, wire, chunk, rx))?;
-        Ok(DecodeScheduler { requests: tx, handle })
+            .spawn(move || {
+                decode_loop(model, p, l, wire, chunk, rx, ctl_rx)
+            })?;
+        Ok(DecodeScheduler { requests: tx, control: ctl_tx, p, handle })
+    }
+
+    /// Report device `dead` as lost. Applied between ticks: replicated
+    /// streams fail over in place (`DecodeSession::fail_device`, live
+    /// KV migrated via `Msg::CacheSync`) and keep emitting bit-identical
+    /// tokens; unreplicated streams whose state died with the device
+    /// abort with a final `done` event. Streams admitted afterwards
+    /// start on the surviving device set.
+    pub fn fail_device(&self, dead: usize) -> Result<()> {
+        if dead >= self.p {
+            bail!("device {dead} out of range (P={})", self.p);
+        }
+        self.control
+            .send(dead)
+            .map_err(|_| anyhow!("decode scheduler is gone"))
     }
 
     /// Close intake, drain remaining streams, and return the wire-byte
@@ -463,46 +605,93 @@ fn decode_tick(s: &mut ActiveStream, chunk: usize) -> Result<bool> {
     Ok(done)
 }
 
+/// Admit one stream, honoring the device failures seen so far: a fresh
+/// session has nothing to lose, so it can start straight on the
+/// surviving device set (no replication required).
+fn admit_stream(model: &Arc<RefGpt>, p: usize, l: usize, wire: WireFmt,
+                dead: &[usize], req: DecodeRequest,
+                active: &mut VecDeque<ActiveStream>) {
+    let DecodeRequest { id, prompt, steps, replicate, respond } = req;
+    let built = (|| -> Result<DecodeSession> {
+        let mut s = DecodeSession::new(model.clone(), p, l, wire)?;
+        if replicate {
+            s.enable_replication()?;
+        }
+        for &d in dead {
+            s.fail_device(d)?;
+        }
+        Ok(s)
+    })();
+    match built {
+        Ok(session) => active.push_back(ActiveStream {
+            id,
+            session,
+            prompt,
+            prefilled: 0,
+            emitted: 0,
+            steps,
+            respond,
+        }),
+        Err(_) => {
+            let _ = respond.send(DecodeEvent {
+                id, index: 0, token: -1, done: true,
+            });
+        }
+    }
+}
+
 fn decode_loop(model: Arc<RefGpt>, p: usize, l: usize, wire: WireFmt,
-               chunk: usize, rx: Receiver<DecodeRequest>)
-               -> Result<DecodeStats> {
+               chunk: usize, rx: Receiver<DecodeRequest>,
+               ctl: Receiver<usize>) -> Result<DecodeStats> {
     let mut active: VecDeque<ActiveStream> = VecDeque::new();
     let mut total = DecodeStats::default();
     let mut open = true;
-    let mut admit = |req: DecodeRequest,
-                     active: &mut VecDeque<ActiveStream>| {
-        match DecodeSession::new(model.clone(), p, l, wire) {
-            Ok(session) => active.push_back(ActiveStream {
-                id: req.id,
-                session,
-                prompt: req.prompt,
-                prefilled: 0,
-                emitted: 0,
-                steps: req.steps,
-                respond: req.respond,
-            }),
-            Err(_) => {
-                let _ = req.respond.send(DecodeEvent {
-                    id: req.id, index: 0, token: -1, done: true,
-                });
-            }
-        }
-    };
+    let mut dead: Vec<usize> = Vec::new();
     loop {
         if open && active.is_empty() {
             // idle: block for the next stream
             match rx.recv() {
-                Ok(r) => admit(r, &mut active),
+                Ok(r) => admit_stream(&model, p, l, wire, &dead, r,
+                                      &mut active),
                 Err(_) => open = false,
             }
         }
         while open {
             // running: admit whatever queued up since the last tick
             match rx.try_recv() {
-                Ok(r) => admit(r, &mut active),
+                Ok(r) => admit_stream(&model, p, l, wire, &dead, r,
+                                      &mut active),
                 Err(TryRecvError::Empty) => break,
                 Err(TryRecvError::Disconnected) => open = false,
             }
+        }
+        // apply device failures reported since the last tick
+        while let Ok(d) = ctl.try_recv() {
+            if d >= p || dead.contains(&d) {
+                continue;
+            }
+            dead.push(d);
+            let mut still = VecDeque::with_capacity(active.len());
+            while let Some(mut s) = active.pop_front() {
+                if !s.session.device_alive(d) {
+                    still.push_back(s); // already failed over past it
+                    continue;
+                }
+                match s.session.fail_device(d) {
+                    Ok(_) => still.push_back(s),
+                    Err(_) => {
+                        // state died with the device: abort visibly
+                        let _ = s.respond.send(DecodeEvent {
+                            id: s.id,
+                            index: s.emitted,
+                            token: -1,
+                            done: true,
+                        });
+                        total.merge(&s.session.stats());
+                    }
+                }
+            }
+            active = still;
         }
         if active.is_empty() {
             if !open {
@@ -538,6 +727,14 @@ pub fn cmd_decode(args: &Args) -> Result<()> {
     let steps = args.usize_or("steps", 32)?;
     let sessions = args.usize_or("sessions", 4)?;
     let wire = WireFmt::parse(&args.str_or("wire", "f32"))?;
+    let replicate = args.bool("replicate");
+    // chaos demo: report this device dead once the stream pool has
+    // emitted --fail-after tokens; replicated streams fail over.
+    let fail_device = match args.flags.get("fail-device") {
+        Some(_) => Some(args.usize_or("fail-device", 0)?),
+        None => None,
+    };
+    let fail_after = args.usize_or("fail-after", 8)?;
     let cfg = RefCfg {
         vocab: 64,
         n: args.usize_or("n", 128)?,
@@ -548,7 +745,8 @@ pub fn cmd_decode(args: &Args) -> Result<()> {
     };
     let model = Arc::new(RefGpt::tiny(17, cfg)?);
     println!("decode: {sessions} streams, N={} d={} layers={} P={p} L={l} \
-              wire={wire:?}", cfg.n, cfg.d, cfg.layers);
+              wire={wire:?} replicate={replicate}",
+             cfg.n, cfg.d, cfg.layers);
     let sched = DecodeScheduler::start(model, p, l, wire, 4)?;
     let (tx, rx) = channel::<DecodeEvent>();
     let mut rng = Rng::new(29);
@@ -557,7 +755,7 @@ pub fn cmd_decode(args: &Args) -> Result<()> {
         let prompt: Vec<i32> =
             (0..8).map(|_| rng.range(1, cfg.vocab) as i32).collect();
         sched.requests.send(DecodeRequest {
-            id, prompt, steps, respond: tx.clone(),
+            id, prompt, steps, replicate, respond: tx.clone(),
         })?;
     }
     // every live sender now belongs to the scheduler: if its thread dies,
@@ -565,6 +763,8 @@ pub fn cmd_decode(args: &Args) -> Result<()> {
     drop(tx);
     let mut done = 0;
     let mut tokens = 0usize;
+    let mut aborted = 0usize;
+    let mut failed = false;
     while done < sessions {
         let ev = rx.recv()?;
         if ev.token >= 0 {
@@ -572,6 +772,17 @@ pub fn cmd_decode(args: &Args) -> Result<()> {
         }
         if ev.done {
             done += 1;
+            if ev.token < 0 {
+                aborted += 1;
+            }
+        }
+        if let Some(dead) = fail_device {
+            if !failed && tokens >= fail_after {
+                failed = true;
+                println!("[decode] device {dead} reported dead after \
+                          {tokens} tokens");
+                sched.fail_device(dead)?;
+            }
         }
     }
     let wall = t0.elapsed().as_secs_f64();
@@ -580,6 +791,12 @@ pub fn cmd_decode(args: &Args) -> Result<()> {
         cfg.layers, p, l, cfg.d, wire);
     println!("generated  : {tokens} tokens in {wall:.2}s \
               ({:.1} tok/s aggregate)", tokens as f64 / wall);
+    if fail_device.is_some() {
+        println!("failover   : {} streams survived, {aborted} aborted; \
+                  {} B migrated via CacheSync, {} B replication",
+                 sessions - aborted, stats.migrated_bytes,
+                 stats.replica_bytes);
+    }
     println!("wire bytes : {:.0} /generated token incremental (prefill \
               included) vs {full} /token full recompute ({:.1}x less)",
              stats.bytes_per_generated(),
@@ -632,7 +849,13 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
     };
     println!("serving {model}/{dataset} mode={mode:?} \
               requests={n_requests} rate={rate}/s");
-    let server = Server::start(manifest.clone(), serve_cfg)?;
+    let deadline = args.duration_ms_or("gather-timeout-ms", 30_000)?;
+    let faults = FaultPolicy {
+        gather_deadline: deadline,
+        exchange_deadline: deadline,
+        chaos_exit_worker: None,
+    };
+    let server = Server::start_with(manifest.clone(), serve_cfg, faults)?;
 
     let (resp_tx, resp_rx) = channel::<Response>();
     let mut rng = Rng::new(7);
@@ -707,6 +930,7 @@ mod tests {
                 id: *id,
                 prompt: prompt.clone(),
                 steps: *steps,
+                replicate: false,
                 respond: tx.clone(),
             })
             .unwrap();
@@ -752,6 +976,7 @@ mod tests {
             id: 7,
             prompt: vec![1, 2, 3],
             steps: 10,
+            replicate: false,
             respond: tx.clone(),
         })
         .unwrap();
@@ -763,6 +988,7 @@ mod tests {
             id: 8,
             prompt: vec![4; 30],
             steps: 10,
+            replicate: false,
             respond: tx.clone(),
         })
         .unwrap();
@@ -796,5 +1022,96 @@ mod tests {
         assert!(DecodeScheduler::start(m.clone(), 0, 4, WireFmt::F32, 1)
             .is_err());
         assert!(DecodeScheduler::start(m, 2, 0, WireFmt::F32, 1).is_err());
+    }
+
+    /// Worker loss through the scheduler (extends
+    /// `scheduler_admits_midflight_and_reports_aborts`): streams on the
+    /// surviving device finish bit-identical to standalone sessions,
+    /// and streams that cannot survive a loss report as aborts. The
+    /// ordering is made deterministic by exploiting the scheduler's
+    /// admit -> apply-failures -> tick loop: a `fail_device` sent
+    /// before a request is always applied before that stream's first
+    /// tick (there is deliberately no backpressure on the event
+    /// channel, so "kill mid-emission" timing lives in the
+    /// single-threaded chaos suite instead — `tests/chaos.rs`).
+    #[test]
+    fn scheduler_failover_finishes_survivors_bit_identical() {
+        let m = tiny_model();
+        let (p, l, wire) = (2, 4, WireFmt::F32);
+        let sched =
+            DecodeScheduler::start(m.clone(), p, l, wire, 2).unwrap();
+        let (tx, rx) = channel::<DecodeEvent>();
+        let steps = 12;
+        // device 0 dies before any stream exists
+        sched.fail_device(0).unwrap();
+        for (id, prompt, replicate) in [
+            (0u64, vec![3i32, 7, 1, 12, 5], true),
+            (1, vec![2, 2, 9], false),
+        ] {
+            sched.requests.send(DecodeRequest {
+                id,
+                prompt,
+                steps,
+                replicate,
+                respond: tx.clone(),
+            })
+            .unwrap();
+        }
+        let mut events: Vec<DecodeEvent> = Vec::new();
+        let mut done = 0;
+        while done < 2 {
+            let ev = rx.recv_timeout(Duration::from_secs(60)).unwrap();
+            done += ev.done as usize;
+            events.push(ev);
+        }
+        // the mesh is down to its last device: losing it is fatal for
+        // the next stream, which must abort, not hang
+        sched.fail_device(1).unwrap();
+        sched.requests.send(DecodeRequest {
+            id: 2,
+            prompt: vec![6, 6],
+            steps,
+            replicate: true,
+            respond: tx.clone(),
+        })
+        .unwrap();
+        drop(tx);
+        loop {
+            let Ok(ev) = rx.recv_timeout(Duration::from_secs(60)) else {
+                break;
+            };
+            let last = ev.done && ev.id == 2;
+            events.push(ev);
+            if last {
+                break;
+            }
+        }
+        let stats = sched.shutdown().unwrap();
+        let stream = |id: u64| -> Vec<i32> {
+            events.iter().filter(|e| e.id == id && e.token >= 0)
+                .map(|e| e.token).collect()
+        };
+        // both survivor streams finished on device 1, bit-identical to
+        // standalone sessions (failover relocates, never recomputes)
+        for (id, prompt) in [(0u64, vec![3i32, 7, 1, 12, 5]),
+                             (1, vec![2, 2, 9])] {
+            let mut reference =
+                DecodeSession::new(m.clone(), p, l, wire).unwrap();
+            reference.fail_device(0).unwrap();
+            reference.prefill(&prompt).unwrap();
+            let expect: Vec<i32> = (0..steps)
+                .map(|_| reference.generate_next().unwrap())
+                .collect();
+            assert_eq!(stream(id), expect, "stream {id} diverged");
+        }
+        // stream 2 aborted cleanly: a done event with a negative token
+        // and no generated tokens
+        assert!(stream(2).is_empty());
+        let abort =
+            events.iter().find(|e| e.id == 2 && e.done).unwrap();
+        assert!(abort.token < 0);
+        // single-device operation put zero bytes on the wire
+        assert_eq!(stats.delta_bytes, 0);
+        assert_eq!(stats.generated, 2 * steps);
     }
 }

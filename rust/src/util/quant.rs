@@ -279,4 +279,104 @@ mod tests {
         }
         assert!(WireFmt::from_tag(9).is_err());
     }
+
+    /// f16 roundtrip over the whole finite f32 bit space: subnormals,
+    /// signed zeros, and magnitudes up to the f16 range hold the error
+    /// bound; beyond-range magnitudes saturate to infinity consistently.
+    #[test]
+    fn f16_roundtrip_bounds_over_random_bit_patterns() {
+        property("f16-bitspace", 2000, |rng: &mut Rng| {
+            let x = f32::from_bits(rng.next_u64() as u32);
+            if !x.is_finite() {
+                return;
+            }
+            let y = f16_bits_to_f32(f32_to_f16_bits(x));
+            if x.abs() >= 65520.0 {
+                // past the round-to-nearest midpoint: saturates to inf
+                assert!(y.is_infinite() && (y > 0.0) == (x > 0.0),
+                        "{x} -> {y}");
+            } else if x.abs() <= 65504.0 {
+                // relative 2^-11 rounding above the subnormal range,
+                // absolute half-ulp (2^-25) below it
+                let tol = (x.abs() * 4.9e-4).max(3.1e-8);
+                assert!((x - y).abs() <= tol, "{x} -> {y}");
+            } else {
+                // (65504, 65520): rounds to max-finite or overflows to
+                // inf depending on the dropped bits — both are legal
+                assert!(y.is_infinite() || y.abs() == 65504.0,
+                        "{x} -> {y}");
+            }
+        });
+    }
+
+    #[test]
+    fn f16_subnormals_and_signed_zero() {
+        // signed zeros keep their sign bit exactly
+        assert_eq!(f16_bits_to_f32(f32_to_f16_bits(0.0)).to_bits(),
+                   0.0f32.to_bits());
+        assert_eq!(f16_bits_to_f32(f32_to_f16_bits(-0.0)).to_bits(),
+                   (-0.0f32).to_bits());
+        // f32 subnormals flush to (signed) zero: tiny absolute error
+        let sub = f32::from_bits(1); // smallest positive subnormal
+        assert_eq!(f16_bits_to_f32(f32_to_f16_bits(sub)), 0.0);
+        assert_eq!(f16_bits_to_f32(f32_to_f16_bits(-sub)), -0.0);
+        // f16-subnormal range values survive within half an ulp
+        for x in [6e-8f32, 3e-7, 5.96e-8, 6.09e-5] {
+            let y = f16_bits_to_f32(f32_to_f16_bits(x));
+            assert!((x - y).abs() <= 3.1e-8, "{x} -> {y}");
+        }
+    }
+
+    /// i8 per-row scaling over randomized tensors: error bounded by the
+    /// row's absmax, huge-magnitude rows don't break neighbors, and an
+    /// all-zero row must decode to exact zeros (no division blow-up).
+    #[test]
+    fn i8_roundtrip_bounds_randomized_rows() {
+        property("i8-rows", 300, |rng: &mut Rng| {
+            let rows = rng.range(1, 5);
+            let d = rng.range(1, 9);
+            let mut data = Vec::with_capacity(rows * d);
+            for r in 0..rows {
+                let scale = match r % 4 {
+                    0 => 0.0,                       // all-zero row
+                    1 => 1e30,                      // huge magnitudes
+                    2 => 1e-20,                     // sub-absmax-floor
+                    _ => rng.f32_in(0.1, 8.0),      // ordinary
+                };
+                data.extend(rng.normal_vec(d, 1.0).into_iter()
+                    .map(|v| v * scale));
+            }
+            let t = Tensor::from_f32(vec![rows, d], data.clone()).unwrap();
+            let q = requantize(&t, WireFmt::I8).unwrap();
+            let qf = q.f32s().unwrap();
+            for r in 0..rows {
+                let row = &data[r * d..(r + 1) * d];
+                let absmax =
+                    row.iter().fold(0f32, |m, x| m.max(x.abs()));
+                for (x, y) in row.iter().zip(&qf[r * d..(r + 1) * d]) {
+                    assert!(y.is_finite(), "row {r}: {x} -> {y}");
+                    // half-step quantization error + fp noise
+                    let tol = (absmax / 100.0).max(1e-12);
+                    assert!((x - y).abs() <= tol,
+                            "row {r}: {x} -> {y} (absmax {absmax})");
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn i8_all_zero_row_is_safe_and_exact() {
+        // absmax clamps at 1e-12: no divide-by-zero, and 0/scale
+        // quantizes to the 0 bucket, which decodes to exactly 0.0
+        let t = Tensor::from_f32(vec![2, 3],
+                                 vec![0.0, -0.0, 0.0, 1.0, -2.0, 3.0])
+            .unwrap();
+        let q = requantize(&t, WireFmt::I8).unwrap();
+        let qf = q.f32s().unwrap();
+        assert_eq!(&qf[..3], &[0.0, 0.0, 0.0]);
+        assert!(qf[3..].iter().all(|v| v.is_finite()));
+        let bytes = encode(&t, WireFmt::I8).unwrap();
+        // 2 rows x (4-byte scale + 3 payload bytes)
+        assert_eq!(bytes.len(), WireFmt::I8.wire_bytes(6, 2));
+    }
 }

@@ -39,6 +39,13 @@ impl Rng {
         (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64
     }
 
+    /// Bernoulli draw: true with probability `p` (clamped to [0, 1]).
+    /// Always consumes exactly one draw, so fault schedules keyed on a
+    /// shared seed stay aligned whatever the probability is.
+    pub fn chance(&mut self, p: f64) -> bool {
+        self.f64() < p
+    }
+
     /// Uniform f32 in `[lo, hi)`.
     pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
         lo + (hi - lo) * self.f64() as f32
@@ -134,6 +141,16 @@ mod tests {
         let xs: Vec<f64> = (0..20_000).map(|_| r.exponential(4.0)).collect();
         let mean = xs.iter().sum::<f64>() / xs.len() as f64;
         assert!((mean - 0.25).abs() < 0.01, "mean {mean}");
+    }
+
+    #[test]
+    fn chance_tracks_probability() {
+        let mut r = Rng::new(9);
+        for (p, lo, hi) in [(0.0, 0, 0), (1.0, 10_000, 10_000),
+                            (0.3, 2_700, 3_300)] {
+            let hits = (0..10_000).filter(|_| r.chance(p)).count();
+            assert!((lo..=hi).contains(&hits), "p={p}: {hits}");
+        }
     }
 
     #[test]

@@ -249,6 +249,86 @@ fn server_matches_runner() {
     }
 }
 
+/// Peer-loss recovery in the threaded server: a worker that dies
+/// mid-batch used to wedge the master forever; now the gather deadline
+/// detects the loss, survivors are released cleanly, and the master
+/// re-plans onto itself (single-device degraded mode) — every request
+/// still gets an answer, matching the Mode::Single runner bit-close,
+/// and shutdown joins without errors.
+#[test]
+fn server_degrades_to_single_device_on_worker_loss() {
+    let Some(m) = manifest() else { return };
+    use prism::server::{FaultPolicy, Request, Response, ServeConfig,
+                        Server};
+    use std::sync::mpsc::channel;
+    use std::time::{Duration, Instant};
+
+    let ds = Dataset::load(&m.root, "synth10").unwrap();
+    let ws = WeightSet::load(&m, "vit_synth10").unwrap();
+    let batch = m.eval_batch;
+    let server = Server::start_with(
+        m.clone(),
+        ServeConfig {
+            model: "vit".into(),
+            task: "synth10".into(),
+            weights: "vit_synth10".into(),
+            mode: Mode::Prism { p: 2, l: 6, duplicated: true },
+            flavor: "xla".into(),
+            flush_after: Duration::from_millis(2),
+            pace: None,
+        },
+        FaultPolicy {
+            gather_deadline: Duration::from_secs(2),
+            exchange_deadline: Duration::from_secs(2),
+            chaos_exit_worker: Some(1), // device 1 crashes on first job
+        },
+    )
+    .unwrap();
+    let (tx, rx) = channel::<Response>();
+    // two rounds: the first hits the crash and is recomputed degraded,
+    // the second takes the degraded path directly
+    for round in 0..2u64 {
+        for i in 0..batch {
+            server
+                .requests
+                .send(Request {
+                    id: round * batch as u64 + i as u64,
+                    raw: ds.x.slice0(i, i + 1).unwrap(),
+                    enqueued: Instant::now(),
+                    respond: tx.clone(),
+                })
+                .unwrap();
+        }
+        let mut got: Vec<Option<Tensor>> = vec![None; batch];
+        for _ in 0..batch {
+            let r = rx.recv_timeout(Duration::from_secs(120)).unwrap();
+            got[(r.id - round * batch as u64) as usize] = Some(r.logits);
+        }
+        // degraded output == the single-device runner's output
+        let mut runner = Runner::new(m.clone(), "xla").unwrap();
+        let raw = ds.x.slice0(0, batch).unwrap();
+        let (expect, _) = runner
+            .forward("vit", &ws, "synth10", &raw, Mode::Single)
+            .unwrap();
+        let ef = expect.f32s().unwrap();
+        let classes = *expect.shape.last().unwrap();
+        for (i, logits) in got.into_iter().enumerate() {
+            let l = logits.expect("request dropped during failover");
+            let row = &ef[i * classes..(i + 1) * classes];
+            let diff = l
+                .f32s()
+                .unwrap()
+                .iter()
+                .zip(row)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0f32, f32::max);
+            assert!(diff < 1e-4,
+                    "round {round} row {i}: degraded vs single {diff}");
+        }
+    }
+    server.shutdown().unwrap();
+}
+
 /// TCP remote worker returns exactly what a local engine computes.
 #[test]
 fn tcp_worker_matches_local() {
