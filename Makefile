@@ -4,11 +4,13 @@
 CARGO ?= cargo
 PYTHON ?= python3
 
-# Fixed seed matrix for the deterministic chaos suite (tests/chaos.rs);
-# mirrors the fan-out in .github/workflows/ci.yml.
+# Fixed seed matrix for the deterministic chaos + elastic suites
+# (tests/chaos.rs, tests/elastic.rs); mirrors the fan-out in
+# .github/workflows/ci.yml.
 CHAOS_SEEDS ?= 11,23,37,41,53,67,79,97,101,113
 
-.PHONY: all build test verify chaos bench-decode artifacts lint clean
+.PHONY: all build test verify chaos elastic bench-decode artifacts \
+        lint clean
 
 all: build
 
@@ -25,6 +27,11 @@ verify: build test
 # matrix. Deterministic and sleep-free; finishes in seconds.
 chaos:
 	CHAOS_SEEDS=$(CHAOS_SEEDS) $(CARGO) test --test chaos
+
+# Elastic-membership suite: fail -> re-partition (Eq. 16 re-picks L)
+# -> re-join, per seed. Deterministic and artifact-free.
+elastic:
+	CHAOS_SEEDS=$(CHAOS_SEEDS) $(CARGO) test --test elastic
 
 # Decode-subsystem throughput/bytes-per-token bench (artifact-free).
 bench-decode:

@@ -49,7 +49,7 @@ fn main() -> Result<()> {
 
         let z = Tensor::from_f32(vec![16, 6, 128],
                                  rng.normal_vec(16 * 6 * 128, 1.0))?;
-        let msg = Msg::Exchange { layer: 0, from: 0, data: z };
+        let msg = Msg::Exchange { epoch: 0, layer: 0, from: 0, data: z };
         let st = bench(10, 500, || {
             let buf = msg.encode();
             std::hint::black_box(Msg::decode(&buf).unwrap());

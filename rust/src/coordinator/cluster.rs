@@ -1,0 +1,360 @@
+//! Elastic membership: the live device set, epoch-versioned partition
+//! plans, and the plan cache that lets the serving path swap geometry
+//! atomically when devices fail or (re-)join.
+//!
+//! PRISM's planning (Eq. 16 picks L from N, CR, and P) assumes a fixed
+//! device set; the edge reality is that P changes at runtime.
+//! [`ClusterView`] owns the membership bitmap and, on `fail_device` /
+//! `add_device`, bumps the epoch and re-runs `plan::plans` over the
+//! surviving P', re-picking L for the preserved compression target
+//! (`plan::replan_l`, the integer-exact form of Eq. 16). Every distinct
+//! P' is planned exactly once and cached; an [`EpochPlan`] snapshot is
+//! what a serving loop holds while a batch is in flight, so in-flight
+//! work drains on its admission-time plan while new work picks up the
+//! current one (the epoch tag on the wire protocol keeps the two from
+//! mixing — see `net::message::Msg::Reconfig`).
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use super::plan::{plans, replan_l, single_plan, PartitionPlan};
+use super::runner::{degraded_mode, Mode};
+
+/// Immutable snapshot of one epoch's serving geometry.
+#[derive(Debug, Clone)]
+pub struct EpochPlan {
+    /// Monotone transition counter; bumped by every membership change.
+    pub epoch: u64,
+    /// The strategy re-shaped to the live device count (Eq. 16 L).
+    pub mode: Mode,
+    /// One plan per *rank*: rank r runs partition r on `devices[r]`.
+    pub plans: Arc<Vec<PartitionPlan>>,
+    /// Live physical device ids in rank order.
+    pub devices: Vec<usize>,
+}
+
+impl EpochPlan {
+    /// Rank of a physical device in this epoch (None if not serving).
+    pub fn rank_of(&self, device: usize) -> Option<usize> {
+        self.devices.iter().position(|&d| d == device)
+    }
+
+    /// Live device count P' this epoch serves with.
+    pub fn p(&self) -> usize {
+        self.devices.len()
+    }
+}
+
+/// The live device set plus the machinery to re-plan over it.
+pub struct ClusterView {
+    base: Mode,
+    n: usize,
+    causal: bool,
+    alive: Vec<bool>,
+    epoch: u64,
+    /// (P', L') -> plan set. Geometry depends only on the counts (which
+    /// devices survive decides hosting, not spans), so every distinct
+    /// geometry — Eq. 16 re-picks and serving-path L overrides alike —
+    /// is planned once per process and re-entering it is free.
+    cache: BTreeMap<(usize, usize), Arc<Vec<PartitionPlan>>>,
+}
+
+impl ClusterView {
+    /// A full-strength cluster serving `base` over an N-token window.
+    pub fn new(base: Mode, n: usize, causal: bool) -> Result<ClusterView> {
+        let p = base.p();
+        if p == 0 || n < p {
+            bail!("invalid cluster geometry N={n} P={p}");
+        }
+        if let Mode::Prism { l, .. } = base {
+            if l == 0 || l > n / p {
+                bail!("invalid base geometry N={n} P={p} L={l}");
+            }
+        }
+        let mut view = ClusterView {
+            base,
+            n,
+            causal,
+            alive: vec![true; p],
+            epoch: 0,
+            cache: BTreeMap::new(),
+        };
+        view.current()?; // validate + warm the full-strength plan
+        Ok(view)
+    }
+
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// The full-strength strategy this cluster was configured with.
+    pub fn base(&self) -> Mode {
+        self.base
+    }
+
+    /// Live device count.
+    pub fn live(&self) -> usize {
+        self.alive.iter().filter(|a| **a).count()
+    }
+
+    pub fn is_alive(&self, device: usize) -> bool {
+        self.alive.get(device).copied().unwrap_or(false)
+    }
+
+    /// Live physical device ids in rank order.
+    pub fn live_devices(&self) -> Vec<usize> {
+        (0..self.alive.len()).filter(|&d| self.alive[d]).collect()
+    }
+
+    /// Mark a device dead and bump the epoch. Allowed down to zero live
+    /// devices (the cluster is then unservable until a re-join —
+    /// `current` reports it instead of panicking).
+    pub fn fail_device(&mut self, device: usize) -> Result<()> {
+        if device >= self.alive.len() {
+            bail!("device {device} out of range (P={})", self.alive.len());
+        }
+        if !self.alive[device] {
+            bail!("device {device} is already dead");
+        }
+        self.alive[device] = false;
+        self.epoch += 1;
+        Ok(())
+    }
+
+    /// The dual of `fail_device`: a repaired device re-joins and the
+    /// next epoch plans over the grown P'.
+    pub fn add_device(&mut self, device: usize) -> Result<()> {
+        if device >= self.alive.len() {
+            bail!("device {device} out of range (P={})", self.alive.len());
+        }
+        if self.alive[device] {
+            bail!("device {device} is already live");
+        }
+        self.alive[device] = true;
+        self.epoch += 1;
+        Ok(())
+    }
+
+    /// The base strategy re-shaped to `p_now` devices: same family,
+    /// Eq. 16 re-picks L for PRISM (preserved CR target), and P'=1
+    /// collapses every family to `Single` — the one-shot
+    /// `runner::degraded_mode` answer, here driven by the live count.
+    pub fn mode_for(&self, p_now: usize) -> Result<Mode> {
+        if p_now == 0 {
+            bail!("no live devices");
+        }
+        Ok(degraded_mode(self.base, p_now, self.n))
+    }
+
+    /// (P', L') decode geometry for the current membership. Unlike
+    /// `mode_for`, L' stays the Eq. 16 re-pick even at P'=1: a decode
+    /// session still needs a segment plan for its single partition.
+    pub fn geometry(&self) -> Result<(usize, usize)> {
+        let p_now = self.live();
+        if p_now == 0 {
+            bail!("no live devices");
+        }
+        let l = match self.base {
+            Mode::Prism { p, l, .. } => replan_l(self.n, p, l, p_now),
+            _ => 0,
+        };
+        Ok((p_now, l))
+    }
+
+    /// Plan set for one mode's geometry, cached by (P, L).
+    fn plans_for(&mut self, mode: Mode) -> Result<Arc<Vec<PartitionPlan>>> {
+        let key = (mode.p(), mode.l());
+        if let Some(cached) = self.cache.get(&key) {
+            return Ok(cached.clone());
+        }
+        let pls = match mode {
+            Mode::Single => vec![single_plan(self.n, self.causal)],
+            Mode::Voltage { p } => plans(self.n, p, 0, self.causal)?,
+            Mode::Prism { p, l, .. } => plans(self.n, p, l, self.causal)?,
+        };
+        let arc = Arc::new(pls);
+        self.cache.insert(key, arc.clone());
+        Ok(arc)
+    }
+
+    /// Current epoch's plan snapshot (plans cached per geometry).
+    pub fn current(&mut self) -> Result<EpochPlan> {
+        let devices = self.live_devices();
+        let mode = self.mode_for(devices.len())?;
+        Ok(EpochPlan {
+            epoch: self.epoch,
+            mode,
+            plans: self.plans_for(mode)?,
+            devices,
+        })
+    }
+
+    /// The "no distributed grid left" answer: a Single-mode snapshot of
+    /// the current epoch with an *empty* device list — the serving
+    /// master runs the whole stack itself and every worker is
+    /// released. Kept here (plan cached like any other geometry) so
+    /// the view stays the one owner of the epoch -> plan mapping.
+    pub fn single_fallback(&mut self) -> Result<EpochPlan> {
+        Ok(EpochPlan {
+            epoch: self.epoch,
+            mode: Mode::Single,
+            plans: self.plans_for(Mode::Single)?,
+            devices: vec![],
+        })
+    }
+
+    /// Current epoch over the live devices, serving an explicit mode
+    /// instead of the Eq. 16 re-pick — the serving path's artifact-grid
+    /// fallback (e.g. the base L clamped to P' when the re-picked L has
+    /// no AOT artifact). The plan set is cached like any other
+    /// geometry, so the view stays the one owner of the epoch -> plan
+    /// mapping; `mode.p()` must match the live count.
+    pub fn current_with_mode(&mut self, mode: Mode) -> Result<EpochPlan> {
+        let devices = self.live_devices();
+        if devices.is_empty() {
+            bail!("no live devices");
+        }
+        if mode.p() != devices.len() {
+            bail!("override mode P={} does not match {} live devices",
+                  mode.p(), devices.len());
+        }
+        Ok(EpochPlan {
+            epoch: self.epoch,
+            mode,
+            plans: self.plans_for(mode)?,
+            devices,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn repartitions_with_eq16_l_and_rejoins() {
+        let base = Mode::Prism { p: 4, l: 4, duplicated: true };
+        let mut view = ClusterView::new(base, 128, true).unwrap();
+        assert_eq!(view.epoch(), 0);
+        let full = view.current().unwrap();
+        assert_eq!(full.mode, base);
+        assert_eq!(full.devices, vec![0, 1, 2, 3]);
+        assert_eq!(full.plans.len(), 4);
+
+        // kill 1 of 4: P'=3 PRISM (not Single) with Eq. 16's L'=5
+        view.fail_device(2).unwrap();
+        let p3 = view.current().unwrap();
+        assert_eq!(p3.epoch, 1);
+        assert_eq!(p3.mode, Mode::Prism { p: 3, l: 5, duplicated: true });
+        assert_eq!(p3.devices, vec![0, 1, 3]);
+        assert_eq!(p3.rank_of(3), Some(2));
+        assert_eq!(p3.rank_of(2), None);
+
+        // a second loss: P'=2 with L'=8
+        view.fail_device(0).unwrap();
+        let p2 = view.current().unwrap();
+        assert_eq!(p2.mode, Mode::Prism { p: 2, l: 8, duplicated: true });
+        assert_eq!(p2.devices, vec![1, 3]);
+
+        // re-join restores P'=3; the plan set is the *cached* one
+        view.add_device(2).unwrap();
+        let p3b = view.current().unwrap();
+        assert_eq!(p3b.epoch, 3);
+        assert_eq!(p3b.mode, p3.mode);
+        assert_eq!(p3b.devices, vec![1, 2, 3]);
+        assert!(Arc::ptr_eq(&p3b.plans, &p3.plans), "plan cache miss");
+
+        // full strength again: the original geometry
+        view.add_device(0).unwrap();
+        let again = view.current().unwrap();
+        assert_eq!(again.epoch, 4);
+        assert_eq!(again.mode, base);
+        assert!(Arc::ptr_eq(&again.plans, &full.plans));
+    }
+
+    #[test]
+    fn single_collapse_and_zero_live() {
+        let base = Mode::Prism { p: 2, l: 4, duplicated: true };
+        let mut view = ClusterView::new(base, 32, true).unwrap();
+        view.fail_device(0).unwrap();
+        let one = view.current().unwrap();
+        assert_eq!(one.mode, Mode::Single);
+        assert_eq!(one.devices, vec![1]);
+        assert_eq!(one.plans.len(), 1);
+        // decode geometry keeps the Eq. 16 L even at P'=1
+        assert_eq!(view.geometry().unwrap(), (1, 8));
+        // losing the last device is recordable but unservable
+        view.fail_device(1).unwrap();
+        assert_eq!(view.live(), 0);
+        assert!(view.current().is_err());
+        assert!(view.geometry().is_err());
+        // and a re-join makes it servable again
+        view.add_device(1).unwrap();
+        assert_eq!(view.current().unwrap().mode, Mode::Single);
+    }
+
+    #[test]
+    fn membership_guards() {
+        let base = Mode::Voltage { p: 3 };
+        let mut view = ClusterView::new(base, 30, false).unwrap();
+        assert!(view.fail_device(9).is_err());
+        assert!(view.add_device(0).is_err()); // already live
+        view.fail_device(1).unwrap();
+        assert!(view.fail_device(1).is_err()); // already dead
+        assert_eq!(view.current().unwrap().mode, Mode::Voltage { p: 2 });
+        assert!(view.is_alive(0) && !view.is_alive(1));
+        assert!(!view.is_alive(7));
+        assert_eq!(view.live_devices(), vec![0, 2]);
+        // voltage has no landmark geometry
+        assert_eq!(view.geometry().unwrap(), (2, 0));
+        // invalid base geometries are rejected up front
+        assert!(ClusterView::new(
+            Mode::Prism { p: 2, l: 0, duplicated: true }, 32, true)
+            .is_err());
+        assert!(ClusterView::new(
+            Mode::Prism { p: 2, l: 17, duplicated: true }, 32, true)
+            .is_err());
+        assert!(ClusterView::new(Mode::Voltage { p: 40 }, 32, true)
+            .is_err());
+    }
+
+    #[test]
+    fn override_mode_is_cached_and_guarded() {
+        let base = Mode::Prism { p: 4, l: 4, duplicated: true };
+        let mut view = ClusterView::new(base, 64, true).unwrap();
+        view.fail_device(1).unwrap();
+        // the serving path's fallback: base L instead of Eq. 16's L'=5
+        let fb = Mode::Prism { p: 3, l: 4, duplicated: true };
+        let a = view.current_with_mode(fb).unwrap();
+        assert_eq!(a.mode, fb);
+        assert_eq!(a.devices, vec![0, 2, 3]);
+        assert_eq!(a.plans.len(), 3);
+        assert_eq!(a.plans[0].l, 4);
+        // cached like any other geometry
+        let b = view.current_with_mode(fb).unwrap();
+        assert!(Arc::ptr_eq(&a.plans, &b.plans));
+        // and distinct from the Eq. 16 plan set for the same P'
+        let eq16 = view.current().unwrap();
+        assert!(!Arc::ptr_eq(&a.plans, &eq16.plans));
+        // the override must match the live strength
+        assert!(view
+            .current_with_mode(Mode::Prism { p: 2, l: 4,
+                                             duplicated: true })
+            .is_err());
+    }
+
+    #[test]
+    fn single_base_stays_single() {
+        let mut view = ClusterView::new(Mode::Single, 16, true).unwrap();
+        assert_eq!(view.current().unwrap().mode, Mode::Single);
+        assert_eq!(view.live(), 1);
+        assert!(view.fail_device(0).is_ok());
+        assert!(view.current().is_err());
+    }
+}

@@ -1,12 +1,14 @@
 //! Layer-3 coordinator: the paper's master/worker protocol (Fig. 1),
 //! partition/exchange planning, the deterministic trace executor, and the
 //! threaded serving runtime.
+pub mod cluster;
 pub mod compressor;
 pub mod plan;
 pub mod remote;
 pub mod runner;
 pub mod segmeans;
 
+pub use cluster::{ClusterView, EpochPlan};
 pub use compressor::Compressor;
 pub use remote::RemoteCoordinator;
 pub use plan::{plans, single_plan, PartitionPlan};

@@ -87,6 +87,19 @@ pub fn effective_cr(n: usize, p: usize, l: usize) -> f64 {
     n as f64 / (l * p) as f64
 }
 
+/// Eq. 16 re-applied to a changed device count (elastic membership):
+/// the configured compression target CR = N / (L·P) is preserved, so the
+/// re-picked L' = floor(N / (CR·P')) equals floor(L·P / P') *exactly* —
+/// integer arithmetic here avoids the f64 round-off that makes the
+/// float floor flap by one at exact-integer boundaries. Clamped to a
+/// valid plan: 1 <= L' <= floor(N / P').
+pub fn replan_l(n: usize, p_old: usize, l_old: usize, p_new: usize)
+                -> usize {
+    let p_new = p_new.max(1);
+    let max_l = (n / p_new).max(1);
+    ((l_old * p_old) / p_new).clamp(1, max_l)
+}
+
 /// One device's view of an (N, P, L) configuration.
 ///
 /// `l == 0` encodes the Voltage baseline (full partitions as context);
@@ -411,6 +424,69 @@ mod tests {
                 assert!(cols.iter().all(|&c| c < n));
             }
         });
+    }
+
+    /// Elastic re-plan invariants over a P × L × N grid, including
+    /// every surviving P' in 1..=8: the re-planned partitions stay
+    /// disjoint and cover all positions, and the re-picked L matches
+    /// Eq. 16 (`landmarks_for_cr` at the preserved CR target).
+    #[test]
+    fn replan_grid_covers_and_matches_eq16() {
+        for n in [64usize, 65, 96, 128, 197, 256] {
+            for p in 1..=8usize {
+                for l in [1usize, 2, 4, 8] {
+                    if n < p || l > n / p {
+                        continue;
+                    }
+                    let cr = effective_cr(n, p, l);
+                    for p_new in 1..=8usize {
+                        if n < p_new {
+                            continue;
+                        }
+                        let l_new = replan_l(n, p, l, p_new);
+                        assert!(l_new >= 1 && l_new <= n / p_new,
+                                "n={n} p={p} l={l} p'={p_new}: L'={l_new}");
+                        if p_new == p {
+                            assert_eq!(l_new, l,
+                                       "identity re-plan must keep L \
+                                        (n={n} p={p})");
+                        }
+                        // Eq. 16 agreement: floor(N/(CR·P')) ==
+                        // floor(L·P/P'); the f64 form may undershoot by
+                        // one ulp at exact-integer quotients, never
+                        // more, and never overshoot.
+                        let eq16 = landmarks_for_cr(n, p_new, cr)
+                            .clamp(1, (n / p_new).max(1));
+                        assert!(l_new == eq16 || l_new == eq16 + 1,
+                                "n={n} p={p} l={l} p'={p_new}: \
+                                 replan {l_new} vs eq16 {eq16}");
+                        // the re-planned geometry is a valid plan set:
+                        // contiguous disjoint partitions covering 0..N,
+                        // each wide enough for its L' segments
+                        let pls = plans(n, p_new, l_new, true).unwrap();
+                        let mut covered = 0usize;
+                        for (i, pl) in pls.iter().enumerate() {
+                            assert_eq!(pl.start(), covered,
+                                       "partition {i} gap/overlap \
+                                        (n={n} p'={p_new} l'={l_new})");
+                            covered += pl.n_p();
+                            assert!(pl.n_p() >= l_new);
+                        }
+                        assert_eq!(covered, n);
+                    }
+                }
+            }
+        }
+        // spot checks: P=4 L=4 shrinks to L'=5 at P'=3 and L'=8 at
+        // P'=2 (CR=8 over N=128), growing back is the exact inverse
+        assert_eq!(replan_l(128, 4, 4, 3), 5);
+        assert_eq!(replan_l(128, 4, 4, 2), 8);
+        assert_eq!(replan_l(128, 4, 4, 4), 4);
+        assert_eq!(replan_l(128, 4, 4, 1), 16);
+        // the n=65 p=3 l=3 case whose f64 CR (7.222…) makes the float
+        // floor flap: integer re-plan holds the true Eq. 16 value
+        assert_eq!(replan_l(65, 3, 3, 3), 3);
+        assert_eq!(replan_l(65, 3, 3, 2), 4);
     }
 
     #[test]

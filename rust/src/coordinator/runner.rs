@@ -54,6 +54,60 @@ impl Mode {
             _ => 0,
         }
     }
+
+    /// Resolve the strategy from `--mode` / `--p` / `--l` / `--cr` /
+    /// `--no-dup` — the one parser behind every CLI entry point
+    /// (`eval`, `latency`, `serve`, ...). `default_l` seeds `--l` when
+    /// neither `--l` nor `--cr` is given; 0 means the flag is required.
+    pub fn parse(args: &crate::cli::Args, n: usize, default_l: usize)
+                 -> Result<Mode> {
+        let p = args.usize_or("p", 2)?;
+        Ok(match args.str_or("mode", "prism").as_str() {
+            "single" => Mode::Single,
+            "voltage" => Mode::Voltage { p },
+            "prism" => {
+                let l = if let Some(cr) = args.flags.get("cr") {
+                    super::plan::landmarks_for_cr(
+                        n, p,
+                        cr.parse::<f64>().context("--cr wants a number")?)
+                } else {
+                    args.usize_or("l", default_l)?
+                };
+                if l == 0 {
+                    bail!("prism mode needs --l or --cr");
+                }
+                Mode::Prism { p, l, duplicated: !args.bool("no-dup") }
+            }
+            other => bail!("unknown mode '{other}'"),
+        })
+    }
+
+    /// Compact encoding for `Msg::Reconfig`: (tag, p, l).
+    pub fn to_wire(&self) -> (u8, u32, u32) {
+        match *self {
+            Mode::Single => (0, 1, 0),
+            Mode::Voltage { p } => (1, p as u32, 0),
+            Mode::Prism { p, l, duplicated: true } => {
+                (2, p as u32, l as u32)
+            }
+            Mode::Prism { p, l, duplicated: false } => {
+                (3, p as u32, l as u32)
+            }
+        }
+    }
+
+    /// Decode the `Msg::Reconfig` mode encoding.
+    pub fn from_wire(tag: u8, p: u32, l: u32) -> Result<Mode> {
+        Ok(match tag {
+            0 => Mode::Single,
+            1 => Mode::Voltage { p: p as usize },
+            2 => Mode::Prism { p: p as usize, l: l as usize,
+                               duplicated: true },
+            3 => Mode::Prism { p: p as usize, l: l as usize,
+                               duplicated: false },
+            other => bail!("unknown mode tag {other}"),
+        })
+    }
 }
 
 /// Timing/byte record of one forward pass, replayable against a LinkModel.
@@ -406,21 +460,26 @@ impl Runner {
     }
 }
 
-/// The strategy to fall back to after peer loss leaves `survivors`
-/// devices: the same family, shrunk to the surviving count (P=1
-/// collapses every mode to `Single`). The serving master uses this when
-/// a gather deadline declares workers dead — re-running `plan::plans`
-/// over the shrunk P is exactly "re-run PartitionPlan over the
-/// surviving device set". Adaptive L re-selection (Eq. 16 against the
-/// new P) is a ROADMAP follow-up; L is kept, clamped by plan validity.
-pub fn degraded_mode(mode: Mode, survivors: usize) -> Mode {
+/// The strategy to run after peer loss leaves `survivors` devices: the
+/// same family, shrunk to the surviving count (P'=1 collapses every
+/// mode to `Single`), with Eq. 16 re-picking L for PRISM against the
+/// new P' (`plan::replan_l` preserves the configured CR target). This
+/// is the re-plan kernel behind `ClusterView::mode_for`; the
+/// epoch/membership bookkeeping around it lives in
+/// `coordinator::cluster`.
+pub fn degraded_mode(mode: Mode, survivors: usize, n: usize) -> Mode {
     let s = survivors.max(1);
     match mode {
         _ if s == 1 => Mode::Single,
         Mode::Single => Mode::Single,
         Mode::Voltage { p } => Mode::Voltage { p: p.min(s) },
         Mode::Prism { p, l, duplicated } => {
-            Mode::Prism { p: p.min(s), l, duplicated }
+            let p_new = p.min(s);
+            Mode::Prism {
+                p: p_new,
+                l: super::plan::replan_l(n, p, l, p_new),
+                duplicated,
+            }
         }
     }
 }
@@ -490,17 +549,66 @@ mod tests {
     }
 
     #[test]
-    fn degraded_mode_shrinks_to_survivors() {
+    fn degraded_mode_shrinks_and_repicks_l() {
         let prism = Mode::Prism { p: 3, l: 4, duplicated: true };
-        assert_eq!(degraded_mode(prism, 2),
-                   Mode::Prism { p: 2, l: 4, duplicated: true });
-        assert_eq!(degraded_mode(prism, 1), Mode::Single);
-        assert_eq!(degraded_mode(prism, 0), Mode::Single); // clamped
-        assert_eq!(degraded_mode(Mode::Voltage { p: 4 }, 2),
+        // Eq. 16 re-pick: CR is preserved, so L' = L·P/P' = 6
+        assert_eq!(degraded_mode(prism, 2, 120),
+                   Mode::Prism { p: 2, l: 6, duplicated: true });
+        assert_eq!(degraded_mode(prism, 1, 120), Mode::Single);
+        assert_eq!(degraded_mode(prism, 0, 120), Mode::Single); // clamped
+        assert_eq!(degraded_mode(Mode::Voltage { p: 4 }, 2, 120),
                    Mode::Voltage { p: 2 });
-        assert_eq!(degraded_mode(Mode::Voltage { p: 2 }, 5),
+        assert_eq!(degraded_mode(Mode::Voltage { p: 2 }, 5, 120),
                    Mode::Voltage { p: 2 }); // never grows
-        assert_eq!(degraded_mode(Mode::Single, 8), Mode::Single);
+        // never grows, and an identity re-plan keeps L
+        assert_eq!(degraded_mode(prism, 5, 120), prism);
+        assert_eq!(degraded_mode(Mode::Single, 8, 120), Mode::Single);
+        // L' clamps to plan validity on tiny windows
+        assert_eq!(degraded_mode(Mode::Prism { p: 4, l: 4,
+                                               duplicated: true },
+                                 2, 16),
+                   Mode::Prism { p: 2, l: 8, duplicated: true });
+    }
+
+    #[test]
+    fn mode_parse_is_shared_across_entry_points() {
+        use crate::cli::Args;
+        let parse = |s: &str| {
+            let v: Vec<String> =
+                s.split_whitespace().map(String::from).collect();
+            Args::parse(&v).unwrap()
+        };
+        let a = parse("serve --mode prism --p 3 --l 5");
+        assert_eq!(Mode::parse(&a, 128, 0).unwrap(),
+                   Mode::Prism { p: 3, l: 5, duplicated: true });
+        let a = parse("eval --mode prism --p 2 --cr 8");
+        assert_eq!(Mode::parse(&a, 128, 0).unwrap(),
+                   Mode::Prism { p: 2, l: 8, duplicated: true });
+        let a = parse("eval --mode prism --p 2 --no-dup");
+        // default_l seeds --l when absent
+        assert_eq!(Mode::parse(&a, 128, 6).unwrap(),
+                   Mode::Prism { p: 2, l: 6, duplicated: false });
+        assert!(Mode::parse(&a, 128, 0).is_err()); // L required
+        let a = parse("serve --mode voltage --p 4");
+        assert_eq!(Mode::parse(&a, 128, 0).unwrap(),
+                   Mode::Voltage { p: 4 });
+        let a = parse("serve --mode single");
+        assert_eq!(Mode::parse(&a, 128, 0).unwrap(), Mode::Single);
+        let a = parse("serve --mode nope");
+        assert!(Mode::parse(&a, 128, 0).is_err());
+        let a = parse("serve --mode prism --cr eight");
+        assert!(Mode::parse(&a, 128, 0).is_err());
+    }
+
+    #[test]
+    fn mode_wire_roundtrips() {
+        for mode in [Mode::Single, Mode::Voltage { p: 3 },
+                     Mode::Prism { p: 4, l: 5, duplicated: true },
+                     Mode::Prism { p: 2, l: 9, duplicated: false }] {
+            let (tag, p, l) = mode.to_wire();
+            assert_eq!(Mode::from_wire(tag, p, l).unwrap(), mode);
+        }
+        assert!(Mode::from_wire(9, 1, 1).is_err());
     }
 
     #[test]

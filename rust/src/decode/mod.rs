@@ -34,7 +34,11 @@
 //! bias/segment-means code so the AOT incremental step only needs the new
 //! executables dropped in. The serving layer integration lives in
 //! `server::DecodeScheduler` (continuous batching of active decode
-//! streams alongside prefill).
+//! streams alongside prefill), whose membership is elastic
+//! (`coordinator::cluster::ClusterView`): in-flight sessions survive
+//! `fail_device`/`add_device` in place — failing over to their
+//! replication buddy and re-homing back on re-join, bit-identically —
+//! while new streams are admitted on the re-planned (P', L') geometry.
 
 pub mod incremental;
 pub mod kvcache;

@@ -27,7 +27,7 @@ use anyhow::{bail, Context, Result};
 
 use crate::coordinator::plan::{plans, PartitionPlan};
 use crate::net::message::Msg;
-use crate::util::quant::WireFmt;
+use crate::util::quant::{requantize, WireFmt};
 
 use super::incremental::{SegMeansState, SegMirror};
 use super::kvcache::KvCache;
@@ -151,6 +151,10 @@ pub struct DecodeSession {
     /// the next live device (accounted per layer), so that device can
     /// adopt this partition's KV cache and Segment-Means state on death.
     replicate: bool,
+    /// Wire precision of the replica stream: f32 keeps failover
+    /// bit-identical; f16/i8 shrink `replica_bytes` but the replica the
+    /// adopter rebuilds from is requantized (lossy).
+    replica_wire: WireFmt,
 }
 
 impl DecodeSession {
@@ -215,19 +219,33 @@ impl DecodeSession {
             alive: vec![true; p],
             hosts: (0..p).collect(),
             replicate: false,
+            replica_wire: WireFmt::F32,
         })
     }
 
-    /// Turn on buddy replication (must happen before any token is
-    /// absorbed — a replica that missed the prefix is useless). Costs
-    /// `layers * D * 4` wire bytes per absorbed token while more than
-    /// one device is live; buys `fail_device` survival.
+    /// Turn on buddy replication at f32 (must happen before any token
+    /// is absorbed — a replica that missed the prefix is useless).
+    /// Costs `layers * D * 4` wire bytes per absorbed token while more
+    /// than one device is live; buys bit-identical `fail_device`
+    /// survival.
     pub fn enable_replication(&mut self) -> Result<()> {
+        self.enable_replication_with(WireFmt::F32)
+    }
+
+    /// Buddy replication with an explicit replica wire precision — the
+    /// ROADMAP replication cost knob. f16 halves `replica_bytes` (i8
+    /// quarters them, plus scales), at the cost of a *lossy* replica:
+    /// a failover that consumes it rebuilds the adopted KV rows from
+    /// requantized values, so the resumed stream is no longer
+    /// guaranteed bit-identical. f32 keeps the bit-identity guarantee.
+    pub fn enable_replication_with(&mut self, wire: WireFmt)
+                                   -> Result<()> {
         if self.stats.absorbed > 0 {
             bail!("replication must be enabled before the first absorb \
                    ({} positions already in)", self.stats.absorbed);
         }
         self.replicate = true;
+        self.replica_wire = wire;
         Ok(())
     }
 
@@ -321,9 +339,12 @@ impl DecodeSession {
                 self.stats.delta_bytes += msg.wire_bytes() * (live - 1);
                 self.stats.delta_messages += live - 1;
                 if self.replicate {
-                    // frontier row to the buddy, always at f32: the
-                    // replica must rebuild bit-identical state.
-                    self.stats.replica_bytes += d * 4;
+                    // frontier row to the buddy at the replica wire
+                    // precision (f32 => the replica can rebuild
+                    // bit-identical state; f16/i8 => half/quarter the
+                    // bytes, lossy on failover).
+                    self.stats.replica_bytes +=
+                        self.replica_wire.wire_bytes(d, 1);
                 }
             }
             let qmean = msg.seg_delta_mean()?;
@@ -402,6 +423,42 @@ impl DecodeSession {
         Ok(tok)
     }
 
+    /// Rebuild partition `pi`'s KV cache by streaming its rows through
+    /// the real `Msg::CacheSync` codec (byte-accounted as
+    /// `migrated_bytes`), as sent by device `from`. `requant` models a
+    /// lossy replica source: rows are requantized at that wire format
+    /// before crossing the codec. Shared by `fail_device` (adopter
+    /// rebuilds from the replica) and `add_device` (re-joined device
+    /// rebuilds from the live adopter, always exact).
+    fn migrate_partition(&mut self, pi: usize, from: usize,
+                         requant: Option<WireFmt>) -> Result<()> {
+        let src = &self.caches[pi];
+        let mut fresh = KvCache::new(src.layers(), src.heads(),
+                                     src.head_dim(), src.capacity());
+        for layer in 0..src.layers() {
+            let (k, v) = src.layer_tensors(layer);
+            let (k, v) = match requant {
+                Some(fmt) => (requantize(k, fmt)?, requantize(v, fmt)?),
+                None => (k.clone(), v.clone()),
+            };
+            let msg = Msg::CacheSync {
+                from: from as u32,
+                layer: layer as u32,
+                start: 0,
+                k,
+                v,
+            };
+            self.stats.migrated_bytes += msg.wire_bytes();
+            match Msg::decode(&msg.encode())? {
+                Msg::CacheSync { layer, start, k, v, .. } => fresh
+                    .install(layer as usize, start as usize, &k, &v)?,
+                other => bail!("CacheSync decoded as {other:?}"),
+            }
+        }
+        self.caches[pi] = fresh;
+        Ok(())
+    }
+
     /// Fail over away from a dead device: re-run the partition-to-host
     /// assignment over the surviving set (`plan::assign_hosts` — the
     /// Algorithm-1 spans themselves are frozen, so every surviving
@@ -414,11 +471,13 @@ impl DecodeSession {
     /// it the partition's KV rows died with the hardware and the stream
     /// must abort.
     ///
-    /// Everything that survives is bit-exact (replication and CacheSync
-    /// both carry f32), so the resumed greedy stream is *bit-identical*
-    /// to an uninterrupted session — and hence to full recompute. The
-    /// chaos suite (`tests/chaos.rs`) asserts this under every injected
-    /// fault class.
+    /// With the default f32 replica wire, everything that survives is
+    /// bit-exact, so the resumed greedy stream is *bit-identical* to an
+    /// uninterrupted session — and hence to full recompute; the chaos
+    /// suite (`tests/chaos.rs`) asserts this under every injected fault
+    /// class. A lossy replica wire (`enable_replication_with` f16/i8)
+    /// trades that guarantee away: the adopted KV rows are rebuilt from
+    /// requantized values and the stream merely keeps decoding.
     ///
     /// Returns the adopting device id.
     pub fn fail_device(&mut self, dead: usize) -> Result<usize> {
@@ -444,31 +503,50 @@ impl DecodeSession {
         self.alive[dead] = false;
         self.hosts = crate::coordinator::plan::assign_hosts(&self.alive)?;
         let adopter = self.hosts[moving[0]];
+        // The adopter rebuilds from its *replica*, so the rows are what
+        // the replica stream carried: exact at f32, requantized at a
+        // lossy replica wire format.
+        let lossy = match self.replica_wire {
+            WireFmt::F32 => None,
+            fmt => Some(fmt),
+        };
         for &pi in &moving {
-            // Route the replica's rows through the wire codec into the
-            // adopter's fresh cache — the bytes a real migration ships.
-            let src = &self.caches[pi];
-            let mut fresh = KvCache::new(src.layers(), src.heads(),
-                                         src.head_dim(), src.capacity());
-            for layer in 0..src.layers() {
-                let (k, v) = src.layer_tensors(layer);
-                let msg = Msg::CacheSync {
-                    from: pi as u32,
-                    layer: layer as u32,
-                    start: 0,
-                    k: k.clone(),
-                    v: v.clone(),
-                };
-                self.stats.migrated_bytes += msg.wire_bytes();
-                match Msg::decode(&msg.encode())? {
-                    Msg::CacheSync { layer, start, k, v, .. } => fresh
-                        .install(layer as usize, start as usize, &k, &v)?,
-                    other => bail!("CacheSync decoded as {other:?}"),
-                }
-            }
-            self.caches[pi] = fresh;
+            self.migrate_partition(pi, pi, lossy)?;
         }
         Ok(adopter)
+    }
+
+    /// The dual of `fail_device`: a repaired device re-joins the mesh.
+    /// The partition-to-host assignment is re-run over the restored
+    /// live set (`plan::assign_hosts` — a live device always hosts its
+    /// own partition, so everything the dead device had lent out
+    /// re-homes onto the re-picked geometry), and each returning
+    /// partition's KV cache is streamed back through the real
+    /// `Msg::CacheSync` codec + `KvCache::install`, byte-accounted as
+    /// `migrated_bytes`. The live adopter's state is authoritative
+    /// (f32), so the hand-back is bit-exact regardless of the replica
+    /// wire format and the resumed stream stays bit-identical.
+    ///
+    /// Returns the number of partitions re-homed onto the device.
+    pub fn add_device(&mut self, dev: usize) -> Result<usize> {
+        if dev >= self.p {
+            bail!("device {dev} out of range (P={})", self.p);
+        }
+        if self.alive[dev] {
+            bail!("device {dev} is already live");
+        }
+        self.alive[dev] = true;
+        let old = std::mem::replace(
+            &mut self.hosts,
+            crate::coordinator::plan::assign_hosts(&self.alive)?);
+        let moving: Vec<usize> = (0..self.p)
+            .filter(|&i| self.hosts[i] != old[i])
+            .collect();
+        for &pi in &moving {
+            // the live adopter's f32 state is authoritative: exact
+            self.migrate_partition(pi, old[pi], None)?;
+        }
+        Ok(moving.len())
     }
 
     /// `CacheSync` messages that would ship this session's KV state to a
@@ -697,6 +775,154 @@ mod tests {
         assert!(sess.fail_device(0).is_err());
         // nor can the already-dead fail twice
         assert!(sess.fail_device(1).is_err());
+    }
+
+    /// Re-join acceptance: fail a device mid-stream, re-join it later,
+    /// and the stream stays bit-identical throughout — the hand-back
+    /// migration crosses the real CacheSync codec and the delta fan-out
+    /// follows the live device count through both transitions.
+    #[test]
+    fn rejoin_restores_hosts_and_stays_bit_identical() {
+        let m = model();
+        let prompt = vec![2i32, 8, 8, 4];
+        let steps = 15;
+        let (full, _) = m
+            .greedy_decode_full(&prompt, steps, 3, 3, WireFmt::F32)
+            .unwrap();
+        let mut sess =
+            DecodeSession::new(m.clone(), 3, 3, WireFmt::F32).unwrap();
+        sess.enable_replication().unwrap();
+        sess.prefill(&prompt).unwrap();
+        let mut got = Vec::new();
+        for step in 0..steps {
+            if step == 4 {
+                assert_eq!(sess.fail_device(1).unwrap(), 2);
+                assert_eq!(sess.hosts(), &[0, 2, 2][..]);
+                assert_eq!(sess.live_devices(), 2);
+            }
+            if step == 9 {
+                let before = sess.stats().migrated_bytes;
+                // partition 1 re-homes back onto the repaired device
+                assert_eq!(sess.add_device(1).unwrap(), 1);
+                assert_eq!(sess.hosts(), &[0, 1, 2][..]);
+                assert_eq!(sess.live_devices(), 3);
+                assert!(sess.device_alive(1));
+                // partition 1's span [10, 20) held absorbed rows, so
+                // real bytes crossed the codec on the way back
+                assert!(sess.stats().migrated_bytes > before);
+            }
+            got.push(sess.generate_next().unwrap());
+        }
+        assert_eq!(got, full, "re-joined stream diverged");
+        // delta fan-out tracked the live count: 2 peers before the
+        // failure and after the re-join, 1 peer in between
+        let cfg = m.cfg;
+        let row = cfg.layers * cfg.d * 4;
+        let (live3_a, live2, live3_b) = (prompt.len() + 4, 5, steps - 9);
+        assert_eq!(sess.stats().delta_bytes,
+                   row * (2 * live3_a + live2 + 2 * live3_b));
+        // re-adding a live device is an error, as is an unknown one
+        assert!(sess.add_device(1).is_err());
+        assert!(sess.add_device(9).is_err());
+    }
+
+    /// Re-join after a cascade: the last survivor hands back every
+    /// partition the re-joined device should ring-host.
+    #[test]
+    fn rejoin_after_cascade_keeps_decoding() {
+        let m = model();
+        let prompt = vec![3i32, 7, 1, 12, 5, 9];
+        let steps = 12;
+        let (full, _) = m
+            .greedy_decode_full(&prompt, steps, 3, 3, WireFmt::F32)
+            .unwrap();
+        let mut sess =
+            DecodeSession::new(m.clone(), 3, 3, WireFmt::F32).unwrap();
+        sess.enable_replication().unwrap();
+        sess.prefill(&prompt).unwrap();
+        let mut got = Vec::new();
+        for step in 0..steps {
+            if step == 2 {
+                sess.fail_device(1).unwrap();
+                sess.fail_device(2).unwrap();
+                assert_eq!(sess.hosts(), &[0, 0, 0][..]);
+            }
+            if step == 7 {
+                // device 2 returns: it ring-hosts partitions 1 and 2
+                assert_eq!(sess.add_device(2).unwrap(), 2);
+                assert_eq!(sess.hosts(), &[0, 2, 2][..]);
+                assert_eq!(sess.live_devices(), 2);
+            }
+            got.push(sess.generate_next().unwrap());
+        }
+        assert_eq!(got, full, "cascade re-join diverged");
+    }
+
+    /// The replication cost knob: f16 replicas halve `replica_bytes`
+    /// exactly, replication never changes the emitted stream, and f32
+    /// replicas keep failover bit-identical while f16 failover keeps
+    /// decoding on the (lossy) requantized replica.
+    #[test]
+    fn f16_replica_halves_bytes_f32_failover_stays_exact() {
+        let m = model();
+        let cfg = m.cfg;
+        let prompt = vec![3i32, 7, 1, 12, 5];
+        let steps = 10;
+        let mut r32 =
+            DecodeSession::new(m.clone(), 2, 4, WireFmt::F32).unwrap();
+        r32.enable_replication_with(WireFmt::F32).unwrap();
+        let mut r16 =
+            DecodeSession::new(m.clone(), 2, 4, WireFmt::F32).unwrap();
+        r16.enable_replication_with(WireFmt::F16).unwrap();
+        r32.prefill(&prompt).unwrap();
+        r16.prefill(&prompt).unwrap();
+        for _ in 0..steps {
+            // the replica wire format is accounting-only until a
+            // failover consumes the replica: streams are identical
+            assert_eq!(r32.generate_next().unwrap(),
+                       r16.generate_next().unwrap());
+        }
+        let (s32, s16) = (r32.stats(), r16.stats());
+        assert_eq!(s32.replica_bytes,
+                   s32.absorbed * cfg.layers * cfg.d * 4);
+        assert_eq!(s16.replica_bytes,
+                   s16.absorbed * cfg.layers * cfg.d * 2);
+        assert_eq!(s32.replica_bytes, 2 * s16.replica_bytes);
+        assert_eq!(s32.delta_bytes, s16.delta_bytes);
+
+        // f32 failover: bit-identical (the standing guarantee)
+        let (full, _) = m
+            .greedy_decode_full(&prompt, steps, 2, 4, WireFmt::F32)
+            .unwrap();
+        let mut exact =
+            DecodeSession::new(m.clone(), 2, 4, WireFmt::F32).unwrap();
+        exact.enable_replication_with(WireFmt::F32).unwrap();
+        exact.prefill(&prompt).unwrap();
+        let mut got = Vec::new();
+        for step in 0..steps {
+            if step == 3 {
+                exact.fail_device(0).unwrap();
+            }
+            got.push(exact.generate_next().unwrap());
+        }
+        assert_eq!(got, full, "f32-replica failover must stay exact");
+
+        // f16 failover: the lossy replica keeps the stream *alive*
+        // (valid tokens, real migration bytes); exactness is not
+        // promised
+        let mut lossy =
+            DecodeSession::new(m.clone(), 2, 4, WireFmt::F32).unwrap();
+        lossy.enable_replication_with(WireFmt::F16).unwrap();
+        lossy.prefill(&prompt).unwrap();
+        lossy.generate_next().unwrap();
+        let before = lossy.stats().migrated_bytes;
+        lossy.fail_device(0).unwrap();
+        assert!(lossy.stats().migrated_bytes > before);
+        for _ in 0..4 {
+            let tok = lossy.generate_next().unwrap();
+            assert!(tok > 0 && (tok as usize) < cfg.vocab,
+                    "lossy failover emitted junk token {tok}");
+        }
     }
 
     #[test]

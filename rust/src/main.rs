@@ -20,7 +20,6 @@ use std::sync::Arc;
 use anyhow::{bail, Context, Result};
 
 use prism::cli::Args;
-use prism::coordinator::plan::landmarks_for_cr;
 use prism::coordinator::{Mode, Runner};
 use prism::data::Dataset;
 use prism::eval::{evaluate, EvalOpts};
@@ -65,13 +64,17 @@ examples:
   prism serve --model vit --dataset synth10 --p 2 --l 6 --requests 64 \\
         --gather-timeout-ms 30000
   prism decode --sessions 4 --steps 32 --p 2 --l 4 --wire f16
-  prism decode --sessions 4 --replicate --fail-device 0 --fail-after 8
+  prism decode --sessions 4 --replicate --replica-wire f16 \\
+        --fail-device 0 --fail-after 8 --rejoin-after 16
   prism worker --listen 127.0.0.1:7070
   prism remote-eval --workers 127.0.0.1:7070,127.0.0.1:7071 \\
         --model vit --mode prism --p 2 --l 6 --limit 64
-fault tolerance: serve degrades to single-device when a worker blows the
-gather deadline; decode streams with --replicate survive --fail-device
-via CacheSync migration (see tests/chaos.rs for the full fault matrix)";
+elastic membership: when a worker blows the gather deadline the master
+re-plans over the survivors (Eq. 16 re-picks L for P') and keeps the
+remaining parallelism, degrading to single-device only at P'=1; decode
+streams with --replicate survive --fail-device via CacheSync migration
+and --rejoin-after restores the full geometry (tests/chaos.rs and
+tests/elastic.rs hold the fault and membership matrices)";
 
 pub fn manifest_from(args: &Args) -> Result<Arc<Manifest>> {
     let root = PathBuf::from(args.str_or("artifacts", "artifacts"));
@@ -104,26 +107,10 @@ pub fn resolve_workload(args: &Args, m: &Manifest)
     Ok((model, dataset, tag))
 }
 
-/// Resolve the strategy from --mode / --p / --l / --cr.
+/// Resolve the strategy from --mode / --p / --l / --cr (the shared
+/// parser — `Mode::parse` — also used by `prism serve`).
 pub fn resolve_mode(args: &Args, n: usize) -> Result<Mode> {
-    let p = args.usize_or("p", 2)?;
-    Ok(match args.str_or("mode", "prism").as_str() {
-        "single" => Mode::Single,
-        "voltage" => Mode::Voltage { p },
-        "prism" => {
-            let l = if let Some(cr) = args.flags.get("cr") {
-                landmarks_for_cr(n, p, cr.parse::<f64>()
-                    .context("--cr wants a number")?)
-            } else {
-                args.usize_or("l", 0)?
-            };
-            if l == 0 {
-                bail!("prism mode needs --l or --cr");
-            }
-            Mode::Prism { p, l, duplicated: !args.bool("no-dup") }
-        }
-        other => bail!("unknown mode '{other}'"),
-    })
+    Mode::parse(args, n, 0)
 }
 
 fn cmd_info(args: &Args) -> Result<()> {

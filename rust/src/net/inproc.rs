@@ -134,8 +134,11 @@ mod tests {
         let master = eps.pop().unwrap();
         let w1 = eps.pop().unwrap();
         let w0 = eps.pop().unwrap();
-        w0.send(2, Msg::FinalPart { from: 0, data: t(4) }).unwrap();
-        w1.send(0, Msg::Exchange { layer: 0, from: 1, data: t(2) }).unwrap();
+        w0.send(2, Msg::FinalPart { epoch: 0, from: 0, data: t(4) })
+            .unwrap();
+        w1.send(0, Msg::Exchange { epoch: 0, layer: 0, from: 1,
+                                   data: t(2) })
+            .unwrap();
         let e = master.recv().unwrap();
         assert_eq!(e.from, 0);
         let e = w0.recv().unwrap();
@@ -164,7 +167,8 @@ mod tests {
         let h = std::thread::spawn(move || {
             let e = w0.recv().unwrap();
             assert!(matches!(e.msg, Msg::Shutdown));
-            w0.send(1, Msg::FinalPart { from: 0, data: t(1) }).unwrap();
+            w0.send(1, Msg::FinalPart { epoch: 0, from: 0, data: t(1) })
+                .unwrap();
         });
         master.send(0, Msg::Shutdown).unwrap();
         let e = master.recv().unwrap();
@@ -202,7 +206,7 @@ mod tests {
         let t0 = std::time::Instant::now();
         // 40 KB at 1 MB/s ≈ 40 ms
         eps[0]
-            .send(1, Msg::FinalPart { from: 0, data: t(10_000) })
+            .send(1, Msg::FinalPart { epoch: 0, from: 0, data: t(10_000) })
             .unwrap();
         assert!(t0.elapsed().as_millis() >= 30);
     }

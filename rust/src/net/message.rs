@@ -7,18 +7,32 @@ use crate::runtime::{Tensor, TensorData};
 use crate::util::quant::{self, WireFmt};
 
 /// Messages exchanged during one distributed forward pass.
+///
+/// `epoch` tags the data-plane messages of the elastic serving protocol
+/// (`coordinator::cluster`): every membership change bumps the epoch,
+/// and receivers drop Job/Exchange/FinalPart frames whose epoch is not
+/// their current one — the in-flight batch of a dead epoch is simply
+/// re-issued by the master on the new plan, so transitions can never
+/// mix two geometries in one barrier.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Msg {
     /// Segment-Means (PRISM) or full-partition (Voltage) exchange after
-    /// one Transformer block.
-    Exchange { layer: u32, from: u32, data: Tensor },
+    /// one Transformer block. `from` is the sender's physical device id;
+    /// receivers map it to an epoch rank via the live list.
+    Exchange { epoch: u32, layer: u32, from: u32, data: Tensor },
     /// A worker's final partition output, returned to the master.
-    FinalPart { from: u32, data: Tensor },
+    FinalPart { epoch: u32, from: u32, data: Tensor },
     /// Master -> worker: start a forward pass (local partition + initial
     /// context rows, one tensor per peer in global order).
-    Job { request: u64, x_p: Tensor, ctx: Vec<Tensor> },
+    Job { epoch: u32, request: u64, x_p: Tensor, ctx: Vec<Tensor> },
     /// Orderly shutdown.
     Shutdown,
+    /// Master -> worker epoch transition (elastic membership): adopt the
+    /// re-planned strategy over the live device set. `mode`/`p`/`l` are
+    /// the `Mode::to_wire` encoding; `live` lists the surviving physical
+    /// device ids in rank order, so a worker finds its new rank (and its
+    /// new partition/executable) by position.
+    Reconfig { epoch: u32, mode: u8, p: u32, l: u32, live: Vec<u32> },
     /// Incremental Segment-Means update (decode subsystem): after the
     /// frontier device appends one token at one layer, exactly one
     /// segment mean changes; only that row crosses the wire, quantized
@@ -53,6 +67,7 @@ impl Msg {
                 x_p.byte_len() + ctx.iter().map(|t| t.byte_len()).sum::<usize>()
             }
             Msg::Shutdown => 0,
+            Msg::Reconfig { .. } => 0,
             Msg::SegDelta { payload, .. } => payload.len(),
             Msg::CacheSync { k, v, .. } => k.byte_len() + v.byte_len(),
             Msg::Heartbeat { .. } => 0,
@@ -203,19 +218,22 @@ impl Msg {
     pub fn encode(&self) -> Vec<u8> {
         let mut out = Vec::new();
         match self {
-            Msg::Exchange { layer, from, data } => {
+            Msg::Exchange { epoch, layer, from, data } => {
                 out.push(0);
+                put_u32(&mut out, *epoch);
                 put_u32(&mut out, *layer);
                 put_u32(&mut out, *from);
                 encode_tensor(&mut out, data);
             }
-            Msg::FinalPart { from, data } => {
+            Msg::FinalPart { epoch, from, data } => {
                 out.push(1);
+                put_u32(&mut out, *epoch);
                 put_u32(&mut out, *from);
                 encode_tensor(&mut out, data);
             }
-            Msg::Job { request, x_p, ctx } => {
+            Msg::Job { epoch, request, x_p, ctx } => {
                 out.push(2);
+                put_u32(&mut out, *epoch);
                 put_u64(&mut out, *request);
                 encode_tensor(&mut out, x_p);
                 put_u32(&mut out, ctx.len() as u32);
@@ -224,6 +242,17 @@ impl Msg {
                 }
             }
             Msg::Shutdown => out.push(3),
+            Msg::Reconfig { epoch, mode, p, l, live } => {
+                out.push(7);
+                put_u32(&mut out, *epoch);
+                out.push(*mode);
+                put_u32(&mut out, *p);
+                put_u32(&mut out, *l);
+                put_u32(&mut out, live.len() as u32);
+                for d in live {
+                    put_u32(&mut out, *d);
+                }
+            }
             Msg::SegDelta { layer, from, segment, filled, fmt, d,
                             payload } => {
                 out.push(4);
@@ -258,12 +287,18 @@ impl Msg {
         let tag = c.u8().context("empty message")?;
         let msg = match tag {
             0 => Msg::Exchange {
+                epoch: c.u32()?,
                 layer: c.u32()?,
                 from: c.u32()?,
                 data: decode_tensor(&mut c)?,
             },
-            1 => Msg::FinalPart { from: c.u32()?, data: decode_tensor(&mut c)? },
+            1 => Msg::FinalPart {
+                epoch: c.u32()?,
+                from: c.u32()?,
+                data: decode_tensor(&mut c)?,
+            },
             2 => {
+                let epoch = c.u32()?;
                 let request = c.u64()?;
                 let x_p = decode_tensor(&mut c)?;
                 let n = c.u32()? as usize;
@@ -278,9 +313,28 @@ impl Msg {
                 for _ in 0..n {
                     ctx.push(decode_tensor(&mut c)?);
                 }
-                Msg::Job { request, x_p, ctx }
+                Msg::Job { epoch, request, x_p, ctx }
             }
             3 => Msg::Shutdown,
+            7 => {
+                let epoch = c.u32()?;
+                let mode = c.u8()?;
+                let p = c.u32()?;
+                let l = c.u32()?;
+                let n = c.u32()? as usize;
+                // each live entry costs 4 bytes: a hostile count must
+                // fail closed before any allocation (the division form
+                // cannot overflow)
+                if n > c.remaining() / 4 {
+                    bail!("Reconfig declares {n} live devices, {} bytes \
+                           left", c.remaining());
+                }
+                let mut live = Vec::with_capacity(n);
+                for _ in 0..n {
+                    live.push(c.u32()?);
+                }
+                Msg::Reconfig { epoch, mode, p, l, live }
+            }
             4 => {
                 let layer = c.u32()?;
                 let from = c.u32()?;
@@ -338,14 +392,19 @@ mod tests {
     #[test]
     fn msg_codec_roundtrip() {
         let msgs = vec![
-            Msg::Exchange { layer: 3, from: 1, data: t(vec![2, 3]) },
-            Msg::FinalPart { from: 2, data: t(vec![4]) },
+            Msg::Exchange { epoch: 7, layer: 3, from: 1,
+                            data: t(vec![2, 3]) },
+            Msg::FinalPart { epoch: 0, from: 2, data: t(vec![4]) },
             Msg::Job {
+                epoch: 2,
                 request: 99,
                 x_p: t(vec![1, 2, 3]),
                 ctx: vec![t(vec![2]), t(vec![3])],
             },
             Msg::Shutdown,
+            Msg::Reconfig { epoch: 4, mode: 2, p: 3, l: 5,
+                            live: vec![0, 1, 3] },
+            Msg::Reconfig { epoch: 1, mode: 1, p: 2, l: 0, live: vec![] },
         ];
         for m in msgs {
             let buf = m.encode();
@@ -360,7 +419,8 @@ mod tests {
         let mut buf = Msg::Shutdown.encode();
         buf.push(0);
         assert!(Msg::decode(&buf).is_err()); // trailing bytes
-        let good = Msg::FinalPart { from: 0, data: t(vec![3]) }.encode();
+        let good = Msg::FinalPart { epoch: 0, from: 0, data: t(vec![3]) }
+            .encode();
         assert!(Msg::decode(&good[..good.len() - 2]).is_err()); // truncated
     }
 
@@ -408,13 +468,19 @@ mod tests {
 
     #[test]
     fn wire_bytes_counts_tensor_payload() {
-        let m = Msg::Exchange { layer: 0, from: 0, data: t(vec![2, 3]) };
+        let m = Msg::Exchange { epoch: 0, layer: 0, from: 0,
+                                data: t(vec![2, 3]) };
         assert_eq!(m.wire_bytes(), 24);
         assert_eq!(Msg::Shutdown.wire_bytes(), 0);
-        let j = Msg::Job { request: 1, x_p: t(vec![2]),
+        let j = Msg::Job { epoch: 0, request: 1, x_p: t(vec![2]),
                            ctx: vec![t(vec![3])] };
         assert_eq!(j.wire_bytes(), 20);
         assert_eq!(Msg::Heartbeat { from: 2, seq: 9 }.wire_bytes(), 0);
+        // control-plane frames carry no tensor payload
+        assert_eq!(Msg::Reconfig { epoch: 1, mode: 2, p: 2, l: 4,
+                                   live: vec![0, 1] }
+                       .wire_bytes(),
+                   0);
     }
 
     #[test]
@@ -452,22 +518,34 @@ mod property_tests {
     /// One random instance of every wire variant per call index, so the
     /// property loop covers the full enum many times over.
     fn rand_msg(rng: &mut Rng) -> Msg {
-        match rng.below(7) {
+        match rng.below(8) {
             0 => Msg::Exchange {
+                epoch: rng.next_u64() as u32,
                 layer: rng.next_u64() as u32,
                 from: rng.next_u64() as u32,
                 data: rand_tensor(rng),
             },
             1 => Msg::FinalPart {
+                epoch: rng.next_u64() as u32,
                 from: rng.next_u64() as u32,
                 data: rand_tensor(rng),
             },
             2 => Msg::Job {
+                epoch: rng.next_u64() as u32,
                 request: rng.next_u64(),
                 x_p: rand_tensor(rng),
                 ctx: (0..rng.below(4)).map(|_| rand_tensor(rng)).collect(),
             },
             3 => Msg::Shutdown,
+            7 => Msg::Reconfig {
+                epoch: rng.next_u64() as u32,
+                mode: rng.next_u64() as u8,
+                p: rng.next_u64() as u32,
+                l: rng.next_u64() as u32,
+                live: (0..rng.below(6))
+                    .map(|_| rng.next_u64() as u32)
+                    .collect(),
+            },
             4 => {
                 let fmt = match rng.below(3) {
                     0 => WireFmt::F32,
@@ -562,6 +640,7 @@ mod property_tests {
         // Exchange whose tensor header declares 2^128-ish elements: the
         // checked shape math must bail before allocating anything.
         let mut buf = vec![0u8]; // Exchange tag
+        buf.extend_from_slice(&0u32.to_le_bytes()); // epoch
         buf.extend_from_slice(&0u32.to_le_bytes()); // layer
         buf.extend_from_slice(&0u32.to_le_bytes()); // from
         buf.push(0); // dtype f32
@@ -572,11 +651,20 @@ mod property_tests {
         assert!(Msg::decode(&buf).is_err());
         // Job that declares 4 billion ctx tensors with no bytes behind it
         let mut buf = vec![2u8];
+        buf.extend_from_slice(&0u32.to_le_bytes()); // epoch
         buf.extend_from_slice(&1u64.to_le_bytes()); // request
         buf.push(0); // x_p dtype
         buf.push(1); // ndim 1
         buf.extend_from_slice(&0u32.to_le_bytes()); // dim 0 (empty tensor)
         buf.extend_from_slice(&u32::MAX.to_le_bytes()); // ctx count
+        assert!(Msg::decode(&buf).is_err());
+        // Reconfig that declares 4 billion live devices, zero bytes left
+        let mut buf = vec![7u8];
+        buf.extend_from_slice(&1u32.to_le_bytes()); // epoch
+        buf.push(2); // mode tag
+        buf.extend_from_slice(&3u32.to_le_bytes()); // p
+        buf.extend_from_slice(&5u32.to_le_bytes()); // l
+        buf.extend_from_slice(&u32::MAX.to_le_bytes()); // live count
         assert!(Msg::decode(&buf).is_err());
     }
 }

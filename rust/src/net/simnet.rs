@@ -183,6 +183,7 @@ mod tests {
 
     fn tensor_msg(n: usize) -> Msg {
         Msg::FinalPart {
+            epoch: 0,
             from: 0,
             data: crate::runtime::Tensor::from_f32(
                 vec![n], vec![1.0; n]).unwrap(),

@@ -488,7 +488,8 @@ mod tests {
         // wrong peer id is rejected before touching the socket
         assert!(matches!(ch.send(7, Msg::Shutdown),
                          Err(TransportError::PeerDown { peer: 7 })));
-        ch.send(1, Msg::Exchange { layer: 42, from: 0, data: t(3) })
+        ch.send(1, Msg::Exchange { epoch: 0, layer: 42, from: 0,
+                                   data: t(3) })
             .unwrap();
         let env = ch.recv_deadline(Duration::from_secs(5)).unwrap();
         assert_eq!(env.msg, Msg::Heartbeat { from: 1, seq: 42 });

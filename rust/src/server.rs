@@ -8,6 +8,15 @@
 //! and a batcher thread that groups single-sample requests up to the AOT
 //! batch size with a flush timeout.
 //!
+//! Membership is *elastic* (`coordinator::cluster`): the master holds a
+//! `ClusterView`, and a worker that blows the gather deadline is probed,
+//! declared dead, and planned around — the survivors are reconfigured
+//! onto the re-planned (P', L') geometry (Eq. 16 re-picks L) via
+//! `Msg::Reconfig`, the wedged batch is re-issued on the new epoch, and
+//! only P'=1 (or a missing AOT artifact grid) degrades to single-device
+//! serving. Every data-plane frame carries the epoch, so a transition
+//! can never mix two geometries in one exchange barrier.
+//!
 //! An optional `LinkModel` paces sends to emulate an edge network in wall
 //! time; the deterministic virtual-clock path (`RunTrace::latency_secs`)
 //! is what the benches use.
@@ -20,8 +29,9 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, bail, Context, Result};
 
 use crate::cli::Args;
+use crate::coordinator::cluster::{ClusterView, EpochPlan};
 use crate::coordinator::plan::{plans, PartitionPlan};
-use crate::coordinator::runner::{bias_for, degraded_mode};
+use crate::coordinator::runner::bias_for;
 use crate::coordinator::segmeans::segment_means;
 use crate::coordinator::Mode;
 use crate::data::{Dataset, DatasetKind};
@@ -30,7 +40,8 @@ use crate::metrics::Histogram;
 use crate::net::inproc::{mesh, Endpoint};
 use crate::net::message::Msg;
 use crate::net::LinkModel;
-use crate::runtime::{Engine, Manifest, Tensor, TensorData, WeightSet};
+use crate::runtime::{Engine, Manifest, ModelCfg, Tensor, TensorData,
+                     WeightSet};
 use crate::util::quant::WireFmt;
 use crate::util::rng::Rng;
 
@@ -220,13 +231,25 @@ fn stack_rows(rows: &[&Tensor], batch: usize) -> Result<Tensor> {
     }
 }
 
-/// Scatter one embedded batch across the worker mesh and gather the
-/// final partitions, bounding every wait by `gather_deadline`. A blown
-/// deadline names the missing workers — the master treats that as peer
-/// loss and degrades.
-fn distributed_pass(cfg: &ServeConfig, pls: &[PartitionPlan],
-                    ep: &Endpoint, p: usize, x: &Tensor, job_id: u64,
-                    gather_deadline: Duration) -> Result<Tensor> {
+/// Outcome of one distributed attempt at a batch.
+enum PassOutcome {
+    Done(Tensor),
+    /// Workers (physical ids) that blew the gather deadline or whose
+    /// endpoint is already gone.
+    Dead(Vec<usize>),
+}
+
+/// Scatter one embedded batch over the epoch's live workers and gather
+/// the final partitions, bounding every wait by `gather_deadline`.
+/// `Dead` names the silent workers — the master probes them, re-plans
+/// over the survivors, and re-issues the batch on the next epoch.
+fn run_distributed(current: &EpochPlan, ep: &Endpoint, x: &Tensor,
+                   job_id: u64, gather_deadline: Duration)
+                   -> Result<PassOutcome> {
+    let pls: &[PartitionPlan] = &current.plans;
+    let epoch = current.epoch as u32;
+    let p = current.p();
+    let l = current.mode.l();
     // scatter: local partition + initial ctx (Fig. 1).
     let parts: Vec<Tensor> = pls
         .iter()
@@ -238,8 +261,8 @@ fn distributed_pass(cfg: &ServeConfig, pls: &[PartitionPlan],
             pl.peers()
                 .into_iter()
                 .map(|j| {
-                    if cfg.mode.l() > 0 {
-                        segment_means(&parts[j], cfg.mode.l())
+                    if l > 0 {
+                        segment_means(&parts[j], l)
                     } else {
                         Ok(parts[j].clone())
                     }
@@ -247,8 +270,15 @@ fn distributed_pass(cfg: &ServeConfig, pls: &[PartitionPlan],
                 .collect()
         })
         .collect::<Result<_>>()?;
-    for (wid, (part, ctx)) in parts.into_iter().zip(ctxs).enumerate() {
-        ep.send(wid, Msg::Job { request: job_id, x_p: part, ctx })?;
+    for (rank, (part, ctx)) in parts.into_iter().zip(ctxs).enumerate() {
+        let wid = current.devices[rank];
+        if ep.send(wid, Msg::Job { epoch, request: job_id, x_p: part,
+                                   ctx })
+            .is_err()
+        {
+            // endpoint already hung up: faster than the deadline
+            return Ok(PassOutcome::Dead(vec![wid]));
+        }
     }
     // gather final partitions (any order, deadline-bounded).
     let mut finals: Vec<Option<Tensor>> = vec![None; p];
@@ -256,11 +286,21 @@ fn distributed_pass(cfg: &ServeConfig, pls: &[PartitionPlan],
     while got < p {
         match ep.recv_timeout(gather_deadline)? {
             Some(env) => match env.msg {
-                Msg::FinalPart { from, data } => {
-                    if finals[from as usize].replace(data).is_none() {
+                Msg::FinalPart { epoch: e, from, data } => {
+                    if e != epoch {
+                        continue; // a dead epoch's batch: inert
+                    }
+                    let Some(rank) = current.rank_of(from as usize)
+                    else {
+                        continue; // a written-off worker resurfacing
+                    };
+                    if finals[rank].replace(data).is_none() {
                         got += 1;
                     }
                 }
+                // stale FinalParts are the only traffic ever addressed
+                // to the master mid-gather; anything else is a protocol
+                // bug worth hearing about, not a silent deadline
                 other => bail!("master expected FinalPart, got {other:?}"),
             },
             None => {
@@ -268,21 +308,141 @@ fn distributed_pass(cfg: &ServeConfig, pls: &[PartitionPlan],
                     .iter()
                     .enumerate()
                     .filter(|(_, f)| f.is_none())
-                    .map(|(i, _)| i)
+                    .map(|(rank, _)| current.devices[rank])
                     .collect();
-                bail!("no FinalPart from workers {missing:?} within \
-                       {gather_deadline:?}: treating them as dead");
+                return Ok(PassOutcome::Dead(missing));
             }
         }
     }
     let parts: Vec<Tensor> =
         finals.into_iter().map(|t| t.unwrap()).collect();
     let refs: Vec<&Tensor> = parts.iter().collect();
-    Tensor::concat1(&refs)
+    Ok(PassOutcome::Done(Tensor::concat1(&refs)?))
+}
+
+/// Deadline-based detection cannot tell dead workers from survivors
+/// wedged behind them, so probe every silent worker's endpoint: a
+/// worker thread that exited dropped its receiver and the send fails
+/// immediately, while a wedged-but-alive worker accepts (and later
+/// drops) the probe.
+fn probe_dead(ep: &Endpoint, missing: &[usize], master: usize)
+              -> Vec<usize> {
+    missing
+        .iter()
+        .copied()
+        .filter(|&wid| {
+            ep.send(wid, Msg::Heartbeat { from: master as u32, seq: 0 })
+                .is_err()
+        })
+        .collect()
+}
+
+/// True when every rank's block executable for `mode` exists in the
+/// manifest; the workers then compile their per-(P', rank) executables
+/// on demand (the engine caches compilations, so re-entering a
+/// previously seen geometry is free).
+fn artifacts_exist(manifest: &Manifest, cfg: &ServeConfig, batch: usize,
+                   mode: Mode) -> bool {
+    let (name, p, l) = (mode.name(), mode.p(), mode.l());
+    (0..p).all(|rank| {
+        let exec = manifest.block_name(&cfg.model, name, p, l, rank,
+                                       batch, &cfg.flavor);
+        manifest.executables.contains_key(&exec)
+    })
+}
+
+/// The new epoch's plan after a membership change: Eq. 16's re-picked L
+/// first, then the base L clamped to the new P' (the AOT variant grid
+/// is sparse), else single-device. Empty `devices` == no distributed
+/// grid left at all — the master (which hosts embed/head anyway)
+/// serves alone.
+fn elastic_plan(manifest: &Manifest, cfg: &ServeConfig, model: &ModelCfg,
+                batch: usize, view: &mut ClusterView)
+                -> Result<EpochPlan> {
+    let Ok(eq16) = view.current() else {
+        return view.single_fallback(); // zero live workers
+    };
+    if eq16.p() <= 1 {
+        // the view's own Single snapshot (one live device): every
+        // downstream check is on p() <= 1, so it serves unchanged
+        return Ok(eq16);
+    }
+    let mut candidates = vec![eq16.mode];
+    if let (Mode::Prism { l: base_l, duplicated, .. },
+            Mode::Prism { p: p_new, l: l_new, .. }) =
+        (view.base(), eq16.mode)
+    {
+        let clamped = base_l.clamp(1, (model.n / p_new).max(1));
+        if clamped != l_new {
+            candidates.push(Mode::Prism { p: p_new, l: clamped,
+                                          duplicated });
+        }
+    }
+    for cand in candidates {
+        if !artifacts_exist(manifest, cfg, batch, cand) {
+            continue;
+        }
+        if cand == eq16.mode {
+            return Ok(eq16);
+        }
+        // fallback L: still planned and cached by the view, so it stays
+        // the one owner of the epoch -> plan mapping
+        return view.current_with_mode(cand);
+    }
+    view.single_fallback() // no artifacts for any P' geometry
+}
+
+/// Swap in a new epoch after the named workers were declared dead: mark
+/// them in the view, re-plan over the survivors, and either reconfigure
+/// the surviving workers onto the new geometry (`Msg::Reconfig`) or
+/// release everyone and serve single-device from the master.
+#[allow(clippy::too_many_arguments)]
+fn reconfigure(manifest: &Manifest, cfg: &ServeConfig, model: &ModelCfg,
+               batch: usize, view: &mut ClusterView, dead: &[usize],
+               ep: &Endpoint, p: usize) -> Result<EpochPlan> {
+    for &d in dead {
+        if view.is_alive(d) {
+            view.fail_device(d)?;
+        }
+    }
+    let next = elastic_plan(manifest, cfg, model, batch, view)?;
+    eprintln!("[master] workers {dead:?} lost; epoch {} re-plans {:?} \
+               -> {:?} over devices {:?}",
+              next.epoch, cfg.mode, next.mode, next.devices);
+    if next.p() <= 1 {
+        // no distributed geometry (or artifacts) left: release every
+        // worker — a Shutdown in the barrier is a clean exit — and
+        // serve single-device from here on.
+        for wid in 0..p {
+            let _ = ep.send(wid, Msg::Shutdown);
+        }
+    } else {
+        // release the written-off devices: a no-op for truly dead
+        // endpoints, a clean exit (thread + engine + weights freed)
+        // for wedged-but-alive write-offs, which would otherwise idle
+        // resident until intake closes
+        for &wid in dead {
+            let _ = ep.send(wid, Msg::Shutdown);
+        }
+        let (tag, mp, ml) = next.mode.to_wire();
+        let live: Vec<u32> =
+            next.devices.iter().map(|&d| d as u32).collect();
+        for &wid in &next.devices {
+            let _ = ep.send(wid, Msg::Reconfig {
+                epoch: next.epoch as u32,
+                mode: tag,
+                p: mp,
+                l: ml,
+                live: live.clone(),
+            });
+        }
+    }
+    Ok(next)
 }
 
 /// The degraded path: the master (always a surviving device — it hosts
 /// embed/head anyway) runs the whole stack on the P=1 plan.
+#[allow(clippy::too_many_arguments)]
 fn single_pass(engine: &mut Engine, manifest: &Manifest,
                cfg: &ServeConfig, ws: &WeightSet, layers: usize,
                n: usize, causal: bool, batch: usize, x0: &Tensor)
@@ -307,37 +467,41 @@ fn master_loop(manifest: Arc<Manifest>, cfg: ServeConfig, layers: usize,
     let ws = WeightSet::load(&manifest, &cfg.weights)?;
     let embed_name = manifest.embed_name(&cfg.model, batch);
     let head_name = manifest.head_name(&cfg.model, &cfg.task, batch);
-    let pls = plans(model.n, p, cfg.mode.l(), model.causal)?;
+    let mut view = ClusterView::new(cfg.mode, model.n, model.causal)?;
+    let mut current = view.current()?;
 
     let mut job_id = 0u64;
-    let mut degraded = p <= 1;
     while let Ok(reqs) = batches.recv() {
         let rows: Vec<&Tensor> = reqs.iter().map(|r| &r.raw).collect();
         let raw = stack_rows(&rows, batch)?;
         let x0 = engine.run(&embed_name, &ws, 0, &[&raw])?.remove(0);
-        let x = if degraded {
-            single_pass(&mut engine, &manifest, &cfg, &ws, layers,
-                        model.n, model.causal, batch, &x0)?
-        } else {
-            match distributed_pass(&cfg, &pls, &ep, p, &x0, job_id,
-                                   faults.gather_deadline) {
-                Ok(x) => x,
-                Err(e) => {
-                    // Peer loss: release the survivors (a Shutdown in
-                    // the barrier is a clean exit for them), re-plan
-                    // over the surviving device set — the master itself,
-                    // i.e. the P=1 plan — and re-run the wedged batch
-                    // there. No request is lost; later batches skip
-                    // straight to the degraded path.
-                    eprintln!("[master] {e:#}; degrading {:?} -> {:?}",
-                              cfg.mode, degraded_mode(cfg.mode, 1));
-                    for wid in 0..p {
-                        let _ = ep.send(wid, Msg::Shutdown);
-                    }
-                    degraded = true;
-                    single_pass(&mut engine, &manifest, &cfg, &ws,
-                                layers, model.n, model.causal, batch,
-                                &x0)?
+        // the elastic loop: run the batch on the current epoch's plan;
+        // on peer loss, re-plan over the survivors and re-issue the
+        // *same* batch on the next epoch. No request is dropped across
+        // a transition, and in-flight work of a dead epoch is inert
+        // (every receiver drops mismatched-epoch frames).
+        let x = loop {
+            if current.p() <= 1 {
+                break single_pass(&mut engine, &manifest, &cfg, &ws,
+                                  layers, model.n, model.causal, batch,
+                                  &x0)?;
+            }
+            match run_distributed(&current, &ep, &x0, job_id,
+                                  faults.gather_deadline)? {
+                PassOutcome::Done(x) => break x,
+                PassOutcome::Dead(missing) => {
+                    let probed = probe_dead(&ep, &missing, p);
+                    let dead = if probed.is_empty() {
+                        // every silent worker still holds its endpoint
+                        // (a wedged engine, not a death): the deadline
+                        // is the contract — write the whole set off.
+                        missing
+                    } else {
+                        probed
+                    };
+                    current = reconfigure(&manifest, &cfg, &model,
+                                          batch, &mut view, &dead, &ep,
+                                          p)?;
                 }
             }
         };
@@ -356,14 +520,212 @@ fn master_loop(manifest: Arc<Manifest>, cfg: ServeConfig, layers: usize,
         }
         job_id += 1;
     }
-    // intake closed: stop workers (already gone if we degraded — their
-    // endpoints may have hung up, so sends are best-effort).
-    if p > 1 {
-        for wid in 0..p {
-            let _ = ep.send(wid, Msg::Shutdown);
-        }
+    // intake closed: stop whatever workers are still around (declared-
+    // dead ones may have hung up, so sends are best-effort).
+    for wid in 0..p {
+        let _ = ep.send(wid, Msg::Shutdown);
     }
     Ok(())
+}
+
+/// One worker's per-epoch execution state: its rank in the live set,
+/// partition plan, bias, and block executable. Rebuilt on every
+/// `Msg::Reconfig`; the executable is compiled on demand and the engine
+/// caches compilations, so re-entering a previously seen (P', rank)
+/// geometry is free.
+struct WorkerState {
+    epoch: u32,
+    mode: Mode,
+    /// Live physical device ids in rank order (this epoch's mesh).
+    live: Vec<usize>,
+    pl: PartitionPlan,
+    bias: Tensor,
+    exec: String,
+}
+
+impl WorkerState {
+    #[allow(clippy::too_many_arguments)]
+    fn build(manifest: &Manifest, cfg: &ServeConfig, model: &ModelCfg,
+             engine: &mut Engine, batch: usize, wid: usize, epoch: u32,
+             mode: Mode, live: Vec<usize>) -> Result<WorkerState> {
+        let rank = live
+            .iter()
+            .position(|&d| d == wid)
+            .context("worker missing from the live set")?;
+        let (p, l) = (mode.p(), mode.l());
+        if p <= 1 {
+            bail!("worker cannot serve a single-device mode");
+        }
+        let pl = plans(model.n, p, l, model.causal)?[rank].clone();
+        let duplicated =
+            !matches!(mode, Mode::Prism { duplicated: false, .. });
+        let bias = bias_for(&pl, duplicated)?;
+        let exec = manifest.block_name(&cfg.model, mode.name(), p, l,
+                                       rank, batch, &cfg.flavor);
+        engine.ensure_compiled(&exec)?;
+        Ok(WorkerState { epoch, mode, live, pl, bias, exec })
+    }
+}
+
+/// Barrier slot (index into `peers`/`peer_ctx`) for a sender's physical
+/// device id, via its rank in this epoch's live list.
+fn slot_of(from: u32, live: &[usize], peers: &[usize]) -> Option<usize> {
+    live.iter()
+        .position(|&d| d == from as usize)
+        .and_then(|rank| peers.iter().position(|&j| j == rank))
+}
+
+/// How one job ended on a worker.
+enum JobEnd {
+    Done,
+    /// Exchange deadline blown: the job is abandoned and the master's
+    /// gather deadline drives the re-plan — wait for its verdict.
+    Abandoned,
+    Shutdown,
+    /// A `Msg::Reconfig` arrived mid-barrier: the epoch died under this
+    /// job; adopt the new geometry (the master re-issues the batch).
+    Reconfig { epoch: u32, mode: u8, p: u32, l: u32, live: Vec<u32> },
+}
+
+#[allow(clippy::too_many_arguments)]
+fn run_job(engine: &mut Engine, ws: &WeightSet, model: &ModelCfg,
+           st: &WorkerState, ep: &Endpoint, faults: &FaultPolicy,
+           x_p: Tensor, ctx0: Vec<Tensor>, pre: Vec<(u32, Tensor)>,
+           master: usize) -> Result<JobEnd> {
+    let wid = ep.id;
+    let mut x = x_p;
+    // rank-space peer partition indices in global (Z_cat) order
+    let peers = st.pl.peers();
+    let mut peer_ctx: Vec<Tensor> = ctx0;
+    // A peer can race at most one step ahead of us: its layer-0 share
+    // may arrive before our Job (it cannot pass its own layer-0 barrier
+    // without our share), and its layer-(k+1) share may arrive while we
+    // sit in the layer-k barrier. Both kinds pre-seed the barrier they
+    // belong to instead of being dropped (a drop would wedge that
+    // barrier forever — Exchange frames are never re-sent).
+    let mut early: Vec<Option<Tensor>> = vec![None; peers.len()];
+    for (from, data) in pre {
+        if let Some(slot) = slot_of(from, &st.live, &peers) {
+            early[slot] = Some(data);
+        }
+    }
+    let prism = matches!(st.mode, Mode::Prism { .. });
+    for layer in 0..model.layers {
+        let refs: Vec<&Tensor> = peer_ctx.iter().collect();
+        let ctx = Tensor::concat1(&refs)?;
+        let mut out = engine.run(&st.exec, ws, layer,
+                                 &[&x, &ctx, &st.bias])?;
+        x = out.remove(0);
+        let share = if prism {
+            out.remove(0) // Segment Means of the block output
+        } else {
+            x.clone() // Voltage: full partition output
+        };
+        // best-effort exchange to this epoch's live peers: a dead peer
+        // just misses its copy (the master notices via its gather
+        // deadline, probes, and re-plans).
+        let share_msg = Msg::Exchange { epoch: st.epoch,
+                                        layer: layer as u32,
+                                        from: wid as u32,
+                                        data: share };
+        for &to in &st.live {
+            if to != wid {
+                let _ = ep.send(to, share_msg.clone());
+            }
+        }
+        if layer + 1 < model.layers {
+            // barrier: collect this layer's share from every live peer,
+            // bounding the wait — a dead peer must not wedge the mesh.
+            // Frames from other epochs are inert by construction (the
+            // master re-issues their batch on the new plan) and are
+            // dropped wherever they surface, so a transition can never
+            // mix two geometries in one barrier.
+            let mut got = 0;
+            let mut seen = vec![false; peers.len()];
+            let mut next: Vec<Option<Tensor>> = vec![None; peers.len()];
+            // frames that raced ahead of the previous barrier
+            for (slot, stash) in early.iter_mut().enumerate() {
+                if let Some(data) = stash.take() {
+                    peer_ctx[slot] = data;
+                    seen[slot] = true;
+                    got += 1;
+                }
+            }
+            while got < peers.len() {
+                let Some(env) =
+                    ep.recv_timeout(faults.exchange_deadline)?
+                else {
+                    eprintln!("[worker {wid}] no layer-{layer} exchange \
+                               within {:?}: peer loss, awaiting \
+                               re-plan", faults.exchange_deadline);
+                    return Ok(JobEnd::Abandoned);
+                };
+                match env.msg {
+                    Msg::Exchange { epoch, layer: ll, from, data }
+                        if epoch == st.epoch =>
+                    {
+                        let Some(slot) =
+                            slot_of(from, &st.live, &peers)
+                        else {
+                            continue; // not a peer of this epoch: drop
+                        };
+                        if ll as usize == layer {
+                            // count each peer once per round: a
+                            // duplicated frame (FaultNet injects these
+                            // on fault-injecting transports) must not
+                            // release the barrier early
+                            peer_ctx[slot] = data;
+                            if !seen[slot] {
+                                seen[slot] = true;
+                                got += 1;
+                            }
+                        } else if ll as usize == layer + 1 {
+                            next[slot] = Some(data); // raced ahead
+                        }
+                        // anything older is a stale duplicate: drop
+                    }
+                    Msg::Shutdown => return Ok(JobEnd::Shutdown),
+                    Msg::Reconfig { epoch, mode, p, l, live } => {
+                        return Ok(JobEnd::Reconfig { epoch, mode, p, l,
+                                                     live });
+                    }
+                    _ => {} // dead-epoch traffic: drop
+                }
+            }
+            early = next;
+        }
+        // final layer: the peers' last exchange is unused, and the
+        // epoch+layer match drops it wherever it surfaces next — no
+        // drain needed.
+    }
+    // master gone == server over: exit without drama either way
+    if ep.send(master, Msg::FinalPart { epoch: st.epoch,
+                                        from: wid as u32, data: x })
+        .is_err()
+    {
+        return Ok(JobEnd::Shutdown);
+    }
+    Ok(JobEnd::Done)
+}
+
+/// Adopt a reconfiguration if it includes this worker; `None` means
+/// stand down (declared dead or the cluster went single-device) and
+/// wait for the master's Shutdown.
+#[allow(clippy::too_many_arguments)]
+fn apply_reconfig(manifest: &Manifest, cfg: &ServeConfig,
+                  model: &ModelCfg, engine: &mut Engine, batch: usize,
+                  wid: usize, epoch: u32, mode: u8, p: u32, l: u32,
+                  live: Vec<u32>) -> Result<Option<WorkerState>> {
+    let mode = Mode::from_wire(mode, p, l)?;
+    let live: Vec<usize> = live.into_iter().map(|d| d as usize).collect();
+    // an inconsistent frame (live list not matching the mode's P) must
+    // fail closed — stand down, never index out of the plan set
+    if mode.p() <= 1 || live.len() != mode.p() || !live.contains(&wid) {
+        return Ok(None);
+    }
+    WorkerState::build(manifest, cfg, model, engine, batch, wid, epoch,
+                       mode, live)
+        .map(Some)
 }
 
 fn worker_loop(manifest: Arc<Manifest>, cfg: ServeConfig, ep: Endpoint,
@@ -375,104 +737,65 @@ fn worker_loop(manifest: Arc<Manifest>, cfg: ServeConfig, ep: Endpoint,
     }
     let wid = ep.id;
     let batch = manifest.eval_batch;
-    let l = cfg.mode.l();
-    let mode_name = cfg.mode.name();
-    let pl = plans(model.n, p, l, model.causal)?[wid].clone();
-    let duplicated = !matches!(cfg.mode,
-                               Mode::Prism { duplicated: false, .. });
-    let bias = bias_for(&pl, duplicated)?;
-    let exec = manifest.block_name(&cfg.model, mode_name, p, l, wid, batch,
-                                   &cfg.flavor);
     let mut engine = Engine::new(manifest.clone())?;
-    engine.ensure_compiled(&exec)?;
     let ws = WeightSet::load(&manifest, &cfg.weights)?;
-
+    let mut st = WorkerState::build(&manifest, &cfg, &model, &mut engine,
+                                    batch, wid, 0, cfg.mode,
+                                    (0..p).collect())?;
+    // current-epoch layer-0 shares that raced ahead of our Job (a peer
+    // can broadcast its layer-0 share before the master's Job reaches
+    // us, but can get no further without ours); they seed the next
+    // job's first barrier.
+    let mut pre: Vec<(u32, Tensor)> = Vec::new();
     loop {
         let env = ep.recv()?;
-        let (x_p, ctx0) = match env.msg {
-            Msg::Job { x_p, ctx, .. } => (x_p, ctx),
+        // funnel both arrival paths — between jobs and mid-barrier —
+        // into one adoption site so they can never diverge
+        let reconfig = match env.msg {
             Msg::Shutdown => return Ok(()),
-            other => bail!("worker {wid} expected Job, got {other:?}"),
+            Msg::Reconfig { epoch, mode, p: rp, l: rl, live } => {
+                Some((epoch, mode, rp, rl, live))
+            }
+            // (for a 1-layer model the only layer-0 frames reaching the
+            // main loop are the *previous* job's unused final-layer
+            // shares, so stash only when a barrier will consume them)
+            Msg::Exchange { epoch, layer: 0, from, data }
+                if epoch == st.epoch && model.layers > 1 =>
+            {
+                pre.push((from, data));
+                None
+            }
+            Msg::Job { epoch, x_p, ctx, .. } if epoch == st.epoch => {
+                if faults.chaos_exit_worker == Some(wid) {
+                    return Ok(()); // test hook: crash silently mid-batch
+                }
+                match run_job(&mut engine, &ws, &model, &st, &ep,
+                              &faults, x_p, ctx,
+                              std::mem::take(&mut pre), p)? {
+                    JobEnd::Done | JobEnd::Abandoned => None,
+                    JobEnd::Shutdown => return Ok(()),
+                    JobEnd::Reconfig { epoch, mode, p: rp, l: rl,
+                                       live } => {
+                        Some((epoch, mode, rp, rl, live))
+                    }
+                }
+            }
+            _ => None, // stale traffic from a dead epoch: drop
         };
-        if faults.chaos_exit_worker == Some(wid) {
-            return Ok(()); // test hook: crash silently mid-batch
-        }
-        let mut x = x_p;
-        // peer index -> position in ctx vec (global order, self skipped)
-        let peers = pl.peers();
-        let mut peer_ctx: Vec<Tensor> = ctx0;
-        for layer in 0..model.layers {
-            let refs: Vec<&Tensor> = peer_ctx.iter().collect();
-            let ctx = Tensor::concat1(&refs)?;
-            let mut out = engine.run(&exec, &ws, layer, &[&x, &ctx,
-                                                          &bias])?;
-            x = out.remove(0);
-            let share = if mode_name == "prism" {
-                out.remove(0) // Segment Means of the block output
-            } else {
-                x.clone() // Voltage: full partition output
-            };
-            // best-effort exchange: a dead peer just misses its copy
-            // (the master notices the wedge via its gather deadline).
-            let share_msg = Msg::Exchange { layer: layer as u32,
-                                            from: wid as u32,
-                                            data: share };
-            for to in 0..p {
-                if to != wid {
-                    let _ = ep.send(to, share_msg.clone());
-                }
+        if let Some((epoch, mode, rp, rl, live)) = reconfig {
+            pre.clear(); // stashed shares belong to the dead epoch
+            match apply_reconfig(&manifest, &cfg, &model, &mut engine,
+                                 batch, wid, epoch, mode, rp, rl,
+                                 live)?
+            {
+                Some(next) => st = next,
+                // excluded from the re-plan (declared dead, the
+                // cluster went single, or an inconsistent frame):
+                // leave a trace before idling for the Shutdown
+                None => eprintln!("[worker {wid}] standing down at \
+                                   epoch {epoch}: excluded from the \
+                                   re-plan"),
             }
-            if layer + 1 < model.layers {
-                // barrier: collect this layer's share from every peer,
-                // bounding the wait — a dead peer must not wedge the
-                // mesh. A Shutdown here is the master releasing us
-                // after it detected that death; a blown deadline means
-                // we noticed first. Either way: exit cleanly and let
-                // the master's gather deadline drive the recovery.
-                let mut got = 0;
-                while got < peers.len() {
-                    let Some(env) =
-                        ep.recv_timeout(faults.exchange_deadline)?
-                    else {
-                        eprintln!("[worker {wid}] no layer-{layer} \
-                                   exchange within {:?}: peer loss, \
-                                   exiting", faults.exchange_deadline);
-                        return Ok(());
-                    };
-                    match env.msg {
-                        Msg::Exchange { layer: ll, from, data }
-                            if ll as usize == layer =>
-                        {
-                            let slot = peers
-                                .iter()
-                                .position(|&j| j == from as usize)
-                                .context("unknown peer")?;
-                            peer_ctx[slot] = data;
-                            got += 1;
-                        }
-                        Msg::Shutdown => return Ok(()),
-                        other => bail!("worker {wid} unexpected {other:?}"),
-                    }
-                }
-            } else {
-                // last layer: drain peers' final exchange (unused); dead
-                // peers simply never show up, so stop at the deadline.
-                for _ in 0..peers.len() {
-                    match ep.recv_timeout(faults.exchange_deadline)? {
-                        None => break,
-                        Some(env) if matches!(env.msg, Msg::Shutdown) => {
-                            return Ok(())
-                        }
-                        Some(_) => {}
-                    }
-                }
-            }
-        }
-        // master gone == server over: exit without drama either way
-        if ep.send(p, Msg::FinalPart { from: wid as u32, data: x })
-            .is_err()
-        {
-            return Ok(());
         }
     }
 }
@@ -488,6 +811,11 @@ pub struct DecodeRequest {
     /// Buddy-replicate session state so the stream survives
     /// `DecodeScheduler::fail_device` (costs replica wire bytes).
     pub replicate: bool,
+    /// Wire precision of the replica stream (`--replica-wire`): f32
+    /// keeps failover bit-identical, f16 halves `replica_bytes` at the
+    /// cost of a lossy replica (see
+    /// `DecodeSession::enable_replication_with`).
+    pub replica_wire: WireFmt,
     pub respond: Sender<DecodeEvent>,
 }
 
@@ -503,20 +831,29 @@ pub struct DecodeEvent {
     pub done: bool,
 }
 
+/// Scheduler control-plane verbs, applied between ticks.
+enum SchedCtl {
+    Fail(usize),
+    Add(usize),
+}
+
 /// Continuous-batching scheduler for decode streams: every tick advances
 /// each active session by one quantum — up to `prefill_chunk` prompt
 /// tokens for sessions still prefilling (so long prompts cannot starve
 /// running decodes), or one generated token otherwise — and new streams
 /// are admitted mid-flight between ticks. All sessions share one
-/// `decode::DecodeSession` backend configuration (P, L, wire format)
-/// fixed at scheduler start; each stream owns its distributed KV caches
-/// and Segment-Means mirrors.
+/// `decode::DecodeSession` backend (model, wire format); the *geometry*
+/// is elastic: a `ClusterView` over the configured (P, L) re-plans on
+/// `fail_device`/`add_device`, in-flight sessions keep their
+/// admission-time geometry (failing over / re-homing in place, which is
+/// what keeps them bit-identical), and new streams are admitted on the
+/// current epoch's (P', L') with Eq. 16's re-picked L.
 ///
 /// The engine-backed analogue slots in here once per-token AOT shapes
 /// exist (decode/mod.rs); the scheduling policy is backend-independent.
 pub struct DecodeScheduler {
     pub requests: Sender<DecodeRequest>,
-    control: Sender<usize>,
+    control: Sender<SchedCtl>,
     p: usize,
     handle: std::thread::JoinHandle<Result<DecodeStats>>,
 }
@@ -527,7 +864,7 @@ impl DecodeScheduler {
         // validate the (model, P, L) geometry once, up front
         DecodeSession::new(model.clone(), p, l, wire)?;
         let (tx, rx) = channel::<DecodeRequest>();
-        let (ctl_tx, ctl_rx) = channel::<usize>();
+        let (ctl_tx, ctl_rx) = channel::<SchedCtl>();
         let chunk = prefill_chunk.max(1);
         let handle = std::thread::Builder::new()
             .name("prism-decode".into())
@@ -537,18 +874,33 @@ impl DecodeScheduler {
         Ok(DecodeScheduler { requests: tx, control: ctl_tx, p, handle })
     }
 
-    /// Report device `dead` as lost. Applied between ticks: replicated
-    /// streams fail over in place (`DecodeSession::fail_device`, live
-    /// KV migrated via `Msg::CacheSync`) and keep emitting bit-identical
+    /// Report device `dead` as lost. Applied between ticks, and before
+    /// any admission queued behind it: replicated in-flight streams
+    /// fail over in place (`DecodeSession::fail_device`, live KV
+    /// migrated via `Msg::CacheSync`) and keep emitting bit-identical
     /// tokens; unreplicated streams whose state died with the device
     /// abort with a final `done` event. Streams admitted afterwards
-    /// start on the surviving device set.
+    /// start directly on the re-planned (P', L') geometry.
     pub fn fail_device(&self, dead: usize) -> Result<()> {
         if dead >= self.p {
             bail!("device {dead} out of range (P={})", self.p);
         }
         self.control
-            .send(dead)
+            .send(SchedCtl::Fail(dead))
+            .map_err(|_| anyhow!("decode scheduler is gone"))
+    }
+
+    /// The dual of `fail_device`: device `dev` re-joins the mesh.
+    /// In-flight sessions that failed over away from it re-home their
+    /// partitions back (`DecodeSession::add_device` — KV streamed
+    /// through `Msg::CacheSync` + `KvCache::install`, bit-exact), and
+    /// streams admitted afterwards use the restored geometry.
+    pub fn add_device(&self, dev: usize) -> Result<()> {
+        if dev >= self.p {
+            bail!("device {dev} out of range (P={})", self.p);
+        }
+        self.control
+            .send(SchedCtl::Add(dev))
             .map_err(|_| anyhow!("decode scheduler is gone"))
     }
 
@@ -570,6 +922,11 @@ impl DecodeScheduler {
 struct ActiveStream {
     id: u64,
     session: DecodeSession,
+    /// Physical device id hosting each of the session's logical ranks
+    /// (the live set at admission). Later membership changes reach the
+    /// session through this map; a session admitted after a device died
+    /// never included it and is untouched by that device's transitions.
+    devices: Vec<usize>,
     prompt: Vec<i32>,
     prefilled: usize,
     emitted: usize,
@@ -605,27 +962,27 @@ fn decode_tick(s: &mut ActiveStream, chunk: usize) -> Result<bool> {
     Ok(done)
 }
 
-/// Admit one stream, honoring the device failures seen so far: a fresh
-/// session has nothing to lose, so it can start straight on the
-/// surviving device set (no replication required).
-fn admit_stream(model: &Arc<RefGpt>, p: usize, l: usize, wire: WireFmt,
-                dead: &[usize], req: DecodeRequest,
-                active: &mut VecDeque<ActiveStream>) {
-    let DecodeRequest { id, prompt, steps, replicate, respond } = req;
-    let built = (|| -> Result<DecodeSession> {
-        let mut s = DecodeSession::new(model.clone(), p, l, wire)?;
+/// Admit one stream on the *current* membership: a fresh session has no
+/// failover history to replay, so it starts directly on the re-planned
+/// (P', L') geometry — Eq. 16's re-picked L over the live devices.
+fn admit_stream(model: &Arc<RefGpt>, wire: WireFmt, view: &ClusterView,
+                req: DecodeRequest, active: &mut VecDeque<ActiveStream>) {
+    let DecodeRequest { id, prompt, steps, replicate, replica_wire,
+                        respond } = req;
+    let built = (|| -> Result<(DecodeSession, Vec<usize>)> {
+        let (p_eff, l_eff) = view.geometry()?;
+        let mut s = DecodeSession::new(model.clone(), p_eff, l_eff,
+                                       wire)?;
         if replicate {
-            s.enable_replication()?;
+            s.enable_replication_with(replica_wire)?;
         }
-        for &d in dead {
-            s.fail_device(d)?;
-        }
-        Ok(s)
+        Ok((s, view.live_devices()))
     })();
     match built {
-        Ok(session) => active.push_back(ActiveStream {
+        Ok((session, devices)) => active.push_back(ActiveStream {
             id,
             session,
+            devices,
             prompt,
             prefilled: 0,
             emitted: 0,
@@ -640,44 +997,31 @@ fn admit_stream(model: &Arc<RefGpt>, p: usize, l: usize, wire: WireFmt,
     }
 }
 
-fn decode_loop(model: Arc<RefGpt>, p: usize, l: usize, wire: WireFmt,
-               chunk: usize, rx: Receiver<DecodeRequest>,
-               ctl: Receiver<usize>) -> Result<DecodeStats> {
-    let mut active: VecDeque<ActiveStream> = VecDeque::new();
-    let mut total = DecodeStats::default();
-    let mut open = true;
-    let mut dead: Vec<usize> = Vec::new();
-    loop {
-        if open && active.is_empty() {
-            // idle: block for the next stream
-            match rx.recv() {
-                Ok(r) => admit_stream(&model, p, l, wire, &dead, r,
-                                      &mut active),
-                Err(_) => open = false,
+/// Apply one membership verb to the view and every in-flight session.
+/// Sessions map physical device ids to their admission-time logical
+/// ranks via `ActiveStream::devices`.
+fn apply_ctl(c: SchedCtl, view: &mut ClusterView,
+             active: &mut VecDeque<ActiveStream>,
+             total: &mut DecodeStats) {
+    match c {
+        SchedCtl::Fail(d) => {
+            if !view.is_alive(d) {
+                return; // unknown or already dead
             }
-        }
-        while open {
-            // running: admit whatever queued up since the last tick
-            match rx.try_recv() {
-                Ok(r) => admit_stream(&model, p, l, wire, &dead, r,
-                                      &mut active),
-                Err(TryRecvError::Empty) => break,
-                Err(TryRecvError::Disconnected) => open = false,
-            }
-        }
-        // apply device failures reported since the last tick
-        while let Ok(d) = ctl.try_recv() {
-            if d >= p || dead.contains(&d) {
-                continue;
-            }
-            dead.push(d);
+            let _ = view.fail_device(d);
             let mut still = VecDeque::with_capacity(active.len());
             while let Some(mut s) = active.pop_front() {
-                if !s.session.device_alive(d) {
+                let Some(logical) =
+                    s.devices.iter().position(|&pd| pd == d)
+                else {
+                    still.push_back(s); // admitted after it died
+                    continue;
+                };
+                if !s.session.device_alive(logical) {
                     still.push_back(s); // already failed over past it
                     continue;
                 }
-                match s.session.fail_device(d) {
+                match s.session.fail_device(logical) {
                     Ok(_) => still.push_back(s),
                     Err(_) => {
                         // state died with the device: abort visibly
@@ -691,7 +1035,78 @@ fn decode_loop(model: Arc<RefGpt>, p: usize, l: usize, wire: WireFmt,
                     }
                 }
             }
-            active = still;
+            *active = still;
+        }
+        SchedCtl::Add(d) => {
+            if view.is_alive(d) || view.add_device(d).is_err() {
+                return; // unknown or already live
+            }
+            let mut still = VecDeque::with_capacity(active.len());
+            while let Some(mut s) = active.pop_front() {
+                let needs = s
+                    .devices
+                    .iter()
+                    .position(|&pd| pd == d)
+                    .filter(|&logical| !s.session.device_alive(logical));
+                let Some(logical) = needs else {
+                    still.push_back(s); // never included it, or live
+                    continue;
+                };
+                match s.session.add_device(logical) {
+                    Ok(_) => still.push_back(s),
+                    Err(_) => {
+                        // a failed re-home leaves the session's
+                        // membership state inconsistent with its
+                        // migration accounting: abort visibly, exactly
+                        // like a failed fail-over
+                        let _ = s.respond.send(DecodeEvent {
+                            id: s.id,
+                            index: s.emitted,
+                            token: -1,
+                            done: true,
+                        });
+                        total.merge(&s.session.stats());
+                    }
+                }
+            }
+            *active = still;
+        }
+    }
+}
+
+fn decode_loop(model: Arc<RefGpt>, p: usize, l: usize, wire: WireFmt,
+               chunk: usize, rx: Receiver<DecodeRequest>,
+               ctl: Receiver<SchedCtl>) -> Result<DecodeStats> {
+    let mut view = ClusterView::new(
+        Mode::Prism { p, l, duplicated: true }, model.cfg.n, true)?;
+    let mut active: VecDeque<ActiveStream> = VecDeque::new();
+    let mut pending: VecDeque<DecodeRequest> = VecDeque::new();
+    let mut total = DecodeStats::default();
+    let mut open = true;
+    loop {
+        if open && active.is_empty() && pending.is_empty() {
+            // idle: block for the next stream
+            match rx.recv() {
+                Ok(r) => pending.push_back(r),
+                Err(_) => open = false,
+            }
+        }
+        while open {
+            // collect whatever queued up since the last tick
+            match rx.try_recv() {
+                Ok(r) => pending.push_back(r),
+                Err(TryRecvError::Empty) => break,
+                Err(TryRecvError::Disconnected) => open = false,
+            }
+        }
+        // membership changes land before admissions: a fail/add sent
+        // before a request is always applied before that stream's
+        // session is built, so its admission geometry is deterministic.
+        while let Ok(c) = ctl.try_recv() {
+            apply_ctl(c, &mut view, &mut active, &mut total);
+        }
+        while let Some(r) = pending.pop_front() {
+            admit_stream(&model, wire, &view, r, &mut active);
         }
         if active.is_empty() {
             if !open {
@@ -728,13 +1143,23 @@ pub fn cmd_decode(args: &Args) -> Result<()> {
     let sessions = args.usize_or("sessions", 4)?;
     let wire = WireFmt::parse(&args.str_or("wire", "f32"))?;
     let replicate = args.bool("replicate");
+    // replication cost knob: f16 replicas halve replica_bytes (lossy on
+    // failover; f32 keeps failover bit-identical)
+    let replica_wire = WireFmt::parse(&args.str_or("replica-wire",
+                                                   "f32"))?;
     // chaos demo: report this device dead once the stream pool has
-    // emitted --fail-after tokens; replicated streams fail over.
+    // emitted --fail-after tokens; replicated streams fail over. With
+    // --rejoin-after N the device re-joins N tokens later and later
+    // streams use the restored geometry.
     let fail_device = match args.flags.get("fail-device") {
         Some(_) => Some(args.usize_or("fail-device", 0)?),
         None => None,
     };
     let fail_after = args.usize_or("fail-after", 8)?;
+    let rejoin_after = match args.flags.get("rejoin-after") {
+        Some(_) => Some(args.usize_or("rejoin-after", 16)?),
+        None => None,
+    };
     let cfg = RefCfg {
         vocab: 64,
         n: args.usize_or("n", 128)?,
@@ -745,7 +1170,8 @@ pub fn cmd_decode(args: &Args) -> Result<()> {
     };
     let model = Arc::new(RefGpt::tiny(17, cfg)?);
     println!("decode: {sessions} streams, N={} d={} layers={} P={p} L={l} \
-              wire={wire:?} replicate={replicate}",
+              wire={wire:?} replicate={replicate} \
+              replica-wire={replica_wire:?}",
              cfg.n, cfg.d, cfg.layers);
     let sched = DecodeScheduler::start(model, p, l, wire, 4)?;
     let (tx, rx) = channel::<DecodeEvent>();
@@ -755,7 +1181,8 @@ pub fn cmd_decode(args: &Args) -> Result<()> {
         let prompt: Vec<i32> =
             (0..8).map(|_| rng.range(1, cfg.vocab) as i32).collect();
         sched.requests.send(DecodeRequest {
-            id, prompt, steps, replicate, respond: tx.clone(),
+            id, prompt, steps, replicate, replica_wire,
+            respond: tx.clone(),
         })?;
     }
     // every live sender now belongs to the scheduler: if its thread dies,
@@ -765,6 +1192,7 @@ pub fn cmd_decode(args: &Args) -> Result<()> {
     let mut tokens = 0usize;
     let mut aborted = 0usize;
     let mut failed = false;
+    let mut rejoined = false;
     while done < sessions {
         let ev = rx.recv()?;
         if ev.token >= 0 {
@@ -782,6 +1210,14 @@ pub fn cmd_decode(args: &Args) -> Result<()> {
                 println!("[decode] device {dead} reported dead after \
                           {tokens} tokens");
                 sched.fail_device(dead)?;
+            }
+            if let Some(rejoin) = rejoin_after {
+                if failed && !rejoined && tokens >= fail_after + rejoin {
+                    rejoined = true;
+                    println!("[decode] device {dead} re-joined after \
+                              {tokens} tokens");
+                    sched.add_device(dead)?;
+                }
             }
         }
     }
@@ -817,13 +1253,9 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
         _ => "text8p",
     });
     let cfgm = manifest.model(&model)?.clone();
-    let p = args.usize_or("p", 2)?;
-    let l = args.usize_or("l", if model == "gpt2" { 16 } else { 6 })?;
-    let mode = match args.str_or("mode", "prism").as_str() {
-        "single" => Mode::Single,
-        "voltage" => Mode::Voltage { p },
-        _ => Mode::Prism { p, l, duplicated: true },
-    };
+    // the shared strategy parser (also behind `prism eval|latency`)
+    let default_l = if model == "gpt2" { 16 } else { 6 };
+    let mode = Mode::parse(args, cfgm.n, default_l)?;
     let n_requests = args.usize_or("requests", 64)?;
     let rate = args.f64_or("rate", 50.0)?; // requests/sec
     let weights = match model.as_str() {
@@ -931,6 +1363,7 @@ mod tests {
                 prompt: prompt.clone(),
                 steps: *steps,
                 replicate: false,
+                replica_wire: WireFmt::F32,
                 respond: tx.clone(),
             })
             .unwrap();
@@ -977,6 +1410,7 @@ mod tests {
             prompt: vec![1, 2, 3],
             steps: 10,
             replicate: false,
+            replica_wire: WireFmt::F32,
             respond: tx.clone(),
         })
         .unwrap();
@@ -989,6 +1423,7 @@ mod tests {
             prompt: vec![4; 30],
             steps: 10,
             replicate: false,
+            replica_wire: WireFmt::F32,
             respond: tx.clone(),
         })
         .unwrap();
@@ -1025,17 +1460,16 @@ mod tests {
     }
 
     /// Worker loss through the scheduler (extends
-    /// `scheduler_admits_midflight_and_reports_aborts`): streams on the
-    /// surviving device finish bit-identical to standalone sessions,
-    /// and streams that cannot survive a loss report as aborts. The
-    /// ordering is made deterministic by exploiting the scheduler's
-    /// admit -> apply-failures -> tick loop: a `fail_device` sent
-    /// before a request is always applied before that stream's first
-    /// tick (there is deliberately no backpressure on the event
-    /// channel, so "kill mid-emission" timing lives in the
-    /// single-threaded chaos suite instead — `tests/chaos.rs`).
+    /// `scheduler_admits_midflight_and_reports_aborts`): streams
+    /// admitted after the loss start directly on the re-planned
+    /// geometry — P'=1 with Eq. 16's re-picked L' = L·P/P' = 8 — and
+    /// finish bit-identical to a standalone session on that geometry.
+    /// The ordering is deterministic by the scheduler's contract: a
+    /// membership verb sent before a request is applied before that
+    /// stream is admitted ("kill mid-emission" timing lives in the
+    /// single-threaded suites — `tests/chaos.rs`, `tests/elastic.rs`).
     #[test]
-    fn scheduler_failover_finishes_survivors_bit_identical() {
+    fn scheduler_failover_admits_on_replanned_geometry() {
         let m = tiny_model();
         let (p, l, wire) = (2, 4, WireFmt::F32);
         let sched =
@@ -1053,6 +1487,7 @@ mod tests {
                 prompt,
                 steps,
                 replicate,
+                replica_wire: WireFmt::F32,
                 respond: tx.clone(),
             })
             .unwrap();
@@ -1072,6 +1507,7 @@ mod tests {
             prompt: vec![6, 6],
             steps,
             replicate: true,
+            replica_wire: WireFmt::F32,
             respond: tx.clone(),
         })
         .unwrap();
@@ -1091,13 +1527,12 @@ mod tests {
             events.iter().filter(|e| e.id == id && e.token >= 0)
                 .map(|e| e.token).collect()
         };
-        // both survivor streams finished on device 1, bit-identical to
-        // standalone sessions (failover relocates, never recomputes)
+        // both streams ran on the re-planned single-device geometry
+        // (P'=1, L'=8), bit-identical to standalone sessions on it
         for (id, prompt) in [(0u64, vec![3i32, 7, 1, 12, 5]),
                              (1, vec![2, 2, 9])] {
             let mut reference =
-                DecodeSession::new(m.clone(), p, l, wire).unwrap();
-            reference.fail_device(0).unwrap();
+                DecodeSession::new(m.clone(), 1, 8, wire).unwrap();
             reference.prefill(&prompt).unwrap();
             let expect: Vec<i32> = (0..steps)
                 .map(|_| reference.generate_next().unwrap())
@@ -1113,5 +1548,74 @@ mod tests {
         // single-device operation put zero bytes on the wire
         assert_eq!(stats.delta_bytes, 0);
         assert_eq!(stats.generated, 2 * steps);
+    }
+
+    /// `add_device` is the dual of `fail_device`: after a loss the next
+    /// stream uses the shrunk geometry, and after the re-join the next
+    /// stream uses the restored full-strength geometry.
+    #[test]
+    fn scheduler_add_device_restores_admission_geometry() {
+        let m = tiny_model();
+        let (p, l, wire) = (2, 4, WireFmt::F32);
+        let sched =
+            DecodeScheduler::start(m.clone(), p, l, wire, 4).unwrap();
+        let (tx, rx) = channel::<DecodeEvent>();
+        let steps = 6;
+        let prompt = vec![3i32, 9, 1];
+        sched.fail_device(1).unwrap();
+        sched.requests.send(DecodeRequest {
+            id: 0,
+            prompt: prompt.clone(),
+            steps,
+            replicate: false,
+            replica_wire: WireFmt::F32,
+            respond: tx.clone(),
+        })
+        .unwrap();
+        let mut events: Vec<DecodeEvent> = Vec::new();
+        while events.iter().filter(|e| e.done).count() < 1 {
+            events.push(
+                rx.recv_timeout(Duration::from_secs(60)).unwrap());
+        }
+        // restore device 1: the next admitted stream is full-strength
+        sched.add_device(1).unwrap();
+        sched.requests.send(DecodeRequest {
+            id: 1,
+            prompt: prompt.clone(),
+            steps,
+            replicate: false,
+            replica_wire: WireFmt::F32,
+            respond: tx.clone(),
+        })
+        .unwrap();
+        drop(tx);
+        while let Ok(ev) = rx.recv_timeout(Duration::from_secs(60)) {
+            let last = ev.done && ev.id == 1;
+            events.push(ev);
+            if last {
+                break;
+            }
+        }
+        sched.shutdown().unwrap();
+        let stream = |id: u64| -> Vec<i32> {
+            events.iter().filter(|e| e.id == id && e.token >= 0)
+                .map(|e| e.token).collect()
+        };
+        // stream 0: P'=1 geometry with Eq. 16's L'=8
+        let mut shrunk =
+            DecodeSession::new(m.clone(), 1, 8, wire).unwrap();
+        shrunk.prefill(&prompt).unwrap();
+        let expect0: Vec<i32> = (0..steps)
+            .map(|_| shrunk.generate_next().unwrap())
+            .collect();
+        assert_eq!(stream(0), expect0, "shrunk-geometry stream diverged");
+        // stream 1: the restored (P=2, L=4) geometry
+        let mut full = DecodeSession::new(m.clone(), p, l, wire).unwrap();
+        full.prefill(&prompt).unwrap();
+        let expect1: Vec<i32> = (0..steps)
+            .map(|_| full.generate_next().unwrap())
+            .collect();
+        assert_eq!(stream(1), expect1,
+                   "restored-geometry stream diverged");
     }
 }

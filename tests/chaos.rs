@@ -26,24 +26,13 @@ use prism::net::{FaultCfg, FaultNet, LinkModel, PeerHealth, SimEndpoint,
 use prism::runtime::Tensor;
 use prism::util::quant::WireFmt;
 
-const DEFAULT_SEEDS: [u64; 10] = [11, 23, 37, 41, 53, 67, 79, 97, 101,
-                                  113];
+mod common;
+use common::seeds;
 
 /// Heartbeat policy shared by the chaos driver and the detection-latency
 /// assertion (DESIGN.md: detection <= interval * (misses + 1) + 1 tick).
 const HB_INTERVAL_MS: u64 = 50;
 const HB_MISSES_ALLOWED: u32 = 3;
-
-fn seeds() -> Vec<u64> {
-    match std::env::var("CHAOS_SEEDS") {
-        Ok(s) => s
-            .split(',')
-            .filter(|t| !t.trim().is_empty())
-            .map(|t| t.trim().parse().expect("CHAOS_SEEDS wants u64s"))
-            .collect(),
-        Err(_) => DEFAULT_SEEDS.to_vec(),
-    }
-}
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 enum Fault {
@@ -109,6 +98,7 @@ fn run_request_response(seed: u64, fault: Fault)
                         if let Msg::Job { request, .. } = env.msg {
                             let from = w.local_id() as u32;
                             let _ = w.send(2, Msg::Exchange {
+                                epoch: 0,
                                 layer: request as u32,
                                 from,
                                 data: Tensor::from_f32(vec![1],
@@ -132,6 +122,7 @@ fn run_request_response(seed: u64, fault: Fault)
             target = 1 - target;
         }
         let job = || Msg::Job {
+            epoch: 0,
             request: seq,
             x_p: Tensor::from_f32(vec![2], vec![0.5, -0.5]).unwrap(),
             ctx: vec![],

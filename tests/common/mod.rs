@@ -1,0 +1,19 @@
+//! Shared helpers for the deterministic fault/membership suites.
+
+/// The fixed seed matrix both suites pin; mirrors the fan-out in
+/// `.github/workflows/ci.yml` and the Makefile's `CHAOS_SEEDS`.
+pub const DEFAULT_SEEDS: [u64; 10] = [11, 23, 37, 41, 53, 67, 79, 97,
+                                      101, 113];
+
+/// Seeds to run: `CHAOS_SEEDS` (comma-separated) overrides the built-in
+/// matrix — that is how each CI matrix leg pins a single seed.
+pub fn seeds() -> Vec<u64> {
+    match std::env::var("CHAOS_SEEDS") {
+        Ok(s) => s
+            .split(',')
+            .filter(|t| !t.trim().is_empty())
+            .map(|t| t.trim().parse().expect("CHAOS_SEEDS wants u64s"))
+            .collect(),
+        Err(_) => DEFAULT_SEEDS.to_vec(),
+    }
+}

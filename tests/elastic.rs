@@ -1,0 +1,283 @@
+//! Elastic-membership suite: fail -> re-partition -> re-join, per seed.
+//!
+//! The chaos suite (`tests/chaos.rs`) pins fault *detection* and
+//! failover; this suite pins the membership machinery that PR 3 builds
+//! on top of it (`coordinator::cluster::ClusterView`):
+//!
+//! * killing 1 of P=4 devices keeps the cluster in a P'=3 PRISM mode —
+//!   not `Mode::Single` — with Eq. 16's re-picked L' = L·P/P';
+//! * replicated in-flight decode streams stay bit-identical to full
+//!   recompute through the failure AND the later re-join;
+//! * a subsequent `add_device` restores P=4 and the next admitted
+//!   stream uses the restored geometry.
+//!
+//! Everything is deterministic and sleep-free; `CHAOS_SEEDS`
+//! (comma-separated) overrides the built-in seed matrix, which is what
+//! `.github/workflows/ci.yml` fans out over and `make elastic` runs in
+//! full.
+
+use std::sync::Arc;
+use std::sync::mpsc::channel;
+use std::time::{Duration, Instant};
+
+use prism::coordinator::cluster::ClusterView;
+use prism::coordinator::Mode;
+use prism::decode::{DecodeSession, RefCfg, RefGpt};
+use prism::server::{DecodeEvent, DecodeRequest, DecodeScheduler};
+use prism::util::quant::WireFmt;
+use prism::util::rng::Rng;
+
+mod common;
+use common::seeds;
+
+fn model() -> Arc<RefGpt> {
+    Arc::new(RefGpt::tiny(11, RefCfg {
+        vocab: 20,
+        n: 64,
+        d: 16,
+        heads: 2,
+        layers: 2,
+        ffn: 32,
+    })
+    .unwrap())
+}
+
+fn seeded_prompt(rng: &mut Rng, vocab: usize) -> Vec<i32> {
+    let len = rng.range(4, 9);
+    (0..len).map(|_| rng.range(1, vocab) as i32).collect()
+}
+
+/// The tentpole acceptance at the planning layer: killing 1 of P=4
+/// re-plans to a P'=3 PRISM mode (never `Single`) with Eq. 16's L', and
+/// the re-join restores the original geometry from the plan cache.
+#[test]
+fn cluster_view_keeps_parallelism_at_p3() {
+    let base = Mode::Prism { p: 4, l: 4, duplicated: true };
+    let mut view = ClusterView::new(base, 64, true).unwrap();
+    view.fail_device(1).unwrap();
+    let shrunk = view.current().unwrap();
+    assert_eq!(shrunk.mode, Mode::Prism { p: 3, l: 5, duplicated: true },
+               "1-of-4 loss must keep a P'=3 PRISM mode, not Single");
+    assert_eq!(shrunk.devices, vec![0, 2, 3]);
+    // Eq. 16 identity: CR = 64/(4·4) = 4, L' = floor(64/(4·3)) = 5
+    assert_eq!(view.geometry().unwrap(), (3, 5));
+    view.add_device(1).unwrap();
+    let restored = view.current().unwrap();
+    assert_eq!(restored.mode, base);
+    assert_eq!(restored.devices, vec![0, 1, 2, 3]);
+    assert_eq!(restored.epoch, 2);
+}
+
+/// Session-level fail -> re-join across the seed matrix: the stream is
+/// bit-identical to uninterrupted full recompute throughout, state
+/// migrates through the CacheSync codec in both directions, and a
+/// second run replays the transcript exactly.
+#[test]
+fn session_fail_then_rejoin_bit_identical_over_seeds() {
+    let t0 = Instant::now();
+    let m = model();
+    let steps = 18;
+    for &seed in &seeds() {
+        let mut rng = Rng::new(seed);
+        let prompt = seeded_prompt(&mut rng, m.cfg.vocab);
+        let kill_at = 2 + (seed % 5) as usize;
+        let rejoin_at = kill_at + 4 + (seed % 4) as usize;
+        let victim = (seed % 4) as usize;
+        let (reference, _) = m
+            .greedy_decode_full(&prompt, steps, 4, 4, WireFmt::F32)
+            .unwrap();
+        let run = || {
+            let mut sess =
+                DecodeSession::new(m.clone(), 4, 4, WireFmt::F32)
+                    .unwrap();
+            sess.enable_replication().unwrap();
+            sess.prefill(&prompt).unwrap();
+            let mut got = Vec::with_capacity(steps);
+            let mut migrated_at_rejoin = 0usize;
+            for step in 0..steps {
+                if step == kill_at {
+                    sess.fail_device(victim).unwrap();
+                    assert_eq!(sess.live_devices(), 3,
+                               "seed {seed}: failover lost the mesh");
+                }
+                if step == rejoin_at {
+                    sess.add_device(victim).unwrap();
+                    assert_eq!(sess.live_devices(), 4);
+                    assert!(sess.device_alive(victim));
+                    // every partition is back on its own device
+                    assert_eq!(sess.hosts(), &[0, 1, 2, 3][..],
+                               "seed {seed}: re-join did not re-home");
+                    migrated_at_rejoin = sess.stats().migrated_bytes;
+                }
+                got.push(sess.generate_next().unwrap());
+            }
+            (got, migrated_at_rejoin, sess.stats())
+        };
+        let (got, migrated_at_rejoin, stats) = run();
+        assert_eq!(got, reference, "seed {seed}: stream diverged");
+        // bytes cross the codec iff the victim's 16-token span had
+        // absorbed rows by re-join time (empty partitions migrate for
+        // free in both directions)
+        let victim_rows =
+            prompt.len() + rejoin_at > victim * 16;
+        assert_eq!(migrated_at_rejoin > 0, victim_rows,
+                   "seed {seed}: migration accounting off");
+        // determinism: a second run replays bit-for-bit, stats included
+        let (again, migrated2, stats2) = run();
+        assert_eq!(got, again, "seed {seed}: not deterministic");
+        assert_eq!(migrated_at_rejoin, migrated2);
+        assert_eq!(stats, stats2);
+    }
+    assert!(t0.elapsed() < Duration::from_secs(60),
+            "elastic suite must stay fast: {:?}", t0.elapsed());
+}
+
+/// Scheduler-level acceptance across the seed matrix: an in-flight
+/// replicated stream survives a 1-of-4 loss bit-identically; the next
+/// admitted stream runs on the re-planned P'=3 geometry with Eq. 16's
+/// L'=5 (not single-device); and after `add_device` the next stream
+/// uses the restored P=4 geometry.
+#[test]
+fn scheduler_repartitions_then_restores_over_seeds() {
+    let t0 = Instant::now();
+    let m = model();
+    let (steps_a, steps_b, steps_c) = (14, 8, 8);
+    for &seed in &seeds() {
+        let mut rng = Rng::new(seed ^ 0x5EED);
+        let prompt_a = seeded_prompt(&mut rng, m.cfg.vocab);
+        let prompt_b = seeded_prompt(&mut rng, m.cfg.vocab);
+        let prompt_c = seeded_prompt(&mut rng, m.cfg.vocab);
+        let sched =
+            DecodeScheduler::start(m.clone(), 4, 4, WireFmt::F32, 2)
+                .unwrap();
+        let (tx, rx) = channel::<DecodeEvent>();
+        sched.requests.send(DecodeRequest {
+            id: 0,
+            prompt: prompt_a.clone(),
+            steps: steps_a,
+            replicate: true,
+            replica_wire: WireFmt::F32,
+            respond: tx.clone(),
+        })
+        .unwrap();
+        // let stream A get moving, then kill device 1 under it
+        let mut events: Vec<DecodeEvent> = Vec::new();
+        while events.len() < 2 {
+            events.push(
+                rx.recv_timeout(Duration::from_secs(60)).unwrap());
+        }
+        sched.fail_device(1).unwrap();
+        // admitted after the loss: must run on (P'=3, L'=5)
+        sched.requests.send(DecodeRequest {
+            id: 1,
+            prompt: prompt_b.clone(),
+            steps: steps_b,
+            replicate: false,
+            replica_wire: WireFmt::F32,
+            respond: tx.clone(),
+        })
+        .unwrap();
+        let done = |evs: &[DecodeEvent], id: u64| {
+            evs.iter().any(|e| e.id == id && e.done)
+        };
+        while !(done(&events, 0) && done(&events, 1)) {
+            events.push(
+                rx.recv_timeout(Duration::from_secs(60)).unwrap());
+        }
+        // the device returns: the next admitted stream is full-strength
+        sched.add_device(1).unwrap();
+        sched.requests.send(DecodeRequest {
+            id: 2,
+            prompt: prompt_c.clone(),
+            steps: steps_c,
+            replicate: false,
+            replica_wire: WireFmt::F32,
+            respond: tx.clone(),
+        })
+        .unwrap();
+        drop(tx);
+        while !done(&events, 2) {
+            events.push(
+                rx.recv_timeout(Duration::from_secs(60)).unwrap());
+        }
+        let stats = sched.shutdown().unwrap();
+        let stream = |id: u64| -> Vec<i32> {
+            events.iter().filter(|e| e.id == id && e.token >= 0)
+                .map(|e| e.token).collect()
+        };
+        // A: admitted at P=4, killed mid-flight, still bit-identical
+        // to uninterrupted full recompute on the P=4 geometry
+        let (full_a, _) = m
+            .greedy_decode_full(&prompt_a, steps_a, 4, 4, WireFmt::F32)
+            .unwrap();
+        assert_eq!(stream(0), full_a,
+                   "seed {seed}: in-flight stream diverged");
+        // B: the re-planned P'=3 PRISM geometry with Eq. 16's L'=5
+        let mut ref_b =
+            DecodeSession::new(m.clone(), 3, 5, WireFmt::F32).unwrap();
+        ref_b.prefill(&prompt_b).unwrap();
+        let expect_b: Vec<i32> = (0..steps_b)
+            .map(|_| ref_b.generate_next().unwrap())
+            .collect();
+        assert_eq!(stream(1), expect_b,
+                   "seed {seed}: post-failure admission is not on the \
+                    re-planned P'=3 geometry");
+        // C: the restored P=4 geometry
+        let (full_c, _) = m
+            .greedy_decode_full(&prompt_c, steps_c, 4, 4, WireFmt::F32)
+            .unwrap();
+        assert_eq!(stream(2), full_c,
+                   "seed {seed}: post-re-join admission is not on the \
+                    restored P=4 geometry");
+        assert_eq!(stats.generated, steps_a + steps_b + steps_c,
+                   "seed {seed}: a stream aborted");
+        // distributed geometries put real delta bytes on the wire
+        assert!(stats.delta_bytes > 0);
+    }
+    assert!(t0.elapsed() < Duration::from_secs(60),
+            "elastic suite must stay fast: {:?}", t0.elapsed());
+}
+
+/// The replication cost knob rides the same membership machinery: f16
+/// replicas halve the replica bytes through the scheduler too, and the
+/// streams still complete after a failover.
+#[test]
+fn scheduler_f16_replicas_survive_failover() {
+    let m = model();
+    let sched =
+        DecodeScheduler::start(m.clone(), 2, 4, WireFmt::F32, 2)
+            .unwrap();
+    let (tx, rx) = channel::<DecodeEvent>();
+    let steps = 10;
+    sched.requests.send(DecodeRequest {
+        id: 0,
+        prompt: vec![3, 7, 1, 12],
+        steps,
+        replicate: true,
+        replica_wire: WireFmt::F16,
+        respond: tx.clone(),
+    })
+    .unwrap();
+    // let it get moving, then kill device 0 under it
+    let first = rx.recv_timeout(Duration::from_secs(60)).unwrap();
+    assert!(first.token >= 0);
+    sched.fail_device(0).unwrap();
+    drop(tx);
+    let mut tokens = 1;
+    let mut done = first.done;
+    while !done {
+        let ev = rx.recv_timeout(Duration::from_secs(60)).unwrap();
+        assert!(ev.token >= 0, "f16-replicated stream aborted");
+        tokens += 1;
+        done = ev.done;
+    }
+    assert_eq!(tokens, steps);
+    let stats = sched.shutdown().unwrap();
+    // f16 replica rows cost half of f32 while both devices were live
+    // (the deterministic failover mechanics are pinned at the session
+    // layer — the scheduler race between the kill and stream completion
+    // is intentional here: either way the stream must finish cleanly)
+    assert!(stats.replica_bytes > 0);
+    let row_f16 = m.cfg.d * 2;
+    assert_eq!(stats.replica_bytes % row_f16, 0);
+}

@@ -329,6 +329,90 @@ fn server_degrades_to_single_device_on_worker_loss() {
     server.shutdown().unwrap();
 }
 
+/// Elastic re-partitioning in the threaded server: killing 1 of P=3
+/// workers mid-batch no longer collapses to `Mode::Single` — the master
+/// probes the silent set, declares only the dead worker lost, re-plans
+/// over the P'=2 survivors (Eq. 16's L'=4 has no artifact in the sparse
+/// AOT grid, so the base L=3 fallback is used), reconfigures them via
+/// `Msg::Reconfig`, and re-issues the wedged batch on the new epoch.
+/// Every request is answered with the P'=2 PRISM output, first batch
+/// included.
+#[test]
+fn server_repartitions_to_p2_on_one_of_three_worker_loss() {
+    let Some(m) = manifest() else { return };
+    use prism::server::{FaultPolicy, Request, Response, ServeConfig,
+                        Server};
+    use std::sync::mpsc::channel;
+    use std::time::{Duration, Instant};
+
+    let ds = Dataset::load(&m.root, "synth10").unwrap();
+    let ws = WeightSet::load(&m, "vit_synth10").unwrap();
+    let batch = m.eval_batch;
+    let server = Server::start_with(
+        m.clone(),
+        ServeConfig {
+            model: "vit".into(),
+            task: "synth10".into(),
+            weights: "vit_synth10".into(),
+            mode: Mode::Prism { p: 3, l: 3, duplicated: true },
+            flavor: "xla".into(),
+            flush_after: Duration::from_millis(2),
+            pace: None,
+        },
+        FaultPolicy {
+            gather_deadline: Duration::from_secs(2),
+            exchange_deadline: Duration::from_secs(2),
+            chaos_exit_worker: Some(2), // device 2 crashes on first job
+        },
+    )
+    .unwrap();
+    let (tx, rx) = channel::<Response>();
+    // two rounds: the first hits the crash mid-batch and is re-issued
+    // on the re-planned epoch, the second runs on it directly
+    for round in 0..2u64 {
+        for i in 0..batch {
+            server
+                .requests
+                .send(Request {
+                    id: round * batch as u64 + i as u64,
+                    raw: ds.x.slice0(i, i + 1).unwrap(),
+                    enqueued: Instant::now(),
+                    respond: tx.clone(),
+                })
+                .unwrap();
+        }
+        let mut got: Vec<Option<Tensor>> = vec![None; batch];
+        for _ in 0..batch {
+            let r = rx.recv_timeout(Duration::from_secs(120)).unwrap();
+            got[(r.id - round * batch as u64) as usize] = Some(r.logits);
+        }
+        // the survivors keep serving PRISM at P'=2 (base L=3 fallback)
+        let mut runner = Runner::new(m.clone(), "xla").unwrap();
+        let raw = ds.x.slice0(0, batch).unwrap();
+        let (expect, _) = runner
+            .forward("vit", &ws, "synth10", &raw,
+                     Mode::Prism { p: 2, l: 3, duplicated: true })
+            .unwrap();
+        let ef = expect.f32s().unwrap();
+        let classes = *expect.shape.last().unwrap();
+        for (i, logits) in got.into_iter().enumerate() {
+            let l = logits.expect("request dropped during re-plan");
+            let row = &ef[i * classes..(i + 1) * classes];
+            let diff = l
+                .f32s()
+                .unwrap()
+                .iter()
+                .zip(row)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0f32, f32::max);
+            assert!(diff < 1e-4,
+                    "round {round} row {i}: elastic vs P'=2 runner \
+                     {diff}");
+        }
+    }
+    server.shutdown().unwrap();
+}
+
 /// TCP remote worker returns exactly what a local engine computes.
 #[test]
 fn tcp_worker_matches_local() {
