@@ -9,8 +9,8 @@ PYTHON ?= python3
 # .github/workflows/ci.yml.
 CHAOS_SEEDS ?= 11,23,37,41,53,67,79,97,101,113
 
-.PHONY: all build test verify chaos elastic bench-decode artifacts \
-        lint clean
+.PHONY: all build test verify chaos elastic chaos-mesh mesh-smoke \
+        bench-decode bench-mesh artifacts lint fmt clean
 
 all: build
 
@@ -33,9 +33,27 @@ chaos:
 elastic:
 	CHAOS_SEEDS=$(CHAOS_SEEDS) $(CARGO) test --test elastic
 
+# The chaos suite over the worker-to-worker mesh transport (FaultNet
+# wraps every per-peer edge; `tests/common::mesh_transport`). The
+# elastic suite's mesh tests run unconditionally under `make elastic`.
+chaos-mesh:
+	PRISM_TRANSPORT=mesh CHAOS_SEEDS=$(CHAOS_SEEDS) \
+	    $(CARGO) test --test chaos
+
+# Multi-process elastic serving smoke: 3 `prism worker --listen`
+# processes + `prism serve --workers`, one worker killed mid-run, run
+# must complete on P'=2 with exit 0. Skips cleanly without artifacts.
+mesh-smoke:
+	bash scripts/mesh_smoke.sh
+
 # Decode-subsystem throughput/bytes-per-token bench (artifact-free).
 bench-decode:
 	$(CARGO) bench --bench decode_throughput
+
+# Mesh-vs-hub exchange byte accounting (artifact-free); writes
+# BENCH_mesh_bytes.json like bench-decode writes its BENCH json.
+bench-mesh:
+	$(CARGO) bench --bench mesh_bytes
 
 # Layer-1/2 AOT lowering: produces artifacts/ (HLO text, weights,
 # datasets, fixtures, manifest.json). Requires the JAX/Pallas toolchain.
@@ -44,6 +62,9 @@ artifacts:
 
 lint:
 	$(CARGO) clippy -- -D warnings
+
+fmt:
+	$(CARGO) fmt --check
 
 clean:
 	$(CARGO) clean

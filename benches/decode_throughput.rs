@@ -8,12 +8,14 @@
 //!
 //!     cargo bench --bench decode_throughput
 
+use std::collections::BTreeMap;
 use std::sync::Arc;
 
 use anyhow::Result;
 use prism::bench_util::bench;
 use prism::decode::{full_recompute_bytes_per_token, DecodeSession, RefCfg,
                     RefGpt};
+use prism::util::json::Json;
 use prism::util::quant::WireFmt;
 
 fn main() -> Result<()> {
@@ -84,5 +86,23 @@ fn main() -> Result<()> {
          token at P=2 L=4 (got {ratio:.2}x)"
     );
     println!("contract       : >= 5x fewer bytes/token OK");
+
+    // machine-readable record for the CI perf-trajectory artifact
+    // (uploaded as BENCH_*.json per PR)
+    let mut obj: BTreeMap<String, Json> = BTreeMap::new();
+    obj.insert("bench".into(), Json::Str("decode_throughput".into()));
+    obj.insert("p".into(), Json::Num(p as f64));
+    obj.insert("l".into(), Json::Num(l as f64));
+    obj.insert("steps".into(), Json::Num(steps as f64));
+    obj.insert("full_tok_per_s".into(), Json::Num(full_tps));
+    obj.insert("incremental_tok_per_s".into(), Json::Num(inc_tps));
+    obj.insert("speedup".into(), Json::Num(inc_tps / full_tps));
+    obj.insert("incremental_total_bytes".into(),
+               Json::Num(inc_total as f64));
+    obj.insert("full_total_bytes".into(), Json::Num(full_total as f64));
+    obj.insert("byte_reduction".into(), Json::Num(ratio));
+    let path = "BENCH_decode_throughput.json";
+    std::fs::write(path, Json::Obj(obj).dump())?;
+    println!("json           : {path}");
     Ok(())
 }

@@ -1,0 +1,193 @@
+//! §Perf mesh bench: worker-to-worker mesh vs master-relay hub exchange
+//! bytes (artifact-free, so this runs on any checkout).
+//!
+//! Runs the same Segment-Means-shaped all-to-all twice, both times over
+//! real transports with every frame byte-accounted by `NetStats`:
+//!
+//! * **mesh** — `MeshTransport` with direct per-peer edges, each
+//!   directed share crossing one link;
+//! * **hub**  — the pre-mesh star: every worker's only edge is the
+//!   master, which physically forwards each addressed share to its
+//!   recipient (one copy per recipient, two link crossings per share).
+//!
+//! Contract: the *measured* mesh traffic is at most half the *measured*
+//! hub traffic at every P — asserted against real counters, not the
+//! analytical identity, so a regression that routes exchange frames
+//! back through the master trips it. The analytical forms
+//! (`mesh_exchange_bytes` / `hub_exchange_bytes`) are cross-checked
+//! against both measurements.
+//!
+//!     cargo bench --bench mesh_bytes
+//!
+//! Writes BENCH_mesh_bytes.json for the CI perf-trajectory artifact.
+
+use std::collections::BTreeMap;
+use std::time::Duration;
+
+use anyhow::{anyhow, Result};
+use prism::net::mesh::{channel_edge, hub_exchange_bytes,
+                       mesh_exchange_bytes, MeshTransport};
+use prism::net::message::Msg;
+use prism::net::{NetStats, Transport};
+use prism::runtime::Tensor;
+use prism::util::json::Json;
+
+fn share_row(d: usize) -> Result<Tensor> {
+    Tensor::from_f32(vec![d], vec![0.5; d])
+}
+
+fn recv_ms(node: &mut MeshTransport, ms: u64) -> Result<Msg> {
+    node.recv_deadline(Duration::from_millis(ms))
+        .map(|env| env.msg)
+        .map_err(|e| anyhow!("recv: {e}"))
+}
+
+/// One L-round all-to-all over a direct P-node mesh; returns the
+/// measured wire bytes.
+fn run_mesh_exchange(p: usize, d: usize, layers: usize) -> Result<usize> {
+    let stats = NetStats::new(p);
+    let mut nodes: Vec<MeshTransport> = (0..p)
+        .map(|i| {
+            let mut m = MeshTransport::new(
+                i, p, Duration::from_millis(100));
+            m.set_stats(stats.clone());
+            m
+        })
+        .collect();
+    for a in 0..p {
+        for b in a + 1..p {
+            let (ea, eb) = channel_edge(a, b);
+            nodes[a].add_edge(b, Box::new(ea));
+            nodes[b].add_edge(a, Box::new(eb));
+        }
+    }
+    let row = share_row(d)?;
+    for layer in 0..layers {
+        for w in 0..p {
+            for to in 0..p {
+                if to != w {
+                    nodes[w]
+                        .send(to, Msg::Exchange {
+                            epoch: 0,
+                            layer: layer as u32,
+                            from: w as u32,
+                            data: row.clone(),
+                        })
+                        .map_err(|e| anyhow!("send: {e}"))?;
+                }
+            }
+        }
+        for node in nodes.iter_mut().take(p) {
+            for _ in 0..p - 1 {
+                recv_ms(node, 200)?;
+            }
+        }
+    }
+    Ok(stats.total_bytes())
+}
+
+/// The same exchange over the pre-mesh star: workers only talk to the
+/// master (id P), which forwards each share to every *other* worker —
+/// each delivered share costs two real link crossings. Returns the
+/// measured wire bytes.
+fn run_hub_exchange(p: usize, d: usize, layers: usize) -> Result<usize> {
+    let master_id = p;
+    let stats = NetStats::new(p + 1);
+    let mut hub = MeshTransport::new(master_id, p + 1,
+                                     Duration::from_millis(100));
+    hub.set_stats(stats.clone());
+    let mut workers: Vec<MeshTransport> = (0..p)
+        .map(|i| {
+            let mut m = MeshTransport::new(
+                i, p + 1, Duration::from_millis(100));
+            m.set_stats(stats.clone());
+            m
+        })
+        .collect();
+    for (w, worker) in workers.iter_mut().enumerate() {
+        let (em, ew) = channel_edge(master_id, w);
+        hub.add_edge(w, Box::new(em));
+        worker.add_edge(master_id, Box::new(ew));
+    }
+    let row = share_row(d)?;
+    for layer in 0..layers {
+        // uplink: the legacy protocol addresses each peer separately —
+        // `for to in live { send(to, share) }` — and over a star every
+        // one of those sends is a physical frame to the relay
+        for (w, worker) in workers.iter_mut().enumerate() {
+            for _to in 0..p - 1 {
+                worker
+                    .send(master_id, Msg::Exchange {
+                        epoch: 0,
+                        layer: layer as u32,
+                        from: w as u32,
+                        data: row.clone(),
+                    })
+                    .map_err(|e| anyhow!("uplink: {e}"))?;
+            }
+        }
+        // relay: the master forwards sender w's k-th copy to the k-th
+        // worker that is not w (deterministic addressing stand-in)
+        let mut seen = vec![0usize; p];
+        for _ in 0..p * (p - 1) {
+            let msg = recv_ms(&mut hub, 200)?;
+            let Msg::Exchange { from, .. } = &msg else {
+                anyhow::bail!("hub wanted an Exchange");
+            };
+            let from = *from as usize;
+            let to = (0..p)
+                .filter(|&t| t != from)
+                .nth(seen[from])
+                .expect("copy count exceeds recipients");
+            seen[from] += 1;
+            hub.send(to, msg).map_err(|e| anyhow!("relay: {e}"))?;
+        }
+        for worker in workers.iter_mut() {
+            for _ in 0..p - 1 {
+                recv_ms(worker, 200)?;
+            }
+        }
+    }
+    Ok(stats.total_bytes())
+}
+
+fn main() -> Result<()> {
+    let (d, layers) = (64usize, 4usize);
+    let share = d * 4;
+    println!("== mesh vs hub exchange bytes (D={d}, {layers} layers, \
+              both measured) ==");
+    let mut rows: Vec<Json> = Vec::new();
+    for p in 2..=4usize {
+        let mesh = run_mesh_exchange(p, d, layers)?;
+        let hub = run_hub_exchange(p, d, layers)?;
+        // the analytical accounting matches both measurements...
+        assert_eq!(mesh, layers * mesh_exchange_bytes(p, share),
+                   "P={p}: measured mesh bytes diverge from the model");
+        assert_eq!(hub, layers * hub_exchange_bytes(p, share),
+                   "P={p}: measured hub bytes diverge from the model");
+        // ...and the headline holds between the two *measurements*
+        assert!(mesh * 2 <= hub,
+                "P={p}: mesh {mesh} B must be at most half the \
+                 measured hub relay's {hub} B");
+        println!("P={p}: mesh {mesh:>8} B | hub relay {hub:>8} B | \
+                  {:.2}x less", hub as f64 / mesh as f64);
+        let mut obj: BTreeMap<String, Json> = BTreeMap::new();
+        obj.insert("p".into(), Json::Num(p as f64));
+        obj.insert("mesh_bytes".into(), Json::Num(mesh as f64));
+        obj.insert("hub_bytes".into(), Json::Num(hub as f64));
+        obj.insert("reduction".into(),
+                   Json::Num(hub as f64 / mesh as f64));
+        rows.push(Json::Obj(obj));
+    }
+    println!("contract: measured mesh exchange <= half the measured \
+              hub relay at every P");
+    let mut top: BTreeMap<String, Json> = BTreeMap::new();
+    top.insert("bench".into(), Json::Str("mesh_bytes".into()));
+    top.insert("d".into(), Json::Num(d as f64));
+    top.insert("layers".into(), Json::Num(layers as f64));
+    top.insert("rows".into(), Json::Arr(rows));
+    let path = "BENCH_mesh_bytes.json";
+    std::fs::write(path, Json::Obj(top).dump())?;
+    println!("json    : {path}");
+    Ok(())
+}

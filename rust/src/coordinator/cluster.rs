@@ -112,6 +112,12 @@ impl ClusterView {
         (0..self.alive.len()).filter(|&d| self.alive[d]).collect()
     }
 
+    /// Written-off physical device ids — the re-join sweep's worklist
+    /// (the mesh master re-dials each of these between batches).
+    pub fn dead_devices(&self) -> Vec<usize> {
+        (0..self.alive.len()).filter(|&d| !self.alive[d]).collect()
+    }
+
     /// Mark a device dead and bump the epoch. Allowed down to zero live
     /// devices (the cluster is then unservable until a re-join —
     /// `current` reports it instead of panicking).
@@ -311,6 +317,7 @@ mod tests {
         assert!(view.is_alive(0) && !view.is_alive(1));
         assert!(!view.is_alive(7));
         assert_eq!(view.live_devices(), vec![0, 2]);
+        assert_eq!(view.dead_devices(), vec![1]);
         // voltage has no landmark geometry
         assert_eq!(view.geometry().unwrap(), (2, 0));
         // invalid base geometries are rejected up front

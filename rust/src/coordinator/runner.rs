@@ -82,6 +82,20 @@ impl Mode {
         })
     }
 
+    /// The same strategy family re-targeted to `p` devices (the mesh
+    /// serving path sizes the mode by its `--workers` list; L is left
+    /// for the caller's geometry validation). `Single` has no device
+    /// count to re-target.
+    pub fn with_p(&self, p: usize) -> Mode {
+        match *self {
+            Mode::Single => Mode::Single,
+            Mode::Voltage { .. } => Mode::Voltage { p },
+            Mode::Prism { l, duplicated, .. } => {
+                Mode::Prism { p, l, duplicated }
+            }
+        }
+    }
+
     /// Compact encoding for `Msg::Reconfig`: (tag, p, l).
     pub fn to_wire(&self) -> (u8, u32, u32) {
         match *self {
@@ -598,6 +612,16 @@ mod tests {
         assert!(Mode::parse(&a, 128, 0).is_err());
         let a = parse("serve --mode prism --cr eight");
         assert!(Mode::parse(&a, 128, 0).is_err());
+    }
+
+    #[test]
+    fn mode_with_p_retargets_the_family() {
+        assert_eq!(Mode::Voltage { p: 2 }.with_p(5),
+                   Mode::Voltage { p: 5 });
+        assert_eq!(Mode::Prism { p: 2, l: 6, duplicated: false }
+                       .with_p(3),
+                   Mode::Prism { p: 3, l: 6, duplicated: false });
+        assert_eq!(Mode::Single.with_p(4), Mode::Single);
     }
 
     #[test]

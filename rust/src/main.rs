@@ -44,7 +44,7 @@ fn run(argv: &[String]) -> Result<()> {
         "latency" => cmd_latency(&args),
         "serve" => server::cmd_serve(&args),
         "decode" => server::cmd_decode(&args),
-        "worker" => cmd_worker(&args),
+        "worker" => server::cmd_worker(&args),
         "remote-eval" => cmd_remote_eval(&args),
         "" | "help" | "--help" => {
             println!("{}", HELP);
@@ -63,6 +63,8 @@ examples:
   prism latency --model vit --mode prism --p 3 --l 3 --bandwidth 200
   prism serve --model vit --dataset synth10 --p 2 --l 6 --requests 64 \\
         --gather-timeout-ms 30000
+  prism serve --model vit --dataset synth10 --l 6 --requests 64 \\
+        --workers 127.0.0.1:7070,127.0.0.1:7071,127.0.0.1:7072
   prism decode --sessions 4 --steps 32 --p 2 --l 4 --wire f16
   prism decode --sessions 4 --replicate --replica-wire f16 \\
         --fail-device 0 --fail-after 8 --rejoin-after 16
@@ -74,7 +76,13 @@ re-plans over the survivors (Eq. 16 re-picks L for P') and keeps the
 remaining parallelism, degrading to single-device only at P'=1; decode
 streams with --replicate survive --fail-device via CacheSync migration
 and --rejoin-after restores the full geometry (tests/chaos.rs and
-tests/elastic.rs hold the fault and membership matrices)";
+tests/elastic.rs hold the fault and membership matrices)
+mesh serving: `prism serve --workers host:port,...` drives real
+`prism worker --listen` processes — Segment-Means exchanges go peer to
+peer over the worker TCP mesh (the master keeps only the control
+plane), a killed worker triggers the same Eq. 16 re-plan across
+processes, and a restarted `prism worker` on a dead address is
+re-admitted at the next batch boundary";
 
 pub fn manifest_from(args: &Args) -> Result<Arc<Manifest>> {
     let root = PathBuf::from(args.str_or("artifacts", "artifacts"));
@@ -224,32 +232,10 @@ fn cmd_latency(args: &Args) -> Result<()> {
     Ok(())
 }
 
-fn cmd_worker(args: &Args) -> Result<()> {
-    let m = manifest_from(args)?;
-    let addr = args.req("listen")?.to_string();
-    let mut engine = Engine::new(m.clone())?;
-    let mut cache: std::collections::BTreeMap<String, WeightSet> =
-        Default::default();
-    prism::net::tcp::serve(&addr, move |req| {
-        let ws = match cache.entry(req.weights.clone()) {
-            std::collections::btree_map::Entry::Occupied(e) => e.into_mut(),
-            std::collections::btree_map::Entry::Vacant(v) => {
-                match WeightSet::load(&m, &req.weights) {
-                    Ok(w) => v.insert(w),
-                    Err(e) => {
-                        return prism::net::tcp::ExecResponse::Err(
-                            format!("{e:#}"))
-                    }
-                }
-            }
-        };
-        let refs: Vec<&prism::runtime::Tensor> = req.args.iter().collect();
-        match engine.run(&req.exec, ws, req.layer as usize, &refs) {
-            Ok(outs) => prism::net::tcp::ExecResponse::Ok(outs),
-            Err(e) => prism::net::tcp::ExecResponse::Err(format!("{e:#}")),
-        }
-    })
-}
+// `prism worker --listen` lives in `server::cmd_worker`: one listener
+// serves both the mesh serving protocol (`prism serve --workers`) and
+// the legacy block-execution RPC (`prism remote-eval`), dispatched on
+// the first frame.
 
 /// Distributed evaluation over TCP workers (start them first with
 /// `prism worker --listen ...`). Embed/head run locally; blocks run on

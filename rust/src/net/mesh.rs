@@ -1,0 +1,796 @@
+//! Worker-to-worker mesh transport: multi-process serving without the
+//! master relay.
+//!
+//! The TCP serving path used to be a star — every Segment-Means exchange
+//! hopped through the master (`tcp::TcpChannel` is one hub edge), which
+//! doubles wire traffic (each share crosses two links instead of one)
+//! and serializes the all-to-all behind a single endpoint. PRISM's
+//! communication accounting (Sec. IV, Eq. 10–12) assumes direct
+//! device-to-device exchange; [`MeshTransport`] provides it:
+//!
+//! * every participant aggregates one *edge* per peer — a real socket
+//!   ([`MeshEdge`]), an in-process channel pair ([`channel_edge`]), or
+//!   either wrapped in `FaultNet` — behind the one [`Transport`]
+//!   surface, so the chaos/elastic machinery runs against the mesh
+//!   unchanged;
+//! * bring-up is deterministic rank-ordered dialing (`Msg::MeshInfo`
+//!   from the master names the peer table; worker r dials every peer
+//!   with a lower id and accepts every higher one), so no pair of
+//!   workers ever crosses accepts;
+//! * workers keep their listener and poll it inside `recv_deadline`
+//!   (`accept_joiners`), so a late worker re-joining an epoch > 0 mesh
+//!   dials *every* survivor and the survivors pick the new edge up
+//!   mid-serve without a restart;
+//! * edge reads are buffered: a short polling slice that expires
+//!   mid-frame resumes the frame on the next call instead of tearing
+//!   the byte stream (the failure mode `tcp.rs` documents for raw
+//!   deadline reads).
+//!
+//! The module also owns the exchange-byte accounting the mesh exists
+//! for: [`mesh_exchange_bytes`] vs [`hub_exchange_bytes`] — the hub
+//! relay costs exactly twice the direct mesh for the same all-to-all,
+//! which `tests/elastic.rs` pins with measured `NetStats` bytes.
+
+use std::collections::BTreeMap;
+use std::io::{ErrorKind, Read};
+use std::net::{TcpListener, TcpStream};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Result};
+
+use super::message::Msg;
+use super::stats::NetStats;
+use super::tcp::{configure_stream, connect_retry,
+                 connect_retry_timeout, write_frame_typed};
+use super::transport::{Envelope, Transport, TransportError};
+
+/// How long one `recv_deadline` pass waits on a single edge before
+/// moving to the next; small enough that a P-edge poll cycle stays
+/// responsive, large enough not to spin.
+const POLL_SLICE: Duration = Duration::from_millis(5);
+
+/// How long an accepted connection gets to present its hello frame.
+const HELLO_TIMEOUT: Duration = Duration::from_millis(500);
+
+/// Wire bytes of one all-to-all exchange of `share`-byte frames over a
+/// direct mesh: each of the P·(P−1) directed shares crosses one link.
+pub fn mesh_exchange_bytes(p: usize, share: usize) -> usize {
+    p.saturating_sub(1) * p * share
+}
+
+/// The same exchange through the master relay: every directed share
+/// crosses two links (sender → master, master → recipient), so the hub
+/// costs exactly twice the mesh. This is the accounting the pre-mesh
+/// TCP path paid — workers addressed their peers but every frame was
+/// physically relayed.
+pub fn hub_exchange_bytes(p: usize, share: usize) -> usize {
+    2 * mesh_exchange_bytes(p, share)
+}
+
+// ----------------------------- TCP edge --------------------------------
+
+/// One mesh edge over a real socket: a framed `Msg` stream to a single
+/// peer. Unlike `tcp::TcpChannel`, inbound framing is *buffered* — a
+/// `recv_deadline` slice that expires mid-frame keeps the partial bytes
+/// and resumes on the next call, which is what lets [`MeshTransport`]
+/// poll many edges with short slices without poisoning any of them.
+pub struct MeshEdge {
+    id: usize,
+    peer: usize,
+    stream: TcpStream,
+    io_timeout: Duration,
+    /// Partial inbound frame (length prefix + body so far).
+    buf: Vec<u8>,
+}
+
+impl MeshEdge {
+    /// Dial `addr` (with retry) without announcing ourselves — the
+    /// master's control edges start with `Msg::MeshInfo`, not a hello.
+    pub fn dial(addr: &str, id: usize, peer: usize, io_timeout: Duration,
+                attempts: usize, backoff: Duration) -> Result<MeshEdge> {
+        let stream = connect_retry(addr, attempts, backoff)?;
+        configure_stream(&stream, io_timeout)?;
+        Ok(MeshEdge { id, peer, stream, io_timeout, buf: Vec::new() })
+    }
+
+    /// One dial attempt with a *bounded connect timeout* — the mesh
+    /// master's probe and re-join paths run inside the serving loop,
+    /// where a SYN black-hole must cost `connect_timeout`, not the OS
+    /// default of minutes.
+    pub fn dial_bounded(addr: &str, id: usize, peer: usize,
+                        io_timeout: Duration,
+                        connect_timeout: Duration) -> Result<MeshEdge> {
+        let stream = connect_retry_timeout(addr, 1, Duration::ZERO,
+                                           connect_timeout)?;
+        configure_stream(&stream, io_timeout)?;
+        Ok(MeshEdge { id, peer, stream, io_timeout, buf: Vec::new() })
+    }
+
+    /// Dial a peer worker and present the mesh hello
+    /// (`Msg::Heartbeat { seq: 0 }`), which is how the accepting side
+    /// learns who called.
+    pub fn connect(addr: &str, id: usize, peer: usize,
+                   io_timeout: Duration, attempts: usize,
+                   backoff: Duration) -> Result<MeshEdge> {
+        let mut edge = Self::dial(addr, id, peer, io_timeout, attempts,
+                                  backoff)?;
+        edge.send(peer, Msg::Heartbeat { from: id as u32, seq: 0 })
+            .map_err(|e| anyhow!("mesh hello to {addr}: {e}"))?;
+        Ok(edge)
+    }
+
+    /// Wrap an already-accepted, already-identified stream — the
+    /// worker's control edge to the master, whose first frame (the
+    /// `Msg::MeshInfo` the caller sniffed) named both sides.
+    pub fn from_stream(stream: TcpStream, id: usize, peer: usize,
+                       io_timeout: Duration) -> Result<MeshEdge> {
+        stream.set_nonblocking(false).ok();
+        configure_stream(&stream, io_timeout)?;
+        Ok(MeshEdge { id, peer, stream, io_timeout, buf: Vec::new() })
+    }
+
+    /// Wrap an accepted stream and read the dialer's hello to learn its
+    /// device id. Returns `(peer_id, edge)`.
+    pub fn accepted(stream: TcpStream, id: usize, io_timeout: Duration)
+                    -> Result<(usize, MeshEdge)> {
+        // listeners are polled nonblocking; the stream itself must not
+        // inherit that
+        stream.set_nonblocking(false).ok();
+        configure_stream(&stream, io_timeout)?;
+        let mut edge = MeshEdge {
+            id,
+            peer: usize::MAX,
+            stream,
+            io_timeout,
+            buf: Vec::new(),
+        };
+        let env = edge
+            .recv_deadline(HELLO_TIMEOUT)
+            .map_err(|e| anyhow!("awaiting mesh hello: {e}"))?;
+        let Msg::Heartbeat { from, seq: 0 } = env.msg else {
+            bail!("mesh hello expected, got {:?}", env.msg);
+        };
+        edge.peer = from as usize;
+        Ok((from as usize, edge))
+    }
+
+    /// Pull whatever the socket has (bounded by `slice`) into the frame
+    /// buffer. `Ok(true)` means bytes arrived.
+    fn fill(&mut self, slice: Duration) -> Result<bool, TransportError> {
+        self.stream
+            .set_read_timeout(Some(slice.max(Duration::from_millis(1))))
+            .ok();
+        let mut tmp = [0u8; 64 * 1024];
+        match self.stream.read(&mut tmp) {
+            Ok(0) => Err(TransportError::PeerDown { peer: self.peer }),
+            Ok(n) => {
+                self.buf.extend_from_slice(&tmp[..n]);
+                Ok(true)
+            }
+            Err(e) if matches!(e.kind(), ErrorKind::WouldBlock
+                                         | ErrorKind::TimedOut) => {
+                Ok(false)
+            }
+            Err(_) => Err(TransportError::PeerDown { peer: self.peer }),
+        }
+    }
+
+    /// A complete frame, if the buffer holds one.
+    fn take_frame(&mut self) -> Result<Option<Vec<u8>>, TransportError> {
+        if self.buf.len() < 4 {
+            return Ok(None);
+        }
+        let n = u32::from_le_bytes([self.buf[0], self.buf[1], self.buf[2],
+                                    self.buf[3]]) as usize;
+        if n > 1 << 30 {
+            return Err(TransportError::Codec(format!(
+                "frame too large: {n} bytes")));
+        }
+        if self.buf.len() < 4 + n {
+            return Ok(None);
+        }
+        let frame = self.buf[4..4 + n].to_vec();
+        self.buf.drain(..4 + n);
+        Ok(Some(frame))
+    }
+}
+
+impl Transport for MeshEdge {
+    fn local_id(&self) -> usize {
+        self.id
+    }
+
+    fn peers(&self) -> Vec<usize> {
+        vec![self.peer]
+    }
+
+    fn send(&mut self, to: usize, msg: Msg) -> Result<(), TransportError> {
+        if to != self.peer {
+            return Err(TransportError::PeerDown { peer: to });
+        }
+        self.stream
+            .set_write_timeout(Some(self.io_timeout))
+            .ok();
+        write_frame_typed(&mut self.stream, &msg.encode(), self.peer)
+    }
+
+    fn recv_deadline(&mut self, timeout: Duration)
+                     -> Result<Envelope, TransportError> {
+        let deadline = Instant::now() + timeout;
+        loop {
+            // a previous over-read may already hold a whole frame
+            if let Some(frame) = self.take_frame()? {
+                let msg = Msg::decode(&frame)
+                    .map_err(|e| TransportError::Codec(format!("{e:#}")))?;
+                return Ok(Envelope { from: self.peer, to: self.id, msg });
+            }
+            let left = deadline.saturating_duration_since(Instant::now());
+            if left.is_zero() {
+                return Err(TransportError::Timeout { after: timeout });
+            }
+            self.fill(left.min(POLL_SLICE))?;
+        }
+    }
+}
+
+// --------------------------- in-process edge ----------------------------
+
+/// One in-process mesh edge: half of a connected channel pair — the
+/// unit-test / chaos-suite stand-in for a socket pair. Dropping either
+/// half makes the survivor's sends fail `PeerDown`, which is how the
+/// suites model whole-process death.
+pub struct ChannelEdge {
+    id: usize,
+    peer: usize,
+    tx: Sender<Msg>,
+    rx: Receiver<Msg>,
+}
+
+/// Build the two connected halves of the edge between devices `a` and
+/// `b`.
+pub fn channel_edge(a: usize, b: usize) -> (ChannelEdge, ChannelEdge) {
+    let (tx_ab, rx_ab) = channel();
+    let (tx_ba, rx_ba) = channel();
+    (ChannelEdge { id: a, peer: b, tx: tx_ab, rx: rx_ba },
+     ChannelEdge { id: b, peer: a, tx: tx_ba, rx: rx_ab })
+}
+
+impl Transport for ChannelEdge {
+    fn local_id(&self) -> usize {
+        self.id
+    }
+
+    fn peers(&self) -> Vec<usize> {
+        vec![self.peer]
+    }
+
+    fn send(&mut self, to: usize, msg: Msg) -> Result<(), TransportError> {
+        if to != self.peer {
+            return Err(TransportError::PeerDown { peer: to });
+        }
+        self.tx
+            .send(msg)
+            .map_err(|_| TransportError::PeerDown { peer: self.peer })
+    }
+
+    fn recv_deadline(&mut self, timeout: Duration)
+                     -> Result<Envelope, TransportError> {
+        match self.rx.recv_timeout(timeout) {
+            Ok(msg) => Ok(Envelope { from: self.peer, to: self.id, msg }),
+            Err(RecvTimeoutError::Timeout) => {
+                Err(TransportError::Timeout { after: timeout })
+            }
+            Err(RecvTimeoutError::Disconnected) => {
+                Err(TransportError::PeerDown { peer: self.peer })
+            }
+        }
+    }
+}
+
+// ----------------------------- the mesh ---------------------------------
+
+/// A full participant: one edge per live peer, each any [`Transport`]
+/// (socket, channel pair, or either wrapped in `FaultNet` — faults are
+/// injected per *edge*, exactly like a lossy physical link). Sends
+/// route to the edge; receives poll every edge round-robin in id order
+/// (deterministic) with short buffered slices; workers additionally
+/// poll their listener so late joiners can dial in mid-serve.
+pub struct MeshTransport {
+    id: usize,
+    edges: BTreeMap<usize, Box<dyn Transport + Send>>,
+    listener: Option<TcpListener>,
+    io_timeout: Duration,
+    stats: Arc<NetStats>,
+}
+
+impl MeshTransport {
+    /// An empty mesh endpoint for device `id` out of `devices` total
+    /// participants (workers + master).
+    pub fn new(id: usize, devices: usize, io_timeout: Duration)
+               -> MeshTransport {
+        MeshTransport {
+            id,
+            edges: BTreeMap::new(),
+            listener: None,
+            io_timeout,
+            stats: NetStats::new(devices),
+        }
+    }
+
+    /// Share a byte-accounting sink (tests aggregate one `NetStats`
+    /// across every participant to measure whole-mesh traffic).
+    pub fn set_stats(&mut self, stats: Arc<NetStats>) {
+        self.stats = stats;
+    }
+
+    pub fn stats(&self) -> Arc<NetStats> {
+        self.stats.clone()
+    }
+
+    /// Keep polling `listener` for late joiners inside `recv_deadline`.
+    pub fn set_listener(&mut self, listener: TcpListener) {
+        listener.set_nonblocking(true).ok();
+        self.listener = Some(listener);
+    }
+
+    pub fn add_edge(&mut self, peer: usize,
+                    edge: Box<dyn Transport + Send>) {
+        self.edges.insert(peer, edge);
+    }
+
+    /// Drop the edge to `peer` (written-off worker); sends to it fail
+    /// `PeerDown` from here on.
+    pub fn remove_edge(&mut self, peer: usize) {
+        self.edges.remove(&peer);
+    }
+
+    pub fn has_edge(&self, peer: usize) -> bool {
+        self.edges.contains_key(&peer)
+    }
+
+    /// Accept every connection waiting on the listener and install (or
+    /// replace) the edge its hello announces — the re-join path: a
+    /// restarted worker dials back in and the survivors pick it up
+    /// mid-serve. Malformed hellos are dropped, never fatal.
+    pub fn accept_joiners(&mut self) {
+        let Some(listener) = &self.listener else {
+            return;
+        };
+        loop {
+            match listener.accept() {
+                Ok((stream, _)) => {
+                    match MeshEdge::accepted(stream, self.id,
+                                             self.io_timeout) {
+                        Ok((peer, edge)) => {
+                            self.edges.insert(peer, Box::new(edge));
+                        }
+                        Err(e) => {
+                            eprintln!("[mesh {}] dropped bad joiner: \
+                                       {e:#}", self.id);
+                        }
+                    }
+                }
+                Err(_) => return, // WouldBlock or transient: done
+            }
+        }
+    }
+}
+
+impl Transport for MeshTransport {
+    fn local_id(&self) -> usize {
+        self.id
+    }
+
+    fn peers(&self) -> Vec<usize> {
+        self.edges.keys().copied().collect()
+    }
+
+    fn send(&mut self, to: usize, msg: Msg) -> Result<(), TransportError> {
+        let Some(edge) = self.edges.get_mut(&to) else {
+            return Err(TransportError::PeerDown { peer: to });
+        };
+        let bytes = msg.wire_bytes();
+        edge.send(to, msg)?;
+        self.stats.record(self.id, to, bytes);
+        Ok(())
+    }
+
+    fn recv_deadline(&mut self, timeout: Duration)
+                     -> Result<Envelope, TransportError> {
+        let deadline = Instant::now() + timeout;
+        loop {
+            self.accept_joiners();
+            if self.edges.is_empty() {
+                return Err(TransportError::Closed);
+            }
+            let ids: Vec<usize> = self.edges.keys().copied().collect();
+            for pid in ids {
+                let left =
+                    deadline.saturating_duration_since(Instant::now());
+                let slice = left.min(POLL_SLICE);
+                match self.edges.get_mut(&pid).unwrap()
+                    .recv_deadline(slice)
+                {
+                    Ok(env) => {
+                        return Ok(Envelope { from: env.from,
+                                             to: self.id,
+                                             msg: env.msg });
+                    }
+                    Err(TransportError::Timeout { .. }) => {}
+                    Err(e) => {
+                        // terminal edge failure: drop the edge so the
+                        // poll loop cannot spin on it, and surface the
+                        // loss — the caller's probe/re-plan machinery
+                        // decides what it means
+                        self.edges.remove(&pid);
+                        return Err(match e {
+                            TransportError::PeerDown { .. } => {
+                                TransportError::PeerDown { peer: pid }
+                            }
+                            other => other,
+                        });
+                    }
+                }
+            }
+            if Instant::now() >= deadline {
+                return Err(TransportError::Timeout { after: timeout });
+            }
+        }
+    }
+}
+
+// --------------------------- worker bring-up ----------------------------
+
+/// Build a worker's mesh from the master's `Msg::MeshInfo`, with the
+/// deterministic dial order that avoids crossed accepts:
+///
+/// * epoch 0 (initial bring-up): dial every peer with a *lower* device
+///   id, accept every higher one on `listener` — worker 0 only
+///   accepts, worker P−1 only dials, no pair ever dials each other;
+/// * epoch > 0 (late re-join): the joiner dials *every* listed peer
+///   (the survivors' `recv_deadline` pollers accept mid-serve); peers
+///   that refuse are taken as dead and skipped.
+///
+/// `master` is the already-accepted control edge (the one `MeshInfo`
+/// arrived on); it joins the mesh as peer id `p`.
+pub fn worker_mesh(device: usize, p: usize, peers: &[(u32, String)],
+                   epoch: u32, listener: TcpListener,
+                   master: Box<dyn Transport + Send>,
+                   io_timeout: Duration) -> Result<MeshTransport> {
+    let mut mesh = MeshTransport::new(device, p + 1, io_timeout);
+    mesh.add_edge(p, master);
+    for (pid, addr) in peers {
+        let pid = *pid as usize;
+        if pid == device {
+            continue;
+        }
+        let dial = if epoch == 0 { pid < device } else { true };
+        if !dial {
+            continue;
+        }
+        match MeshEdge::connect(addr, device, pid, io_timeout, 40,
+                                Duration::from_millis(50)) {
+            Ok(edge) => mesh.add_edge(pid, Box::new(edge)),
+            // re-join dials optimistically: a peer that refuses is dead
+            // and the master's next Reconfig will not list it
+            Err(_) if epoch > 0 => {}
+            Err(e) => return Err(e),
+        }
+    }
+    mesh.set_listener(listener);
+    if epoch == 0 {
+        // initial bring-up barrier: every higher-ranked peer dials us
+        let expect: Vec<usize> = peers
+            .iter()
+            .map(|(pid, _)| *pid as usize)
+            .filter(|&pid| pid > device)
+            .collect();
+        let deadline = Instant::now() + Duration::from_secs(30);
+        while expect.iter().any(|pid| !mesh.has_edge(*pid)) {
+            mesh.accept_joiners();
+            if Instant::now() >= deadline {
+                bail!("mesh bring-up timed out waiting for peers \
+                       {expect:?} (have {:?})", mesh.peers());
+            }
+            std::thread::sleep(Duration::from_millis(5));
+        }
+    }
+    Ok(mesh)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::Tensor;
+
+    fn hb(from: u32, seq: u64) -> Msg {
+        Msg::Heartbeat { from, seq }
+    }
+
+    fn ms(v: u64) -> Duration {
+        Duration::from_millis(v)
+    }
+
+    /// Build a full P-worker channel mesh sharing one stats sink.
+    fn channel_mesh(p: usize) -> Vec<MeshTransport> {
+        let stats = NetStats::new(p);
+        let mut meshes: Vec<MeshTransport> = (0..p)
+            .map(|i| {
+                let mut m = MeshTransport::new(i, p, ms(100));
+                m.set_stats(stats.clone());
+                m
+            })
+            .collect();
+        for a in 0..p {
+            for b in a + 1..p {
+                let (ea, eb) = channel_edge(a, b);
+                meshes[a].add_edge(b, Box::new(ea));
+                meshes[b].add_edge(a, Box::new(eb));
+            }
+        }
+        meshes
+    }
+
+    #[test]
+    fn channel_mesh_routes_all_to_all() {
+        let mut meshes = channel_mesh(3);
+        for i in 0..3 {
+            let peers: Vec<usize> = meshes[i].peers();
+            assert_eq!(peers,
+                       (0..3).filter(|&j| j != i).collect::<Vec<_>>());
+            for j in peers {
+                meshes[i].send(j, hb(i as u32, j as u64)).unwrap();
+            }
+        }
+        for m in meshes.iter_mut() {
+            let mut got = 0;
+            while let Ok(env) = m.recv_deadline(ms(20)) {
+                let Msg::Heartbeat { from, seq } = env.msg else {
+                    panic!("unexpected msg");
+                };
+                assert_eq!(env.from as u32, from);
+                assert_eq!(seq as usize, m.local_id());
+                got += 1;
+            }
+            assert_eq!(got, 2);
+        }
+    }
+
+    #[test]
+    fn dropped_peer_surfaces_as_peer_down_and_edges_shrink() {
+        let mut meshes = channel_mesh(3);
+        let dead = meshes.remove(2); // device 2 dies wholesale
+        drop(dead);
+        assert_eq!(meshes[0].send(2, hb(0, 0)),
+                   Err(TransportError::PeerDown { peer: 2 }));
+        // the dead edge is dropped on the receive path too
+        let err = loop {
+            match meshes[0].recv_deadline(ms(10)) {
+                Err(TransportError::Timeout { .. }) => continue,
+                other => break other,
+            }
+        };
+        assert!(matches!(err, Err(TransportError::PeerDown { peer: 2 })));
+        assert_eq!(meshes[0].peers(), vec![1]);
+        // the surviving edge still routes
+        meshes[0].send(1, hb(0, 5)).unwrap();
+        let env = meshes[1].recv_deadline(ms(50)).unwrap();
+        assert_eq!(env.msg, hb(0, 5));
+    }
+
+    /// The accounting the mesh exists for: a P=4 all-to-all of b-byte
+    /// shares measures exactly P·(P−1)·b on the wire — half of what the
+    /// hub relay pays for the same exchange.
+    #[test]
+    fn measured_mesh_bytes_are_half_the_hub_relay() {
+        let p = 4;
+        let share = 16 * 4; // a (16,) f32 share
+        let mut meshes = channel_mesh(p);
+        let stats = meshes[0].stats();
+        let data = Tensor::from_f32(vec![16], vec![0.5; 16]).unwrap();
+        for i in 0..p {
+            for j in 0..p {
+                if i != j {
+                    meshes[i].send(j, Msg::Exchange {
+                        epoch: 0,
+                        layer: 0,
+                        from: i as u32,
+                        data: data.clone(),
+                    })
+                    .unwrap();
+                }
+            }
+        }
+        let measured = stats.total_bytes();
+        assert_eq!(measured, mesh_exchange_bytes(p, share));
+        assert!(measured * 2 <= hub_exchange_bytes(p, share));
+        assert_eq!(hub_exchange_bytes(p, share),
+                   2 * mesh_exchange_bytes(p, share));
+    }
+
+    #[test]
+    fn tcp_edge_survives_short_slices_without_tearing() {
+        let addr = "127.0.0.1:47963";
+        let big = Tensor::from_f32(vec![40_000],
+                                   (0..40_000).map(|i| i as f32)
+                                       .collect())
+            .unwrap();
+        let expect = big.clone();
+        let server = std::thread::spawn({
+            let addr = addr.to_string();
+            move || {
+                let listener = TcpListener::bind(&addr).unwrap();
+                let (stream, _) = listener.accept().unwrap();
+                let (peer, mut edge) =
+                    MeshEdge::accepted(stream, 1, ms(2000)).unwrap();
+                assert_eq!(peer, 0);
+                edge.send(0, Msg::Exchange { epoch: 0, layer: 7,
+                                             from: 1, data: big })
+                    .unwrap();
+                // wait for the ack so the socket outlives the reader
+                let env = edge.recv_deadline(ms(2000)).unwrap();
+                assert_eq!(env.msg, hb(0, 7));
+            }
+        });
+        std::thread::sleep(ms(100));
+        let mut edge = MeshEdge::connect(addr, 0, 1, ms(2000), 5,
+                                         ms(20))
+            .unwrap();
+        // a 160 KB frame cannot arrive in one 5 ms slice: keep polling
+        // with short deadlines and let the buffer assemble it
+        let env = loop {
+            match edge.recv_deadline(ms(5)) {
+                Ok(env) => break env,
+                Err(TransportError::Timeout { .. }) => continue,
+                Err(e) => panic!("edge died: {e}"),
+            }
+        };
+        let Msg::Exchange { layer: 7, from: 1, data, .. } = env.msg else {
+            panic!("wanted the big Exchange, got {:?}", env.msg);
+        };
+        assert_eq!(data, expect);
+        edge.send(1, hb(0, 7)).unwrap();
+        server.join().unwrap();
+    }
+
+    /// End-to-end TCP bring-up: master dials three listeners, sends
+    /// MeshInfo, every worker builds its mesh with rank-ordered dialing
+    /// and the all-to-all routes directly (no master relay).
+    #[test]
+    fn tcp_mesh_bring_up_and_all_to_all() {
+        let addrs: Vec<String> = (0..3)
+            .map(|i| format!("127.0.0.1:{}", 47965 + i))
+            .collect();
+        let peers: Vec<(u32, String)> = addrs
+            .iter()
+            .enumerate()
+            .map(|(i, a)| (i as u32, a.clone()))
+            .collect();
+        let listeners: Vec<TcpListener> = addrs
+            .iter()
+            .map(|a| TcpListener::bind(a).unwrap())
+            .collect();
+        let mut handles = Vec::new();
+        for (wid, listener) in listeners.into_iter().enumerate() {
+            handles.push(std::thread::spawn(move || {
+                listener.set_nonblocking(false).unwrap();
+                let (stream, _) = listener.accept().unwrap();
+                let (peer, mut master) =
+                    MeshEdge::accepted(stream, wid, ms(5000)).unwrap();
+                assert_eq!(peer, 3);
+                let env = master.recv_deadline(ms(5000)).unwrap();
+                let Msg::MeshInfo { epoch, device, p, peers, .. } =
+                    env.msg
+                else {
+                    panic!("wanted MeshInfo");
+                };
+                assert_eq!(device as usize, wid);
+                // the same listener that took the master connection now
+                // serves the higher-ranked peers' mesh dials
+                let mut mesh = worker_mesh(
+                    wid, p as usize, &peers, epoch, listener,
+                    Box::new(master), ms(5000))
+                    .unwrap();
+                // direct all-to-all: one beat to each worker peer
+                for to in 0..3usize {
+                    if to != wid {
+                        mesh.send(to, hb(wid as u32, 42)).unwrap();
+                    }
+                }
+                let mut got = 0;
+                while got < 2 {
+                    let env = mesh.recv_deadline(ms(5000)).unwrap();
+                    assert_eq!(env.msg,
+                               hb(env.from as u32, 42));
+                    got += 1;
+                }
+                // report completion to the master
+                mesh.send(3, hb(wid as u32, 99)).unwrap();
+            }));
+        }
+        // master: id 3, dial + MeshInfo
+        let mut master = MeshTransport::new(3, 4, ms(5000));
+        for (i, addr) in addrs.iter().enumerate() {
+            let edge = MeshEdge::dial(addr, 3, i, ms(5000), 40, ms(50))
+                .unwrap();
+            master.add_edge(i, Box::new(edge));
+        }
+        for i in 0..3usize {
+            master.send(i, Msg::MeshInfo {
+                epoch: 0,
+                device: i as u32,
+                p: 3,
+                peers: peers.clone(),
+                model: "vit".into(),
+                weights: "w".into(),
+                flavor: "xla".into(),
+                mode: 2,
+                mode_p: 3,
+                mode_l: 5,
+            })
+            .unwrap();
+        }
+        let mut done = [false; 3];
+        while done.iter().any(|d| !d) {
+            let env = master.recv_deadline(ms(5000)).unwrap();
+            if let Msg::Heartbeat { from, seq: 99 } = env.msg {
+                done[from as usize] = true;
+            }
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        // worker bring-up relayed nothing through the master: its only
+        // traffic here is the three MeshInfo control frames (0 payload
+        // bytes) and the three completion beats
+        assert_eq!(master.stats().sent(3), 0);
+    }
+
+    /// The re-join path: a late joiner (nonzero epoch) dials *every*
+    /// listed survivor, and a survivor's `recv_deadline` poller accepts
+    /// the new edge mid-serve — no restart, traffic flows both ways.
+    #[test]
+    fn late_joiner_dials_in_and_survivor_accepts_mid_serve() {
+        let addr0 = "127.0.0.1:47968";
+        let addr1 = "127.0.0.1:47969";
+        let peers: Vec<(u32, String)> =
+            vec![(0, addr0.to_string()), (1, addr1.to_string())];
+        // survivor: device 0, listener polled inside recv_deadline
+        let mut survivor = MeshTransport::new(0, 3, ms(2000));
+        survivor.set_listener(TcpListener::bind(addr0).unwrap());
+        assert!(survivor.peers().is_empty());
+        // joiner: device 1 re-joining at epoch 3; its master edge is a
+        // stand-in channel half (the control plane is not under test)
+        let (master_half, _keep) = channel_edge(1, 2);
+        let joiner_listener = TcpListener::bind(addr1).unwrap();
+        let mut joiner = worker_mesh(1, 2, &peers, 3, joiner_listener,
+                                     Box::new(master_half), ms(2000))
+            .unwrap();
+        assert!(joiner.has_edge(0), "joiner must dial the survivor");
+        joiner.send(0, hb(1, 7)).unwrap();
+        // the survivor's next poll accepts the hello and delivers
+        let env = survivor.recv_deadline(ms(2000)).unwrap();
+        assert_eq!((env.from, env.msg), (1, hb(1, 7)));
+        assert!(survivor.has_edge(1));
+        // and the new edge carries traffic back
+        survivor.send(1, hb(0, 8)).unwrap();
+        let back = joiner.recv_deadline(ms(2000)).unwrap();
+        assert_eq!(back.msg, hb(0, 8));
+    }
+
+    #[test]
+    fn exchange_byte_accounting_identities() {
+        for p in 1..6 {
+            for share in [0usize, 64, 4096] {
+                assert_eq!(hub_exchange_bytes(p, share),
+                           2 * mesh_exchange_bytes(p, share));
+            }
+        }
+        assert_eq!(mesh_exchange_bytes(4, 100), 1200);
+        assert_eq!(hub_exchange_bytes(4, 100), 2400);
+        assert_eq!(mesh_exchange_bytes(1, 100), 0);
+        assert_eq!(mesh_exchange_bytes(0, 100), 0);
+    }
+}

@@ -53,7 +53,33 @@ pub enum Msg {
     CacheSync { from: u32, layer: u32, start: u32, k: Tensor, v: Tensor },
     /// Liveness beacon for peer-loss detection (`transport::PeerHealth`).
     /// `seq` increments per beat so duplicates/reorders are visible.
+    /// Doubles as the mesh hello (`seq` 0) and bring-up ACK (`seq` 1)
+    /// in the worker-to-worker TCP mesh (`net::mesh`).
     Heartbeat { from: u32, seq: u64 },
+    /// Master -> worker mesh bootstrap (control plane): the recipient's
+    /// physical device id, the peer table (device id, listen addr) it
+    /// dials/accepts to form the worker-to-worker mesh, and the serving
+    /// config it needs to build block executables locally. `epoch` 0 is
+    /// the initial bring-up (rank-ordered dialing: dial lower ids,
+    /// accept higher); a nonzero epoch marks a late re-join, where the
+    /// joiner dials every listed peer and the survivors' pollers accept
+    /// (`net::mesh::MeshTransport`).
+    MeshInfo {
+        epoch: u32,
+        /// Recipient's physical device id (its rank at full strength).
+        device: u32,
+        /// Full-strength worker count; the master is id `p`.
+        p: u32,
+        /// (device id, listen addr) for every mesh worker.
+        peers: Vec<(u32, String)>,
+        model: String,
+        weights: String,
+        flavor: String,
+        /// Base strategy as `Mode::to_wire`.
+        mode: u8,
+        mode_p: u32,
+        mode_l: u32,
+    },
 }
 
 impl Msg {
@@ -71,6 +97,7 @@ impl Msg {
             Msg::SegDelta { payload, .. } => payload.len(),
             Msg::CacheSync { k, v, .. } => k.byte_len() + v.byte_len(),
             Msg::Heartbeat { .. } => 0,
+            Msg::MeshInfo { .. } => 0,
         }
     }
 
@@ -110,6 +137,16 @@ fn put_u32(out: &mut Vec<u8>, v: u32) {
 
 fn put_u64(out: &mut Vec<u8>, v: u64) {
     out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_str(out: &mut Vec<u8>, s: &str) {
+    put_u32(out, s.len() as u32);
+    out.extend_from_slice(s.as_bytes());
+}
+
+fn get_str(c: &mut Cursor) -> Result<String> {
+    let n = c.u32()? as usize;
+    String::from_utf8(c.take(n)?.to_vec()).context("bad utf8 string")
 }
 
 pub fn encode_tensor(out: &mut Vec<u8>, t: &Tensor) {
@@ -278,6 +315,24 @@ impl Msg {
                 put_u32(&mut out, *from);
                 put_u64(&mut out, *seq);
             }
+            Msg::MeshInfo { epoch, device, p, peers, model, weights,
+                            flavor, mode, mode_p, mode_l } => {
+                out.push(8);
+                put_u32(&mut out, *epoch);
+                put_u32(&mut out, *device);
+                put_u32(&mut out, *p);
+                put_u32(&mut out, peers.len() as u32);
+                for (id, addr) in peers {
+                    put_u32(&mut out, *id);
+                    put_str(&mut out, addr);
+                }
+                put_str(&mut out, model);
+                put_str(&mut out, weights);
+                put_str(&mut out, flavor);
+                out.push(*mode);
+                put_u32(&mut out, *mode_p);
+                put_u32(&mut out, *mode_l);
+            }
         }
         out
     }
@@ -355,6 +410,38 @@ impl Msg {
                 v: decode_tensor(&mut c)?,
             },
             6 => Msg::Heartbeat { from: c.u32()?, seq: c.u64()? },
+            8 => {
+                let epoch = c.u32()?;
+                let device = c.u32()?;
+                let p = c.u32()?;
+                let n = c.u32()? as usize;
+                // each peer entry costs >= 8 bytes (id + addr length):
+                // a hostile count fails closed before any allocation
+                if n > c.remaining() / 8 {
+                    bail!("MeshInfo declares {n} peers, {} bytes left",
+                          c.remaining());
+                }
+                let mut peers = Vec::with_capacity(n);
+                for _ in 0..n {
+                    let id = c.u32()?;
+                    peers.push((id, get_str(&mut c)?));
+                }
+                let model = get_str(&mut c)?;
+                let weights = get_str(&mut c)?;
+                let flavor = get_str(&mut c)?;
+                Msg::MeshInfo {
+                    epoch,
+                    device,
+                    p,
+                    peers,
+                    model,
+                    weights,
+                    flavor,
+                    mode: c.u8()?,
+                    mode_p: c.u32()?,
+                    mode_l: c.u32()?,
+                }
+            }
             other => bail!("unknown message tag {other}"),
         };
         if c.pos != buf.len() {
@@ -405,6 +492,32 @@ mod tests {
             Msg::Reconfig { epoch: 4, mode: 2, p: 3, l: 5,
                             live: vec![0, 1, 3] },
             Msg::Reconfig { epoch: 1, mode: 1, p: 2, l: 0, live: vec![] },
+            Msg::MeshInfo {
+                epoch: 0,
+                device: 1,
+                p: 3,
+                peers: vec![(0, "127.0.0.1:7070".into()),
+                            (1, "127.0.0.1:7071".into()),
+                            (2, "127.0.0.1:7072".into())],
+                model: "vit".into(),
+                weights: "vit_synth10".into(),
+                flavor: "xla".into(),
+                mode: 2,
+                mode_p: 3,
+                mode_l: 5,
+            },
+            Msg::MeshInfo {
+                epoch: 7,
+                device: 0,
+                p: 1,
+                peers: vec![],
+                model: String::new(),
+                weights: String::new(),
+                flavor: String::new(),
+                mode: 0,
+                mode_p: 1,
+                mode_l: 0,
+            },
         ];
         for m in msgs {
             let buf = m.encode();
@@ -481,6 +594,19 @@ mod tests {
                                    live: vec![0, 1] }
                        .wire_bytes(),
                    0);
+        assert_eq!(Msg::MeshInfo {
+            epoch: 0,
+            device: 0,
+            p: 2,
+            peers: vec![(0, "a:1".into()), (1, "b:2".into())],
+            model: "vit".into(),
+            weights: "w".into(),
+            flavor: "xla".into(),
+            mode: 2,
+            mode_p: 2,
+            mode_l: 4,
+        }
+        .wire_bytes(), 0);
     }
 
     #[test]
@@ -515,10 +641,16 @@ mod property_tests {
         Tensor::from_f32(vec![d], rng.normal_vec(d, 2.0)).unwrap()
     }
 
+    fn rand_str(rng: &mut Rng, max: usize) -> String {
+        (0..rng.below(max))
+            .map(|_| (b'a' + rng.below(26) as u8) as char)
+            .collect()
+    }
+
     /// One random instance of every wire variant per call index, so the
     /// property loop covers the full enum many times over.
     fn rand_msg(rng: &mut Rng) -> Msg {
-        match rng.below(8) {
+        match rng.below(9) {
             0 => Msg::Exchange {
                 epoch: rng.next_u64() as u32,
                 layer: rng.next_u64() as u32,
@@ -573,6 +705,20 @@ mod property_tests {
                     v: mk(rng),
                 }
             }
+            8 => Msg::MeshInfo {
+                epoch: rng.next_u64() as u32,
+                device: rng.next_u64() as u32,
+                p: rng.next_u64() as u32,
+                peers: (0..rng.below(5))
+                    .map(|i| (i as u32, rand_str(rng, 20)))
+                    .collect(),
+                model: rand_str(rng, 8),
+                weights: rand_str(rng, 12),
+                flavor: rand_str(rng, 8),
+                mode: rng.next_u64() as u8,
+                mode_p: rng.next_u64() as u32,
+                mode_l: rng.next_u64() as u32,
+            },
             _ => Msg::Heartbeat {
                 from: rng.next_u64() as u32,
                 seq: rng.next_u64(),
@@ -666,5 +812,49 @@ mod property_tests {
         buf.extend_from_slice(&5u32.to_le_bytes()); // l
         buf.extend_from_slice(&u32::MAX.to_le_bytes()); // live count
         assert!(Msg::decode(&buf).is_err());
+        // MeshInfo that declares 4 billion peers with an empty table
+        let mut buf = vec![8u8];
+        buf.extend_from_slice(&0u32.to_le_bytes()); // epoch
+        buf.extend_from_slice(&0u32.to_le_bytes()); // device
+        buf.extend_from_slice(&4u32.to_le_bytes()); // p
+        buf.extend_from_slice(&u32::MAX.to_le_bytes()); // peer count
+        assert!(Msg::decode(&buf).is_err());
+    }
+
+    /// MeshInfo-specific hostility: peer-table entries whose address
+    /// length field points past the frame, and tables truncated at every
+    /// entry boundary, must error without panicking or allocating.
+    #[test]
+    fn mesh_info_hostile_peer_tables_fail_closed() {
+        let good = Msg::MeshInfo {
+            epoch: 3,
+            device: 1,
+            p: 3,
+            peers: vec![(0, "127.0.0.1:7070".into()),
+                        (1, "127.0.0.1:7071".into()),
+                        (2, "127.0.0.1:7072".into())],
+            model: "vit".into(),
+            weights: "vit_synth10".into(),
+            flavor: "pallas".into(),
+            mode: 2,
+            mode_p: 3,
+            mode_l: 5,
+        };
+        let buf = good.encode();
+        assert_eq!(Msg::decode(&buf).unwrap(), good);
+        // every strict prefix errors (truncated peer table included)
+        for cut in 0..buf.len() {
+            assert!(Msg::decode(&buf[..cut]).is_err(), "prefix {cut}");
+        }
+        // first peer's addr length claims 4 GB: take() must fail closed
+        let mut bad = buf.clone();
+        // layout: tag(1) epoch(4) device(4) p(4) count(4) id(4) len(4)
+        bad[21..25].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(Msg::decode(&bad).is_err());
+        // an address that is not utf8 errors instead of panicking
+        let mut bad = buf.clone();
+        bad[25] = 0xFF;
+        bad[26] = 0xFE;
+        assert!(Msg::decode(&bad).is_err());
     }
 }

@@ -1,11 +1,13 @@
 //! Network substrate: wire messages, the unified `Transport` trait with
 //! typed errors, the in-process mesh transport, TCP multi-process
-//! transport (deadlines + reconnect), the analytical link model, the
-//! virtual-clock simulator (`SimClock` for timing, `SimNet` for
-//! deterministic message routing), the `FaultNet` chaos decorator, and
-//! byte accounting.
+//! transport (deadlines + reconnect), the worker-to-worker TCP mesh
+//! (`mesh` — direct Segment-Means exchange, no master relay), the
+//! analytical link model, the virtual-clock simulator (`SimClock` for
+//! timing, `SimNet` for deterministic message routing), the `FaultNet`
+//! chaos decorator, and byte accounting.
 pub mod faultnet;
 pub mod inproc;
+pub mod mesh;
 pub mod message;
 pub mod model;
 pub mod sim;
@@ -15,6 +17,8 @@ pub mod tcp;
 pub mod transport;
 
 pub use faultnet::{FaultCfg, FaultNet};
+pub use mesh::{channel_edge, hub_exchange_bytes, mesh_exchange_bytes,
+               ChannelEdge, MeshEdge, MeshTransport};
 pub use model::LinkModel;
 pub use sim::SimClock;
 pub use simnet::{SimEndpoint, SimNet};

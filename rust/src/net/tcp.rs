@@ -40,8 +40,9 @@ fn stream_deadline(stream: &TcpStream) -> Duration {
     stream.read_timeout().ok().flatten().unwrap_or(Duration::ZERO)
 }
 
-fn write_frame_typed(stream: &mut TcpStream, payload: &[u8], peer: usize)
-                     -> Result<(), TransportError> {
+pub(crate) fn write_frame_typed(stream: &mut TcpStream, payload: &[u8],
+                                peer: usize)
+                                -> Result<(), TransportError> {
     let write = |stream: &mut TcpStream, bytes: &[u8]| {
         stream.write_all(bytes).map_err(|e| if is_timeout(&e) {
             TransportError::Timeout { after: stream_deadline(stream) }
@@ -101,10 +102,46 @@ pub fn connect_retry(addr: &str, attempts: usize, backoff: Duration)
                 last.unwrap()))
 }
 
+/// `connect_retry` with a *per-attempt connect timeout*: a SYN
+/// black-hole (host off, link down, firewall drop — the edge-network
+/// failure mode) fails within `timeout` instead of the OS default
+/// (minutes). The mesh master's probe and re-join dials run inside the
+/// serving loop, so they must be bounded by this, never by the kernel.
+pub fn connect_retry_timeout(addr: &str, attempts: usize,
+                             backoff: Duration, timeout: Duration)
+                             -> Result<TcpStream> {
+    use std::net::ToSocketAddrs;
+    let tries = attempts.max(1);
+    let mut last: Option<std::io::Error> = None;
+    for attempt in 0..tries {
+        match addr.to_socket_addrs() {
+            Ok(mut resolved) => match resolved.next() {
+                Some(sa) => {
+                    match TcpStream::connect_timeout(&sa, timeout) {
+                        Ok(s) => return Ok(s),
+                        Err(e) => last = Some(e),
+                    }
+                }
+                None => {
+                    last = Some(std::io::Error::new(
+                        ErrorKind::InvalidInput,
+                        "address resolved to nothing"));
+                }
+            },
+            Err(e) => last = Some(e),
+        }
+        if attempt + 1 < tries {
+            std::thread::sleep(backoff);
+        }
+    }
+    Err(anyhow!("connecting {addr} failed after {tries} attempts: {}",
+                last.unwrap()))
+}
+
 /// Set the socket options every PRISM stream uses (shared by the
-/// `Transport` and RPC paths so they cannot drift).
-fn configure_stream(stream: &TcpStream, io_timeout: Duration)
-                    -> Result<()> {
+/// `Transport`, mesh, and RPC paths so they cannot drift).
+pub(crate) fn configure_stream(stream: &TcpStream, io_timeout: Duration)
+                               -> Result<()> {
     stream.set_nodelay(true).ok();
     stream
         .set_read_timeout(Some(io_timeout))
@@ -153,15 +190,24 @@ impl TcpChannel {
 
     /// Drop the (possibly torn) stream and dial the peer again with the
     /// originally configured deadlines. Only the dialing side can
-    /// reconnect.
+    /// reconnect; an accepted-side call used to surface as an anyhow
+    /// `context()` chain, which the master's mid-serve probe path could
+    /// not classify — both that and a failed re-dial now come back as
+    /// the typed `TransportError::PeerDown`, so probing a channel tells
+    /// dead-peer from slow-peer the same way every other transport
+    /// operation does.
     pub fn reconnect(&mut self, attempts: usize, backoff: Duration)
-                     -> Result<()> {
-        let addr = self
-            .addr
-            .clone()
-            .context("accepted channels cannot reconnect")?;
-        let stream = connect_retry(&addr, attempts, backoff)?;
-        configure_stream(&stream, self.io_timeout)?;
+                     -> Result<(), TransportError> {
+        let Some(addr) = self.addr.clone() else {
+            // the peer dialed us: when that stream is gone there is no
+            // address to call back — the peer is down as far as this
+            // side can ever know
+            return Err(TransportError::PeerDown { peer: self.peer });
+        };
+        let stream = connect_retry(&addr, attempts, backoff)
+            .map_err(|_| TransportError::PeerDown { peer: self.peer })?;
+        configure_stream(&stream, self.io_timeout)
+            .map_err(|_| TransportError::PeerDown { peer: self.peer })?;
         self.stream = stream;
         Ok(())
     }
@@ -296,17 +342,33 @@ impl ExecResponse {
 /// empty frame. `handler` maps a request to a response.
 pub fn serve(
     addr: &str,
-    mut handler: impl FnMut(ExecRequest) -> ExecResponse,
+    handler: impl FnMut(ExecRequest) -> ExecResponse,
 ) -> Result<()> {
     let listener = TcpListener::bind(addr)
         .with_context(|| format!("binding {addr}"))?;
     eprintln!("[worker] listening on {addr}");
-    let (mut stream, peer) = listener.accept().context("accept")?;
+    let (stream, peer) = listener.accept().context("accept")?;
     eprintln!("[worker] master connected from {peer}");
+    serve_stream(stream, None, handler)
+}
+
+/// The RPC loop on an already-accepted stream. `first` is a frame the
+/// caller read while sniffing the protocol (`prism worker` accepts both
+/// this loop and the mesh bootstrap on one listener and dispatches on
+/// the first frame).
+pub fn serve_stream(
+    mut stream: TcpStream,
+    first: Option<Vec<u8>>,
+    mut handler: impl FnMut(ExecRequest) -> ExecResponse,
+) -> Result<()> {
+    let mut pending = first;
     loop {
-        let frame = match read_frame(&mut stream) {
-            Ok(f) => f,
-            Err(_) => return Ok(()), // disconnect = orderly shutdown
+        let frame = match pending.take() {
+            Some(f) => f,
+            None => match read_frame(&mut stream) {
+                Ok(f) => f,
+                Err(_) => return Ok(()), // disconnect = orderly shutdown
+            },
         };
         if frame.is_empty() {
             return Ok(());
@@ -500,6 +562,27 @@ mod tests {
     }
 
     #[test]
+    fn connect_timeout_variant_dials_and_fails_typed() {
+        // a refused port errors (quickly) rather than hanging
+        assert!(connect_retry_timeout("127.0.0.1:47933", 1,
+                                      Duration::ZERO,
+                                      Duration::from_millis(200))
+            .is_err());
+        // garbage addresses fail in resolution, not by panicking
+        assert!(connect_retry_timeout("not-an-address", 1,
+                                      Duration::ZERO,
+                                      Duration::from_millis(200))
+            .is_err());
+        // and a live listener is reachable through the bounded dial
+        let listener = TcpListener::bind("127.0.0.1:47935").unwrap();
+        let stream = connect_retry_timeout(
+            "127.0.0.1:47935", 1, Duration::ZERO,
+            Duration::from_millis(500)).unwrap();
+        drop(stream);
+        drop(listener);
+    }
+
+    #[test]
     fn connect_retries_until_listener_appears() {
         let addr = "127.0.0.1:47959";
         let server = std::thread::spawn({
@@ -518,6 +601,36 @@ mod tests {
             connect_retry(addr, 20, Duration::from_millis(50)).unwrap();
         write_frame(&mut stream, &[]).unwrap();
         server.join().unwrap();
+    }
+
+    /// Satellite regression: `reconnect` is part of the master's probe
+    /// path, so both failure modes — an accepted-side channel (no
+    /// address to dial back) and a re-dial to a gone peer — must come
+    /// back as the typed `PeerDown`, never an unclassifiable anyhow
+    /// chain that aborts the serve loop.
+    #[test]
+    fn reconnect_failures_surface_as_typed_peer_down() {
+        let addr = "127.0.0.1:47961";
+        let server = std::thread::spawn({
+            let addr = addr.to_string();
+            move || {
+                let listener = TcpListener::bind(&addr).unwrap();
+                let (stream, _) = listener.accept().unwrap();
+                let mut ch = TcpChannel::accepted(
+                    stream, 1, 0, Duration::from_secs(5)).unwrap();
+                // the accepted side cannot reconnect: typed, immediate
+                assert_eq!(ch.reconnect(3, Duration::from_millis(1)),
+                           Err(TransportError::PeerDown { peer: 0 }));
+            }
+        });
+        std::thread::sleep(Duration::from_millis(100));
+        let mut ch = TcpChannel::connect(
+            addr, 0, 1, Duration::from_secs(5), 5,
+            Duration::from_millis(20)).unwrap();
+        server.join().unwrap();
+        // the listener is gone: the dialing side's re-dial fails typed
+        assert_eq!(ch.reconnect(2, Duration::from_millis(5)),
+                   Err(TransportError::PeerDown { peer: 1 }));
     }
 
     #[test]

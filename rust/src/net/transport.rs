@@ -1,12 +1,14 @@
 //! The unified transport abstraction the fault-tolerance stack builds on.
 //!
-//! Three concrete transports implement [`Transport`]: the in-process mpsc
-//! mesh (`inproc::Endpoint`), the TCP hub edge (`tcp::TcpChannel`), and
-//! the deterministic virtual-clock mesh (`simnet::SimEndpoint`). The
-//! [`FaultNet`](super::faultnet::FaultNet) decorator wraps any of them to
-//! inject faults from a seeded schedule, and [`PeerHealth`] turns a
-//! heartbeat stream plus a clock (wall or virtual) into peer-loss
-//! verdicts.
+//! The concrete transports implementing [`Transport`]: the in-process
+//! mpsc mesh (`inproc::Endpoint`), the TCP hub edge (`tcp::TcpChannel`),
+//! the deterministic virtual-clock mesh (`simnet::SimEndpoint`), and the
+//! worker-to-worker mesh (`mesh::MeshTransport`, aggregating per-peer
+//! `mesh::MeshEdge` sockets or `mesh::channel_edge` pairs). The
+//! [`FaultNet`](super::faultnet::FaultNet) decorator wraps any of them —
+//! including each individual mesh edge — to inject faults from a seeded
+//! schedule, and [`PeerHealth`] turns a heartbeat stream plus a clock
+//! (wall or virtual) into peer-loss verdicts.
 //!
 //! Errors are *typed* ([`TransportError`]) rather than stringly anyhow
 //! chains: the recovery paths in `server.rs` and `decode::session` need

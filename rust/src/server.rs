@@ -20,8 +20,17 @@
 //! An optional `LinkModel` paces sends to emulate an edge network in wall
 //! time; the deterministic virtual-clock path (`RunTrace::latency_secs`)
 //! is what the benches use.
+//!
+//! The same master/worker protocol also runs across *processes*: every
+//! loop below is generic over [`Transport`], and `prism serve --workers
+//! host:port,...` drives real `prism worker --listen` processes over the
+//! worker-to-worker TCP mesh (`net::mesh`) — Segment-Means exchanges go
+//! peer to peer, the master keeps only the control plane
+//! (Job/Reconfig/FinalPart), and a restarted worker re-joins the serving
+//! `ClusterView` mid-run (`rejoin_workers`).
 
 use std::collections::VecDeque;
+use std::net::{TcpListener, TcpStream};
 use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -37,8 +46,10 @@ use crate::coordinator::Mode;
 use crate::data::{Dataset, DatasetKind};
 use crate::decode::{DecodeSession, DecodeStats, RefCfg, RefGpt};
 use crate::metrics::Histogram;
-use crate::net::inproc::{mesh, Endpoint};
+use crate::net::inproc::mesh;
+use crate::net::mesh::{worker_mesh, MeshEdge, MeshTransport};
 use crate::net::message::Msg;
+use crate::net::transport::{Transport, TransportError};
 use crate::net::LinkModel;
 use crate::runtime::{Engine, Manifest, ModelCfg, Tensor, TensorData,
                      WeightSet};
@@ -137,7 +148,9 @@ impl Server {
             let faults = faults.clone();
             let h = std::thread::Builder::new()
                 .name(format!("prism-worker-{wid}"))
-                .spawn(move || worker_loop(manifest, cfg, ep, faults))?;
+                .spawn(move || {
+                    worker_loop(manifest, cfg, ep, faults, 0)
+                })?;
             handles.push(h);
         }
         let manifest2 = manifest.clone();
@@ -243,9 +256,12 @@ enum PassOutcome {
 /// the final partitions, bounding every wait by `gather_deadline`.
 /// `Dead` names the silent workers — the master probes them, re-plans
 /// over the survivors, and re-issues the batch on the next epoch.
-fn run_distributed(current: &EpochPlan, ep: &Endpoint, x: &Tensor,
-                   job_id: u64, gather_deadline: Duration)
-                   -> Result<PassOutcome> {
+/// Generic over [`Transport`], so the same pass drives worker threads
+/// (inproc mesh) and worker processes (TCP mesh) identically.
+fn run_distributed<T: Transport>(current: &EpochPlan, ep: &mut T,
+                                 x: &Tensor, job_id: u64,
+                                 gather_deadline: Duration)
+                                 -> Result<PassOutcome> {
     let pls: &[PartitionPlan] = &current.plans;
     let epoch = current.epoch as u32;
     let p = current.p();
@@ -284,8 +300,8 @@ fn run_distributed(current: &EpochPlan, ep: &Endpoint, x: &Tensor,
     let mut finals: Vec<Option<Tensor>> = vec![None; p];
     let mut got = 0;
     while got < p {
-        match ep.recv_timeout(gather_deadline)? {
-            Some(env) => match env.msg {
+        match ep.recv_deadline(gather_deadline) {
+            Ok(env) => match env.msg {
                 Msg::FinalPart { epoch: e, from, data } => {
                     if e != epoch {
                         continue; // a dead epoch's batch: inert
@@ -298,12 +314,16 @@ fn run_distributed(current: &EpochPlan, ep: &Endpoint, x: &Tensor,
                         got += 1;
                     }
                 }
-                // stale FinalParts are the only traffic ever addressed
-                // to the master mid-gather; anything else is a protocol
-                // bug worth hearing about, not a silent deadline
+                // the mesh re-join path can deliver a late bring-up
+                // beat; liveness bookkeeping is not a gather error
+                Msg::Heartbeat { .. } => continue,
+                // stale FinalParts and beats are the only traffic ever
+                // addressed to the master mid-gather; anything else is
+                // a protocol bug worth hearing about, not a silent
+                // deadline
                 other => bail!("master expected FinalPart, got {other:?}"),
             },
-            None => {
+            Err(TransportError::Timeout { .. }) => {
                 let missing: Vec<usize> = finals
                     .iter()
                     .enumerate()
@@ -312,6 +332,16 @@ fn run_distributed(current: &EpochPlan, ep: &Endpoint, x: &Tensor,
                     .collect();
                 return Ok(PassOutcome::Dead(missing));
             }
+            // a live edge died outright mid-gather (process hung up):
+            // faster than the deadline, same verdict
+            Err(TransportError::PeerDown { peer })
+                if current.rank_of(peer).is_some() =>
+            {
+                return Ok(PassOutcome::Dead(vec![peer]));
+            }
+            // a written-off worker's edge finally tore: inert
+            Err(TransportError::PeerDown { .. }) => continue,
+            Err(e) => bail!("master transport failed mid-gather: {e}"),
         }
     }
     let parts: Vec<Tensor> =
@@ -325,8 +355,8 @@ fn run_distributed(current: &EpochPlan, ep: &Endpoint, x: &Tensor,
 /// worker thread that exited dropped its receiver and the send fails
 /// immediately, while a wedged-but-alive worker accepts (and later
 /// drops) the probe.
-fn probe_dead(ep: &Endpoint, missing: &[usize], master: usize)
-              -> Vec<usize> {
+fn probe_dead<T: Transport>(ep: &mut T, missing: &[usize],
+                            master: usize) -> Vec<usize> {
     missing
         .iter()
         .copied()
@@ -397,9 +427,10 @@ fn elastic_plan(manifest: &Manifest, cfg: &ServeConfig, model: &ModelCfg,
 /// the surviving workers onto the new geometry (`Msg::Reconfig`) or
 /// release everyone and serve single-device from the master.
 #[allow(clippy::too_many_arguments)]
-fn reconfigure(manifest: &Manifest, cfg: &ServeConfig, model: &ModelCfg,
-               batch: usize, view: &mut ClusterView, dead: &[usize],
-               ep: &Endpoint, p: usize) -> Result<EpochPlan> {
+fn reconfigure<T: Transport>(manifest: &Manifest, cfg: &ServeConfig,
+                             model: &ModelCfg, batch: usize,
+                             view: &mut ClusterView, dead: &[usize],
+                             ep: &mut T, p: usize) -> Result<EpochPlan> {
     for &d in dead {
         if view.is_alive(d) {
             view.fail_device(d)?;
@@ -457,9 +488,10 @@ fn single_pass(engine: &mut Engine, manifest: &Manifest,
     Ok(x)
 }
 
-fn master_loop(manifest: Arc<Manifest>, cfg: ServeConfig, layers: usize,
-               batches: Receiver<Vec<Request>>, ep: Endpoint,
-               faults: FaultPolicy) -> Result<()> {
+fn master_loop<T: Transport>(manifest: Arc<Manifest>, cfg: ServeConfig,
+                             layers: usize,
+                             batches: Receiver<Vec<Request>>, mut ep: T,
+                             faults: FaultPolicy) -> Result<()> {
     let model = manifest.model(&cfg.model)?.clone();
     let p = cfg.mode.p();
     let batch = manifest.eval_batch;
@@ -486,11 +518,11 @@ fn master_loop(manifest: Arc<Manifest>, cfg: ServeConfig, layers: usize,
                                   layers, model.n, model.causal, batch,
                                   &x0)?;
             }
-            match run_distributed(&current, &ep, &x0, job_id,
+            match run_distributed(&current, &mut ep, &x0, job_id,
                                   faults.gather_deadline)? {
                 PassOutcome::Done(x) => break x,
                 PassOutcome::Dead(missing) => {
-                    let probed = probe_dead(&ep, &missing, p);
+                    let probed = probe_dead(&mut ep, &missing, p);
                     let dead = if probed.is_empty() {
                         // every silent worker still holds its endpoint
                         // (a wedged engine, not a death): the deadline
@@ -500,8 +532,8 @@ fn master_loop(manifest: Arc<Manifest>, cfg: ServeConfig, layers: usize,
                         probed
                     };
                     current = reconfigure(&manifest, &cfg, &model,
-                                          batch, &mut view, &dead, &ep,
-                                          p)?;
+                                          batch, &mut view, &dead,
+                                          &mut ep, p)?;
                 }
             }
         };
@@ -588,11 +620,12 @@ enum JobEnd {
 }
 
 #[allow(clippy::too_many_arguments)]
-fn run_job(engine: &mut Engine, ws: &WeightSet, model: &ModelCfg,
-           st: &WorkerState, ep: &Endpoint, faults: &FaultPolicy,
-           x_p: Tensor, ctx0: Vec<Tensor>, pre: Vec<(u32, Tensor)>,
-           master: usize) -> Result<JobEnd> {
-    let wid = ep.id;
+fn run_job<T: Transport>(engine: &mut Engine, ws: &WeightSet,
+                         model: &ModelCfg, st: &WorkerState, ep: &mut T,
+                         faults: &FaultPolicy, x_p: Tensor,
+                         ctx0: Vec<Tensor>, pre: Vec<(u32, Tensor)>,
+                         master: usize) -> Result<JobEnd> {
+    let wid = ep.local_id();
     let mut x = x_p;
     // rank-space peer partition indices in global (Z_cat) order
     let peers = st.pl.peers();
@@ -652,13 +685,30 @@ fn run_job(engine: &mut Engine, ws: &WeightSet, model: &ModelCfg,
                 }
             }
             while got < peers.len() {
-                let Some(env) =
-                    ep.recv_timeout(faults.exchange_deadline)?
-                else {
-                    eprintln!("[worker {wid}] no layer-{layer} exchange \
-                               within {:?}: peer loss, awaiting \
-                               re-plan", faults.exchange_deadline);
-                    return Ok(JobEnd::Abandoned);
+                let env = match ep.recv_deadline(faults
+                    .exchange_deadline)
+                {
+                    Ok(env) => env,
+                    Err(TransportError::Timeout { .. }) => {
+                        eprintln!("[worker {wid}] no layer-{layer} \
+                                   exchange within {:?}: peer loss, \
+                                   awaiting re-plan",
+                                  faults.exchange_deadline);
+                        return Ok(JobEnd::Abandoned);
+                    }
+                    // the master's edge died: the server is over
+                    Err(TransportError::PeerDown { peer })
+                        if peer == master =>
+                    {
+                        return Ok(JobEnd::Shutdown);
+                    }
+                    Err(TransportError::Closed) => {
+                        return Ok(JobEnd::Shutdown);
+                    }
+                    // a peer's edge tore mid-barrier: the deadline (or
+                    // the master's re-plan) decides what it means
+                    Err(TransportError::PeerDown { .. }) => continue,
+                    Err(e) => bail!("worker transport failed: {e}"),
                 };
                 match env.msg {
                     Msg::Exchange { epoch, layer: ll, from, data }
@@ -728,27 +778,51 @@ fn apply_reconfig(manifest: &Manifest, cfg: &ServeConfig,
         .map(Some)
 }
 
-fn worker_loop(manifest: Arc<Manifest>, cfg: ServeConfig, ep: Endpoint,
-               faults: FaultPolicy) -> Result<()> {
+fn worker_loop<T: Transport>(manifest: Arc<Manifest>, cfg: ServeConfig,
+                             mut ep: T, faults: FaultPolicy,
+                             join_epoch: u32) -> Result<()> {
     let model = manifest.model(&cfg.model)?.clone();
     let p = cfg.mode.p();
     if p <= 1 {
         return Ok(()); // single-device: master does everything
     }
-    let wid = ep.id;
+    let wid = ep.local_id();
     let batch = manifest.eval_batch;
     let mut engine = Engine::new(manifest.clone())?;
     let ws = WeightSet::load(&manifest, &cfg.weights)?;
-    let mut st = WorkerState::build(&manifest, &cfg, &model, &mut engine,
-                                    batch, wid, 0, cfg.mode,
-                                    (0..p).collect())?;
-    // current-epoch layer-0 shares that raced ahead of our Job (a peer
-    // can broadcast its layer-0 share before the master's Job reaches
-    // us, but can get no further without ours); they seed the next
-    // job's first barrier.
-    let mut pre: Vec<(u32, Tensor)> = Vec::new();
+    // A fresh member of epoch 0 serves the base geometry immediately; a
+    // late joiner (`join_epoch` > 0, the mesh re-join path) has no rank
+    // until the master's next `Msg::Reconfig` includes it.
+    let mut st: Option<WorkerState> = if join_epoch == 0 {
+        Some(WorkerState::build(&manifest, &cfg, &model, &mut engine,
+                                batch, wid, 0, cfg.mode,
+                                (0..p).collect())?)
+    } else {
+        None
+    };
+    // Layer-0 shares that raced ahead of our Job (a peer can broadcast
+    // its layer-0 share before the master's Job reaches us, but can get
+    // no further without ours); they seed the next job's first barrier.
+    // Stashed *with their epoch* and filtered when consumed: a late
+    // joiner (st still None) must hold a warm survivor's share for the
+    // epoch its first Reconfig is about to install, not drop it — a
+    // drop would wedge that barrier and cascade into writing off live
+    // workers. Stale-epoch entries are discarded at the same points.
+    let mut pre: Vec<(u32, u32, Tensor)> = Vec::new();
     loop {
-        let env = ep.recv()?;
+        let env = match ep.recv_deadline(Duration::from_secs(3600)) {
+            Ok(env) => env,
+            Err(TransportError::Timeout { .. }) => continue, // idle
+            // master gone == server over; so is a fully torn mesh
+            Err(TransportError::PeerDown { peer }) if peer == p => {
+                return Ok(());
+            }
+            Err(TransportError::Closed) => return Ok(()),
+            // a peer process died between jobs: the master's re-plan
+            // will say what it means
+            Err(TransportError::PeerDown { .. }) => continue,
+            Err(e) => bail!("worker transport failed: {e}"),
+        };
         // funnel both arrival paths — between jobs and mid-barrier —
         // into one adoption site so they can never diverge
         let reconfig = match env.msg {
@@ -760,18 +834,27 @@ fn worker_loop(manifest: Arc<Manifest>, cfg: ServeConfig, ep: Endpoint,
             // main loop are the *previous* job's unused final-layer
             // shares, so stash only when a barrier will consume them)
             Msg::Exchange { epoch, layer: 0, from, data }
-                if epoch == st.epoch && model.layers > 1 =>
+                if model.layers > 1 =>
             {
-                pre.push((from, data));
+                pre.push((epoch, from, data));
                 None
             }
-            Msg::Job { epoch, x_p, ctx, .. } if epoch == st.epoch => {
+            Msg::Job { epoch, x_p, ctx, .. }
+                if st.as_ref().is_some_and(|s| s.epoch == epoch) =>
+            {
                 if faults.chaos_exit_worker == Some(wid) {
                     return Ok(()); // test hook: crash silently mid-batch
                 }
-                match run_job(&mut engine, &ws, &model, &st, &ep,
-                              &faults, x_p, ctx,
-                              std::mem::take(&mut pre), p)? {
+                // seed the first barrier with this epoch's early
+                // shares; anything stashed for a dead epoch goes
+                let seed: Vec<(u32, Tensor)> = pre
+                    .drain(..)
+                    .filter(|(e, _, _)| *e == epoch)
+                    .map(|(_, from, data)| (from, data))
+                    .collect();
+                match run_job(&mut engine, &ws, &model,
+                              st.as_ref().unwrap(), &mut ep, &faults,
+                              x_p, ctx, seed, p)? {
                     JobEnd::Done | JobEnd::Abandoned => None,
                     JobEnd::Shutdown => return Ok(()),
                     JobEnd::Reconfig { epoch, mode, p: rp, l: rl,
@@ -783,21 +866,463 @@ fn worker_loop(manifest: Arc<Manifest>, cfg: ServeConfig, ep: Endpoint,
             _ => None, // stale traffic from a dead epoch: drop
         };
         if let Some((epoch, mode, rp, rl, live)) = reconfig {
-            pre.clear(); // stashed shares belong to the dead epoch
+            // keep only shares already racing ahead on the epoch being
+            // installed; everything older belongs to a dead epoch
+            pre.retain(|(e, _, _)| *e == epoch);
             match apply_reconfig(&manifest, &cfg, &model, &mut engine,
                                  batch, wid, epoch, mode, rp, rl,
                                  live)?
             {
-                Some(next) => st = next,
+                Some(next) => st = Some(next),
                 // excluded from the re-plan (declared dead, the
                 // cluster went single, or an inconsistent frame):
                 // leave a trace before idling for the Shutdown
-                None => eprintln!("[worker {wid}] standing down at \
-                                   epoch {epoch}: excluded from the \
-                                   re-plan"),
+                None => {
+                    st = None;
+                    eprintln!("[worker {wid}] standing down at epoch \
+                               {epoch}: excluded from the re-plan");
+                }
             }
         }
     }
+}
+
+// ------------------- multi-process mesh serving ------------------------
+
+/// `prism worker --listen`: bind, accept the master, sniff the protocol
+/// from the first frame, and serve either a mesh session
+/// (`Msg::MeshInfo` — `prism serve --workers`) or the legacy
+/// block-execution RPC loop (`prism remote-eval`).
+pub fn cmd_worker(args: &Args) -> Result<()> {
+    let root = std::path::PathBuf::from(args.str_or("artifacts",
+                                                    "artifacts"));
+    let manifest = Arc::new(Manifest::load(&root)?);
+    let addr = args.req("listen")?.to_string();
+    let listener = TcpListener::bind(&addr)
+        .with_context(|| format!("binding {addr}"))?;
+    eprintln!("[worker] listening on {addr}");
+    let (mut stream, peer) = listener.accept().context("accept")?;
+    eprintln!("[worker] master connected from {peer}");
+    let first = crate::net::tcp::read_frame(&mut stream)?;
+    if let Ok(info @ Msg::MeshInfo { .. }) = Msg::decode(&first) {
+        return run_mesh_worker(manifest, listener, stream, info, args);
+    }
+    // legacy block-execution RPC (the remote-eval path)
+    let mut engine = Engine::new(manifest.clone())?;
+    let mut cache: std::collections::BTreeMap<String, WeightSet> =
+        Default::default();
+    crate::net::tcp::serve_stream(stream, Some(first), move |req| {
+        let ws = match cache.entry(req.weights.clone()) {
+            std::collections::btree_map::Entry::Occupied(e) => {
+                e.into_mut()
+            }
+            std::collections::btree_map::Entry::Vacant(v) => {
+                match WeightSet::load(&manifest, &req.weights) {
+                    Ok(w) => v.insert(w),
+                    Err(e) => {
+                        return crate::net::tcp::ExecResponse::Err(
+                            format!("{e:#}"))
+                    }
+                }
+            }
+        };
+        let refs: Vec<&Tensor> = req.args.iter().collect();
+        match engine.run(&req.exec, ws, req.layer as usize, &refs) {
+            Ok(outs) => crate::net::tcp::ExecResponse::Ok(outs),
+            Err(e) => crate::net::tcp::ExecResponse::Err(
+                format!("{e:#}")),
+        }
+    })
+}
+
+/// Drive one mesh serving session on a worker process: build the
+/// worker-to-worker mesh from the master's `MeshInfo` (rank-ordered
+/// dialing at epoch 0, dial-everyone on a late re-join), ACK the
+/// master, and run the same epoch-tagged worker protocol the threaded
+/// server runs — `worker_loop` is generic over the transport, so the
+/// elastic semantics (Reconfig adoption, barrier deadlines, stand-down)
+/// carry over unchanged.
+fn run_mesh_worker(manifest: Arc<Manifest>, listener: TcpListener,
+                   stream: TcpStream, info: Msg, args: &Args)
+                   -> Result<()> {
+    let Msg::MeshInfo { epoch, device, p, peers, model, weights, flavor,
+                        mode: mtag, mode_p, mode_l } = info
+    else {
+        bail!("run_mesh_worker wants a MeshInfo");
+    };
+    let mode = Mode::from_wire(mtag, mode_p, mode_l)?;
+    let device = device as usize;
+    let p = p as usize;
+    if device >= p || mode.p() != p {
+        bail!("inconsistent MeshInfo: device {device} of P={p}, mode \
+               {mode:?}");
+    }
+    let deadline = args.duration_ms_or("gather-timeout-ms", 30_000)?;
+    let io = crate::net::tcp::DEFAULT_IO_TIMEOUT;
+    let master = MeshEdge::from_stream(stream, device, p, io)?;
+    let mut mesh = worker_mesh(device, p, &peers, epoch, listener,
+                               Box::new(master), io)?;
+    // bring-up ACK: the master admits us only once our edges are up
+    mesh.send(p, Msg::Heartbeat { from: device as u32, seq: 1 })
+        .map_err(|e| anyhow!("acking the master: {e}"))?;
+    eprintln!("[worker {device}] mesh up at epoch {epoch}: peers {:?}",
+              mesh.peers());
+    let cfg = ServeConfig {
+        model,
+        task: String::new(), // workers never run the head
+        weights,
+        mode,
+        flavor,
+        flush_after: Duration::from_millis(4),
+        pace: None,
+    };
+    let faults = FaultPolicy {
+        gather_deadline: deadline,
+        exchange_deadline: deadline,
+        chaos_exit_worker: None,
+    };
+    worker_loop(manifest, cfg, mesh, faults, epoch)
+}
+
+/// Bound on every dial the serving loop performs itself (probe,
+/// re-join): a SYN black-hole — worker host off, link down — must cost
+/// this, never the OS connect default of minutes.
+const MESH_DIAL_TIMEOUT: Duration = Duration::from_secs(1);
+
+/// Probe over processes: the gather deadline cannot tell a dead worker
+/// process from a survivor wedged behind it, but a dead process takes
+/// its *listener* with it — one cheap bounded dial answers. Refused or
+/// black-holed == dead; a listener that still accepts marks a
+/// wedged-but-alive process (the stray probe connection is dropped by
+/// the worker's hello timeout).
+fn probe_mesh(addrs: &[String], missing: &[usize]) -> Vec<usize> {
+    missing
+        .iter()
+        .copied()
+        .filter(|&wid| {
+            crate::net::tcp::connect_retry_timeout(
+                &addrs[wid], 1, Duration::ZERO, MESH_DIAL_TIMEOUT)
+                .is_err()
+        })
+        .collect()
+}
+
+/// Between batches, offer every written-off worker a way back: if its
+/// address accepts again (a restarted `prism worker --listen`),
+/// re-bootstrap it with a nonzero-epoch `MeshInfo` (it dials every
+/// survivor; their pollers accept mid-serve), wait for its bring-up
+/// ACK, `add_device` it into the view, and reconfigure everyone onto
+/// the grown geometry. Returns the new epoch's plan when anyone
+/// re-joined.
+///
+/// A written-off-but-*alive* worker also accepts the dial (its idle
+/// listener backlogs anything) but never ACKs — its poller wants a
+/// mesh hello, not a MeshInfo, and drops the connection. `next_try`
+/// holds a per-address backoff so such a worker costs one bounded ACK
+/// wait per backoff window, not per batch.
+#[allow(clippy::too_many_arguments)]
+fn rejoin_workers(manifest: &Manifest, cfg: &ServeConfig,
+                  model: &ModelCfg, batch: usize,
+                  view: &mut ClusterView, ep: &mut MeshTransport,
+                  addrs: &[String], io: Duration,
+                  next_try: &mut std::collections::BTreeMap<usize,
+                                                            Instant>)
+                  -> Result<Option<EpochPlan>> {
+    let p = cfg.mode.p();
+    let (btag, bp, bl) = cfg.mode.to_wire();
+    let backoff = Duration::from_secs(30);
+    let mut rejoined = false;
+    for wid in view.dead_devices() {
+        if next_try.get(&wid).is_some_and(|t| Instant::now() < *t) {
+            continue; // recently failed to re-join: wait out the backoff
+        }
+        let addr = &addrs[wid];
+        // one cheap bounded dial; a still-dead worker refuses (or
+        // black-holes) within MESH_DIAL_TIMEOUT
+        let Ok(mut edge) = MeshEdge::dial_bounded(addr, p, wid, io,
+                                                  MESH_DIAL_TIMEOUT)
+        else {
+            continue; // nothing listening: no backoff needed, dials
+                      // are cheap against a closed port
+        };
+        // the joiner's peer table: itself plus every live survivor
+        let mut peers: Vec<(u32, String)> = vec![(wid as u32,
+                                                  addr.clone())];
+        for live in view.live_devices() {
+            peers.push((live as u32, addrs[live].clone()));
+        }
+        peers.sort();
+        let join_epoch = (view.epoch() + 1) as u32;
+        if edge.send(wid, Msg::MeshInfo {
+            epoch: join_epoch,
+            device: wid as u32,
+            p: p as u32,
+            peers,
+            model: cfg.model.clone(),
+            weights: cfg.weights.clone(),
+            flavor: cfg.flavor.clone(),
+            mode: btag,
+            mode_p: bp,
+            mode_l: bl,
+        })
+        .is_err()
+        {
+            next_try.insert(wid, Instant::now() + backoff);
+            continue;
+        }
+        // bring-up ACK: the joiner dialed the survivors. A fresh
+        // `prism worker` answers in well under this (it only has to
+        // dial the survivors); a wedged-but-alive write-off never
+        // answers and goes on backoff.
+        match edge.recv_deadline(Duration::from_secs(10)) {
+            Ok(env) if matches!(env.msg,
+                                Msg::Heartbeat { seq: 1, .. }) => {}
+            _ => {
+                next_try.insert(wid, Instant::now() + backoff);
+                continue;
+            }
+        }
+        next_try.remove(&wid);
+        ep.add_edge(wid, Box::new(edge));
+        view.add_device(wid)?;
+        rejoined = true;
+        eprintln!("[master] worker {wid} re-joined at {addr}");
+    }
+    if !rejoined {
+        return Ok(None);
+    }
+    // reconfigure everyone onto the restored strength (artifact-grid
+    // fallbacks included, exactly like the failure direction)
+    let next = elastic_plan(manifest, cfg, model, batch, view)?;
+    let (tag, mp, ml) = next.mode.to_wire();
+    let live: Vec<u32> = next.devices.iter().map(|&d| d as u32).collect();
+    for &wid in &next.devices {
+        let _ = ep.send(wid, Msg::Reconfig {
+            epoch: next.epoch as u32,
+            mode: tag,
+            p: mp,
+            l: ml,
+            live: live.clone(),
+        });
+    }
+    eprintln!("[master] epoch {} restores {:?} over devices {:?}",
+              next.epoch, next.mode, next.devices);
+    Ok(Some(next))
+}
+
+/// The multi-process master: dial every worker's listener, bootstrap
+/// the worker-to-worker mesh (`Msg::MeshInfo` + ACK barrier), then
+/// drive batches with the same elastic loop as the threaded master —
+/// Segment-Means exchanges never touch this process; it sends Jobs,
+/// gathers FinalParts, probes by re-dialing, reconfigures survivors,
+/// and re-admits restarted workers between batches. Returns one
+/// latency sample per request row.
+fn mesh_master(manifest: Arc<Manifest>, cfg: &ServeConfig,
+               faults: &FaultPolicy, addrs: &[String],
+               rows: Vec<Tensor>) -> Result<Vec<f64>> {
+    let model = manifest.model(&cfg.model)?.clone();
+    let p = cfg.mode.p();
+    let batch = manifest.eval_batch;
+    let io = crate::net::tcp::DEFAULT_IO_TIMEOUT;
+    let mut ep = MeshTransport::new(p, p + 1, io);
+    // dial every listener before any MeshInfo goes out: each worker's
+    // first accepted connection must be the master, and no worker dials
+    // a peer before that peer's control edge exists
+    for (i, addr) in addrs.iter().enumerate() {
+        let edge = MeshEdge::dial(addr, p, i, io, 100,
+                                  Duration::from_millis(100))
+            .with_context(|| format!("dialing worker {i} at {addr}"))?;
+        ep.add_edge(i, Box::new(edge));
+    }
+    let peers: Vec<(u32, String)> = addrs
+        .iter()
+        .enumerate()
+        .map(|(i, a)| (i as u32, a.clone()))
+        .collect();
+    let (mtag, mp, ml) = cfg.mode.to_wire();
+    for i in 0..p {
+        ep.send(i, Msg::MeshInfo {
+            epoch: 0,
+            device: i as u32,
+            p: p as u32,
+            peers: peers.clone(),
+            model: cfg.model.clone(),
+            weights: cfg.weights.clone(),
+            flavor: cfg.flavor.clone(),
+            mode: mtag,
+            mode_p: mp,
+            mode_l: ml,
+        })
+        .map_err(|e| anyhow!("bootstrapping worker {i}: {e}"))?;
+    }
+    // bring-up barrier: every worker ACKs once its mesh edges are up
+    let mut acked = vec![false; p];
+    let deadline = Instant::now() + Duration::from_secs(60);
+    while acked.iter().any(|a| !a) {
+        match ep.recv_deadline(Duration::from_secs(1)) {
+            Ok(env) => {
+                if let Msg::Heartbeat { from, seq: 1 } = env.msg {
+                    if let Some(a) = acked.get_mut(from as usize) {
+                        *a = true;
+                    }
+                }
+            }
+            Err(TransportError::Timeout { .. }) => {}
+            Err(e) => bail!("mesh bring-up failed: {e}"),
+        }
+        if Instant::now() >= deadline {
+            bail!("mesh bring-up timed out: ACKs {acked:?}");
+        }
+    }
+    eprintln!("[master] mesh up: {p} workers, direct exchange edges");
+
+    let mut engine = Engine::new(manifest.clone())?;
+    let ws = WeightSet::load(&manifest, &cfg.weights)?;
+    let embed_name = manifest.embed_name(&cfg.model, batch);
+    let head_name = manifest.head_name(&cfg.model, &cfg.task, batch);
+    let mut view = ClusterView::new(cfg.mode, model.n, model.causal)?;
+    let mut current = view.current()?;
+    let mut latencies = Vec::with_capacity(rows.len());
+    let mut rejoin_backoff = std::collections::BTreeMap::new();
+    let mut job_id = 0u64;
+    for chunk in rows.chunks(batch) {
+        // the cross-process re-join point: restarted workers are
+        // re-admitted on batch boundaries
+        if let Some(next) = rejoin_workers(&manifest, cfg, &model,
+                                           batch, &mut view, &mut ep,
+                                           addrs, io,
+                                           &mut rejoin_backoff)?
+        {
+            current = next;
+        }
+        let t0 = Instant::now();
+        let refs: Vec<&Tensor> = chunk.iter().collect();
+        let raw = stack_rows(&refs, batch)?;
+        let x0 = engine.run(&embed_name, &ws, 0, &[&raw])?.remove(0);
+        let x = loop {
+            if current.p() <= 1 {
+                break single_pass(&mut engine, &manifest, cfg, &ws,
+                                  model.layers, model.n, model.causal,
+                                  batch, &x0)?;
+            }
+            match run_distributed(&current, &mut ep, &x0, job_id,
+                                  faults.gather_deadline)? {
+                PassOutcome::Done(x) => break x,
+                PassOutcome::Dead(missing) => {
+                    let probed = probe_mesh(addrs, &missing);
+                    let dead = if probed.is_empty() {
+                        // every listener still answers: wedged, not
+                        // dead — the deadline is the contract
+                        missing
+                    } else {
+                        probed
+                    };
+                    current = reconfigure(&manifest, cfg, &model,
+                                          batch, &mut view, &dead,
+                                          &mut ep, p)?;
+                    for &d in &dead {
+                        ep.remove_edge(d);
+                    }
+                }
+            }
+        };
+        let logits = engine.run(&head_name, &ws, 0, &[&x])?.remove(0);
+        debug_assert_eq!(logits.shape[0], batch);
+        let dt = t0.elapsed().as_secs_f64();
+        latencies.extend(std::iter::repeat(dt).take(chunk.len()));
+        eprintln!("[master] batch {job_id} done on epoch {} \
+                   (P'={}, {:.0} ms)", current.epoch,
+                  current.p().max(1), dt * 1e3);
+        job_id += 1;
+    }
+    for wid in view.live_devices() {
+        let _ = ep.send(wid, Msg::Shutdown);
+    }
+    Ok(latencies)
+}
+
+/// `prism serve --workers host:port,...`: serve over real worker
+/// processes. Request rows are synthesized up front (the mesh driver is
+/// batch-synchronous; arrival pacing belongs to the threaded path).
+fn cmd_serve_mesh(args: &Args) -> Result<()> {
+    let root = std::path::PathBuf::from(args.str_or("artifacts",
+                                                    "artifacts"));
+    let manifest = Arc::new(Manifest::load(&root)?);
+    let model = args.str_or("model", "vit");
+    let dataset = args.str_or("dataset", match model.as_str() {
+        "vit" => "synth10",
+        "bert" => "sst2p",
+        _ => "text8p",
+    });
+    let cfgm = manifest.model(&model)?.clone();
+    let addrs: Vec<String> = args
+        .req("workers")?
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .collect();
+    let p = addrs.len();
+    if p < 2 {
+        bail!("serve --workers wants at least 2 worker addresses");
+    }
+    // the worker count is the device count: reshape the parsed mode to
+    // P = |workers| (ClusterView validates the resulting geometry)
+    let default_l = if model == "gpt2" { 16 } else { 6 };
+    let mode = Mode::parse(args, cfgm.n, default_l)?.with_p(p);
+    if mode.p() <= 1 {
+        bail!("serve --workers needs a distributed mode");
+    }
+    let n_requests = args.usize_or("requests", 64)?;
+    let weights = match model.as_str() {
+        "vit" => format!("vit_{dataset}"),
+        other => other.to_string(),
+    };
+    let task = if cfgm.causal { "lm".into() } else { dataset.clone() };
+    let ds = Dataset::load(&root, &dataset)?;
+    let cfg = ServeConfig {
+        model: model.clone(),
+        task,
+        weights,
+        mode,
+        flavor: args.str_or("kernel", "xla"),
+        flush_after: Duration::from_millis(4),
+        pace: None,
+    };
+    let deadline = args.duration_ms_or("gather-timeout-ms", 30_000)?;
+    let faults = FaultPolicy {
+        gather_deadline: deadline,
+        exchange_deadline: deadline,
+        chaos_exit_worker: None,
+    };
+    println!("serving {model}/{dataset} mode={mode:?} over {p} worker \
+              processes [{}]", addrs.join(", "));
+    let mut rng = Rng::new(7);
+    let n1 = ds.x.shape[1];
+    let mut rows = Vec::with_capacity(n_requests);
+    for _ in 0..n_requests {
+        let i = rng.below(ds.count());
+        rows.push(match ds.kind {
+            DatasetKind::Vision => ds.x.slice0(i, i + 1)?,
+            _ => {
+                let take = cfgm.n.min(n1);
+                let ids = &ds.x.i32s()?[i * n1..i * n1 + take];
+                let mut v = ids.to_vec();
+                v.resize(cfgm.n, 0);
+                Tensor::from_i32(vec![1, cfgm.n], v)?
+            }
+        });
+    }
+    let t0 = Instant::now();
+    let lat = mesh_master(manifest, &cfg, &faults, &addrs, rows)?;
+    let wall = t0.elapsed().as_secs_f64();
+    let mut hist = Histogram::new();
+    for s in &lat {
+        hist.record(*s);
+    }
+    println!("throughput : {:.1} req/s ({n_requests} requests in \
+              {wall:.2}s)", n_requests as f64 / wall);
+    println!("latency    : {}", hist.summary_ms());
+    Ok(())
 }
 
 // ------------------- decode-stream scheduler ---------------------------
@@ -1241,8 +1766,13 @@ pub fn cmd_decode(args: &Args) -> Result<()> {
 }
 
 /// `prism serve`: drive the threaded server with a synthetic request
-/// stream drawn from a dataset; print latency/throughput.
+/// stream drawn from a dataset; print latency/throughput. With
+/// `--workers host:port,...` the same protocol instead drives real
+/// `prism worker --listen` processes over the TCP mesh.
 pub fn cmd_serve(args: &Args) -> Result<()> {
+    if args.flags.contains_key("workers") {
+        return cmd_serve_mesh(args);
+    }
     let root = std::path::PathBuf::from(args.str_or("artifacts",
                                                     "artifacts"));
     let manifest = Arc::new(Manifest::load(&root)?);

@@ -1,0 +1,94 @@
+#!/usr/bin/env bash
+# mesh-smoke: the multi-process elastic serving acceptance.
+#
+# Spawns 3 real `prism worker --listen` processes and a master
+# `prism serve --workers` on localhost, kills one worker mid-run, and
+# asserts the run completes on P'=2 with exit 0 — the cross-process
+# analogue of tests/integration.rs's
+# server_repartitions_to_p2_on_one_of_three_worker_loss (same vit
+# P=3 L=3 geometry, whose P'=2 fallback is in the AOT grid).
+#
+# Wired as `make mesh-smoke` and the CI mesh-smoke job. Skips cleanly
+# (exit 0) when the AOT artifacts are absent, like every artifact-gated
+# test in the repo.
+set -u
+
+cd "$(dirname "$0")/.."
+ART="${PRISM_ARTIFACTS:-artifacts}"
+if [ ! -f "$ART/manifest.json" ]; then
+    echo "mesh-smoke: SKIP (no artifacts; run \`make artifacts\` first)"
+    exit 0
+fi
+
+cargo build --release || exit 1
+BIN=target/release/prism
+PORTS=(47970 47971 47972)
+LOG=$(mktemp -d)
+echo "mesh-smoke: logs under $LOG"
+
+WPIDS=()
+SPID=""
+cleanup() {
+    kill ${WPIDS[@]+"${WPIDS[@]}"} ${SPID:+"$SPID"} 2>/dev/null
+    wait 2>/dev/null
+}
+trap cleanup EXIT
+for port in "${PORTS[@]}"; do
+    "$BIN" worker --listen "127.0.0.1:$port" --artifacts "$ART" \
+        >"$LOG/worker_$port.log" 2>&1 &
+    WPIDS+=("$!")
+done
+
+WORKERS="127.0.0.1:${PORTS[0]},127.0.0.1:${PORTS[1]},127.0.0.1:${PORTS[2]}"
+"$BIN" serve --model vit --dataset synth10 --mode prism --l 3 \
+    --requests 96 --workers "$WORKERS" --gather-timeout-ms 3000 \
+    --artifacts "$ART" >"$LOG/serve.log" 2>&1 &
+SPID=$!
+
+# grep_wait <pattern> <file> <seconds>
+grep_wait() {
+    for _ in $(seq 1 $(( $3 * 2 ))); do
+        grep -q "$1" "$2" 2>/dev/null && return 0
+        kill -0 "$SPID" 2>/dev/null || return 1
+        sleep 0.5
+    done
+    return 1
+}
+
+if ! grep_wait "mesh up: 3 workers" "$LOG/serve.log" 120; then
+    echo "mesh-smoke: FAIL (mesh never came up)"
+    cat "$LOG/serve.log"
+    exit 1
+fi
+if ! grep_wait "batch 1 done" "$LOG/serve.log" 300; then
+    echo "mesh-smoke: FAIL (no batch completed on the full mesh)"
+    cat "$LOG/serve.log"
+    exit 1
+fi
+
+# kill one worker mid-run: the master must probe, re-plan to P'=2, and
+# finish every remaining batch
+kill "${WPIDS[1]}"
+echo "mesh-smoke: killed worker on port ${PORTS[1]}"
+
+wait "$SPID"
+RC=$?
+echo "--- serve.log ---"
+cat "$LOG/serve.log"
+if [ "$RC" -ne 0 ]; then
+    echo "mesh-smoke: FAIL (serve exited $RC)"
+    exit 1
+fi
+if ! grep -q "re-plans" "$LOG/serve.log"; then
+    echo "mesh-smoke: FAIL (worker loss never re-planned)"
+    exit 1
+fi
+if ! grep -q "done on epoch [1-9].*P'=2" "$LOG/serve.log"; then
+    echo "mesh-smoke: FAIL (no batch completed on the P'=2 epoch)"
+    exit 1
+fi
+if ! grep -q "throughput" "$LOG/serve.log"; then
+    echo "mesh-smoke: FAIL (serve never reported completion)"
+    exit 1
+fi
+echo "mesh-smoke: OK (worker killed mid-run, completed on P'=2, exit 0)"

@@ -20,6 +20,7 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use prism::decode::{DecodeSession, RefCfg, RefGpt};
+use prism::net::mesh::MeshTransport;
 use prism::net::message::Msg;
 use prism::net::{FaultCfg, FaultNet, LinkModel, PeerHealth, SimEndpoint,
                  SimNet, Transport, TransportError};
@@ -27,7 +28,7 @@ use prism::runtime::Tensor;
 use prism::util::quant::WireFmt;
 
 mod common;
-use common::seeds;
+use common::{mesh_transport, seeds};
 
 /// Heartbeat policy shared by the chaos driver and the detection-latency
 /// assertion (DESIGN.md: detection <= interval * (misses + 1) + 1 tick).
@@ -370,6 +371,273 @@ fn unreplicated_session_aborts_loudly_on_disconnect() {
     // the session itself is still usable on the full mesh
     assert!(session.generate_next().is_ok());
     assert_eq!(session.live_devices(), 2);
+}
+
+// ---------------- the same scenarios over the worker mesh ---------------
+//
+// `PRISM_TRANSPORT=mesh` (the CI faults matrix's transport axis) runs
+// the full seed matrix below over `net::mesh::MeshTransport` — every
+// per-peer edge independently FaultNet-wrapped, whole-process death
+// modeled by dropping a participant's entire transport. The mesh rides
+// the wall clock, so the *outcome* properties (nothing lost, nothing
+// duplicated, streams bit-identical, failover observed) are asserted
+// rather than the virtual-clock transcripts the SimNet flavor pins;
+// without the toggle a two-seed smoke keeps the path covered.
+
+/// A P-participant mesh (the shared `common::fault_channel_mesh`
+/// builder), `Option`-wrapped so a test can kill a whole participant.
+fn fault_mesh(p: usize, seed: u64, fault: Fault)
+              -> Vec<Option<MeshTransport>> {
+    common::fault_channel_mesh(p, p, seed, &fault.cfg())
+        .0
+        .into_iter()
+        .map(Some)
+        .collect()
+}
+
+fn mesh_seed_matrix() -> Vec<u64> {
+    if mesh_transport() {
+        seeds()
+    } else {
+        seeds().into_iter().take(2).collect()
+    }
+}
+
+/// The retrying request/response protocol from `run_request_response`,
+/// over mesh edges: master (id 2) round-robins jobs, retries on
+/// deadline, dedups by sequence, re-routes on typed `PeerDown`.
+fn run_request_response_mesh(seed: u64, fault: Fault)
+                             -> Vec<(u64, usize)> {
+    let mut nodes = fault_mesh(3, seed, fault);
+    if fault == Fault::Disconnect {
+        nodes[0] = None; // worker 0's process dies before any traffic
+    }
+    let mut master = nodes[2].take().unwrap();
+    let pump = |nodes: &mut Vec<Option<MeshTransport>>| {
+        for w in nodes.iter_mut().flatten() {
+            loop {
+                match w.recv_deadline(ms(2)) {
+                    Ok(env) => {
+                        if let Msg::Job { request, .. } = env.msg {
+                            let from = w.local_id() as u32;
+                            let _ = w.send(2, Msg::Exchange {
+                                epoch: 0,
+                                layer: request as u32,
+                                from,
+                                data: Tensor::from_f32(vec![1],
+                                                       vec![1.0])
+                                    .unwrap(),
+                            });
+                        }
+                    }
+                    Err(_) => break,
+                }
+            }
+        }
+    };
+    let n_requests = 20u64;
+    let mut transcript = Vec::new();
+    let mut dead = [false; 2];
+    for seq in 0..n_requests {
+        let mut target = (seq % 2) as usize;
+        if dead[target] {
+            target = 1 - target;
+        }
+        let job = || Msg::Job {
+            epoch: 0,
+            request: seq,
+            x_p: Tensor::from_f32(vec![2], vec![0.5, -0.5]).unwrap(),
+            ctx: vec![],
+        };
+        if let Err(TransportError::PeerDown { .. }) =
+            master.send(target, job())
+        {
+            dead[target] = true;
+            target = 1 - target;
+            master.send(target, job()).unwrap();
+        }
+        let mut attempts = 0;
+        loop {
+            pump(&mut nodes);
+            match master.recv_deadline(ms(30)) {
+                Ok(env) => match env.msg {
+                    Msg::Exchange { layer, from, .. }
+                        if layer as u64 == seq =>
+                    {
+                        transcript.push((seq, from as usize));
+                        break;
+                    }
+                    _ => {} // stale or duplicated response: ignore
+                },
+                Err(TransportError::Timeout { .. }) => {
+                    attempts += 1;
+                    assert!(attempts < 100,
+                            "seq {seq} starved under {fault:?} seed \
+                             {seed} (mesh)");
+                    if let Err(TransportError::PeerDown { .. }) =
+                        master.send(target, job())
+                    {
+                        dead[target] = true;
+                        target = 1 - target;
+                    }
+                }
+                // a whole participant died: re-route and retry
+                Err(TransportError::PeerDown { peer }) => {
+                    if peer < 2 {
+                        dead[peer] = true;
+                        if target == peer {
+                            target = 1 - target;
+                            let _ = master.send(target, job());
+                        }
+                    }
+                }
+                Err(e) => panic!("unexpected transport error: {e}"),
+            }
+        }
+    }
+    transcript
+}
+
+/// Mesh flavor of the request/response acceptance: every fault class
+/// completes all requests exactly once over FaultNet-wrapped mesh
+/// edges, and a dead participant's requests all land on the survivor.
+#[test]
+fn request_response_survives_every_fault_class_over_mesh() {
+    let t0 = Instant::now();
+    for &seed in &mesh_seed_matrix() {
+        for fault in FAULTS {
+            let transcript = run_request_response_mesh(seed, fault);
+            assert_eq!(transcript.len(), 20,
+                       "{fault:?} seed {seed} (mesh)");
+            let mut seqs: Vec<u64> =
+                transcript.iter().map(|(s, _)| *s).collect();
+            seqs.sort();
+            assert_eq!(seqs, (0..20).collect::<Vec<u64>>(),
+                       "{fault:?} seed {seed} (mesh): lost or \
+                        duplicated seqs");
+            if fault == Fault::Disconnect {
+                assert!(transcript.iter().all(|&(_, w)| w == 1),
+                        "{fault:?} seed {seed} (mesh): dead worker \
+                         answered");
+            }
+        }
+    }
+    assert!(t0.elapsed() < Duration::from_secs(120),
+            "mesh chaos flavor must stay fast: {:?}", t0.elapsed());
+}
+
+/// Mesh flavor of the decode-failover acceptance: heartbeats cross
+/// FaultNet-wrapped mesh edges, detection runs `PeerHealth` on a
+/// synthetic one-interval-per-tick clock (the wall clock plays no role
+/// in verdicts), and the surviving stream must be bit-identical to full
+/// recompute.
+fn run_decode_chaos_mesh(seed: u64, fault: Fault, kill: Option<usize>,
+                         model: &Arc<RefGpt>, prompt: &[i32],
+                         steps: usize)
+                         -> (Vec<i32>, usize, usize, Option<usize>) {
+    let interval = ms(HB_INTERVAL_MS);
+    let mut nodes = fault_mesh(3, seed ^ 0xBEEF, fault);
+    let mut master = nodes[2].take().unwrap();
+    let mut health = PeerHealth::new(2, interval, HB_MISSES_ALLOWED,
+                                     Duration::ZERO);
+    let mut session =
+        DecodeSession::new(model.clone(), 2, 4, WireFmt::F32).unwrap();
+    session.enable_replication().unwrap();
+    session.prefill(prompt).unwrap();
+    let kill_at = 3 + (seed % 4) as usize;
+    let mut stream = Vec::with_capacity(steps);
+    let mut detect_token = None;
+    for token in 0..steps {
+        if kill == Some(0) && token == kill_at {
+            nodes[0] = None; // the whole worker process dies
+        }
+        for w in nodes.iter_mut().flatten() {
+            let from = w.local_id() as u32;
+            let _ = w.send(2, Msg::Heartbeat { from,
+                                               seq: token as u64 });
+        }
+        // one scheduling tick == one heartbeat interval of synthetic
+        // time; drain everything queued
+        let now = interval * (token as u32 + 1);
+        loop {
+            match master.recv_deadline(ms(10)) {
+                Ok(env) => {
+                    if let Msg::Heartbeat { from, .. } = env.msg {
+                        health.beat(from as usize, now);
+                    }
+                }
+                Err(_) => break,
+            }
+        }
+        for dead in health.dead_peers(now) {
+            if session.device_alive(dead) && session.live_devices() > 1 {
+                session.fail_device(dead).unwrap();
+                if detect_token.is_none() {
+                    detect_token = Some(token);
+                }
+            }
+        }
+        stream.push(session.generate_next().unwrap());
+    }
+    assert!(session.stats().replica_bytes > 0);
+    (stream, session.live_devices(), session.stats().migrated_bytes,
+     detect_token)
+}
+
+#[test]
+fn decode_failover_bit_identical_over_mesh() {
+    let t0 = Instant::now();
+    let model = Arc::new(RefGpt::tiny(11, RefCfg {
+        vocab: 20,
+        n: 32,
+        d: 16,
+        heads: 2,
+        layers: 2,
+        ffn: 32,
+    })
+    .unwrap());
+    let prompt = vec![3i32, 7, 1, 12, 5];
+    let steps = 18;
+    let (reference, _) = model
+        .greedy_decode_full(&prompt, steps, 2, 4, WireFmt::F32)
+        .unwrap();
+    for &seed in &mesh_seed_matrix() {
+        for fault in FAULTS {
+            let kill = if fault == Fault::Disconnect {
+                Some(0)
+            } else {
+                None
+            };
+            let (stream, live, migrated, detect) =
+                run_decode_chaos_mesh(seed, fault, kill, &model,
+                                      &prompt, steps);
+            assert_eq!(stream, reference,
+                       "{fault:?} seed {seed} (mesh): stream diverged");
+            if fault == Fault::Disconnect {
+                assert_eq!(live, 1,
+                           "{fault:?} seed {seed} (mesh): no failover");
+                assert!(migrated > 0);
+                // clean edges (Disconnect injects no link faults):
+                // detection lands exactly at the PeerHealth bound on
+                // the synthetic clock
+                let kill_at = 3 + (seed % 4) as usize;
+                assert_eq!(detect,
+                           Some(kill_at + HB_MISSES_ALLOWED as usize
+                                + 1),
+                           "{fault:?} seed {seed} (mesh): detection \
+                            off the PeerHealth bound");
+            }
+            // outcome determinism: the token stream replays exactly
+            // (failover timing may ride wall-clock polling, the bits
+            // may not)
+            let (again, _, _, _) =
+                run_decode_chaos_mesh(seed, fault, kill, &model,
+                                      &prompt, steps);
+            assert_eq!(stream, again);
+        }
+    }
+    assert!(t0.elapsed() < Duration::from_secs(120),
+            "mesh chaos flavor must stay fast: {:?}", t0.elapsed());
 }
 
 /// Transport-level disconnect semantics: sends fail typed, peers lists

@@ -1,5 +1,11 @@
 //! Shared helpers for the deterministic fault/membership suites.
 
+use std::sync::Arc;
+use std::time::Duration;
+
+use prism::net::mesh::{channel_edge, MeshTransport};
+use prism::net::{FaultCfg, FaultNet, NetStats};
+
 /// The fixed seed matrix both suites pin; mirrors the fan-out in
 /// `.github/workflows/ci.yml` and the Makefile's `CHAOS_SEEDS`.
 pub const DEFAULT_SEEDS: [u64; 10] = [11, 23, 37, 41, 53, 67, 79, 97,
@@ -16,4 +22,50 @@ pub fn seeds() -> Vec<u64> {
             .collect(),
         Err(_) => DEFAULT_SEEDS.to_vec(),
     }
+}
+
+/// `PRISM_TRANSPORT=mesh` re-runs the suites over the worker-to-worker
+/// mesh transport (`net::mesh::MeshTransport` with FaultNet-wrapped
+/// per-peer edges) instead of the default virtual-clock `SimNet` — the
+/// CI faults matrix fans out over both. (Not every suite consults the
+/// toggle; the elastic mesh tests run unconditionally.)
+#[allow(dead_code)]
+pub fn mesh_transport() -> bool {
+    std::env::var("PRISM_TRANSPORT")
+        .map(|v| v.eq_ignore_ascii_case("mesh"))
+        .unwrap_or(false)
+}
+
+/// All-pairs worker mesh over ids `0..p` (allocating `devices` total
+/// id slots so a master can be added on top), every edge half
+/// independently FaultNet-wrapped with a per-directed-edge seed
+/// derived from `seed` (schedules differ across the mesh but replay
+/// per seed), all participants sharing one `NetStats` sink. The one
+/// mesh builder both suites use, so edge wiring and seeding cannot
+/// drift between them.
+#[allow(dead_code)]
+pub fn fault_channel_mesh(p: usize, devices: usize, seed: u64,
+                          cfg: &FaultCfg)
+                          -> (Vec<MeshTransport>, Arc<NetStats>) {
+    let stats = NetStats::new(devices);
+    let mut meshes: Vec<MeshTransport> = (0..p)
+        .map(|i| {
+            let mut m = MeshTransport::new(i, devices,
+                                           Duration::from_millis(100));
+            m.set_stats(stats.clone());
+            m
+        })
+        .collect();
+    for a in 0..p {
+        for b in a + 1..p {
+            let (ea, eb) = channel_edge(a, b);
+            let sa = seed ^ (((a * devices + b) as u64) << 8) ^ 0xA5;
+            let sb = seed ^ (((b * devices + a) as u64) << 8) ^ 0x5A;
+            meshes[a].add_edge(
+                b, Box::new(FaultNet::new(ea, sa, cfg.clone())));
+            meshes[b].add_edge(
+                a, Box::new(FaultNet::new(eb, sb, cfg.clone())));
+        }
+    }
+    (meshes, stats)
 }

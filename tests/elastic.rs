@@ -23,6 +23,11 @@ use std::time::{Duration, Instant};
 use prism::coordinator::cluster::ClusterView;
 use prism::coordinator::Mode;
 use prism::decode::{DecodeSession, RefCfg, RefGpt};
+use prism::net::mesh::{channel_edge, hub_exchange_bytes,
+                       mesh_exchange_bytes, MeshTransport};
+use prism::net::message::Msg;
+use prism::net::{FaultCfg, Transport, TransportError};
+use prism::runtime::Tensor;
 use prism::server::{DecodeEvent, DecodeRequest, DecodeScheduler};
 use prism::util::quant::WireFmt;
 use prism::util::rng::Rng;
@@ -236,6 +241,123 @@ fn scheduler_repartitions_then_restores_over_seeds() {
     }
     assert!(t0.elapsed() < Duration::from_secs(60),
             "elastic suite must stay fast: {:?}", t0.elapsed());
+}
+
+/// The mesh acceptance (ISSUE 4): a P=4 all-to-all of Segment-Means
+/// shares over the worker-to-worker mesh — every edge FaultNet-wrapped,
+/// like the serving path — measures exactly P·(P−1)·b wire bytes, *at
+/// most half* of what the master-relay hub pays for the same exchange
+/// (every relayed share crosses two links). Then the elastic re-plumb:
+/// device 1 dies wholesale, the master's epoch-tagged `Msg::Reconfig`
+/// re-plumbs the surviving edges, and the P'=3 exchange rounds route
+/// over them with the shrunk byte bill — a send to the written-off
+/// device fails typed, never silently.
+#[test]
+fn mesh_exchange_at_most_half_of_hub_and_replumbs_on_reconfig() {
+    let (p, d) = (4usize, 16usize);
+    let share = d * 4; // one (D,) f32 Segment-Means row
+    let master = p; // control-plane only: no exchange ever touches it
+    // the shared suite builder: FaultNet-wrapped worker-worker edges
+    // (no faults scheduled here — the re-plumb must be deterministic)
+    let (meshes, stats) =
+        common::fault_channel_mesh(p, p + 1, 0x900D, &FaultCfg::none());
+    let mut nodes: Vec<Option<MeshTransport>> =
+        meshes.into_iter().map(Some).collect();
+    let mut hub = MeshTransport::new(master, p + 1,
+                                     Duration::from_millis(100));
+    hub.set_stats(stats.clone());
+    for w in 0..p {
+        let (em, ew) = channel_edge(master, w);
+        hub.add_edge(w, Box::new(em));
+        nodes[w].as_mut().unwrap().add_edge(master, Box::new(ew));
+    }
+    let row = Tensor::from_f32(vec![d], vec![0.25; d]).unwrap();
+    let exchange = |nodes: &mut Vec<Option<MeshTransport>>,
+                    live: &[usize], epoch: u32, layer: u32| {
+        for &w in live {
+            for &to in live {
+                if to != w {
+                    nodes[w].as_mut().unwrap().send(to, Msg::Exchange {
+                        epoch,
+                        layer,
+                        from: w as u32,
+                        data: row.clone(),
+                    })
+                    .unwrap();
+                }
+            }
+        }
+        // every node drains its barrier: live-peers-minus-one shares
+        for &w in live {
+            let mut got = 0;
+            while got < live.len() - 1 {
+                let env = nodes[w].as_mut().unwrap()
+                    .recv_deadline(Duration::from_millis(200))
+                    .unwrap();
+                assert!(matches!(env.msg,
+                                 Msg::Exchange { epoch: e, .. }
+                                 if e == epoch));
+                got += 1;
+            }
+        }
+    };
+    // epoch 0: two full-strength exchange rounds (two "layers")
+    let live: Vec<usize> = (0..p).collect();
+    exchange(&mut nodes, &live, 0, 0);
+    exchange(&mut nodes, &live, 0, 1);
+    let full = stats.total_bytes();
+    assert_eq!(full, 2 * mesh_exchange_bytes(p, share),
+               "measured mesh bytes off the accounting model");
+    // the headline: direct mesh traffic is at most half the hub relay
+    assert!(full * 2 <= 2 * hub_exchange_bytes(p, share),
+            "mesh {} B must be <= half the hub relay's {} B",
+            full, 2 * hub_exchange_bytes(p, share));
+    // device 1 dies wholesale; the master re-plumbs the survivors onto
+    // epoch 1 (P'=3) with an epoch-tagged Reconfig
+    nodes[1] = None;
+    let survivors = vec![0usize, 2, 3];
+    for &w in &survivors {
+        hub.send(w, Msg::Reconfig {
+            epoch: 1,
+            mode: 2,
+            p: 3,
+            l: 5,
+            live: survivors.iter().map(|&x| x as u32).collect(),
+        })
+        .unwrap();
+    }
+    for &w in &survivors {
+        // the dead device's edge may surface its PeerDown first; the
+        // transport drops the edge and the poll moves on
+        let env = loop {
+            match nodes[w].as_mut().unwrap()
+                .recv_deadline(Duration::from_millis(200))
+            {
+                Ok(env) => break env,
+                Err(TransportError::PeerDown { peer: 1 }) => continue,
+                Err(e) => panic!("worker {w}: {e}"),
+            }
+        };
+        let Msg::Reconfig { epoch: 1, live, .. } = env.msg else {
+            panic!("worker {w} wanted the epoch-1 Reconfig");
+        };
+        assert_eq!(live, vec![0, 2, 3]);
+        // a send to the written-off device fails typed, never silently
+        assert!(matches!(
+            nodes[w].as_mut().unwrap().send(1, Msg::Heartbeat {
+                from: w as u32,
+                seq: 1,
+            }),
+            Err(TransportError::PeerDown { peer: 1 })));
+    }
+    // the re-plumbed P'=3 exchange pays the shrunk byte bill (the
+    // failed probes above carried 0 wire bytes)
+    let before = stats.total_bytes();
+    exchange(&mut nodes, &survivors, 1, 0);
+    let shrunk = stats.total_bytes() - before;
+    assert_eq!(shrunk, mesh_exchange_bytes(3, share));
+    // and stays at most half of the equivalent P'=3 hub relay
+    assert!(shrunk * 2 <= hub_exchange_bytes(3, share));
 }
 
 /// The replication cost knob rides the same membership machinery: f16
