@@ -9,8 +9,8 @@ PYTHON ?= python3
 # .github/workflows/ci.yml.
 CHAOS_SEEDS ?= 11,23,37,41,53,67,79,97,101,113
 
-.PHONY: all build test verify chaos elastic chaos-mesh mesh-smoke \
-        bench-decode bench-mesh artifacts lint fmt clean
+.PHONY: all build test verify chaos elastic soak chaos-mesh mesh-smoke \
+        bench-decode bench-mesh bench-soak artifacts lint fmt clean
 
 all: build
 
@@ -33,6 +33,12 @@ chaos:
 elastic:
 	CHAOS_SEEDS=$(CHAOS_SEEDS) $(CARGO) test --test elastic
 
+# Deterministic full-stack soak: >= 1000 mixed requests through the
+# real serving loops on the virtual clock, kill/re-join thread churn,
+# bit-identical double runs per seed. Artifact-free, zero wall sleeps.
+soak:
+	CHAOS_SEEDS=$(CHAOS_SEEDS) $(CARGO) test --test soak
+
 # The chaos suite over the worker-to-worker mesh transport (FaultNet
 # wraps every per-peer edge; `tests/common::mesh_transport`). The
 # elastic suite's mesh tests run unconditionally under `make elastic`.
@@ -54,6 +60,11 @@ bench-decode:
 # BENCH_mesh_bytes.json like bench-decode writes its BENCH json.
 bench-mesh:
 	$(CARGO) bench --bench mesh_bytes
+
+# Soak smoke bench (artifact-free): virtual-time req/s + latency
+# percentiles at a fixed seed; writes BENCH_soak.json.
+bench-soak:
+	$(CARGO) bench --bench soak_throughput
 
 # Layer-1/2 AOT lowering: produces artifacts/ (HLO text, weights,
 # datasets, fixtures, manifest.json). Requires the JAX/Pallas toolchain.

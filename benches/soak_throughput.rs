@@ -1,0 +1,77 @@
+//! §Perf soak bench: the deterministic full-stack soak harness
+//! (`sim::run_soak` — real serving loops on the virtual clock) at a
+//! fixed seed, reporting virtual-time throughput and latency
+//! percentiles plus the wall cost of simulating it.
+//!
+//! Artifact-free (the sim's stand-in blocks need no AOT artifacts), so
+//! this runs on any checkout:
+//!
+//!     cargo bench --bench soak_throughput
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+use anyhow::Result;
+use prism::sim::{run_soak, SoakCfg};
+use prism::util::json::Json;
+
+fn main() -> Result<()> {
+    let mut cfg = SoakCfg::small(11);
+    cfg.workload.requests = 2000;
+    println!("== soak throughput (virtual clock, P={} L={}, {} mixed \
+              requests, kill/re-join churn) ==",
+             cfg.p, cfg.l, cfg.workload.requests);
+
+    let t0 = Instant::now();
+    let report = run_soak(&cfg)?;
+    let wall = t0.elapsed().as_secs_f64();
+
+    // contract: the soak is drop-free and ends at full strength
+    assert_eq!(report.dropped(), 0, "soak dropped requests");
+    assert_eq!(report.final_p, cfg.p, "soak did not restore full P");
+    assert!(report.virtual_secs > 0.0);
+    // and simulating it costs seconds, not the virtual timeline
+    assert!(wall < 60.0, "soak bench too slow: {wall:.1}s wall");
+
+    let req_per_vs = report.requests() as f64 / report.virtual_secs;
+    let eval_p50_ms = report.eval_latency.p50() * 1e3;
+    let eval_p99_ms = report.eval_latency.p99() * 1e3;
+    let dec_p50_ms = report.decode_latency.p50() * 1e3;
+    let dec_p99_ms = report.decode_latency.p99() * 1e3;
+    println!("requests   : {} eval + {} decode streams ({} tokens)",
+             report.eval_requests, report.decode_streams,
+             report.decode_tokens);
+    println!("virtual    : {:.2}s ({req_per_vs:.1} req/s), {} epochs, \
+              {} wire bytes", report.virtual_secs, report.final_epoch,
+             report.wire_bytes);
+    println!("eval lat   : p50 {eval_p50_ms:.2}ms p99 \
+              {eval_p99_ms:.2}ms");
+    println!("decode lat : p50 {dec_p50_ms:.2}ms p99 {dec_p99_ms:.2}ms");
+    println!("wall       : {wall:.2}s to simulate \
+              ({:.0}x faster than the virtual timeline)",
+             report.virtual_secs / wall.max(1e-9));
+
+    // machine-readable record for the CI perf-trajectory artifact
+    // (uploaded as BENCH_*.json per PR)
+    let mut obj: BTreeMap<String, Json> = BTreeMap::new();
+    obj.insert("bench".into(), Json::Str("soak_throughput".into()));
+    obj.insert("seed".into(), Json::Num(cfg.seed as f64));
+    obj.insert("requests".into(),
+               Json::Num(report.requests() as f64));
+    obj.insert("virtual_secs".into(),
+               Json::Num(report.virtual_secs));
+    obj.insert("wall_secs".into(), Json::Num(wall));
+    obj.insert("req_per_virtual_sec".into(), Json::Num(req_per_vs));
+    obj.insert("eval_p50_ms".into(), Json::Num(eval_p50_ms));
+    obj.insert("eval_p99_ms".into(), Json::Num(eval_p99_ms));
+    obj.insert("decode_p50_ms".into(), Json::Num(dec_p50_ms));
+    obj.insert("decode_p99_ms".into(), Json::Num(dec_p99_ms));
+    obj.insert("final_epoch".into(),
+               Json::Num(report.final_epoch as f64));
+    obj.insert("wire_bytes".into(),
+               Json::Num(report.wire_bytes as f64));
+    let path = "BENCH_soak.json";
+    std::fs::write(path, Json::Obj(obj).dump())?;
+    println!("json       : {path}");
+    Ok(())
+}

@@ -118,6 +118,12 @@ impl ClusterView {
         (0..self.alive.len()).filter(|&d| !self.alive[d]).collect()
     }
 
+    /// Every configured device is live again (the post-re-join
+    /// acceptance: the soak's final geometry must be the full P).
+    pub fn full_strength(&self) -> bool {
+        self.alive.iter().all(|&a| a)
+    }
+
     /// Mark a device dead and bump the epoch. Allowed down to zero live
     /// devices (the cluster is then unservable until a re-join —
     /// `current` reports it instead of panicking).
@@ -318,6 +324,10 @@ mod tests {
         assert!(!view.is_alive(7));
         assert_eq!(view.live_devices(), vec![0, 2]);
         assert_eq!(view.dead_devices(), vec![1]);
+        assert!(!view.full_strength());
+        view.add_device(1).unwrap();
+        assert!(view.full_strength());
+        view.fail_device(1).unwrap();
         // voltage has no landmark geometry
         assert_eq!(view.geometry().unwrap(), (2, 0));
         // invalid base geometries are rejected up front

@@ -155,6 +155,48 @@ pub struct DecodeSession {
     /// bit-identical; f16/i8 shrink `replica_bytes` but the replica the
     /// adopter rebuilds from is requantized (lossy).
     replica_wire: WireFmt,
+    /// Set when a failover rebuilt state from a *lossy* replica: the
+    /// resumed stream may drift from the exact continuation of the
+    /// token log until `resync_from_log` re-prefills it.
+    lossy_resume: bool,
+}
+
+/// Pristine per-token state for a frozen partition geometry: per-
+/// partition KV caches, running Segment-Means states, peer mirrors,
+/// and projected context K/V. The one constructor `new` builds from
+/// and `resync_from_log` rebuilds with — shared so a re-prefill can
+/// never drift out of shape with a fresh session.
+type FreshState = (Vec<KvCache>, Vec<Vec<SegMeansState>>,
+                   Vec<Vec<SegMirror>>, Vec<Vec<DeviceCtx>>);
+
+fn fresh_state(cfg: &crate::decode::RefCfg, pls: &[PartitionPlan],
+               p: usize, l: usize) -> Result<FreshState> {
+    let hd = cfg.d / cfg.heads;
+    let caches = pls
+        .iter()
+        .map(|pl| KvCache::new(cfg.layers, cfg.heads, hd, pl.n_p()))
+        .collect();
+    let segs = (0..cfg.layers)
+        .map(|_| {
+            pls.iter()
+                .map(|pl| SegMeansState::new(pl.n_p(), l, cfg.d))
+                .collect::<Result<Vec<_>>>()
+        })
+        .collect::<Result<Vec<_>>>()?;
+    let mirrors = (0..cfg.layers)
+        .map(|_| (0..p).map(|_| SegMirror::new(l, cfg.d)).collect())
+        .collect();
+    let ctx = (0..cfg.layers)
+        .map(|_| {
+            (0..p)
+                .map(|_| DeviceCtx {
+                    ctx_k: vec![0.0; l * cfg.d],
+                    ctx_v: vec![0.0; l * cfg.d],
+                })
+                .collect()
+        })
+        .collect();
+    Ok((caches, segs, mirrors, ctx))
 }
 
 impl DecodeSession {
@@ -165,18 +207,8 @@ impl DecodeSession {
             bail!("DecodeSession needs P >= 1 and L >= 1 (got P={p} L={l})");
         }
         let pls = plans(cfg.n, p, l, true)?;
-        let hd = cfg.d / cfg.heads;
-        let caches = pls
-            .iter()
-            .map(|pl| KvCache::new(cfg.layers, cfg.heads, hd, pl.n_p()))
-            .collect();
-        let segs = (0..cfg.layers)
-            .map(|_| {
-                pls.iter()
-                    .map(|pl| SegMeansState::new(pl.n_p(), l, cfg.d))
-                    .collect::<Result<Vec<_>>>()
-            })
-            .collect::<Result<Vec<_>>>()?;
+        let (caches, segs, mirrors, ctx) =
+            fresh_state(&cfg, &pls, p, l)?;
         let biases = pls
             .iter()
             .map(|pl| -> Result<Vec<f32>> {
@@ -188,19 +220,6 @@ impl DecodeSession {
             })
             .collect::<Result<Vec<_>>>()?;
         let peer_lists = pls.iter().map(|pl| pl.peers()).collect();
-        let mirrors = (0..cfg.layers)
-            .map(|_| (0..p).map(|_| SegMirror::new(l, cfg.d)).collect())
-            .collect();
-        let ctx = (0..cfg.layers)
-            .map(|_| {
-                (0..p)
-                    .map(|_| DeviceCtx {
-                        ctx_k: vec![0.0; l * cfg.d],
-                        ctx_v: vec![0.0; l * cfg.d],
-                    })
-                    .collect()
-            })
-            .collect();
         Ok(DecodeSession {
             model,
             p,
@@ -220,6 +239,7 @@ impl DecodeSession {
             hosts: (0..p).collect(),
             replicate: false,
             replica_wire: WireFmt::F32,
+            lossy_resume: false,
         })
     }
 
@@ -513,7 +533,63 @@ impl DecodeSession {
         for &pi in &moving {
             self.migrate_partition(pi, pi, lossy)?;
         }
+        if lossy.is_some() && lost_state {
+            // the adopted rows are requantized: the resumed stream is
+            // no longer guaranteed exact — `resync_from_log` repairs it
+            self.lossy_resume = true;
+        }
         Ok(adopter)
+    }
+
+    /// True after a failover rebuilt live state from a lossy (f16/i8)
+    /// replica: the stream keeps decoding but may have drifted from the
+    /// exact continuation of its token log. Cleared by
+    /// [`resync_from_log`](Self::resync_from_log).
+    pub fn lossy_resume(&self) -> bool {
+        self.lossy_resume
+    }
+
+    /// Re-prefill-on-divergence (ROADMAP refinement): the emitted token
+    /// log (`ids`) is ground truth — every token in it was already
+    /// streamed to the client — so rebuild *exact* f32 state by
+    /// replaying the log through the incremental forward, discarding
+    /// whatever a lossy failover left behind. From here on the stream
+    /// is bit-identical to a full recompute of the log. Returns whether
+    /// the frontier had actually drifted (the greedy pick over the
+    /// pre-resync logits differs from the exact one).
+    ///
+    /// The replay is real recompute work: every device re-absorbs its
+    /// rows and re-broadcasts its Segment-Means deltas to rebuild the
+    /// peers' mirrors, so `absorbed` and the wire-byte counters grow
+    /// accordingly.
+    pub fn resync_from_log(&mut self) -> Result<bool> {
+        let before = self.last_logits.as_ref().map(|lg| greedy_pick(lg));
+        let log = std::mem::take(&mut self.ids);
+        self.reset_state()?;
+        self.lossy_resume = false;
+        if log.is_empty() {
+            return Ok(false);
+        }
+        for &t in &log {
+            let lg = self.absorb(t)?;
+            self.last_logits = Some(lg);
+        }
+        let after = self.last_logits.as_ref().map(|lg| greedy_pick(lg));
+        Ok(before != after)
+    }
+
+    /// Pristine per-partition state for the frozen geometry — the same
+    /// `fresh_state` the constructor builds, re-derivable because
+    /// partition spans never move.
+    fn reset_state(&mut self) -> Result<()> {
+        let (caches, segs, mirrors, ctx) = fresh_state(
+            &self.model.cfg, &self.pls, self.p, self.l)?;
+        self.caches = caches;
+        self.segs = segs;
+        self.mirrors = mirrors;
+        self.ctx = ctx;
+        self.last_logits = None;
+        Ok(())
     }
 
     /// The dual of `fail_device`: a repaired device re-joins the mesh.
@@ -923,6 +999,92 @@ mod tests {
             assert!(tok > 0 && (tok as usize) < cfg.vocab,
                     "lossy failover emitted junk token {tok}");
         }
+    }
+
+    /// Re-prefill-on-divergence (ISSUE 5 satellite): after a lossy
+    /// failover the token log is ground truth — `resync_from_log`
+    /// rebuilds exact state by replaying it, the frontier drift
+    /// detector fires for at least one scanned case, and every resumed
+    /// stream converges back to the full-recompute continuation of its
+    /// own log.
+    #[test]
+    fn lossy_resume_resyncs_to_full_recompute_of_the_log() {
+        let m = model();
+        let prompt = vec![3i32, 7, 1, 12, 5, 9];
+        let mut drifted_cases = 0;
+        for (wire, kill_at) in [(WireFmt::I8, 1), (WireFmt::I8, 3),
+                                (WireFmt::I8, 6), (WireFmt::I8, 9),
+                                (WireFmt::F16, 4)] {
+            for victim in [0usize, 1] {
+                let mut sess =
+                    DecodeSession::new(m.clone(), 2, 4, WireFmt::F32)
+                        .unwrap();
+                sess.enable_replication_with(wire).unwrap();
+                sess.prefill(&prompt).unwrap();
+                for _ in 0..kill_at {
+                    sess.generate_next().unwrap();
+                }
+                sess.fail_device(victim).unwrap();
+                // the resume is lossy iff the victim actually held
+                // absorbed rows (victim 1's span [16, 32) fills late)
+                let victim_rows =
+                    victim == 0 || prompt.len() + kill_at > 16;
+                assert_eq!(sess.lossy_resume(), victim_rows,
+                           "{wire:?} kill@{kill_at} victim {victim}");
+                // resume on the (possibly drifted) lossy state: these
+                // tokens are canonical once emitted — they ARE the
+                // log, and every one compounds the state divergence
+                for _ in 0..5 {
+                    sess.generate_next().unwrap();
+                }
+                drifted_cases +=
+                    sess.resync_from_log().unwrap() as usize;
+                assert!(!sess.lossy_resume());
+                // convergence: the continuation equals an exact
+                // session re-prefilled with the same log
+                let log = sess.ids().to_vec();
+                let mut exact =
+                    DecodeSession::new(m.clone(), 2, 4, WireFmt::F32)
+                        .unwrap();
+                exact.prefill(&log).unwrap();
+                for step in 0..6 {
+                    assert_eq!(sess.generate_next().unwrap(),
+                               exact.generate_next().unwrap(),
+                               "{wire:?} kill@{kill_at} victim \
+                                {victim} step {step} diverged");
+                }
+            }
+        }
+        assert!(drifted_cases > 0,
+                "no scanned case drifted: the detector went untested");
+    }
+
+    /// The exact (f32) replica never flags a lossy resume, and a
+    /// resync on exact state is a harmless no-op stream-wise.
+    #[test]
+    fn exact_failover_never_flags_lossy_resume() {
+        let m = model();
+        let prompt = vec![3i32, 7, 1, 12, 5];
+        let steps = 12;
+        let (full, _) = m
+            .greedy_decode_full(&prompt, steps, 2, 4, WireFmt::F32)
+            .unwrap();
+        let mut sess =
+            DecodeSession::new(m.clone(), 2, 4, WireFmt::F32).unwrap();
+        sess.enable_replication().unwrap();
+        sess.prefill(&prompt).unwrap();
+        let mut got = Vec::new();
+        for _ in 0..4 {
+            got.push(sess.generate_next().unwrap());
+        }
+        sess.fail_device(0).unwrap();
+        assert!(!sess.lossy_resume(), "f32 failover is exact");
+        assert!(!sess.resync_from_log().unwrap(),
+                "exact state cannot drift");
+        for _ in 4..steps {
+            got.push(sess.generate_next().unwrap());
+        }
+        assert_eq!(got, full);
     }
 
     #[test]

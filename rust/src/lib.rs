@@ -27,5 +27,6 @@ pub mod model;
 pub mod net;
 pub mod runtime;
 pub mod server;
+pub mod sim;
 pub mod util;
 pub mod cli;

@@ -3,7 +3,11 @@
 //! error, plenty for serving dashboards.
 
 /// Histogram over positive values (seconds, bytes, ...).
-#[derive(Debug, Clone)]
+///
+/// `PartialEq` compares the full state — every bucket count plus the
+/// running moments — which is what the deterministic soak suite means
+/// by "bit-identical histograms across two runs".
+#[derive(Debug, Clone, PartialEq)]
 pub struct Histogram {
     buckets: Vec<u64>,
     count: u64,

@@ -5,10 +5,10 @@
 //! virtual-clock `SimClock` instead, which is deterministic).
 
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
-use anyhow::{anyhow, Result};
+use anyhow::{anyhow, bail, Result};
 
 use super::message::Msg;
 use super::model::LinkModel;
@@ -17,12 +17,29 @@ use super::transport::{Transport, TransportError};
 
 pub use super::transport::Envelope;
 
+/// The shared per-device sender slots. Routing through a slot (instead
+/// of a `Sender` snapshot per endpoint) is what makes a device
+/// *respawnable*: `MeshHandle::respawn` installs a fresh channel in the
+/// dead device's slot and every existing peer's next send reaches the
+/// replacement thread — the in-process analogue of a restarted
+/// `prism worker --listen` being re-dialed on its old address.
+type Slots = Arc<Vec<Mutex<Sender<Envelope>>>>;
+
+fn slot_send(slots: &Slots, from: usize, to: usize, msg: Msg)
+             -> Result<(), ()> {
+    let Some(slot) = slots.get(to) else {
+        return Err(());
+    };
+    let tx = slot.lock().unwrap_or_else(|e| e.into_inner());
+    tx.send(Envelope { from, to, msg }).map_err(|_| ())
+}
+
 /// One participant's handle into the mesh. Device ids `0..p` are workers,
 /// id `p` is the master.
 pub struct Endpoint {
     pub id: usize,
     rx: Receiver<Envelope>,
-    txs: Vec<Sender<Envelope>>,
+    slots: Slots,
     pub stats: Arc<NetStats>,
     pub pace: Option<LinkModel>,
 }
@@ -37,8 +54,7 @@ impl Endpoint {
                 std::thread::sleep(Duration::from_secs_f64(secs));
             }
         }
-        self.txs[to]
-            .send(Envelope { from: self.id, to, msg })
+        slot_send(&self.slots, self.id, to, msg)
             .map_err(|_| anyhow!("endpoint {to} hung up"))
     }
 
@@ -77,11 +93,11 @@ impl Transport for Endpoint {
     }
 
     fn peers(&self) -> Vec<usize> {
-        (0..self.txs.len()).filter(|&j| j != self.id).collect()
+        (0..self.slots.len()).filter(|&j| j != self.id).collect()
     }
 
     fn send(&mut self, to: usize, msg: Msg) -> Result<(), TransportError> {
-        if to >= self.txs.len() {
+        if to >= self.slots.len() {
             return Err(TransportError::PeerDown { peer: to });
         }
         Endpoint::send(self, to, msg)
@@ -102,21 +118,72 @@ impl Transport for Endpoint {
     }
 }
 
+/// Respawn capability for the in-process mesh: the threaded server's
+/// *worker slot*. A worker thread that exited dropped its receiver, so
+/// every send to its id fails (`PeerDown`) — exactly how the master
+/// writes it off. `respawn` installs a fresh channel in that slot and
+/// returns the replacement endpoint; peers route through the shared
+/// slot, so their next send reaches the new thread without any of them
+/// re-wiring.
+#[derive(Clone)]
+pub struct MeshHandle {
+    slots: Slots,
+    stats: Arc<NetStats>,
+    pace: Option<LinkModel>,
+}
+
+impl MeshHandle {
+    /// Fresh endpoint for device `id`, replacing whatever channel the
+    /// slot held. Only meaningful for a device whose previous thread is
+    /// gone — respawning a *live* device would orphan its endpoint.
+    pub fn respawn(&self, id: usize) -> Result<Endpoint> {
+        if id >= self.slots.len() {
+            bail!("device {id} out of range (mesh of {})",
+                  self.slots.len());
+        }
+        let (tx, rx) = channel();
+        *self.slots[id].lock().unwrap_or_else(|e| e.into_inner()) = tx;
+        Ok(Endpoint {
+            id,
+            rx,
+            slots: self.slots.clone(),
+            stats: self.stats.clone(),
+            pace: self.pace,
+        })
+    }
+
+    pub fn devices(&self) -> usize {
+        self.slots.len()
+    }
+}
+
 /// Build a mesh of `p` workers + 1 master (id `p`). Returns one endpoint
 /// per participant, workers first.
 pub fn mesh(p: usize, pace: Option<LinkModel>) -> Vec<Endpoint> {
+    mesh_with_handle(p, pace).0
+}
+
+/// [`mesh`], plus the [`MeshHandle`] that can respawn dead worker slots
+/// (the threaded re-join path).
+pub fn mesh_with_handle(p: usize, pace: Option<LinkModel>)
+                        -> (Vec<Endpoint>, MeshHandle) {
     let stats = NetStats::new(p + 1);
     let (txs, rxs): (Vec<_>, Vec<_>) = (0..=p).map(|_| channel()).unzip();
-    rxs.into_iter()
+    let slots: Slots =
+        Arc::new(txs.into_iter().map(Mutex::new).collect());
+    let eps = rxs
+        .into_iter()
         .enumerate()
         .map(|(id, rx)| Endpoint {
             id,
             rx,
-            txs: txs.clone(),
+            slots: slots.clone(),
             stats: stats.clone(),
             pace,
         })
-        .collect()
+        .collect();
+    let handle = MeshHandle { slots, stats, pace };
+    (eps, handle)
 }
 
 #[cfg(test)]
@@ -198,6 +265,37 @@ mod tests {
         drop(w0);
         assert_eq!(Transport::send(&mut master, 0, Msg::Shutdown),
                    Err(TransportError::PeerDown { peer: 0 }));
+    }
+
+    /// The respawnable worker slot: once a device's endpoint is gone,
+    /// sends to it fail typed; `respawn` installs a fresh channel and
+    /// every existing peer's next send reaches the replacement.
+    #[test]
+    fn respawn_restores_a_dead_worker_slot() {
+        use crate::net::transport::{Transport, TransportError};
+        let (mut eps, handle) = mesh_with_handle(2, None);
+        assert_eq!(handle.devices(), 3);
+        let mut master = eps.pop().unwrap();
+        let w1 = eps.pop().unwrap();
+        let w0 = eps.pop().unwrap();
+        drop(w0); // the worker thread exited
+        assert_eq!(Transport::send(&mut master, 0, Msg::Shutdown),
+                   Err(TransportError::PeerDown { peer: 0 }));
+        let respawned = handle.respawn(0).unwrap();
+        // the master's very next send lands on the replacement...
+        Transport::send(&mut master, 0, Msg::Shutdown).unwrap();
+        // ...and so does a surviving worker's, with no re-wiring
+        w1.send(0, Msg::Heartbeat { from: 1, seq: 7 }).unwrap();
+        let a = respawned.recv().unwrap();
+        let b = respawned.recv().unwrap();
+        assert!(matches!(a.msg, Msg::Shutdown));
+        assert!(matches!(b.msg, Msg::Heartbeat { seq: 7, .. }));
+        // the respawned endpoint can answer
+        respawned
+            .send(2, Msg::Heartbeat { from: 0, seq: 1 })
+            .unwrap();
+        assert_eq!(master.recv().unwrap().from, 0);
+        assert!(handle.respawn(9).is_err());
     }
 
     #[test]

@@ -17,10 +17,12 @@ pub mod tcp;
 pub mod transport;
 
 pub use faultnet::{FaultCfg, FaultNet};
+pub use inproc::{mesh_with_handle, MeshHandle};
 pub use mesh::{channel_edge, hub_exchange_bytes, mesh_exchange_bytes,
                ChannelEdge, MeshEdge, MeshTransport};
 pub use model::LinkModel;
 pub use sim::SimClock;
-pub use simnet::{SimEndpoint, SimNet};
+pub use simnet::{MtEndpoint, SimEndpoint, SimNet, SimNetMt};
 pub use stats::NetStats;
-pub use transport::{Envelope, PeerHealth, Transport, TransportError};
+pub use transport::{Envelope, PeerHealth, RejoinBackoff, Transport,
+                    TransportError};

@@ -18,7 +18,7 @@
 
 use std::cell::RefCell;
 use std::rc::Rc;
-use std::sync::Arc;
+use std::sync::{Arc, Condvar, Mutex};
 use std::time::Duration;
 
 use super::message::Msg;
@@ -172,6 +172,289 @@ impl Transport for SimEndpoint {
     }
 }
 
+// ---------------- conductor-scheduled multi-thread variant --------------
+//
+// `SimNet` is single-threaded by design; the soak harness (`sim::
+// cluster`) instead runs the *real* blocking serving loops — each worker
+// thread literally executes `server::worker_loop` — on the same virtual
+// clock. `SimNetMt` makes that deterministic FoundationDB-style: every
+// participant registers an endpoint, blocking calls (`recv_deadline`,
+// `sleep_until`) *park* the thread, and when every registered
+// participant is parked a conductor picks the globally earliest wake
+// event — a message arrival or a deadline horizon, ties broken by
+// participant id — advances the shared clock to it, and wakes exactly
+// that one thread. At most one participant ever runs at a time, so the
+// interleaving (and therefore every transcript, latency histogram, and
+// reconfiguration) is a pure function of the seed: zero wall sleeps,
+// bit-identical replays, wall time bounded by actual compute.
+
+/// How a registered participant is currently blocked.
+#[derive(Debug, Clone, Copy)]
+enum Park {
+    /// In `recv_deadline`: wake at the earliest inbox arrival, or at
+    /// the horizon (timeout).
+    Recv { horizon: f64 },
+    /// In `sleep_until`: wake at `until`, inbox ignored.
+    Sleep { until: f64 },
+}
+
+struct MtState {
+    now: f64,
+    seq: u64,
+    alive: Vec<bool>,
+    inboxes: Vec<Vec<Pending>>,
+    link: LinkModel,
+    stats: Arc<NetStats>,
+    /// Participant currently holds an endpoint (its thread is live).
+    registered: Vec<bool>,
+    /// `Some` while blocked in a virtual-time wait.
+    parked: Vec<Option<Park>>,
+    /// Wake tokens handed out by the conductor (or `kill`).
+    woken: Vec<bool>,
+}
+
+struct MtShared {
+    state: Mutex<MtState>,
+    cv: Condvar,
+}
+
+/// The thread-safe virtual-clock mesh; hand out one [`MtEndpoint`] per
+/// participant thread.
+pub struct SimNetMt {
+    shared: Arc<MtShared>,
+}
+
+impl SimNetMt {
+    pub fn new(devices: usize, link: LinkModel) -> SimNetMt {
+        SimNetMt {
+            shared: Arc::new(MtShared {
+                state: Mutex::new(MtState {
+                    now: 0.0,
+                    seq: 0,
+                    alive: vec![true; devices],
+                    inboxes: (0..devices).map(|_| Vec::new()).collect(),
+                    link,
+                    stats: NetStats::new(devices),
+                    registered: vec![false; devices],
+                    parked: vec![None; devices],
+                    woken: vec![false; devices],
+                }),
+                cv: Condvar::new(),
+            }),
+        }
+    }
+
+    /// Register participant `id` and return its endpoint. Must be
+    /// called before the owning thread starts blocking on it (the
+    /// conductor only waits for *registered* participants), and a
+    /// given id can hold at most one endpoint at a time.
+    pub fn endpoint(&self, id: usize) -> MtEndpoint {
+        let mut st = self.lock();
+        assert!(id < st.registered.len(), "device {id} out of range");
+        assert!(!st.registered[id], "device {id} already registered");
+        st.registered[id] = true;
+        MtEndpoint { id, shared: self.shared.clone() }
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, MtState> {
+        self.shared.state.lock().unwrap()
+    }
+
+    /// Kill a device: queued mail dropped, sends to it fail `PeerDown`,
+    /// its own calls fail `Closed`. A thread parked on the dead
+    /// endpoint is woken so its loop can observe the death and exit.
+    pub fn kill(&self, id: usize) {
+        let mut st = self.lock();
+        if id < st.alive.len() {
+            st.alive[id] = false;
+            st.inboxes[id].clear();
+            if st.parked[id].is_some() {
+                st.parked[id] = None;
+                st.woken[id] = true;
+                self.shared.cv.notify_all();
+            }
+        }
+    }
+
+    /// The dual of [`kill`](Self::kill): the device slot accepts
+    /// traffic again (with an empty inbox). The revived participant
+    /// must re-register via [`endpoint`](Self::endpoint) — its previous
+    /// thread has to have exited (and dropped its endpoint) first.
+    pub fn revive(&self, id: usize) {
+        let mut st = self.lock();
+        if id < st.alive.len() {
+            st.alive[id] = true;
+            st.inboxes[id].clear();
+        }
+    }
+
+    pub fn is_alive(&self, id: usize) -> bool {
+        self.lock().alive.get(id).copied().unwrap_or(false)
+    }
+
+    pub fn now_secs(&self) -> f64 {
+        self.lock().now
+    }
+
+    pub fn now(&self) -> Duration {
+        Duration::from_secs_f64(self.now_secs())
+    }
+
+    pub fn stats(&self) -> Arc<NetStats> {
+        self.lock().stats.clone()
+    }
+}
+
+/// With the lock held: if every registered participant is parked, pick
+/// the earliest wake event — min over participants of (arrival-or-
+/// horizon for `Recv`, `until` for `Sleep`), ties to the lowest id —
+/// advance the clock to it, and hand that participant (exactly one) a
+/// wake token. Called at every park and deregistration.
+fn conduct(st: &mut MtState, cv: &Condvar) {
+    let ids = st.registered.len();
+    let mut best: Option<(f64, usize)> = None;
+    for id in 0..ids {
+        if !st.registered[id] {
+            continue;
+        }
+        let Some(park) = st.parked[id] else {
+            return; // someone is still running: nothing to conduct
+        };
+        let wake = match park {
+            Park::Recv { horizon } => {
+                let arrival = st.inboxes[id]
+                    .iter()
+                    .map(|p| p.at)
+                    .fold(f64::INFINITY, f64::min);
+                horizon.min(arrival.max(st.now))
+            }
+            Park::Sleep { until } => until.max(st.now),
+        };
+        if best.map_or(true, |(t, _)| wake < t) {
+            best = Some((wake, id));
+        }
+    }
+    if let Some((t, id)) = best {
+        st.now = st.now.max(t);
+        st.parked[id] = None;
+        st.woken[id] = true;
+        cv.notify_all();
+    }
+}
+
+/// One participant's handle; implements [`Transport`]. Dropping it
+/// deregisters the participant (a worker thread exiting its loop stops
+/// holding the virtual clock hostage).
+pub struct MtEndpoint {
+    id: usize,
+    shared: Arc<MtShared>,
+}
+
+impl MtEndpoint {
+    pub fn now_secs(&self) -> f64 {
+        self.shared.state.lock().unwrap().now
+    }
+
+    /// Park until the virtual clock reaches `until` (seconds). The
+    /// inbox is ignored — this is the workload driver's arrival pacing,
+    /// not a receive. A target at or before "now" returns immediately.
+    pub fn sleep_until(&mut self, until: f64) {
+        let mut st = self.shared.state.lock().unwrap();
+        loop {
+            if st.now >= until || !st.alive[self.id] {
+                return;
+            }
+            st.parked[self.id] = Some(Park::Sleep { until });
+            conduct(&mut st, &self.shared.cv);
+            while !st.woken[self.id] && st.alive[self.id] {
+                st = self.shared.cv.wait(st).unwrap();
+            }
+            st.woken[self.id] = false;
+        }
+    }
+}
+
+impl Drop for MtEndpoint {
+    fn drop(&mut self) {
+        let mut st = self.shared.state.lock().unwrap();
+        st.registered[self.id] = false;
+        st.parked[self.id] = None;
+        st.woken[self.id] = false;
+        // the remaining participants may now all be parked
+        conduct(&mut st, &self.shared.cv);
+    }
+}
+
+impl Transport for MtEndpoint {
+    fn local_id(&self) -> usize {
+        self.id
+    }
+
+    fn peers(&self) -> Vec<usize> {
+        let st = self.shared.state.lock().unwrap();
+        (0..st.alive.len())
+            .filter(|&j| j != self.id && st.alive[j])
+            .collect()
+    }
+
+    fn send(&mut self, to: usize, msg: Msg) -> Result<(), TransportError> {
+        let mut st = self.shared.state.lock().unwrap();
+        if !st.alive.get(self.id).copied().unwrap_or(false) {
+            return Err(TransportError::Closed);
+        }
+        if !st.alive.get(to).copied().unwrap_or(false) {
+            return Err(TransportError::PeerDown { peer: to });
+        }
+        let bytes = msg.wire_bytes();
+        let at = st.now + st.link.transfer_secs(bytes);
+        let seq = st.seq;
+        st.seq += 1;
+        st.stats.record(self.id, to, bytes);
+        st.inboxes[to].push(Pending {
+            at,
+            seq,
+            env: Envelope { from: self.id, to, msg },
+        });
+        // no notify: parked receivers are woken by the conductor only,
+        // which is what keeps execution single-runner and deterministic
+        Ok(())
+    }
+
+    fn recv_deadline(&mut self, timeout: Duration)
+                     -> Result<Envelope, TransportError> {
+        let mut st = self.shared.state.lock().unwrap();
+        let horizon = st.now + timeout.as_secs_f64();
+        loop {
+            if !st.alive.get(self.id).copied().unwrap_or(false) {
+                return Err(TransportError::Closed);
+            }
+            // earliest (arrival, seq) already deliverable at "now"
+            let best = st.inboxes[self.id]
+                .iter()
+                .enumerate()
+                .min_by(|(_, a), (_, b)| {
+                    a.at.total_cmp(&b.at).then(a.seq.cmp(&b.seq))
+                })
+                .map(|(i, p)| (i, p.at));
+            if let Some((i, at)) = best {
+                if at <= st.now {
+                    let p = st.inboxes[self.id].remove(i);
+                    return Ok(p.env);
+                }
+            }
+            if st.now >= horizon {
+                return Err(TransportError::Timeout { after: timeout });
+            }
+            st.parked[self.id] = Some(Park::Recv { horizon });
+            conduct(&mut st, &self.shared.cv);
+            while !st.woken[self.id] && st.alive[self.id] {
+                st = self.shared.cv.wait(st).unwrap();
+            }
+            st.woken[self.id] = false;
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -259,5 +542,106 @@ mod tests {
         let mut c = net.endpoint(2);
         assert!(c.recv_deadline(Duration::from_millis(1)).is_ok());
         assert!(c.recv_deadline(Duration::from_millis(1)).is_err());
+    }
+
+    // ---------------- SimNetMt (conductor) tests ------------------------
+
+    /// Real threads ping-pong on the virtual clock: the final clock is
+    /// the analytic sum of the transfer times (no wall time leaks in),
+    /// and a second run reproduces it bit-for-bit.
+    fn mt_ping_pong() -> (Vec<u64>, f64) {
+        // 100 Mbps, 1 ms propagation: timing is dominated by latency
+        let net = SimNetMt::new(2, LinkModel::new(100.0, 1.0));
+        let mut worker = net.endpoint(0);
+        let mut master = net.endpoint(1);
+        let h = std::thread::spawn(move || {
+            loop {
+                match worker.recv_deadline(Duration::from_secs(3600)) {
+                    Ok(env) => match env.msg {
+                        Msg::Heartbeat { seq, .. } => {
+                            worker
+                                .send(1, Msg::Heartbeat { from: 0, seq })
+                                .unwrap();
+                        }
+                        _ => return,
+                    },
+                    Err(_) => return,
+                }
+            }
+        });
+        let mut seqs = Vec::new();
+        for seq in 0..5u64 {
+            master.send(0, Msg::Heartbeat { from: 1, seq }).unwrap();
+            let env =
+                master.recv_deadline(Duration::from_secs(10)).unwrap();
+            if let Msg::Heartbeat { seq, .. } = env.msg {
+                seqs.push(seq);
+            }
+        }
+        master.send(0, Msg::Shutdown).unwrap();
+        let now = master.now_secs();
+        drop(master);
+        h.join().unwrap();
+        (seqs, now)
+    }
+
+    #[test]
+    fn mt_ping_pong_is_deterministic_and_virtual() {
+        let (seqs, now) = mt_ping_pong();
+        assert_eq!(seqs, vec![0, 1, 2, 3, 4]);
+        // 10 heartbeat hops at 1 ms propagation each (heartbeats carry
+        // zero payload bytes): ~10 ms of pure virtual latency
+        assert!(now > 0.009 && now < 0.020, "virtual now {now}");
+        let (seqs2, now2) = mt_ping_pong();
+        assert_eq!(seqs, seqs2);
+        assert_eq!(now, now2, "virtual clock not deterministic");
+    }
+
+    /// A timeout costs exactly the deadline in virtual time, and
+    /// `sleep_until` paces the clock without touching the inbox.
+    #[test]
+    fn mt_timeout_and_sleep_advance_the_clock() {
+        let net = SimNetMt::new(2, LinkModel::new(100.0, 0.0));
+        let mut a = net.endpoint(0);
+        let err = a.recv_deadline(Duration::from_millis(250)).unwrap_err();
+        assert!(matches!(err, TransportError::Timeout { .. }));
+        assert!((net.now_secs() - 0.25).abs() < 1e-9);
+        a.sleep_until(0.75);
+        assert!((net.now_secs() - 0.75).abs() < 1e-9);
+        a.sleep_until(0.10); // already past: no-op
+        assert!((net.now_secs() - 0.75).abs() < 1e-9);
+    }
+
+    /// `kill` wakes a parked participant with `Closed` (so a real
+    /// worker loop exits), blocks traffic both ways, and `revive`
+    /// restores the slot for a fresh registration.
+    #[test]
+    fn mt_kill_wakes_parked_thread_and_revive_restores() {
+        let net = SimNetMt::new(2, LinkModel::new(100.0, 0.0));
+        let worker = net.endpoint(0);
+        let mut master = net.endpoint(1);
+        let h = std::thread::spawn(move || {
+            let mut worker = worker;
+            // parks "forever": only the kill can end this
+            worker.recv_deadline(Duration::from_secs(100_000))
+        });
+        // let the worker park: one conductor round trips over us
+        master.sleep_until(0.001);
+        net.kill(0);
+        let got = h.join().unwrap();
+        assert_eq!(got, Err(TransportError::Closed));
+        assert_eq!(master.send(0, Msg::Shutdown),
+                   Err(TransportError::PeerDown { peer: 0 }));
+        assert_eq!(master.peers(), Vec::<usize>::new());
+        // revive: the slot accepts traffic again for a fresh endpoint
+        net.revive(0);
+        assert!(net.is_alive(0));
+        let mut again = net.endpoint(0);
+        master.send(0, Msg::Shutdown).unwrap();
+        // deregister the master before blocking on the revived
+        // endpoint: the conductor only advances once every registered
+        // participant is parked, and one thread can park one endpoint
+        drop(master);
+        assert!(again.recv_deadline(Duration::from_secs(1)).is_ok());
     }
 }

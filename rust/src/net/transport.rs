@@ -99,6 +99,48 @@ pub trait Transport {
     }
 }
 
+/// Per-peer re-dial backoff on an *injected* clock: the mesh master's
+/// re-join sweep (`server::rejoin_workers`) must not burn a bounded ACK
+/// wait on a wedged-but-alive write-off at every batch boundary, so a
+/// failed re-join attempt parks the address for one backoff window.
+/// Like [`PeerHealth`], "now" comes from whatever clock drives the
+/// caller — wall time on the TCP mesh, virtual time in the soak sim —
+/// which is what lets the 30s policy be pinned by a deterministic,
+/// sleep-free test instead of a wall-clock one.
+#[derive(Debug, Clone, Default)]
+pub struct RejoinBackoff {
+    window: Duration,
+    until: std::collections::BTreeMap<usize, Duration>,
+}
+
+impl RejoinBackoff {
+    pub fn new(window: Duration) -> RejoinBackoff {
+        RejoinBackoff { window, until: Default::default() }
+    }
+
+    pub fn window(&self) -> Duration {
+        self.window
+    }
+
+    /// Is `peer` eligible for a re-dial at `now`? (Addresses never
+    /// marked failed are always due; a failed one is due again exactly
+    /// when its window expires.)
+    pub fn due(&self, peer: usize, now: Duration) -> bool {
+        self.until.get(&peer).map_or(true, |&t| now >= t)
+    }
+
+    /// A re-join attempt against `peer` failed at `now`: park it for
+    /// one window.
+    pub fn failed(&mut self, peer: usize, now: Duration) {
+        self.until.insert(peer, now + self.window);
+    }
+
+    /// `peer` re-joined (or was written off for good): forget it.
+    pub fn cleared(&mut self, peer: usize) {
+        self.until.remove(&peer);
+    }
+}
+
 /// Heartbeat bookkeeping: callers feed observed beats plus "now" from
 /// whatever clock drives the transport, and ask which peers have been
 /// silent past the detection threshold. Detection latency is therefore
@@ -191,6 +233,31 @@ mod tests {
         assert_eq!(h.dead_peers(ms(550)), vec![1]);
         assert_eq!(h.dead_peers(ms(551)), vec![0, 1]);
         assert_eq!(h.last_seen(0), ms(250));
+    }
+
+    /// The mesh re-join backoff policy, pinned on an injected clock: a
+    /// written-off address is not due again before its window expires,
+    /// is due exactly at expiry, and success clears the slate.
+    #[test]
+    fn rejoin_backoff_windows_are_exact() {
+        let mut b = RejoinBackoff::new(ms(30_000));
+        assert_eq!(b.window(), ms(30_000));
+        // never-failed addresses are always due
+        assert!(b.due(3, ms(0)));
+        b.failed(3, ms(5_000));
+        assert!(!b.due(3, ms(5_001)));
+        assert!(!b.due(3, ms(34_999)));
+        assert!(b.due(3, ms(35_000)));
+        // a second failure re-arms the window from its own "now"
+        b.failed(3, ms(35_000));
+        assert!(!b.due(3, ms(64_999)));
+        assert!(b.due(3, ms(65_000)));
+        // success (or write-off) clears the address entirely
+        b.cleared(3);
+        assert!(b.due(3, ms(35_001)));
+        // other peers are independent
+        b.failed(1, ms(0));
+        assert!(!b.due(1, ms(1)) && b.due(2, ms(1)));
     }
 
     #[test]

@@ -29,10 +29,10 @@
 //! (Job/Reconfig/FinalPart), and a restarted worker re-joins the serving
 //! `ClusterView` mid-run (`rejoin_workers`).
 
-use std::collections::VecDeque;
+use std::collections::{BTreeSet, VecDeque};
 use std::net::{TcpListener, TcpStream};
 use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Context, Result};
@@ -46,10 +46,10 @@ use crate::coordinator::Mode;
 use crate::data::{Dataset, DatasetKind};
 use crate::decode::{DecodeSession, DecodeStats, RefCfg, RefGpt};
 use crate::metrics::Histogram;
-use crate::net::inproc::mesh;
+use crate::net::inproc::{mesh_with_handle, MeshHandle};
 use crate::net::mesh::{worker_mesh, MeshEdge, MeshTransport};
 use crate::net::message::Msg;
-use crate::net::transport::{Transport, TransportError};
+use crate::net::transport::{RejoinBackoff, Transport, TransportError};
 use crate::net::LinkModel;
 use crate::runtime::{Engine, Manifest, ModelCfg, Tensor, TensorData,
                      WeightSet};
@@ -110,10 +110,25 @@ impl Default for FaultPolicy {
     }
 }
 
-/// Handle to a running server.
+/// Handle to a running server. The worker slots are *respawnable*
+/// (ROADMAP: thread-level re-join): after the master writes a worker
+/// off, [`Server::rejoin_worker`] spawns a replacement thread on the
+/// dead device's mesh slot, and the master re-admits it at the next
+/// batch boundary — `ClusterView::add_device` plus a `Msg::Reconfig`
+/// restore the full geometry, symmetric to `rejoin_workers` on the
+/// multi-process mesh path.
 pub struct Server {
     pub requests: Sender<Request>,
     handles: Vec<std::thread::JoinHandle<Result<()>>>,
+    mesh: MeshHandle,
+    manifest: Arc<Manifest>,
+    cfg: ServeConfig,
+    faults: FaultPolicy,
+    /// Respawned workers awaiting master-side re-admission.
+    pending_rejoin: Arc<Mutex<BTreeSet<usize>>>,
+    /// Live (epoch, P') gauge, updated by the master at every plan
+    /// change — the observable the re-join tests assert on.
+    geometry: Arc<Mutex<(u64, usize)>>,
 }
 
 impl Server {
@@ -129,7 +144,7 @@ impl Server {
         let model = manifest.model(&cfg.model)?.clone();
         let p = cfg.mode.p();
         let batch = manifest.eval_batch;
-        let mut endpoints = mesh(p, cfg.pace);
+        let (mut endpoints, mesh) = mesh_with_handle(p, cfg.pace);
         let master_ep = endpoints.pop().unwrap(); // id == p
 
         // request intake -> batcher -> master
@@ -153,16 +168,69 @@ impl Server {
                 })?;
             handles.push(h);
         }
+        let pending_rejoin = Arc::new(Mutex::new(BTreeSet::new()));
+        let geometry = Arc::new(Mutex::new((0u64, p)));
         let manifest2 = manifest.clone();
         let cfg2 = cfg.clone();
+        let faults2 = faults.clone();
+        let pending2 = pending_rejoin.clone();
+        let geometry2 = geometry.clone();
         let master = std::thread::Builder::new()
             .name("prism-master".into())
             .spawn(move || {
                 master_loop(manifest2, cfg2, model.layers, batch_rx,
-                            master_ep, faults)
+                            master_ep, faults2, pending2, geometry2)
             })?;
         handles.push(master);
-        Ok(Server { requests: req_tx, handles })
+        Ok(Server {
+            requests: req_tx,
+            handles,
+            mesh,
+            manifest,
+            cfg,
+            faults,
+            pending_rejoin,
+            geometry,
+        })
+    }
+
+    /// The serving geometry the master last installed: (epoch, P').
+    pub fn geometry(&self) -> (u64, usize) {
+        *self.geometry.lock().unwrap()
+    }
+
+    /// Thread-level re-join (the in-process dual of a restarted
+    /// `prism worker --listen` being re-dialed): respawn device `wid`'s
+    /// worker slot — fresh endpoint on the shared mesh, fresh thread,
+    /// fresh engine — and queue it for re-admission. The master picks
+    /// it up at the next batch boundary: once the device is written
+    /// off, a probe send confirms the replacement holds the slot, the
+    /// view re-admits it, and a `Msg::Reconfig` restores the grown
+    /// geometry for the batch after that. Only call this for a worker
+    /// the master has *already* written off (`geometry()` shows the
+    /// shrunk P'): respawning a live device's slot would orphan its
+    /// endpoint, and a replacement spawned before the write-off lands
+    /// would catch the write-off's release `Shutdown` and exit.
+    pub fn rejoin_worker(&mut self, wid: usize) -> Result<()> {
+        let p = self.cfg.mode.p();
+        if wid >= p {
+            bail!("device {wid} out of range (P={p})");
+        }
+        let ep = self.mesh.respawn(wid)?;
+        let manifest = self.manifest.clone();
+        let cfg = self.cfg.clone();
+        let mut faults = self.faults.clone();
+        faults.chaos_exit_worker = None; // a respawned worker is repaired
+        let h = std::thread::Builder::new()
+            .name(format!("prism-worker-{wid}-rejoin"))
+            .spawn(move || {
+                // nonzero join epoch: no rank until the master's next
+                // Reconfig includes the device (the late-join path)
+                worker_loop(manifest, cfg, ep, faults, 1)
+            })?;
+        self.handles.push(h);
+        self.pending_rejoin.lock().unwrap().insert(wid);
+        Ok(())
     }
 
     /// Drop the intake and join all threads.
@@ -178,34 +246,109 @@ impl Server {
     }
 }
 
+/// Deterministic batching core: size-triggered fills plus an
+/// inactivity-flush window, on a caller-supplied clock. The wall-clock
+/// batcher thread (`batcher_loop`) and the virtual-clock soak harness
+/// (`sim::cluster`) share this one implementation, so batching policy
+/// cannot drift between them — and the policy itself is property-tested
+/// on virtual time (no request lost or reordered across any
+/// interleaving of arrivals, flush timeouts, and batch-boundary fills).
+pub struct BatcherCore<R> {
+    batch: usize,
+    flush: Duration,
+    pending: Vec<R>,
+    last_arrival: Option<Duration>,
+}
+
+impl<R> BatcherCore<R> {
+    pub fn new(batch: usize, flush: Duration) -> BatcherCore<R> {
+        BatcherCore {
+            batch: batch.max(1),
+            flush,
+            pending: Vec::new(),
+            last_arrival: None,
+        }
+    }
+
+    /// Admit one request at time `now`; a full batch pops immediately.
+    pub fn push(&mut self, r: R, now: Duration) -> Option<Vec<R>> {
+        self.pending.push(r);
+        self.last_arrival = Some(now);
+        if self.pending.len() >= self.batch {
+            self.take()
+        } else {
+            None
+        }
+    }
+
+    /// The flush deadline, if anything is pending: `flush` after the
+    /// *latest* arrival (an inactivity window, matching the historical
+    /// `recv_timeout(flush)` loop).
+    pub fn deadline(&self) -> Option<Duration> {
+        self.last_arrival
+            .filter(|_| !self.pending.is_empty())
+            .map(|t| t + self.flush)
+    }
+
+    /// Flush the pending partial batch if `now` reached the deadline.
+    pub fn poll(&mut self, now: Duration) -> Option<Vec<R>> {
+        match self.deadline() {
+            Some(dl) if now >= dl => self.take(),
+            _ => None,
+        }
+    }
+
+    /// Unconditional flush (intake closed).
+    pub fn drain(&mut self) -> Option<Vec<R>> {
+        self.take()
+    }
+
+    pub fn len(&self) -> usize {
+        self.pending.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.pending.is_empty()
+    }
+
+    fn take(&mut self) -> Option<Vec<R>> {
+        if self.pending.is_empty() {
+            None
+        } else {
+            self.last_arrival = None;
+            Some(std::mem::take(&mut self.pending))
+        }
+    }
+}
+
 fn batcher_loop(rx: Receiver<Request>, tx: Sender<Vec<Request>>,
                 batch: usize, flush: Duration) -> Result<()> {
-    let mut pending: Vec<Request> = Vec::new();
+    let t0 = Instant::now();
+    let mut core: BatcherCore<Request> = BatcherCore::new(batch, flush);
     loop {
-        let timeout = if pending.is_empty() {
-            Duration::from_secs(3600)
-        } else {
-            flush
+        let now = t0.elapsed();
+        let timeout = match core.deadline() {
+            Some(dl) => dl.saturating_sub(now),
+            None => Duration::from_secs(3600),
         };
         match rx.recv_timeout(timeout) {
             Ok(r) => {
-                pending.push(r);
-                if pending.len() >= batch
-                    && tx.send(std::mem::take(&mut pending)).is_err()
-                {
-                    return Ok(());
+                if let Some(full) = core.push(r, t0.elapsed()) {
+                    if tx.send(full).is_err() {
+                        return Ok(());
+                    }
                 }
             }
             Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {
-                if !pending.is_empty()
-                    && tx.send(std::mem::take(&mut pending)).is_err()
-                {
-                    return Ok(());
+                if let Some(flushed) = core.poll(t0.elapsed()) {
+                    if tx.send(flushed).is_err() {
+                        return Ok(());
+                    }
                 }
             }
             Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => {
-                if !pending.is_empty() {
-                    let _ = tx.send(std::mem::take(&mut pending));
+                if let Some(rest) = core.drain() {
+                    let _ = tx.send(rest);
                 }
                 return Ok(()); // intake closed -> drain and stop
             }
@@ -213,7 +356,8 @@ fn batcher_loop(rx: Receiver<Request>, tx: Sender<Vec<Request>>,
     }
 }
 
-fn stack_rows(rows: &[&Tensor], batch: usize) -> Result<Tensor> {
+pub(crate) fn stack_rows(rows: &[&Tensor], batch: usize)
+                         -> Result<Tensor> {
     let first = rows.first().context("empty batch")?;
     let mut shape = first.shape.clone();
     shape[0] = batch;
@@ -245,7 +389,7 @@ fn stack_rows(rows: &[&Tensor], batch: usize) -> Result<Tensor> {
 }
 
 /// Outcome of one distributed attempt at a batch.
-enum PassOutcome {
+pub(crate) enum PassOutcome {
     Done(Tensor),
     /// Workers (physical ids) that blew the gather deadline or whose
     /// endpoint is already gone.
@@ -258,10 +402,11 @@ enum PassOutcome {
 /// over the survivors, and re-issues the batch on the next epoch.
 /// Generic over [`Transport`], so the same pass drives worker threads
 /// (inproc mesh) and worker processes (TCP mesh) identically.
-fn run_distributed<T: Transport>(current: &EpochPlan, ep: &mut T,
-                                 x: &Tensor, job_id: u64,
-                                 gather_deadline: Duration)
-                                 -> Result<PassOutcome> {
+pub(crate) fn run_distributed<T: Transport>(current: &EpochPlan,
+                                            ep: &mut T, x: &Tensor,
+                                            job_id: u64,
+                                            gather_deadline: Duration)
+                                            -> Result<PassOutcome> {
     let pls: &[PartitionPlan] = &current.plans;
     let epoch = current.epoch as u32;
     let p = current.p();
@@ -355,8 +500,8 @@ fn run_distributed<T: Transport>(current: &EpochPlan, ep: &mut T,
 /// worker thread that exited dropped its receiver and the send fails
 /// immediately, while a wedged-but-alive worker accepts (and later
 /// drops) the probe.
-fn probe_dead<T: Transport>(ep: &mut T, missing: &[usize],
-                            master: usize) -> Vec<usize> {
+pub(crate) fn probe_dead<T: Transport>(ep: &mut T, missing: &[usize],
+                                       master: usize) -> Vec<usize> {
     missing
         .iter()
         .copied()
@@ -365,6 +510,16 @@ fn probe_dead<T: Transport>(ep: &mut T, missing: &[usize],
                 .is_err()
         })
         .collect()
+}
+
+/// The artifact-availability answer every engine-backed master closes
+/// over (the one owner of it, so the threaded failure path, the mesh
+/// failure path, and the mesh re-join path cannot diverge in which
+/// geometries they consider servable); the soak sim substitutes
+/// "every geometry exists".
+fn grid_avail<'a>(manifest: &'a Manifest, cfg: &'a ServeConfig,
+                  batch: usize) -> impl Fn(Mode) -> bool + 'a {
+    move |mode| artifacts_exist(manifest, cfg, batch, mode)
 }
 
 /// True when every rank's block executable for `mode` exists in the
@@ -385,10 +540,11 @@ fn artifacts_exist(manifest: &Manifest, cfg: &ServeConfig, batch: usize,
 /// first, then the base L clamped to the new P' (the AOT variant grid
 /// is sparse), else single-device. Empty `devices` == no distributed
 /// grid left at all — the master (which hosts embed/head anyway)
-/// serves alone.
-fn elastic_plan(manifest: &Manifest, cfg: &ServeConfig, model: &ModelCfg,
-                batch: usize, view: &mut ClusterView)
-                -> Result<EpochPlan> {
+/// serves alone. `avail` answers "does this geometry have artifacts?"
+/// — the engine-backed masters close over their manifest, the soak sim
+/// (whose stand-in blocks exist for every geometry) answers true.
+pub(crate) fn elastic_plan(avail: &dyn Fn(Mode) -> bool, n: usize,
+                           view: &mut ClusterView) -> Result<EpochPlan> {
     let Ok(eq16) = view.current() else {
         return view.single_fallback(); // zero live workers
     };
@@ -402,14 +558,14 @@ fn elastic_plan(manifest: &Manifest, cfg: &ServeConfig, model: &ModelCfg,
             Mode::Prism { p: p_new, l: l_new, .. }) =
         (view.base(), eq16.mode)
     {
-        let clamped = base_l.clamp(1, (model.n / p_new).max(1));
+        let clamped = base_l.clamp(1, (n / p_new).max(1));
         if clamped != l_new {
             candidates.push(Mode::Prism { p: p_new, l: clamped,
                                           duplicated });
         }
     }
     for cand in candidates {
-        if !artifacts_exist(manifest, cfg, batch, cand) {
+        if !avail(cand) {
             continue;
         }
         if cand == eq16.mode {
@@ -422,24 +578,42 @@ fn elastic_plan(manifest: &Manifest, cfg: &ServeConfig, model: &ModelCfg,
     view.single_fallback() // no artifacts for any P' geometry
 }
 
+/// Install `next` on its live set: every serving device gets the
+/// epoch-tagged `Msg::Reconfig` (best-effort — a dead endpoint just
+/// misses a frame addressed to nobody).
+pub(crate) fn broadcast_reconfig<T: Transport>(ep: &mut T,
+                                               next: &EpochPlan) {
+    let (tag, mp, ml) = next.mode.to_wire();
+    let live: Vec<u32> = next.devices.iter().map(|&d| d as u32).collect();
+    for &wid in &next.devices {
+        let _ = ep.send(wid, Msg::Reconfig {
+            epoch: next.epoch as u32,
+            mode: tag,
+            p: mp,
+            l: ml,
+            live: live.clone(),
+        });
+    }
+}
+
 /// Swap in a new epoch after the named workers were declared dead: mark
 /// them in the view, re-plan over the survivors, and either reconfigure
 /// the surviving workers onto the new geometry (`Msg::Reconfig`) or
 /// release everyone and serve single-device from the master.
-#[allow(clippy::too_many_arguments)]
-fn reconfigure<T: Transport>(manifest: &Manifest, cfg: &ServeConfig,
-                             model: &ModelCfg, batch: usize,
-                             view: &mut ClusterView, dead: &[usize],
-                             ep: &mut T, p: usize) -> Result<EpochPlan> {
+pub(crate) fn reconfigure<T: Transport>(avail: &dyn Fn(Mode) -> bool,
+                                        n: usize, view: &mut ClusterView,
+                                        dead: &[usize], ep: &mut T,
+                                        p: usize) -> Result<EpochPlan> {
     for &d in dead {
         if view.is_alive(d) {
             view.fail_device(d)?;
         }
     }
-    let next = elastic_plan(manifest, cfg, model, batch, view)?;
+    let base = view.base();
+    let next = elastic_plan(avail, n, view)?;
     eprintln!("[master] workers {dead:?} lost; epoch {} re-plans {:?} \
                -> {:?} over devices {:?}",
-              next.epoch, cfg.mode, next.mode, next.devices);
+              next.epoch, base, next.mode, next.devices);
     if next.p() <= 1 {
         // no distributed geometry (or artifacts) left: release every
         // worker — a Shutdown in the barrier is a clean exit — and
@@ -455,18 +629,7 @@ fn reconfigure<T: Transport>(manifest: &Manifest, cfg: &ServeConfig,
         for &wid in dead {
             let _ = ep.send(wid, Msg::Shutdown);
         }
-        let (tag, mp, ml) = next.mode.to_wire();
-        let live: Vec<u32> =
-            next.devices.iter().map(|&d| d as u32).collect();
-        for &wid in &next.devices {
-            let _ = ep.send(wid, Msg::Reconfig {
-                epoch: next.epoch as u32,
-                mode: tag,
-                p: mp,
-                l: ml,
-                live: live.clone(),
-            });
-        }
+        broadcast_reconfig(ep, &next);
     }
     Ok(next)
 }
@@ -488,10 +651,14 @@ fn single_pass(engine: &mut Engine, manifest: &Manifest,
     Ok(x)
 }
 
+#[allow(clippy::too_many_arguments)]
 fn master_loop<T: Transport>(manifest: Arc<Manifest>, cfg: ServeConfig,
                              layers: usize,
                              batches: Receiver<Vec<Request>>, mut ep: T,
-                             faults: FaultPolicy) -> Result<()> {
+                             faults: FaultPolicy,
+                             pending_rejoin: Arc<Mutex<BTreeSet<usize>>>,
+                             geometry: Arc<Mutex<(u64, usize)>>)
+                             -> Result<()> {
     let model = manifest.model(&cfg.model)?.clone();
     let p = cfg.mode.p();
     let batch = manifest.eval_batch;
@@ -499,11 +666,46 @@ fn master_loop<T: Transport>(manifest: Arc<Manifest>, cfg: ServeConfig,
     let ws = WeightSet::load(&manifest, &cfg.weights)?;
     let embed_name = manifest.embed_name(&cfg.model, batch);
     let head_name = manifest.head_name(&cfg.model, &cfg.task, batch);
+    let avail = grid_avail(&manifest, &cfg, batch);
     let mut view = ClusterView::new(cfg.mode, model.n, model.causal)?;
     let mut current = view.current()?;
 
     let mut job_id = 0u64;
     while let Ok(reqs) = batches.recv() {
+        // the thread re-join point: respawned worker slots are
+        // re-admitted on batch boundaries, symmetric to the mesh
+        // path's `rejoin_workers`. A respawned slot whose device the
+        // master still believes alive stays queued until the write-off
+        // actually lands.
+        let ready: Vec<usize> = {
+            let guard = pending_rejoin.lock().unwrap();
+            guard.iter().copied()
+                .filter(|&w| !view.is_alive(w))
+                .collect()
+        };
+        let mut readmitted = false;
+        for wid in ready {
+            // probe: only a respawned thread holds a receiver on the
+            // written-off slot, so a successful send == it is back
+            if ep.send(wid, Msg::Heartbeat { from: p as u32, seq: 0 })
+                .is_err()
+            {
+                continue;
+            }
+            pending_rejoin.lock().unwrap().remove(&wid);
+            view.add_device(wid)?;
+            readmitted = true;
+            eprintln!("[master] worker thread {wid} re-joined");
+        }
+        if readmitted {
+            current = elastic_plan(&avail, model.n, &mut view)?;
+            broadcast_reconfig(&mut ep, &current);
+            eprintln!("[master] epoch {} restores {:?} over devices \
+                       {:?}", current.epoch, current.mode,
+                      current.devices);
+        }
+        *geometry.lock().unwrap() =
+            (current.epoch, current.p().max(1));
         let rows: Vec<&Tensor> = reqs.iter().map(|r| &r.raw).collect();
         let raw = stack_rows(&rows, batch)?;
         let x0 = engine.run(&embed_name, &ws, 0, &[&raw])?.remove(0);
@@ -531,9 +733,10 @@ fn master_loop<T: Transport>(manifest: Arc<Manifest>, cfg: ServeConfig,
                     } else {
                         probed
                     };
-                    current = reconfigure(&manifest, &cfg, &model,
-                                          batch, &mut view, &dead,
-                                          &mut ep, p)?;
+                    current = reconfigure(&avail, model.n, &mut view,
+                                          &dead, &mut ep, p)?;
+                    *geometry.lock().unwrap() =
+                        (current.epoch, current.p().max(1));
                 }
             }
         };
@@ -560,6 +763,50 @@ fn master_loop<T: Transport>(manifest: Arc<Manifest>, cfg: ServeConfig,
     Ok(())
 }
 
+/// Worker-side block compute, abstracted from the protocol: the
+/// threaded and multi-process servers run AOT engine executables
+/// ([`EngineRunner`]), the deterministic soak sim (`sim::cluster`) runs
+/// a closed-form stand-in — and `worker_loop_with`/`run_job` cannot
+/// tell them apart, which is what lets the soak exercise the *real*
+/// serving loops artifact-free on a virtual clock.
+pub(crate) trait BlockRunner: Send {
+    /// Resolve (and warm) the block executable for (mode, rank); the
+    /// returned key is what `run` takes. Engines cache compilations,
+    /// so re-entering a previously seen geometry is free.
+    fn ensure(&mut self, mode: Mode, rank: usize) -> Result<String>;
+
+    /// One block layer over `[x, ctx, bias]`. PRISM modes return
+    /// `[x', share]` (the share is the Segment Means of the block
+    /// output), other modes `[x']`.
+    fn run(&mut self, exec: &str, layer: usize, args: &[&Tensor])
+           -> Result<Vec<Tensor>>;
+}
+
+/// The AOT-engine-backed [`BlockRunner`] every real server uses.
+struct EngineRunner {
+    manifest: Arc<Manifest>,
+    engine: Engine,
+    ws: WeightSet,
+    model: String,
+    flavor: String,
+    batch: usize,
+}
+
+impl BlockRunner for EngineRunner {
+    fn ensure(&mut self, mode: Mode, rank: usize) -> Result<String> {
+        let exec = self.manifest.block_name(
+            &self.model, mode.name(), mode.p(), mode.l(), rank,
+            self.batch, &self.flavor);
+        self.engine.ensure_compiled(&exec)?;
+        Ok(exec)
+    }
+
+    fn run(&mut self, exec: &str, layer: usize, args: &[&Tensor])
+           -> Result<Vec<Tensor>> {
+        self.engine.run(exec, &self.ws, layer, args)
+    }
+}
+
 /// One worker's per-epoch execution state: its rank in the live set,
 /// partition plan, bias, and block executable. Rebuilt on every
 /// `Msg::Reconfig`; the executable is compiled on demand and the engine
@@ -576,10 +823,9 @@ struct WorkerState {
 }
 
 impl WorkerState {
-    #[allow(clippy::too_many_arguments)]
-    fn build(manifest: &Manifest, cfg: &ServeConfig, model: &ModelCfg,
-             engine: &mut Engine, batch: usize, wid: usize, epoch: u32,
-             mode: Mode, live: Vec<usize>) -> Result<WorkerState> {
+    fn build(runner: &mut dyn BlockRunner, model: &ModelCfg, wid: usize,
+             epoch: u32, mode: Mode, live: Vec<usize>)
+             -> Result<WorkerState> {
         let rank = live
             .iter()
             .position(|&d| d == wid)
@@ -592,9 +838,7 @@ impl WorkerState {
         let duplicated =
             !matches!(mode, Mode::Prism { duplicated: false, .. });
         let bias = bias_for(&pl, duplicated)?;
-        let exec = manifest.block_name(&cfg.model, mode.name(), p, l,
-                                       rank, batch, &cfg.flavor);
-        engine.ensure_compiled(&exec)?;
+        let exec = runner.ensure(mode, rank)?;
         Ok(WorkerState { epoch, mode, live, pl, bias, exec })
     }
 }
@@ -620,7 +864,7 @@ enum JobEnd {
 }
 
 #[allow(clippy::too_many_arguments)]
-fn run_job<T: Transport>(engine: &mut Engine, ws: &WeightSet,
+fn run_job<T: Transport>(runner: &mut dyn BlockRunner,
                          model: &ModelCfg, st: &WorkerState, ep: &mut T,
                          faults: &FaultPolicy, x_p: Tensor,
                          ctx0: Vec<Tensor>, pre: Vec<(u32, Tensor)>,
@@ -646,7 +890,7 @@ fn run_job<T: Transport>(engine: &mut Engine, ws: &WeightSet,
     for layer in 0..model.layers {
         let refs: Vec<&Tensor> = peer_ctx.iter().collect();
         let ctx = Tensor::concat1(&refs)?;
-        let mut out = engine.run(&st.exec, ws, layer,
+        let mut out = runner.run(&st.exec, layer,
                                  &[&x, &ctx, &st.bias])?;
         x = out.remove(0);
         let share = if prism {
@@ -762,8 +1006,7 @@ fn run_job<T: Transport>(engine: &mut Engine, ws: &WeightSet,
 /// stand down (declared dead or the cluster went single-device) and
 /// wait for the master's Shutdown.
 #[allow(clippy::too_many_arguments)]
-fn apply_reconfig(manifest: &Manifest, cfg: &ServeConfig,
-                  model: &ModelCfg, engine: &mut Engine, batch: usize,
+fn apply_reconfig(runner: &mut dyn BlockRunner, model: &ModelCfg,
                   wid: usize, epoch: u32, mode: u8, p: u32, l: u32,
                   live: Vec<u32>) -> Result<Option<WorkerState>> {
     let mode = Mode::from_wire(mode, p, l)?;
@@ -773,29 +1016,52 @@ fn apply_reconfig(manifest: &Manifest, cfg: &ServeConfig,
     if mode.p() <= 1 || live.len() != mode.p() || !live.contains(&wid) {
         return Ok(None);
     }
-    WorkerState::build(manifest, cfg, model, engine, batch, wid, epoch,
-                       mode, live)
-        .map(Some)
+    WorkerState::build(runner, model, wid, epoch, mode, live).map(Some)
 }
 
+/// The engine-backed worker loop: load weights, build the AOT runner,
+/// and run the transport-generic protocol (`worker_loop_with`).
 fn worker_loop<T: Transport>(manifest: Arc<Manifest>, cfg: ServeConfig,
-                             mut ep: T, faults: FaultPolicy,
+                             ep: T, faults: FaultPolicy,
                              join_epoch: u32) -> Result<()> {
     let model = manifest.model(&cfg.model)?.clone();
-    let p = cfg.mode.p();
+    if cfg.mode.p() <= 1 {
+        return Ok(()); // single-device: master does everything
+    }
+    let batch = manifest.eval_batch;
+    let runner = EngineRunner {
+        engine: Engine::new(manifest.clone())?,
+        ws: WeightSet::load(&manifest, &cfg.weights)?,
+        model: cfg.model.clone(),
+        flavor: cfg.flavor.clone(),
+        batch,
+        manifest,
+    };
+    worker_loop_with(model, cfg.mode, runner, ep, faults, join_epoch)
+}
+
+/// The worker protocol itself, generic over transport AND block
+/// compute: threads (inproc mesh + engine), processes (TCP mesh +
+/// engine), and the virtual-clock soak sim (SimNetMt + deterministic
+/// stand-in blocks) all run this exact loop.
+pub(crate) fn worker_loop_with<T, B>(model: ModelCfg, base: Mode,
+                                     mut runner: B, mut ep: T,
+                                     faults: FaultPolicy,
+                                     join_epoch: u32) -> Result<()>
+where
+    T: Transport,
+    B: BlockRunner,
+{
+    let p = base.p();
     if p <= 1 {
         return Ok(()); // single-device: master does everything
     }
     let wid = ep.local_id();
-    let batch = manifest.eval_batch;
-    let mut engine = Engine::new(manifest.clone())?;
-    let ws = WeightSet::load(&manifest, &cfg.weights)?;
     // A fresh member of epoch 0 serves the base geometry immediately; a
-    // late joiner (`join_epoch` > 0, the mesh re-join path) has no rank
+    // late joiner (`join_epoch` > 0, the re-join paths) has no rank
     // until the master's next `Msg::Reconfig` includes it.
     let mut st: Option<WorkerState> = if join_epoch == 0 {
-        Some(WorkerState::build(&manifest, &cfg, &model, &mut engine,
-                                batch, wid, 0, cfg.mode,
+        Some(WorkerState::build(&mut runner, &model, wid, 0, base,
                                 (0..p).collect())?)
     } else {
         None
@@ -852,7 +1118,7 @@ fn worker_loop<T: Transport>(manifest: Arc<Manifest>, cfg: ServeConfig,
                     .filter(|(e, _, _)| *e == epoch)
                     .map(|(_, from, data)| (from, data))
                     .collect();
-                match run_job(&mut engine, &ws, &model,
+                match run_job(&mut runner, &model,
                               st.as_ref().unwrap(), &mut ep, &faults,
                               x_p, ctx, seed, p)? {
                     JobEnd::Done | JobEnd::Abandoned => None,
@@ -869,9 +1135,8 @@ fn worker_loop<T: Transport>(manifest: Arc<Manifest>, cfg: ServeConfig,
             // keep only shares already racing ahead on the epoch being
             // installed; everything older belongs to a dead epoch
             pre.retain(|(e, _, _)| *e == epoch);
-            match apply_reconfig(&manifest, &cfg, &model, &mut engine,
-                                 batch, wid, epoch, mode, rp, rl,
-                                 live)?
+            match apply_reconfig(&mut runner, &model, wid, epoch, mode,
+                                 rp, rl, live)?
             {
                 Some(next) => st = Some(next),
                 // excluded from the re-plan (declared dead, the
@@ -989,6 +1254,12 @@ fn run_mesh_worker(manifest: Arc<Manifest>, listener: TcpListener,
 /// this, never the OS connect default of minutes.
 const MESH_DIAL_TIMEOUT: Duration = Duration::from_secs(1);
 
+/// Per-address backoff window after a failed re-join attempt (the
+/// wedged-but-alive write-off case): the address is not re-dialed
+/// before the window expires, and is re-dialed after. Public so the
+/// deterministic suite can pin the policy on a virtual clock.
+pub const REJOIN_BACKOFF: Duration = Duration::from_secs(30);
+
 /// Probe over processes: the gather deadline cannot tell a dead worker
 /// process from a survivor wedged behind it, but a dead process takes
 /// its *listener* with it — one cheap bounded dial answers. Refused or
@@ -1017,23 +1288,23 @@ fn probe_mesh(addrs: &[String], missing: &[usize]) -> Vec<usize> {
 ///
 /// A written-off-but-*alive* worker also accepts the dial (its idle
 /// listener backlogs anything) but never ACKs — its poller wants a
-/// mesh hello, not a MeshInfo, and drops the connection. `next_try`
-/// holds a per-address backoff so such a worker costs one bounded ACK
-/// wait per backoff window, not per batch.
+/// mesh hello, not a MeshInfo, and drops the connection. `backoff`
+/// ([`RejoinBackoff`], `REJOIN_BACKOFF` window) holds the per-address
+/// state so such a worker costs one bounded ACK wait per backoff
+/// window, not per batch; `now` comes from the caller's clock, which
+/// is what lets the policy be pinned on a virtual clock in tests.
 #[allow(clippy::too_many_arguments)]
 fn rejoin_workers(manifest: &Manifest, cfg: &ServeConfig,
                   model: &ModelCfg, batch: usize,
                   view: &mut ClusterView, ep: &mut MeshTransport,
                   addrs: &[String], io: Duration,
-                  next_try: &mut std::collections::BTreeMap<usize,
-                                                            Instant>)
+                  backoff: &mut RejoinBackoff, now: Duration)
                   -> Result<Option<EpochPlan>> {
     let p = cfg.mode.p();
     let (btag, bp, bl) = cfg.mode.to_wire();
-    let backoff = Duration::from_secs(30);
     let mut rejoined = false;
     for wid in view.dead_devices() {
-        if next_try.get(&wid).is_some_and(|t| Instant::now() < *t) {
+        if !backoff.due(wid, now) {
             continue; // recently failed to re-join: wait out the backoff
         }
         let addr = &addrs[wid];
@@ -1067,7 +1338,7 @@ fn rejoin_workers(manifest: &Manifest, cfg: &ServeConfig,
         })
         .is_err()
         {
-            next_try.insert(wid, Instant::now() + backoff);
+            backoff.failed(wid, now);
             continue;
         }
         // bring-up ACK: the joiner dialed the survivors. A fresh
@@ -1078,11 +1349,11 @@ fn rejoin_workers(manifest: &Manifest, cfg: &ServeConfig,
             Ok(env) if matches!(env.msg,
                                 Msg::Heartbeat { seq: 1, .. }) => {}
             _ => {
-                next_try.insert(wid, Instant::now() + backoff);
+                backoff.failed(wid, now);
                 continue;
             }
         }
-        next_try.remove(&wid);
+        backoff.cleared(wid);
         ep.add_edge(wid, Box::new(edge));
         view.add_device(wid)?;
         rejoined = true;
@@ -1093,18 +1364,9 @@ fn rejoin_workers(manifest: &Manifest, cfg: &ServeConfig,
     }
     // reconfigure everyone onto the restored strength (artifact-grid
     // fallbacks included, exactly like the failure direction)
-    let next = elastic_plan(manifest, cfg, model, batch, view)?;
-    let (tag, mp, ml) = next.mode.to_wire();
-    let live: Vec<u32> = next.devices.iter().map(|&d| d as u32).collect();
-    for &wid in &next.devices {
-        let _ = ep.send(wid, Msg::Reconfig {
-            epoch: next.epoch as u32,
-            mode: tag,
-            p: mp,
-            l: ml,
-            live: live.clone(),
-        });
-    }
+    let avail = grid_avail(manifest, cfg, batch);
+    let next = elastic_plan(&avail, model.n, view)?;
+    broadcast_reconfig(ep, &next);
     eprintln!("[master] epoch {} restores {:?} over devices {:?}",
               next.epoch, next.mode, next.devices);
     Ok(Some(next))
@@ -1183,7 +1445,8 @@ fn mesh_master(manifest: Arc<Manifest>, cfg: &ServeConfig,
     let mut view = ClusterView::new(cfg.mode, model.n, model.causal)?;
     let mut current = view.current()?;
     let mut latencies = Vec::with_capacity(rows.len());
-    let mut rejoin_backoff = std::collections::BTreeMap::new();
+    let mut rejoin_backoff = RejoinBackoff::new(REJOIN_BACKOFF);
+    let serve_t0 = Instant::now();
     let mut job_id = 0u64;
     for chunk in rows.chunks(batch) {
         // the cross-process re-join point: restarted workers are
@@ -1191,7 +1454,8 @@ fn mesh_master(manifest: Arc<Manifest>, cfg: &ServeConfig,
         if let Some(next) = rejoin_workers(&manifest, cfg, &model,
                                            batch, &mut view, &mut ep,
                                            addrs, io,
-                                           &mut rejoin_backoff)?
+                                           &mut rejoin_backoff,
+                                           serve_t0.elapsed())?
         {
             current = next;
         }
@@ -1217,9 +1481,9 @@ fn mesh_master(manifest: Arc<Manifest>, cfg: &ServeConfig,
                     } else {
                         probed
                     };
-                    current = reconfigure(&manifest, cfg, &model,
-                                          batch, &mut view, &dead,
-                                          &mut ep, p)?;
+                    let avail = grid_avail(&manifest, cfg, batch);
+                    current = reconfigure(&avail, model.n, &mut view,
+                                          &dead, &mut ep, p)?;
                     for &d in &dead {
                         ep.remove_edge(d);
                     }
@@ -1357,7 +1621,7 @@ pub struct DecodeEvent {
 }
 
 /// Scheduler control-plane verbs, applied between ticks.
-enum SchedCtl {
+pub(crate) enum SchedCtl {
     Fail(usize),
     Add(usize),
 }
@@ -1386,16 +1650,14 @@ pub struct DecodeScheduler {
 impl DecodeScheduler {
     pub fn start(model: Arc<RefGpt>, p: usize, l: usize, wire: WireFmt,
                  prefill_chunk: usize) -> Result<DecodeScheduler> {
-        // validate the (model, P, L) geometry once, up front
-        DecodeSession::new(model.clone(), p, l, wire)?;
+        // build (and thereby validate) the scheduling core up front, so
+        // a bad (model, P, L) geometry errors here, not in the thread
+        let core = DecodeCore::new(model, p, l, wire, prefill_chunk)?;
         let (tx, rx) = channel::<DecodeRequest>();
         let (ctl_tx, ctl_rx) = channel::<SchedCtl>();
-        let chunk = prefill_chunk.max(1);
         let handle = std::thread::Builder::new()
             .name("prism-decode".into())
-            .spawn(move || {
-                decode_loop(model, p, l, wire, chunk, rx, ctl_rx)
-            })?;
+            .spawn(move || decode_loop(core, rx, ctl_rx))?;
         Ok(DecodeScheduler { requests: tx, control: ctl_tx, p, handle })
     }
 
@@ -1546,8 +1808,22 @@ fn apply_ctl(c: SchedCtl, view: &mut ClusterView,
                     still.push_back(s); // already failed over past it
                     continue;
                 }
-                match s.session.fail_device(logical) {
-                    Ok(_) => still.push_back(s),
+                // Re-prefill-on-divergence (ROADMAP refinement): a
+                // failover consuming a lossy (f16/i8) replica may have
+                // rebuilt drifted state. The emitted token log is
+                // ground truth, so detect frontier drift against it
+                // and re-prefill exact state from it before the next
+                // token — the stream converges back to the full-
+                // recompute continuation of its own log.
+                let end = s.session.fail_device(logical).and_then(|_| {
+                    if s.session.lossy_resume() {
+                        s.session.resync_from_log().map(|_| ())
+                    } else {
+                        Ok(())
+                    }
+                });
+                match end {
+                    Ok(()) => still.push_back(s),
                     Err(_) => {
                         // state died with the device: abort visibly
                         let _ = s.respond.send(DecodeEvent {
@@ -1599,17 +1875,86 @@ fn apply_ctl(c: SchedCtl, view: &mut ClusterView,
     }
 }
 
-fn decode_loop(model: Arc<RefGpt>, p: usize, l: usize, wire: WireFmt,
-               chunk: usize, rx: Receiver<DecodeRequest>,
+/// The decode scheduling core — admission, membership verbs, and the
+/// continuous-batching tick — factored out of the scheduler thread so
+/// the virtual-clock soak harness (`sim::cluster`) can drive the exact
+/// same policy deterministically, one tick per virtual cadence, with
+/// the thread-backed [`DecodeScheduler`] a thin shell around it.
+pub(crate) struct DecodeCore {
+    model: Arc<RefGpt>,
+    wire: WireFmt,
+    chunk: usize,
+    view: ClusterView,
+    active: VecDeque<ActiveStream>,
+    total: DecodeStats,
+}
+
+impl DecodeCore {
+    pub(crate) fn new(model: Arc<RefGpt>, p: usize, l: usize,
+                      wire: WireFmt, prefill_chunk: usize)
+                      -> Result<DecodeCore> {
+        // validate the (model, P, L) geometry once, up front
+        DecodeSession::new(model.clone(), p, l, wire)?;
+        let view = ClusterView::new(
+            Mode::Prism { p, l, duplicated: true }, model.cfg.n, true)?;
+        Ok(DecodeCore {
+            model,
+            wire,
+            chunk: prefill_chunk.max(1),
+            view,
+            active: VecDeque::new(),
+            total: DecodeStats::default(),
+        })
+    }
+
+    /// Admit one stream on the current membership's (P', L').
+    pub(crate) fn admit(&mut self, req: DecodeRequest) {
+        admit_stream(&self.model, self.wire, &self.view, req,
+                     &mut self.active);
+    }
+
+    /// Apply one membership verb to the view and every in-flight
+    /// session.
+    pub(crate) fn ctl(&mut self, c: SchedCtl) {
+        apply_ctl(c, &mut self.view, &mut self.active, &mut self.total);
+    }
+
+    /// One scheduling tick: advance every active stream by one quantum.
+    pub(crate) fn tick(&mut self) {
+        let mut still = VecDeque::with_capacity(self.active.len());
+        while let Some(mut s) = self.active.pop_front() {
+            match decode_tick(&mut s, self.chunk) {
+                Ok(false) => still.push_back(s),
+                Ok(true) => self.total.merge(&s.session.stats()),
+                Err(_) => {
+                    let _ = s.respond.send(DecodeEvent {
+                        id: s.id,
+                        index: s.emitted,
+                        token: -1,
+                        done: true,
+                    });
+                    self.total.merge(&s.session.stats());
+                }
+            }
+        }
+        self.active = still;
+    }
+
+    pub(crate) fn active(&self) -> usize {
+        self.active.len()
+    }
+
+    pub(crate) fn finish(self) -> DecodeStats {
+        self.total
+    }
+}
+
+fn decode_loop(mut core: DecodeCore, rx: Receiver<DecodeRequest>,
                ctl: Receiver<SchedCtl>) -> Result<DecodeStats> {
-    let mut view = ClusterView::new(
-        Mode::Prism { p, l, duplicated: true }, model.cfg.n, true)?;
-    let mut active: VecDeque<ActiveStream> = VecDeque::new();
     let mut pending: VecDeque<DecodeRequest> = VecDeque::new();
-    let mut total = DecodeStats::default();
     let mut open = true;
     loop {
-        if open && active.is_empty() && pending.is_empty() {
+        if open && core.active() == 0 && pending.is_empty() {
             // idle: block for the next stream
             match rx.recv() {
                 Ok(r) => pending.push_back(r),
@@ -1628,32 +1973,18 @@ fn decode_loop(model: Arc<RefGpt>, p: usize, l: usize, wire: WireFmt,
         // before a request is always applied before that stream's
         // session is built, so its admission geometry is deterministic.
         while let Ok(c) = ctl.try_recv() {
-            apply_ctl(c, &mut view, &mut active, &mut total);
+            core.ctl(c);
         }
         while let Some(r) = pending.pop_front() {
-            admit_stream(&model, wire, &view, r, &mut active);
+            core.admit(r);
         }
-        if active.is_empty() {
+        if core.active() == 0 {
             if !open {
-                return Ok(total);
+                return Ok(core.finish());
             }
             continue;
         }
-        // one scheduling tick over every active stream
-        let mut still = VecDeque::with_capacity(active.len());
-        while let Some(mut s) = active.pop_front() {
-            match decode_tick(&mut s, chunk) {
-                Ok(false) => still.push_back(s),
-                Ok(true) => total.merge(&s.session.stats()),
-                Err(_) => {
-                    let _ = s.respond.send(DecodeEvent {
-                        id: s.id, index: s.emitted, token: -1, done: true,
-                    });
-                    total.merge(&s.session.stats());
-                }
-            }
-        }
-        active = still;
+        core.tick();
     }
 }
 
@@ -1861,6 +2192,82 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
 mod tests {
     use super::*;
     use std::collections::BTreeMap;
+
+    /// Satellite (ISSUE 5): the batching policy loses and reorders
+    /// nothing across any interleaving of arrivals, flush timeouts, and
+    /// batch-boundary fills — seeded, on virtual time, zero wall sleeps
+    /// (`BatcherCore` is the one implementation the wall-clock batcher
+    /// thread and the virtual-clock soak harness share).
+    #[test]
+    fn batcher_core_property_no_loss_no_reorder() {
+        crate::util::rng::property("batcher-core", 64, |rng| {
+            let batch = rng.range(1, 6);
+            let flush_ms = rng.range(1, 20) as u64;
+            let flush = Duration::from_millis(flush_ms);
+            let mut core: BatcherCore<u64> =
+                BatcherCore::new(batch, flush);
+            let total = rng.range(1, 80) as u64;
+            let mut now = Duration::ZERO;
+            let mut emitted: Vec<Vec<u64>> = Vec::new();
+            let mut next_id = 0u64;
+            while next_id < total {
+                if rng.chance(0.6) {
+                    // an arrival (same virtual instant as the last op
+                    // is a legal interleaving too)
+                    if let Some(b) = core.push(next_id, now) {
+                        assert_eq!(b.len(), batch,
+                                   "early pop must be a full batch");
+                        emitted.push(b);
+                    }
+                    next_id += 1;
+                } else {
+                    // virtual time passes; the flush may fire
+                    let dt = rng.range(0, 2 * flush_ms as usize + 2);
+                    now += Duration::from_millis(dt as u64);
+                    if let Some(b) = core.poll(now) {
+                        assert!(b.len() < batch,
+                                "full batches pop on fill, not flush");
+                        assert!(core.deadline().is_none());
+                        emitted.push(b);
+                    }
+                }
+            }
+            if let Some(rest) = core.drain() {
+                emitted.push(rest);
+            }
+            assert!(core.is_empty() && core.len() == 0);
+            let flat: Vec<u64> =
+                emitted.iter().flatten().copied().collect();
+            let expect: Vec<u64> = (0..total).collect();
+            assert_eq!(flat, expect,
+                       "requests lost, duplicated, or reordered");
+            assert!(emitted.iter().all(|b| {
+                !b.is_empty() && b.len() <= batch
+            }));
+        });
+    }
+
+    /// The flush window is inactivity-based (each arrival re-arms it),
+    /// matching the historical `recv_timeout(flush)` loop bit for bit.
+    #[test]
+    fn batcher_core_flush_window_is_inactivity_based() {
+        let ms = Duration::from_millis;
+        let mut core: BatcherCore<u32> = BatcherCore::new(10, ms(5));
+        assert!(core.deadline().is_none());
+        assert!(core.push(1, ms(0)).is_none());
+        assert_eq!(core.deadline(), Some(ms(5)));
+        // a later arrival pushes the deadline out (debounce)
+        assert!(core.push(2, ms(3)).is_none());
+        assert_eq!(core.deadline(), Some(ms(8)));
+        assert!(core.poll(ms(7)).is_none());
+        assert_eq!(core.poll(ms(8)).unwrap(), vec![1, 2]);
+        assert!(core.deadline().is_none() && core.is_empty());
+        // the size trigger pops exactly at the fill
+        let mut core: BatcherCore<u32> = BatcherCore::new(2, ms(5));
+        assert!(core.push(7, ms(0)).is_none());
+        assert_eq!(core.push(8, ms(1)).unwrap(), vec![7, 8]);
+        assert!(core.drain().is_none());
+    }
 
     fn tiny_model() -> Arc<RefGpt> {
         Arc::new(RefGpt::tiny(11, RefCfg {

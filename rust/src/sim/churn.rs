@@ -1,0 +1,124 @@
+//! Membership churn schedules for the soak simulation: kill and revive
+//! workers at virtual timestamps.
+
+use crate::util::rng::Rng;
+
+/// One membership event.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ChurnEvent {
+    /// The worker's thread dies outright (its transport slot goes dark;
+    /// the master discovers it through the gather deadline + probe).
+    Kill(usize),
+    /// A replacement thread is spawned on the dead slot and re-admitted.
+    Revive(usize),
+}
+
+/// A time-sorted list of churn events, consumed as virtual time passes.
+#[derive(Debug, Clone)]
+pub struct ChurnSchedule {
+    events: Vec<(f64, ChurnEvent)>,
+    next: usize,
+}
+
+impl ChurnSchedule {
+    pub fn new(mut events: Vec<(f64, ChurnEvent)>) -> ChurnSchedule {
+        events.sort_by(|a, b| a.0.total_cmp(&b.0));
+        ChurnSchedule { events, next: 0 }
+    }
+
+    /// No churn.
+    pub fn none() -> ChurnSchedule {
+        ChurnSchedule::new(Vec::new())
+    }
+
+    /// Seeded kill/revive cycles spread over `horizon` virtual seconds:
+    /// each cycle picks a victim among `p` workers, kills it partway
+    /// into its slot, and revives it before the slot ends — so at most
+    /// one device is dead at a time (harsher overlapping shapes are the
+    /// chaos/elastic suites' job; the soak pins throughput and
+    /// recovery under *sustained* single-failure churn).
+    pub fn cycles(seed: u64, p: usize, horizon: f64, cycles: usize)
+                  -> ChurnSchedule {
+        assert!(p > 0 && cycles > 0 && horizon > 0.0);
+        let mut rng = Rng::new(seed);
+        let slot = horizon / cycles as f64;
+        let mut events = Vec::with_capacity(2 * cycles);
+        for c in 0..cycles {
+            let victim = rng.below(p);
+            let t0 = (c as f64 + 0.2 + 0.3 * rng.f64()) * slot;
+            let t1 = t0 + (0.2 + 0.2 * rng.f64()) * slot;
+            events.push((t0, ChurnEvent::Kill(victim)));
+            events.push((t1, ChurnEvent::Revive(victim)));
+        }
+        ChurnSchedule::new(events)
+    }
+
+    /// Timestamp of the next unconsumed event.
+    pub fn next_at(&self) -> Option<f64> {
+        self.events.get(self.next).map(|(t, _)| *t)
+    }
+
+    /// Consume and return every event due at or before `now`.
+    pub fn pop_due(&mut self, now: f64) -> Vec<ChurnEvent> {
+        let mut due = Vec::new();
+        while let Some(&(t, ev)) = self.events.get(self.next) {
+            if t > now {
+                break;
+            }
+            due.push(ev);
+            self.next += 1;
+        }
+        due
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.events.len() - self.next
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sorts_and_pops_in_order() {
+        let mut s = ChurnSchedule::new(vec![
+            (2.0, ChurnEvent::Revive(1)),
+            (1.0, ChurnEvent::Kill(1)),
+            (3.0, ChurnEvent::Kill(0)),
+        ]);
+        assert_eq!(s.next_at(), Some(1.0));
+        assert_eq!(s.pop_due(0.5), vec![]);
+        assert_eq!(s.pop_due(2.0),
+                   vec![ChurnEvent::Kill(1), ChurnEvent::Revive(1)]);
+        assert_eq!(s.remaining(), 1);
+        assert_eq!(s.pop_due(10.0), vec![ChurnEvent::Kill(0)]);
+        assert_eq!(s.next_at(), None);
+        assert!(ChurnSchedule::none().next_at().is_none());
+    }
+
+    #[test]
+    fn cycles_kill_then_revive_one_at_a_time() {
+        let s = ChurnSchedule::cycles(42, 4, 20.0, 3);
+        assert_eq!(s.events.len(), 6);
+        let mut dead: Option<usize> = None;
+        for &(t, ev) in &s.events {
+            assert!(t > 0.0 && t < 20.0 + 10.0);
+            match ev {
+                ChurnEvent::Kill(w) => {
+                    assert!(dead.is_none(),
+                            "two devices dead at once");
+                    dead = Some(w);
+                }
+                ChurnEvent::Revive(w) => {
+                    assert_eq!(dead, Some(w), "revive mismatch");
+                    dead = None;
+                }
+            }
+        }
+        assert!(dead.is_none());
+        // deterministic per seed
+        let again = ChurnSchedule::cycles(42, 4, 20.0, 3);
+        assert_eq!(s.events, again.events);
+    }
+}

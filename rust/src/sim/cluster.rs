@@ -1,0 +1,676 @@
+//! The soak harness: the *real* serving loops at scale on the virtual
+//! clock, under open-loop load and membership churn.
+//!
+//! Topology mirrors the threaded server: P worker threads — each
+//! running the actual `server::worker_loop_with` protocol loop over a
+//! [`SimNetMt`] endpoint, with a deterministic closed-form
+//! [`BlockRunner`] standing in for the AOT engine — and the harness
+//! thread playing the master: it batches eval arrivals through the
+//! shared `server::BatcherCore`, drives decode streams through the
+//! shared `server::DecodeCore`, scatters/gathers with the real
+//! `run_distributed`, and recovers from churn with the real
+//! `probe_dead`/`reconfigure`/re-admission code. Every distributed
+//! batch result is asserted equal to a sequential lockstep reference of
+//! the same stand-in blocks, so a protocol bug (mixed epochs, dropped
+//! shares, wrong routing) fails loudly, not silently.
+//!
+//! Determinism: the conductor in `SimNetMt` serializes execution (one
+//! runnable participant at a time, earliest-event-first), so the whole
+//! soak — completion counts, epochs, virtual-time histograms — is a
+//! pure function of the [`SoakCfg`] seed. Two runs must compare equal,
+//! and the suite asserts they do.
+
+use std::collections::BTreeMap;
+use std::sync::mpsc::{channel, Receiver};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::coordinator::cluster::{ClusterView, EpochPlan};
+use crate::coordinator::segmeans::segment_means;
+use crate::coordinator::Mode;
+use crate::decode::{RefCfg, RefGpt};
+use crate::metrics::Histogram;
+use crate::net::message::Msg;
+use crate::net::simnet::{MtEndpoint, SimNetMt};
+use crate::net::transport::Transport;
+use crate::net::LinkModel;
+use crate::runtime::{ModelCfg, Tensor};
+use crate::server::{broadcast_reconfig, elastic_plan, probe_dead,
+                    reconfigure, run_distributed, stack_rows,
+                    BatcherCore, BlockRunner, DecodeCore, DecodeEvent,
+                    DecodeRequest, FaultPolicy, PassOutcome, SchedCtl,
+                    worker_loop_with};
+use crate::util::rng::Rng;
+
+use super::churn::{ChurnEvent, ChurnSchedule};
+use super::workload::{Arrival, WorkloadCfg, WorkloadGen};
+
+/// Soak configuration; [`SoakCfg::small`] is the suite preset.
+#[derive(Clone)]
+pub struct SoakCfg {
+    pub seed: u64,
+    /// Eval-mesh strength: P workers + the master (id P).
+    pub p: usize,
+    /// Landmarks per partition of the eval PRISM mode.
+    pub l: usize,
+    /// Eval batch size (the batcher's fill trigger).
+    pub batch: usize,
+    /// Synthetic eval model: window, width, block count.
+    pub n: usize,
+    pub d: usize,
+    pub layers: usize,
+    /// The virtual network every frame pays transfer time on.
+    pub link: LinkModel,
+    pub workload: WorkloadCfg,
+    pub churn: ChurnSchedule,
+    /// Failure-detection deadlines (master gather + worker exchange
+    /// barrier), in virtual time.
+    pub deadline: Duration,
+    /// Batcher flush window (virtual).
+    pub flush_after: Duration,
+    /// Decode scheduler cadence (virtual seconds per tick; every tick
+    /// advances each active stream by one quantum).
+    pub decode_tick: f64,
+}
+
+impl SoakCfg {
+    /// The suite preset: P=4 PRISM over a 1 Gbps / 50 µs mesh, tiny
+    /// synthetic shapes (the soak stresses the protocol, not FLOPs).
+    pub fn small(seed: u64) -> SoakCfg {
+        let workload = WorkloadCfg::default();
+        // churn spread over ~80% of the expected workload span, so the
+        // last revive lands while traffic still flows
+        let horizon = workload.mean_interarrival
+            * workload.requests as f64
+            * 0.8;
+        SoakCfg {
+            seed,
+            p: 4,
+            l: 4,
+            batch: 4,
+            n: 32,
+            d: 8,
+            layers: 3,
+            link: LinkModel::new(1000.0, 0.05),
+            workload,
+            churn: ChurnSchedule::cycles(seed ^ 0xC0FFEE, 4, horizon, 2),
+            deadline: Duration::from_millis(500),
+            flush_after: Duration::from_millis(4),
+            decode_tick: 0.002,
+        }
+    }
+}
+
+/// What one soak run produced. `PartialEq` is the determinism check:
+/// two runs of the same seed must compare equal, histograms included.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SoakReport {
+    pub seed: u64,
+    pub eval_requests: usize,
+    pub eval_responses: usize,
+    pub eval_batches: u64,
+    pub decode_streams: usize,
+    pub decode_completed: usize,
+    pub decode_aborted: usize,
+    pub decode_tokens: usize,
+    /// Final epoch of the serving view (number of membership/geometry
+    /// transitions the run survived).
+    pub final_epoch: u64,
+    /// Live strength at the end (full P when every churned worker
+    /// re-joined).
+    pub final_p: usize,
+    /// `ClusterView::full_strength` at the end — the post-re-join
+    /// acceptance bit: every configured device is serving again.
+    pub full_strength: bool,
+    pub virtual_secs: f64,
+    pub wire_bytes: usize,
+    pub eval_latency: Histogram,
+    pub decode_latency: Histogram,
+}
+
+impl SoakReport {
+    /// Requests that went unanswered — the zero-drops acceptance is
+    /// `dropped() == 0`.
+    pub fn dropped(&self) -> usize {
+        (self.eval_requests - self.eval_responses)
+            + (self.decode_streams - self.decode_completed)
+    }
+
+    pub fn requests(&self) -> usize {
+        self.eval_requests + self.decode_streams
+    }
+}
+
+/// The sim's artifact grid: every geometry exists (the stand-in blocks
+/// are closed-form), in both the failure and the re-join direction —
+/// one definition so the two re-plan paths cannot diverge.
+fn sim_avail(_: Mode) -> bool {
+    true
+}
+
+/// The deterministic closed-form block stand-in:
+/// `x' = 0.9 x + 0.1 mean(ctx) + 0.01 (layer+1)` row-wise, with the
+/// PRISM share computed by the *real* `segment_means` — so exchange
+/// shapes and wire bytes match what an engine-backed worker would put
+/// on the mesh, and the whole pass is reproducible sequential f32.
+fn sim_block(x: &Tensor, ctx: &Tensor, layer: usize) -> Result<Tensor> {
+    let (b, np, d) = (x.shape[0], x.shape[1], x.shape[2]);
+    let xs = x.f32s()?;
+    let cs = ctx.f32s()?;
+    let rows = ctx.shape[1]; // peers * L (0 on a single-device pass)
+    let mut out = vec![0.0f32; xs.len()];
+    let lc = 0.01 * (layer as f32 + 1.0);
+    for bi in 0..b {
+        let mut cmean = vec![0.0f32; d];
+        if rows > 0 {
+            for r in 0..rows {
+                let s = &cs[(bi * rows + r) * d
+                    ..(bi * rows + r + 1) * d];
+                for (m, v) in cmean.iter_mut().zip(s) {
+                    *m += v;
+                }
+            }
+            let inv = 1.0 / rows as f32;
+            for m in cmean.iter_mut() {
+                *m *= inv;
+            }
+        }
+        for i in 0..np {
+            let base = (bi * np + i) * d;
+            for j in 0..d {
+                out[base + j] = 0.9 * xs[base + j] + 0.1 * cmean[j] + lc;
+            }
+        }
+    }
+    Tensor::from_f32(vec![b, np, d], out)
+}
+
+/// The sim-side [`BlockRunner`]: `ensure` just records the geometry,
+/// `run` applies [`sim_block`] and derives the PRISM share with the
+/// real `segment_means`.
+struct SimBlocks {
+    modes: BTreeMap<String, Mode>,
+}
+
+impl SimBlocks {
+    fn new() -> SimBlocks {
+        SimBlocks { modes: BTreeMap::new() }
+    }
+}
+
+impl BlockRunner for SimBlocks {
+    fn ensure(&mut self, mode: Mode, rank: usize) -> Result<String> {
+        let key = format!("sim-{}-p{}-l{}-r{rank}", mode.name(),
+                          mode.p(), mode.l());
+        self.modes.insert(key.clone(), mode);
+        Ok(key)
+    }
+
+    fn run(&mut self, exec: &str, layer: usize, args: &[&Tensor])
+           -> Result<Vec<Tensor>> {
+        let mode = *self
+            .modes
+            .get(exec)
+            .with_context(|| format!("unknown sim executable {exec}"))?;
+        let out = sim_block(args[0], args[1], layer)?;
+        match mode {
+            Mode::Prism { l, .. } => {
+                let share = segment_means(&out, l)?;
+                Ok(vec![out, share])
+            }
+            _ => Ok(vec![out]),
+        }
+    }
+}
+
+/// Sequential lockstep reference of the distributed pass on `plan`:
+/// partitions advance layer by layer, exchanging segment means exactly
+/// as the worker protocol does — the gathered distributed output must
+/// equal this bit-for-bit.
+fn reference_pass(plan: &EpochPlan, x0: &Tensor, layers: usize)
+                  -> Result<Tensor> {
+    let pls = &plan.plans;
+    let l = plan.mode.l();
+    let b = x0.shape[0];
+    let d = *x0.shape.last().context("x0 wants a (B, N, D) shape")?;
+    let mut xs: Vec<Tensor> = pls
+        .iter()
+        .map(|pl| x0.slice1(pl.start(), pl.start() + pl.n_p()))
+        .collect::<Result<_>>()?;
+    // layer-0 context comes from the *input* partitions (what the
+    // master ships inside the Job); later layers use the previous
+    // block's shares
+    let share_of = |xp: &Tensor| -> Result<Tensor> {
+        if l > 0 {
+            segment_means(xp, l)
+        } else {
+            Ok(xp.clone())
+        }
+    };
+    let mut shares: Vec<Tensor> =
+        xs.iter().map(&share_of).collect::<Result<_>>()?;
+    for layer in 0..layers {
+        let mut next = Vec::with_capacity(pls.len());
+        for (rank, pl) in pls.iter().enumerate() {
+            let peers = pl.peers();
+            let ctx = if peers.is_empty() {
+                Tensor::from_f32(vec![b, 0, d], Vec::new())?
+            } else {
+                let refs: Vec<&Tensor> =
+                    peers.iter().map(|&j| &shares[j]).collect();
+                Tensor::concat1(&refs)?
+            };
+            next.push(sim_block(&xs[rank], &ctx, layer)?);
+        }
+        xs = next;
+        shares = xs.iter().map(&share_of).collect::<Result<_>>()?;
+    }
+    let refs: Vec<&Tensor> = xs.iter().collect();
+    Tensor::concat1(&refs)
+}
+
+/// One eval request riding the batcher.
+struct EvalReq {
+    row: Tensor,
+    arrived: f64,
+}
+
+fn spawn_sim_worker(net: &SimNetMt, wid: usize, model: &ModelCfg,
+                    mode: Mode, faults: &FaultPolicy, join_epoch: u32)
+                    -> Result<JoinHandle<Result<()>>> {
+    // register on the harness thread, BEFORE the OS schedules the new
+    // thread: the conductor must know about the participant from the
+    // instant this function returns, or wake order would race
+    let ep = net.endpoint(wid);
+    let model = model.clone();
+    let faults = faults.clone();
+    let h = std::thread::Builder::new()
+        .name(format!("sim-worker-{wid}"))
+        .spawn(move || {
+            worker_loop_with(model, mode, SimBlocks::new(), ep, faults,
+                             join_epoch)
+        })?;
+    Ok(h)
+}
+
+/// Run one batch through the real elastic master pass and assert the
+/// result against the lockstep reference.
+#[allow(clippy::too_many_arguments)]
+fn run_eval_batch(cfg: &SoakCfg, net: &SimNetMt, ep: &mut MtEndpoint,
+                  view: &mut ClusterView, current: &mut EpochPlan,
+                  faults: &FaultPolicy, batch: Vec<EvalReq>,
+                  job_id: &mut u64, eval_latency: &mut Histogram,
+                  eval_responses: &mut usize) -> Result<()> {
+    let rows: Vec<&Tensor> = batch.iter().map(|r| &r.row).collect();
+    let x0 = stack_rows(&rows, cfg.batch)?;
+    loop {
+        if current.p() <= 1 {
+            // the master serves alone (same fallback as the real
+            // masters; the reference IS the single-device compute, so
+            // there is nothing independent to compare against)
+            reference_pass(current, &x0, cfg.layers)?;
+            break;
+        }
+        match run_distributed(current, ep, &x0, *job_id,
+                              faults.gather_deadline)? {
+            PassOutcome::Done(x) => {
+                // the lockstep reference is computed independently of
+                // the mesh: a protocol bug (mixed epochs, dropped or
+                // misrouted shares) fails loudly here
+                let expect = reference_pass(current, &x0, cfg.layers)?;
+                if x != expect {
+                    bail!("distributed batch {job_id} diverged from \
+                           the lockstep reference on epoch {}",
+                          current.epoch);
+                }
+                break;
+            }
+            PassOutcome::Dead(missing) => {
+                let probed = probe_dead(ep, &missing, cfg.p);
+                let dead = if probed.is_empty() {
+                    missing
+                } else {
+                    probed
+                };
+                *current = reconfigure(&sim_avail, cfg.n, view, &dead,
+                                       ep, cfg.p)?;
+            }
+        }
+    }
+    *job_id += 1;
+    let done = net.now_secs();
+    for r in &batch {
+        eval_latency.record((done - r.arrived).max(0.0));
+        *eval_responses += 1;
+    }
+    Ok(())
+}
+
+/// Drain decode events after a scheduler tick, recording completion
+/// latencies on the virtual clock.
+#[allow(clippy::too_many_arguments)]
+fn drain_decode_events(rx: &Receiver<DecodeEvent>, now: f64,
+                       meta: &mut BTreeMap<u64, f64>,
+                       decode_latency: &mut Histogram,
+                       tokens: &mut usize, completed: &mut usize,
+                       aborted: &mut usize) {
+    while let Ok(ev) = rx.try_recv() {
+        if ev.token >= 0 {
+            *tokens += 1;
+        }
+        if ev.done {
+            let arrived = meta.remove(&ev.id).unwrap_or(now);
+            decode_latency.record((now - arrived).max(0.0));
+            if ev.token >= 0 {
+                *completed += 1;
+            } else {
+                *aborted += 1;
+            }
+        }
+    }
+}
+
+/// The soak: spawn the mesh, replay the seeded workload and churn
+/// schedule on the virtual clock, and account everything.
+pub fn run_soak(cfg: &SoakCfg) -> Result<SoakReport> {
+    if cfg.p < 2 {
+        bail!("the soak wants a distributed mesh (P >= 2)");
+    }
+    let mode = Mode::Prism { p: cfg.p, l: cfg.l, duplicated: true };
+    let model = ModelCfg {
+        name: "sim".into(),
+        kind: "sim".into(),
+        n: cfg.n,
+        d: cfg.d,
+        heads: 1,
+        layers: cfg.layers,
+        ffn: 0,
+        vocab: 0,
+        img: 0,
+        patch: 0,
+        causal: true,
+    };
+    let faults = FaultPolicy {
+        gather_deadline: cfg.deadline,
+        exchange_deadline: cfg.deadline,
+        chaos_exit_worker: None,
+    };
+    let net = SimNetMt::new(cfg.p + 1, cfg.link);
+    let mut ep = net.endpoint(cfg.p);
+    let mut workers: Vec<Option<JoinHandle<Result<()>>>> = (0..cfg.p)
+        .map(|wid| {
+            spawn_sim_worker(&net, wid, &model, mode, &faults, 0)
+                .map(Some)
+        })
+        .collect::<Result<_>>()?;
+
+    let mut view = ClusterView::new(mode, cfg.n, true)?;
+    let mut current = view.current()?;
+
+    // decode side: the shared scheduling core on the reference model,
+    // ticked at the configured virtual cadence
+    let dec_cfg = RefCfg {
+        vocab: cfg.workload.vocab,
+        n: 64,
+        d: 16,
+        heads: 2,
+        layers: 2,
+        ffn: 32,
+    };
+    let dec_model = Arc::new(RefGpt::tiny(cfg.seed ^ 0xD0, dec_cfg)?);
+    let mut decode = DecodeCore::new(dec_model, cfg.p, 4,
+                                     crate::util::quant::WireFmt::F32,
+                                     2)?;
+    let (dec_tx, dec_rx) = channel::<DecodeEvent>();
+    let mut dec_meta: BTreeMap<u64, f64> = BTreeMap::new();
+
+    let mut batcher: BatcherCore<EvalReq> =
+        BatcherCore::new(cfg.batch, cfg.flush_after);
+    let mut churn = cfg.churn.clone();
+    let mut gen = WorkloadGen::new(cfg.seed, cfg.workload.clone());
+    let mut next_arrival = gen.next();
+    let mut rows_rng = Rng::new(cfg.seed ^ 0xE7A1);
+
+    let mut report = SoakReport {
+        seed: cfg.seed,
+        eval_requests: 0,
+        eval_responses: 0,
+        eval_batches: 0,
+        decode_streams: 0,
+        decode_completed: 0,
+        decode_aborted: 0,
+        decode_tokens: 0,
+        final_epoch: 0,
+        final_p: 0,
+        full_strength: false,
+        virtual_secs: 0.0,
+        wire_bytes: 0,
+        eval_latency: Histogram::new(),
+        decode_latency: Histogram::new(),
+    };
+    let mut next_decode_tick: Option<f64> = None;
+    let mut job_id = 0u64;
+
+    loop {
+        // the next event, in deterministic tie order:
+        // churn < batch flush < decode tick < arrival
+        let mut cands: Vec<(f64, u8)> = Vec::new();
+        if let Some(t) = churn.next_at() {
+            cands.push((t, 0));
+        }
+        if let Some(dl) = batcher.deadline() {
+            cands.push((dl.as_secs_f64(), 1));
+        }
+        if let Some(t) = next_decode_tick {
+            cands.push((t, 2));
+        }
+        if let Some(item) = &next_arrival {
+            cands.push((item.at, 3));
+        }
+        let Some(&(t, kind)) = cands
+            .iter()
+            .min_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)))
+        else {
+            break; // workload, batcher, decode, and churn all drained
+        };
+        ep.sleep_until(t);
+        match kind {
+            0 => {
+                for ev in churn.pop_due(t) {
+                    match ev {
+                        ChurnEvent::Kill(w) => {
+                            if !net.is_alive(w) {
+                                continue;
+                            }
+                            net.kill(w);
+                            if let Some(h) = workers[w].take() {
+                                h.join().map_err(|_| {
+                                    anyhow!("sim worker {w} panicked")
+                                })??;
+                            }
+                            // membership verb to the decode scheduler
+                            // (detection timing is the chaos suite's
+                            // business; the soak pins recovery)
+                            decode.ctl(SchedCtl::Fail(w));
+                        }
+                        ChurnEvent::Revive(w) => {
+                            if net.is_alive(w) {
+                                continue;
+                            }
+                            net.revive(w);
+                            let join_epoch =
+                                (view.epoch() + 1) as u32;
+                            workers[w] = Some(spawn_sim_worker(
+                                &net, w, &model, mode, &faults,
+                                join_epoch)?);
+                            // master-side re-admission, symmetric to
+                            // the threaded/mesh re-join paths. If no
+                            // batch ran during the outage the master
+                            // never wrote the device off; record the
+                            // restart explicitly so the fresh thread
+                            // gets an epoch to adopt.
+                            if view.is_alive(w) {
+                                view.fail_device(w)?;
+                            }
+                            view.add_device(w)?;
+                            current = elastic_plan(&sim_avail, cfg.n,
+                                                   &mut view)?;
+                            broadcast_reconfig(&mut ep, &current);
+                            decode.ctl(SchedCtl::Add(w));
+                        }
+                    }
+                }
+            }
+            1 => {
+                // poll with the exact Duration deadline: an f64
+                // round-trip could land a hair short and never fire
+                let due = batcher.deadline();
+                if let Some(batch) =
+                    due.and_then(|dl| batcher.poll(dl))
+                {
+                    report.eval_batches += 1;
+                    run_eval_batch(cfg, &net, &mut ep, &mut view,
+                                   &mut current, &faults, batch,
+                                   &mut job_id,
+                                   &mut report.eval_latency,
+                                   &mut report.eval_responses)?;
+                }
+            }
+            2 => {
+                decode.tick();
+                drain_decode_events(&dec_rx, net.now_secs(),
+                                    &mut dec_meta,
+                                    &mut report.decode_latency,
+                                    &mut report.decode_tokens,
+                                    &mut report.decode_completed,
+                                    &mut report.decode_aborted);
+                next_decode_tick = if decode.active() > 0 {
+                    Some(t + cfg.decode_tick)
+                } else {
+                    None
+                };
+            }
+            _ => {
+                let item = next_arrival.take().unwrap();
+                next_arrival = gen.next();
+                match item.kind {
+                    Arrival::Eval => {
+                        report.eval_requests += 1;
+                        let row = Tensor::from_f32(
+                            vec![1, cfg.n, cfg.d],
+                            rows_rng.normal_vec(cfg.n * cfg.d, 0.5))?;
+                        let req =
+                            EvalReq { row, arrived: item.at };
+                        if let Some(batch) = batcher
+                            .push(req, Duration::from_secs_f64(item.at))
+                        {
+                            report.eval_batches += 1;
+                            run_eval_batch(cfg, &net, &mut ep,
+                                           &mut view, &mut current,
+                                           &faults, batch, &mut job_id,
+                                           &mut report.eval_latency,
+                                           &mut report.eval_responses)?;
+                        }
+                    }
+                    Arrival::Decode { prompt, steps, replica_wire } => {
+                        let id = report.decode_streams as u64;
+                        report.decode_streams += 1;
+                        dec_meta.insert(id, item.at);
+                        decode.admit(DecodeRequest {
+                            id,
+                            prompt,
+                            steps,
+                            replicate: true,
+                            replica_wire,
+                            respond: dec_tx.clone(),
+                        });
+                        if next_decode_tick.is_none() {
+                            next_decode_tick =
+                                Some(item.at + cfg.decode_tick);
+                        }
+                    }
+                }
+            }
+        }
+    }
+    // stragglers: ctl-driven abort events can land between ticks
+    drain_decode_events(&dec_rx, net.now_secs(), &mut dec_meta,
+                        &mut report.decode_latency,
+                        &mut report.decode_tokens,
+                        &mut report.decode_completed,
+                        &mut report.decode_aborted);
+
+    report.final_epoch = view.epoch();
+    report.final_p = view.live();
+    report.full_strength = view.full_strength();
+
+    // release the mesh: Shutdown every live worker, then hand the
+    // virtual clock over (dropping our endpoint deregisters the
+    // master) so the deliveries can drain, and join
+    for wid in 0..cfg.p {
+        if net.is_alive(wid) {
+            let _ = ep.send(wid, Msg::Shutdown);
+        }
+    }
+    drop(ep);
+    for (wid, h) in workers.iter_mut().enumerate() {
+        if let Some(h) = h.take() {
+            h.join()
+                .map_err(|_| anyhow!("sim worker {wid} panicked"))??;
+        }
+    }
+    report.virtual_secs = net.now_secs();
+    report.wire_bytes = net.stats().total_bytes();
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A churn-free mini-soak completes everything, and the
+    /// distributed results match the lockstep reference (asserted
+    /// inside `run_eval_batch` on every batch).
+    #[test]
+    fn mini_soak_without_churn_completes_everything() {
+        let mut cfg = SoakCfg::small(5);
+        cfg.workload.requests = 60;
+        cfg.churn = ChurnSchedule::none();
+        let r = run_soak(&cfg).unwrap();
+        assert_eq!(r.requests(), 60);
+        assert_eq!(r.dropped(), 0, "{r:?}");
+        assert_eq!(r.decode_aborted, 0);
+        assert_eq!(r.final_epoch, 0, "no churn, no transitions");
+        assert_eq!(r.final_p, cfg.p);
+        assert!(r.full_strength);
+        assert!(r.virtual_secs > 0.0 && r.wire_bytes > 0);
+        assert!(r.eval_latency.count() as usize == r.eval_responses);
+    }
+
+    /// The reference pass equals the single-partition closed form on a
+    /// degenerate plan, and sim_block is deterministic.
+    #[test]
+    fn reference_pass_and_sim_block_are_deterministic() {
+        let mut rng = Rng::new(9);
+        let x = Tensor::from_f32(vec![2, 8, 4],
+                                 rng.normal_vec(2 * 8 * 4, 1.0))
+            .unwrap();
+        let ctx = Tensor::from_f32(vec![2, 3, 4],
+                                   rng.normal_vec(2 * 3 * 4, 1.0))
+            .unwrap();
+        let a = sim_block(&x, &ctx, 1).unwrap();
+        let b = sim_block(&x, &ctx, 1).unwrap();
+        assert_eq!(a, b);
+        let mut view = ClusterView::new(
+            Mode::Prism { p: 2, l: 2, duplicated: true }, 8, true)
+            .unwrap();
+        let plan = view.current().unwrap();
+        let r1 = reference_pass(&plan, &x, 3).unwrap();
+        let r2 = reference_pass(&plan, &x, 3).unwrap();
+        assert_eq!(r1, r2);
+        assert_eq!(r1.shape, x.shape);
+    }
+}

@@ -1,0 +1,35 @@
+//! Deterministic full-stack soak simulation (FoundationDB-style).
+//!
+//! The chaos/elastic suites pin the fault machinery at the session and
+//! transport layers; this module soaks the *serving* layer itself:
+//! [`cluster::run_soak`] drives the real generic-over-`Transport`
+//! serving loops — each worker thread literally executes
+//! `server::worker_loop_with`, the master side runs the real
+//! `run_distributed` / `probe` / `reconfigure` / re-admission code —
+//! end-to-end on the conductor-scheduled virtual clock
+//! (`net::SimNetMt`), with
+//!
+//! * [`workload::WorkloadGen`] — a seeded open-loop arrival process
+//!   (heavy-tailed Pareto interarrivals) mixing eval batches for the
+//!   shared `server::BatcherCore` with multi-stream decode sessions of
+//!   varied prompt/length/replica wire for the shared
+//!   `server::DecodeCore`;
+//! * [`churn::ChurnSchedule`] — kill/revive events at virtual
+//!   timestamps: a kill ends the worker's thread outright (the master
+//!   discovers it through the real gather-deadline → probe → re-plan
+//!   path), a revive respawns the thread on the dead slot and
+//!   re-admits it with a `Msg::Reconfig`, restoring the full geometry;
+//! * virtual-time latency/throughput histograms
+//!   (`metrics::Histogram`) asserted against SLOs per seed.
+//!
+//! Everything is a pure function of the seed: thousands of requests
+//! and aggressive churn replay bit-identically — histograms included —
+//! in seconds of wall time with zero wall sleeps.
+
+pub mod churn;
+pub mod cluster;
+pub mod workload;
+
+pub use churn::{ChurnEvent, ChurnSchedule};
+pub use cluster::{run_soak, SoakCfg, SoakReport};
+pub use workload::{Arrival, WorkloadCfg, WorkloadGen, WorkloadItem};

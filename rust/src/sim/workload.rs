@@ -1,0 +1,189 @@
+//! Seeded open-loop workload generator for the soak simulation.
+//!
+//! Open-loop means arrival times are drawn independently of service:
+//! a slow server falls behind and queues, which is exactly the regime
+//! the "heavy traffic from millions of users" north star cares about.
+//! Interarrivals are Pareto-distributed (heavy-tailed bursts — long
+//! quiet stretches punctuated by packed arrivals), and each arrival is
+//! either one eval row for the batcher or a decode stream with seeded
+//! prompt length, generation length, and replica wire format.
+
+use crate::util::quant::WireFmt;
+use crate::util::rng::Rng;
+
+/// What arrived.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Arrival {
+    /// One single-row eval request (batched by `server::BatcherCore`).
+    Eval,
+    /// One autoregressive decode stream for the scheduler.
+    Decode {
+        prompt: Vec<i32>,
+        steps: usize,
+        /// Replica wire of the stream's buddy replication (the
+        /// replication cost knob): f32 exact, f16 half-cost lossy.
+        replica_wire: WireFmt,
+    },
+}
+
+/// One arrival at a virtual timestamp (seconds).
+#[derive(Debug, Clone, PartialEq)]
+pub struct WorkloadItem {
+    pub at: f64,
+    pub kind: Arrival,
+}
+
+/// Workload shape knobs.
+#[derive(Debug, Clone)]
+pub struct WorkloadCfg {
+    /// Total arrivals to generate.
+    pub requests: usize,
+    /// Mean interarrival gap (virtual seconds).
+    pub mean_interarrival: f64,
+    /// Pareto tail exponent (> 1): smaller = heavier bursts.
+    pub tail_alpha: f64,
+    /// Fraction of arrivals that are decode streams.
+    pub decode_fraction: f64,
+    /// Decode vocabulary (prompt tokens drawn from `1..vocab`).
+    pub vocab: usize,
+    /// Inclusive prompt-length range.
+    pub prompt_len: (usize, usize),
+    /// Inclusive generated-token range (min >= 1: a zero-step stream
+    /// closes with an abort event by contract).
+    pub steps: (usize, usize),
+}
+
+impl Default for WorkloadCfg {
+    fn default() -> WorkloadCfg {
+        WorkloadCfg {
+            requests: 1000,
+            mean_interarrival: 0.02,
+            tail_alpha: 1.5,
+            decode_fraction: 0.3,
+            vocab: 20,
+            prompt_len: (3, 8),
+            steps: (4, 12),
+        }
+    }
+}
+
+/// The seeded generator; an iterator over [`WorkloadItem`]s with
+/// strictly increasing timestamps.
+pub struct WorkloadGen {
+    rng: Rng,
+    cfg: WorkloadCfg,
+    now: f64,
+    emitted: usize,
+}
+
+impl WorkloadGen {
+    pub fn new(seed: u64, cfg: WorkloadCfg) -> WorkloadGen {
+        WorkloadGen { rng: Rng::new(seed), cfg, now: 0.0, emitted: 0 }
+    }
+
+    /// Pareto interarrival with the configured mean, capped at 50x so
+    /// one tail draw cannot stall the whole soak: scale x_m is chosen
+    /// so E[X] = alpha * x_m / (alpha - 1) equals `mean_interarrival`.
+    fn interarrival(&mut self) -> f64 {
+        let a = self.cfg.tail_alpha;
+        let xm = self.cfg.mean_interarrival * (a - 1.0) / a;
+        let u = self.rng.f64().max(1e-12);
+        (xm / u.powf(1.0 / a)).min(self.cfg.mean_interarrival * 50.0)
+    }
+}
+
+impl Iterator for WorkloadGen {
+    type Item = WorkloadItem;
+
+    fn next(&mut self) -> Option<WorkloadItem> {
+        if self.emitted >= self.cfg.requests {
+            return None;
+        }
+        self.emitted += 1;
+        self.now += self.interarrival();
+        let kind = if self.rng.chance(self.cfg.decode_fraction) {
+            let (lo, hi) = self.cfg.prompt_len;
+            let len = self.rng.range(lo, hi + 1);
+            let prompt = (0..len)
+                .map(|_| self.rng.range(1, self.cfg.vocab) as i32)
+                .collect();
+            let (slo, shi) = self.cfg.steps;
+            let steps = self.rng.range(slo.max(1), shi + 1);
+            // CR variety: a third of the streams take the half-cost
+            // lossy f16 replica, the rest the exact f32 one
+            let replica_wire = if self.rng.chance(0.33) {
+                WireFmt::F16
+            } else {
+                WireFmt::F32
+            };
+            Arrival::Decode { prompt, steps, replica_wire }
+        } else {
+            Arrival::Eval
+        };
+        Some(WorkloadItem { at: self.now, kind })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn seeded_and_deterministic() {
+        let cfg = WorkloadCfg { requests: 200, ..Default::default() };
+        let a: Vec<WorkloadItem> =
+            WorkloadGen::new(7, cfg.clone()).collect();
+        let b: Vec<WorkloadItem> =
+            WorkloadGen::new(7, cfg.clone()).collect();
+        assert_eq!(a, b);
+        let c: Vec<WorkloadItem> = WorkloadGen::new(8, cfg).collect();
+        assert_ne!(a, c, "different seeds must differ");
+        assert_eq!(a.len(), 200);
+    }
+
+    #[test]
+    fn timestamps_increase_and_tail_is_heavy() {
+        let cfg = WorkloadCfg { requests: 5000, ..Default::default() };
+        let items: Vec<WorkloadItem> =
+            WorkloadGen::new(11, cfg.clone()).collect();
+        let mut last = 0.0;
+        let mut max_gap: f64 = 0.0;
+        for it in &items {
+            assert!(it.at > last, "timestamps must strictly increase");
+            max_gap = max_gap.max(it.at - last);
+            last = it.at;
+        }
+        // heavy tail: some gap far beyond the mean, but capped
+        assert!(max_gap > 4.0 * cfg.mean_interarrival,
+                "max gap {max_gap} is not heavy-tailed");
+        assert!(max_gap <= 50.0 * cfg.mean_interarrival + 1e-12);
+    }
+
+    #[test]
+    fn mixes_eval_and_decode_with_valid_shapes() {
+        let cfg = WorkloadCfg { requests: 2000, ..Default::default() };
+        let items: Vec<WorkloadItem> =
+            WorkloadGen::new(3, cfg.clone()).collect();
+        let mut decodes = 0;
+        let mut f16 = 0;
+        for it in &items {
+            if let Arrival::Decode { prompt, steps, replica_wire } =
+                &it.kind
+            {
+                decodes += 1;
+                assert!((cfg.prompt_len.0..=cfg.prompt_len.1)
+                    .contains(&prompt.len()));
+                assert!((cfg.steps.0..=cfg.steps.1).contains(steps));
+                assert!(prompt.iter().all(|&t| {
+                    t >= 1 && (t as usize) < cfg.vocab
+                }));
+                if *replica_wire == WireFmt::F16 {
+                    f16 += 1;
+                }
+            }
+        }
+        // fractions in the right ballpark (seeded, not flaky)
+        assert!(decodes > 450 && decodes < 750, "decodes {decodes}");
+        assert!(f16 > 0 && f16 < decodes, "f16 replica mix missing");
+    }
+}

@@ -413,6 +413,114 @@ fn server_repartitions_to_p2_on_one_of_three_worker_loss() {
     server.shutdown().unwrap();
 }
 
+/// Thread-level re-join (ISSUE 5 tentpole, engine-backed flavor; the
+/// artifact-free soak pins the same machinery at scale): after a P=3
+/// server writes off a crashed worker and re-plans to P'=2,
+/// `Server::rejoin_worker` respawns the dead device's slot, the master
+/// re-admits it at the next batch boundary, and the batch after that
+/// serves on the restored full-P geometry — matching the P=3 runner
+/// bit-close, with the `geometry()` gauge tracking every transition.
+#[test]
+fn server_rejoins_respawned_worker_thread_to_full_p() {
+    let Some(m) = manifest() else { return };
+    use prism::server::{FaultPolicy, Request, Response, ServeConfig,
+                        Server};
+    use std::sync::mpsc::channel;
+    use std::time::{Duration, Instant};
+
+    let ds = Dataset::load(&m.root, "synth10").unwrap();
+    let ws = WeightSet::load(&m, "vit_synth10").unwrap();
+    let batch = m.eval_batch;
+    let base = Mode::Prism { p: 3, l: 3, duplicated: true };
+    let mut server = Server::start_with(
+        m.clone(),
+        ServeConfig {
+            model: "vit".into(),
+            task: "synth10".into(),
+            weights: "vit_synth10".into(),
+            mode: base,
+            flavor: "xla".into(),
+            flush_after: Duration::from_millis(2),
+            pace: None,
+        },
+        FaultPolicy {
+            gather_deadline: Duration::from_secs(2),
+            exchange_deadline: Duration::from_secs(2),
+            chaos_exit_worker: Some(2), // device 2 crashes on first job
+        },
+    )
+    .unwrap();
+    assert_eq!(server.geometry(), (0, 3));
+    let (tx, rx) = channel::<Response>();
+    // clone the intake: the closure must not hold a field borrow of
+    // `server` across the `&mut self` rejoin_worker call below
+    let requests = server.requests.clone();
+    let mut send_round = |round: u64| {
+        for i in 0..batch {
+            requests
+                .send(Request {
+                    id: round * batch as u64 + i as u64,
+                    raw: ds.x.slice0(i, i + 1).unwrap(),
+                    enqueued: Instant::now(),
+                    respond: tx.clone(),
+                })
+                .unwrap();
+        }
+        let mut got: Vec<Option<Tensor>> = vec![None; batch];
+        for _ in 0..batch {
+            let r = rx.recv_timeout(Duration::from_secs(120)).unwrap();
+            got[(r.id - round * batch as u64) as usize] =
+                Some(r.logits);
+        }
+        got
+    };
+    let check = |got: Vec<Option<Tensor>>, mode: Mode, label: &str| {
+        let mut runner = Runner::new(m.clone(), "xla").unwrap();
+        let raw = ds.x.slice0(0, batch).unwrap();
+        let (expect, _) = runner
+            .forward("vit", &ws, "synth10", &raw, mode)
+            .unwrap();
+        let ef = expect.f32s().unwrap();
+        let classes = *expect.shape.last().unwrap();
+        for (i, logits) in got.into_iter().enumerate() {
+            let l = logits.expect("request dropped");
+            let row = &ef[i * classes..(i + 1) * classes];
+            let diff = l
+                .f32s()
+                .unwrap()
+                .iter()
+                .zip(row)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0f32, f32::max);
+            assert!(diff < 1e-4, "{label} row {i}: diff {diff}");
+        }
+    };
+    // round 0 hits the crash: written off, re-planned to P'=2 (the
+    // Eq. 16 L'=4 has no artifact, so the base L=3 fallback serves)
+    let fallback = Mode::Prism { p: 2, l: 3, duplicated: true };
+    check(send_round(0), fallback, "post-crash");
+    let (epoch_after_loss, p_after_loss) = server.geometry();
+    assert_eq!(p_after_loss, 2, "crash did not shrink the geometry");
+    assert!(epoch_after_loss >= 1);
+    // respawn the dead slot (give its fresh engine a beat to load);
+    // the next batch boundary re-admits it, so the very next round
+    // serves on the restored full-P geometry
+    server.rejoin_worker(2).unwrap();
+    std::thread::sleep(Duration::from_millis(500));
+    check(send_round(1), base, "restored full P");
+    check(send_round(2), base, "steady state after re-join");
+    let (epoch_restored, p_restored) = server.geometry();
+    assert_eq!(p_restored, 3, "re-join did not restore full P");
+    assert!(epoch_restored > epoch_after_loss);
+    // the closure borrows tx and requests: release it first, then
+    // every clone of the intake — the batcher keeps serving any live
+    // sender, and shutdown's join would never return
+    drop(send_round);
+    drop(tx);
+    drop(requests);
+    server.shutdown().unwrap();
+}
+
 /// TCP remote worker returns exactly what a local engine computes.
 #[test]
 fn tcp_worker_matches_local() {
