@@ -9,8 +9,9 @@ PYTHON ?= python3
 # .github/workflows/ci.yml.
 CHAOS_SEEDS ?= 11,23,37,41,53,67,79,97,101,113
 
-.PHONY: all build test verify chaos elastic soak chaos-mesh mesh-smoke \
-        bench-decode bench-mesh bench-soak artifacts lint fmt clean
+.PHONY: all build test verify chaos elastic soak soak-hetero chaos-mesh \
+        mesh-smoke bench-decode bench-mesh bench-soak bench-hetero \
+        artifacts lint fmt clean
 
 all: build
 
@@ -39,6 +40,13 @@ elastic:
 soak:
 	CHAOS_SEEDS=$(CHAOS_SEEDS) $(CARGO) test --test soak
 
+# Heterogeneity soak: the same harness over a fleet with a 4x-slow
+# straggler and a mid-run throttle, modeled per-block compute time on
+# the virtual clock — adaptive re-partitioning must beat the static
+# equal split on p99, deterministically, per seed.
+soak-hetero:
+	CHAOS_SEEDS=$(CHAOS_SEEDS) $(CARGO) test --test hetero
+
 # The chaos suite over the worker-to-worker mesh transport (FaultNet
 # wraps every per-peer edge; `tests/common::mesh_transport`). The
 # elastic suite's mesh tests run unconditionally under `make elastic`.
@@ -65,6 +73,11 @@ bench-mesh:
 # percentiles at a fixed seed; writes BENCH_soak.json.
 bench-soak:
 	$(CARGO) bench --bench soak_throughput
+
+# Hetero bench (artifact-free): static vs adaptive partitioning on the
+# straggler fleet at a fixed seed; writes BENCH_hetero.json.
+bench-hetero:
+	$(CARGO) bench --bench hetero_soak
 
 # Layer-1/2 AOT lowering: produces artifacts/ (HLO text, weights,
 # datasets, fixtures, manifest.json). Requires the JAX/Pallas toolchain.

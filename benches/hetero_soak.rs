@@ -1,0 +1,76 @@
+//! §Perf hetero bench: static equal split vs heterogeneity-aware
+//! adaptive re-partitioning on the same seeded straggler fleet
+//! (`SoakCfg::hetero` — modeled per-block compute time on the virtual
+//! clock, one 4x-slow device, a mid-run thermal throttle), reporting
+//! both runs' virtual latency percentiles and the wall cost.
+//!
+//! Artifact-free (the sim's stand-in blocks need no AOT artifacts), so
+//! this runs on any checkout:
+//!
+//!     cargo bench --bench hetero_soak
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+use anyhow::Result;
+use prism::sim::{run_soak, SoakCfg};
+use prism::util::json::Json;
+
+fn main() -> Result<()> {
+    let cfg = SoakCfg::hetero(11);
+    println!("== hetero soak (virtual clock, P={} L={}, speeds {:?}, \
+              {} mixed requests, mid-run throttle) ==",
+             cfg.p, cfg.l, cfg.speeds, cfg.workload.requests);
+
+    let t0 = Instant::now();
+    let adaptive = run_soak(&cfg)?;
+    let mut static_cfg = cfg.clone();
+    static_cfg.replan_deadband = None;
+    let fixed = run_soak(&static_cfg)?;
+    let wall = t0.elapsed().as_secs_f64();
+
+    // contract: both runs are drop-free; only the adaptive one
+    // re-plans, and it wins on tail latency
+    assert_eq!(adaptive.dropped(), 0, "adaptive run dropped requests");
+    assert_eq!(fixed.dropped(), 0, "static run dropped requests");
+    assert!(!adaptive.replans.is_empty(), "no adaptive re-plan fired");
+    assert!(fixed.replans.is_empty(), "static run re-planned");
+    assert!(wall < 60.0, "hetero bench too slow: {wall:.1}s wall");
+
+    let a_p50 = adaptive.eval_latency.p50() * 1e3;
+    let a_p99 = adaptive.eval_latency.p99() * 1e3;
+    let s_p50 = fixed.eval_latency.p50() * 1e3;
+    let s_p99 = fixed.eval_latency.p99() * 1e3;
+    println!("static   : eval p50 {s_p50:.2}ms p99 {s_p99:.2}ms \
+              ({:.2}s virtual)", fixed.virtual_secs);
+    println!("adaptive : eval p50 {a_p50:.2}ms p99 {a_p99:.2}ms \
+              ({:.2}s virtual, {} re-plans)",
+             adaptive.virtual_secs, adaptive.replans.len());
+    println!("p99 win  : {:.2}x", s_p99 / a_p99.max(1e-9));
+    println!("wall     : {wall:.2}s to simulate both runs");
+
+    // machine-readable record for the CI perf-trajectory artifact
+    // (uploaded as BENCH_*.json per PR)
+    let mut obj: BTreeMap<String, Json> = BTreeMap::new();
+    obj.insert("bench".into(), Json::Str("hetero_soak".into()));
+    obj.insert("seed".into(), Json::Num(cfg.seed as f64));
+    obj.insert("requests".into(),
+               Json::Num(adaptive.requests() as f64));
+    obj.insert("static_eval_p50_ms".into(), Json::Num(s_p50));
+    obj.insert("static_eval_p99_ms".into(), Json::Num(s_p99));
+    obj.insert("adaptive_eval_p50_ms".into(), Json::Num(a_p50));
+    obj.insert("adaptive_eval_p99_ms".into(), Json::Num(a_p99));
+    obj.insert("p99_speedup".into(),
+               Json::Num(s_p99 / a_p99.max(1e-9)));
+    obj.insert("replans".into(),
+               Json::Num(adaptive.replans.len() as f64));
+    obj.insert("adaptive_virtual_secs".into(),
+               Json::Num(adaptive.virtual_secs));
+    obj.insert("static_virtual_secs".into(),
+               Json::Num(fixed.virtual_secs));
+    obj.insert("wall_secs".into(), Json::Num(wall));
+    let path = "BENCH_hetero.json";
+    std::fs::write(path, Json::Obj(obj).dump())?;
+    println!("json     : {path}");
+    Ok(())
+}

@@ -88,6 +88,26 @@ impl Args {
         }
     }
 
+    /// Comma-separated number list (`--speeds 1,1,0.25`); the default
+    /// for an absent flag. An empty string parses to an empty list.
+    pub fn f64_list_or(&self, key: &str, default: &[f64])
+                       -> Result<Vec<f64>> {
+        match self.flags.get(key) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .map(|s| s.trim())
+                .filter(|s| !s.is_empty())
+                .map(|s| {
+                    s.parse().map_err(|_| {
+                        anyhow!("--{key} wants comma-separated numbers, \
+                                 got '{v}'")
+                    })
+                })
+                .collect(),
+        }
+    }
+
     pub fn bool(&self, key: &str) -> bool {
         self.flags.get(key).map(|v| v != "false").unwrap_or(false)
     }
@@ -122,6 +142,21 @@ mod tests {
         assert_eq!(a.str_or("nope", "dflt"), "dflt");
         assert!(a.req("missing").is_err());
         assert!(a.usize_or("bandwidth", 1).is_err());
+    }
+
+    #[test]
+    fn f64_list_flags() {
+        let a = parse("serve --speeds 1,1,0.25");
+        assert_eq!(a.f64_list_or("speeds", &[]).unwrap(),
+                   vec![1.0, 1.0, 0.25]);
+        // spaces around commas are tolerated via the equals form
+        let b = parse("serve --speeds=2.0,1.5");
+        assert_eq!(b.f64_list_or("speeds", &[]).unwrap(),
+                   vec![2.0, 1.5]);
+        // absent flag -> the default; hostile input -> error
+        assert_eq!(a.f64_list_or("absent", &[3.0]).unwrap(), vec![3.0]);
+        let bad = parse("serve --speeds fast,1");
+        assert!(bad.f64_list_or("speeds", &[]).is_err());
     }
 
     #[test]

@@ -19,7 +19,9 @@ use std::sync::Arc;
 
 use anyhow::{bail, Result};
 
-use super::plan::{plans, replan_l, single_plan, PartitionPlan};
+use super::plan::{clamp_sizes_min, partition_sizes, plans,
+                  plans_with_sizes, replan_l, single_plan,
+                  weighted_partition_sizes, PartitionPlan};
 use super::runner::{degraded_mode, Mode};
 
 /// Immutable snapshot of one epoch's serving geometry.
@@ -44,6 +46,30 @@ impl EpochPlan {
     /// Live device count P' this epoch serves with.
     pub fn p(&self) -> usize {
         self.devices.len()
+    }
+
+    /// Per-rank partition widths — the `Reconfig.sizes` row workers
+    /// rebuild their geometry from.
+    pub fn sizes(&self) -> Vec<usize> {
+        self.plans
+            .first()
+            .map(|pl| pl.sizes.clone())
+            .unwrap_or_default()
+    }
+
+    /// Whether this epoch's widths differ from the Algorithm-1 equal
+    /// split — i.e. a heterogeneity-aware weighted plan is in effect
+    /// and the broadcast must carry an explicit sizes row.
+    pub fn is_weighted(&self) -> bool {
+        let p = self.plans.len();
+        if p <= 1 {
+            return false;
+        }
+        let n: usize = self.plans[0].sizes.iter().sum();
+        match partition_sizes(n, p) {
+            Ok(eq) => self.plans[0].sizes != eq,
+            Err(_) => true,
+        }
     }
 }
 
@@ -207,6 +233,41 @@ impl ClusterView {
         })
     }
 
+    /// Heterogeneity-aware re-plan: split N proportionally to the
+    /// measured `speeds` (one per live rank, from
+    /// `profile::FleetProfile::speeds`), L-floor clamped so every
+    /// partition still hosts its segment plan, and bump the epoch so
+    /// the weighted geometry propagates like any membership change.
+    ///
+    /// The weighted plan set deliberately *bypasses* the (P', L') cache
+    /// — different speed vectors share the same key — and is never
+    /// inserted into it, so a later `current()` (e.g. after a
+    /// membership change, when stale measurements must not linger)
+    /// falls back to the cached Algorithm-1 equal split.
+    pub fn replan_with_speeds(&mut self, speeds: &[f64])
+                              -> Result<EpochPlan> {
+        let devices = self.live_devices();
+        let p_now = devices.len();
+        if p_now == 0 {
+            bail!("no live devices");
+        }
+        if speeds.len() != p_now {
+            bail!("{} speeds for {p_now} live devices", speeds.len());
+        }
+        let mode = self.mode_for(p_now)?;
+        let plans = if p_now == 1 {
+            // a single survivor has nothing to balance
+            self.plans_for(mode)?
+        } else {
+            let mut sizes = weighted_partition_sizes(self.n, speeds)?;
+            clamp_sizes_min(&mut sizes, mode.l().max(1))?;
+            Arc::new(plans_with_sizes(self.n, sizes, mode.l(),
+                                      self.causal)?)
+        };
+        self.epoch += 1;
+        Ok(EpochPlan { epoch: self.epoch, mode, plans, devices })
+    }
+
     /// The "no distributed grid left" answer: a Single-mode snapshot of
     /// the current epoch with an *empty* device list — the serving
     /// master runs the whole stack itself and every worker is
@@ -364,6 +425,53 @@ mod tests {
             .current_with_mode(Mode::Prism { p: 2, l: 4,
                                              duplicated: true })
             .is_err());
+    }
+
+    #[test]
+    fn weighted_replan_bumps_epoch_and_bypasses_the_cache() {
+        let base = Mode::Prism { p: 4, l: 4, duplicated: true };
+        let mut view = ClusterView::new(base, 32, true).unwrap();
+        let eq = view.current().unwrap();
+        assert!(!eq.is_weighted());
+        assert_eq!(eq.sizes(), vec![8, 8, 8, 8]);
+
+        // a 4x straggler at rank 3: fewer tokens, L-floor respected
+        let w = view.replan_with_speeds(&[1.0, 1.0, 1.0, 0.25]).unwrap();
+        assert_eq!(w.epoch, 1);
+        assert_eq!(w.mode, base);
+        assert!(w.is_weighted());
+        let sizes = w.sizes();
+        assert_eq!(sizes.iter().sum::<usize>(), 32);
+        assert!(sizes.iter().all(|&s| s >= 4), "L-floor broken {sizes:?}");
+        assert!(sizes[3] < sizes[0], "straggler kept equal share");
+        // never cached: the equal-split snapshot is untouched
+        let eq2 = view.current().unwrap();
+        assert_eq!(eq2.sizes(), vec![8, 8, 8, 8]);
+        assert!(Arc::ptr_eq(&eq2.plans, &eq.plans));
+
+        // equal speeds reproduce Algorithm 1 exactly (balanced N)
+        let flat = view.replan_with_speeds(&[1.0; 4]).unwrap();
+        assert_eq!(flat.sizes(), vec![8, 8, 8, 8]);
+        assert!(!flat.is_weighted());
+        assert_eq!(flat.epoch, 2);
+
+        // wrong arity / hostile speeds fail closed, no epoch bump
+        assert!(view.replan_with_speeds(&[1.0, 1.0]).is_err());
+        assert!(view.replan_with_speeds(&[1.0, 1.0, 0.0, 1.0]).is_err());
+        assert_eq!(view.epoch(), 2);
+
+        // after a loss the weighted re-plan covers the shrunken P'
+        view.fail_device(1).unwrap();
+        let w3 = view.replan_with_speeds(&[1.0, 1.0, 0.5]).unwrap();
+        assert_eq!(w3.devices, vec![0, 2, 3]);
+        assert_eq!(w3.sizes().iter().sum::<usize>(), 32);
+        assert_eq!(w3.plans.len(), 3);
+        // a lone survivor has nothing to balance
+        view.fail_device(0).unwrap();
+        view.fail_device(3).unwrap();
+        let lone = view.replan_with_speeds(&[1.0]).unwrap();
+        assert_eq!(lone.mode, Mode::Single);
+        assert!(!lone.is_weighted());
     }
 
     #[test]

@@ -11,5 +11,6 @@ pub mod segmeans;
 pub use cluster::{ClusterView, EpochPlan};
 pub use compressor::Compressor;
 pub use remote::RemoteCoordinator;
-pub use plan::{plans, single_plan, PartitionPlan};
+pub use plan::{clamp_sizes_min, plans, plans_with_sizes, single_plan,
+               weighted_partition_sizes, PartitionPlan};
 pub use runner::{bias_for, degraded_mode, Mode, RunTrace, Runner};

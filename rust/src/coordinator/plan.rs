@@ -77,6 +77,37 @@ pub fn weighted_partition_sizes(n: usize, speeds: &[f64])
     Ok(sizes)
 }
 
+/// Raise every partition to at least `min` tokens — the L-floor:
+/// Algorithm 2 (`segment_counts`) needs `n_p >= L` — shaving the
+/// overshoot one token at a time from the current largest partition so
+/// the total is preserved and fast devices keep their lead.
+pub fn clamp_sizes_min(sizes: &mut [usize], min: usize) -> Result<()> {
+    let p = sizes.len();
+    if min == 0 || p == 0 {
+        return Ok(());
+    }
+    let n: usize = sizes.iter().sum();
+    if p * min > n {
+        bail!("cannot fit {p} partitions of >= {min} tokens into N={n}");
+    }
+    let mut debt: usize = 0;
+    for s in sizes.iter_mut() {
+        if *s < min {
+            debt += min - *s;
+            *s = min;
+        }
+    }
+    while debt > 0 {
+        let i = (0..p).max_by_key(|&i| sizes[i]).unwrap();
+        if sizes[i] <= min {
+            bail!("L-floor clamp stuck: sizes={sizes:?} min={min}");
+        }
+        sizes[i] -= 1;
+        debt -= 1;
+    }
+    Ok(())
+}
+
 /// Eq. 16: L = floor(N / (CR * P)), clamped to >= 1.
 pub fn landmarks_for_cr(n: usize, p: usize, cr: f64) -> usize {
     ((n as f64 / (cr * p as f64)) as usize).max(1)
@@ -235,6 +266,26 @@ pub fn plans(n: usize, p: usize, l: usize, causal: bool)
         .collect())
 }
 
+/// One plan per device from *explicit* partition widths — the
+/// heterogeneity-aware counterpart of [`plans`], fed by
+/// [`weighted_partition_sizes`] + [`clamp_sizes_min`] (or by a
+/// `Reconfig.sizes` row received off the wire, hence the fail-closed
+/// validation here rather than trusting the caller).
+pub fn plans_with_sizes(n: usize, sizes: Vec<usize>, l: usize,
+                        causal: bool) -> Result<Vec<PartitionPlan>> {
+    let p = sizes.len();
+    if p == 0 || sizes.iter().sum::<usize>() != n {
+        bail!("sizes {sizes:?} do not cover N={n}");
+    }
+    let floor = l.max(1);
+    if sizes.iter().any(|&s| s < floor) {
+        bail!("partition narrower than L={l}: sizes={sizes:?}");
+    }
+    Ok((0..p)
+        .map(|i| PartitionPlan::new(i, n, sizes.clone(), l, causal))
+        .collect())
+}
+
 /// P=1 degenerate plan.
 pub fn single_plan(n: usize, causal: bool) -> PartitionPlan {
     PartitionPlan::new(0, n, vec![n], 0, causal)
@@ -327,6 +378,67 @@ mod tests {
         let a = weighted_partition_sizes(97, &[1.0, 2.0, 3.0]).unwrap();
         let b = weighted_partition_sizes(97, &[10.0, 20.0, 30.0]).unwrap();
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn clamp_raises_undersized_partitions_and_preserves_sum() {
+        let mut s = vec![10, 10, 10, 2];
+        clamp_sizes_min(&mut s, 4).unwrap();
+        assert_eq!(s.iter().sum::<usize>(), 32);
+        assert!(s.iter().all(|&x| x >= 4));
+        // shaved one token at a time from the (then-)largest
+        assert_eq!(s, vec![10, 9, 9, 4]);
+        // already-satisfied sizes are untouched
+        let mut s = vec![8, 8, 8];
+        clamp_sizes_min(&mut s, 4).unwrap();
+        assert_eq!(s, vec![8, 8, 8]);
+        // min == 0 is the Voltage baseline: no-op
+        let mut s = vec![3, 1];
+        clamp_sizes_min(&mut s, 0).unwrap();
+        assert_eq!(s, vec![3, 1]);
+        // impossible floor is an error, not a panic
+        let mut s = vec![2, 2];
+        assert!(clamp_sizes_min(&mut s, 3).is_err());
+        property("clamp-sizes-min", 150, |rng: &mut Rng| {
+            let p = rng.range(2, 6);
+            let min = rng.range(1, 6);
+            let n = rng.range(p * min, p * min + 200);
+            let speeds: Vec<f64> =
+                (0..p).map(|_| 0.1 + rng.f64() * 4.0).collect();
+            let mut sizes = weighted_partition_sizes(n, &speeds).unwrap();
+            clamp_sizes_min(&mut sizes, min).unwrap();
+            assert_eq!(sizes.iter().sum::<usize>(), n);
+            assert!(sizes.iter().all(|&s| s >= min), "{sizes:?} < {min}");
+        });
+    }
+
+    #[test]
+    fn plans_with_sizes_builds_valid_weighted_geometry() {
+        let pls = plans_with_sizes(32, vec![10, 10, 8, 4], 4, true)
+            .unwrap();
+        let mut covered = 0usize;
+        for (i, pl) in pls.iter().enumerate() {
+            assert_eq!(pl.start(), covered, "partition {i} gap/overlap");
+            covered += pl.n_p();
+            assert!(pl.n_p() >= 4);
+            let g = pl.g().unwrap();
+            assert_eq!(g.len(), pl.n_hat());
+            assert_eq!(g.iter().sum::<f32>() as usize, 32);
+        }
+        assert_eq!(covered, 32);
+        // fail closed on hostile rows: wrong sum, too-narrow partition
+        assert!(plans_with_sizes(32, vec![10, 10, 8, 5], 4, true)
+            .is_err());
+        assert!(plans_with_sizes(32, vec![20, 9, 2, 1], 4, true)
+            .is_err());
+        assert!(plans_with_sizes(32, vec![], 4, true).is_err());
+        // a weighted plan's bias agrees with the same-sizes bias_row
+        let pl = &plans_with_sizes(32, vec![10, 10, 8, 4], 4, true)
+            .unwrap()[3];
+        let full = pl.bias().unwrap();
+        let f = full.f32s().unwrap();
+        let row = pl.bias_row(pl.start()).unwrap();
+        assert_eq!(&f[..pl.n_hat()], &row[..]);
     }
 
     #[test]

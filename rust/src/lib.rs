@@ -25,6 +25,7 @@ pub mod eval;
 pub mod metrics;
 pub mod model;
 pub mod net;
+pub mod profile;
 pub mod runtime;
 pub mod server;
 pub mod sim;

@@ -188,6 +188,17 @@ impl<T: Transport> Transport for FaultNet<T> {
         }
         Ok(env)
     }
+
+    // the decorator injects faults, not a clock of its own: timing and
+    // modeled-compute charging pass straight through to the inner
+    // transport (wall or virtual)
+    fn now(&self) -> Duration {
+        self.inner.now()
+    }
+
+    fn advance(&mut self, d: Duration) {
+        self.inner.advance(d);
+    }
 }
 
 #[cfg(test)]
@@ -205,7 +216,7 @@ mod tests {
     }
 
     fn hb(seq: u64) -> Msg {
-        Msg::Heartbeat { from: 0, seq }
+        Msg::Heartbeat { from: 0, seq, profile: None }
     }
 
     fn d(ms: u64) -> Duration {

@@ -285,14 +285,15 @@ mod tests {
         // the master's very next send lands on the replacement...
         Transport::send(&mut master, 0, Msg::Shutdown).unwrap();
         // ...and so does a surviving worker's, with no re-wiring
-        w1.send(0, Msg::Heartbeat { from: 1, seq: 7 }).unwrap();
+        w1.send(0, Msg::Heartbeat { from: 1, seq: 7, profile: None })
+            .unwrap();
         let a = respawned.recv().unwrap();
         let b = respawned.recv().unwrap();
         assert!(matches!(a.msg, Msg::Shutdown));
         assert!(matches!(b.msg, Msg::Heartbeat { seq: 7, .. }));
         // the respawned endpoint can answer
         respawned
-            .send(2, Msg::Heartbeat { from: 0, seq: 1 })
+            .send(2, Msg::Heartbeat { from: 0, seq: 1, profile: None })
             .unwrap();
         assert_eq!(master.recv().unwrap().from, 0);
         assert!(handle.respawn(9).is_err());

@@ -116,7 +116,9 @@ impl MeshEdge {
                    backoff: Duration) -> Result<MeshEdge> {
         let mut edge = Self::dial(addr, id, peer, io_timeout, attempts,
                                   backoff)?;
-        edge.send(peer, Msg::Heartbeat { from: id as u32, seq: 0 })
+        edge.send(peer,
+                  Msg::Heartbeat { from: id as u32, seq: 0,
+                                   profile: None })
             .map_err(|e| anyhow!("mesh hello to {addr}: {e}"))?;
         Ok(edge)
     }
@@ -149,7 +151,7 @@ impl MeshEdge {
         let env = edge
             .recv_deadline(HELLO_TIMEOUT)
             .map_err(|e| anyhow!("awaiting mesh hello: {e}"))?;
-        let Msg::Heartbeat { from, seq: 0 } = env.msg else {
+        let Msg::Heartbeat { from, seq: 0, .. } = env.msg else {
             bail!("mesh hello expected, got {:?}", env.msg);
         };
         edge.peer = from as usize;
@@ -506,7 +508,7 @@ mod tests {
     use crate::runtime::Tensor;
 
     fn hb(from: u32, seq: u64) -> Msg {
-        Msg::Heartbeat { from, seq }
+        Msg::Heartbeat { from, seq, profile: None }
     }
 
     fn ms(v: u64) -> Duration {
@@ -547,7 +549,7 @@ mod tests {
         for m in meshes.iter_mut() {
             let mut got = 0;
             while let Ok(env) = m.recv_deadline(ms(20)) {
-                let Msg::Heartbeat { from, seq } = env.msg else {
+                let Msg::Heartbeat { from, seq, .. } = env.msg else {
                     panic!("unexpected msg");
                 };
                 assert_eq!(env.from as u32, from);
@@ -735,7 +737,7 @@ mod tests {
         let mut done = [false; 3];
         while done.iter().any(|d| !d) {
             let env = master.recv_deadline(ms(5000)).unwrap();
-            if let Msg::Heartbeat { from, seq: 99 } = env.msg {
+            if let Msg::Heartbeat { from, seq: 99, .. } = env.msg {
                 done[from as usize] = true;
             }
         }

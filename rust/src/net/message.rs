@@ -3,6 +3,7 @@
 
 use anyhow::{bail, Context, Result};
 
+use crate::profile::ProfileSample;
 use crate::runtime::{Tensor, TensorData};
 use crate::util::quant::{self, WireFmt};
 
@@ -31,8 +32,18 @@ pub enum Msg {
     /// re-planned strategy over the live device set. `mode`/`p`/`l` are
     /// the `Mode::to_wire` encoding; `live` lists the surviving physical
     /// device ids in rank order, so a worker finds its new rank (and its
-    /// new partition/executable) by position.
-    Reconfig { epoch: u32, mode: u8, p: u32, l: u32, live: Vec<u32> },
+    /// new partition/executable) by position. `sizes` is empty for the
+    /// Algorithm-1 equal split; a non-empty vector (one row count per
+    /// rank, summing to N) carries a heterogeneity-aware weighted split
+    /// from the master's `FleetProfile` re-plan.
+    Reconfig {
+        epoch: u32,
+        mode: u8,
+        p: u32,
+        l: u32,
+        live: Vec<u32>,
+        sizes: Vec<u32>,
+    },
     /// Incremental Segment-Means update (decode subsystem): after the
     /// frontier device appends one token at one layer, exactly one
     /// segment mean changes; only that row crosses the wire, quantized
@@ -54,8 +65,10 @@ pub enum Msg {
     /// Liveness beacon for peer-loss detection (`transport::PeerHealth`).
     /// `seq` increments per beat so duplicates/reorders are visible.
     /// Doubles as the mesh hello (`seq` 0) and bring-up ACK (`seq` 1)
-    /// in the worker-to-worker TCP mesh (`net::mesh`).
-    Heartbeat { from: u32, seq: u64 },
+    /// in the worker-to-worker TCP mesh (`net::mesh`); profile-bearing
+    /// beats (`profile::DeviceProfile` snapshots feeding the master's
+    /// `FleetProfile`) use `seq >= 2`.
+    Heartbeat { from: u32, seq: u64, profile: Option<ProfileSample> },
     /// Master -> worker mesh bootstrap (control plane): the recipient's
     /// physical device id, the peer table (device id, listen addr) it
     /// dials/accepts to form the worker-to-worker mesh, and the serving
@@ -96,7 +109,11 @@ impl Msg {
             Msg::Reconfig { .. } => 0,
             Msg::SegDelta { payload, .. } => payload.len(),
             Msg::CacheSync { k, v, .. } => k.byte_len() + v.byte_len(),
-            Msg::Heartbeat { .. } => 0,
+            // a bare beat is free; a profile-bearing one pays for its
+            // payload so NetStats-based overhead assertions stay honest
+            Msg::Heartbeat { profile, .. } => {
+                profile.as_ref().map_or(0, |s| s.wire_bytes())
+            }
             Msg::MeshInfo { .. } => 0,
         }
     }
@@ -279,7 +296,7 @@ impl Msg {
                 }
             }
             Msg::Shutdown => out.push(3),
-            Msg::Reconfig { epoch, mode, p, l, live } => {
+            Msg::Reconfig { epoch, mode, p, l, live, sizes } => {
                 out.push(7);
                 put_u32(&mut out, *epoch);
                 out.push(*mode);
@@ -288,6 +305,10 @@ impl Msg {
                 put_u32(&mut out, live.len() as u32);
                 for d in live {
                     put_u32(&mut out, *d);
+                }
+                put_u32(&mut out, sizes.len() as u32);
+                for s in sizes {
+                    put_u32(&mut out, *s);
                 }
             }
             Msg::SegDelta { layer, from, segment, filled, fmt, d,
@@ -310,10 +331,23 @@ impl Msg {
                 encode_tensor(&mut out, k);
                 encode_tensor(&mut out, v);
             }
-            Msg::Heartbeat { from, seq } => {
+            Msg::Heartbeat { from, seq, profile } => {
                 out.push(6);
                 put_u32(&mut out, *from);
                 put_u64(&mut out, *seq);
+                match profile {
+                    None => out.push(0),
+                    Some(s) => {
+                        out.push(1);
+                        put_u64(&mut out, s.unit_secs.to_bits());
+                        put_u64(&mut out, s.blocks);
+                        put_u32(&mut out, s.edges.len() as u32);
+                        for (peer, bw) in &s.edges {
+                            put_u32(&mut out, *peer);
+                            put_u64(&mut out, bw.to_bits());
+                        }
+                    }
+                }
             }
             Msg::MeshInfo { epoch, device, p, peers, model, weights,
                             flavor, mode, mode_p, mode_l } => {
@@ -388,7 +422,16 @@ impl Msg {
                 for _ in 0..n {
                     live.push(c.u32()?);
                 }
-                Msg::Reconfig { epoch, mode, p, l, live }
+                let ns = c.u32()? as usize;
+                if ns > c.remaining() / 4 {
+                    bail!("Reconfig declares {ns} sizes, {} bytes left",
+                          c.remaining());
+                }
+                let mut sizes = Vec::with_capacity(ns);
+                for _ in 0..ns {
+                    sizes.push(c.u32()?);
+                }
+                Msg::Reconfig { epoch, mode, p, l, live, sizes }
             }
             4 => {
                 let layer = c.u32()?;
@@ -409,7 +452,42 @@ impl Msg {
                 k: decode_tensor(&mut c)?,
                 v: decode_tensor(&mut c)?,
             },
-            6 => Msg::Heartbeat { from: c.u32()?, seq: c.u64()? },
+            6 => {
+                let from = c.u32()?;
+                let seq = c.u64()?;
+                let profile = match c.u8()? {
+                    0 => None,
+                    1 => {
+                        // profile fields must be sane numbers: a beat
+                        // must never smuggle NaN/negative speeds into
+                        // the planner
+                        let finite = |bits: u64| -> Result<f64> {
+                            let v = f64::from_bits(bits);
+                            if !v.is_finite() || v < 0.0 {
+                                bail!("non-finite profile value");
+                            }
+                            Ok(v)
+                        };
+                        let unit_secs = finite(c.u64()?)?;
+                        let blocks = c.u64()?;
+                        let n = c.u32()? as usize;
+                        // each edge entry costs 12 bytes: hostile counts
+                        // fail closed before any allocation
+                        if n > c.remaining() / 12 {
+                            bail!("Heartbeat declares {n} edges, {} \
+                                   bytes left", c.remaining());
+                        }
+                        let mut edges = Vec::with_capacity(n);
+                        for _ in 0..n {
+                            let peer = c.u32()?;
+                            edges.push((peer, finite(c.u64()?)?));
+                        }
+                        Some(ProfileSample { unit_secs, blocks, edges })
+                    }
+                    other => bail!("bad heartbeat profile flag {other}"),
+                };
+                Msg::Heartbeat { from, seq, profile }
+            }
             8 => {
                 let epoch = c.u32()?;
                 let device = c.u32()?;
@@ -490,8 +568,23 @@ mod tests {
             },
             Msg::Shutdown,
             Msg::Reconfig { epoch: 4, mode: 2, p: 3, l: 5,
-                            live: vec![0, 1, 3] },
-            Msg::Reconfig { epoch: 1, mode: 1, p: 2, l: 0, live: vec![] },
+                            live: vec![0, 1, 3], sizes: vec![] },
+            Msg::Reconfig { epoch: 1, mode: 1, p: 2, l: 0, live: vec![],
+                            sizes: vec![] },
+            // heterogeneity-aware weighted split rides the same frame
+            Msg::Reconfig { epoch: 9, mode: 2, p: 3, l: 4,
+                            live: vec![0, 2, 3],
+                            sizes: vec![14, 10, 8] },
+            Msg::Heartbeat { from: 1, seq: 0, profile: None },
+            Msg::Heartbeat {
+                from: 2,
+                seq: 5,
+                profile: Some(ProfileSample {
+                    unit_secs: 1.25e-4,
+                    blocks: 17,
+                    edges: vec![(0, 1.0e6), (3, 2.5e5)],
+                }),
+            },
             Msg::MeshInfo {
                 epoch: 0,
                 device: 1,
@@ -588,10 +681,19 @@ mod tests {
         let j = Msg::Job { epoch: 0, request: 1, x_p: t(vec![2]),
                            ctx: vec![t(vec![3])] };
         assert_eq!(j.wire_bytes(), 20);
-        assert_eq!(Msg::Heartbeat { from: 2, seq: 9 }.wire_bytes(), 0);
+        assert_eq!(Msg::Heartbeat { from: 2, seq: 9, profile: None }
+                       .wire_bytes(),
+                   0);
+        // a profile-bearing beat pays for its payload
+        let s = ProfileSample { unit_secs: 0.01, blocks: 3,
+                                edges: vec![(1, 10.0)] };
+        assert_eq!(Msg::Heartbeat { from: 2, seq: 9,
+                                    profile: Some(s.clone()) }
+                       .wire_bytes(),
+                   s.wire_bytes());
         // control-plane frames carry no tensor payload
         assert_eq!(Msg::Reconfig { epoch: 1, mode: 2, p: 2, l: 4,
-                                   live: vec![0, 1] }
+                                   live: vec![0, 1], sizes: vec![] }
                        .wire_bytes(),
                    0);
         assert_eq!(Msg::MeshInfo {
@@ -611,8 +713,76 @@ mod tests {
 
     #[test]
     fn heartbeat_roundtrip() {
-        let m = Msg::Heartbeat { from: 3, seq: u64::MAX };
+        let m = Msg::Heartbeat { from: 3, seq: u64::MAX, profile: None };
         assert_eq!(Msg::decode(&m.encode()).unwrap(), m);
+        let m = Msg::Heartbeat {
+            from: 3,
+            seq: 2,
+            profile: Some(ProfileSample {
+                unit_secs: 0.0,
+                blocks: 0,
+                edges: vec![],
+            }),
+        };
+        assert_eq!(Msg::decode(&m.encode()).unwrap(), m);
+    }
+
+    /// Hostile profile payloads on the heartbeat frame fail closed:
+    /// bad flags, 4-billion edge counts, and non-finite floats must
+    /// error without panicking or allocating.
+    #[test]
+    fn hostile_heartbeat_profiles_fail_closed() {
+        let mut head = vec![6u8];
+        head.extend_from_slice(&1u32.to_le_bytes()); // from
+        head.extend_from_slice(&2u64.to_le_bytes()); // seq
+        // unknown profile flag
+        let mut buf = head.clone();
+        buf.push(9);
+        assert!(Msg::decode(&buf).is_err());
+        // flag byte missing entirely (pre-profile frames are rejected,
+        // not misread: the codec is not wire-compatible across this
+        // change, matching every prior frame-layout evolution)
+        assert!(Msg::decode(&head).is_err());
+        // NaN unit_secs
+        let mut buf = head.clone();
+        buf.push(1);
+        buf.extend_from_slice(&f64::NAN.to_bits().to_le_bytes());
+        buf.extend_from_slice(&1u64.to_le_bytes()); // blocks
+        buf.extend_from_slice(&0u32.to_le_bytes()); // edges
+        assert!(Msg::decode(&buf).is_err());
+        // negative bandwidth on an edge
+        let mut buf = head.clone();
+        buf.push(1);
+        buf.extend_from_slice(&0.01f64.to_bits().to_le_bytes());
+        buf.extend_from_slice(&1u64.to_le_bytes());
+        buf.extend_from_slice(&1u32.to_le_bytes());
+        buf.extend_from_slice(&0u32.to_le_bytes()); // peer
+        buf.extend_from_slice(&(-4.0f64).to_bits().to_le_bytes());
+        assert!(Msg::decode(&buf).is_err());
+        // 4-billion edge count with no bytes behind it
+        let mut buf = head.clone();
+        buf.push(1);
+        buf.extend_from_slice(&0.01f64.to_bits().to_le_bytes());
+        buf.extend_from_slice(&1u64.to_le_bytes());
+        buf.extend_from_slice(&u32::MAX.to_le_bytes());
+        assert!(Msg::decode(&buf).is_err());
+    }
+
+    /// Hostile `sizes` tables on the Reconfig frame fail closed.
+    #[test]
+    fn hostile_reconfig_sizes_fail_closed() {
+        let good = Msg::Reconfig { epoch: 2, mode: 2, p: 2, l: 4,
+                                   live: vec![0, 1],
+                                   sizes: vec![20, 12] };
+        let buf = good.encode();
+        assert_eq!(Msg::decode(&buf).unwrap(), good);
+        for cut in 0..buf.len() {
+            assert!(Msg::decode(&buf[..cut]).is_err(), "prefix {cut}");
+        }
+        // sizes count claims 4 billion entries, zero bytes left
+        let mut bad = buf[..buf.len() - 12].to_vec();
+        bad.extend_from_slice(&u32::MAX.to_le_bytes());
+        assert!(Msg::decode(&bad).is_err());
     }
 }
 
@@ -677,6 +847,9 @@ mod property_tests {
                 live: (0..rng.below(6))
                     .map(|_| rng.next_u64() as u32)
                     .collect(),
+                sizes: (0..rng.below(6))
+                    .map(|_| rng.next_u64() as u32)
+                    .collect(),
             },
             4 => {
                 let fmt = match rng.below(3) {
@@ -722,7 +895,24 @@ mod property_tests {
             _ => Msg::Heartbeat {
                 from: rng.next_u64() as u32,
                 seq: rng.next_u64(),
+                profile: if rng.chance(0.5) {
+                    Some(rand_profile(rng))
+                } else {
+                    None
+                },
             },
+        }
+    }
+
+    /// Random valid profile payload: finite non-negative floats only
+    /// (the codec rejects anything else by design).
+    fn rand_profile(rng: &mut Rng) -> ProfileSample {
+        ProfileSample {
+            unit_secs: rng.f64() * 0.1,
+            blocks: rng.below(1000) as u64,
+            edges: (0..rng.below(5))
+                .map(|_| (rng.next_u64() as u32, rng.f64() * 1e7))
+                .collect(),
         }
     }
 

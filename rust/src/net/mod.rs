@@ -24,5 +24,5 @@ pub use model::LinkModel;
 pub use sim::SimClock;
 pub use simnet::{MtEndpoint, SimEndpoint, SimNet, SimNetMt};
 pub use stats::NetStats;
-pub use transport::{Envelope, PeerHealth, RejoinBackoff, Transport,
-                    TransportError};
+pub use transport::{wall_now, Envelope, PeerHealth, RejoinBackoff,
+                    Transport, TransportError};

@@ -170,6 +170,17 @@ impl Transport for SimEndpoint {
             }
         }
     }
+
+    fn now(&self) -> Duration {
+        SimEndpoint::now(self)
+    }
+
+    fn advance(&mut self, d: Duration) {
+        // modeled compute charges the shared virtual clock directly
+        // (single-threaded mesh: no other participant is running)
+        let mut inner = self.inner.borrow_mut();
+        inner.now += d.as_secs_f64();
+    }
 }
 
 // ---------------- conductor-scheduled multi-thread variant --------------
@@ -453,6 +464,19 @@ impl Transport for MtEndpoint {
             st.woken[self.id] = false;
         }
     }
+
+    fn now(&self) -> Duration {
+        Duration::from_secs_f64(self.now_secs())
+    }
+
+    /// Charge modeled compute by parking until `now + d`: the conductor
+    /// keeps every other participant runnable meanwhile, so compute on
+    /// different devices overlaps in virtual time exactly like real
+    /// parallel hardware.
+    fn advance(&mut self, d: Duration) {
+        let until = self.now_secs() + d.as_secs_f64();
+        self.sleep_until(until);
+    }
 }
 
 #[cfg(test)]
@@ -509,7 +533,8 @@ mod tests {
         let mut a = net.endpoint(0);
         let mut c = net.endpoint(2);
         a.send(2, Msg::Shutdown).unwrap(); // 0 bytes: arrives at now
-        a.send(2, Msg::Heartbeat { from: 0, seq: 1 }).unwrap();
+        a.send(2, Msg::Heartbeat { from: 0, seq: 1, profile: None })
+            .unwrap();
         let first = c.recv_deadline(Duration::from_secs(1)).unwrap();
         let second = c.recv_deadline(Duration::from_secs(1)).unwrap();
         assert!(matches!(first.msg, Msg::Shutdown));
@@ -560,7 +585,11 @@ mod tests {
                     Ok(env) => match env.msg {
                         Msg::Heartbeat { seq, .. } => {
                             worker
-                                .send(1, Msg::Heartbeat { from: 0, seq })
+                                .send(1, Msg::Heartbeat {
+                                    from: 0,
+                                    seq,
+                                    profile: None,
+                                })
                                 .unwrap();
                         }
                         _ => return,
@@ -571,7 +600,9 @@ mod tests {
         });
         let mut seqs = Vec::new();
         for seq in 0..5u64 {
-            master.send(0, Msg::Heartbeat { from: 1, seq }).unwrap();
+            master
+                .send(0, Msg::Heartbeat { from: 1, seq, profile: None })
+                .unwrap();
             let env =
                 master.recv_deadline(Duration::from_secs(10)).unwrap();
             if let Msg::Heartbeat { seq, .. } = env.msg {

@@ -4,20 +4,29 @@
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
 
-/// Thread-safe byte/message counters, one slot per device.
+/// Thread-safe byte/message counters, one slot per device, plus a
+/// per-directed-edge byte matrix (flat `devices x devices`) so the
+/// online profiler and overhead assertions can reason about individual
+/// links, not just device totals.
 #[derive(Debug)]
 pub struct NetStats {
+    devices: usize,
     sent_bytes: Vec<AtomicUsize>,
     recv_bytes: Vec<AtomicUsize>,
     messages: Vec<AtomicUsize>,
+    edge_bytes: Vec<AtomicUsize>,
 }
 
 impl NetStats {
     pub fn new(devices: usize) -> Arc<NetStats> {
         Arc::new(NetStats {
+            devices,
             sent_bytes: (0..devices).map(|_| AtomicUsize::new(0)).collect(),
             recv_bytes: (0..devices).map(|_| AtomicUsize::new(0)).collect(),
             messages: (0..devices).map(|_| AtomicUsize::new(0)).collect(),
+            edge_bytes: (0..devices * devices)
+                .map(|_| AtomicUsize::new(0))
+                .collect(),
         })
     }
 
@@ -25,6 +34,13 @@ impl NetStats {
         self.sent_bytes[from].fetch_add(bytes, Ordering::Relaxed);
         self.recv_bytes[to].fetch_add(bytes, Ordering::Relaxed);
         self.messages[from].fetch_add(1, Ordering::Relaxed);
+        self.edge_bytes[from * self.devices + to]
+            .fetch_add(bytes, Ordering::Relaxed);
+    }
+
+    /// Bytes sent on the directed edge `from -> to`.
+    pub fn sent_between(&self, from: usize, to: usize) -> usize {
+        self.edge_bytes[from * self.devices + to].load(Ordering::Relaxed)
     }
 
     pub fn sent(&self, device: usize) -> usize {
@@ -57,6 +73,7 @@ impl NetStats {
         for a in self.sent_bytes.iter()
             .chain(self.recv_bytes.iter())
             .chain(self.messages.iter())
+            .chain(self.edge_bytes.iter())
         {
             a.store(0, Ordering::Relaxed);
         }
@@ -79,7 +96,13 @@ mod tests {
         assert_eq!(s.messages_from(0), 2);
         assert_eq!(s.total_bytes(), 207);
         assert_eq!(s.max_device_sent(), 200);
+        // directed-edge resolution
+        assert_eq!(s.sent_between(0, 1), 100);
+        assert_eq!(s.sent_between(0, 2), 100);
+        assert_eq!(s.sent_between(1, 0), 7);
+        assert_eq!(s.sent_between(2, 0), 0);
         s.reset();
         assert_eq!(s.total_bytes(), 0);
+        assert_eq!(s.sent_between(0, 1), 0);
     }
 }

@@ -538,7 +538,8 @@ mod tests {
                 let Msg::Exchange { layer, .. } = env.msg else {
                     panic!("wanted Exchange, got {:?}", env.msg)
                 };
-                ch.send(0, Msg::Heartbeat { from: 1, seq: layer as u64 })
+                ch.send(0, Msg::Heartbeat { from: 1, seq: layer as u64,
+                                            profile: None })
                     .unwrap();
             }
         });
@@ -554,7 +555,8 @@ mod tests {
                                    data: t(3) })
             .unwrap();
         let env = ch.recv_deadline(Duration::from_secs(5)).unwrap();
-        assert_eq!(env.msg, Msg::Heartbeat { from: 1, seq: 42 });
+        assert_eq!(env.msg,
+                   Msg::Heartbeat { from: 1, seq: 42, profile: None });
         // nothing more queued: deadline surfaces as Timeout
         assert!(matches!(ch.recv_deadline(Duration::from_millis(80)),
                          Err(TransportError::Timeout { .. })));

@@ -97,6 +97,32 @@ pub trait Transport {
         }
         Ok(())
     }
+
+    /// Monotonic "now" on this transport's own clock: wall time
+    /// (against a process-global epoch) for the real transports,
+    /// virtual time for the simulated ones. The online profiler times
+    /// block execution and sends against this clock, so the same
+    /// profiling code is wall-accurate in production and deterministic
+    /// under the conductor.
+    fn now(&self) -> Duration {
+        wall_now()
+    }
+
+    /// Charge `d` of modeled compute to the local clock. Real
+    /// transports no-op (wall time passes on its own); virtual-clock
+    /// transports park the participant until `now + d`, which is how
+    /// the soak sim charges modeled per-layer compute time.
+    fn advance(&mut self, _d: Duration) {}
+}
+
+/// Wall clock as a `Duration` since the first call in this process —
+/// the default [`Transport::now`] for transports without their own
+/// notion of time.
+pub fn wall_now() -> Duration {
+    use std::sync::OnceLock;
+    use std::time::Instant;
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    EPOCH.get_or_init(Instant::now).elapsed()
 }
 
 /// Per-peer re-dial backoff on an *injected* clock: the mesh master's

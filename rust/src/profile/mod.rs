@@ -1,0 +1,416 @@
+//! Online device + link profiler feeding heterogeneity-aware adaptive
+//! re-partitioning.
+//!
+//! PRISM's Algorithm-1 split assumes symmetric devices; real edge
+//! fleets are heterogeneous and drift at runtime (thermal throttling,
+//! contention, link degradation). This module closes the loop the
+//! partitioner left open:
+//!
+//! * [`DeviceProfile`] — worker-side: an EWMA of per-block compute
+//!   time, *normalised to seconds per element of work* so the estimate
+//!   is invariant under re-partitioning (a device handed half the rows
+//!   halves its block time without getting "faster"), plus per-edge
+//!   observed send bandwidth from timed `Transport` sends.
+//! * [`ProfileSample`] — the compact snapshot piggybacked on
+//!   `Msg::Heartbeat` frames (hostile-input-hardened in the codec like
+//!   every other variant).
+//! * [`FleetProfile`] — master-side aggregation with a deadband /
+//!   hysteresis re-plan trigger: re-plan only when the measured speed
+//!   vector drifts beyond `deadband` *relative to the last speeds a
+//!   re-plan actually applied* — so a stationary fleet never ping-pongs
+//!   between two roundings of the same split, while a throttle event
+//!   fires exactly one epoch bump.
+//!
+//! The module is deliberately transport- and codec-free (plain data +
+//! arithmetic) so `net::message` can depend on it without a cycle.
+
+use std::collections::BTreeMap;
+
+/// Blocks a device must have reported before its speed estimate is
+/// trusted for re-planning (EWMA warm-up).
+pub const MIN_BLOCKS: u64 = 2;
+
+/// One profiler snapshot, piggybacked on a heartbeat frame.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ProfileSample {
+    /// EWMA of compute seconds per element of block work.
+    pub unit_secs: f64,
+    /// Block executions folded into the EWMA so far.
+    pub blocks: u64,
+    /// Per-peer observed send bandwidth (peer id, bytes/sec EWMA).
+    pub edges: Vec<(u32, f64)>,
+}
+
+impl ProfileSample {
+    /// Encoded payload size (codec contract: flag byte + fields +
+    /// count + 12 bytes per edge; see `net::message`).
+    pub fn wire_bytes(&self) -> usize {
+        8 + 8 + 4 + 12 * self.edges.len()
+    }
+}
+
+/// Worker-side online profiler: EWMA of normalised block compute time
+/// plus per-edge send bandwidth.
+#[derive(Debug, Clone)]
+pub struct DeviceProfile {
+    alpha: f64,
+    unit_secs: Option<f64>,
+    blocks: u64,
+    edges: BTreeMap<u32, f64>,
+}
+
+impl DeviceProfile {
+    /// `alpha` is the EWMA weight of the newest observation
+    /// (0 < alpha <= 1; higher reacts faster, lower smooths more).
+    pub fn new(alpha: f64) -> DeviceProfile {
+        assert!(alpha > 0.0 && alpha <= 1.0, "bad EWMA alpha {alpha}");
+        DeviceProfile {
+            alpha,
+            unit_secs: None,
+            blocks: 0,
+            edges: BTreeMap::new(),
+        }
+    }
+
+    /// Fold one block execution: `secs` of compute over `units`
+    /// elements of work. Non-positive or non-finite observations are
+    /// discarded (a virtual-clock transport with modeled costs off
+    /// reports zero elapsed time — there is nothing to learn from it).
+    pub fn record_block(&mut self, secs: f64, units: f64) {
+        if !(secs.is_finite() && units.is_finite())
+            || secs <= 0.0
+            || units <= 0.0
+        {
+            return;
+        }
+        let per_unit = secs / units;
+        self.unit_secs = Some(match self.unit_secs {
+            None => per_unit,
+            Some(prev) => prev + self.alpha * (per_unit - prev),
+        });
+        self.blocks += 1;
+    }
+
+    /// Fold one timed send of `bytes` to `peer` taking `secs`.
+    pub fn record_edge(&mut self, peer: u32, bytes: usize, secs: f64) {
+        if !secs.is_finite() || secs <= 0.0 || bytes == 0 {
+            return;
+        }
+        let bw = bytes as f64 / secs;
+        let alpha = self.alpha;
+        self.edges
+            .entry(peer)
+            .and_modify(|prev| *prev += alpha * (bw - *prev))
+            .or_insert(bw);
+    }
+
+    /// Blocks folded in so far.
+    pub fn blocks(&self) -> u64 {
+        self.blocks
+    }
+
+    /// Current EWMA estimate, if any block has been observed.
+    pub fn unit_secs(&self) -> Option<f64> {
+        self.unit_secs
+    }
+
+    /// Snapshot for a heartbeat, or `None` when nothing has been
+    /// measured yet (no point paying wire bytes for an empty frame).
+    pub fn sample(&self) -> Option<ProfileSample> {
+        let unit_secs = self.unit_secs?;
+        Some(ProfileSample {
+            unit_secs,
+            blocks: self.blocks,
+            edges: self.edges.iter().map(|(&p, &bw)| (p, bw)).collect(),
+        })
+    }
+}
+
+/// Master-side fleet aggregation + deadband re-plan trigger.
+#[derive(Debug, Clone)]
+pub struct FleetProfile {
+    deadband: f64,
+    unit_secs: Vec<Option<f64>>,
+    blocks: Vec<u64>,
+    /// Per directed edge: current and best-ever observed bandwidth.
+    cur_bw: BTreeMap<(u32, u32), f64>,
+    best_bw: BTreeMap<(u32, u32), f64>,
+    /// Normalised speeds the last re-plan applied (`None` = the
+    /// static equal split is in force).
+    applied: Option<Vec<f64>>,
+}
+
+/// Normalise to mean 1 (relative speeds are all the partitioner needs).
+fn normalize(speeds: &[f64]) -> Vec<f64> {
+    let mean = speeds.iter().sum::<f64>() / speeds.len() as f64;
+    if mean <= 0.0 || !mean.is_finite() {
+        return vec![1.0; speeds.len()];
+    }
+    speeds.iter().map(|s| s / mean).collect()
+}
+
+impl FleetProfile {
+    /// Track `devices` devices; re-plan when relative speeds drift
+    /// more than `deadband` (e.g. 0.25 = 25%) from the applied split.
+    pub fn new(devices: usize, deadband: f64) -> FleetProfile {
+        assert!(deadband > 0.0, "deadband must be positive");
+        FleetProfile {
+            deadband,
+            unit_secs: vec![None; devices],
+            blocks: vec![0; devices],
+            cur_bw: BTreeMap::new(),
+            best_bw: BTreeMap::new(),
+            applied: None,
+        }
+    }
+
+    /// Fold one heartbeat-borne sample from `device`. Hostile or
+    /// meaningless values (unknown device, non-finite, non-positive)
+    /// are dropped — a profile frame must never poison the planner.
+    pub fn observe(&mut self, device: usize, s: &ProfileSample) {
+        let Some(slot) = self.unit_secs.get_mut(device) else {
+            return;
+        };
+        if s.unit_secs.is_finite() && s.unit_secs > 0.0 {
+            *slot = Some(s.unit_secs);
+            let b = &mut self.blocks[device];
+            *b = (*b).max(s.blocks);
+        }
+        for &(peer, bw) in &s.edges {
+            if !bw.is_finite() || bw <= 0.0 {
+                continue;
+            }
+            let key = (device as u32, peer);
+            self.cur_bw.insert(key, bw);
+            let best = self.best_bw.entry(key).or_insert(bw);
+            if bw > *best {
+                *best = bw;
+            }
+        }
+    }
+
+    /// Measured relative speeds over `live` (mean 1), or `None` until
+    /// every live device has warmed up ([`MIN_BLOCKS`]).
+    pub fn speeds(&self, live: &[usize]) -> Option<Vec<f64>> {
+        let mut raw = Vec::with_capacity(live.len());
+        for &d in live {
+            let secs = (*self.unit_secs.get(d)?)?;
+            if self.blocks[d] < MIN_BLOCKS {
+                return None;
+            }
+            raw.push(1.0 / secs);
+        }
+        Some(normalize(&raw))
+    }
+
+    /// Deadband trigger: `Some(speeds)` when the measured speed vector
+    /// has drifted beyond the deadband relative to what the last
+    /// re-plan applied (the equal split counts as all-ones). The
+    /// caller must [`FleetProfile::mark_applied`] the speeds it acts
+    /// on — that is the hysteresis that stops a stationary fleet from
+    /// ping-ponging between two roundings of the same split.
+    pub fn should_replan(&self, live: &[usize]) -> Option<Vec<f64>> {
+        let speeds = self.speeds(live)?;
+        let uniform = vec![1.0; live.len()];
+        let applied = match &self.applied {
+            Some(a) if a.len() == live.len() => a,
+            _ => &uniform,
+        };
+        let drift = speeds
+            .iter()
+            .zip(applied)
+            .map(|(s, a)| (s / a - 1.0).abs())
+            .fold(0.0, f64::max);
+        if drift > self.deadband {
+            Some(speeds)
+        } else {
+            None
+        }
+    }
+
+    /// Record the speeds a re-plan just applied.
+    pub fn mark_applied(&mut self, speeds: &[f64]) {
+        self.applied = Some(normalize(speeds));
+    }
+
+    /// Membership changed (kill / re-join): the applied baseline no
+    /// longer describes the live set, so fall back to the equal-split
+    /// baseline until the next re-plan.
+    pub fn membership_changed(&mut self) {
+        self.applied = None;
+    }
+
+    /// Current observed bandwidth on the directed edge `from -> to`.
+    pub fn edge_bw(&self, from: u32, to: u32) -> Option<f64> {
+        self.cur_bw.get(&(from, to)).copied()
+    }
+
+    /// Directed edges whose current bandwidth has degraded below
+    /// `factor` (e.g. 0.5) of the best ever observed on that edge.
+    pub fn degraded_links(&self, factor: f64) -> Vec<(u32, u32)> {
+        self.cur_bw
+            .iter()
+            .filter(|(k, &cur)| cur < self.best_bw[k] * factor)
+            .map(|(&k, _)| k)
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn device_profile_ewma_converges_and_normalises() {
+        let mut p = DeviceProfile::new(0.5);
+        assert!(p.sample().is_none());
+        // 1s over 100 units, twice: EWMA sits at 0.01 s/unit
+        p.record_block(1.0, 100.0);
+        p.record_block(1.0, 100.0);
+        let s = p.sample().unwrap();
+        assert!((s.unit_secs - 0.01).abs() < 1e-12);
+        assert_eq!(s.blocks, 2);
+        // half the work in half the time is the *same* speed
+        p.record_block(0.5, 50.0);
+        assert!((p.unit_secs().unwrap() - 0.01).abs() < 1e-12);
+        // a genuine 2x slowdown moves the EWMA halfway (alpha 0.5)
+        p.record_block(2.0, 100.0);
+        assert!((p.unit_secs().unwrap() - 0.015).abs() < 1e-12);
+    }
+
+    #[test]
+    fn device_profile_discards_unusable_observations() {
+        let mut p = DeviceProfile::new(0.3);
+        p.record_block(0.0, 100.0); // virtual clock, modeled costs off
+        p.record_block(-1.0, 100.0);
+        p.record_block(f64::NAN, 100.0);
+        p.record_block(1.0, 0.0);
+        assert!(p.sample().is_none());
+        p.record_edge(1, 0, 1.0); // zero bytes
+        p.record_edge(1, 100, 0.0); // instant send
+        p.record_block(1.0, 10.0);
+        let s = p.sample().unwrap();
+        assert!(s.edges.is_empty());
+        assert_eq!(s.blocks, 1);
+    }
+
+    #[test]
+    fn edge_bandwidth_is_ewma_per_peer() {
+        let mut p = DeviceProfile::new(0.5);
+        p.record_block(1.0, 1.0);
+        p.record_edge(2, 1000, 1.0); // 1000 B/s
+        p.record_edge(2, 500, 1.0); // 500 B/s -> EWMA 750
+        p.record_edge(7, 100, 0.1); // 1000 B/s on another edge
+        let s = p.sample().unwrap();
+        assert_eq!(s.edges.len(), 2);
+        assert_eq!(s.edges[0].0, 2);
+        assert!((s.edges[0].1 - 750.0).abs() < 1e-9);
+        assert!((s.edges[1].1 - 1000.0).abs() < 1e-9);
+    }
+
+    fn sample(unit_secs: f64, blocks: u64) -> ProfileSample {
+        ProfileSample { unit_secs, blocks, edges: vec![] }
+    }
+
+    #[test]
+    fn fleet_requires_full_warmup_before_replanning() {
+        let mut f = FleetProfile::new(3, 0.25);
+        let live = [0usize, 1, 2];
+        assert!(f.speeds(&live).is_none());
+        f.observe(0, &sample(0.01, MIN_BLOCKS));
+        f.observe(1, &sample(0.01, MIN_BLOCKS));
+        // device 2 not warmed up yet
+        f.observe(2, &sample(0.04, MIN_BLOCKS - 1));
+        assert!(f.should_replan(&live).is_none());
+        f.observe(2, &sample(0.04, MIN_BLOCKS));
+        // 4x straggler: well beyond any sane deadband
+        let speeds = f.should_replan(&live).unwrap();
+        assert_eq!(speeds.len(), 3);
+        assert!(speeds[0] > speeds[2] * 3.9);
+        // mean-1 normalisation
+        let mean = speeds.iter().sum::<f64>() / 3.0;
+        assert!((mean - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn deadband_hysteresis_prevents_ping_pong() {
+        let mut f = FleetProfile::new(2, 0.25);
+        let live = [0usize, 1];
+        f.observe(0, &sample(0.01, 5));
+        f.observe(1, &sample(0.04, 5));
+        let speeds = f.should_replan(&live).unwrap();
+        f.mark_applied(&speeds);
+        // stationary within the deadband: never re-plans again
+        for _ in 0..10 {
+            f.observe(0, &sample(0.011, 6));
+            f.observe(1, &sample(0.039, 6));
+            assert!(f.should_replan(&live).is_none(), "ping-pong");
+        }
+        // a genuine throttle (2x) fires exactly once
+        f.observe(1, &sample(0.08, 7));
+        let again = f.should_replan(&live).unwrap();
+        f.mark_applied(&again);
+        assert!(f.should_replan(&live).is_none());
+    }
+
+    #[test]
+    fn membership_change_resets_the_applied_baseline() {
+        let mut f = FleetProfile::new(3, 0.25);
+        f.observe(0, &sample(0.01, 5));
+        f.observe(1, &sample(0.04, 5));
+        f.observe(2, &sample(0.01, 5));
+        let s = f.should_replan(&[0, 1, 2]).unwrap();
+        f.mark_applied(&s);
+        assert!(f.should_replan(&[0, 1, 2]).is_none());
+        // device 2 dies: live set shrinks, baseline resets to uniform
+        f.membership_changed();
+        assert!(f.should_replan(&[0, 1]).is_some());
+    }
+
+    #[test]
+    fn fleet_drops_hostile_samples() {
+        let mut f = FleetProfile::new(2, 0.25);
+        f.observe(99, &sample(0.01, 5)); // unknown device: no panic
+        f.observe(0, &sample(f64::NAN, 5));
+        f.observe(0, &sample(-1.0, 5));
+        f.observe(0, &sample(f64::INFINITY, 5));
+        assert!(f.speeds(&[0]).is_none());
+        let hostile = ProfileSample {
+            unit_secs: 0.01,
+            blocks: 5,
+            edges: vec![(1, f64::NAN), (1, -5.0)],
+        };
+        f.observe(0, &hostile);
+        assert!(f.edge_bw(0, 1).is_none());
+    }
+
+    #[test]
+    fn degraded_links_compare_current_to_best() {
+        let mut f = FleetProfile::new(2, 0.25);
+        let fast = ProfileSample {
+            unit_secs: 0.01,
+            blocks: 5,
+            edges: vec![(1, 1000.0)],
+        };
+        f.observe(0, &fast);
+        assert!(f.degraded_links(0.5).is_empty());
+        let slow = ProfileSample {
+            unit_secs: 0.01,
+            blocks: 6,
+            edges: vec![(1, 400.0)],
+        };
+        f.observe(0, &slow);
+        assert_eq!(f.degraded_links(0.5), vec![(0, 1)]);
+        assert!((f.edge_bw(0, 1).unwrap() - 400.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn sample_wire_bytes_counts_edges() {
+        let s = ProfileSample {
+            unit_secs: 0.01,
+            blocks: 3,
+            edges: vec![(1, 10.0), (2, 20.0)],
+        };
+        assert_eq!(s.wire_bytes(), 8 + 8 + 4 + 24);
+    }
+}

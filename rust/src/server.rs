@@ -39,7 +39,7 @@ use anyhow::{anyhow, bail, Context, Result};
 
 use crate::cli::Args;
 use crate::coordinator::cluster::{ClusterView, EpochPlan};
-use crate::coordinator::plan::{plans, PartitionPlan};
+use crate::coordinator::plan::{plans, plans_with_sizes, PartitionPlan};
 use crate::coordinator::runner::bias_for;
 use crate::coordinator::segmeans::segment_means;
 use crate::coordinator::Mode;
@@ -50,6 +50,7 @@ use crate::net::inproc::{mesh_with_handle, MeshHandle};
 use crate::net::mesh::{worker_mesh, MeshEdge, MeshTransport};
 use crate::net::message::Msg;
 use crate::net::transport::{RejoinBackoff, Transport, TransportError};
+use crate::profile::{DeviceProfile, FleetProfile};
 use crate::net::LinkModel;
 use crate::runtime::{Engine, Manifest, ModelCfg, Tensor, TensorData,
                      WeightSet};
@@ -98,6 +99,18 @@ pub struct FaultPolicy {
     /// Test hook: this worker exits silently on its first job, modeling
     /// a device crash mid-batch.
     pub chaos_exit_worker: Option<usize>,
+    /// Pacing for worker profile beats (`Msg::Heartbeat` with `seq >=
+    /// 2`): a worker sends at most one profile-carrying beat per window.
+    pub heartbeat_every: Duration,
+    /// Heterogeneity deadband: `Some(d)` enables adaptive
+    /// re-partitioning when the measured per-device speeds drift more
+    /// than `d` (relative) from the last-applied split; `None` leaves
+    /// the trigger off (profiles still aggregate master-side).
+    pub replan_deadband: Option<f64>,
+    /// Startup speed override (`--speeds`): when non-empty, the master
+    /// re-partitions once to these per-rank speeds before serving,
+    /// ahead of any measurement.
+    pub static_speeds: Vec<f64>,
 }
 
 impl Default for FaultPolicy {
@@ -106,6 +119,9 @@ impl Default for FaultPolicy {
             gather_deadline: Duration::from_secs(30),
             exchange_deadline: Duration::from_secs(30),
             chaos_exit_worker: None,
+            heartbeat_every: Duration::from_millis(100),
+            replan_deadband: None,
+            static_speeds: Vec::new(),
         }
     }
 }
@@ -405,7 +421,9 @@ pub(crate) enum PassOutcome {
 pub(crate) fn run_distributed<T: Transport>(current: &EpochPlan,
                                             ep: &mut T, x: &Tensor,
                                             job_id: u64,
-                                            gather_deadline: Duration)
+                                            gather_deadline: Duration,
+                                            mut fleet:
+                                                Option<&mut FleetProfile>)
                                             -> Result<PassOutcome> {
     let pls: &[PartitionPlan] = &current.plans;
     let epoch = current.epoch as u32;
@@ -459,6 +477,14 @@ pub(crate) fn run_distributed<T: Transport>(current: &EpochPlan,
                         got += 1;
                     }
                 }
+                // profile beats piggyback on the gather: feed the
+                // fleet aggregate (hostile payloads are dropped there)
+                Msg::Heartbeat { from, profile: Some(sample), .. } => {
+                    if let Some(fp) = fleet.as_deref_mut() {
+                        fp.observe(from as usize, &sample);
+                    }
+                    continue;
+                }
                 // the mesh re-join path can deliver a late bring-up
                 // beat; liveness bookkeeping is not a gather error
                 Msg::Heartbeat { .. } => continue,
@@ -506,7 +532,8 @@ pub(crate) fn probe_dead<T: Transport>(ep: &mut T, missing: &[usize],
         .iter()
         .copied()
         .filter(|&wid| {
-            ep.send(wid, Msg::Heartbeat { from: master as u32, seq: 0 })
+            ep.send(wid, Msg::Heartbeat { from: master as u32, seq: 0,
+                                          profile: None })
                 .is_err()
         })
         .collect()
@@ -585,6 +612,14 @@ pub(crate) fn broadcast_reconfig<T: Transport>(ep: &mut T,
                                                next: &EpochPlan) {
     let (tag, mp, ml) = next.mode.to_wire();
     let live: Vec<u32> = next.devices.iter().map(|&d| d as u32).collect();
+    // an explicit sizes row only when the split is not Algorithm 1 —
+    // the empty row keeps equal-split frames byte-identical to the
+    // pre-heterogeneity protocol
+    let sizes: Vec<u32> = if next.is_weighted() {
+        next.sizes().iter().map(|&s| s as u32).collect()
+    } else {
+        Vec::new()
+    };
     for &wid in &next.devices {
         let _ = ep.send(wid, Msg::Reconfig {
             epoch: next.epoch as u32,
@@ -592,6 +627,7 @@ pub(crate) fn broadcast_reconfig<T: Transport>(ep: &mut T,
             p: mp,
             l: ml,
             live: live.clone(),
+            sizes: sizes.clone(),
         });
     }
 }
@@ -669,6 +705,17 @@ fn master_loop<T: Transport>(manifest: Arc<Manifest>, cfg: ServeConfig,
     let avail = grid_avail(&manifest, &cfg, batch);
     let mut view = ClusterView::new(cfg.mode, model.n, model.causal)?;
     let mut current = view.current()?;
+    // master-side aggregate of worker profile beats; the deadband gates
+    // the adaptive re-plan trigger (None = trigger off, still observing)
+    let mut fleet =
+        FleetProfile::new(p, faults.replan_deadband.unwrap_or(0.25));
+    if !faults.static_speeds.is_empty() && current.p() > 1 {
+        // operator-declared speeds (`--speeds`): weighted split up front
+        current = view.replan_with_speeds(&faults.static_speeds)?;
+        broadcast_reconfig(&mut ep, &current);
+        eprintln!("[master] epoch {} starts weighted: sizes {:?}",
+                  current.epoch, current.sizes());
+    }
 
     let mut job_id = 0u64;
     while let Ok(reqs) = batches.recv() {
@@ -687,7 +734,8 @@ fn master_loop<T: Transport>(manifest: Arc<Manifest>, cfg: ServeConfig,
         for wid in ready {
             // probe: only a respawned thread holds a receiver on the
             // written-off slot, so a successful send == it is back
-            if ep.send(wid, Msg::Heartbeat { from: p as u32, seq: 0 })
+            if ep.send(wid, Msg::Heartbeat { from: p as u32, seq: 0,
+                                             profile: None })
                 .is_err()
             {
                 continue;
@@ -699,6 +747,7 @@ fn master_loop<T: Transport>(manifest: Arc<Manifest>, cfg: ServeConfig,
         }
         if readmitted {
             current = elastic_plan(&avail, model.n, &mut view)?;
+            fleet.membership_changed();
             broadcast_reconfig(&mut ep, &current);
             eprintln!("[master] epoch {} restores {:?} over devices \
                        {:?}", current.epoch, current.mode,
@@ -721,7 +770,8 @@ fn master_loop<T: Transport>(manifest: Arc<Manifest>, cfg: ServeConfig,
                                   &x0)?;
             }
             match run_distributed(&current, &mut ep, &x0, job_id,
-                                  faults.gather_deadline)? {
+                                  faults.gather_deadline,
+                                  Some(&mut fleet))? {
                 PassOutcome::Done(x) => break x,
                 PassOutcome::Dead(missing) => {
                     let probed = probe_dead(&mut ep, &missing, p);
@@ -735,11 +785,28 @@ fn master_loop<T: Transport>(manifest: Arc<Manifest>, cfg: ServeConfig,
                     };
                     current = reconfigure(&avail, model.n, &mut view,
                                           &dead, &mut ep, p)?;
+                    fleet.membership_changed();
                     *geometry.lock().unwrap() =
                         (current.epoch, current.p().max(1));
                 }
             }
         };
+        // heterogeneity-aware adaptation: if the measured speeds have
+        // drifted past the deadband, re-partition the *next* batch
+        // proportionally (hysteresis in `should_replan` keeps a
+        // stationary fleet from ping-ponging)
+        if faults.replan_deadband.is_some() && current.p() > 1 {
+            if let Some(speeds) = fleet.should_replan(&current.devices) {
+                current = view.replan_with_speeds(&speeds)?;
+                broadcast_reconfig(&mut ep, &current);
+                fleet.mark_applied(&speeds);
+                *geometry.lock().unwrap() =
+                    (current.epoch, current.p().max(1));
+                eprintln!("[master] epoch {} adapts to measured speeds \
+                           {speeds:?}: sizes {:?}",
+                          current.epoch, current.sizes());
+            }
+        }
         let logits = engine.run(&head_name, &ws, 0, &[&x])?.remove(0);
         // route responses: row i of the batch -> request i.
         let per_row: usize = logits.shape[1..].iter().product();
@@ -780,6 +847,60 @@ pub(crate) trait BlockRunner: Send {
     /// output), other modes `[x']`.
     fn run(&mut self, exec: &str, layer: usize, args: &[&Tensor])
            -> Result<Vec<Tensor>>;
+
+    /// Modeled compute cost of the block the last `run` executed, if
+    /// this runner charges virtual time instead of consuming wall time
+    /// (the soak sim's heterogeneous fleets). `Some(d)` makes the
+    /// worker advance its transport clock by `d` and profile that
+    /// figure; `None` (engines) profiles the observed elapsed time.
+    fn modeled_cost(&mut self) -> Option<Duration> {
+        None
+    }
+}
+
+/// Worker-side online profiler: the per-device EWMA (`DeviceProfile`)
+/// plus the pacing state for profile-carrying heartbeats. `seq >= 2`
+/// distinguishes profile beats from the probe (`seq == 0`) and mesh
+/// bring-up ACK (`seq == 1`) uses of `Msg::Heartbeat`.
+pub(crate) struct WorkerProfiler {
+    profile: DeviceProfile,
+    last_beat: Option<Duration>,
+    seq: u64,
+}
+
+impl WorkerProfiler {
+    pub(crate) fn new() -> WorkerProfiler {
+        WorkerProfiler {
+            profile: DeviceProfile::new(0.3),
+            last_beat: None,
+            seq: 2,
+        }
+    }
+
+    /// Send one profile-carrying beat to the master if the profile has
+    /// any measurements and the pacing window elapsed. Best-effort: a
+    /// master that is gone just misses a beat.
+    fn maybe_beat<T: Transport>(&mut self, ep: &mut T, master: usize,
+                                every: Duration) {
+        let Some(sample) = self.profile.sample() else {
+            return; // nothing measured yet (e.g. zero-cost sim blocks)
+        };
+        let now = ep.now();
+        if let Some(last) = self.last_beat {
+            if now < last + every {
+                return;
+            }
+        }
+        self.last_beat = Some(now);
+        let seq = self.seq;
+        self.seq += 1;
+        let wid = ep.local_id();
+        let _ = ep.send(master, Msg::Heartbeat {
+            from: wid as u32,
+            seq,
+            profile: Some(sample),
+        });
+    }
 }
 
 /// The AOT-engine-backed [`BlockRunner`] every real server uses.
@@ -823,9 +944,12 @@ struct WorkerState {
 }
 
 impl WorkerState {
+    /// `sizes` empty == the Algorithm-1 equal split; a non-empty row
+    /// (already validated by `apply_reconfig`) is the master's
+    /// heterogeneity-aware weighted split.
     fn build(runner: &mut dyn BlockRunner, model: &ModelCfg, wid: usize,
-             epoch: u32, mode: Mode, live: Vec<usize>)
-             -> Result<WorkerState> {
+             epoch: u32, mode: Mode, live: Vec<usize>,
+             sizes: Vec<usize>) -> Result<WorkerState> {
         let rank = live
             .iter()
             .position(|&d| d == wid)
@@ -834,7 +958,12 @@ impl WorkerState {
         if p <= 1 {
             bail!("worker cannot serve a single-device mode");
         }
-        let pl = plans(model.n, p, l, model.causal)?[rank].clone();
+        let pl = if sizes.is_empty() {
+            plans(model.n, p, l, model.causal)?[rank].clone()
+        } else {
+            plans_with_sizes(model.n, sizes, l, model.causal)?[rank]
+                .clone()
+        };
         let duplicated =
             !matches!(mode, Mode::Prism { duplicated: false, .. });
         let bias = bias_for(&pl, duplicated)?;
@@ -860,7 +989,8 @@ enum JobEnd {
     Shutdown,
     /// A `Msg::Reconfig` arrived mid-barrier: the epoch died under this
     /// job; adopt the new geometry (the master re-issues the batch).
-    Reconfig { epoch: u32, mode: u8, p: u32, l: u32, live: Vec<u32> },
+    Reconfig { epoch: u32, mode: u8, p: u32, l: u32, live: Vec<u32>,
+               sizes: Vec<u32> },
 }
 
 #[allow(clippy::too_many_arguments)]
@@ -868,9 +998,15 @@ fn run_job<T: Transport>(runner: &mut dyn BlockRunner,
                          model: &ModelCfg, st: &WorkerState, ep: &mut T,
                          faults: &FaultPolicy, x_p: Tensor,
                          ctx0: Vec<Tensor>, pre: Vec<(u32, Tensor)>,
-                         master: usize) -> Result<JobEnd> {
+                         master: usize, prof: &mut WorkerProfiler)
+                         -> Result<JobEnd> {
     let wid = ep.local_id();
     let mut x = x_p;
+    // profiling normalizer: elements of local work per block — the
+    // EWMA tracks seconds *per element*, which is invariant under
+    // re-partitioning (a device does not look slower just because the
+    // master handed it more tokens)
+    let units = x.shape.iter().product::<usize>() as f64;
     // rank-space peer partition indices in global (Z_cat) order
     let peers = st.pl.peers();
     let mut peer_ctx: Vec<Tensor> = ctx0;
@@ -890,8 +1026,21 @@ fn run_job<T: Transport>(runner: &mut dyn BlockRunner,
     for layer in 0..model.layers {
         let refs: Vec<&Tensor> = peer_ctx.iter().collect();
         let ctx = Tensor::concat1(&refs)?;
+        let t0 = ep.now();
         let mut out = runner.run(&st.exec, layer,
                                  &[&x, &ctx, &st.bias])?;
+        // a modeled-cost runner (the soak sim) charges its figure on
+        // the virtual clock — the conductor overlaps per-device compute
+        // exactly the way real devices overlap wall time; an engine
+        // profiles the observed elapsed time instead
+        let secs = match runner.modeled_cost() {
+            Some(cost) => {
+                ep.advance(cost);
+                cost.as_secs_f64()
+            }
+            None => ep.now().saturating_sub(t0).as_secs_f64(),
+        };
+        prof.profile.record_block(secs, units);
         x = out.remove(0);
         let share = if prism {
             out.remove(0) // Segment Means of the block output
@@ -905,9 +1054,15 @@ fn run_job<T: Transport>(runner: &mut dyn BlockRunner,
                                         layer: layer as u32,
                                         from: wid as u32,
                                         data: share };
+        let share_bytes = share_msg.wire_bytes();
         for &to in &st.live {
             if to != wid {
+                // timed send: the observed per-edge bandwidth rides the
+                // next profile beat (zero-elapsed sends are discarded)
+                let s0 = ep.now();
                 let _ = ep.send(to, share_msg.clone());
+                let dt = ep.now().saturating_sub(s0).as_secs_f64();
+                prof.profile.record_edge(to as u32, share_bytes, dt);
             }
         }
         if layer + 1 < model.layers {
@@ -979,9 +1134,9 @@ fn run_job<T: Transport>(runner: &mut dyn BlockRunner,
                         // anything older is a stale duplicate: drop
                     }
                     Msg::Shutdown => return Ok(JobEnd::Shutdown),
-                    Msg::Reconfig { epoch, mode, p, l, live } => {
+                    Msg::Reconfig { epoch, mode, p, l, live, sizes } => {
                         return Ok(JobEnd::Reconfig { epoch, mode, p, l,
-                                                     live });
+                                                     live, sizes });
                     }
                     _ => {} // dead-epoch traffic: drop
                 }
@@ -992,6 +1147,9 @@ fn run_job<T: Transport>(runner: &mut dyn BlockRunner,
         // epoch+layer match drops it wherever it surfaces next — no
         // drain needed.
     }
+    // profile beat ahead of the FinalPart: the master drains it in the
+    // same gather, so measurements land before the re-plan decision
+    prof.maybe_beat(ep, master, faults.heartbeat_every);
     // master gone == server over: exit without drama either way
     if ep.send(master, Msg::FinalPart { epoch: st.epoch,
                                         from: wid as u32, data: x })
@@ -1008,7 +1166,8 @@ fn run_job<T: Transport>(runner: &mut dyn BlockRunner,
 #[allow(clippy::too_many_arguments)]
 fn apply_reconfig(runner: &mut dyn BlockRunner, model: &ModelCfg,
                   wid: usize, epoch: u32, mode: u8, p: u32, l: u32,
-                  live: Vec<u32>) -> Result<Option<WorkerState>> {
+                  live: Vec<u32>, sizes: Vec<u32>)
+                  -> Result<Option<WorkerState>> {
     let mode = Mode::from_wire(mode, p, l)?;
     let live: Vec<usize> = live.into_iter().map(|d| d as usize).collect();
     // an inconsistent frame (live list not matching the mode's P) must
@@ -1016,7 +1175,21 @@ fn apply_reconfig(runner: &mut dyn BlockRunner, model: &ModelCfg,
     if mode.p() <= 1 || live.len() != mode.p() || !live.contains(&wid) {
         return Ok(None);
     }
-    WorkerState::build(runner, model, wid, epoch, mode, live).map(Some)
+    // a weighted sizes row must be a full, covering, L-wide split of N;
+    // anything else (truncated, hostile, stale-N) fails closed too
+    let sizes: Vec<usize> =
+        sizes.into_iter().map(|s| s as usize).collect();
+    if !sizes.is_empty() {
+        let floor = mode.l().max(1);
+        if sizes.len() != mode.p()
+            || sizes.iter().sum::<usize>() != model.n
+            || sizes.iter().any(|&s| s < floor)
+        {
+            return Ok(None);
+        }
+    }
+    WorkerState::build(runner, model, wid, epoch, mode, live, sizes)
+        .map(Some)
 }
 
 /// The engine-backed worker loop: load weights, build the AOT runner,
@@ -1062,10 +1235,11 @@ where
     // until the master's next `Msg::Reconfig` includes it.
     let mut st: Option<WorkerState> = if join_epoch == 0 {
         Some(WorkerState::build(&mut runner, &model, wid, 0, base,
-                                (0..p).collect())?)
+                                (0..p).collect(), vec![])?)
     } else {
         None
     };
+    let mut prof = WorkerProfiler::new();
     // Layer-0 shares that raced ahead of our Job (a peer can broadcast
     // its layer-0 share before the master's Job reaches us, but can get
     // no further without ours); they seed the next job's first barrier.
@@ -1093,8 +1267,8 @@ where
         // into one adoption site so they can never diverge
         let reconfig = match env.msg {
             Msg::Shutdown => return Ok(()),
-            Msg::Reconfig { epoch, mode, p: rp, l: rl, live } => {
-                Some((epoch, mode, rp, rl, live))
+            Msg::Reconfig { epoch, mode, p: rp, l: rl, live, sizes } => {
+                Some((epoch, mode, rp, rl, live, sizes))
             }
             // (for a 1-layer model the only layer-0 frames reaching the
             // main loop are the *previous* job's unused final-layer
@@ -1120,23 +1294,23 @@ where
                     .collect();
                 match run_job(&mut runner, &model,
                               st.as_ref().unwrap(), &mut ep, &faults,
-                              x_p, ctx, seed, p)? {
+                              x_p, ctx, seed, p, &mut prof)? {
                     JobEnd::Done | JobEnd::Abandoned => None,
                     JobEnd::Shutdown => return Ok(()),
                     JobEnd::Reconfig { epoch, mode, p: rp, l: rl,
-                                       live } => {
-                        Some((epoch, mode, rp, rl, live))
+                                       live, sizes } => {
+                        Some((epoch, mode, rp, rl, live, sizes))
                     }
                 }
             }
             _ => None, // stale traffic from a dead epoch: drop
         };
-        if let Some((epoch, mode, rp, rl, live)) = reconfig {
+        if let Some((epoch, mode, rp, rl, live, sizes)) = reconfig {
             // keep only shares already racing ahead on the epoch being
             // installed; everything older belongs to a dead epoch
             pre.retain(|(e, _, _)| *e == epoch);
             match apply_reconfig(&mut runner, &model, wid, epoch, mode,
-                                 rp, rl, live)?
+                                 rp, rl, live, sizes)?
             {
                 Some(next) => st = Some(next),
                 // excluded from the re-plan (declared dead, the
@@ -1228,7 +1402,8 @@ fn run_mesh_worker(manifest: Arc<Manifest>, listener: TcpListener,
     let mut mesh = worker_mesh(device, p, &peers, epoch, listener,
                                Box::new(master), io)?;
     // bring-up ACK: the master admits us only once our edges are up
-    mesh.send(p, Msg::Heartbeat { from: device as u32, seq: 1 })
+    mesh.send(p, Msg::Heartbeat { from: device as u32, seq: 1,
+                                  profile: None })
         .map_err(|e| anyhow!("acking the master: {e}"))?;
     eprintln!("[worker {device}] mesh up at epoch {epoch}: peers {:?}",
               mesh.peers());
@@ -1244,7 +1419,7 @@ fn run_mesh_worker(manifest: Arc<Manifest>, listener: TcpListener,
     let faults = FaultPolicy {
         gather_deadline: deadline,
         exchange_deadline: deadline,
-        chaos_exit_worker: None,
+        ..FaultPolicy::default()
     };
     worker_loop(manifest, cfg, mesh, faults, epoch)
 }
@@ -1423,7 +1598,7 @@ fn mesh_master(manifest: Arc<Manifest>, cfg: &ServeConfig,
     while acked.iter().any(|a| !a) {
         match ep.recv_deadline(Duration::from_secs(1)) {
             Ok(env) => {
-                if let Msg::Heartbeat { from, seq: 1 } = env.msg {
+                if let Msg::Heartbeat { from, seq: 1, .. } = env.msg {
                     if let Some(a) = acked.get_mut(from as usize) {
                         *a = true;
                     }
@@ -1444,6 +1619,14 @@ fn mesh_master(manifest: Arc<Manifest>, cfg: &ServeConfig,
     let head_name = manifest.head_name(&cfg.model, &cfg.task, batch);
     let mut view = ClusterView::new(cfg.mode, model.n, model.causal)?;
     let mut current = view.current()?;
+    let mut fleet =
+        FleetProfile::new(p, faults.replan_deadband.unwrap_or(0.25));
+    if !faults.static_speeds.is_empty() && current.p() > 1 {
+        current = view.replan_with_speeds(&faults.static_speeds)?;
+        broadcast_reconfig(&mut ep, &current);
+        eprintln!("[master] epoch {} starts weighted: sizes {:?}",
+                  current.epoch, current.sizes());
+    }
     let mut latencies = Vec::with_capacity(rows.len());
     let mut rejoin_backoff = RejoinBackoff::new(REJOIN_BACKOFF);
     let serve_t0 = Instant::now();
@@ -1458,6 +1641,7 @@ fn mesh_master(manifest: Arc<Manifest>, cfg: &ServeConfig,
                                            serve_t0.elapsed())?
         {
             current = next;
+            fleet.membership_changed();
         }
         let t0 = Instant::now();
         let refs: Vec<&Tensor> = chunk.iter().collect();
@@ -1470,7 +1654,8 @@ fn mesh_master(manifest: Arc<Manifest>, cfg: &ServeConfig,
                                   batch, &x0)?;
             }
             match run_distributed(&current, &mut ep, &x0, job_id,
-                                  faults.gather_deadline)? {
+                                  faults.gather_deadline,
+                                  Some(&mut fleet))? {
                 PassOutcome::Done(x) => break x,
                 PassOutcome::Dead(missing) => {
                     let probed = probe_mesh(addrs, &missing);
@@ -1484,12 +1669,25 @@ fn mesh_master(manifest: Arc<Manifest>, cfg: &ServeConfig,
                     let avail = grid_avail(&manifest, cfg, batch);
                     current = reconfigure(&avail, model.n, &mut view,
                                           &dead, &mut ep, p)?;
+                    fleet.membership_changed();
                     for &d in &dead {
                         ep.remove_edge(d);
                     }
                 }
             }
         };
+        // adaptive re-partitioning on measured drift (same trigger as
+        // the threaded master)
+        if faults.replan_deadband.is_some() && current.p() > 1 {
+            if let Some(speeds) = fleet.should_replan(&current.devices) {
+                current = view.replan_with_speeds(&speeds)?;
+                broadcast_reconfig(&mut ep, &current);
+                fleet.mark_applied(&speeds);
+                eprintln!("[master] epoch {} adapts to measured speeds \
+                           {speeds:?}: sizes {:?}",
+                          current.epoch, current.sizes());
+            }
+        }
         let logits = engine.run(&head_name, &ws, 0, &[&x])?.remove(0);
         debug_assert_eq!(logits.shape[0], batch);
         let dt = t0.elapsed().as_secs_f64();
@@ -1503,6 +1701,38 @@ fn mesh_master(manifest: Arc<Manifest>, cfg: &ServeConfig,
         let _ = ep.send(wid, Msg::Shutdown);
     }
     Ok(latencies)
+}
+
+/// The `prism serve` fault/adaptivity knobs both masters share:
+/// gather/exchange deadline (`--gather-timeout-ms`), profile-beat
+/// pacing (`--heartbeat-ms`), the adaptive re-plan deadband
+/// (`--replan-deadband`, off unless given), and the startup speed
+/// override (`--speeds a,b,c`).
+fn fault_policy_from_args(args: &Args) -> Result<FaultPolicy> {
+    let deadline = args.duration_ms_or("gather-timeout-ms", 30_000)?;
+    let replan_deadband = match args.flags.get("replan-deadband") {
+        Some(_) => {
+            let d = args.f64_or("replan-deadband", 0.3)?;
+            if !d.is_finite() || d <= 0.0 {
+                bail!("--replan-deadband wants a positive fraction, \
+                       got {d}");
+            }
+            Some(d)
+        }
+        None => None,
+    };
+    let static_speeds = args.f64_list_or("speeds", &[])?;
+    if static_speeds.iter().any(|&s| !s.is_finite() || s <= 0.0) {
+        bail!("--speeds wants positive numbers, got {static_speeds:?}");
+    }
+    Ok(FaultPolicy {
+        gather_deadline: deadline,
+        exchange_deadline: deadline,
+        chaos_exit_worker: None,
+        heartbeat_every: args.duration_ms_or("heartbeat-ms", 100)?,
+        replan_deadband,
+        static_speeds,
+    })
 }
 
 /// `prism serve --workers host:port,...`: serve over real worker
@@ -1552,12 +1782,7 @@ fn cmd_serve_mesh(args: &Args) -> Result<()> {
         flush_after: Duration::from_millis(4),
         pace: None,
     };
-    let deadline = args.duration_ms_or("gather-timeout-ms", 30_000)?;
-    let faults = FaultPolicy {
-        gather_deadline: deadline,
-        exchange_deadline: deadline,
-        chaos_exit_worker: None,
-    };
+    let faults = fault_policy_from_args(args)?;
     println!("serving {model}/{dataset} mode={mode:?} over {p} worker \
               processes [{}]", addrs.join(", "));
     let mut rng = Rng::new(7);
@@ -2142,12 +2367,7 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
     };
     println!("serving {model}/{dataset} mode={mode:?} \
               requests={n_requests} rate={rate}/s");
-    let deadline = args.duration_ms_or("gather-timeout-ms", 30_000)?;
-    let faults = FaultPolicy {
-        gather_deadline: deadline,
-        exchange_deadline: deadline,
-        chaos_exit_worker: None,
-    };
+    let faults = fault_policy_from_args(args)?;
     let server = Server::start_with(manifest.clone(), serve_cfg, faults)?;
 
     let (resp_tx, resp_rx) = channel::<Response>();

@@ -11,6 +11,17 @@ pub enum ChurnEvent {
     Kill(usize),
     /// A replacement thread is spawned on the dead slot and re-admitted.
     Revive(usize),
+    /// The worker's clock rate changes: its speed multiplier is set to
+    /// the carried value (stored as `f64::to_bits` so the event stays
+    /// `Eq`/hashable). Models thermal throttling / DVFS on edge devices.
+    Throttle(usize, u64),
+}
+
+impl ChurnEvent {
+    /// Construct a throttle event from a plain speed multiplier.
+    pub fn throttle(worker: usize, speed: f64) -> ChurnEvent {
+        ChurnEvent::Throttle(worker, speed.to_bits())
+    }
 }
 
 /// A time-sorted list of churn events, consumed as virtual time passes.
@@ -98,6 +109,19 @@ mod tests {
     }
 
     #[test]
+    fn throttle_events_carry_exact_speed_bits() {
+        let ev = ChurnEvent::throttle(2, 0.25);
+        assert_eq!(ev, ChurnEvent::Throttle(2, 0.25_f64.to_bits()));
+        let mut s = ChurnSchedule::new(vec![(4.0, ev)]);
+        match s.pop_due(5.0)[0] {
+            ChurnEvent::Throttle(w, bits) => {
+                assert_eq!((w, f64::from_bits(bits)), (2, 0.25));
+            }
+            other => panic!("expected throttle, got {other:?}"),
+        }
+    }
+
+    #[test]
     fn cycles_kill_then_revive_one_at_a_time() {
         let s = ChurnSchedule::cycles(42, 4, 20.0, 3);
         assert_eq!(s.events.len(), 6);
@@ -113,6 +137,9 @@ mod tests {
                 ChurnEvent::Revive(w) => {
                     assert_eq!(dead, Some(w), "revive mismatch");
                     dead = None;
+                }
+                ChurnEvent::Throttle(..) => {
+                    panic!("cycles() never emits throttles")
                 }
             }
         }

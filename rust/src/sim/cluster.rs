@@ -21,6 +21,7 @@
 //! and the suite asserts they do.
 
 use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver};
 use std::sync::Arc;
 use std::thread::JoinHandle;
@@ -37,6 +38,7 @@ use crate::net::message::Msg;
 use crate::net::simnet::{MtEndpoint, SimNetMt};
 use crate::net::transport::Transport;
 use crate::net::LinkModel;
+use crate::profile::FleetProfile;
 use crate::runtime::{ModelCfg, Tensor};
 use crate::server::{broadcast_reconfig, elastic_plan, probe_dead,
                     reconfigure, run_distributed, stack_rows,
@@ -74,6 +76,22 @@ pub struct SoakCfg {
     /// Decode scheduler cadence (virtual seconds per tick; every tick
     /// advances each active stream by one quantum).
     pub decode_tick: f64,
+    /// Modeled compute seconds charged per tensor element per block on
+    /// the conductor's virtual clock. 0.0 (the `small` preset) keeps
+    /// compute free — only wire time advances the clock, exactly the
+    /// pre-heterogeneity behaviour — so homogeneous soaks stay
+    /// bit-identical across versions.
+    pub cost_per_elem: f64,
+    /// Per-device speed multipliers (empty = all 1.0). A device at
+    /// 0.25 pays 4x the modeled compute time per element — the
+    /// straggler shape the adaptive re-partitioner must absorb.
+    pub speeds: Vec<f64>,
+    /// Enable heterogeneity-aware adaptive re-partitioning on the sim
+    /// master with this deadband (None = static equal split; worker
+    /// profiles still aggregate but never change the geometry).
+    pub replan_deadband: Option<f64>,
+    /// Worker profile-heartbeat pacing on the virtual clock.
+    pub heartbeat_every: Duration,
 }
 
 impl SoakCfg {
@@ -100,7 +118,37 @@ impl SoakCfg {
             deadline: Duration::from_millis(500),
             flush_after: Duration::from_millis(4),
             decode_tick: 0.002,
+            cost_per_elem: 0.0,
+            speeds: Vec::new(),
+            replan_deadband: None,
+            heartbeat_every: Duration::from_millis(100),
         }
+    }
+
+    /// The heterogeneous-fleet preset: modeled per-block compute time
+    /// on the virtual clock, one 4x-slow straggler on device 3, and a
+    /// mid-run thermal throttle that halves device 1 — membership
+    /// churn off, so every epoch transition in the report is an
+    /// *adaptive* one. With `replan_deadband` cleared this same config
+    /// runs the fleet under the static equal split: the baseline the
+    /// adaptive run must beat on p99.
+    pub fn hetero(seed: u64) -> SoakCfg {
+        let mut cfg = SoakCfg::small(seed);
+        let horizon = cfg.workload.mean_interarrival
+            * cfg.workload.requests as f64;
+        cfg.churn = ChurnSchedule::new(vec![(
+            horizon * 0.5,
+            ChurnEvent::throttle(1, 0.5),
+        )]);
+        cfg.cost_per_elem = 1e-5;
+        cfg.speeds = vec![1.0, 1.0, 1.0, 0.25];
+        cfg.replan_deadband = Some(0.35);
+        cfg
+    }
+
+    /// Virtual timestamp of the hetero preset's throttle event.
+    pub fn hetero_throttle_at(&self) -> Option<f64> {
+        self.churn.next_at()
     }
 }
 
@@ -129,6 +177,11 @@ pub struct SoakReport {
     pub wire_bytes: usize,
     pub eval_latency: Histogram,
     pub decode_latency: Histogram,
+    /// Adaptive re-partition trail: `(virtual_secs, new_epoch)` for
+    /// every profile-triggered weighted re-plan the master applied
+    /// (empty when `replan_deadband` is None or the fleet never left
+    /// the deadband).
+    pub replans: Vec<(f64, u64)>,
 }
 
 impl SoakReport {
@@ -190,14 +243,33 @@ fn sim_block(x: &Tensor, ctx: &Tensor, layer: usize) -> Result<Tensor> {
 
 /// The sim-side [`BlockRunner`]: `ensure` just records the geometry,
 /// `run` applies [`sim_block`] and derives the PRISM share with the
-/// real `segment_means`.
+/// real `segment_means`. When compute-time modeling is on, each `run`
+/// also prices the block — `cost_per_elem * elems / speed(wid)` — and
+/// hands it to the protocol loop through `modeled_cost`, which charges
+/// it on the virtual clock and feeds the online device profiler.
 struct SimBlocks {
     modes: BTreeMap<String, Mode>,
+    wid: usize,
+    /// Modeled seconds per tensor element per block (0.0 = off).
+    cost_per_elem: f64,
+    /// Per-device speed multipliers as `f64` bits, shared with the
+    /// harness thread so a [`ChurnEvent::Throttle`] changes the rate
+    /// mid-run without restarting the worker.
+    speeds: Arc<Vec<AtomicU64>>,
+    /// Price of the most recent `run`, consumed by `modeled_cost`.
+    last_cost: Option<Duration>,
 }
 
 impl SimBlocks {
-    fn new() -> SimBlocks {
-        SimBlocks { modes: BTreeMap::new() }
+    fn new(wid: usize, cost_per_elem: f64,
+           speeds: Arc<Vec<AtomicU64>>) -> SimBlocks {
+        SimBlocks {
+            modes: BTreeMap::new(),
+            wid,
+            cost_per_elem,
+            speeds,
+            last_cost: None,
+        }
     }
 }
 
@@ -215,6 +287,14 @@ impl BlockRunner for SimBlocks {
             .modes
             .get(exec)
             .with_context(|| format!("unknown sim executable {exec}"))?;
+        if self.cost_per_elem > 0.0 {
+            let elems: usize = args[0].shape.iter().product();
+            let speed = f64::from_bits(
+                self.speeds[self.wid].load(Ordering::Relaxed));
+            let secs =
+                self.cost_per_elem * elems as f64 / speed.max(1e-9);
+            self.last_cost = Some(Duration::from_secs_f64(secs));
+        }
         let out = sim_block(args[0], args[1], layer)?;
         match mode {
             Mode::Prism { l, .. } => {
@@ -223,6 +303,10 @@ impl BlockRunner for SimBlocks {
             }
             _ => Ok(vec![out]),
         }
+    }
+
+    fn modeled_cost(&mut self) -> Option<Duration> {
+        self.last_cost.take()
     }
 }
 
@@ -279,7 +363,8 @@ struct EvalReq {
 }
 
 fn spawn_sim_worker(net: &SimNetMt, wid: usize, model: &ModelCfg,
-                    mode: Mode, faults: &FaultPolicy, join_epoch: u32)
+                    mode: Mode, faults: &FaultPolicy, join_epoch: u32,
+                    blocks: SimBlocks)
                     -> Result<JoinHandle<Result<()>>> {
     // register on the harness thread, BEFORE the OS schedules the new
     // thread: the conductor must know about the participant from the
@@ -290,7 +375,7 @@ fn spawn_sim_worker(net: &SimNetMt, wid: usize, model: &ModelCfg,
     let h = std::thread::Builder::new()
         .name(format!("sim-worker-{wid}"))
         .spawn(move || {
-            worker_loop_with(model, mode, SimBlocks::new(), ep, faults,
+            worker_loop_with(model, mode, blocks, ep, faults,
                              join_epoch)
         })?;
     Ok(h)
@@ -302,7 +387,10 @@ fn spawn_sim_worker(net: &SimNetMt, wid: usize, model: &ModelCfg,
 fn run_eval_batch(cfg: &SoakCfg, net: &SimNetMt, ep: &mut MtEndpoint,
                   view: &mut ClusterView, current: &mut EpochPlan,
                   faults: &FaultPolicy, batch: Vec<EvalReq>,
-                  job_id: &mut u64, eval_latency: &mut Histogram,
+                  job_id: &mut u64,
+                  mut fleet: Option<&mut FleetProfile>,
+                  replans: &mut Vec<(f64, u64)>,
+                  eval_latency: &mut Histogram,
                   eval_responses: &mut usize) -> Result<()> {
     let rows: Vec<&Tensor> = batch.iter().map(|r| &r.row).collect();
     let x0 = stack_rows(&rows, cfg.batch)?;
@@ -315,7 +403,8 @@ fn run_eval_batch(cfg: &SoakCfg, net: &SimNetMt, ep: &mut MtEndpoint,
             break;
         }
         match run_distributed(current, ep, &x0, *job_id,
-                              faults.gather_deadline)? {
+                              faults.gather_deadline,
+                              fleet.as_deref_mut())? {
             PassOutcome::Done(x) => {
                 // the lockstep reference is computed independently of
                 // the mesh: a protocol bug (mixed epochs, dropped or
@@ -337,10 +426,26 @@ fn run_eval_batch(cfg: &SoakCfg, net: &SimNetMt, ep: &mut MtEndpoint,
                 };
                 *current = reconfigure(&sim_avail, cfg.n, view, &dead,
                                        ep, cfg.p)?;
+                if let Some(fp) = fleet.as_deref_mut() {
+                    fp.membership_changed();
+                }
             }
         }
     }
     *job_id += 1;
+    // heterogeneity-aware adaptation, at the same safe point as the
+    // threaded/mesh masters: between batches, from profile heartbeats
+    // gathered during the pass
+    if current.p() > 1 {
+        if let Some(fp) = fleet.as_deref_mut() {
+            if let Some(speeds) = fp.should_replan(&current.devices) {
+                *current = view.replan_with_speeds(&speeds)?;
+                broadcast_reconfig(ep, current);
+                fp.mark_applied(&speeds);
+                replans.push((net.now_secs(), view.epoch()));
+            }
+        }
+    }
     let done = net.now_secs();
     for r in &batch {
         eval_latency.record((done - r.arrived).max(0.0));
@@ -396,19 +501,36 @@ pub fn run_soak(cfg: &SoakCfg) -> Result<SoakReport> {
     let faults = FaultPolicy {
         gather_deadline: cfg.deadline,
         exchange_deadline: cfg.deadline,
-        chaos_exit_worker: None,
+        heartbeat_every: cfg.heartbeat_every,
+        replan_deadband: cfg.replan_deadband,
+        ..FaultPolicy::default()
     };
+    // per-device speed multipliers as f64 bits: shared with every
+    // worker's SimBlocks so a Throttle event re-rates a device mid-run
+    let speeds: Arc<Vec<AtomicU64>> = Arc::new(
+        (0..cfg.p)
+            .map(|w| {
+                let s = cfg.speeds.get(w).copied().unwrap_or(1.0);
+                AtomicU64::new(s.to_bits())
+            })
+            .collect());
     let net = SimNetMt::new(cfg.p + 1, cfg.link);
     let mut ep = net.endpoint(cfg.p);
     let mut workers: Vec<Option<JoinHandle<Result<()>>>> = (0..cfg.p)
         .map(|wid| {
-            spawn_sim_worker(&net, wid, &model, mode, &faults, 0)
+            let blocks = SimBlocks::new(wid, cfg.cost_per_elem,
+                                        speeds.clone());
+            spawn_sim_worker(&net, wid, &model, mode, &faults, 0,
+                             blocks)
                 .map(Some)
         })
         .collect::<Result<_>>()?;
 
     let mut view = ClusterView::new(mode, cfg.n, true)?;
     let mut current = view.current()?;
+    let mut fleet = cfg
+        .replan_deadband
+        .map(|db| FleetProfile::new(cfg.p, db));
 
     // decode side: the shared scheduling core on the reference model,
     // ticked at the configured virtual cadence
@@ -450,6 +572,7 @@ pub fn run_soak(cfg: &SoakCfg) -> Result<SoakReport> {
         wire_bytes: 0,
         eval_latency: Histogram::new(),
         decode_latency: Histogram::new(),
+        replans: Vec::new(),
     };
     let mut next_decode_tick: Option<f64> = None;
     let mut job_id = 0u64;
@@ -503,9 +626,11 @@ pub fn run_soak(cfg: &SoakCfg) -> Result<SoakReport> {
                             net.revive(w);
                             let join_epoch =
                                 (view.epoch() + 1) as u32;
+                            let blocks = SimBlocks::new(
+                                w, cfg.cost_per_elem, speeds.clone());
                             workers[w] = Some(spawn_sim_worker(
                                 &net, w, &model, mode, &faults,
-                                join_epoch)?);
+                                join_epoch, blocks)?);
                             // master-side re-admission, symmetric to
                             // the threaded/mesh re-join paths. If no
                             // batch ran during the outage the master
@@ -520,6 +645,17 @@ pub fn run_soak(cfg: &SoakCfg) -> Result<SoakReport> {
                                                    &mut view)?;
                             broadcast_reconfig(&mut ep, &current);
                             decode.ctl(SchedCtl::Add(w));
+                            if let Some(fp) = fleet.as_mut() {
+                                fp.membership_changed();
+                            }
+                        }
+                        ChurnEvent::Throttle(w, bits) => {
+                            // DVFS/thermal re-rate: takes effect on
+                            // the device's next block; the profiler
+                            // notices through the heartbeats and the
+                            // master re-plans once the drift leaves
+                            // the deadband
+                            speeds[w].store(bits, Ordering::Relaxed);
                         }
                     }
                 }
@@ -534,7 +670,8 @@ pub fn run_soak(cfg: &SoakCfg) -> Result<SoakReport> {
                     report.eval_batches += 1;
                     run_eval_batch(cfg, &net, &mut ep, &mut view,
                                    &mut current, &faults, batch,
-                                   &mut job_id,
+                                   &mut job_id, fleet.as_mut(),
+                                   &mut report.replans,
                                    &mut report.eval_latency,
                                    &mut report.eval_responses)?;
                 }
@@ -571,6 +708,8 @@ pub fn run_soak(cfg: &SoakCfg) -> Result<SoakReport> {
                             run_eval_batch(cfg, &net, &mut ep,
                                            &mut view, &mut current,
                                            &faults, batch, &mut job_id,
+                                           fleet.as_mut(),
+                                           &mut report.replans,
                                            &mut report.eval_latency,
                                            &mut report.eval_responses)?;
                         }
@@ -648,6 +787,45 @@ mod tests {
         assert!(r.full_strength);
         assert!(r.virtual_secs > 0.0 && r.wire_bytes > 0);
         assert!(r.eval_latency.count() as usize == r.eval_responses);
+    }
+
+    /// The hetero preset carries the straggler fleet, the adaptive
+    /// deadband, and exactly one mid-run throttle event.
+    #[test]
+    fn hetero_preset_is_wellformed() {
+        let cfg = SoakCfg::hetero(7);
+        assert_eq!(cfg.speeds, vec![1.0, 1.0, 1.0, 0.25]);
+        assert!(cfg.cost_per_elem > 0.0);
+        assert!(cfg.replan_deadband.is_some());
+        assert_eq!(cfg.churn.remaining(), 1);
+        let at = cfg.hetero_throttle_at().unwrap();
+        assert!(at > 0.0);
+        let mut churn = cfg.churn.clone();
+        assert_eq!(churn.pop_due(at),
+                   vec![ChurnEvent::throttle(1, 0.5)]);
+    }
+
+    /// Modeled compute time pushes batches later on the virtual clock
+    /// (the PR-5 refinement: the conductor charges per-layer compute,
+    /// not just wire time), and with the adaptive trigger off the run
+    /// never re-plans.
+    #[test]
+    fn modeled_compute_time_advances_the_virtual_clock() {
+        let mut a = SoakCfg::small(5);
+        a.workload.requests = 40;
+        a.churn = ChurnSchedule::none();
+        let base = run_soak(&a).unwrap();
+        assert!(base.replans.is_empty());
+        let mut b = a.clone();
+        b.cost_per_elem = 1e-4;
+        b.speeds = vec![1.0, 1.0, 1.0, 0.25];
+        let slow = run_soak(&b).unwrap();
+        assert_eq!(slow.dropped(), 0, "{slow:?}");
+        assert!(slow.virtual_secs > base.virtual_secs,
+                "modeled compute must advance the clock: {} vs {}",
+                slow.virtual_secs, base.virtual_secs);
+        assert!(slow.replans.is_empty(), "adaptive trigger was off");
+        assert_eq!(slow.final_epoch, 0);
     }
 
     /// The reference pass equals the single-partition closed form on a

@@ -258,6 +258,7 @@ fn run_decode_chaos(seed: u64, fault: Fault, kill: Option<usize>,
                 let _ = fnet.send(2, Msg::Heartbeat {
                     from: w as u32,
                     seq: token as u64,
+                    profile: None,
                 });
             }
         }
@@ -554,7 +555,8 @@ fn run_decode_chaos_mesh(seed: u64, fault: Fault, kill: Option<usize>,
         for w in nodes.iter_mut().flatten() {
             let from = w.local_id() as u32;
             let _ = w.send(2, Msg::Heartbeat { from,
-                                               seq: token as u64 });
+                                               seq: token as u64,
+                                               profile: None });
         }
         // one scheduling tick == one heartbeat interval of synthetic
         // time; drain everything queued
@@ -650,14 +652,16 @@ fn disconnect_is_typed_and_clock_is_monotonic() {
                                   FaultCfg::none());
         let mut last = net.now_secs();
         for i in 0..10u64 {
-            a.send(1, Msg::Heartbeat { from: 0, seq: i }).unwrap();
+            a.send(1, Msg::Heartbeat { from: 0, seq: i, profile: None })
+                .unwrap();
             let _ = a.recv_deadline(ms(7));
             let now = net.now_secs();
             assert!(now >= last, "clock went backwards");
             last = now;
         }
         net.disconnect(1);
-        assert_eq!(a.send(1, Msg::Heartbeat { from: 0, seq: 99 }),
+        assert_eq!(a.send(1, Msg::Heartbeat { from: 0, seq: 99,
+                                              profile: None }),
                    Err(TransportError::PeerDown { peer: 1 }));
         assert!(a.peers().is_empty());
     }

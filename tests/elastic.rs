@@ -323,6 +323,7 @@ fn mesh_exchange_at_most_half_of_hub_and_replumbs_on_reconfig() {
             p: 3,
             l: 5,
             live: survivors.iter().map(|&x| x as u32).collect(),
+            sizes: vec![],
         })
         .unwrap();
     }
@@ -347,6 +348,7 @@ fn mesh_exchange_at_most_half_of_hub_and_replumbs_on_reconfig() {
             nodes[w].as_mut().unwrap().send(1, Msg::Heartbeat {
                 from: w as u32,
                 seq: 1,
+                profile: None,
             }),
             Err(TransportError::PeerDown { peer: 1 })));
     }

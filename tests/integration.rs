@@ -281,6 +281,7 @@ fn server_degrades_to_single_device_on_worker_loss() {
             gather_deadline: Duration::from_secs(2),
             exchange_deadline: Duration::from_secs(2),
             chaos_exit_worker: Some(1), // device 1 crashes on first job
+            ..FaultPolicy::default()
         },
     )
     .unwrap();
@@ -363,6 +364,7 @@ fn server_repartitions_to_p2_on_one_of_three_worker_loss() {
             gather_deadline: Duration::from_secs(2),
             exchange_deadline: Duration::from_secs(2),
             chaos_exit_worker: Some(2), // device 2 crashes on first job
+            ..FaultPolicy::default()
         },
     )
     .unwrap();
@@ -447,6 +449,7 @@ fn server_rejoins_respawned_worker_thread_to_full_p() {
             gather_deadline: Duration::from_secs(2),
             exchange_deadline: Duration::from_secs(2),
             chaos_exit_worker: Some(2), // device 2 crashes on first job
+            ..FaultPolicy::default()
         },
     )
     .unwrap();
