@@ -9,9 +9,9 @@ PYTHON ?= python3
 # .github/workflows/ci.yml.
 CHAOS_SEEDS ?= 11,23,37,41,53,67,79,97,101,113
 
-.PHONY: all build test verify chaos elastic soak soak-hetero chaos-mesh \
-        mesh-smoke bench-decode bench-mesh bench-soak bench-hetero \
-        artifacts lint fmt clean
+.PHONY: all build test verify chaos elastic soak soak-hetero \
+        soak-linkplan chaos-mesh mesh-smoke bench-decode bench-mesh \
+        bench-soak bench-hetero bench-linkplan artifacts lint fmt clean
 
 all: build
 
@@ -47,6 +47,13 @@ soak:
 soak-hetero:
 	CHAOS_SEEDS=$(CHAOS_SEEDS) $(CARGO) test --test hetero
 
+# Link-degradation soak: one directed mesh edge delay-ramped mid-run —
+# the profiler must observe the crawl and land exactly one bounded
+# re-plan that relays Segment-Means around it, beating the link-blind
+# direct plan on p99, deterministically, per seed.
+soak-linkplan:
+	CHAOS_SEEDS=$(CHAOS_SEEDS) $(CARGO) test --test linkplan
+
 # The chaos suite over the worker-to-worker mesh transport (FaultNet
 # wraps every per-peer edge; `tests/common::mesh_transport`). The
 # elastic suite's mesh tests run unconditionally under `make elastic`.
@@ -78,6 +85,11 @@ bench-soak:
 # straggler fleet at a fixed seed; writes BENCH_hetero.json.
 bench-hetero:
 	$(CARGO) bench --bench hetero_soak
+
+# Linkplan bench (artifact-free): direct vs relayed exchange planning
+# on the degraded mesh at a fixed seed; writes BENCH_linkplan.json.
+bench-linkplan:
+	$(CARGO) bench --bench linkplan_soak
 
 # Layer-1/2 AOT lowering: produces artifacts/ (HLO text, weights,
 # datasets, fixtures, manifest.json). Requires the JAX/Pallas toolchain.

@@ -1,0 +1,88 @@
+//! §Perf linkplan bench: direct (link-blind) vs bandwidth-aware relayed
+//! exchange planning on the same seeded degraded mesh
+//! (`SoakCfg::linkplan` — an equal-speed fleet with one directed edge
+//! delay-ramped mid-run), reporting both runs' virtual latency
+//! percentiles, the bytes each pushed over the degraded edge, and the
+//! wall cost.
+//!
+//! Artifact-free (the sim's stand-in blocks need no AOT artifacts), so
+//! this runs on any checkout:
+//!
+//!     cargo bench --bench linkplan_soak
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+use anyhow::Result;
+use prism::sim::{run_soak, SoakCfg};
+use prism::util::json::Json;
+
+fn main() -> Result<()> {
+    let cfg = SoakCfg::linkplan(11);
+    println!("== linkplan soak (virtual clock, P={} L={}, {} mixed \
+              requests, mid-run delay ramp on edge 0 -> 1) ==",
+             cfg.p, cfg.l, cfg.workload.requests);
+
+    let t0 = Instant::now();
+    let relayed = run_soak(&cfg)?;
+    let mut direct_cfg = cfg.clone();
+    direct_cfg.link_factor = None;
+    direct_cfg.replan_deadband = None;
+    let direct = run_soak(&direct_cfg)?;
+    let wall = t0.elapsed().as_secs_f64();
+
+    // contract: both runs are drop-free; only the link-aware one
+    // re-plans, its relay starves the degraded edge, and it wins on
+    // tail latency
+    assert_eq!(relayed.dropped(), 0, "relayed run dropped requests");
+    assert_eq!(direct.dropped(), 0, "direct run dropped requests");
+    assert!(!relayed.relay_plans.is_empty(), "no relay table shipped");
+    assert!(direct.replans.is_empty(), "direct run re-planned");
+    assert!(wall < 60.0, "linkplan bench too slow: {wall:.1}s wall");
+
+    let r_edge = relayed.edge_bytes[0][1];
+    let d_edge = direct.edge_bytes[0][1];
+    let r_p50 = relayed.eval_latency.p50() * 1e3;
+    let r_p99 = relayed.eval_latency.p99() * 1e3;
+    let d_p50 = direct.eval_latency.p50() * 1e3;
+    let d_p99 = direct.eval_latency.p99() * 1e3;
+    println!("direct   : eval p50 {d_p50:.2}ms p99 {d_p99:.2}ms, \
+              {d_edge} B over the degraded edge \
+              ({:.2}s virtual)", direct.virtual_secs);
+    println!("relayed  : eval p50 {r_p50:.2}ms p99 {r_p99:.2}ms, \
+              {r_edge} B over the degraded edge \
+              ({:.2}s virtual, {} re-plans, route {:?})",
+             relayed.virtual_secs, relayed.replans.len(),
+             relayed.relay_plans[0].1);
+    println!("p99 win  : {:.2}x", d_p99 / r_p99.max(1e-9));
+    println!("edge win : {:.2}x fewer bytes on the degraded edge",
+             d_edge as f64 / (r_edge as f64).max(1.0));
+    println!("wall     : {wall:.2}s to simulate both runs");
+
+    // machine-readable record for the CI perf-trajectory artifact
+    // (uploaded as BENCH_*.json per PR)
+    let mut obj: BTreeMap<String, Json> = BTreeMap::new();
+    obj.insert("bench".into(), Json::Str("linkplan_soak".into()));
+    obj.insert("seed".into(), Json::Num(cfg.seed as f64));
+    obj.insert("requests".into(),
+               Json::Num(relayed.requests() as f64));
+    obj.insert("direct_eval_p50_ms".into(), Json::Num(d_p50));
+    obj.insert("direct_eval_p99_ms".into(), Json::Num(d_p99));
+    obj.insert("relayed_eval_p50_ms".into(), Json::Num(r_p50));
+    obj.insert("relayed_eval_p99_ms".into(), Json::Num(r_p99));
+    obj.insert("p99_speedup".into(),
+               Json::Num(d_p99 / r_p99.max(1e-9)));
+    obj.insert("direct_edge_bytes".into(), Json::Num(d_edge as f64));
+    obj.insert("relayed_edge_bytes".into(), Json::Num(r_edge as f64));
+    obj.insert("replans".into(),
+               Json::Num(relayed.replans.len() as f64));
+    obj.insert("relayed_virtual_secs".into(),
+               Json::Num(relayed.virtual_secs));
+    obj.insert("direct_virtual_secs".into(),
+               Json::Num(direct.virtual_secs));
+    obj.insert("wall_secs".into(), Json::Num(wall));
+    let path = "BENCH_linkplan.json";
+    std::fs::write(path, Json::Obj(obj).dump())?;
+    println!("json     : {path}");
+    Ok(())
+}

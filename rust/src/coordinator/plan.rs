@@ -77,6 +77,34 @@ pub fn weighted_partition_sizes(n: usize, speeds: &[f64])
     Ok(sizes)
 }
 
+/// Combine per-device compute speeds with per-device link factors into
+/// the effective speeds the weighted split consumes: `e_i = c_i *
+/// l_i / max(l)`. Normalising the link column by its max keeps the
+/// all-links-equal case bit-identical to the pure-compute split (the
+/// factor collapses to 1), and a device behind a degraded link only
+/// ever *loses* slice — bandwidth can hide compute, never add it.
+/// Non-finite or non-positive link factors are treated as neutral so a
+/// half-warmed profiler cannot zero out a device.
+pub fn link_adjusted_speeds(compute: &[f64], link: &[f64])
+                            -> Result<Vec<f64>> {
+    if compute.len() != link.len() {
+        bail!("link factor arity {} != speed arity {}", link.len(),
+              compute.len());
+    }
+    let sane = |l: &f64| l.is_finite() && *l > 0.0;
+    let lmax = link.iter().filter(|l| sane(l)).fold(0.0, |a: f64, &b| {
+        a.max(b)
+    });
+    if lmax <= 0.0 {
+        return Ok(compute.to_vec());
+    }
+    Ok(compute
+        .iter()
+        .zip(link)
+        .map(|(c, l)| if sane(l) { c * (l / lmax).min(1.0) } else { *c })
+        .collect())
+}
+
 /// Raise every partition to at least `min` tokens — the L-floor:
 /// Algorithm 2 (`segment_counts`) needs `n_p >= L` — shaving the
 /// overshoot one token at a time from the current largest partition so
@@ -378,6 +406,57 @@ mod tests {
         let a = weighted_partition_sizes(97, &[1.0, 2.0, 3.0]).unwrap();
         let b = weighted_partition_sizes(97, &[10.0, 20.0, 30.0]).unwrap();
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn link_adjusted_speeds_properties() {
+        // equal links: bit-identical to the pure-compute split
+        property("link-equal-is-identity", 100, |rng: &mut Rng| {
+            let p = rng.range(2, 6);
+            let n = rng.range(p * 2, 300);
+            let compute: Vec<f64> =
+                (0..p).map(|_| 0.25 + rng.f64() * 4.0).collect();
+            let link = vec![0.5 + rng.f64(); p];
+            let eff = link_adjusted_speeds(&compute, &link).unwrap();
+            assert_eq!(weighted_partition_sizes(n, &eff).unwrap(),
+                       weighted_partition_sizes(n, &compute).unwrap());
+        });
+        // lowering one device's link never increases its slice, and
+        // effective speeds stay positive and finite
+        property("link-penalty-monotone", 100, |rng: &mut Rng| {
+            let p = rng.range(2, 6);
+            let n = rng.range(p * 4, 300);
+            let compute: Vec<f64> =
+                (0..p).map(|_| 0.25 + rng.f64() * 4.0).collect();
+            let mut link = vec![1.0; p];
+            let base = weighted_partition_sizes(
+                n,
+                &link_adjusted_speeds(&compute, &link).unwrap(),
+            )
+            .unwrap();
+            let victim = rng.below(p);
+            link[victim] = 0.05 + rng.f64() * 0.5;
+            let eff = link_adjusted_speeds(&compute, &link).unwrap();
+            assert!(eff.iter().all(|e| e.is_finite() && *e > 0.0));
+            // the victim's *ideal share* strictly shrinks (exact math);
+            // realised sizes follow it modulo one token of largest-
+            // remainder rounding jitter
+            let share = |v: &[f64], i: usize| v[i] / v.iter().sum::<f64>();
+            assert!(share(&eff, victim) < share(&compute, victim));
+            let cut = weighted_partition_sizes(n, &eff).unwrap();
+            assert!(
+                cut[victim] <= base[victim] + 1,
+                "slow link grew the slice: {base:?} -> {cut:?}"
+            );
+        });
+        // unusable link factors are neutral, never zeroing a device
+        let eff = link_adjusted_speeds(&[2.0, 1.0],
+                                       &[f64::NAN, 0.0]).unwrap();
+        assert_eq!(eff, vec![2.0, 1.0]);
+        let eff = link_adjusted_speeds(&[2.0, 1.0],
+                                       &[1.0, f64::NAN]).unwrap();
+        assert_eq!(eff, vec![2.0, 1.0]);
+        assert!(link_adjusted_speeds(&[1.0], &[1.0, 1.0]).is_err());
     }
 
     #[test]

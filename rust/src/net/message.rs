@@ -35,7 +35,11 @@ pub enum Msg {
     /// new partition/executable) by position. `sizes` is empty for the
     /// Algorithm-1 equal split; a non-empty vector (one row count per
     /// rank, summing to N) carries a heterogeneity-aware weighted split
-    /// from the master's `FleetProfile` re-plan.
+    /// from the master's `FleetProfile` re-plan. `relays` is the
+    /// exchange route table for this epoch: `(from, to, via)` triples
+    /// of physical device ids meaning "`from` must not send Exchange
+    /// frames directly to `to`; `via` forwards them instead" — empty
+    /// means every edge is direct (the pre-link-awareness behaviour).
     Reconfig {
         epoch: u32,
         mode: u8,
@@ -43,6 +47,7 @@ pub enum Msg {
         l: u32,
         live: Vec<u32>,
         sizes: Vec<u32>,
+        relays: Vec<(u32, u32, u32)>,
     },
     /// Incremental Segment-Means update (decode subsystem): after the
     /// frontier device appends one token at one layer, exactly one
@@ -296,7 +301,7 @@ impl Msg {
                 }
             }
             Msg::Shutdown => out.push(3),
-            Msg::Reconfig { epoch, mode, p, l, live, sizes } => {
+            Msg::Reconfig { epoch, mode, p, l, live, sizes, relays } => {
                 out.push(7);
                 put_u32(&mut out, *epoch);
                 out.push(*mode);
@@ -309,6 +314,12 @@ impl Msg {
                 put_u32(&mut out, sizes.len() as u32);
                 for s in sizes {
                     put_u32(&mut out, *s);
+                }
+                put_u32(&mut out, relays.len() as u32);
+                for (from, to, via) in relays {
+                    put_u32(&mut out, *from);
+                    put_u32(&mut out, *to);
+                    put_u32(&mut out, *via);
                 }
             }
             Msg::SegDelta { layer, from, segment, filled, fmt, d,
@@ -431,7 +442,19 @@ impl Msg {
                 for _ in 0..ns {
                     sizes.push(c.u32()?);
                 }
-                Msg::Reconfig { epoch, mode, p, l, live, sizes }
+                let nr = c.u32()? as usize;
+                // each relay route costs 12 bytes (from, to, via)
+                if nr > c.remaining() / 12 {
+                    bail!("Reconfig declares {nr} relays, {} bytes left",
+                          c.remaining());
+                }
+                let mut relays = Vec::with_capacity(nr);
+                for _ in 0..nr {
+                    let from = c.u32()?;
+                    let to = c.u32()?;
+                    relays.push((from, to, c.u32()?));
+                }
+                Msg::Reconfig { epoch, mode, p, l, live, sizes, relays }
             }
             4 => {
                 let layer = c.u32()?;
@@ -568,13 +591,20 @@ mod tests {
             },
             Msg::Shutdown,
             Msg::Reconfig { epoch: 4, mode: 2, p: 3, l: 5,
-                            live: vec![0, 1, 3], sizes: vec![] },
+                            live: vec![0, 1, 3], sizes: vec![],
+                            relays: vec![] },
             Msg::Reconfig { epoch: 1, mode: 1, p: 2, l: 0, live: vec![],
-                            sizes: vec![] },
+                            sizes: vec![], relays: vec![] },
             // heterogeneity-aware weighted split rides the same frame
             Msg::Reconfig { epoch: 9, mode: 2, p: 3, l: 4,
                             live: vec![0, 2, 3],
-                            sizes: vec![14, 10, 8] },
+                            sizes: vec![14, 10, 8],
+                            relays: vec![] },
+            // link-aware exchange route table rides it too
+            Msg::Reconfig { epoch: 11, mode: 2, p: 3, l: 4,
+                            live: vec![0, 2, 3],
+                            sizes: vec![14, 10, 8],
+                            relays: vec![(0, 2, 3), (2, 0, 3)] },
             Msg::Heartbeat { from: 1, seq: 0, profile: None },
             Msg::Heartbeat {
                 from: 2,
@@ -693,7 +723,8 @@ mod tests {
                    s.wire_bytes());
         // control-plane frames carry no tensor payload
         assert_eq!(Msg::Reconfig { epoch: 1, mode: 2, p: 2, l: 4,
-                                   live: vec![0, 1], sizes: vec![] }
+                                   live: vec![0, 1], sizes: vec![],
+                                   relays: vec![] }
                        .wire_bytes(),
                    0);
         assert_eq!(Msg::MeshInfo {
@@ -773,14 +804,35 @@ mod tests {
     fn hostile_reconfig_sizes_fail_closed() {
         let good = Msg::Reconfig { epoch: 2, mode: 2, p: 2, l: 4,
                                    live: vec![0, 1],
-                                   sizes: vec![20, 12] };
+                                   sizes: vec![20, 12],
+                                   relays: vec![] };
         let buf = good.encode();
         assert_eq!(Msg::decode(&buf).unwrap(), good);
         for cut in 0..buf.len() {
             assert!(Msg::decode(&buf[..cut]).is_err(), "prefix {cut}");
         }
-        // sizes count claims 4 billion entries, zero bytes left
-        let mut bad = buf[..buf.len() - 12].to_vec();
+        // sizes count claims 4 billion entries with only the (empty)
+        // relay row's bytes left: cut the sizes row (2 entries + the
+        // trailing 4-byte relay count) and splice a hostile count in
+        let mut bad = buf[..buf.len() - 16].to_vec();
+        bad.extend_from_slice(&u32::MAX.to_le_bytes());
+        assert!(Msg::decode(&bad).is_err());
+    }
+
+    /// Hostile `relays` tables on the Reconfig frame fail closed.
+    #[test]
+    fn hostile_reconfig_relays_fail_closed() {
+        let good = Msg::Reconfig { epoch: 2, mode: 2, p: 3, l: 4,
+                                   live: vec![0, 1, 2],
+                                   sizes: vec![12, 12, 8],
+                                   relays: vec![(0, 1, 2)] };
+        let buf = good.encode();
+        assert_eq!(Msg::decode(&buf).unwrap(), good);
+        for cut in 0..buf.len() {
+            assert!(Msg::decode(&buf[..cut]).is_err(), "prefix {cut}");
+        }
+        // relay count claims 4 billion routes, zero bytes left
+        let mut bad = buf[..buf.len() - 16].to_vec();
         bad.extend_from_slice(&u32::MAX.to_le_bytes());
         assert!(Msg::decode(&bad).is_err());
     }
@@ -849,6 +901,12 @@ mod property_tests {
                     .collect(),
                 sizes: (0..rng.below(6))
                     .map(|_| rng.next_u64() as u32)
+                    .collect(),
+                relays: (0..rng.below(4))
+                    .map(|_| {
+                        (rng.next_u64() as u32, rng.next_u64() as u32,
+                         rng.next_u64() as u32)
+                    })
                     .collect(),
             },
             4 => {

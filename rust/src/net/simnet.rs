@@ -17,6 +17,7 @@
 //! virtual time, never wall time.
 
 use std::cell::RefCell;
+use std::collections::BTreeMap;
 use std::rc::Rc;
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::Duration;
@@ -38,6 +39,10 @@ struct Inner {
     alive: Vec<bool>,
     inboxes: Vec<Vec<Pending>>,
     link: LinkModel,
+    /// Extra per-directed-edge delivery delay in seconds, on top of the
+    /// uniform `LinkModel`: the knob a soak scenario turns to degrade
+    /// one mesh edge while the rest of the fleet stays healthy.
+    edge_delay: BTreeMap<(usize, usize), f64>,
     stats: Arc<NetStats>,
 }
 
@@ -55,9 +60,18 @@ impl SimNet {
                 alive: vec![true; devices],
                 inboxes: (0..devices).map(|_| Vec::new()).collect(),
                 link,
+                edge_delay: BTreeMap::new(),
                 stats: NetStats::new(devices),
             })),
         }
+    }
+
+    /// Add `secs` of delivery delay to every future send on the
+    /// directed edge `from -> to` (0.0 restores the healthy link).
+    /// In-flight messages keep their original arrival times.
+    pub fn set_edge_delay(&self, from: usize, to: usize, secs: f64) {
+        set_edge_delay(&mut self.inner.borrow_mut().edge_delay,
+                       from, to, secs);
     }
 
     pub fn endpoint(&self, id: usize) -> SimEndpoint {
@@ -96,6 +110,15 @@ impl SimNet {
     }
 }
 
+fn set_edge_delay(delays: &mut BTreeMap<(usize, usize), f64>,
+                  from: usize, to: usize, secs: f64) {
+    if secs > 0.0 && secs.is_finite() {
+        delays.insert((from, to), secs);
+    } else {
+        delays.remove(&(from, to));
+    }
+}
+
 /// One participant's handle; implements [`Transport`].
 pub struct SimEndpoint {
     id: usize,
@@ -130,7 +153,12 @@ impl Transport for SimEndpoint {
             return Err(TransportError::PeerDown { peer: to });
         }
         let bytes = msg.wire_bytes();
-        let at = inner.now + inner.link.transfer_secs(bytes);
+        let extra = inner
+            .edge_delay
+            .get(&(self.id, to))
+            .copied()
+            .unwrap_or(0.0);
+        let at = inner.now + inner.link.transfer_secs(bytes) + extra;
         let seq = inner.seq;
         inner.seq += 1;
         inner.stats.record(self.id, to, bytes);
@@ -215,6 +243,8 @@ struct MtState {
     alive: Vec<bool>,
     inboxes: Vec<Vec<Pending>>,
     link: LinkModel,
+    /// Extra per-directed-edge delivery delay (see [`Inner`]).
+    edge_delay: BTreeMap<(usize, usize), f64>,
     stats: Arc<NetStats>,
     /// Participant currently holds an endpoint (its thread is live).
     registered: Vec<bool>,
@@ -245,6 +275,7 @@ impl SimNetMt {
                     alive: vec![true; devices],
                     inboxes: (0..devices).map(|_| Vec::new()).collect(),
                     link,
+                    edge_delay: BTreeMap::new(),
                     stats: NetStats::new(devices),
                     registered: vec![false; devices],
                     parked: vec![None; devices],
@@ -313,6 +344,12 @@ impl SimNetMt {
 
     pub fn stats(&self) -> Arc<NetStats> {
         self.lock().stats.clone()
+    }
+
+    /// Add `secs` of delivery delay to every future send on the
+    /// directed edge `from -> to` (0.0 restores the healthy link).
+    pub fn set_edge_delay(&self, from: usize, to: usize, secs: f64) {
+        set_edge_delay(&mut self.lock().edge_delay, from, to, secs);
     }
 }
 
@@ -417,7 +454,9 @@ impl Transport for MtEndpoint {
             return Err(TransportError::PeerDown { peer: to });
         }
         let bytes = msg.wire_bytes();
-        let at = st.now + st.link.transfer_secs(bytes);
+        let extra =
+            st.edge_delay.get(&(self.id, to)).copied().unwrap_or(0.0);
+        let at = st.now + st.link.transfer_secs(bytes) + extra;
         let seq = st.seq;
         st.seq += 1;
         st.stats.record(self.id, to, bytes);
@@ -525,6 +564,44 @@ mod tests {
         let env = b.recv_deadline(Duration::from_millis(100)).unwrap();
         assert_eq!(env.from, 0);
         assert!((net.now_secs() - 0.35).abs() < 1e-9);
+    }
+
+    #[test]
+    fn edge_delay_slows_one_directed_edge_only() {
+        let net = net(3);
+        let mut a = net.endpoint(0);
+        let mut b = net.endpoint(1);
+        let mut c = net.endpoint(2);
+        net.set_edge_delay(0, 1, 0.5);
+        // 1.25 MB at 12.5 MB/s = 0.1 s base; 0->1 pays the extra 0.5 s
+        a.send(1, tensor_msg(312_500)).unwrap();
+        a.send(2, tensor_msg(312_500)).unwrap();
+        c.recv_deadline(Duration::from_secs(1)).unwrap();
+        assert!((net.now_secs() - 0.1).abs() < 1e-9, "{}", net.now_secs());
+        b.recv_deadline(Duration::from_secs(1)).unwrap();
+        assert!((net.now_secs() - 0.6).abs() < 1e-9, "{}", net.now_secs());
+        // the reverse edge 1->0 is untouched
+        b.send(0, tensor_msg(312_500)).unwrap();
+        a.recv_deadline(Duration::from_secs(1)).unwrap();
+        assert!((net.now_secs() - 0.7).abs() < 1e-9, "{}", net.now_secs());
+        // 0.0 restores the healthy link
+        net.set_edge_delay(0, 1, 0.0);
+        a.send(1, tensor_msg(312_500)).unwrap();
+        b.recv_deadline(Duration::from_secs(1)).unwrap();
+        assert!((net.now_secs() - 0.8).abs() < 1e-9, "{}", net.now_secs());
+    }
+
+    #[test]
+    fn mt_edge_delay_applies_to_future_sends() {
+        let net = SimNetMt::new(2, LinkModel::new(100.0, 0.0));
+        let mut a = net.endpoint(0);
+        let mut b = net.endpoint(1);
+        net.set_edge_delay(0, 1, 0.25);
+        a.send(1, Msg::Shutdown).unwrap();
+        drop(a); // deregister: the conductor only waits for b
+        b.recv_deadline(Duration::from_secs(1)).unwrap();
+        assert!((net.now_secs() - 0.25).abs() < 1e-9,
+                "{}", net.now_secs());
     }
 
     #[test]

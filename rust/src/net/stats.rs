@@ -30,7 +30,14 @@ impl NetStats {
         })
     }
 
+    /// Account one frame. Out-of-range device ids are ignored rather
+    /// than panicking: transports hand `record` whatever id a peer
+    /// *claimed* (a rejoining worker, a hostile frame), and dropping a
+    /// counter beats crashing the shared stats of every healthy link.
     pub fn record(&self, from: usize, to: usize, bytes: usize) {
+        if from >= self.devices || to >= self.devices {
+            return;
+        }
         self.sent_bytes[from].fetch_add(bytes, Ordering::Relaxed);
         self.recv_bytes[to].fetch_add(bytes, Ordering::Relaxed);
         self.messages[from].fetch_add(1, Ordering::Relaxed);
@@ -38,21 +45,37 @@ impl NetStats {
             .fetch_add(bytes, Ordering::Relaxed);
     }
 
-    /// Bytes sent on the directed edge `from -> to`.
+    /// Bytes sent on the directed edge `from -> to` (0 out of range).
     pub fn sent_between(&self, from: usize, to: usize) -> usize {
+        if from >= self.devices || to >= self.devices {
+            return 0;
+        }
         self.edge_bytes[from * self.devices + to].load(Ordering::Relaxed)
     }
 
+    /// Snapshot of the full directed-edge byte matrix, row-major
+    /// `devices x devices` — `matrix[from][to]`.
+    pub fn edge_matrix(&self) -> Vec<Vec<usize>> {
+        (0..self.devices)
+            .map(|f| (0..self.devices)
+                .map(|t| self.sent_between(f, t))
+                .collect())
+            .collect()
+    }
+
     pub fn sent(&self, device: usize) -> usize {
-        self.sent_bytes[device].load(Ordering::Relaxed)
+        self.sent_bytes.get(device)
+            .map_or(0, |a| a.load(Ordering::Relaxed))
     }
 
     pub fn received(&self, device: usize) -> usize {
-        self.recv_bytes[device].load(Ordering::Relaxed)
+        self.recv_bytes.get(device)
+            .map_or(0, |a| a.load(Ordering::Relaxed))
     }
 
     pub fn messages_from(&self, device: usize) -> usize {
-        self.messages[device].load(Ordering::Relaxed)
+        self.messages.get(device)
+            .map_or(0, |a| a.load(Ordering::Relaxed))
     }
 
     pub fn total_bytes(&self) -> usize {
@@ -104,5 +127,59 @@ mod tests {
         s.reset();
         assert_eq!(s.total_bytes(), 0);
         assert_eq!(s.sent_between(0, 1), 0);
+    }
+
+    #[test]
+    fn out_of_range_ids_are_ignored_not_panics() {
+        let s = NetStats::new(2);
+        // a peer can *claim* any id on the wire; none of these may
+        // panic or corrupt the in-range counters
+        s.record(2, 0, 64);
+        s.record(0, 2, 64);
+        s.record(usize::MAX, usize::MAX, 64);
+        assert_eq!(s.total_bytes(), 0);
+        assert_eq!(s.sent(2), 0);
+        assert_eq!(s.received(usize::MAX), 0);
+        assert_eq!(s.messages_from(7), 0);
+        assert_eq!(s.sent_between(0, 2), 0);
+        assert_eq!(s.sent_between(9, 9), 0);
+        s.record(1, 0, 32); // healthy links still count
+        assert_eq!(s.sent_between(1, 0), 32);
+        assert_eq!(s.edge_matrix(), vec![vec![0, 0], vec![32, 0]]);
+    }
+
+    #[test]
+    fn reset_racing_record_never_panics_or_goes_negative() {
+        // counters are independent relaxed atomics: a reset racing a
+        // record may keep or drop that frame's bytes (both orders are
+        // legal) but must never panic, tear, or underflow
+        let s = NetStats::new(4);
+        let recorders: Vec<_> = (0..2)
+            .map(|w| {
+                let s = s.clone();
+                std::thread::spawn(move || {
+                    for i in 0..5_000usize {
+                        s.record(w, (w + 1) % 4, i % 97);
+                    }
+                })
+            })
+            .collect();
+        let resetter = {
+            let s = s.clone();
+            std::thread::spawn(move || {
+                for _ in 0..500 {
+                    s.reset();
+                    std::thread::yield_now();
+                }
+            })
+        };
+        for h in recorders {
+            h.join().unwrap();
+        }
+        resetter.join().unwrap();
+        s.reset();
+        s.record(0, 1, 10);
+        assert_eq!(s.total_bytes(), 10);
+        assert!(s.sent(0) <= s.total_bytes());
     }
 }

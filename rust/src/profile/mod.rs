@@ -10,7 +10,9 @@
 //!   time, *normalised to seconds per element of work* so the estimate
 //!   is invariant under re-partitioning (a device handed half the rows
 //!   halves its block time without getting "faster"), plus per-edge
-//!   observed send bandwidth from timed `Transport` sends.
+//!   observed *incoming* bandwidth measured at the exchange barrier
+//!   (receive-side timing sees the real link, where timing the send
+//!   call on a buffered TCP socket only measures a memcpy).
 //! * [`ProfileSample`] — the compact snapshot piggybacked on
 //!   `Msg::Heartbeat` frames (hostile-input-hardened in the codec like
 //!   every other variant).
@@ -30,6 +32,11 @@ use std::collections::BTreeMap;
 /// trusted for re-planning (EWMA warm-up).
 pub const MIN_BLOCKS: u64 = 2;
 
+/// A relay route is only worth installing when its bottleneck leg
+/// beats the degraded direct edge by at least this factor — below it
+/// the extra hop's latency eats the bandwidth win.
+pub const RELAY_MARGIN: f64 = 2.0;
+
 /// One profiler snapshot, piggybacked on a heartbeat frame.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ProfileSample {
@@ -37,7 +44,8 @@ pub struct ProfileSample {
     pub unit_secs: f64,
     /// Block executions folded into the EWMA so far.
     pub blocks: u64,
-    /// Per-peer observed send bandwidth (peer id, bytes/sec EWMA).
+    /// Per-peer observed incoming bandwidth (sending peer id,
+    /// bytes/sec EWMA) — the reporting device is the *receiver*.
     pub edges: Vec<(u32, f64)>,
 }
 
@@ -50,7 +58,7 @@ impl ProfileSample {
 }
 
 /// Worker-side online profiler: EWMA of normalised block compute time
-/// plus per-edge send bandwidth.
+/// plus per-edge incoming bandwidth.
 #[derive(Debug, Clone)]
 pub struct DeviceProfile {
     alpha: f64,
@@ -91,7 +99,11 @@ impl DeviceProfile {
         self.blocks += 1;
     }
 
-    /// Fold one timed send of `bytes` to `peer` taking `secs`.
+    /// Fold one timed arrival of `bytes` from `peer` taking `secs`
+    /// (measured from the start of the exchange barrier to the frame
+    /// landing, so buffered sockets and virtual-clock transports both
+    /// report the real link). Instant arrivals (`secs <= 0`, e.g. a
+    /// frame that was already stashed) carry no signal and are dropped.
     pub fn record_edge(&mut self, peer: u32, bytes: usize, secs: f64) {
         if !secs.is_finite() || secs <= 0.0 || bytes == 0 {
             return;
@@ -135,9 +147,13 @@ pub struct FleetProfile {
     /// Per directed edge: current and best-ever observed bandwidth.
     cur_bw: BTreeMap<(u32, u32), f64>,
     best_bw: BTreeMap<(u32, u32), f64>,
-    /// Normalised speeds the last re-plan applied (`None` = the
-    /// static equal split is in force).
-    applied: Option<Vec<f64>>,
+    /// Live device ids + normalised speeds the last re-plan applied
+    /// (`None` = the static equal split is in force). The ids matter:
+    /// a kill + re-join can land on the same fleet *size* with
+    /// different membership, and comparing drift against another
+    /// device's baseline either suppresses a needed re-plan or fires
+    /// a spurious one.
+    applied: Option<(Vec<usize>, Vec<f64>)>,
 }
 
 /// Normalise to mean 1 (relative speeds are all the partitioner needs).
@@ -180,7 +196,9 @@ impl FleetProfile {
             if !bw.is_finite() || bw <= 0.0 {
                 continue;
             }
-            let key = (device as u32, peer);
+            // Samples report *incoming* bandwidth, so the directed
+            // edge runs from the sending peer to the reporting device.
+            let key = (peer, device as u32);
             self.cur_bw.insert(key, bw);
             let best = self.best_bw.entry(key).or_insert(bw);
             if bw > *best {
@@ -210,10 +228,30 @@ impl FleetProfile {
     /// on — that is the hysteresis that stops a stationary fleet from
     /// ping-ponging between two roundings of the same split.
     pub fn should_replan(&self, live: &[usize]) -> Option<Vec<f64>> {
-        let speeds = self.speeds(live)?;
+        self.should_replan_linked(live, None)
+    }
+
+    /// [`FleetProfile::should_replan`] with link awareness: when
+    /// `link_factor` is `Some(f)`, per-device effective speeds fold in
+    /// measured link bandwidth ([`FleetProfile::link_factors`]) so a
+    /// fast device behind a slow link drifts toward a smaller slice.
+    /// `None` keeps the pure-compute behaviour bit-for-bit.
+    pub fn should_replan_linked(
+        &self,
+        live: &[usize],
+        link_factor: Option<f64>,
+    ) -> Option<Vec<f64>> {
+        let mut speeds = self.speeds(live)?;
+        if link_factor.is_some() {
+            let factors = self.link_factors(live);
+            for (s, f) in speeds.iter_mut().zip(&factors) {
+                *s *= f;
+            }
+            speeds = normalize(&speeds);
+        }
         let uniform = vec![1.0; live.len()];
         let applied = match &self.applied {
-            Some(a) if a.len() == live.len() => a,
+            Some((ids, a)) if ids == live => a,
             _ => &uniform,
         };
         let drift = speeds
@@ -228,9 +266,11 @@ impl FleetProfile {
         }
     }
 
-    /// Record the speeds a re-plan just applied.
-    pub fn mark_applied(&mut self, speeds: &[f64]) {
-        self.applied = Some(normalize(speeds));
+    /// Record the speeds a re-plan just applied to `live` (ids are
+    /// stored so a later fleet with the same size but different
+    /// membership never drifts against this baseline).
+    pub fn mark_applied(&mut self, live: &[usize], speeds: &[f64]) {
+        self.applied = Some((live.to_vec(), normalize(speeds)));
     }
 
     /// Membership changed (kill / re-join): the applied baseline no
@@ -253,6 +293,106 @@ impl FleetProfile {
             .filter(|(k, &cur)| cur < self.best_bw[k] * factor)
             .map(|(&k, _)| k)
             .collect()
+    }
+
+    /// Per-device relative link factor over `live` (max 1): the
+    /// minimum current bandwidth over a device's measured in-plan
+    /// edges (either direction), normalised by the fleet-wide best
+    /// such minimum. Devices with no measured edges get a neutral 1.0
+    /// — the profiler must stay conservative until links are observed.
+    pub fn link_factors(&self, live: &[usize]) -> Vec<f64> {
+        let min_bw: Vec<Option<f64>> = live
+            .iter()
+            .map(|&d| {
+                let mut min: Option<f64> = None;
+                for (&(a, b), &bw) in &self.cur_bw {
+                    let (a, b) = (a as usize, b as usize);
+                    if (a == d && live.contains(&b))
+                        || (b == d && live.contains(&a))
+                    {
+                        min = Some(match min {
+                            None => bw,
+                            Some(m) => m.min(bw),
+                        });
+                    }
+                }
+                min
+            })
+            .collect();
+        let best = min_bw
+            .iter()
+            .filter_map(|m| *m)
+            .fold(0.0, f64::max);
+        if best <= 0.0 || !best.is_finite() {
+            return vec![1.0; live.len()];
+        }
+        min_bw
+            .iter()
+            .map(|m| match m {
+                Some(bw) => (bw / best).min(1.0),
+                None => 1.0,
+            })
+            .collect()
+    }
+
+    /// One-hop relay routes around degraded in-plan edges. For every
+    /// directed edge `(from, to)` within `live` flagged by
+    /// [`FleetProfile::degraded_links`], pick the intermediate `via`
+    /// (live, distinct from both ends) maximising the slower of its
+    /// two legs `from -> via -> to`; a route is only emitted when both
+    /// legs are measured, neither is itself degraded, and the
+    /// bottleneck leg beats the direct crawl by at least
+    /// [`RELAY_MARGIN`] (a marginal relay doubles hop count for
+    /// nothing). The non-degraded-leg rule also keeps routes
+    /// single-hop consistent: a via always receives direct.
+    pub fn plan_relays(
+        &self,
+        live: &[usize],
+        factor: f64,
+    ) -> Vec<(u32, u32, u32)> {
+        let degraded = self.degraded_links(factor);
+        let is_degraded =
+            |a: u32, b: u32| degraded.iter().any(|&e| e == (a, b));
+        let mut routes = Vec::new();
+        for &(from, to) in &degraded {
+            if !live.contains(&(from as usize))
+                || !live.contains(&(to as usize))
+            {
+                continue;
+            }
+            let direct = match self.edge_bw(from, to) {
+                Some(bw) => bw,
+                None => continue,
+            };
+            let mut best: Option<(u32, f64)> = None;
+            for &v in live {
+                let via = v as u32;
+                if via == from || via == to {
+                    continue;
+                }
+                let (leg_a, leg_b) = match (
+                    self.edge_bw(from, via),
+                    self.edge_bw(via, to),
+                ) {
+                    (Some(a), Some(b)) => (a, b),
+                    _ => continue,
+                };
+                if is_degraded(from, via) || is_degraded(via, to) {
+                    continue;
+                }
+                let bottleneck = leg_a.min(leg_b);
+                if bottleneck < direct * RELAY_MARGIN {
+                    continue;
+                }
+                if best.map_or(true, |(_, bw)| bottleneck > bw) {
+                    best = Some((via, bottleneck));
+                }
+            }
+            if let Some((via, _)) = best {
+                routes.push((from, to, via));
+            }
+        }
+        routes
     }
 }
 
@@ -339,7 +479,7 @@ mod tests {
         f.observe(0, &sample(0.01, 5));
         f.observe(1, &sample(0.04, 5));
         let speeds = f.should_replan(&live).unwrap();
-        f.mark_applied(&speeds);
+        f.mark_applied(&live, &speeds);
         // stationary within the deadband: never re-plans again
         for _ in 0..10 {
             f.observe(0, &sample(0.011, 6));
@@ -349,7 +489,7 @@ mod tests {
         // a genuine throttle (2x) fires exactly once
         f.observe(1, &sample(0.08, 7));
         let again = f.should_replan(&live).unwrap();
-        f.mark_applied(&again);
+        f.mark_applied(&live, &again);
         assert!(f.should_replan(&live).is_none());
     }
 
@@ -360,7 +500,7 @@ mod tests {
         f.observe(1, &sample(0.04, 5));
         f.observe(2, &sample(0.01, 5));
         let s = f.should_replan(&[0, 1, 2]).unwrap();
-        f.mark_applied(&s);
+        f.mark_applied(&[0, 1, 2], &s);
         assert!(f.should_replan(&[0, 1, 2]).is_none());
         // device 2 dies: live set shrinks, baseline resets to uniform
         f.membership_changed();
@@ -381,7 +521,7 @@ mod tests {
             edges: vec![(1, f64::NAN), (1, -5.0)],
         };
         f.observe(0, &hostile);
-        assert!(f.edge_bw(0, 1).is_none());
+        assert!(f.edge_bw(1, 0).is_none());
     }
 
     #[test]
@@ -400,8 +540,185 @@ mod tests {
             edges: vec![(1, 400.0)],
         };
         f.observe(0, &slow);
-        assert_eq!(f.degraded_links(0.5), vec![(0, 1)]);
-        assert!((f.edge_bw(0, 1).unwrap() - 400.0).abs() < 1e-9);
+        // device 0 *received* from peer 1, so the degraded directed
+        // edge runs 1 -> 0
+        assert_eq!(f.degraded_links(0.5), vec![(1, 0)]);
+        assert!((f.edge_bw(1, 0).unwrap() - 400.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn applied_baseline_matches_device_ids_not_just_length() {
+        let mut f = FleetProfile::new(4, 0.25);
+        for d in 0..3 {
+            f.observe(d, &sample(0.01, 5));
+        }
+        f.observe(3, &sample(0.04, 5));
+        // apply the straggler-aware split on {0, 1, 3}
+        let live_a = [0usize, 1, 3];
+        let s = f.should_replan(&live_a).unwrap();
+        f.mark_applied(&live_a, &s);
+        assert!(f.should_replan(&live_a).is_none());
+        // kill 3, re-join 2: same fleet *size*, different membership.
+        // {0, 1, 2} are all equally fast, so against the correct
+        // (uniform) baseline there is nothing to re-plan; against the
+        // stale {0, 1, 3} baseline the dropped straggler would read as
+        // a huge spurious drift on device 2's slot.
+        let live_b = [0usize, 1, 2];
+        assert!(
+            f.should_replan(&live_b).is_none(),
+            "stale baseline reused across membership change"
+        );
+    }
+
+    #[test]
+    fn kill_rejoin_sequences_never_reuse_a_stale_baseline() {
+        use crate::util::rng::property;
+        property("stale-baseline", 64, |rng| {
+            let n = 4 + rng.below(3); // 4..=6 devices
+            let mut f = FleetProfile::new(n, 0.25);
+            for d in 0..n {
+                // equally fast fleet: uniform baseline never drifts
+                f.observe(d, &sample(0.01, 5));
+            }
+            let mut live: Vec<usize> = (0..n).collect();
+            for _ in 0..8 {
+                // random kill + re-join keeping the size constant
+                let kill = live[rng.below(live.len())];
+                let dead: Vec<usize> =
+                    (0..n).filter(|d| !live.contains(d)).collect();
+                live.retain(|&d| d != kill);
+                if let Some(&back) = dead.first() {
+                    live.push(back);
+                }
+                live.sort_unstable();
+                // mark an arbitrary *skewed* baseline on some OTHER
+                // id set of the same length, then check the live set
+                // never drifts against it
+                let mut other: Vec<usize> = (0..n).collect();
+                rng.shuffle(&mut other);
+                other.truncate(live.len());
+                other.sort_unstable();
+                if other != live {
+                    let skew: Vec<f64> = (0..live.len())
+                        .map(|i| if i == 0 { 4.0 } else { 1.0 })
+                        .collect();
+                    f.mark_applied(&other, &skew);
+                    assert!(
+                        f.should_replan(&live).is_none(),
+                        "uniform fleet {live:?} drifted against a \
+                         baseline applied to {other:?}"
+                    );
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn link_factors_penalise_the_slow_linked_device() {
+        let mut f = FleetProfile::new(3, 0.25);
+        let live = [0usize, 1, 2];
+        // nothing measured: neutral factors
+        assert_eq!(f.link_factors(&live), vec![1.0; 3]);
+        // device 1 receives fast from 0, device 2 receives slow from 0
+        f.observe(
+            1,
+            &ProfileSample {
+                unit_secs: 0.01,
+                blocks: 5,
+                edges: vec![(0, 1000.0)],
+            },
+        );
+        f.observe(
+            2,
+            &ProfileSample {
+                unit_secs: 0.01,
+                blocks: 5,
+                edges: vec![(0, 100.0)],
+            },
+        );
+        let factors = f.link_factors(&live);
+        // device 0 sends on both edges: its min is the slow one
+        assert!((factors[0] - 0.1).abs() < 1e-9);
+        assert!((factors[1] - 1.0).abs() < 1e-9);
+        assert!((factors[2] - 0.1).abs() < 1e-9);
+        // edges outside the live set are ignored
+        let factors = f.link_factors(&[0, 1]);
+        assert!((factors[0] - 1.0).abs() < 1e-9);
+        assert!((factors[1] - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn plan_relays_routes_around_the_degraded_edge() {
+        let mut f = FleetProfile::new(3, 0.25);
+        let live = [0usize, 1, 2];
+        let report = |f: &mut FleetProfile, d: usize, edges: Vec<(u32, f64)>| {
+            f.observe(d, &ProfileSample { unit_secs: 0.01, blocks: 5, edges });
+        };
+        // warm all-to-all mesh at 1000 B/s
+        report(&mut f, 0, vec![(1, 1000.0), (2, 1000.0)]);
+        report(&mut f, 1, vec![(0, 1000.0), (2, 1000.0)]);
+        report(&mut f, 2, vec![(0, 1000.0), (1, 1000.0)]);
+        assert!(f.plan_relays(&live, 0.5).is_empty());
+        // edge 0 -> 1 crawls: receiver 1 sees 100 B/s from peer 0
+        report(&mut f, 1, vec![(0, 100.0), (2, 1000.0)]);
+        let routes = f.plan_relays(&live, 0.5);
+        assert_eq!(routes, vec![(0, 1, 2)]);
+        // legs must beat the crawl by RELAY_MARGIN: at 150 B/s the
+        // only candidate via is barely better than direct -> no route
+        let mut g = FleetProfile::new(3, 0.25);
+        report(&mut g, 0, vec![(1, 1000.0), (2, 1000.0)]);
+        report(&mut g, 1, vec![(0, 1000.0), (2, 1000.0)]);
+        report(&mut g, 2, vec![(0, 150.0), (1, 1000.0)]);
+        report(&mut g, 1, vec![(0, 100.0), (2, 1000.0)]);
+        assert!(g.plan_relays(&live, 0.5).is_empty());
+        // a dead via never carries a route
+        let routes = f.plan_relays(&[0, 1], 0.5);
+        assert!(routes.is_empty());
+    }
+
+    #[test]
+    fn linked_drift_uses_effective_speeds() {
+        let mut f = FleetProfile::new(3, 0.25);
+        let live = [0usize, 1, 2];
+        for d in 0..3 {
+            f.observe(d, &sample(0.01, 5));
+        }
+        // equal compute: pure-compute trigger sees nothing
+        assert!(f.should_replan(&live).is_none());
+        // all links fast except 0 -> 1, which crawls at a quarter of
+        // the mesh rate — devices 0 and 1 sit behind the slow link
+        f.observe(
+            1,
+            &ProfileSample {
+                unit_secs: 0.01,
+                blocks: 6,
+                edges: vec![(0, 250.0), (2, 1000.0)],
+            },
+        );
+        f.observe(
+            2,
+            &ProfileSample {
+                unit_secs: 0.01,
+                blocks: 6,
+                edges: vec![(0, 1000.0), (1, 1000.0)],
+            },
+        );
+        f.observe(
+            0,
+            &ProfileSample {
+                unit_secs: 0.01,
+                blocks: 6,
+                edges: vec![(1, 1000.0), (2, 1000.0)],
+            },
+        );
+        assert!(f.should_replan(&live).is_none());
+        let eff = f.should_replan_linked(&live, Some(0.5)).unwrap();
+        // the devices touching the slow edge get smaller effective
+        // speeds than the well-connected one
+        assert!(eff[0] < eff[2]);
+        assert!(eff[1] < eff[2]);
+        f.mark_applied(&live, &eff);
+        assert!(f.should_replan_linked(&live, Some(0.5)).is_none());
     }
 
     #[test]

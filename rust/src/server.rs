@@ -31,6 +31,7 @@
 
 use std::collections::{BTreeSet, VecDeque};
 use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicU64, Ordering as AtomicOrdering};
 use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
@@ -50,7 +51,7 @@ use crate::net::inproc::{mesh_with_handle, MeshHandle};
 use crate::net::mesh::{worker_mesh, MeshEdge, MeshTransport};
 use crate::net::message::Msg;
 use crate::net::transport::{RejoinBackoff, Transport, TransportError};
-use crate::profile::{DeviceProfile, FleetProfile};
+use crate::profile::{DeviceProfile, FleetProfile, ProfileSample};
 use crate::net::LinkModel;
 use crate::runtime::{Engine, Manifest, ModelCfg, Tensor, TensorData,
                      WeightSet};
@@ -111,6 +112,12 @@ pub struct FaultPolicy {
     /// re-partitions once to these per-rank speeds before serving,
     /// ahead of any measurement.
     pub static_speeds: Vec<f64>,
+    /// Link awareness: `Some(f)` turns the measured edge-bandwidth
+    /// matrix into planning input — edges whose current bandwidth
+    /// falls below `f` of their best get one-hop relay routes, and
+    /// per-device link factors fold into the weighted split. `None`
+    /// (the default) keeps planning purely compute-driven.
+    pub link_factor: Option<f64>,
 }
 
 impl Default for FaultPolicy {
@@ -122,6 +129,7 @@ impl Default for FaultPolicy {
             heartbeat_every: Duration::from_millis(100),
             replan_deadband: None,
             static_speeds: Vec::new(),
+            link_factor: None,
         }
     }
 }
@@ -608,13 +616,14 @@ pub(crate) fn elastic_plan(avail: &dyn Fn(Mode) -> bool, n: usize,
 /// Install `next` on its live set: every serving device gets the
 /// epoch-tagged `Msg::Reconfig` (best-effort — a dead endpoint just
 /// misses a frame addressed to nobody).
-pub(crate) fn broadcast_reconfig<T: Transport>(ep: &mut T,
-                                               next: &EpochPlan) {
+pub(crate) fn broadcast_reconfig<T: Transport>(
+    ep: &mut T, next: &EpochPlan, relays: &[(u32, u32, u32)],
+) {
     let (tag, mp, ml) = next.mode.to_wire();
     let live: Vec<u32> = next.devices.iter().map(|&d| d as u32).collect();
-    // an explicit sizes row only when the split is not Algorithm 1 —
-    // the empty row keeps equal-split frames byte-identical to the
-    // pre-heterogeneity protocol
+    // an explicit sizes row only when the split is not Algorithm 1;
+    // like it, the relay table is empty unless link-aware planning
+    // actually routed an edge
     let sizes: Vec<u32> = if next.is_weighted() {
         next.sizes().iter().map(|&s| s as u32).collect()
     } else {
@@ -628,8 +637,37 @@ pub(crate) fn broadcast_reconfig<T: Transport>(ep: &mut T,
             l: ml,
             live: live.clone(),
             sizes: sizes.clone(),
+            relays: relays.to_vec(),
         });
     }
+}
+
+/// The shared adaptive-trigger body for the threaded master, the mesh
+/// master, and the soak sim: consult the deadband trigger (link-aware
+/// when `link_factor` is on), re-plan the split, compute this epoch's
+/// relay routes around degraded edges, install everything on the live
+/// set, and mark the applied baseline. `Ok(None)` == nothing drifted;
+/// otherwise the installed plan plus the relay table it shipped.
+pub(crate) fn adaptive_replan<T: Transport>(
+    ep: &mut T, view: &mut ClusterView, fleet: &mut FleetProfile,
+    live: &[usize], link_factor: Option<f64>,
+) -> Result<Option<(EpochPlan, Vec<(u32, u32, u32)>)>> {
+    let speeds = match fleet.should_replan_linked(live, link_factor) {
+        Some(s) => s,
+        None => return Ok(None),
+    };
+    let next = view.replan_with_speeds(&speeds)?;
+    let relays = match link_factor {
+        Some(f) => fleet.plan_relays(&next.devices, f),
+        None => Vec::new(),
+    };
+    broadcast_reconfig(ep, &next, &relays);
+    fleet.mark_applied(&next.devices, &speeds);
+    if !relays.is_empty() {
+        eprintln!("[master] epoch {} relays exchange edges: {relays:?}",
+                  next.epoch);
+    }
+    Ok(Some((next, relays)))
 }
 
 /// Swap in a new epoch after the named workers were declared dead: mark
@@ -665,7 +703,7 @@ pub(crate) fn reconfigure<T: Transport>(avail: &dyn Fn(Mode) -> bool,
         for &wid in dead {
             let _ = ep.send(wid, Msg::Shutdown);
         }
-        broadcast_reconfig(ep, &next);
+        broadcast_reconfig(ep, &next, &[]);
     }
     Ok(next)
 }
@@ -712,7 +750,7 @@ fn master_loop<T: Transport>(manifest: Arc<Manifest>, cfg: ServeConfig,
     if !faults.static_speeds.is_empty() && current.p() > 1 {
         // operator-declared speeds (`--speeds`): weighted split up front
         current = view.replan_with_speeds(&faults.static_speeds)?;
-        broadcast_reconfig(&mut ep, &current);
+        broadcast_reconfig(&mut ep, &current, &[]);
         eprintln!("[master] epoch {} starts weighted: sizes {:?}",
                   current.epoch, current.sizes());
     }
@@ -748,7 +786,7 @@ fn master_loop<T: Transport>(manifest: Arc<Manifest>, cfg: ServeConfig,
         if readmitted {
             current = elastic_plan(&avail, model.n, &mut view)?;
             fleet.membership_changed();
-            broadcast_reconfig(&mut ep, &current);
+            broadcast_reconfig(&mut ep, &current, &[]);
             eprintln!("[master] epoch {} restores {:?} over devices \
                        {:?}", current.epoch, current.mode,
                       current.devices);
@@ -794,16 +832,20 @@ fn master_loop<T: Transport>(manifest: Arc<Manifest>, cfg: ServeConfig,
         // heterogeneity-aware adaptation: if the measured speeds have
         // drifted past the deadband, re-partition the *next* batch
         // proportionally (hysteresis in `should_replan` keeps a
-        // stationary fleet from ping-ponging)
+        // stationary fleet from ping-ponging); with `link_factor` on,
+        // the trigger also folds link bandwidth into the split and
+        // relays exchange edges around degraded links
         if faults.replan_deadband.is_some() && current.p() > 1 {
-            if let Some(speeds) = fleet.should_replan(&current.devices) {
-                current = view.replan_with_speeds(&speeds)?;
-                broadcast_reconfig(&mut ep, &current);
-                fleet.mark_applied(&speeds);
+            if let Some((next, _)) = adaptive_replan(&mut ep, &mut view,
+                                                     &mut fleet,
+                                                     &current.devices,
+                                                     faults.link_factor)?
+            {
+                current = next;
                 *geometry.lock().unwrap() =
                     (current.epoch, current.p().max(1));
-                eprintln!("[master] epoch {} adapts to measured speeds \
-                           {speeds:?}: sizes {:?}",
+                eprintln!("[master] epoch {} adapts to measured speeds: \
+                           sizes {:?}",
                           current.epoch, current.sizes());
             }
         }
@@ -938,6 +980,10 @@ struct WorkerState {
     mode: Mode,
     /// Live physical device ids in rank order (this epoch's mesh).
     live: Vec<usize>,
+    /// This epoch's exchange route table: `(from, to, via)` means
+    /// `from` does not send to `to` directly — `via` forwards. Empty
+    /// == every edge direct.
+    relays: Vec<(u32, u32, u32)>,
     pl: PartitionPlan,
     bias: Tensor,
     exec: String,
@@ -949,7 +995,8 @@ impl WorkerState {
     /// heterogeneity-aware weighted split.
     fn build(runner: &mut dyn BlockRunner, model: &ModelCfg, wid: usize,
              epoch: u32, mode: Mode, live: Vec<usize>,
-             sizes: Vec<usize>) -> Result<WorkerState> {
+             sizes: Vec<usize>, relays: Vec<(u32, u32, u32)>)
+             -> Result<WorkerState> {
         let rank = live
             .iter()
             .position(|&d| d == wid)
@@ -968,7 +1015,7 @@ impl WorkerState {
             !matches!(mode, Mode::Prism { duplicated: false, .. });
         let bias = bias_for(&pl, duplicated)?;
         let exec = runner.ensure(mode, rank)?;
-        Ok(WorkerState { epoch, mode, live, pl, bias, exec })
+        Ok(WorkerState { epoch, mode, live, relays, pl, bias, exec })
     }
 }
 
@@ -978,6 +1025,26 @@ fn slot_of(from: u32, live: &[usize], peers: &[usize]) -> Option<usize> {
     live.iter()
         .position(|&d| d == from as usize)
         .and_then(|rank| peers.iter().position(|&j| j == rank))
+}
+
+/// Relay hop: forward a just-received `Exchange` frame to every
+/// destination this worker carries it for (routes with `via == wid`
+/// and a matching origin). The original `from` is preserved so the
+/// destination's barrier slots the share by its true origin, and the
+/// epoch tag keeps a stale route table inert at the receiver.
+fn relay_forward<T: Transport>(ep: &mut T, relays: &[(u32, u32, u32)],
+                               wid: usize, epoch: u32, layer: u32,
+                               from: u32, data: &Tensor) {
+    for &(f, to, via) in relays {
+        if via == wid as u32 && f == from {
+            let _ = ep.send(to as usize, Msg::Exchange {
+                epoch,
+                layer,
+                from,
+                data: data.clone(),
+            });
+        }
+    }
 }
 
 /// How one job ended on a worker.
@@ -990,7 +1057,7 @@ enum JobEnd {
     /// A `Msg::Reconfig` arrived mid-barrier: the epoch died under this
     /// job; adopt the new geometry (the master re-issues the batch).
     Reconfig { epoch: u32, mode: u8, p: u32, l: u32, live: Vec<u32>,
-               sizes: Vec<u32> },
+               sizes: Vec<u32>, relays: Vec<(u32, u32, u32)> },
 }
 
 #[allow(clippy::too_many_arguments)]
@@ -1054,18 +1121,27 @@ fn run_job<T: Transport>(runner: &mut dyn BlockRunner,
                                         layer: layer as u32,
                                         from: wid as u32,
                                         data: share };
-        let share_bytes = share_msg.wire_bytes();
         for &to in &st.live {
-            if to != wid {
-                // timed send: the observed per-edge bandwidth rides the
-                // next profile beat (zero-elapsed sends are discarded)
-                let s0 = ep.now();
-                let _ = ep.send(to, share_msg.clone());
-                let dt = ep.now().saturating_sub(s0).as_secs_f64();
-                prof.profile.record_edge(to as u32, share_bytes, dt);
+            if to == wid {
+                continue;
             }
+            // route-aware exchange: an edge the master relayed away is
+            // not sent on — the via peer forwards our share out of its
+            // own barrier instead
+            if st.relays.iter().any(|&(f, t, _)| {
+                f == wid as u32 && t == to as u32
+            }) {
+                continue;
+            }
+            let _ = ep.send(to, share_msg.clone());
         }
         if layer + 1 < model.layers {
+            // receive-side edge timing baseline: bandwidth is measured
+            // from barrier entry to each frame landing, which sees the
+            // real link on buffered TCP sockets and virtual-clock sims
+            // alike (timing the send call only measures a memcpy into
+            // the write buffer)
+            let bar0 = ep.now();
             // barrier: collect this layer's share from every live peer,
             // bounding the wait — a dead peer must not wedge the mesh.
             // Frames from other epochs are inert by construction (the
@@ -1113,6 +1189,10 @@ fn run_job<T: Transport>(runner: &mut dyn BlockRunner,
                     Msg::Exchange { epoch, layer: ll, from, data }
                         if epoch == st.epoch =>
                     {
+                        // relay hop: frames we carry for a routed-away
+                        // edge go out before local bookkeeping
+                        relay_forward(ep, &st.relays, wid, epoch, ll,
+                                      from, &data);
                         let Some(slot) =
                             slot_of(from, &st.live, &peers)
                         else {
@@ -1123,20 +1203,37 @@ fn run_job<T: Transport>(runner: &mut dyn BlockRunner,
                             // duplicated frame (FaultNet injects these
                             // on fault-injecting transports) must not
                             // release the barrier early
-                            peer_ctx[slot] = data;
                             if !seen[slot] {
                                 seen[slot] = true;
                                 got += 1;
+                                // per-edge bandwidth, attributed to the
+                                // *physical* last hop (`env.from`): a
+                                // relayed frame measures the via leg,
+                                // and the degraded direct edge keeps
+                                // its last measured crawl — which is
+                                // what keeps the route stable
+                                let dt = ep
+                                    .now()
+                                    .saturating_sub(bar0)
+                                    .as_secs_f64();
+                                prof.profile.record_edge(
+                                    env.from as u32,
+                                    data.byte_len(),
+                                    dt,
+                                );
                             }
+                            peer_ctx[slot] = data;
                         } else if ll as usize == layer + 1 {
                             next[slot] = Some(data); // raced ahead
                         }
                         // anything older is a stale duplicate: drop
                     }
                     Msg::Shutdown => return Ok(JobEnd::Shutdown),
-                    Msg::Reconfig { epoch, mode, p, l, live, sizes } => {
+                    Msg::Reconfig { epoch, mode, p, l, live, sizes,
+                                    relays } => {
                         return Ok(JobEnd::Reconfig { epoch, mode, p, l,
-                                                     live, sizes });
+                                                     live, sizes,
+                                                     relays });
                     }
                     _ => {} // dead-epoch traffic: drop
                 }
@@ -1166,7 +1263,8 @@ fn run_job<T: Transport>(runner: &mut dyn BlockRunner,
 #[allow(clippy::too_many_arguments)]
 fn apply_reconfig(runner: &mut dyn BlockRunner, model: &ModelCfg,
                   wid: usize, epoch: u32, mode: u8, p: u32, l: u32,
-                  live: Vec<u32>, sizes: Vec<u32>)
+                  live: Vec<u32>, sizes: Vec<u32>,
+                  relays: Vec<(u32, u32, u32)>)
                   -> Result<Option<WorkerState>> {
     let mode = Mode::from_wire(mode, p, l)?;
     let live: Vec<usize> = live.into_iter().map(|d| d as usize).collect();
@@ -1188,7 +1286,31 @@ fn apply_reconfig(runner: &mut dyn BlockRunner, model: &ModelCfg,
             return Ok(None);
         }
     }
-    WorkerState::build(runner, model, wid, epoch, mode, live, sizes)
+    // a relay table must describe this live set: every id live, the
+    // three ids pairwise distinct, one route per directed edge, and no
+    // route whose via is itself relayed-to from the same origin — a
+    // via must receive direct or it cannot forward. Anything else is
+    // hostile or stale and fails closed like a bad sizes row.
+    for &(f, t, v) in &relays {
+        let alive = |d: u32| live.contains(&(d as usize));
+        if f == t
+            || t == v
+            || f == v
+            || !alive(f)
+            || !alive(t)
+            || !alive(v)
+            || relays.iter().any(|&(f2, t2, _)| f2 == f && t2 == v)
+            || relays
+                .iter()
+                .filter(|&&(f2, t2, _)| f2 == f && t2 == t)
+                .count()
+                > 1
+        {
+            return Ok(None);
+        }
+    }
+    WorkerState::build(runner, model, wid, epoch, mode, live, sizes,
+                       relays)
         .map(Some)
 }
 
@@ -1235,7 +1357,7 @@ where
     // until the master's next `Msg::Reconfig` includes it.
     let mut st: Option<WorkerState> = if join_epoch == 0 {
         Some(WorkerState::build(&mut runner, &model, wid, 0, base,
-                                (0..p).collect(), vec![])?)
+                                (0..p).collect(), vec![], vec![])?)
     } else {
         None
     };
@@ -1267,8 +1389,9 @@ where
         // into one adoption site so they can never diverge
         let reconfig = match env.msg {
             Msg::Shutdown => return Ok(()),
-            Msg::Reconfig { epoch, mode, p: rp, l: rl, live, sizes } => {
-                Some((epoch, mode, rp, rl, live, sizes))
+            Msg::Reconfig { epoch, mode, p: rp, l: rl, live, sizes,
+                            relays } => {
+                Some((epoch, mode, rp, rl, live, sizes, relays))
             }
             // (for a 1-layer model the only layer-0 frames reaching the
             // main loop are the *previous* job's unused final-layer
@@ -1276,6 +1399,15 @@ where
             Msg::Exchange { epoch, layer: 0, from, data }
                 if model.layers > 1 =>
             {
+                // a share we carry for a routed-away edge is forwarded
+                // on receipt, even between jobs — the destination's
+                // layer-0 barrier is waiting on our hop
+                if let Some(s) = st.as_ref() {
+                    if s.epoch == epoch {
+                        relay_forward(&mut ep, &s.relays, wid, epoch, 0,
+                                      from, &data);
+                    }
+                }
                 pre.push((epoch, from, data));
                 None
             }
@@ -1298,21 +1430,35 @@ where
                     JobEnd::Done | JobEnd::Abandoned => None,
                     JobEnd::Shutdown => return Ok(()),
                     JobEnd::Reconfig { epoch, mode, p: rp, l: rl,
-                                       live, sizes } => {
-                        Some((epoch, mode, rp, rl, live, sizes))
+                                       live, sizes, relays } => {
+                        Some((epoch, mode, rp, rl, live, sizes, relays))
                     }
                 }
             }
             _ => None, // stale traffic from a dead epoch: drop
         };
-        if let Some((epoch, mode, rp, rl, live, sizes)) = reconfig {
+        if let Some((epoch, mode, rp, rl, live, sizes, relays)) =
+            reconfig
+        {
             // keep only shares already racing ahead on the epoch being
             // installed; everything older belongs to a dead epoch
             pre.retain(|(e, _, _)| *e == epoch);
             match apply_reconfig(&mut runner, &model, wid, epoch, mode,
-                                 rp, rl, live, sizes)?
+                                 rp, rl, live, sizes, relays)?
             {
-                Some(next) => st = Some(next),
+                Some(next) => {
+                    // shares that raced ahead of this Reconfig were
+                    // stashed before its route table existed: run the
+                    // relay hop for them now, so a destination waiting
+                    // on our forward is not left to time out
+                    for (e, from, data) in &pre {
+                        if *e == next.epoch {
+                            relay_forward(&mut ep, &next.relays, wid,
+                                          *e, 0, *from, data);
+                        }
+                    }
+                    st = Some(next);
+                }
                 // excluded from the re-plan (declared dead, the
                 // cluster went single, or an inconsistent frame):
                 // leave a trace before idling for the Shutdown
@@ -1541,7 +1687,7 @@ fn rejoin_workers(manifest: &Manifest, cfg: &ServeConfig,
     // fallbacks included, exactly like the failure direction)
     let avail = grid_avail(manifest, cfg, batch);
     let next = elastic_plan(&avail, model.n, view)?;
-    broadcast_reconfig(ep, &next);
+    broadcast_reconfig(ep, &next, &[]);
     eprintln!("[master] epoch {} restores {:?} over devices {:?}",
               next.epoch, next.mode, next.devices);
     Ok(Some(next))
@@ -1623,7 +1769,7 @@ fn mesh_master(manifest: Arc<Manifest>, cfg: &ServeConfig,
         FleetProfile::new(p, faults.replan_deadband.unwrap_or(0.25));
     if !faults.static_speeds.is_empty() && current.p() > 1 {
         current = view.replan_with_speeds(&faults.static_speeds)?;
-        broadcast_reconfig(&mut ep, &current);
+        broadcast_reconfig(&mut ep, &current, &[]);
         eprintln!("[master] epoch {} starts weighted: sizes {:?}",
                   current.epoch, current.sizes());
     }
@@ -1677,14 +1823,16 @@ fn mesh_master(manifest: Arc<Manifest>, cfg: &ServeConfig,
             }
         };
         // adaptive re-partitioning on measured drift (same trigger as
-        // the threaded master)
+        // the threaded master, link-aware when `--link-factor` is on)
         if faults.replan_deadband.is_some() && current.p() > 1 {
-            if let Some(speeds) = fleet.should_replan(&current.devices) {
-                current = view.replan_with_speeds(&speeds)?;
-                broadcast_reconfig(&mut ep, &current);
-                fleet.mark_applied(&speeds);
-                eprintln!("[master] epoch {} adapts to measured speeds \
-                           {speeds:?}: sizes {:?}",
+            if let Some((next, _)) = adaptive_replan(&mut ep, &mut view,
+                                                     &mut fleet,
+                                                     &current.devices,
+                                                     faults.link_factor)?
+            {
+                current = next;
+                eprintln!("[master] epoch {} adapts to measured speeds: \
+                           sizes {:?}",
                           current.epoch, current.sizes());
             }
         }
@@ -1706,8 +1854,9 @@ fn mesh_master(manifest: Arc<Manifest>, cfg: &ServeConfig,
 /// The `prism serve` fault/adaptivity knobs both masters share:
 /// gather/exchange deadline (`--gather-timeout-ms`), profile-beat
 /// pacing (`--heartbeat-ms`), the adaptive re-plan deadband
-/// (`--replan-deadband`, off unless given), and the startup speed
-/// override (`--speeds a,b,c`).
+/// (`--replan-deadband`, off unless given), the startup speed
+/// override (`--speeds a,b,c`), and link-aware exchange planning
+/// (`--link-factor`, off unless given).
 fn fault_policy_from_args(args: &Args) -> Result<FaultPolicy> {
     let deadline = args.duration_ms_or("gather-timeout-ms", 30_000)?;
     let replan_deadband = match args.flags.get("replan-deadband") {
@@ -1725,6 +1874,17 @@ fn fault_policy_from_args(args: &Args) -> Result<FaultPolicy> {
     if static_speeds.iter().any(|&s| !s.is_finite() || s <= 0.0) {
         bail!("--speeds wants positive numbers, got {static_speeds:?}");
     }
+    let link_factor = match args.flags.get("link-factor") {
+        Some(_) => {
+            let f = args.f64_or("link-factor", 0.5)?;
+            if !f.is_finite() || f <= 0.0 || f >= 1.0 {
+                bail!("--link-factor wants a fraction in (0, 1), \
+                       got {f}");
+            }
+            Some(f)
+        }
+        None => None,
+    };
     Ok(FaultPolicy {
         gather_deadline: deadline,
         exchange_deadline: deadline,
@@ -1732,6 +1892,7 @@ fn fault_policy_from_args(args: &Args) -> Result<FaultPolicy> {
         heartbeat_every: args.duration_ms_or("heartbeat-ms", 100)?,
         replan_deadband,
         static_speeds,
+        link_factor,
     })
 }
 
@@ -2105,6 +2266,22 @@ fn apply_ctl(c: SchedCtl, view: &mut ClusterView,
 /// the virtual-clock soak harness (`sim::cluster`) can drive the exact
 /// same policy deterministically, one tick per virtual cadence, with
 /// the thread-backed [`DecodeScheduler`] a thin shell around it.
+/// Closed-form decode-path profiling. Decode-only fleets previously
+/// never fed the profiler — every `ProfileSample` came from the eval
+/// barrier in `run_job`, so `FleetProfile::speeds` stayed `None` and
+/// adaptive re-partitioning silently never fired. Each tick charges the
+/// modeled per-token block compute (same `cost_per_elem / speed` rate
+/// the simulated eval workers use) to the devices a stream actually
+/// runs on; the host drains samples and feeds them to the master's
+/// `FleetProfile` exactly like heartbeat-borne eval samples. Pure
+/// arithmetic — nothing here reads or advances the clock, so the
+/// virtual-clock soak stays deterministic.
+pub(crate) struct DecodeProfiling {
+    cost_per_elem: f64,
+    speeds: Arc<Vec<AtomicU64>>,
+    profiles: Vec<DeviceProfile>,
+}
+
 pub(crate) struct DecodeCore {
     model: Arc<RefGpt>,
     wire: WireFmt,
@@ -2112,6 +2289,7 @@ pub(crate) struct DecodeCore {
     view: ClusterView,
     active: VecDeque<ActiveStream>,
     total: DecodeStats,
+    profiling: Option<DecodeProfiling>,
 }
 
 impl DecodeCore {
@@ -2129,7 +2307,61 @@ impl DecodeCore {
             view,
             active: VecDeque::new(),
             total: DecodeStats::default(),
+            profiling: None,
         })
+    }
+
+    /// Arm decode-path profiling: model per-token compute at
+    /// `cost_per_elem / speed(device)` with the shared (Throttle-able)
+    /// speed table, one EWMA profile per physical device.
+    pub(crate) fn enable_profiling(&mut self, cost_per_elem: f64,
+                                   speeds: Arc<Vec<AtomicU64>>) {
+        let n = speeds.len();
+        self.profiling = Some(DecodeProfiling {
+            cost_per_elem,
+            speeds,
+            profiles: (0..n).map(|_| DeviceProfile::new(0.3)).collect(),
+        });
+    }
+
+    /// Snapshot one sample per device that did decode work since
+    /// profiling was armed (EWMA state is retained, like heartbeats).
+    pub(crate) fn profile_samples(&self)
+                                  -> Vec<(usize, ProfileSample)> {
+        let Some(prof) = self.profiling.as_ref() else {
+            return Vec::new();
+        };
+        prof.profiles
+            .iter()
+            .enumerate()
+            .filter_map(|(d, p)| p.sample().map(|s| (d, s)))
+            .collect()
+    }
+
+    /// Charge the tokens a stream just advanced to every device it
+    /// runs on, at the modeled per-element rate.
+    fn observe_decode_work(profiling: &mut Option<DecodeProfiling>,
+                           d_model: usize, s: &ActiveStream,
+                           tokens_before: usize) {
+        let Some(prof) = profiling.as_mut() else { return };
+        let advanced =
+            (s.prefilled + s.emitted).saturating_sub(tokens_before);
+        if advanced == 0 {
+            return;
+        }
+        let units = (advanced * d_model) as f64;
+        for &d in &s.devices {
+            let Some(p) = prof.profiles.get_mut(d) else { continue };
+            let speed = prof
+                .speeds
+                .get(d)
+                .map(|a| f64::from_bits(a.load(AtomicOrdering::Relaxed)))
+                .unwrap_or(1.0);
+            if speed > 0.0 {
+                p.record_block(prof.cost_per_elem * units / speed,
+                               units);
+            }
+        }
     }
 
     /// Admit one stream on the current membership's (P', L').
@@ -2146,9 +2378,14 @@ impl DecodeCore {
 
     /// One scheduling tick: advance every active stream by one quantum.
     pub(crate) fn tick(&mut self) {
+        let d_model = self.model.cfg.d;
         let mut still = VecDeque::with_capacity(self.active.len());
         while let Some(mut s) = self.active.pop_front() {
-            match decode_tick(&mut s, self.chunk) {
+            let before = s.prefilled + s.emitted;
+            let end = decode_tick(&mut s, self.chunk);
+            Self::observe_decode_work(&mut self.profiling, d_model, &s,
+                                      before);
+            match end {
                 Ok(false) => still.push_back(s),
                 Ok(true) => self.total.merge(&s.session.stats()),
                 Err(_) => {

@@ -15,12 +15,22 @@ pub enum ChurnEvent {
     /// the carried value (stored as `f64::to_bits` so the event stays
     /// `Eq`/hashable). Models thermal throttling / DVFS on edge devices.
     Throttle(usize, u64),
+    /// One directed mesh edge `from -> to` gains the carried extra
+    /// delivery delay in seconds (`f64::to_bits`, zero heals the link).
+    /// Models a congested / flaky last-hop radio between two edge
+    /// devices while the rest of the fleet stays healthy.
+    LinkDelay(usize, usize, u64),
 }
 
 impl ChurnEvent {
     /// Construct a throttle event from a plain speed multiplier.
     pub fn throttle(worker: usize, speed: f64) -> ChurnEvent {
         ChurnEvent::Throttle(worker, speed.to_bits())
+    }
+
+    /// Construct a link-delay event from a plain delay in seconds.
+    pub fn link_delay(from: usize, to: usize, secs: f64) -> ChurnEvent {
+        ChurnEvent::LinkDelay(from, to, secs.to_bits())
     }
 }
 
@@ -122,6 +132,19 @@ mod tests {
     }
 
     #[test]
+    fn link_delay_events_carry_exact_delay_bits() {
+        let ev = ChurnEvent::link_delay(0, 2, 1.5);
+        assert_eq!(ev, ChurnEvent::LinkDelay(0, 2, 1.5_f64.to_bits()));
+        let mut s = ChurnSchedule::new(vec![(4.0, ev)]);
+        match s.pop_due(5.0)[0] {
+            ChurnEvent::LinkDelay(f, t, bits) => {
+                assert_eq!((f, t, f64::from_bits(bits)), (0, 2, 1.5));
+            }
+            other => panic!("expected link delay, got {other:?}"),
+        }
+    }
+
+    #[test]
     fn cycles_kill_then_revive_one_at_a_time() {
         let s = ChurnSchedule::cycles(42, 4, 20.0, 3);
         assert_eq!(s.events.len(), 6);
@@ -138,8 +161,8 @@ mod tests {
                     assert_eq!(dead, Some(w), "revive mismatch");
                     dead = None;
                 }
-                ChurnEvent::Throttle(..) => {
-                    panic!("cycles() never emits throttles")
+                ChurnEvent::Throttle(..) | ChurnEvent::LinkDelay(..) => {
+                    panic!("cycles() only emits kill/revive")
                 }
             }
         }

@@ -40,11 +40,11 @@ use crate::net::transport::Transport;
 use crate::net::LinkModel;
 use crate::profile::FleetProfile;
 use crate::runtime::{ModelCfg, Tensor};
-use crate::server::{broadcast_reconfig, elastic_plan, probe_dead,
-                    reconfigure, run_distributed, stack_rows,
-                    BatcherCore, BlockRunner, DecodeCore, DecodeEvent,
-                    DecodeRequest, FaultPolicy, PassOutcome, SchedCtl,
-                    worker_loop_with};
+use crate::server::{adaptive_replan, broadcast_reconfig, elastic_plan,
+                    probe_dead, reconfigure, run_distributed,
+                    stack_rows, BatcherCore, BlockRunner, DecodeCore,
+                    DecodeEvent, DecodeRequest, FaultPolicy,
+                    PassOutcome, SchedCtl, worker_loop_with};
 use crate::util::rng::Rng;
 
 use super::churn::{ChurnEvent, ChurnSchedule};
@@ -92,6 +92,15 @@ pub struct SoakCfg {
     pub replan_deadband: Option<f64>,
     /// Worker profile-heartbeat pacing on the virtual clock.
     pub heartbeat_every: Duration,
+    /// Bandwidth-aware planning: fold measured link bandwidth into the
+    /// adaptive split and relay exchange traffic around edges degraded
+    /// below this fraction of the fleet's best (None = pure-compute
+    /// split, exactly the pre-link-planning behaviour).
+    pub link_factor: Option<f64>,
+    /// Feed the decode scheduler's modeled per-token compute into the
+    /// fleet profile (and run the adaptive trigger at decode ticks), so
+    /// a decode-only workload can reach `should_replan` too.
+    pub decode_profile: bool,
 }
 
 impl SoakCfg {
@@ -122,6 +131,8 @@ impl SoakCfg {
             speeds: Vec::new(),
             replan_deadband: None,
             heartbeat_every: Duration::from_millis(100),
+            link_factor: None,
+            decode_profile: false,
         }
     }
 
@@ -148,6 +159,37 @@ impl SoakCfg {
 
     /// Virtual timestamp of the hetero preset's throttle event.
     pub fn hetero_throttle_at(&self) -> Option<f64> {
+        self.churn.next_at()
+    }
+
+    /// The link-degradation preset: an equal-speed fleet over a healthy
+    /// mesh, with one directed edge (0 -> 1) delay-ramped mid-run — a
+    /// congested last-hop radio, not a slow device. The profiler
+    /// observes the crawl through arrival-timed exchange frames, and
+    /// the link-aware trigger must answer with exactly one bounded
+    /// re-plan that shrinks the penalized endpoints' slices and relays
+    /// the degraded edge through a healthy peer. With `link_factor`
+    /// cleared the same config is the direct baseline the relayed plan
+    /// must beat on eval p99.
+    pub fn linkplan(seed: u64) -> SoakCfg {
+        let mut cfg = SoakCfg::small(seed);
+        let horizon = cfg.workload.mean_interarrival
+            * cfg.workload.requests as f64;
+        // two-step ramp on the same edge: the profiler's EWMA sees a
+        // worsening crawl, not a single cliff — the deadband still has
+        // to fold both into ONE re-plan (hysteresis, not ping-pong)
+        cfg.churn = ChurnSchedule::new(vec![
+            (horizon * 0.35, ChurnEvent::link_delay(0, 1, 0.05)),
+            (horizon * 0.45, ChurnEvent::link_delay(0, 1, 0.15)),
+        ]);
+        cfg.cost_per_elem = 1e-5;
+        cfg.replan_deadband = Some(0.35);
+        cfg.link_factor = Some(0.5);
+        cfg
+    }
+
+    /// Virtual timestamp of the linkplan preset's first delay step.
+    pub fn linkplan_degrade_at(&self) -> Option<f64> {
         self.churn.next_at()
     }
 }
@@ -182,6 +224,14 @@ pub struct SoakReport {
     /// (empty when `replan_deadband` is None or the fleet never left
     /// the deadband).
     pub replans: Vec<(f64, u64)>,
+    /// Relay-route trail: `(virtual_secs, relay table)` for every
+    /// adaptive re-plan that shipped a non-empty relay table (empty
+    /// unless `link_factor` is on and a degraded edge got routed).
+    pub relay_plans: Vec<(f64, Vec<(u32, u32, u32)>)>,
+    /// Final directed-edge byte matrix (`[from][to]`, master = row P):
+    /// the direct-vs-relay evidence — a relayed edge's direct bytes
+    /// stop growing while its via legs carry the traffic.
+    pub edge_bytes: Vec<Vec<usize>>,
 }
 
 impl SoakReport {
@@ -390,6 +440,7 @@ fn run_eval_batch(cfg: &SoakCfg, net: &SimNetMt, ep: &mut MtEndpoint,
                   job_id: &mut u64,
                   mut fleet: Option<&mut FleetProfile>,
                   replans: &mut Vec<(f64, u64)>,
+                  relay_plans: &mut Vec<(f64, Vec<(u32, u32, u32)>)>,
                   eval_latency: &mut Histogram,
                   eval_responses: &mut usize) -> Result<()> {
     let rows: Vec<&Tensor> = batch.iter().map(|r| &r.row).collect();
@@ -438,11 +489,15 @@ fn run_eval_batch(cfg: &SoakCfg, net: &SimNetMt, ep: &mut MtEndpoint,
     // gathered during the pass
     if current.p() > 1 {
         if let Some(fp) = fleet.as_deref_mut() {
-            if let Some(speeds) = fp.should_replan(&current.devices) {
-                *current = view.replan_with_speeds(&speeds)?;
-                broadcast_reconfig(ep, current);
-                fp.mark_applied(&speeds);
+            if let Some((next, relays)) =
+                adaptive_replan(ep, view, fp, &current.devices,
+                                faults.link_factor)?
+            {
+                *current = next;
                 replans.push((net.now_secs(), view.epoch()));
+                if !relays.is_empty() {
+                    relay_plans.push((net.now_secs(), relays));
+                }
             }
         }
     }
@@ -503,6 +558,7 @@ pub fn run_soak(cfg: &SoakCfg) -> Result<SoakReport> {
         exchange_deadline: cfg.deadline,
         heartbeat_every: cfg.heartbeat_every,
         replan_deadband: cfg.replan_deadband,
+        link_factor: cfg.link_factor,
         ..FaultPolicy::default()
     };
     // per-device speed multipliers as f64 bits: shared with every
@@ -546,6 +602,10 @@ pub fn run_soak(cfg: &SoakCfg) -> Result<SoakReport> {
     let mut decode = DecodeCore::new(dec_model, cfg.p, 4,
                                      crate::util::quant::WireFmt::F32,
                                      2)?;
+    if cfg.decode_profile {
+        decode.enable_profiling(cfg.cost_per_elem.max(1e-9),
+                                speeds.clone());
+    }
     let (dec_tx, dec_rx) = channel::<DecodeEvent>();
     let mut dec_meta: BTreeMap<u64, f64> = BTreeMap::new();
 
@@ -573,6 +633,8 @@ pub fn run_soak(cfg: &SoakCfg) -> Result<SoakReport> {
         eval_latency: Histogram::new(),
         decode_latency: Histogram::new(),
         replans: Vec::new(),
+        relay_plans: Vec::new(),
+        edge_bytes: Vec::new(),
     };
     let mut next_decode_tick: Option<f64> = None;
     let mut job_id = 0u64;
@@ -643,7 +705,7 @@ pub fn run_soak(cfg: &SoakCfg) -> Result<SoakReport> {
                             view.add_device(w)?;
                             current = elastic_plan(&sim_avail, cfg.n,
                                                    &mut view)?;
-                            broadcast_reconfig(&mut ep, &current);
+                            broadcast_reconfig(&mut ep, &current, &[]);
                             decode.ctl(SchedCtl::Add(w));
                             if let Some(fp) = fleet.as_mut() {
                                 fp.membership_changed();
@@ -656,6 +718,16 @@ pub fn run_soak(cfg: &SoakCfg) -> Result<SoakReport> {
                             // master re-plans once the drift leaves
                             // the deadband
                             speeds[w].store(bits, Ordering::Relaxed);
+                        }
+                        ChurnEvent::LinkDelay(f, t2, bits) => {
+                            // a congested mesh edge, not a slow
+                            // device: future frames on f -> t2 pay
+                            // the extra delivery delay, the receiver
+                            // times the crawl into its heartbeats,
+                            // and the link-aware trigger routes
+                            // around it
+                            net.set_edge_delay(f, t2,
+                                               f64::from_bits(bits));
                         }
                     }
                 }
@@ -672,12 +744,40 @@ pub fn run_soak(cfg: &SoakCfg) -> Result<SoakReport> {
                                    &mut current, &faults, batch,
                                    &mut job_id, fleet.as_mut(),
                                    &mut report.replans,
+                                   &mut report.relay_plans,
                                    &mut report.eval_latency,
                                    &mut report.eval_responses)?;
                 }
             }
             2 => {
                 decode.tick();
+                // decode-path profiling (when armed): modeled per-token
+                // compute reaches the same fleet profile the eval
+                // heartbeats feed, and the adaptive trigger runs at the
+                // tick boundary — a decode-only workload can drift past
+                // the deadband and re-plan without a single eval batch
+                if cfg.decode_profile {
+                    if let Some(fp) = fleet.as_mut() {
+                        for (dev, s) in decode.profile_samples() {
+                            fp.observe(dev, &s);
+                        }
+                        if current.p() > 1 {
+                            if let Some((next, relays)) =
+                                adaptive_replan(&mut ep, &mut view, fp,
+                                                &current.devices,
+                                                faults.link_factor)?
+                            {
+                                current = next;
+                                report.replans.push(
+                                    (net.now_secs(), view.epoch()));
+                                if !relays.is_empty() {
+                                    report.relay_plans.push(
+                                        (net.now_secs(), relays));
+                                }
+                            }
+                        }
+                    }
+                }
                 drain_decode_events(&dec_rx, net.now_secs(),
                                     &mut dec_meta,
                                     &mut report.decode_latency,
@@ -710,6 +810,7 @@ pub fn run_soak(cfg: &SoakCfg) -> Result<SoakReport> {
                                            &faults, batch, &mut job_id,
                                            fleet.as_mut(),
                                            &mut report.replans,
+                                           &mut report.relay_plans,
                                            &mut report.eval_latency,
                                            &mut report.eval_responses)?;
                         }
@@ -763,6 +864,7 @@ pub fn run_soak(cfg: &SoakCfg) -> Result<SoakReport> {
     }
     report.virtual_secs = net.now_secs();
     report.wire_bytes = net.stats().total_bytes();
+    report.edge_bytes = net.stats().edge_matrix();
     Ok(report)
 }
 
@@ -803,6 +905,25 @@ mod tests {
         let mut churn = cfg.churn.clone();
         assert_eq!(churn.pop_due(at),
                    vec![ChurnEvent::throttle(1, 0.5)]);
+    }
+
+    /// The linkplan preset degrades one directed mesh edge in two
+    /// steps, with equal device speeds — so any re-plan it triggers is
+    /// a *link* decision, not a straggler one.
+    #[test]
+    fn linkplan_preset_is_wellformed() {
+        let cfg = SoakCfg::linkplan(3);
+        assert!(cfg.speeds.is_empty(), "equal-speed fleet");
+        assert!(cfg.cost_per_elem > 0.0);
+        assert!(cfg.replan_deadband.is_some());
+        assert!(cfg.link_factor.is_some());
+        assert_eq!(cfg.churn.remaining(), 2);
+        let t0 = cfg.linkplan_degrade_at().unwrap();
+        assert!(t0 > 0.0);
+        let mut churn = cfg.churn.clone();
+        let evs = churn.pop_due(f64::INFINITY);
+        assert_eq!(evs, vec![ChurnEvent::link_delay(0, 1, 0.05),
+                             ChurnEvent::link_delay(0, 1, 0.15)]);
     }
 
     /// Modeled compute time pushes batches later on the virtual clock

@@ -324,6 +324,7 @@ fn mesh_exchange_at_most_half_of_hub_and_replumbs_on_reconfig() {
             l: 5,
             live: survivors.iter().map(|&x| x as u32).collect(),
             sizes: vec![],
+            relays: vec![],
         })
         .unwrap();
     }

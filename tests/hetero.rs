@@ -21,8 +21,13 @@
 
 use std::time::{Duration, Instant};
 
-use prism::profile::{FleetProfile, ProfileSample, MIN_BLOCKS};
-use prism::sim::{run_soak, SoakCfg};
+use prism::net::message::Msg;
+use prism::net::{channel_edge, FaultCfg, FaultNet, Transport,
+                 TransportError};
+use prism::profile::{DeviceProfile, FleetProfile, ProfileSample,
+                     MIN_BLOCKS};
+use prism::runtime::Tensor;
+use prism::sim::{run_soak, ChurnSchedule, SoakCfg};
 use prism::util::rng::Rng;
 
 mod common;
@@ -100,6 +105,149 @@ fn throttle_triggers_exactly_one_bounded_epoch_bump() {
     assert_eq!(report.final_epoch, 2);
 }
 
+/// Pinned link-degradation scenario (ISSUE 7's tentpole): an
+/// equal-speed fleet with one directed mesh edge delay-ramped mid-run.
+/// The profiler must observe the crawl through arrival-timed exchange
+/// frames and answer with *exactly one* bounded re-plan whose relay
+/// table routes Segment-Means around the edge — drop-free and
+/// bit-identical across double runs.
+#[test]
+fn link_degradation_triggers_one_replan_that_relays_the_edge() {
+    let cfg = SoakCfg::linkplan(11);
+    let report = run_soak(&cfg).unwrap();
+    let again = run_soak(&cfg).unwrap();
+    assert_eq!(report, again, "linkplan soak not deterministic");
+
+    assert!(report.requests() >= 1000,
+            "only {} requests", report.requests());
+    assert_eq!(report.dropped(), 0, "dropped requests\n{report:?}");
+    assert_eq!(report.decode_aborted, 0);
+    // no kills in the schedule: a degraded *link* must never cost a
+    // device its membership
+    assert_eq!(report.final_p, cfg.p);
+    assert!(report.full_strength);
+
+    // exactly one re-plan, landing after the first delay step within a
+    // bounded number of heartbeat intervals (the two-step ramp must
+    // fold into one transition — hysteresis, not ping-pong)
+    assert_eq!(report.replans.len(), 1,
+               "one bounded re-plan wanted: {:?}", report.replans);
+    assert_eq!(report.final_epoch, 1);
+    let degrade_at = cfg.linkplan_degrade_at().unwrap();
+    let (t, _) = report.replans[0];
+    assert!(t >= degrade_at,
+            "re-planned at {t:.3}s before the {degrade_at:.3}s ramp");
+    let beat = cfg.heartbeat_every.as_secs_f64();
+    assert!(t - degrade_at <= 30.0 * beat,
+            "crawl absorbed after {:.3}s (> 30 heartbeats)",
+            t - degrade_at);
+
+    // and the re-plan shipped a relay around the degraded 0 -> 1 edge
+    // through a healthy peer
+    assert_eq!(report.relay_plans.len(), 1,
+               "one relay table wanted: {:?}", report.relay_plans);
+    let relays = &report.relay_plans[0].1;
+    let &(_, _, via) = relays.iter()
+        .find(|&&(f, to, _)| (f, to) == (0, 1))
+        .unwrap_or_else(|| panic!("degraded edge not routed: {relays:?}"));
+    assert!(via != 0 && via != 1 && (via as usize) < cfg.p,
+            "relay must go through a healthy third worker, got {via}");
+}
+
+/// Satellite regression (profiler blind spot #1): the decode path used
+/// to never feed the profiler, so a decode-only workload could starve
+/// on a straggler forever without a re-plan. With `decode_profile` on,
+/// the scheduler's modeled per-token compute flows into the fleet
+/// profile and the adaptive trigger fires at a decode tick — no eval
+/// batch ever runs.
+#[test]
+fn decode_only_workload_reaches_should_replan() {
+    let mut cfg = SoakCfg::hetero(17);
+    cfg.churn = ChurnSchedule::none();
+    cfg.workload.decode_fraction = 1.0;
+    cfg.decode_profile = true;
+    let report = run_soak(&cfg).unwrap();
+    let again = run_soak(&cfg).unwrap();
+    assert_eq!(report, again, "decode-only soak not deterministic");
+
+    // the premise: not a single eval request reached the mesh
+    assert_eq!(report.eval_requests, 0);
+    assert_eq!(report.eval_batches, 0);
+    assert!(report.decode_streams >= 1000);
+    assert_eq!(report.dropped(), 0, "dropped streams\n{report:?}");
+
+    // the modeled per-token costs are exact constants, so the 4x
+    // boot-time straggler is adapted to exactly once and the fleet
+    // then sits inside the deadband
+    assert_eq!(report.replans.len(), 1,
+               "decode-only workload must reach should_replan: {:?}",
+               report.replans);
+    assert_eq!(report.final_epoch, 1);
+}
+
+/// Satellite regression (profiler blind spot #2): `record_edge` used to
+/// time the *send call* — a memcpy into a buffered transport — so every
+/// link looked identical. Timed at the receiver through arrival, a
+/// `FaultNet`-delayed edge must yield measurably lower `edge_bw` than a
+/// healthy one over the real-socket (wall-clock channel) path.
+#[test]
+fn delayed_fault_edge_yields_lower_measured_edge_bw() {
+    let frame = || Msg::Exchange {
+        epoch: 0,
+        layer: 0,
+        from: 0,
+        data: Tensor::from_f32(vec![4096], vec![0.5; 4096]).unwrap(),
+    };
+    let bytes = match frame() {
+        Msg::Exchange { data, .. } => data.byte_len(),
+        _ => unreachable!(),
+    };
+
+    // healthy edge: the frame arrives as fast as the channel carries it
+    let (a, b) = channel_edge(0, 1);
+    let mut ha = FaultNet::new(a, 7, FaultCfg::none());
+    let mut hb = FaultNet::new(b, 8, FaultCfg::none());
+    let t0 = Instant::now();
+    ha.send(1, frame()).unwrap();
+    let env = hb.recv_deadline(Duration::from_secs(5)).unwrap();
+    let dt_healthy = t0.elapsed().as_secs_f64().max(1e-9);
+    assert!(matches!(env.msg, Msg::Exchange { .. }));
+
+    // delayed edge: the frame is held by the sender's fault schedule
+    // until a later transport op, while the receiver burns a real
+    // timeout waiting — arrival-timed bandwidth collapses
+    let (a, b) = channel_edge(0, 1);
+    let mut da = FaultNet::new(a, 9, FaultCfg::delays(1.0, 1));
+    let mut db = FaultNet::new(b, 10, FaultCfg::none());
+    let t0 = Instant::now();
+    da.send(1, frame()).unwrap();
+    match db.recv_deadline(Duration::from_millis(60)) {
+        Err(TransportError::Timeout { .. }) => {}
+        other => panic!("held frame must not arrive yet: {other:?}"),
+    }
+    da.send(1, Msg::Shutdown).unwrap(); // later op releases the hold
+    let env = db.recv_deadline(Duration::from_secs(5)).unwrap();
+    let dt_delayed = t0.elapsed().as_secs_f64();
+    assert!(matches!(env.msg, Msg::Exchange { .. }),
+            "expected the released exchange frame first");
+    assert!(dt_delayed >= 0.060, "timeout not actually burned");
+
+    let sampled_bw = |secs: f64| {
+        let mut p = DeviceProfile::new(0.3);
+        p.record_block(1.0, 1.0);
+        p.record_block(1.0, 1.0);
+        p.record_edge(0, bytes, secs);
+        let edges = p.sample().unwrap().edges;
+        assert_eq!(edges.len(), 1);
+        edges[0].1
+    };
+    let bw_healthy = sampled_bw(dt_healthy);
+    let bw_delayed = sampled_bw(dt_delayed);
+    assert!(bw_delayed < bw_healthy / 5.0,
+            "delayed edge must look slow: healthy {bw_healthy:.0} B/s \
+             vs delayed {bw_delayed:.0} B/s");
+}
+
 /// Property: a stationary fleet never oscillates. Seeded speed vectors
 /// with per-observation jitter well inside the deadband: after the
 /// first re-plan is applied, `should_replan` must never fire again,
@@ -138,7 +286,7 @@ fn stationary_fleet_never_oscillates_inside_the_deadband() {
             panic!("case {case}: the straggler must trigger the \
                     first re-plan")
         });
-        fleet.mark_applied(&first);
+        fleet.mark_applied(&live, &first);
         // stationary thereafter: no amount of jittered re-observation
         // may leave the deadband
         for round in 0..200u64 {

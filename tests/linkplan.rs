@@ -1,0 +1,84 @@
+//! Bandwidth-aware exchange planning suite (ISSUE 7): the
+//! `SoakCfg::linkplan` preset delay-ramps one directed mesh edge under
+//! the virtual clock — a congested last-hop radio, not a slow device —
+//! and the link-aware planner must answer with exactly one bounded
+//! re-plan that shrinks the penalized endpoints' slices and relays the
+//! degraded edge through a healthy peer.
+//!
+//! Acceptance pinned here, per seed:
+//! * >= 1000 mixed requests complete with zero drops on the degraded
+//!   fleet, and two runs of the same seed are bit-identical;
+//! * exactly one re-plan fires, and it ships a relay around the
+//!   delay-ramped `0 -> 1` edge;
+//! * the relay starves the degraded edge: the relayed run moves fewer
+//!   bytes over `0 -> 1` than the link-blind direct baseline;
+//! * the relayed plan's virtual eval p99 strictly beats the direct
+//!   plan's on the same seed.
+//!
+//! `CHAOS_SEEDS` (comma-separated) overrides the built-in seed matrix,
+//! which is how each CI `linkplan` leg pins a single seed.
+
+use std::time::{Duration, Instant};
+
+use prism::sim::{run_soak, SoakCfg};
+
+mod common;
+use common::seeds;
+
+#[test]
+fn relayed_plan_beats_the_direct_plan_on_a_degraded_mesh() {
+    let t0 = Instant::now();
+    for &seed in &seeds() {
+        let cfg = SoakCfg::linkplan(seed);
+        let relayed = run_soak(&cfg).unwrap();
+        assert!(relayed.requests() >= 1000,
+                "seed {seed}: only {} requests", relayed.requests());
+        assert_eq!(relayed.dropped(), 0,
+                   "seed {seed}: dropped requests\n{relayed:?}");
+        assert_eq!(relayed.decode_aborted, 0,
+                   "seed {seed}: decode streams aborted");
+        // link churn only: the fleet keeps every device
+        assert_eq!(relayed.final_p, cfg.p, "seed {seed}");
+        assert!(relayed.full_strength, "seed {seed}");
+
+        // exactly one bounded re-plan, carrying a route around 0 -> 1
+        assert_eq!(relayed.replans.len(), 1,
+                   "seed {seed}: one re-plan wanted: {:?}",
+                   relayed.replans);
+        assert_eq!(relayed.final_epoch, 1, "seed {seed}");
+        assert_eq!(relayed.relay_plans.len(), 1,
+                   "seed {seed}: one relay table wanted: {:?}",
+                   relayed.relay_plans);
+        assert!(relayed.relay_plans[0].1.iter()
+                    .any(|&(f, to, _)| (f, to) == (0, 1)),
+                "seed {seed}: degraded edge not routed: {:?}",
+                relayed.relay_plans);
+
+        // bit-identical double run, relay trail and byte matrix included
+        let again = run_soak(&cfg).unwrap();
+        assert_eq!(relayed, again, "seed {seed}: not deterministic");
+
+        // the baseline: same degraded mesh, planner blind to links —
+        // every exchange keeps paying the delay ramp directly
+        let mut direct_cfg = cfg.clone();
+        direct_cfg.link_factor = None;
+        direct_cfg.replan_deadband = None;
+        let direct = run_soak(&direct_cfg).unwrap();
+        assert_eq!(direct.dropped(), 0, "seed {seed}");
+        assert!(direct.replans.is_empty(), "seed {seed}");
+        assert!(direct.relay_plans.is_empty(), "seed {seed}");
+
+        // the relay starves the degraded edge of exchange bytes
+        assert!(relayed.edge_bytes[0][1] < direct.edge_bytes[0][1],
+                "seed {seed}: relayed run still pushed {} B over the \
+                 degraded edge (direct run: {} B)",
+                relayed.edge_bytes[0][1], direct.edge_bytes[0][1]);
+        // and wins on tail latency
+        assert!(relayed.eval_latency.p99() < direct.eval_latency.p99(),
+                "seed {seed}: relayed p99 {}s is not below the direct \
+                 plan's {}s",
+                relayed.eval_latency.p99(), direct.eval_latency.p99());
+    }
+    assert!(t0.elapsed() < Duration::from_secs(360),
+            "linkplan suite must stay fast: {:?}", t0.elapsed());
+}
