@@ -11,7 +11,8 @@ CHAOS_SEEDS ?= 11,23,37,41,53,67,79,97,101,113
 
 .PHONY: all build test verify chaos elastic soak soak-hetero \
         soak-linkplan chaos-mesh mesh-smoke bench-decode bench-mesh \
-        bench-soak bench-hetero bench-linkplan artifacts lint fmt clean
+        bench-soak bench-hetero bench-linkplan bench-hotpath ratchet \
+        ratchet-update artifacts lint fmt clean
 
 all: build
 
@@ -90,6 +91,22 @@ bench-hetero:
 # on the degraded mesh at a fixed seed; writes BENCH_linkplan.json.
 bench-linkplan:
 	$(CARGO) bench --bench linkplan_soak
+
+# Hot-path micro-benches (L3 section is artifact-free): oracle-vs-new
+# kernel/codec speedups + decode wire bytes; writes BENCH_hotpath.json.
+bench-hotpath:
+	$(CARGO) bench --bench hotpath
+
+# Perf ratchet: run the gated benches, then compare BENCH_*.json against
+# the committed bench_baseline.json (fails on any regression — same
+# check as the CI bench-gate job).
+ratchet: bench-decode bench-hotpath
+	$(PYTHON) scripts/bench_gate
+
+# Intentional perf change? Re-run the gated benches and rewrite the
+# baseline values in place (tolerances kept); commit the result.
+ratchet-update: bench-decode bench-hotpath
+	$(PYTHON) scripts/bench_gate --update
 
 # Layer-1/2 AOT lowering: produces artifacts/ (HLO text, weights,
 # datasets, fixtures, manifest.json). Requires the JAX/Pallas toolchain.

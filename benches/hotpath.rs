@@ -1,61 +1,190 @@
 //! §Perf micro-benchmarks for the request hot path, per layer:
 //!
 //!   L3  — plan/bias construction, Segment Means (rust), tensor
-//!         slice/concat, message codec, batcher-side row stacking,
-//!         end-to-end block dispatch overhead (engine.run minus XLA time)
+//!         slice/concat, message codec, row quantization, decode wire
+//!         bytes per token. Artifact-free: this section runs on any
+//!         checkout and writes `BENCH_hotpath.json`, the record
+//!         `scripts/bench_gate` ratchets against `bench_baseline.json`.
 //!   L2  — AOT block executables (xla flavor): per-block latency across
-//!         strategies/batch sizes
+//!         strategies/batch sizes (needs `make artifacts`)
 //!   L1  — pallas-flavor block vs xla-flavor block (interpret-mode cost
 //!         on CPU; on TPU the pallas kernel is the optimized path)
 //!
+//! The ratcheted metrics are *ratios* (old in-tree oracle vs new kernel,
+//! timed back-to-back in the same process) plus deterministic byte
+//! counts, so the gate is machine-independent: absolute nanoseconds are
+//! recorded for trend plots but never gated.
+//!
 //! Results feed EXPERIMENTS.md §Perf.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
 
 use anyhow::Result;
 
 use prism::bench_util::{bench, require_artifacts};
 use prism::coordinator::plan::plans;
-use prism::coordinator::segmeans::segment_means;
+use prism::coordinator::segmeans::{segment_means, segment_means_reference};
+use prism::decode::{DecodeSession, RefCfg, RefGpt};
 use prism::net::message::Msg;
-use prism::runtime::{Engine, Tensor, WeightSet};
+use prism::runtime::{Engine, Tensor, TensorData, WeightSet};
+use prism::util::json::Json;
+use prism::util::quant::{self, WireFmt};
 use prism::util::rng::Rng;
 
-fn main() -> Result<()> {
-    let Some(m) = require_artifacts() else { return Ok(()) };
-    let mut rng = Rng::new(1);
-
-    println!("== L3 substrate micro-benches ==");
-    {
-        let st = bench(10, 200, || {
-            let pls = plans(65, 3, 5, true).unwrap();
-            for pl in &pls {
-                std::hint::black_box(pl.bias().unwrap());
-            }
-        });
-        println!("plan+bias build (N=65,P=3,L=5,causal): {}", st.per_op());
-
-        let x = Tensor::from_f32(vec![16, 33, 128],
-                                 rng.normal_vec(16 * 33 * 128, 1.0))?;
-        let st = bench(10, 200, || {
-            std::hint::black_box(segment_means(&x, 6).unwrap());
-        });
-        println!("segment_means (16x33x128 -> L=6):      {}", st.per_op());
-
-        let st = bench(10, 200, || {
-            let a = x.slice1(0, 16).unwrap();
-            let b = x.slice1(16, 33).unwrap();
-            std::hint::black_box(Tensor::concat1(&[&a, &b]).unwrap());
-        });
-        println!("slice1 + concat1 (16x33x128):          {}", st.per_op());
-
-        let z = Tensor::from_f32(vec![16, 6, 128],
-                                 rng.normal_vec(16 * 6 * 128, 1.0))?;
-        let msg = Msg::Exchange { epoch: 0, layer: 0, from: 0, data: z };
-        let st = bench(10, 500, || {
-            let buf = msg.encode();
-            std::hint::black_box(Msg::decode(&buf).unwrap());
-        });
-        println!("exchange codec roundtrip (48 KiB):     {}", st.per_op());
+/// The pre-zero-copy Exchange encoder — a fresh allocation per frame
+/// and a bounds-checked `extend` per element — kept as the ratchet's
+/// speedup denominator. Byte-identity against `Msg::encode_into` is
+/// asserted once below before any timing.
+fn encode_exchange_reference(msg: &Msg) -> Vec<u8> {
+    let Msg::Exchange { epoch, layer, from, data } = msg else {
+        panic!("reference encoder only covers Msg::Exchange");
+    };
+    let mut out = Vec::new();
+    out.push(0u8);
+    out.extend_from_slice(&epoch.to_le_bytes());
+    out.extend_from_slice(&layer.to_le_bytes());
+    out.extend_from_slice(&from.to_le_bytes());
+    out.push(match data.data {
+        TensorData::F32(_) => 0u8,
+        TensorData::I32(_) => 1u8,
+    });
+    out.push(data.shape.len() as u8);
+    for &d in &data.shape {
+        out.extend_from_slice(&(d as u32).to_le_bytes());
     }
+    match &data.data {
+        TensorData::F32(v) => {
+            for x in v {
+                out.extend_from_slice(&x.to_le_bytes());
+            }
+        }
+        TensorData::I32(v) => {
+            for x in v {
+                out.extend_from_slice(&x.to_le_bytes());
+            }
+        }
+    }
+    out
+}
+
+fn main() -> Result<()> {
+    let mut rng = Rng::new(1);
+    let mut obj: BTreeMap<String, Json> = BTreeMap::new();
+    obj.insert("bench".into(), Json::Str("hotpath".into()));
+
+    println!("== L3 substrate micro-benches (artifact-free) ==");
+
+    let st = bench(10, 200, || {
+        let pls = plans(65, 3, 5, true).unwrap();
+        for pl in &pls {
+            std::hint::black_box(pl.bias().unwrap());
+        }
+    });
+    println!("plan+bias build (N=65,P=3,L=5,causal): {}", st.per_op());
+    obj.insert("plan_bias_ns".into(), Json::Num(st.median_secs * 1e9));
+
+    // -- segment means: sequential oracle vs chunked kernel ------------
+    let x = Tensor::from_f32(vec![16, 33, 128],
+                             rng.normal_vec(16 * 33 * 128, 1.0))?;
+    assert_eq!(segment_means_reference(&x, 6)?.f32s()?,
+               segment_means(&x, 6)?.f32s()?,
+               "chunked segment_means diverged from the oracle");
+    let ref_st = bench(10, 200, || {
+        std::hint::black_box(segment_means_reference(&x, 6).unwrap());
+    });
+    let new_st = bench(10, 200, || {
+        std::hint::black_box(segment_means(&x, 6).unwrap());
+    });
+    let sm_speedup = ref_st.median_secs / new_st.median_secs;
+    println!("segment_means (16x33x128 -> L=6):      ref {} | chunked {} \
+              | {sm_speedup:.2}x", ref_st.per_op(), new_st.per_op());
+    obj.insert("segment_means_ref_ns".into(),
+               Json::Num(ref_st.median_secs * 1e9));
+    obj.insert("segment_means_ns".into(),
+               Json::Num(new_st.median_secs * 1e9));
+    obj.insert("segment_means_speedup".into(), Json::Num(sm_speedup));
+
+    let st = bench(10, 200, || {
+        let a = x.slice1(0, 16).unwrap();
+        let b = x.slice1(16, 33).unwrap();
+        std::hint::black_box(Tensor::concat1(&[&a, &b]).unwrap());
+    });
+    println!("slice1 + concat1 (16x33x128):          {}", st.per_op());
+    obj.insert("slice_concat_ns".into(), Json::Num(st.median_secs * 1e9));
+
+    // -- exchange codec roundtrip: per-element alloc vs zero-copy ------
+    let z = Tensor::from_f32(vec![16, 6, 128],
+                             rng.normal_vec(16 * 6 * 128, 1.0))?;
+    let msg = Msg::Exchange { epoch: 0, layer: 0, from: 0, data: z };
+    let mut frame = Vec::new();
+    msg.encode_into(&mut frame);
+    assert_eq!(frame, encode_exchange_reference(&msg),
+               "encode_into diverged from the reference frame bytes");
+    let ref_st = bench(10, 500, || {
+        let buf = encode_exchange_reference(&msg);
+        std::hint::black_box(Msg::decode(&buf).unwrap());
+    });
+    let mut buf = Vec::new();
+    let new_st = bench(10, 500, || {
+        msg.encode_into(&mut buf);
+        std::hint::black_box(Msg::decode(&buf).unwrap());
+    });
+    let codec_speedup = ref_st.median_secs / new_st.median_secs;
+    println!("exchange codec roundtrip (48 KiB):     ref {} | zero-copy \
+              {} | {codec_speedup:.2}x", ref_st.per_op(), new_st.per_op());
+    obj.insert("codec_roundtrip_ref_ns".into(),
+               Json::Num(ref_st.median_secs * 1e9));
+    obj.insert("codec_roundtrip_ns".into(),
+               Json::Num(new_st.median_secs * 1e9));
+    obj.insert("codec_roundtrip_speedup".into(), Json::Num(codec_speedup));
+
+    // -- i8 row quantization: sequential oracle vs chunked absmax ------
+    let q = Tensor::from_f32(vec![64, 256], rng.normal_vec(64 * 256, 1.0))?;
+    assert_eq!(quant::encode_reference(&q, WireFmt::I8)?,
+               quant::encode(&q, WireFmt::I8)?,
+               "chunked i8 quant diverged from the oracle");
+    let ref_st = bench(10, 300, || {
+        std::hint::black_box(
+            quant::encode_reference(&q, WireFmt::I8).unwrap());
+    });
+    let mut qbuf = Vec::new();
+    let new_st = bench(10, 300, || {
+        quant::encode_into(&q, WireFmt::I8, &mut qbuf).unwrap();
+        std::hint::black_box(&qbuf);
+    });
+    let quant_speedup = ref_st.median_secs / new_st.median_secs;
+    println!("i8 row quant (64x256):                 ref {} | chunked {} \
+              | {quant_speedup:.2}x", ref_st.per_op(), new_st.per_op());
+    obj.insert("i8_quant_ref_ns".into(),
+               Json::Num(ref_st.median_secs * 1e9));
+    obj.insert("i8_quant_ns".into(), Json::Num(new_st.median_secs * 1e9));
+    obj.insert("i8_quant_speedup".into(), Json::Num(quant_speedup));
+
+    // -- decode wire bytes per absorbed token (deterministic) ----------
+    // P=2, layers=4, d=64, f32: 1024 coalesced delta bytes + 4 sync
+    // bytes per token = exactly 1028.0, gated at zero tolerance so any
+    // accidental framing growth fails CI.
+    let cfg = RefCfg { vocab: 56, n: 128, d: 64, heads: 4, layers: 4,
+                       ffn: 128 };
+    let model = Arc::new(RefGpt::tiny(31, cfg)?);
+    let mut sess = DecodeSession::new(model, 2, 4, WireFmt::F32)?;
+    let prompt: Vec<i32> = (0..8).map(|i| (i % 50) + 1).collect();
+    sess.prefill(&prompt)?;
+    for _ in 0..24 {
+        sess.generate_next()?;
+    }
+    let bpt = sess.stats().bytes_per_token();
+    println!("decode wire bytes/token (P=2,L=4,f32): {bpt:.1}");
+    obj.insert("bytes_per_token".into(), Json::Num(bpt));
+
+    // machine-readable record for the CI perf ratchet; written before
+    // the artifact gate so `scripts/bench_gate` works on any checkout.
+    let path = "BENCH_hotpath.json";
+    std::fs::write(path, Json::Obj(obj).dump())?;
+    println!("json: {path}");
+
+    let Some(m) = require_artifacts() else { return Ok(()) };
 
     println!("\n== L2 block executables (xla flavor, steady state) ==");
     let mut engine = Engine::new(m.clone())?;

@@ -7,9 +7,69 @@ use anyhow::Result;
 use super::plan::segment_counts;
 use crate::runtime::Tensor;
 
+/// 8-wide column tile for the chunked accumulators: wide enough to
+/// fill a 256-bit vector unit, small enough to stay in registers.
+const TILE: usize = 8;
+
+/// Sum `c` unit-stride rows of width `d` into `dst`, scaled by `inv`.
+/// Columns are tiled `TILE` wide and each tile accumulates every row in
+/// registers before one scaled store, so a segment of `c` rows makes a
+/// single pass over memory instead of the oracle's `c` read-modify-
+/// write passes over `dst`. Per element the additions run in the same
+/// ascending-row order as the oracle, followed by the same single
+/// multiply — bit-identical output (property-pinned below).
+fn sum_rows_scaled(src: &[f32], c: usize, d: usize, inv: f32,
+                   dst: &mut [f32]) {
+    let tiles = d / TILE;
+    for t in 0..tiles {
+        let j0 = t * TILE;
+        let mut acc = [0.0f32; TILE];
+        for r in 0..c {
+            let s = &src[r * d + j0..r * d + j0 + TILE];
+            for (a, v) in acc.iter_mut().zip(s) {
+                *a += v;
+            }
+        }
+        for (o, a) in dst[j0..j0 + TILE].iter_mut().zip(&acc) {
+            *o = a * inv;
+        }
+    }
+    for j in tiles * TILE..d {
+        let mut acc = 0.0f32;
+        for r in 0..c {
+            acc += src[r * d + j];
+        }
+        dst[j] = acc * inv;
+    }
+}
+
 /// Column-wise means of L contiguous segments: (B, N_p, D) -> (B, L, D).
-/// Matches Algorithm 2 and the jnp oracle (sequential f32 accumulation).
+/// Matches Algorithm 2 and the jnp oracle (sequential f32 accumulation);
+/// the chunked inner loops are bit-identical to
+/// [`segment_means_reference`], the pre-chunking scalar kernel.
 pub fn segment_means(x: &Tensor, l: usize) -> Result<Tensor> {
+    let (b, n_p, d) = (x.shape[0], x.shape[1], x.shape[2]);
+    let counts = segment_counts(n_p, l)?;
+    let src = x.f32s()?;
+    let mut out = vec![0.0f32; b * l * d];
+    for bi in 0..b {
+        let base = bi * n_p * d;
+        let mut row = 0usize;
+        for (si, &c) in counts.iter().enumerate() {
+            let dst = &mut out[bi * l * d + si * d..bi * l * d + (si + 1) * d];
+            let seg = &src[base + row * d..base + (row + c) * d];
+            sum_rows_scaled(seg, c, d, 1.0 / c as f32, dst);
+            row += c;
+        }
+    }
+    Tensor::from_f32(vec![b, l, d], out)
+}
+
+/// The pre-chunking sequential kernel, kept verbatim as the
+/// bit-identity oracle for [`segment_means`] (property-pinned below)
+/// and as the perf ratchet's speedup denominator in
+/// `benches/hotpath.rs`.
+pub fn segment_means_reference(x: &Tensor, l: usize) -> Result<Tensor> {
     let (b, n_p, d) = (x.shape[0], x.shape[1], x.shape[2]);
     let counts = segment_counts(n_p, l)?;
     let src = x.f32s()?;
@@ -101,6 +161,38 @@ mod tests {
             let total: f32 = data.iter().sum();
             assert!((weighted - total).abs() < 1e-3,
                     "{weighted} vs {total}");
+        });
+    }
+
+    /// The chunked kernel must be bit-identical to the sequential
+    /// oracle across odd shapes: N_p not divisible by L (remainder
+    /// segments), D off the 8-wide tile boundary, one-row segments
+    /// (L = N_p), multi-batch, and special values (signed zeros,
+    /// subnormals, huge magnitudes).
+    #[test]
+    fn chunked_kernel_bit_identical_to_oracle() {
+        const SPECIALS: [f32; 7] = [0.0, -0.0, f32::MIN_POSITIVE / 2.0,
+                                    1e30, -1e30, 1e-30, 3.4e38];
+        property("segmeans-chunked-oracle", 200, |rng: &mut Rng| {
+            let b = rng.range(1, 4);
+            let n_p = rng.range(1, 40);
+            let l = rng.range(1, n_p + 1);
+            let d = rng.range(1, 28);
+            let mut data = rng.normal_vec(b * n_p * d, 5.0);
+            for _ in 0..rng.below(8) {
+                let i = rng.below(data.len());
+                data[i] = SPECIALS[rng.below(SPECIALS.len())];
+            }
+            let x = Tensor::from_f32(vec![b, n_p, d], data).unwrap();
+            let fast = segment_means(&x, l).unwrap();
+            let oracle = segment_means_reference(&x, l).unwrap();
+            let (f, o) = (fast.f32s().unwrap(), oracle.f32s().unwrap());
+            assert_eq!(f.len(), o.len());
+            for (i, (a, b)) in f.iter().zip(o).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(),
+                           "elem {i}: {a} vs {b} (b={}, n_p={n_p}, \
+                            l={l}, d={d})", x.shape[0]);
+            }
         });
     }
 }

@@ -79,9 +79,13 @@ impl SegMeansState {
         None
     }
 
-    /// Append the next local row (strictly in position order) and return
-    /// the one-segment delta to broadcast.
-    pub fn append(&mut self, row: &[f32]) -> Result<SegDeltaRow> {
+    /// Append the next local row (strictly in position order) without
+    /// allocating: the hot-path variant. Returns `(segment, filled)`;
+    /// the fresh mean is read in place via
+    /// [`mean_row`](Self::mean_row), so the per-token loop borrows the
+    /// row instead of rebuilding a `Tensor` per step.
+    pub fn append_in_place(&mut self, row: &[f32])
+                           -> Result<(usize, usize)> {
         if row.len() != self.d {
             bail!("row has {} elements, expected {}", row.len(), self.d);
         }
@@ -94,16 +98,27 @@ impl SegMeansState {
         }
         // identical op order to segment_means: sum rows, then scale.
         let inv = 1.0 / self.counts[seg] as f32;
-        for i in 0..self.d {
-            self.means[base + i] = self.sums[base + i] * inv;
+        let (sums, means) = (&self.sums[base..base + self.d],
+                             &mut self.means[base..base + self.d]);
+        for (m, s) in means.iter_mut().zip(sums) {
+            *m = s * inv;
         }
         self.filled[seg] += 1;
         self.appended += 1;
+        Ok((seg, self.filled[seg]))
+    }
+
+    /// Append the next local row and return the one-segment delta to
+    /// broadcast as an owned `SegDeltaRow` (allocates a fresh mean
+    /// tensor; the per-token path uses
+    /// [`append_in_place`](Self::append_in_place) + `mean_row`).
+    pub fn append(&mut self, row: &[f32]) -> Result<SegDeltaRow> {
+        let (seg, filled) = self.append_in_place(row)?;
         Ok(SegDeltaRow {
             segment: seg,
-            mean: Tensor::from_f32(
-                vec![self.d], self.means[base..base + self.d].to_vec())?,
-            filled: self.filled[seg],
+            mean: Tensor::from_f32(vec![self.d],
+                                   self.mean_row(seg).to_vec())?,
+            filled,
         })
     }
 

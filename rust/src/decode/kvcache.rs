@@ -28,8 +28,14 @@ impl KvCache {
             capacity,
             layers: (0..layers)
                 .map(|_| {
-                    (Tensor::zeros_f32(vec![0, heads, head_dim]),
-                     Tensor::zeros_f32(vec![0, heads, head_dim]))
+                    // pre-reserve the full partition width so per-token
+                    // appends never reallocate (infallible: the tensors
+                    // are freshly built f32 with a non-empty shape).
+                    let mut k = Tensor::zeros_f32(vec![0, heads, head_dim]);
+                    let mut v = Tensor::zeros_f32(vec![0, heads, head_dim]);
+                    let _ = k.reserve_rows(capacity);
+                    let _ = v.reserve_rows(capacity);
+                    (k, v)
                 })
                 .collect(),
         }

@@ -65,7 +65,32 @@ pub struct RefGpt {
     w_head: Vec<f32>,
 }
 
-fn layer_norm(x: &[f32], g: &[f32], b: &[f32]) -> Vec<f32> {
+/// Reusable scratch for the `_into` row kernels below. One instance
+/// lives for a whole decode session: every buffer is `clear()`ed and
+/// refilled within its retained capacity, so after a few warm-up rows
+/// the per-token forward path performs no heap allocation at all
+/// (asserted by `tests/hotpath_alloc.rs`). The allocating row methods
+/// are thin wrappers over the `_into` variants, so both paths share one
+/// arithmetic implementation and stay bit-identical by construction.
+#[derive(Default)]
+pub struct RowScratch {
+    /// LayerNorm staging row.
+    h: Vec<f32>,
+    attn: Vec<f32>,
+    scores: Vec<f32>,
+    wts: Vec<f32>,
+    proj: Vec<f32>,
+    ff: Vec<f32>,
+    f2: Vec<f32>,
+}
+
+impl RowScratch {
+    pub fn new() -> RowScratch {
+        RowScratch::default()
+    }
+}
+
+fn layer_norm_into(x: &[f32], g: &[f32], b: &[f32], out: &mut Vec<f32>) {
     let n = x.len() as f32;
     let mut mean = 0.0f32;
     for v in x {
@@ -78,16 +103,17 @@ fn layer_norm(x: &[f32], g: &[f32], b: &[f32]) -> Vec<f32> {
     }
     var /= n;
     let inv = 1.0 / (var + 1e-5).sqrt();
-    x.iter()
+    out.clear();
+    out.extend(x.iter()
         .zip(g.iter().zip(b))
-        .map(|(v, (gg, bb))| (v - mean) * inv * gg + bb)
-        .collect()
+        .map(|(v, (gg, bb))| (v - mean) * inv * gg + bb));
 }
 
 /// w is (out_dim, in) row-major; sequential accumulation per output.
-fn matvec(w: &[f32], x: &[f32], out_dim: usize) -> Vec<f32> {
+fn matvec_into(w: &[f32], x: &[f32], out_dim: usize, out: &mut Vec<f32>) {
     let d = x.len();
-    let mut out = Vec::with_capacity(out_dim);
+    out.clear();
+    out.reserve(out_dim);
     for o in 0..out_dim {
         let row = &w[o * d..(o + 1) * d];
         let mut acc = 0.0f32;
@@ -96,7 +122,6 @@ fn matvec(w: &[f32], x: &[f32], out_dim: usize) -> Vec<f32> {
         }
         out.push(acc);
     }
-    out
 }
 
 fn gelu(x: f32) -> f32 {
@@ -145,32 +170,61 @@ impl RefGpt {
         Ok(RefGpt { cfg, tok_emb, pos_emb, blocks, lnf_g, lnf_b, w_head })
     }
 
-    /// Token + position embedding for one row.
-    pub fn embed_row(&self, token: i32, pos: usize) -> Result<Vec<f32>> {
+    /// Token + position embedding for one row, into a reused buffer.
+    pub fn embed_row_into(&self, token: i32, pos: usize,
+                          out: &mut Vec<f32>) -> Result<()> {
         let t = token as usize;
         if token < 0 || t >= self.cfg.vocab || pos >= self.cfg.n {
             bail!("embed out of range: token {token} pos {pos} \
                    (vocab {}, n {})", self.cfg.vocab, self.cfg.n);
         }
         let d = self.cfg.d;
-        Ok(self.tok_emb[t * d..(t + 1) * d]
+        out.clear();
+        out.extend(self.tok_emb[t * d..(t + 1) * d]
             .iter()
             .zip(&self.pos_emb[pos * d..(pos + 1) * d])
-            .map(|(a, b)| a + b)
-            .collect())
+            .map(|(a, b)| a + b));
+        Ok(())
+    }
+
+    /// Token + position embedding for one row.
+    pub fn embed_row(&self, token: i32, pos: usize) -> Result<Vec<f32>> {
+        let mut out = Vec::new();
+        self.embed_row_into(token, pos, &mut out)?;
+        Ok(out)
+    }
+
+    /// This layer's K/V projection of one (local or context) row, into
+    /// reused buffers.
+    pub fn kv_row_into(&self, layer: usize, x: &[f32],
+                       tmp: &mut RowScratch, k: &mut Vec<f32>,
+                       v: &mut Vec<f32>) {
+        let blk = &self.blocks[layer];
+        layer_norm_into(x, &blk.ln1_g, &blk.ln1_b, &mut tmp.h);
+        matvec_into(&blk.wk, &tmp.h, self.cfg.d, k);
+        matvec_into(&blk.wv, &tmp.h, self.cfg.d, v);
     }
 
     /// This layer's K/V projection of one (local or context) row.
     pub fn kv_row(&self, layer: usize, x: &[f32]) -> (Vec<f32>, Vec<f32>) {
+        let mut tmp = RowScratch::new();
+        let (mut k, mut v) = (Vec::new(), Vec::new());
+        self.kv_row_into(layer, x, &mut tmp, &mut k, &mut v);
+        (k, v)
+    }
+
+    pub fn q_row_into(&self, layer: usize, x: &[f32],
+                      tmp: &mut RowScratch, q: &mut Vec<f32>) {
         let blk = &self.blocks[layer];
-        let h = layer_norm(x, &blk.ln1_g, &blk.ln1_b);
-        (matvec(&blk.wk, &h, self.cfg.d), matvec(&blk.wv, &h, self.cfg.d))
+        layer_norm_into(x, &blk.ln1_g, &blk.ln1_b, &mut tmp.h);
+        matvec_into(&blk.wq, &tmp.h, self.cfg.d, q);
     }
 
     pub fn q_row(&self, layer: usize, x: &[f32]) -> Vec<f32> {
-        let blk = &self.blocks[layer];
-        let h = layer_norm(x, &blk.ln1_g, &blk.ln1_b);
-        matvec(&blk.wq, &h, self.cfg.d)
+        let mut tmp = RowScratch::new();
+        let mut q = Vec::new();
+        self.q_row_into(layer, x, &mut tmp, &mut q);
+        q
     }
 
     /// One row through block `layer`: masked multi-head attention over
@@ -178,23 +232,27 @@ impl RefGpt {
     /// row, attention output projection, residual, and the GELU MLP.
     /// Masked columns carry exactly zero softmax weight, so zero-filled
     /// (uncached) column rows reproduce the full recompute bit-for-bit.
-    pub fn attn_mlp_row(&self, layer: usize, x: &[f32], q: &[f32],
-                        keys: &[f32], vals: &[f32], bias: &[f32])
-                        -> Vec<f32> {
+    pub fn attn_mlp_row_into(&self, layer: usize, x: &[f32], q: &[f32],
+                             keys: &[f32], vals: &[f32], bias: &[f32],
+                             tmp: &mut RowScratch, y: &mut Vec<f32>) {
         let d = self.cfg.d;
         let heads = self.cfg.heads;
         let hd = d / heads;
         let n_hat = bias.len();
         let inv_sqrt = 1.0 / (hd as f32).sqrt();
         let blk = &self.blocks[layer];
-        let mut attn = vec![0.0f32; d];
-        let mut scores = vec![0.0f32; n_hat];
-        let mut wts = vec![0.0f32; n_hat];
-        for h in 0..heads {
-            let qh = &q[h * hd..(h + 1) * hd];
+        let RowScratch { h, attn, scores, wts, proj, ff, f2 } = tmp;
+        attn.clear();
+        attn.resize(d, 0.0);
+        scores.clear();
+        scores.resize(n_hat, 0.0);
+        wts.clear();
+        wts.resize(n_hat, 0.0);
+        for hi in 0..heads {
+            let qh = &q[hi * hd..(hi + 1) * hd];
             let mut maxs = f32::NEG_INFINITY;
             for (j, s) in scores.iter_mut().enumerate() {
-                let kh = &keys[j * d + h * hd..j * d + (h + 1) * hd];
+                let kh = &keys[j * d + hi * hd..j * d + (hi + 1) * hd];
                 let mut dot = 0.0f32;
                 for (a, b) in qh.iter().zip(kh) {
                     dot += a * b;
@@ -205,7 +263,7 @@ impl RefGpt {
                 }
             }
             let mut denom = 0.0f32;
-            for (w, s) in wts.iter_mut().zip(&scores) {
+            for (w, s) in wts.iter_mut().zip(scores.iter()) {
                 *w = (s - maxs).exp();
                 denom += *w;
             }
@@ -213,30 +271,50 @@ impl RefGpt {
             for e in 0..hd {
                 let mut acc = 0.0f32;
                 for (j, w) in wts.iter().enumerate() {
-                    acc += w * vals[j * d + h * hd + e];
+                    acc += w * vals[j * d + hi * hd + e];
                 }
-                attn[h * hd + e] = acc * inv_denom;
+                attn[hi * hd + e] = acc * inv_denom;
             }
         }
-        let proj = matvec(&blk.wo, &attn, d);
-        let mut y: Vec<f32> =
-            x.iter().zip(&proj).map(|(a, b)| a + b).collect();
-        let h2 = layer_norm(&y, &blk.ln2_g, &blk.ln2_b);
-        let mut ff = matvec(&blk.w1, &h2, self.cfg.ffn);
+        matvec_into(&blk.wo, attn, d, proj);
+        y.clear();
+        y.extend(x.iter().zip(proj.iter()).map(|(a, b)| a + b));
+        layer_norm_into(y, &blk.ln2_g, &blk.ln2_b, h);
+        matvec_into(&blk.w1, h, self.cfg.ffn, ff);
         for (f, b) in ff.iter_mut().zip(&blk.b1) {
             *f = gelu(*f + b);
         }
-        let f2 = matvec(&blk.w2, &ff, d);
+        matvec_into(&blk.w2, ff, d, f2);
         for i in 0..d {
             y[i] += f2[i] + blk.b2[i];
         }
+    }
+
+    /// One row through block `layer` (allocating wrapper over
+    /// [`attn_mlp_row_into`](Self::attn_mlp_row_into)).
+    pub fn attn_mlp_row(&self, layer: usize, x: &[f32], q: &[f32],
+                        keys: &[f32], vals: &[f32], bias: &[f32])
+                        -> Vec<f32> {
+        let mut tmp = RowScratch::new();
+        let mut y = Vec::new();
+        self.attn_mlp_row_into(layer, x, q, keys, vals, bias, &mut tmp,
+                               &mut y);
         y
+    }
+
+    /// LM head over one final hidden row, into a reused buffer.
+    pub fn logits_row_into(&self, x: &[f32], tmp: &mut RowScratch,
+                           out: &mut Vec<f32>) {
+        layer_norm_into(x, &self.lnf_g, &self.lnf_b, &mut tmp.h);
+        matvec_into(&self.w_head, &tmp.h, self.cfg.vocab, out);
     }
 
     /// LM head over one final hidden row.
     pub fn logits_row(&self, x: &[f32]) -> Vec<f32> {
-        let h = layer_norm(x, &self.lnf_g, &self.lnf_b);
-        matvec(&self.w_head, &h, self.cfg.vocab)
+        let mut tmp = RowScratch::new();
+        let mut out = Vec::new();
+        self.logits_row_into(x, &mut tmp, &mut out);
+        out
     }
 
     /// Full-recompute distributed forward over a padded window of
@@ -399,6 +477,44 @@ mod tests {
             .fold(0.0f32, f32::max);
         assert!(err > 0.0, "compression should perturb something");
         assert!(err < 50.0, "but not explode: {err}");
+    }
+
+    #[test]
+    fn into_variants_match_allocating_across_reuse() {
+        // The scratch buffers carry stale contents between calls; the
+        // `_into` kernels must still produce the allocating paths'
+        // outputs bit-for-bit.
+        let m = model();
+        let mut tmp = RowScratch::new();
+        let (mut out, mut q, mut k, mut v) =
+            (Vec::new(), Vec::new(), Vec::new(), Vec::new());
+        let mut y = vec![9.0f32; 31]; // stale junk, wrong length
+        for (token, pos) in [(3i32, 0usize), (7, 5), (1, 2)] {
+            m.embed_row_into(token, pos, &mut out).unwrap();
+            let x = m.embed_row(token, pos).unwrap();
+            assert_eq!(out, x);
+            for layer in 0..m.cfg.layers {
+                m.q_row_into(layer, &x, &mut tmp, &mut q);
+                assert_eq!(q, m.q_row(layer, &x));
+                m.kv_row_into(layer, &x, &mut tmp, &mut k, &mut v);
+                let (ek, ev) = m.kv_row(layer, &x);
+                assert_eq!(k, ek);
+                assert_eq!(v, ev);
+                let n_hat = 4;
+                let keys: Vec<f32> =
+                    (0..n_hat * 8).map(|i| (i as f32).sin()).collect();
+                let vals: Vec<f32> =
+                    (0..n_hat * 8).map(|i| (i as f32).cos()).collect();
+                let bias = vec![0.0f32; n_hat];
+                m.attn_mlp_row_into(layer, &x, &q, &keys, &vals, &bias,
+                                    &mut tmp, &mut y);
+                assert_eq!(
+                    y, m.attn_mlp_row(layer, &x, &q, &keys, &vals, &bias));
+            }
+            m.logits_row_into(&x, &mut tmp, &mut out);
+            assert_eq!(out, m.logits_row(&x));
+        }
+        assert!(m.embed_row_into(99, 0, &mut out).is_err());
     }
 
     #[test]

@@ -7,11 +7,20 @@
 //! the sequence frontier. Per absorbed token only the frontier device
 //! computes — embed row, per-layer Q/K/V of the new position, attention
 //! over cached local K/V plus mirrored peer context with the causal-mask
-//! bias sliced to the frontier row (`PartitionPlan::bias_row`) — and per
-//! layer broadcasts a single `Msg::SegDelta` row (the one segment whose
-//! mean changed, quantized at the session's wire format) instead of the
-//! full L x D Segment-Means block. Deltas go through the real message
-//! codec so the accounted bytes are the bytes a TCP mesh would carry.
+//! bias sliced to the frontier row (`PartitionPlan::bias_row`) — and
+//! broadcasts the per-layer changed-segment mean rows (quantized at the
+//! session's wire format) coalesced into **one** `Msg::SegDeltaBatch`
+//! frame per (device, token) instead of a frame per layer. The rows are
+//! produced by the exact codec row kernels (`quant::encode_row_into` /
+//! `decode_row_into` — pinned byte-identical to the `Msg` codec by the
+//! `net::message` tests), so the accounted bytes are the bytes a TCP
+//! mesh would carry.
+//!
+//! The per-token loop is allocation-free at steady state: hidden rows,
+//! Q/K/V rows, assembled attention columns, the coalesced delta payload
+//! and the logits row all live in a session-owned `DecodeScratch` arena
+//! that is cleared and refilled within retained capacity each absorb
+//! (asserted by `tests/hotpath_alloc.rs`).
 //!
 //! The window is fixed at `cfg.n` (right-padded; §IV-D makes padding
 //! safe), so partition/segment geometry never moves and the incremental
@@ -27,11 +36,11 @@ use anyhow::{bail, Context, Result};
 
 use crate::coordinator::plan::{plans, PartitionPlan};
 use crate::net::message::Msg;
-use crate::util::quant::{requantize, WireFmt};
+use crate::util::quant::{self, requantize, WireFmt};
 
 use super::incremental::{SegMeansState, SegMirror};
 use super::kvcache::KvCache;
-use super::refmodel::RefGpt;
+use super::refmodel::{RefGpt, RowScratch};
 use super::greedy_pick;
 
 /// Wire-byte accounting for one session.
@@ -45,7 +54,8 @@ pub struct DecodeStats {
     pub delta_bytes: usize,
     /// Token-id broadcasts keeping peers' streams in sync.
     pub sync_bytes: usize,
-    /// SegDelta messages sent.
+    /// Delta frames sent: one coalesced `SegDeltaBatch` per peer per
+    /// absorbed token (all layers ride in one frame).
     pub delta_messages: usize,
     /// Buddy-replication bytes (per-layer frontier rows shipped to the
     /// next device so its state survives this device's death).
@@ -115,6 +125,31 @@ struct DeviceCtx {
     ctx_v: Vec<f32>,
 }
 
+/// Session-owned scratch arena for the per-token hot path. Every buffer
+/// is cleared and refilled within its retained capacity each absorb, so
+/// after the first few tokens warm the capacities the steady-state
+/// decode loop performs zero heap allocation per token.
+#[derive(Default)]
+struct DecodeScratch {
+    /// Current hidden row (layer input).
+    x: Vec<f32>,
+    /// Next hidden row (block output), swapped with `x` per layer.
+    y: Vec<f32>,
+    q: Vec<f32>,
+    k: Vec<f32>,
+    v: Vec<f32>,
+    /// Assembled (n_hat, d) attention columns.
+    keys: Vec<f32>,
+    vals: Vec<f32>,
+    /// Dequantized changed-segment mean row (what peers' mirrors see).
+    qmean: Vec<f32>,
+    /// Coalesced `SegDeltaBatch` payload for the current token: one
+    /// quantized wire row per layer, in layer order.
+    payload: Vec<u8>,
+    /// Row-kernel scratch for the `RefGpt` `_into` forward variants.
+    row: RowScratch,
+}
+
 pub struct DecodeSession {
     model: Arc<RefGpt>,
     p: usize,
@@ -140,6 +175,8 @@ pub struct DecodeSession {
     mirrors: Vec<Vec<SegMirror>>,
     /// [layer][device] -> projected context K/V derived from `mirrors`.
     ctx: Vec<Vec<DeviceCtx>>,
+    /// Reused per-token buffers (survives resets: capacity is the point).
+    scratch: DecodeScratch,
     last_logits: Option<Vec<f32>>,
     stats: DecodeStats,
     /// Physical device liveness; partitions of dead devices re-home via
@@ -228,11 +265,12 @@ impl DecodeSession {
             pls,
             biases,
             peer_lists,
-            ids: Vec::new(),
+            ids: Vec::with_capacity(cfg.n),
             caches,
             segs,
             mirrors,
             ctx,
+            scratch: DecodeScratch::default(),
             last_logits: None,
             stats: DecodeStats::default(),
             alive: vec![true; p],
@@ -321,9 +359,10 @@ impl DecodeSession {
     }
 
     /// Absorb one token at the frontier: the incremental forward.
-    /// Returns the logits row at the new position (the next-token
-    /// distribution).
-    fn absorb(&mut self, token: i32) -> Result<Vec<f32>> {
+    /// Refreshes `last_logits` (the next-token distribution) in place.
+    /// Allocation-free at steady state: every intermediate lives in the
+    /// session's `DecodeScratch` arena.
+    fn absorb(&mut self, token: i32) -> Result<()> {
         let cfg = self.model.cfg;
         let pos = self.ids.len();
         if pos >= cfg.n {
@@ -346,76 +385,97 @@ impl DecodeSession {
         // deltas reach one peer fewer (none, at P=2) — and replication
         // rows only cross the wire while a buddy exists to receive them.
         let live = self.live_devices();
-        let mut x = self.model.embed_row(token, pos)?;
+        let (wire, l, replicate, replica_wire) =
+            (self.wire, self.l, self.replicate, self.replica_wire);
+        // Split-borrow the session so the scratch arena can be filled
+        // while the model/caches/mirrors are walked.
+        let DecodeSession { model, biases, peer_lists, ids, caches,
+                            segs, mirrors, ctx, scratch: sc, stats,
+                            last_logits, .. } = self;
+        // The coalesced delta frame payload for this token: one
+        // quantized wire row per layer, appended in layer order —
+        // byte-identical to a `Msg::SegDeltaBatch` payload (pinned by
+        // `net::message::tests::seg_delta_batch_matches_per_layer_frames`).
+        sc.payload.clear();
+        model.embed_row_into(token, pos, &mut sc.x)?;
         for layer in 0..cfg.layers {
             // 1. incremental Segment Means: one segment changes; its
             //    quantized row is what every peer's mirror installs.
-            let delta = self.segs[layer][dev].append(&x)?;
-            let msg = Msg::seg_delta(layer as u32, dev as u32,
-                                     delta.segment as u32,
-                                     delta.filled as u32, &delta.mean,
-                                     self.wire)?;
-            if live > 1 {
-                self.stats.delta_bytes += msg.wire_bytes() * (live - 1);
-                self.stats.delta_messages += live - 1;
-                if self.replicate {
-                    // frontier row to the buddy at the replica wire
-                    // precision (f32 => the replica can rebuild
-                    // bit-identical state; f16/i8 => half/quarter the
-                    // bytes, lossy on failover).
-                    self.stats.replica_bytes +=
-                        self.replica_wire.wire_bytes(d, 1);
-                }
-            }
-            let qmean = msg.seg_delta_mean()?;
-            self.mirrors[layer][dev].apply(delta.segment,
-                                           qmean.f32s()?,
-                                           delta.filled)?;
-            let (ck, cv) = self.model.kv_row(
-                layer, self.mirrors[layer][dev].mean_row(delta.segment));
-            let base = delta.segment * d;
-            let slot = &mut self.ctx[layer][dev];
-            slot.ctx_k[base..base + d].copy_from_slice(&ck);
-            slot.ctx_v[base..base + d].copy_from_slice(&cv);
+            let (seg, filled) =
+                segs[layer][dev].append_in_place(&sc.x)?;
+            let row_start = sc.payload.len();
+            quant::encode_row_into(segs[layer][dev].mean_row(seg), wire,
+                                   &mut sc.payload);
+            quant::decode_row_into(&sc.payload[row_start..], d, wire,
+                                   &mut sc.qmean)?;
+            mirrors[layer][dev].apply(seg, &sc.qmean, filled)?;
+            model.kv_row_into(layer, mirrors[layer][dev].mean_row(seg),
+                              &mut sc.row, &mut sc.k, &mut sc.v);
+            let base = seg * d;
+            let slot = &mut ctx[layer][dev];
+            slot.ctx_k[base..base + d].copy_from_slice(&sc.k);
+            slot.ctx_v[base..base + d].copy_from_slice(&sc.v);
 
             // 2. the frontier row's Q/K/V; K/V join the device cache.
-            let q = self.model.q_row(layer, &x);
-            let (k, v) = self.model.kv_row(layer, &x);
-            self.caches[dev].append(layer, &k, &v)?;
+            model.q_row_into(layer, &sc.x, &mut sc.row, &mut sc.q);
+            model.kv_row_into(layer, &sc.x, &mut sc.row, &mut sc.k,
+                              &mut sc.v);
+            caches[dev].append(layer, &sc.k, &sc.v)?;
 
             // 3. assemble attention columns: cached local rows (later
             //    local positions stay zero — exactly masked), then each
             //    peer's mirrored context rows in global order.
-            let mut keys = vec![0.0f32; n_hat * d];
-            let mut vals = vec![0.0f32; n_hat * d];
+            sc.keys.clear();
+            sc.keys.resize(n_hat * d, 0.0);
+            sc.vals.clear();
+            sc.vals.resize(n_hat * d, 0.0);
             for j in 0..=local {
-                keys[j * d..(j + 1) * d]
-                    .copy_from_slice(self.caches[dev].k_row(layer, j)?);
-                vals[j * d..(j + 1) * d]
-                    .copy_from_slice(self.caches[dev].v_row(layer, j)?);
+                sc.keys[j * d..(j + 1) * d]
+                    .copy_from_slice(caches[dev].k_row(layer, j)?);
+                sc.vals[j * d..(j + 1) * d]
+                    .copy_from_slice(caches[dev].v_row(layer, j)?);
             }
             let mut col = n_p;
-            for &peer in &self.peer_lists[dev] {
-                let pc = &self.ctx[layer][peer];
-                keys[col * d..(col + self.l) * d]
+            for &peer in &peer_lists[dev] {
+                let pc = &ctx[layer][peer];
+                sc.keys[col * d..(col + l) * d]
                     .copy_from_slice(&pc.ctx_k);
-                vals[col * d..(col + self.l) * d]
+                sc.vals[col * d..(col + l) * d]
                     .copy_from_slice(&pc.ctx_v);
-                col += self.l;
+                col += l;
             }
 
             // 4. one-row block compute, biased to the frontier row.
             let bias =
-                &self.biases[dev][local * n_hat..(local + 1) * n_hat];
-            x = self.model.attn_mlp_row(layer, &x, &q, &keys, &vals,
-                                        bias);
+                &biases[dev][local * n_hat..(local + 1) * n_hat];
+            model.attn_mlp_row_into(layer, &sc.x, &sc.q, &sc.keys,
+                                    &sc.vals, bias, &mut sc.row,
+                                    &mut sc.y);
+            std::mem::swap(&mut sc.x, &mut sc.y);
         }
-        self.ids.push(token);
+        ids.push(token);
         if live > 1 {
-            self.stats.sync_bytes += (live - 1) * 4; // token broadcast
+            // The per-layer rows coalesce into ONE SegDeltaBatch frame
+            // per (device, token): payload bytes are identical to the
+            // old frame-per-layer accounting (`payload` holds exactly
+            // `layers` wire rows), only the frame count changes.
+            stats.delta_bytes += sc.payload.len() * (live - 1);
+            stats.delta_messages += live - 1;
+            if replicate {
+                // frontier row per layer to the buddy at the replica
+                // wire precision (f32 => the replica can rebuild
+                // bit-identical state; f16/i8 => half/quarter the
+                // bytes, lossy on failover).
+                stats.replica_bytes +=
+                    cfg.layers * replica_wire.wire_bytes(d, 1);
+            }
+            stats.sync_bytes += (live - 1) * 4; // token broadcast
         }
-        self.stats.absorbed += 1;
-        Ok(self.model.logits_row(&x))
+        stats.absorbed += 1;
+        let mut logits = last_logits.take().unwrap_or_default();
+        model.logits_row_into(&sc.x, &mut sc.row, &mut logits);
+        *last_logits = Some(logits);
+        Ok(())
     }
 
     /// Absorb the prompt token-by-token (chunkable by the scheduler).
@@ -424,8 +484,7 @@ impl DecodeSession {
             bail!("empty prompt");
         }
         for &t in prompt {
-            let logits = self.absorb(t)?;
-            self.last_logits = Some(logits);
+            self.absorb(t)?;
         }
         Ok(())
     }
@@ -437,8 +496,7 @@ impl DecodeSession {
             .as_ref()
             .context("generate_next before prefill")?;
         let tok = greedy_pick(logits) as i32;
-        let logits = self.absorb(tok)?;
-        self.last_logits = Some(logits);
+        self.absorb(tok)?;
         self.stats.generated += 1;
         Ok(tok)
     }
@@ -571,8 +629,7 @@ impl DecodeSession {
             return Ok(false);
         }
         for &t in &log {
-            let lg = self.absorb(t)?;
-            self.last_logits = Some(lg);
+            self.absorb(t)?;
         }
         let after = self.last_logits.as_ref().map(|lg| greedy_pick(lg));
         Ok(before != after)
@@ -730,6 +787,37 @@ mod tests {
         // KV cache holds K+V per layer per absorbed position
         assert_eq!(sess.cache_bytes(),
                    2 * cfg.layers * st.absorbed * cfg.d * 4);
+    }
+
+    /// Coalescing pin: `delta_bytes` counts ONE `SegDeltaBatch` frame
+    /// per peer per token (all layers in a single payload), and that
+    /// frame's wire bytes equal the sum of the per-layer `SegDelta`
+    /// frames it replaces — at every wire format.
+    #[test]
+    fn coalesced_delta_accounting_matches_batch_frames() {
+        let m = model();
+        let cfg = m.cfg;
+        for wire in [WireFmt::F32, WireFmt::F16, WireFmt::I8] {
+            let mut sess =
+                DecodeSession::new(m.clone(), 2, 4, wire).unwrap();
+            sess.prefill(&[1, 2, 3]).unwrap();
+            for _ in 0..4 {
+                sess.generate_next().unwrap();
+            }
+            let st = sess.stats();
+            // a real batch frame for one token's coalesced rows
+            let row = wire.wire_bytes(cfg.d, 1);
+            let entries: Vec<(u32, u32, u32)> =
+                (0..cfg.layers as u32).map(|l| (l, 0, 1)).collect();
+            let batch = Msg::seg_delta_batch(
+                0, wire, cfg.d as u32, entries,
+                vec![0u8; row * cfg.layers]).unwrap();
+            // P=2: one peer, so one frame per absorbed token
+            assert_eq!(st.delta_bytes,
+                       st.absorbed * batch.wire_bytes(),
+                       "wire {wire:?}");
+            assert_eq!(st.delta_messages, st.absorbed, "wire {wire:?}");
+        }
     }
 
     #[test]

@@ -81,8 +81,12 @@ pub struct MeshEdge {
     peer: usize,
     stream: TcpStream,
     io_timeout: Duration,
-    /// Partial inbound frame (length prefix + body so far).
+    /// Partial inbound frame (length prefix + body so far); complete
+    /// frames are decoded *borrowing* from this buffer, never copied
+    /// out.
     buf: Vec<u8>,
+    /// Reused outbound frame buffer: `send` encodes into it in place.
+    send_buf: Vec<u8>,
 }
 
 impl MeshEdge {
@@ -92,7 +96,8 @@ impl MeshEdge {
                 attempts: usize, backoff: Duration) -> Result<MeshEdge> {
         let stream = connect_retry(addr, attempts, backoff)?;
         configure_stream(&stream, io_timeout)?;
-        Ok(MeshEdge { id, peer, stream, io_timeout, buf: Vec::new() })
+        Ok(MeshEdge { id, peer, stream, io_timeout, buf: Vec::new(),
+                      send_buf: Vec::new() })
     }
 
     /// One dial attempt with a *bounded connect timeout* — the mesh
@@ -105,7 +110,8 @@ impl MeshEdge {
         let stream = connect_retry_timeout(addr, 1, Duration::ZERO,
                                            connect_timeout)?;
         configure_stream(&stream, io_timeout)?;
-        Ok(MeshEdge { id, peer, stream, io_timeout, buf: Vec::new() })
+        Ok(MeshEdge { id, peer, stream, io_timeout, buf: Vec::new(),
+                      send_buf: Vec::new() })
     }
 
     /// Dial a peer worker and present the mesh hello
@@ -130,7 +136,8 @@ impl MeshEdge {
                        io_timeout: Duration) -> Result<MeshEdge> {
         stream.set_nonblocking(false).ok();
         configure_stream(&stream, io_timeout)?;
-        Ok(MeshEdge { id, peer, stream, io_timeout, buf: Vec::new() })
+        Ok(MeshEdge { id, peer, stream, io_timeout, buf: Vec::new(),
+                      send_buf: Vec::new() })
     }
 
     /// Wrap an accepted stream and read the dialer's hello to learn its
@@ -147,6 +154,7 @@ impl MeshEdge {
             stream,
             io_timeout,
             buf: Vec::new(),
+            send_buf: Vec::new(),
         };
         let env = edge
             .recv_deadline(HELLO_TIMEOUT)
@@ -179,8 +187,11 @@ impl MeshEdge {
         }
     }
 
-    /// A complete frame, if the buffer holds one.
-    fn take_frame(&mut self) -> Result<Option<Vec<u8>>, TransportError> {
+    /// Body length of a complete buffered frame, if one has assembled.
+    /// The body itself is decoded *in place* out of `buf` by
+    /// `recv_deadline` — the zero-copy receive path — instead of being
+    /// copied into a per-frame `Vec`.
+    fn frame_len(&self) -> Result<Option<usize>, TransportError> {
         if self.buf.len() < 4 {
             return Ok(None);
         }
@@ -193,9 +204,7 @@ impl MeshEdge {
         if self.buf.len() < 4 + n {
             return Ok(None);
         }
-        let frame = self.buf[4..4 + n].to_vec();
-        self.buf.drain(..4 + n);
-        Ok(Some(frame))
+        Ok(Some(n))
     }
 }
 
@@ -215,17 +224,24 @@ impl Transport for MeshEdge {
         self.stream
             .set_write_timeout(Some(self.io_timeout))
             .ok();
-        write_frame_typed(&mut self.stream, &msg.encode(), self.peer)
+        // zero-copy framing: encode into the edge's reused buffer
+        msg.encode_into(&mut self.send_buf);
+        write_frame_typed(&mut self.stream, &self.send_buf, self.peer)
     }
 
     fn recv_deadline(&mut self, timeout: Duration)
                      -> Result<Envelope, TransportError> {
         let deadline = Instant::now() + timeout;
         loop {
-            // a previous over-read may already hold a whole frame
-            if let Some(frame) = self.take_frame()? {
-                let msg = Msg::decode(&frame)
-                    .map_err(|e| TransportError::Codec(format!("{e:#}")))?;
+            // a previous over-read may already hold a whole frame;
+            // decode it borrowing straight out of the read buffer
+            if let Some(n) = self.frame_len()? {
+                let res = Msg::decode(&self.buf[4..4 + n])
+                    .map_err(|e| TransportError::Codec(format!("{e:#}")));
+                // drain *before* propagating a decode error, or the bad
+                // frame would be retried forever
+                self.buf.drain(..4 + n);
+                let msg = res?;
                 return Ok(Envelope { from: self.peer, to: self.id, msg });
             }
             let left = deadline.saturating_duration_since(Instant::now());

@@ -64,6 +64,21 @@ pub enum Msg {
         d: u32,
         payload: Vec<u8>,
     },
+    /// A device's full per-token Segment-Means update, coalesced: one
+    /// frame carries every layer's changed row for one absorbed token
+    /// instead of `layers` separate `SegDelta` frames (same payload
+    /// bytes, one framing). `entries` lists (layer, segment, filled)
+    /// per row in layer order; `payload` is the byte-level
+    /// concatenation of the rows' wire encodings at `fmt`, each
+    /// exactly `fmt.wire_bytes(d, 1)` long
+    /// (`util::quant::encode_row_into`).
+    SegDeltaBatch {
+        from: u32,
+        fmt: u8,
+        d: u32,
+        entries: Vec<(u32, u32, u32)>,
+        payload: Vec<u8>,
+    },
     /// Bulk KV-cache transfer (decode-session migration / late worker
     /// join): rows `[start, start + k.rows())` of one layer's K and V.
     CacheSync { from: u32, layer: u32, start: u32, k: Tensor, v: Tensor },
@@ -113,6 +128,7 @@ impl Msg {
             Msg::Shutdown => 0,
             Msg::Reconfig { .. } => 0,
             Msg::SegDelta { payload, .. } => payload.len(),
+            Msg::SegDeltaBatch { payload, .. } => payload.len(),
             Msg::CacheSync { k, v, .. } => k.byte_len() + v.byte_len(),
             // a bare beat is free; a profile-bearing one pays for its
             // payload so NetStats-based overhead assertions stay honest
@@ -149,6 +165,45 @@ impl Msg {
             other => bail!("not a SegDelta: {other:?}"),
         }
     }
+
+    /// Build a coalesced `SegDeltaBatch` from pre-encoded rows:
+    /// `entries` are (layer, segment, filled) in layer order, `payload`
+    /// their concatenated wire rows (`quant::encode_row_into`). The
+    /// row/payload size invariant is enforced here and re-checked by
+    /// the decoder, so a decoded batch can always be row-sliced.
+    pub fn seg_delta_batch(from: u32, fmt: WireFmt, d: u32,
+                           entries: Vec<(u32, u32, u32)>,
+                           payload: Vec<u8>) -> Result<Msg> {
+        let row = fmt.wire_bytes(d as usize, 1);
+        if entries.len().checked_mul(row) != Some(payload.len()) {
+            bail!("SegDeltaBatch payload is {} bytes, {} entries x \
+                   {row} expected", payload.len(), entries.len());
+        }
+        Ok(Msg::SegDeltaBatch { from, fmt: fmt.tag(), d, entries,
+                                payload })
+    }
+
+    /// Borrow row `i` of a `SegDeltaBatch` straight out of its payload
+    /// — (layer, segment, filled, wire-row bytes) — with no copy; the
+    /// bytes decode via `quant::decode_row_into`. This is the
+    /// borrowing decode path: a receiver installs every row without
+    /// materializing intermediate tensors.
+    pub fn seg_delta_batch_row(&self, i: usize)
+                               -> Result<(u32, u32, u32, &[u8])> {
+        match self {
+            Msg::SegDeltaBatch { fmt, d, entries, payload, .. } => {
+                let (layer, segment, filled) = *entries
+                    .get(i)
+                    .with_context(|| format!(
+                        "SegDeltaBatch row {i} of {}", entries.len()))?;
+                let row = WireFmt::from_tag(*fmt)?
+                    .wire_bytes(*d as usize, 1);
+                Ok((layer, segment, filled,
+                    &payload[i * row..(i + 1) * row]))
+            }
+            other => bail!("not a SegDeltaBatch: {other:?}"),
+        }
+    }
 }
 
 // ------------------------- binary codec (TCP framing) --------------------
@@ -180,15 +235,22 @@ pub fn encode_tensor(out: &mut Vec<u8>, t: &Tensor) {
     for &d in &t.shape {
         put_u32(out, d as u32);
     }
+    // bulk-write the element words into a pre-sized tail — unit-stride
+    // and memcpy-like on little-endian targets — instead of paying a
+    // bounds-checked extend per element
     match &t.data {
         TensorData::F32(v) => {
-            for x in v {
-                out.extend_from_slice(&x.to_le_bytes());
+            let start = out.len();
+            out.resize(start + v.len() * 4, 0);
+            for (dst, x) in out[start..].chunks_exact_mut(4).zip(v) {
+                dst.copy_from_slice(&x.to_le_bytes());
             }
         }
         TensorData::I32(v) => {
-            for x in v {
-                out.extend_from_slice(&x.to_le_bytes());
+            let start = out.len();
+            out.resize(start + v.len() * 4, 0);
+            for (dst, x) in out[start..].chunks_exact_mut(4).zip(v) {
+                dst.copy_from_slice(&x.to_le_bytes());
             }
         }
     }
@@ -274,88 +336,116 @@ pub fn decode_tensor(c: &mut Cursor) -> Result<Tensor> {
 }
 
 impl Msg {
+    /// Encode into a fresh buffer. Hot paths prefer
+    /// [`encode_into`](Self::encode_into) with a reused per-connection
+    /// buffer; this wrapper serves one-shot and test callers.
     pub fn encode(&self) -> Vec<u8> {
         let mut out = Vec::new();
+        self.encode_into(&mut out);
+        out
+    }
+
+    /// Encode into a caller-owned buffer (cleared first) — the
+    /// zero-copy framing path: `TcpChannel` / `MeshEdge` keep one send
+    /// buffer per connection and reuse it for every frame, so
+    /// steady-state sends allocate nothing. Byte-identical to
+    /// [`encode`](Self::encode) (property-pinned below).
+    pub fn encode_into(&self, out: &mut Vec<u8>) {
+        out.clear();
         match self {
             Msg::Exchange { epoch, layer, from, data } => {
                 out.push(0);
-                put_u32(&mut out, *epoch);
-                put_u32(&mut out, *layer);
-                put_u32(&mut out, *from);
-                encode_tensor(&mut out, data);
+                put_u32(out, *epoch);
+                put_u32(out, *layer);
+                put_u32(out, *from);
+                encode_tensor(out, data);
             }
             Msg::FinalPart { epoch, from, data } => {
                 out.push(1);
-                put_u32(&mut out, *epoch);
-                put_u32(&mut out, *from);
-                encode_tensor(&mut out, data);
+                put_u32(out, *epoch);
+                put_u32(out, *from);
+                encode_tensor(out, data);
             }
             Msg::Job { epoch, request, x_p, ctx } => {
                 out.push(2);
-                put_u32(&mut out, *epoch);
-                put_u64(&mut out, *request);
-                encode_tensor(&mut out, x_p);
-                put_u32(&mut out, ctx.len() as u32);
+                put_u32(out, *epoch);
+                put_u64(out, *request);
+                encode_tensor(out, x_p);
+                put_u32(out, ctx.len() as u32);
                 for t in ctx {
-                    encode_tensor(&mut out, t);
+                    encode_tensor(out, t);
                 }
             }
             Msg::Shutdown => out.push(3),
             Msg::Reconfig { epoch, mode, p, l, live, sizes, relays } => {
                 out.push(7);
-                put_u32(&mut out, *epoch);
+                put_u32(out, *epoch);
                 out.push(*mode);
-                put_u32(&mut out, *p);
-                put_u32(&mut out, *l);
-                put_u32(&mut out, live.len() as u32);
+                put_u32(out, *p);
+                put_u32(out, *l);
+                put_u32(out, live.len() as u32);
                 for d in live {
-                    put_u32(&mut out, *d);
+                    put_u32(out, *d);
                 }
-                put_u32(&mut out, sizes.len() as u32);
+                put_u32(out, sizes.len() as u32);
                 for s in sizes {
-                    put_u32(&mut out, *s);
+                    put_u32(out, *s);
                 }
-                put_u32(&mut out, relays.len() as u32);
+                put_u32(out, relays.len() as u32);
                 for (from, to, via) in relays {
-                    put_u32(&mut out, *from);
-                    put_u32(&mut out, *to);
-                    put_u32(&mut out, *via);
+                    put_u32(out, *from);
+                    put_u32(out, *to);
+                    put_u32(out, *via);
                 }
             }
             Msg::SegDelta { layer, from, segment, filled, fmt, d,
                             payload } => {
                 out.push(4);
-                put_u32(&mut out, *layer);
-                put_u32(&mut out, *from);
-                put_u32(&mut out, *segment);
-                put_u32(&mut out, *filled);
+                put_u32(out, *layer);
+                put_u32(out, *from);
+                put_u32(out, *segment);
+                put_u32(out, *filled);
                 out.push(*fmt);
-                put_u32(&mut out, *d);
-                put_u32(&mut out, payload.len() as u32);
+                put_u32(out, *d);
+                put_u32(out, payload.len() as u32);
+                out.extend_from_slice(payload);
+            }
+            Msg::SegDeltaBatch { from, fmt, d, entries, payload } => {
+                out.push(9);
+                put_u32(out, *from);
+                out.push(*fmt);
+                put_u32(out, *d);
+                put_u32(out, entries.len() as u32);
+                for (layer, segment, filled) in entries {
+                    put_u32(out, *layer);
+                    put_u32(out, *segment);
+                    put_u32(out, *filled);
+                }
+                put_u32(out, payload.len() as u32);
                 out.extend_from_slice(payload);
             }
             Msg::CacheSync { from, layer, start, k, v } => {
                 out.push(5);
-                put_u32(&mut out, *from);
-                put_u32(&mut out, *layer);
-                put_u32(&mut out, *start);
-                encode_tensor(&mut out, k);
-                encode_tensor(&mut out, v);
+                put_u32(out, *from);
+                put_u32(out, *layer);
+                put_u32(out, *start);
+                encode_tensor(out, k);
+                encode_tensor(out, v);
             }
             Msg::Heartbeat { from, seq, profile } => {
                 out.push(6);
-                put_u32(&mut out, *from);
-                put_u64(&mut out, *seq);
+                put_u32(out, *from);
+                put_u64(out, *seq);
                 match profile {
                     None => out.push(0),
                     Some(s) => {
                         out.push(1);
-                        put_u64(&mut out, s.unit_secs.to_bits());
-                        put_u64(&mut out, s.blocks);
-                        put_u32(&mut out, s.edges.len() as u32);
+                        put_u64(out, s.unit_secs.to_bits());
+                        put_u64(out, s.blocks);
+                        put_u32(out, s.edges.len() as u32);
                         for (peer, bw) in &s.edges {
-                            put_u32(&mut out, *peer);
-                            put_u64(&mut out, bw.to_bits());
+                            put_u32(out, *peer);
+                            put_u64(out, bw.to_bits());
                         }
                     }
                 }
@@ -363,23 +453,22 @@ impl Msg {
             Msg::MeshInfo { epoch, device, p, peers, model, weights,
                             flavor, mode, mode_p, mode_l } => {
                 out.push(8);
-                put_u32(&mut out, *epoch);
-                put_u32(&mut out, *device);
-                put_u32(&mut out, *p);
-                put_u32(&mut out, peers.len() as u32);
+                put_u32(out, *epoch);
+                put_u32(out, *device);
+                put_u32(out, *p);
+                put_u32(out, peers.len() as u32);
                 for (id, addr) in peers {
-                    put_u32(&mut out, *id);
-                    put_str(&mut out, addr);
+                    put_u32(out, *id);
+                    put_str(out, addr);
                 }
-                put_str(&mut out, model);
-                put_str(&mut out, weights);
-                put_str(&mut out, flavor);
+                put_str(out, model);
+                put_str(out, weights);
+                put_str(out, flavor);
                 out.push(*mode);
-                put_u32(&mut out, *mode_p);
-                put_u32(&mut out, *mode_l);
+                put_u32(out, *mode_p);
+                put_u32(out, *mode_l);
             }
         }
-        out
     }
 
     pub fn decode(buf: &[u8]) -> Result<Msg> {
@@ -467,6 +556,35 @@ impl Msg {
                 let payload = c.take(len)?.to_vec();
                 Msg::SegDelta { layer, from, segment, filled, fmt, d,
                                 payload }
+            }
+            9 => {
+                let from = c.u32()?;
+                let fmt = c.u8()?;
+                let d = c.u32()?;
+                let n = c.u32()? as usize;
+                // each entry costs 12 bytes (layer, segment, filled):
+                // a hostile count fails closed before any allocation
+                if n > c.remaining() / 12 {
+                    bail!("SegDeltaBatch declares {n} entries, {} bytes \
+                           left", c.remaining());
+                }
+                let mut entries = Vec::with_capacity(n);
+                for _ in 0..n {
+                    let layer = c.u32()?;
+                    let segment = c.u32()?;
+                    entries.push((layer, segment, c.u32()?));
+                }
+                let len = c.u32()? as usize;
+                let payload = c.take(len)?.to_vec();
+                // rows must tile the payload exactly at the declared
+                // format, so `seg_delta_batch_row` can never slice out
+                // of bounds on a decoded frame
+                let row = WireFmt::from_tag(fmt)?.wire_bytes(d as usize, 1);
+                if n.checked_mul(row) != Some(payload.len()) {
+                    bail!("SegDeltaBatch payload is {} bytes, {n} rows \
+                           x {row} declared", payload.len());
+                }
+                Msg::SegDeltaBatch { from, fmt, d, entries, payload }
             }
             5 => Msg::CacheSync {
                 from: c.u32()?,
@@ -689,6 +807,111 @@ mod tests {
         assert!(Msg::seg_delta(0, 0, 0, 1, &bad, WireFmt::F32).is_err());
     }
 
+    /// The coalesced batch frame: payload bytes are exactly the
+    /// concatenation of the per-layer `SegDelta` frames it replaces
+    /// (so `wire_bytes` accounting is unchanged by coalescing), rows
+    /// borrow straight out of the decoded payload, and the size
+    /// invariant fails closed in both constructor and decoder.
+    #[test]
+    fn seg_delta_batch_matches_per_layer_frames() {
+        use crate::util::quant::{self, WireFmt};
+        let d = 8usize;
+        let rows: Vec<Vec<f32>> = (0..3)
+            .map(|l| (0..d).map(|i| (l * d + i) as f32 * 0.3 - 2.0)
+                .collect())
+            .collect();
+        for fmt in [WireFmt::F32, WireFmt::F16, WireFmt::I8] {
+            let mut entries = Vec::new();
+            let mut payload = Vec::new();
+            let mut per_layer = 0usize;
+            for (l, row) in rows.iter().enumerate() {
+                entries.push((l as u32, (l % 2) as u32, (l + 1) as u32));
+                quant::encode_row_into(row, fmt, &mut payload);
+                let t = Tensor::from_f32(vec![d], row.clone()).unwrap();
+                let single = Msg::seg_delta(l as u32, 1, (l % 2) as u32,
+                                            (l + 1) as u32, &t, fmt)
+                    .unwrap();
+                per_layer += single.wire_bytes();
+                // the batch's row bytes are the single frame's payload
+                match single {
+                    Msg::SegDelta { payload: p, .. } => {
+                        let rb = fmt.wire_bytes(d, 1);
+                        assert_eq!(&payload[l * rb..(l + 1) * rb], &p[..]);
+                    }
+                    _ => unreachable!(),
+                }
+            }
+            let batch = Msg::seg_delta_batch(1, fmt, d as u32,
+                                             entries.clone(),
+                                             payload.clone()).unwrap();
+            assert_eq!(batch.wire_bytes(), per_layer);
+            let back = Msg::decode(&batch.encode()).unwrap();
+            assert_eq!(back, batch);
+            let mut mean = Vec::new();
+            for (l, row) in rows.iter().enumerate() {
+                let (layer, seg, filled, bytes) =
+                    back.seg_delta_batch_row(l).unwrap();
+                assert_eq!((layer, seg, filled),
+                           (l as u32, (l % 2) as u32, (l + 1) as u32));
+                quant::decode_row_into(bytes, d, fmt, &mut mean).unwrap();
+                let t = Tensor::from_f32(vec![d], row.clone()).unwrap();
+                let via_single = Msg::seg_delta(0, 0, 0, 1, &t, fmt)
+                    .unwrap().seg_delta_mean().unwrap();
+                assert_eq!(&mean, via_single.f32s().unwrap(), "{fmt:?}");
+            }
+            assert!(back.seg_delta_batch_row(rows.len()).is_err());
+            // constructor rejects a payload that doesn't tile into rows
+            assert!(Msg::seg_delta_batch(1, fmt, d as u32, entries,
+                                         payload[1..].to_vec()).is_err());
+        }
+        assert!(Msg::Shutdown.seg_delta_batch_row(0).is_err());
+    }
+
+    /// Hostile `SegDeltaBatch` frames fail closed: 4-billion entry
+    /// counts, payload sizes that don't tile into rows, and unknown
+    /// wire-format tags must error without panicking or allocating.
+    #[test]
+    fn hostile_seg_delta_batch_fails_closed() {
+        use crate::util::quant::{self, WireFmt};
+        let mut payload = Vec::new();
+        quant::encode_row_into(&[1.0, -2.0], WireFmt::F32, &mut payload);
+        let good = Msg::seg_delta_batch(0, WireFmt::F32, 2,
+                                        vec![(0, 1, 1)], payload)
+            .unwrap();
+        let buf = good.encode();
+        assert_eq!(Msg::decode(&buf).unwrap(), good);
+        for cut in 0..buf.len() {
+            assert!(Msg::decode(&buf[..cut]).is_err(), "prefix {cut}");
+        }
+        // entry count claims 4 billion rows with no bytes behind it
+        let mut bad = vec![9u8];
+        bad.extend_from_slice(&0u32.to_le_bytes()); // from
+        bad.push(0); // fmt f32
+        bad.extend_from_slice(&2u32.to_le_bytes()); // d
+        bad.extend_from_slice(&u32::MAX.to_le_bytes()); // entries
+        assert!(Msg::decode(&bad).is_err());
+        // one declared entry but a payload of the wrong row size
+        let mut bad = vec![9u8];
+        bad.extend_from_slice(&0u32.to_le_bytes());
+        bad.push(0);
+        bad.extend_from_slice(&2u32.to_le_bytes());
+        bad.extend_from_slice(&1u32.to_le_bytes()); // 1 entry
+        for _ in 0..3 {
+            bad.extend_from_slice(&0u32.to_le_bytes());
+        }
+        bad.extend_from_slice(&4u32.to_le_bytes()); // 4 B != 1 row x 8 B
+        bad.extend_from_slice(&[0; 4]);
+        assert!(Msg::decode(&bad).is_err());
+        // unknown wire-format tag
+        let mut bad = vec![9u8];
+        bad.extend_from_slice(&0u32.to_le_bytes());
+        bad.push(7); // bad fmt
+        bad.extend_from_slice(&2u32.to_le_bytes());
+        bad.extend_from_slice(&0u32.to_le_bytes()); // 0 entries
+        bad.extend_from_slice(&0u32.to_le_bytes()); // empty payload
+        assert!(Msg::decode(&bad).is_err());
+    }
+
     #[test]
     fn cache_sync_roundtrip() {
         let m = Msg::CacheSync {
@@ -872,7 +1095,7 @@ mod property_tests {
     /// One random instance of every wire variant per call index, so the
     /// property loop covers the full enum many times over.
     fn rand_msg(rng: &mut Rng) -> Msg {
-        match rng.below(9) {
+        match rng.below(10) {
             0 => Msg::Exchange {
                 epoch: rng.next_u64() as u32,
                 layer: rng.next_u64() as u32,
@@ -918,6 +1141,26 @@ mod property_tests {
                 Msg::seg_delta(rng.next_u64() as u32, rng.next_u64() as u32,
                                rng.next_u64() as u32, rng.next_u64() as u32,
                                &rand_f32_row(rng), fmt)
+                    .unwrap()
+            }
+            9 => {
+                let fmt = match rng.below(3) {
+                    0 => WireFmt::F32,
+                    1 => WireFmt::F16,
+                    _ => WireFmt::I8,
+                };
+                let d = rng.range(1, 12);
+                let layers = rng.below(5);
+                let mut entries = Vec::with_capacity(layers);
+                let mut payload = Vec::new();
+                for layer in 0..layers {
+                    entries.push((layer as u32, rng.next_u64() as u32,
+                                  rng.next_u64() as u32));
+                    crate::util::quant::encode_row_into(
+                        &rng.normal_vec(d, 2.0), fmt, &mut payload);
+                }
+                Msg::seg_delta_batch(rng.next_u64() as u32, fmt,
+                                     d as u32, entries, payload)
                     .unwrap()
             }
             5 => {
@@ -983,6 +1226,24 @@ mod property_tests {
             assert_eq!(back, m);
             // wire accounting survives the codec
             assert_eq!(back.wire_bytes(), m.wire_bytes());
+        });
+    }
+
+    /// The reused-buffer encode path must be byte-identical to the
+    /// allocating one for every variant — a dirty buffer left over
+    /// from a previous (longer) frame must never leak into the next.
+    #[test]
+    fn encode_into_bit_identical_to_encode() {
+        property("msg-encode-into", 300, |rng: &mut Rng| {
+            let mut buf = vec![0xABu8; rng.below(64)];
+            let m = rand_msg(rng);
+            m.encode_into(&mut buf);
+            assert_eq!(buf, m.encode());
+            // back-to-back reuse (the per-connection send pattern)
+            let m2 = rand_msg(rng);
+            m2.encode_into(&mut buf);
+            assert_eq!(buf, m2.encode());
+            assert_eq!(Msg::decode(&buf).unwrap(), m2);
         });
     }
 

@@ -54,8 +54,12 @@ pub(crate) fn write_frame_typed(stream: &mut TcpStream, payload: &[u8],
     write(stream, payload)
 }
 
-fn read_frame_typed(stream: &mut TcpStream, peer: usize)
-                    -> Result<Vec<u8>, TransportError> {
+/// Read one length-prefixed frame into a reused buffer (cleared and
+/// refilled within its retained capacity — the zero-copy receive path
+/// of `TcpChannel::recv_deadline`).
+pub(crate) fn read_frame_into(stream: &mut TcpStream, peer: usize,
+                              buf: &mut Vec<u8>)
+                              -> Result<(), TransportError> {
     let read = |stream: &mut TcpStream, buf: &mut [u8]| {
         stream.read_exact(buf).map_err(|e| if is_timeout(&e) {
             TransportError::Timeout { after: stream_deadline(stream) }
@@ -70,8 +74,16 @@ fn read_frame_typed(stream: &mut TcpStream, peer: usize)
         return Err(TransportError::Codec(format!("frame too large: {n} \
                                                   bytes")));
     }
-    let mut buf = vec![0u8; n];
-    read(stream, &mut buf)?;
+    buf.clear();
+    buf.resize(n, 0);
+    read(stream, buf)?;
+    Ok(())
+}
+
+fn read_frame_typed(stream: &mut TcpStream, peer: usize)
+                    -> Result<Vec<u8>, TransportError> {
+    let mut buf = Vec::new();
+    read_frame_into(stream, peer, &mut buf)?;
     Ok(buf)
 }
 
@@ -163,6 +175,12 @@ pub struct TcpChannel {
     /// per call, so reconnect restores from here, not from the socket.
     io_timeout: Duration,
     stream: TcpStream,
+    /// Reused send frame buffer: `send` encodes into it in place, so a
+    /// steady message stream allocates nothing per frame.
+    send_buf: Vec<u8>,
+    /// Reused receive frame buffer: `recv_deadline` reads into it and
+    /// decodes borrowing from it.
+    recv_buf: Vec<u8>,
 }
 
 impl TcpChannel {
@@ -178,6 +196,8 @@ impl TcpChannel {
             addr: Some(addr.to_string()),
             io_timeout,
             stream,
+            send_buf: Vec::new(),
+            recv_buf: Vec::new(),
         })
     }
 
@@ -185,7 +205,8 @@ impl TcpChannel {
     pub fn accepted(stream: TcpStream, id: usize, peer: usize,
                     io_timeout: Duration) -> Result<TcpChannel> {
         configure_stream(&stream, io_timeout)?;
-        Ok(TcpChannel { id, peer, addr: None, io_timeout, stream })
+        Ok(TcpChannel { id, peer, addr: None, io_timeout, stream,
+                        send_buf: Vec::new(), recv_buf: Vec::new() })
     }
 
     /// Drop the (possibly torn) stream and dial the peer again with the
@@ -226,14 +247,17 @@ impl Transport for TcpChannel {
         if to != self.peer {
             return Err(TransportError::PeerDown { peer: to });
         }
-        write_frame_typed(&mut self.stream, &msg.encode(), self.peer)
+        // zero-copy framing: encode into the connection's reused buffer
+        msg.encode_into(&mut self.send_buf);
+        write_frame_typed(&mut self.stream, &self.send_buf, self.peer)
     }
 
     fn recv_deadline(&mut self, timeout: Duration)
                      -> Result<Envelope, TransportError> {
         self.stream.set_read_timeout(Some(timeout)).ok();
-        let frame = read_frame_typed(&mut self.stream, self.peer)?;
-        let msg = Msg::decode(&frame)
+        read_frame_into(&mut self.stream, self.peer,
+                        &mut self.recv_buf)?;
+        let msg = Msg::decode(&self.recv_buf)
             .map_err(|e| TransportError::Codec(format!("{e:#}")))?;
         Ok(Envelope { from: self.peer, to: self.id, msg })
     }

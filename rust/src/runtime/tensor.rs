@@ -180,6 +180,21 @@ impl Tensor {
         Ok(())
     }
 
+    /// Reserve capacity for `rows` additional axis-0 rows so subsequent
+    /// [`push_row_f32`](Self::push_row_f32) calls never reallocate (the
+    /// KV cache pre-reserves its partition width at construction).
+    pub fn reserve_rows(&mut self, rows: usize) -> Result<()> {
+        if self.shape.is_empty() {
+            bail!("reserve_rows on a scalar tensor");
+        }
+        let stride = self.row_elems();
+        match &mut self.data {
+            TensorData::F32(v) => v.reserve(rows * stride),
+            _ => bail!("reserve_rows on non-f32 tensor"),
+        }
+        Ok(())
+    }
+
     /// Overwrite one axis-0 row in place (decode-window updates).
     pub fn set_row_f32(&mut self, i: usize, row: &[f32]) -> Result<()> {
         if i >= self.rows() {

@@ -128,8 +128,100 @@ pub fn f16_bits_to_f32(h: u16) -> f32 {
 
 // ---- tensor codecs -----------------------------------------------------
 
+/// Row absmax via an 8-lane chunked fold: each lane folds a strided
+/// subset, breaking the sequential `max` dependency chain so the loop
+/// pipelines and auto-vectorizes. All folded values are `abs()` (never
+/// negative), over which `max` is exactly associative and commutative
+/// — and NaN inputs are dropped by every grouping the same way — so
+/// the result is bit-identical to the sequential fold kept in
+/// [`encode_reference`].
+fn absmax_chunked(row: &[f32]) -> f32 {
+    const W: usize = 8;
+    let mut acc = [0.0f32; W];
+    let mut chunks = row.chunks_exact(W);
+    for c in chunks.by_ref() {
+        for (a, x) in acc.iter_mut().zip(c) {
+            *a = (*a).max(x.abs());
+        }
+    }
+    let mut m = 0.0f32;
+    for x in chunks.remainder() {
+        m = m.max(x.abs());
+    }
+    for a in acc {
+        m = m.max(a);
+    }
+    m
+}
+
+/// Append one row's wire encoding to `out` — the per-token unit of the
+/// Segment-Means exchange, written with unit-stride chunked loops into
+/// a pre-sized tail so steady-state callers reuse one buffer with no
+/// per-byte `push` bounds traffic. Byte-identical to
+/// [`encode_reference`] (property-pinned below).
+pub fn encode_row_into(row: &[f32], fmt: WireFmt, out: &mut Vec<u8>) {
+    let start = out.len();
+    match fmt {
+        WireFmt::F32 => {
+            out.resize(start + row.len() * 4, 0);
+            for (dst, x) in out[start..].chunks_exact_mut(4).zip(row) {
+                dst.copy_from_slice(&x.to_le_bytes());
+            }
+        }
+        WireFmt::F16 => {
+            out.resize(start + row.len() * 2, 0);
+            for (dst, x) in out[start..].chunks_exact_mut(2).zip(row) {
+                dst.copy_from_slice(&f32_to_f16_bits(*x).to_le_bytes());
+            }
+        }
+        WireFmt::I8 => {
+            // same arithmetic as the oracle: absmax floor, then the
+            // exact `x / scale` division (not a reciprocal multiply,
+            // which would round differently).
+            let scale = absmax_chunked(row).max(1e-12) / 127.0;
+            out.resize(start + 4 + row.len(), 0);
+            let (sc, qs) = out[start..].split_at_mut(4);
+            sc.copy_from_slice(&scale.to_le_bytes());
+            for (q, x) in qs.iter_mut().zip(row) {
+                *q = (x / scale).round().clamp(-127.0, 127.0) as i8 as u8;
+            }
+        }
+    }
+}
+
+/// Encode into a caller-owned buffer (cleared first) — the zero-copy
+/// framing path: per-connection send buffers are reused across frames
+/// instead of allocating a fresh `Vec` per message.
+pub fn encode_into(t: &Tensor, fmt: WireFmt, out: &mut Vec<u8>)
+                   -> Result<()> {
+    out.clear();
+    let data = t.f32s()?;
+    match fmt {
+        WireFmt::F32 | WireFmt::F16 => encode_row_into(data, fmt, out),
+        WireFmt::I8 => {
+            let d = (*t.shape.last().unwrap_or(&1)).max(1);
+            let rows = data.len() / d;
+            out.reserve(rows * 4 + data.len());
+            for r in 0..rows {
+                encode_row_into(&data[r * d..(r + 1) * d], fmt, out);
+            }
+        }
+    }
+    Ok(())
+}
+
 /// Encode the last-axis rows of an f32 tensor at the given precision.
 pub fn encode(t: &Tensor, fmt: WireFmt) -> Result<Vec<u8>> {
+    let mut out = Vec::new();
+    encode_into(t, fmt, &mut out)?;
+    Ok(out)
+}
+
+/// The pre-chunking sequential encoder, kept verbatim as the
+/// bit-identity oracle for the chunked kernels (property-pinned in the
+/// tests below) and as the perf ratchet's speedup denominator in
+/// `benches/hotpath.rs`.
+pub fn encode_reference(t: &Tensor, fmt: WireFmt) -> Result<Vec<u8>> {
     let data = t.f32s()?;
     match fmt {
         WireFmt::F32 => {
@@ -164,6 +256,30 @@ pub fn encode(t: &Tensor, fmt: WireFmt) -> Result<Vec<u8>> {
             Ok(out)
         }
     }
+}
+
+/// Decode exactly one wire row of `d` values into `out` (cleared
+/// first) without materializing a `Tensor` — the borrowing decode path
+/// the per-token loop runs over its coalesced SegDelta payload slices.
+pub fn decode_row_into(bytes: &[u8], d: usize, fmt: WireFmt,
+                       out: &mut Vec<f32>) -> Result<()> {
+    if bytes.len() != fmt.wire_bytes(d, 1) {
+        bail!("wire row size mismatch: {} bytes for d={d} at {fmt:?}",
+              bytes.len());
+    }
+    out.clear();
+    match fmt {
+        WireFmt::F32 => out.extend(bytes.chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))),
+        WireFmt::F16 => out.extend(bytes.chunks_exact(2)
+            .map(|c| f16_bits_to_f32(u16::from_le_bytes([c[0], c[1]])))),
+        WireFmt::I8 => {
+            let scale =
+                f32::from_le_bytes(bytes[..4].try_into().unwrap());
+            out.extend(bytes[4..].iter().map(|&b| b as i8 as f32 * scale));
+        }
+    }
+    Ok(())
 }
 
 /// Decode back to an f32 tensor of the given shape.
@@ -378,5 +494,77 @@ mod tests {
         let bytes = encode(&t, WireFmt::I8).unwrap();
         // 2 rows x (4-byte scale + 3 payload bytes)
         assert_eq!(bytes.len(), WireFmt::I8.wire_bytes(6, 2));
+    }
+
+    /// The chunked encoders must be byte-identical to the sequential
+    /// oracle across odd shapes (D off the 8-wide chunk boundary) and
+    /// special values: signed zeros, subnormals, saturating magnitudes,
+    /// infinities and NaN all take the same path through both kernels.
+    #[test]
+    fn chunked_encode_bit_identical_to_oracle() {
+        const SPECIALS: [f32; 9] = [0.0, -0.0, f32::MIN_POSITIVE / 2.0,
+                                    1e30, -1e30, 65504.0, 5.96e-8,
+                                    f32::INFINITY, f32::NAN];
+        property("quant-chunked-oracle", 300, |rng: &mut Rng| {
+            let rows = rng.range(1, 6);
+            let d = rng.range(1, 40);
+            let mut data = rng.normal_vec(rows * d, 4.0);
+            for _ in 0..rng.below(10) {
+                let i = rng.below(data.len());
+                data[i] = SPECIALS[rng.below(SPECIALS.len())];
+            }
+            let t = Tensor::from_f32(vec![rows, d], data).unwrap();
+            let mut buf = vec![0xAAu8; 7]; // stale contents must not leak
+            for fmt in [WireFmt::F32, WireFmt::F16, WireFmt::I8] {
+                encode_into(&t, fmt, &mut buf).unwrap();
+                let oracle = encode_reference(&t, fmt).unwrap();
+                assert_eq!(buf, oracle, "{fmt:?} rows={rows} d={d}");
+                assert_eq!(encode(&t, fmt).unwrap(), oracle);
+            }
+        });
+    }
+
+    /// `decode_row_into` (the borrowing row decode) must produce the
+    /// exact f32s the tensor decode does, and fail closed on any length
+    /// mismatch instead of slicing out of bounds.
+    #[test]
+    fn decode_row_into_matches_tensor_decode() {
+        property("quant-row-decode", 200, |rng: &mut Rng| {
+            let d = rng.range(1, 33);
+            let row = rng.normal_vec(d, 2.0);
+            let t = Tensor::from_f32(vec![1, d], row).unwrap();
+            let mut out = vec![1.0f32; 3];
+            for fmt in [WireFmt::F32, WireFmt::F16, WireFmt::I8] {
+                let bytes = encode(&t, fmt).unwrap();
+                decode_row_into(&bytes, d, fmt, &mut out).unwrap();
+                let full = decode(&bytes, &[1, d], fmt).unwrap();
+                assert_eq!(&out, full.f32s().unwrap(), "{fmt:?} d={d}");
+                assert!(decode_row_into(&bytes[..bytes.len() - 1], d,
+                                        fmt, &mut out).is_err());
+                assert!(decode_row_into(&bytes, d + 1, fmt, &mut out)
+                    .is_err());
+            }
+        });
+    }
+
+    /// One encoded row appended by `encode_row_into` is exactly what
+    /// the whole-tensor encoder emits for that row — the coalesced
+    /// SegDelta payload is a byte-level concatenation of row frames.
+    #[test]
+    fn row_encode_concatenation_matches_tensor_encode() {
+        property("quant-row-concat", 120, |rng: &mut Rng| {
+            let rows = rng.range(2, 5);
+            let d = rng.range(1, 20);
+            let data = rng.normal_vec(rows * d, 3.0);
+            let t = Tensor::from_f32(vec![rows, d], data.clone()).unwrap();
+            for fmt in [WireFmt::F32, WireFmt::F16, WireFmt::I8] {
+                let mut cat = Vec::new();
+                for r in 0..rows {
+                    encode_row_into(&data[r * d..(r + 1) * d], fmt,
+                                    &mut cat);
+                }
+                assert_eq!(cat, encode(&t, fmt).unwrap(), "{fmt:?}");
+            }
+        });
     }
 }
