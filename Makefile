@@ -10,9 +10,10 @@ PYTHON ?= python3
 CHAOS_SEEDS ?= 11,23,37,41,53,67,79,97,101,113
 
 .PHONY: all build test verify chaos elastic soak soak-hetero \
-        soak-linkplan chaos-mesh mesh-smoke bench-decode bench-mesh \
-        bench-soak bench-hetero bench-linkplan bench-hotpath ratchet \
-        ratchet-update artifacts lint fmt clean
+        soak-linkplan soak-tenants chaos-mesh mesh-smoke bench-decode \
+        bench-mesh bench-soak bench-hetero bench-linkplan \
+        bench-tenants bench-hotpath ratchet ratchet-update artifacts \
+        lint fmt clean
 
 all: build
 
@@ -55,6 +56,14 @@ soak-hetero:
 soak-linkplan:
 	CHAOS_SEEDS=$(CHAOS_SEEDS) $(CARGO) test --test linkplan
 
+# Multi-tenant soak: 16k Zipf-skewed mixed streams from 40 tenants at
+# ~30% over decode capacity, under churn — token-bucket quotas bind on
+# the hot tenant, overload sheds lowest-class-first, and classful
+# scheduling meets the Interactive p99 SLO the FIFO baseline misses,
+# deterministically, per seed.
+soak-tenants:
+	CHAOS_SEEDS=$(CHAOS_SEEDS) $(CARGO) test --test tenants
+
 # The chaos suite over the worker-to-worker mesh transport (FaultNet
 # wraps every per-peer edge; `tests/common::mesh_transport`). The
 # elastic suite's mesh tests run unconditionally under `make elastic`.
@@ -92,6 +101,12 @@ bench-hetero:
 bench-linkplan:
 	$(CARGO) bench --bench linkplan_soak
 
+# Tenants bench (artifact-free): classful vs class-blind serving on
+# the overloaded multi-tenant fleet at a fixed seed; writes
+# BENCH_tenants.json (per-class p50/p99, shed counts, p99 speedup).
+bench-tenants:
+	$(CARGO) bench --bench tenants_soak
+
 # Hot-path micro-benches (L3 section is artifact-free): oracle-vs-new
 # kernel/codec speedups + decode wire bytes; writes BENCH_hotpath.json.
 bench-hotpath:
@@ -100,12 +115,12 @@ bench-hotpath:
 # Perf ratchet: run the gated benches, then compare BENCH_*.json against
 # the committed bench_baseline.json (fails on any regression — same
 # check as the CI bench-gate job).
-ratchet: bench-decode bench-hotpath
+ratchet: bench-decode bench-hotpath bench-tenants
 	$(PYTHON) scripts/bench_gate
 
 # Intentional perf change? Re-run the gated benches and rewrite the
 # baseline values in place (tolerances kept); commit the result.
-ratchet-update: bench-decode bench-hotpath
+ratchet-update: bench-decode bench-hotpath bench-tenants
 	$(PYTHON) scripts/bench_gate --update
 
 # Layer-1/2 AOT lowering: produces artifacts/ (HLO text, weights,

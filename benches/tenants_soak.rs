@@ -1,0 +1,80 @@
+//! §Perf tenants bench: classful multi-tenant serving vs the
+//! class-blind FIFO baseline on the same overloaded Zipf-skewed fleet
+//! (`SoakCfg::tenants` — 16k mixed streams from 40 tenants at ~30%
+//! over decode capacity, kill/revive churn), reporting per-class
+//! virtual latency percentiles, shed counts, and the Interactive p99
+//! win priority buys.
+//!
+//! Artifact-free (the sim's stand-in blocks need no AOT artifacts), so
+//! this runs on any checkout:
+//!
+//!     cargo bench --bench tenants_soak
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+use anyhow::Result;
+use prism::sim::{run_soak, SoakCfg};
+use prism::tenant::RequestClass;
+use prism::util::json::Json;
+
+fn main() -> Result<()> {
+    let cfg = SoakCfg::tenants(11);
+    let ten = cfg.tenancy.as_ref().unwrap();
+    println!("== tenants soak (virtual clock, {} tenants, {} offered \
+              streams, caps {:?}, churn) ==",
+             ten.cfg.tenants, cfg.workload.requests, ten.cfg.shed_caps);
+
+    let t0 = Instant::now();
+    let prio = run_soak(&cfg)?;
+    let base = run_soak(&SoakCfg::tenants_unprioritized(11))?;
+    let wall = t0.elapsed().as_secs_f64();
+
+    // contract: the gate sheds (the preset is overloaded), nothing
+    // admitted is ever lost, and priority buys the Interactive tail
+    assert_eq!(prio.dropped(), 0, "classful run dropped admitted work");
+    assert_eq!(base.dropped(), 0, "baseline run dropped admitted work");
+    assert!(prio.tenancy.shed() > 0, "overloaded preset never shed");
+    let p_p99 = prio.tenancy.class(RequestClass::Interactive)
+        .latency.p99();
+    let b_p99 = base.tenancy.class(RequestClass::Interactive)
+        .latency.p99();
+    let speedup = b_p99 / p_p99.max(1e-9);
+    assert!(speedup > 1.0, "classful p99 {p_p99:.3}s not below FIFO \
+                            baseline {b_p99:.3}s");
+    assert!(wall < 120.0, "tenants bench too slow: {wall:.1}s wall");
+
+    let mut obj: BTreeMap<String, Json> = BTreeMap::new();
+    obj.insert("bench".into(), Json::Str("tenants_soak".into()));
+    obj.insert("seed".into(), Json::Num(cfg.seed as f64));
+    obj.insert("offered".into(), Json::Num(prio.offered() as f64));
+    obj.insert("admitted".into(),
+               Json::Num(prio.tenancy.admitted() as f64));
+    obj.insert("shed".into(), Json::Num(prio.tenancy.shed() as f64));
+    for class in RequestClass::ALL {
+        let c = prio.tenancy.class(class);
+        let name = class.name();
+        println!("{name:12}: admitted {:6} shed {:6} (quota {:5}) \
+                  p50 {:8.2}ms p99 {:8.2}ms",
+                 c.admitted, c.shed(), c.shed_quota,
+                 c.latency.p50() * 1e3, c.latency.p99() * 1e3);
+        obj.insert(format!("{name}_admitted"),
+                   Json::Num(c.admitted as f64));
+        obj.insert(format!("{name}_shed"), Json::Num(c.shed() as f64));
+        obj.insert(format!("{name}_p50_ms"),
+                   Json::Num(c.latency.p50() * 1e3));
+        obj.insert(format!("{name}_p99_ms"),
+                   Json::Num(c.latency.p99() * 1e3));
+    }
+    println!("fifo base   : interactive p99 {:.2}ms", b_p99 * 1e3);
+    println!("p99 win     : {speedup:.2}x (classful vs class-blind)");
+    println!("wall        : {wall:.2}s to simulate both runs");
+    obj.insert("baseline_interactive_p99_ms".into(),
+               Json::Num(b_p99 * 1e3));
+    obj.insert("interactive_p99_speedup".into(), Json::Num(speedup));
+    obj.insert("wall_secs".into(), Json::Num(wall));
+    let path = "BENCH_tenants.json";
+    std::fs::write(path, Json::Obj(obj).dump())?;
+    println!("json        : {path}");
+    Ok(())
+}

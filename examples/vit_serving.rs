@@ -52,7 +52,7 @@ fn main() -> Result<()> {
     let mut truth = vec![0usize; n_requests];
     let t0 = Instant::now();
     let feeder = {
-        let requests = server.requests.clone();
+        let submitter = server.submitter();
         let labels = ds.y.as_ref().unwrap().i32s()?.to_vec();
         let x = ds.x.clone();
         let mut truth_fill: Vec<usize> = Vec::with_capacity(n_requests);
@@ -60,12 +60,10 @@ fn main() -> Result<()> {
             for id in 0..n_requests {
                 let i = rng.below(labels.len());
                 truth_fill.push(labels[i] as usize);
-                requests.send(Request {
-                    id: id as u64,
-                    raw: x.slice0(i, i + 1)?,
-                    enqueued: Instant::now(),
-                    respond: tx.clone(),
-                })?;
+                submitter.submit(Request::eval(x.slice0(i, i + 1)?)
+                                     .id(id as u64)
+                                     .build(),
+                                 tx.clone())?;
                 std::thread::sleep(Duration::from_secs_f64(
                     rng.exponential(rate)));
             }

@@ -113,6 +113,122 @@ impl Args {
     }
 }
 
+/// The serving knobs `serve`, `serve --workers`, and `decode` share,
+/// parsed (and validated) once instead of per-subcommand: fault
+/// handling (`--gather-timeout-ms`, `--heartbeat-ms`), adaptivity
+/// (`--replan-deadband`, `--speeds`, `--link-factor`), wire formats
+/// (`--wire`, `--replicate`, `--replica-wire`), batching
+/// (`--flush-ms`, `--kernel`), and the multi-tenant front door
+/// (`--tenants`, `--quota`, `--quota-burst`, `--shed-cap`, `--class`).
+#[derive(Debug, Clone)]
+pub struct ServeOpts {
+    pub gather_deadline: std::time::Duration,
+    pub heartbeat_every: std::time::Duration,
+    /// `Some(d)` enables adaptive re-partitioning (present flag,
+    /// default 0.3); `None` leaves it off.
+    pub replan_deadband: Option<f64>,
+    /// Startup per-rank speed override; empty = measure online.
+    pub static_speeds: Vec<f64>,
+    /// `Some(f)` enables link-aware exchange planning (present flag,
+    /// default 0.5); `None` keeps planning compute-only.
+    pub link_factor: Option<f64>,
+    pub kernel: String,
+    pub flush_after: std::time::Duration,
+    pub wire: crate::util::quant::WireFmt,
+    pub replicate: bool,
+    pub replica_wire: crate::util::quant::WireFmt,
+    /// Tenants sharing the front door; 0 disables admission control.
+    pub tenants: usize,
+    /// Per-tenant admitted requests/sec (`--quota`); 0 = quotas off.
+    pub quota_rate: f64,
+    /// Bucket capacity (`--quota-burst`); defaults to 2x the rate.
+    pub quota_burst: f64,
+    /// BestEffort overload cap (`--shed-cap`); Batch and Interactive
+    /// caps are 2x and 4x (see `tenant::TenancyCfg::new`).
+    pub shed_cap: usize,
+    /// Class tag for generated traffic (`--class`).
+    pub class: crate::tenant::RequestClass,
+}
+
+impl ServeOpts {
+    pub fn parse(args: &Args) -> Result<ServeOpts> {
+        let deadline = args.duration_ms_or("gather-timeout-ms", 30_000)?;
+        let replan_deadband = match args.flags.get("replan-deadband") {
+            Some(_) => {
+                let d = args.f64_or("replan-deadband", 0.3)?;
+                if !d.is_finite() || d <= 0.0 {
+                    bail!("--replan-deadband wants a positive fraction, \
+                           got {d}");
+                }
+                Some(d)
+            }
+            None => None,
+        };
+        let static_speeds = args.f64_list_or("speeds", &[])?;
+        if static_speeds.iter().any(|&s| !s.is_finite() || s <= 0.0) {
+            bail!("--speeds wants positive numbers, got {static_speeds:?}");
+        }
+        let link_factor = match args.flags.get("link-factor") {
+            Some(_) => {
+                let f = args.f64_or("link-factor", 0.5)?;
+                if !f.is_finite() || f <= 0.0 || f >= 1.0 {
+                    bail!("--link-factor wants a fraction in (0, 1), \
+                           got {f}");
+                }
+                Some(f)
+            }
+            None => None,
+        };
+        let quota_rate = args.f64_or("quota", 0.0)?;
+        if !quota_rate.is_finite() || quota_rate < 0.0 {
+            bail!("--quota wants requests/sec >= 0, got {quota_rate}");
+        }
+        let quota_burst =
+            args.f64_or("quota-burst", (2.0 * quota_rate).max(1.0))?;
+        if !quota_burst.is_finite() || quota_burst < 1.0 {
+            bail!("--quota-burst wants a bucket size >= 1, \
+                   got {quota_burst}");
+        }
+        let shed_cap = args.usize_or("shed-cap", 256)?;
+        if shed_cap == 0 {
+            bail!("--shed-cap wants a positive load cap");
+        }
+        Ok(ServeOpts {
+            gather_deadline: deadline,
+            heartbeat_every: args.duration_ms_or("heartbeat-ms", 100)?,
+            replan_deadband,
+            static_speeds,
+            link_factor,
+            kernel: args.str_or("kernel", "xla"),
+            flush_after: args.duration_ms_or("flush-ms", 4)?,
+            wire: crate::util::quant::WireFmt::parse(
+                &args.str_or("wire", "f32"))?,
+            replicate: args.bool("replicate"),
+            replica_wire: crate::util::quant::WireFmt::parse(
+                &args.str_or("replica-wire", "f32"))?,
+            tenants: args.usize_or("tenants", 0)?,
+            quota_rate,
+            quota_burst,
+            shed_cap,
+            class: crate::tenant::RequestClass::parse(
+                &args.str_or("class", "batch"))?,
+        })
+    }
+
+    /// The admission-gate config these options describe, when
+    /// `--tenants` is set.
+    pub fn tenancy(&self) -> Option<crate::tenant::TenancyCfg> {
+        if self.tenants == 0 {
+            return None;
+        }
+        let mut cfg =
+            crate::tenant::TenancyCfg::new(self.tenants, self.shed_cap);
+        cfg.quota_rate = self.quota_rate;
+        cfg.quota_burst = self.quota_burst;
+        Some(cfg)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -163,6 +279,46 @@ mod tests {
     fn empty_args() {
         let a = Args::parse(&[]).unwrap();
         assert_eq!(a.command, "");
+    }
+
+    #[test]
+    fn serve_opts_parses_shared_and_tenancy_flags() {
+        let a = parse("serve --replan-deadband 0.35 --link-factor 0.4 \
+                       --tenants 8 --quota 50 --class interactive \
+                       --replica-wire f16 --replicate --flush-ms 7");
+        let o = ServeOpts::parse(&a).unwrap();
+        assert_eq!(o.replan_deadband, Some(0.35));
+        assert_eq!(o.link_factor, Some(0.4));
+        assert_eq!(o.tenants, 8);
+        assert_eq!(o.quota_rate, 50.0);
+        assert_eq!(o.quota_burst, 100.0); // 2x rate default
+        assert_eq!(o.class, crate::tenant::RequestClass::Interactive);
+        assert!(o.replicate);
+        assert_eq!(o.replica_wire, crate::util::quant::WireFmt::F16);
+        assert_eq!(o.flush_after, std::time::Duration::from_millis(7));
+        let t = o.tenancy().unwrap();
+        assert_eq!(t.tenants, 8);
+        assert_eq!(t.quota_rate, 50.0);
+        assert_eq!(t.shed_caps, [256, 512, 1024]);
+    }
+
+    #[test]
+    fn serve_opts_defaults_and_validation() {
+        let d = ServeOpts::parse(&parse("serve")).unwrap();
+        assert!(d.tenancy().is_none());
+        assert_eq!(d.replan_deadband, None);
+        assert_eq!(d.link_factor, None);
+        assert_eq!(d.gather_deadline,
+                   std::time::Duration::from_secs(30));
+        assert_eq!(d.class, crate::tenant::RequestClass::Batch);
+        assert!(!d.replicate);
+        assert!(ServeOpts::parse(&parse("serve --quota -3")).is_err());
+        assert!(ServeOpts::parse(&parse("serve --link-factor 1.5"))
+                    .is_err());
+        assert!(ServeOpts::parse(&parse("serve --replan-deadband 0"))
+                    .is_err());
+        assert!(ServeOpts::parse(&parse("serve --class gold")).is_err());
+        assert!(ServeOpts::parse(&parse("serve --shed-cap 0")).is_err());
     }
 
     #[test]

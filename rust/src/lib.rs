@@ -29,5 +29,6 @@ pub mod profile;
 pub mod runtime;
 pub mod server;
 pub mod sim;
+pub mod tenant;
 pub mod util;
 pub mod cli;

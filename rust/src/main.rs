@@ -65,6 +65,8 @@ examples:
         --gather-timeout-ms 30000
   prism serve --model vit --dataset synth10 --l 6 --requests 64 \\
         --workers 127.0.0.1:7070,127.0.0.1:7071,127.0.0.1:7072
+  prism serve --model vit --dataset synth10 --p 2 --l 6 --requests 64 \\
+        --tenants 8 --quota 50 --shed-cap 256 --class interactive
   prism decode --sessions 4 --steps 32 --p 2 --l 4 --wire f16
   prism decode --sessions 4 --replicate --replica-wire f16 \\
         --fail-device 0 --fail-after 8 --rejoin-after 16
@@ -77,6 +79,13 @@ remaining parallelism, degrading to single-device only at P'=1; decode
 streams with --replicate survive --fail-device via CacheSync migration
 and --rejoin-after restores the full geometry (tests/chaos.rs and
 tests/elastic.rs hold the fault and membership matrices)
+multi-tenant front door: `--tenants N` arms per-tenant token-bucket
+admission (`--quota` req/s, `--quota-burst`) and class-aware overload
+shedding (`--shed-cap` is the best-effort load cap; batch and
+interactive shed at 2x and 4x), with generated traffic tagged by
+`--class interactive|batch|best-effort`; the serve stats line reports
+per-class admitted/shed counts and latency percentiles (the full
+matrix lives in tests/tenants.rs on the virtual clock)
 mesh serving: `prism serve --workers host:port,...` drives real
 `prism worker --listen` processes — Segment-Means exchanges go peer to
 peer over the worker TCP mesh (the master keeps only the control

@@ -3,6 +3,8 @@
 
 pub mod histogram;
 pub mod report;
+pub mod tenancy;
 
 pub use histogram::Histogram;
 pub use report::Table;
+pub use tenancy::{ClassStats, TenancyReport};

@@ -1,0 +1,152 @@
+//! Per-tenant / per-class serving telemetry: admission counters, shed
+//! counters by reason, and per-class completion latency histograms.
+//!
+//! Filled in by the admission gate + decode completion paths (soak sim
+//! and `prism serve` alike) and surfaced through `SoakReport` and the
+//! serve stats line. Everything derives `PartialEq` so bit-identical
+//! double soak runs stay assertable.
+
+use crate::metrics::Histogram;
+use crate::tenant::{RequestClass, ShedReason, CLASSES};
+
+/// Counters + latency for one priority class.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct ClassStats {
+    pub admitted: u64,
+    pub shed_overload: u64,
+    pub shed_quota: u64,
+    pub completed: u64,
+    /// End-to-end latency of completed decode streams (seconds).
+    pub latency: Histogram,
+}
+
+impl ClassStats {
+    pub fn shed(&self) -> u64 {
+        self.shed_overload + self.shed_quota
+    }
+}
+
+/// The tenancy section of a serving report. `tenant_admitted` /
+/// `tenant_shed` are indexed by tenant id and empty when tenancy is
+/// off (no admission gate configured).
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct TenancyReport {
+    /// Per-class stats, indexed by [`RequestClass::index`].
+    pub classes: [ClassStats; CLASSES],
+    pub tenant_admitted: Vec<u64>,
+    pub tenant_shed: Vec<u64>,
+    /// Highest load at which each class was admitted (from the gate).
+    pub admit_load_max: [Option<usize>; CLASSES],
+    /// Lowest load at which each class was overload-shed.
+    pub shed_load_min: [Option<usize>; CLASSES],
+}
+
+impl TenancyReport {
+    pub fn new(tenants: usize) -> TenancyReport {
+        TenancyReport {
+            tenant_admitted: vec![0; tenants],
+            tenant_shed: vec![0; tenants],
+            ..TenancyReport::default()
+        }
+    }
+
+    pub fn class(&self, c: RequestClass) -> &ClassStats {
+        &self.classes[c.index()]
+    }
+
+    pub fn record_admit(&mut self, tenant: u32, class: RequestClass) {
+        self.classes[class.index()].admitted += 1;
+        if let Some(t) = self.tenant_slot(tenant) {
+            self.tenant_admitted[t] += 1;
+        }
+    }
+
+    pub fn record_shed(&mut self, tenant: u32, class: RequestClass,
+                       reason: ShedReason) {
+        let c = &mut self.classes[class.index()];
+        match reason {
+            ShedReason::Overload => c.shed_overload += 1,
+            ShedReason::Quota => c.shed_quota += 1,
+        }
+        if let Some(t) = self.tenant_slot(tenant) {
+            self.tenant_shed[t] += 1;
+        }
+    }
+
+    /// Record a completed stream's end-to-end latency (seconds).
+    pub fn record_done(&mut self, class: RequestClass, latency: f64) {
+        let c = &mut self.classes[class.index()];
+        c.completed += 1;
+        c.latency.record(latency);
+    }
+
+    pub fn admitted(&self) -> u64 {
+        self.classes.iter().map(|c| c.admitted).sum()
+    }
+
+    pub fn shed(&self) -> u64 {
+        self.classes.iter().map(|c| c.shed()).sum()
+    }
+
+    /// True once an admission gate has been attached (tenant-indexed
+    /// counters exist), even before any traffic.
+    pub fn enabled(&self) -> bool {
+        !self.tenant_admitted.is_empty()
+    }
+
+    /// One stats line for `prism serve` / soak output, e.g.
+    /// `admitted 970 shed 30 (overload 20, quota 10) | interactive n=...`.
+    pub fn summary(&self) -> String {
+        let overload: u64 = self.classes.iter().map(|c| c.shed_overload).sum();
+        let quota: u64 = self.classes.iter().map(|c| c.shed_quota).sum();
+        let mut s = format!("admitted {} shed {} (overload {overload}, quota {quota})",
+                            self.admitted(), self.shed());
+        for c in RequestClass::ALL.iter().rev() {
+            let cs = self.class(*c);
+            if cs.admitted == 0 && cs.shed() == 0 {
+                continue;
+            }
+            s.push_str(&format!(
+                " | {} n={} shed={} p50={:.2}ms p99={:.2}ms",
+                c.name(), cs.admitted, cs.shed(),
+                cs.latency.p50() * 1e3, cs.latency.p99() * 1e3));
+        }
+        s
+    }
+
+    fn tenant_slot(&self, tenant: u32) -> Option<usize> {
+        if self.tenant_admitted.is_empty() {
+            None
+        } else {
+            Some(tenant as usize % self.tenant_admitted.len())
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_summary_round_trip() {
+        let mut r = TenancyReport::new(3);
+        assert!(r.enabled());
+        r.record_admit(0, RequestClass::Interactive);
+        r.record_admit(1, RequestClass::Batch);
+        r.record_shed(2, RequestClass::BestEffort, ShedReason::Overload);
+        r.record_shed(0, RequestClass::Batch, ShedReason::Quota);
+        r.record_done(RequestClass::Interactive, 0.010);
+        assert_eq!(r.admitted(), 2);
+        assert_eq!(r.shed(), 2);
+        assert_eq!(r.class(RequestClass::Interactive).completed, 1);
+        assert_eq!(r.tenant_admitted, vec![1, 1, 0]);
+        assert_eq!(r.tenant_shed, vec![1, 0, 1]);
+        let s = r.summary();
+        assert!(s.contains("admitted 2 shed 2 (overload 1, quota 1)"), "{s}");
+        assert!(s.contains("interactive n=1"), "{s}");
+        // empty report (tenancy off) is Default-equal and disabled
+        let empty = TenancyReport::new(0);
+        assert!(!empty.enabled());
+        assert_eq!(empty, TenancyReport::default());
+    }
+}

@@ -38,7 +38,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Context, Result};
 
-use crate::cli::Args;
+use crate::cli::{Args, ServeOpts};
 use crate::coordinator::cluster::{ClusterView, EpochPlan};
 use crate::coordinator::plan::{plans, plans_with_sizes, PartitionPlan};
 use crate::coordinator::runner::bias_for;
@@ -46,8 +46,10 @@ use crate::coordinator::segmeans::segment_means;
 use crate::coordinator::Mode;
 use crate::data::{Dataset, DatasetKind};
 use crate::decode::{DecodeSession, DecodeStats, RefCfg, RefGpt};
+use crate::metrics::tenancy::TenancyReport;
 use crate::metrics::Histogram;
 use crate::net::inproc::{mesh_with_handle, MeshHandle};
+use crate::tenant::{Admission, Verdict};
 use crate::net::mesh::{worker_mesh, MeshEdge, MeshTransport};
 use crate::net::message::Msg;
 use crate::net::transport::{RejoinBackoff, Transport, TransportError};
@@ -58,12 +60,185 @@ use crate::runtime::{Engine, Manifest, ModelCfg, Tensor, TensorData,
 use crate::util::quant::WireFmt;
 use crate::util::rng::Rng;
 
-/// One inference request: a single sample (image row / token row).
+pub use crate::tenant::RequestClass;
+
+/// One inference request — the *unified* front-door type (ISSUE 9 API
+/// redesign): eval rows and decode streams enter through the same
+/// tenant/class-tagged `Request`, built via the typed builder, so
+/// admission, quotas, and per-class metrics key off one type.
+///
+/// ```ignore
+/// let req = Request::decode(prompt)
+///     .tenant(7)
+///     .class(RequestClass::Interactive)
+///     .replicate(WireFmt::F16)
+///     .build();
+/// scheduler.submit(req, events_tx)?;
+/// ```
+///
+/// Eval requests go to [`Server::submit`] (or a cloned
+/// [`EvalSubmitter`]); decode requests go to
+/// [`DecodeScheduler::submit`]. The old pub-field `DecodeRequest` and
+/// raw channel sends are deprecated shims over this type.
+#[derive(Debug, Clone)]
 pub struct Request {
-    pub id: u64,
-    pub raw: Tensor, // shape (1, ...)
-    pub enqueued: Instant,
-    pub respond: Sender<Response>,
+    id: u64,
+    tenant: u32,
+    class: RequestClass,
+    payload: Payload,
+}
+
+#[derive(Debug, Clone)]
+pub(crate) enum Payload {
+    /// A single sample (image row / token row), shape (1, ...).
+    Eval { raw: Tensor },
+    /// An autoregressive decode stream: prefill `prompt`, then emit
+    /// `steps` greedy tokens.
+    Decode {
+        prompt: Vec<i32>,
+        steps: usize,
+        replicate: bool,
+        replica_wire: WireFmt,
+    },
+}
+
+impl Request {
+    /// Start building an eval request from one input row.
+    pub fn eval(raw: Tensor) -> RequestBuilder {
+        RequestBuilder {
+            req: Request {
+                id: 0,
+                tenant: 0,
+                class: RequestClass::Batch,
+                payload: Payload::Eval { raw },
+            },
+        }
+    }
+
+    /// Start building a decode-stream request from a prompt.
+    pub fn decode(prompt: Vec<i32>) -> RequestBuilder {
+        RequestBuilder {
+            req: Request {
+                id: 0,
+                tenant: 0,
+                class: RequestClass::Batch,
+                payload: Payload::Decode {
+                    prompt,
+                    steps: 16,
+                    replicate: false,
+                    replica_wire: WireFmt::F32,
+                },
+            },
+        }
+    }
+
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    pub fn tenant(&self) -> u32 {
+        self.tenant
+    }
+
+    pub fn class(&self) -> RequestClass {
+        self.class
+    }
+
+    pub(crate) fn into_decode_job(self, respond: Sender<DecodeEvent>)
+                                  -> Result<DecodeJob> {
+        match self.payload {
+            Payload::Decode { prompt, steps, replicate, replica_wire } => {
+                Ok(DecodeJob {
+                    id: self.id,
+                    class: self.class,
+                    prompt,
+                    steps,
+                    replicate,
+                    replica_wire,
+                    respond,
+                    seq: 0,
+                })
+            }
+            Payload::Eval { .. } => {
+                bail!("eval request {} submitted to the decode path \
+                       (use Server::submit)", self.id)
+            }
+        }
+    }
+
+    fn into_eval_job(self, respond: Sender<Response>) -> Result<EvalJob> {
+        match self.payload {
+            Payload::Eval { raw } => Ok(EvalJob {
+                id: self.id,
+                raw,
+                enqueued: Instant::now(),
+                respond,
+            }),
+            Payload::Decode { .. } => {
+                bail!("decode request {} submitted to the eval path \
+                       (use DecodeScheduler::submit)", self.id)
+            }
+        }
+    }
+}
+
+/// Typed builder for [`Request`] — the only public submission path.
+#[derive(Debug, Clone)]
+pub struct RequestBuilder {
+    req: Request,
+}
+
+impl RequestBuilder {
+    pub fn id(mut self, id: u64) -> Self {
+        self.req.id = id;
+        self
+    }
+
+    pub fn tenant(mut self, tenant: u32) -> Self {
+        self.req.tenant = tenant;
+        self
+    }
+
+    pub fn class(mut self, class: RequestClass) -> Self {
+        self.req.class = class;
+        self
+    }
+
+    /// Number of greedy tokens to generate (decode requests only;
+    /// ignored for eval rows).
+    pub fn steps(mut self, steps: usize) -> Self {
+        if let Payload::Decode { steps: s, .. } = &mut self.req.payload {
+            *s = steps;
+        }
+        self
+    }
+
+    /// Buddy-replicate the decode session's state at `wire` precision
+    /// so the stream survives device failover (f32 keeps failover
+    /// bit-identical, f16 halves replica bytes at the cost of a lossy
+    /// replica). Decode requests only.
+    pub fn replicate(mut self, wire: WireFmt) -> Self {
+        if let Payload::Decode { replicate, replica_wire, .. } =
+            &mut self.req.payload
+        {
+            *replicate = true;
+            *replica_wire = wire;
+        }
+        self
+    }
+
+    pub fn build(self) -> Request {
+        self.req
+    }
+}
+
+/// Internal eval unit of work: the batcher/master plumbing behind
+/// [`Request::eval`], carrying the response channel and enqueue time.
+pub(crate) struct EvalJob {
+    pub(crate) id: u64,
+    pub(crate) raw: Tensor, // shape (1, ...)
+    pub(crate) enqueued: Instant,
+    pub(crate) respond: Sender<Response>,
 }
 
 pub struct Response {
@@ -142,7 +317,7 @@ impl Default for FaultPolicy {
 /// restore the full geometry, symmetric to `rejoin_workers` on the
 /// multi-process mesh path.
 pub struct Server {
-    pub requests: Sender<Request>,
+    requests: Sender<EvalJob>,
     handles: Vec<std::thread::JoinHandle<Result<()>>>,
     mesh: MeshHandle,
     manifest: Arc<Manifest>,
@@ -172,8 +347,8 @@ impl Server {
         let master_ep = endpoints.pop().unwrap(); // id == p
 
         // request intake -> batcher -> master
-        let (req_tx, req_rx) = channel::<Request>();
-        let (batch_tx, batch_rx) = channel::<Vec<Request>>();
+        let (req_tx, req_rx) = channel::<EvalJob>();
+        let (batch_tx, batch_rx) = channel::<Vec<EvalJob>>();
         let flush = cfg.flush_after;
         let batcher = std::thread::Builder::new()
             .name("prism-batcher".into())
@@ -216,6 +391,24 @@ impl Server {
             pending_rejoin,
             geometry,
         })
+    }
+
+    /// Submit one eval [`Request`] (built via [`Request::eval`]);
+    /// the response arrives on `respond`. Returns the request id.
+    pub fn submit(&self, req: Request, respond: Sender<Response>)
+                  -> Result<u64> {
+        let id = req.id();
+        let job = req.into_eval_job(respond)?;
+        self.requests
+            .send(job)
+            .map_err(|_| anyhow!("server intake is closed"))?;
+        Ok(id)
+    }
+
+    /// A cloneable submission handle (e.g. for a feeder thread): the
+    /// server can shut down only after every submitter is dropped.
+    pub fn submitter(&self) -> EvalSubmitter {
+        EvalSubmitter { tx: self.requests.clone() }
     }
 
     /// The serving geometry the master last installed: (epoch, P').
@@ -267,6 +460,25 @@ impl Server {
             }
         }
         Ok(())
+    }
+}
+
+/// Cloneable eval-request submission handle (see [`Server::submitter`]).
+#[derive(Clone)]
+pub struct EvalSubmitter {
+    tx: Sender<EvalJob>,
+}
+
+impl EvalSubmitter {
+    /// Submit one eval [`Request`]; returns the request id.
+    pub fn submit(&self, req: Request, respond: Sender<Response>)
+                  -> Result<u64> {
+        let id = req.id();
+        let job = req.into_eval_job(respond)?;
+        self.tx
+            .send(job)
+            .map_err(|_| anyhow!("server intake is closed"))?;
+        Ok(id)
     }
 }
 
@@ -345,10 +557,10 @@ impl<R> BatcherCore<R> {
     }
 }
 
-fn batcher_loop(rx: Receiver<Request>, tx: Sender<Vec<Request>>,
+fn batcher_loop(rx: Receiver<EvalJob>, tx: Sender<Vec<EvalJob>>,
                 batch: usize, flush: Duration) -> Result<()> {
     let t0 = Instant::now();
-    let mut core: BatcherCore<Request> = BatcherCore::new(batch, flush);
+    let mut core: BatcherCore<EvalJob> = BatcherCore::new(batch, flush);
     loop {
         let now = t0.elapsed();
         let timeout = match core.deadline() {
@@ -728,7 +940,7 @@ fn single_pass(engine: &mut Engine, manifest: &Manifest,
 #[allow(clippy::too_many_arguments)]
 fn master_loop<T: Transport>(manifest: Arc<Manifest>, cfg: ServeConfig,
                              layers: usize,
-                             batches: Receiver<Vec<Request>>, mut ep: T,
+                             batches: Receiver<Vec<EvalJob>>, mut ep: T,
                              faults: FaultPolicy,
                              pending_rejoin: Arc<Mutex<BTreeSet<usize>>>,
                              geometry: Arc<Mutex<(u64, usize)>>)
@@ -1851,49 +2063,21 @@ fn mesh_master(manifest: Arc<Manifest>, cfg: &ServeConfig,
     Ok(latencies)
 }
 
-/// The `prism serve` fault/adaptivity knobs both masters share:
-/// gather/exchange deadline (`--gather-timeout-ms`), profile-beat
-/// pacing (`--heartbeat-ms`), the adaptive re-plan deadband
-/// (`--replan-deadband`, off unless given), the startup speed
-/// override (`--speeds a,b,c`), and link-aware exchange planning
-/// (`--link-factor`, off unless given).
-fn fault_policy_from_args(args: &Args) -> Result<FaultPolicy> {
-    let deadline = args.duration_ms_or("gather-timeout-ms", 30_000)?;
-    let replan_deadband = match args.flags.get("replan-deadband") {
-        Some(_) => {
-            let d = args.f64_or("replan-deadband", 0.3)?;
-            if !d.is_finite() || d <= 0.0 {
-                bail!("--replan-deadband wants a positive fraction, \
-                       got {d}");
-            }
-            Some(d)
+impl FaultPolicy {
+    /// The fault/adaptivity knobs both masters share, lifted from the
+    /// shared [`ServeOpts`] parser (`cli.rs`) — `serve`,
+    /// `serve --workers`, and `decode` all route through it.
+    pub fn from_opts(opts: &ServeOpts) -> FaultPolicy {
+        FaultPolicy {
+            gather_deadline: opts.gather_deadline,
+            exchange_deadline: opts.gather_deadline,
+            chaos_exit_worker: None,
+            heartbeat_every: opts.heartbeat_every,
+            replan_deadband: opts.replan_deadband,
+            static_speeds: opts.static_speeds.clone(),
+            link_factor: opts.link_factor,
         }
-        None => None,
-    };
-    let static_speeds = args.f64_list_or("speeds", &[])?;
-    if static_speeds.iter().any(|&s| !s.is_finite() || s <= 0.0) {
-        bail!("--speeds wants positive numbers, got {static_speeds:?}");
     }
-    let link_factor = match args.flags.get("link-factor") {
-        Some(_) => {
-            let f = args.f64_or("link-factor", 0.5)?;
-            if !f.is_finite() || f <= 0.0 || f >= 1.0 {
-                bail!("--link-factor wants a fraction in (0, 1), \
-                       got {f}");
-            }
-            Some(f)
-        }
-        None => None,
-    };
-    Ok(FaultPolicy {
-        gather_deadline: deadline,
-        exchange_deadline: deadline,
-        chaos_exit_worker: None,
-        heartbeat_every: args.duration_ms_or("heartbeat-ms", 100)?,
-        replan_deadband,
-        static_speeds,
-        link_factor,
-    })
 }
 
 /// `prism serve --workers host:port,...`: serve over real worker
@@ -1934,16 +2118,17 @@ fn cmd_serve_mesh(args: &Args) -> Result<()> {
     };
     let task = if cfgm.causal { "lm".into() } else { dataset.clone() };
     let ds = Dataset::load(&root, &dataset)?;
+    let opts = ServeOpts::parse(args)?;
     let cfg = ServeConfig {
         model: model.clone(),
         task,
         weights,
         mode,
-        flavor: args.str_or("kernel", "xla"),
+        flavor: opts.kernel.clone(),
         flush_after: Duration::from_millis(4),
         pace: None,
     };
-    let faults = fault_policy_from_args(args)?;
+    let faults = FaultPolicy::from_opts(&opts);
     println!("serving {model}/{dataset} mode={mode:?} over {p} worker \
               processes [{}]", addrs.join(", "));
     let mut rng = Rng::new(7);
@@ -1979,6 +2164,12 @@ fn cmd_serve_mesh(args: &Args) -> Result<()> {
 
 /// One autoregressive decode stream: prefill the prompt, then emit
 /// `steps` greedy tokens, one `DecodeEvent` per token.
+///
+/// **Deprecated shim** over the unified [`Request`] builder: construct
+/// `Request::decode(prompt).tenant(t).class(c).steps(n)` and hand it to
+/// [`DecodeScheduler::submit`] instead.
+#[deprecated(note = "build a Request via Request::decode(...) and use \
+                     DecodeScheduler::submit")]
 pub struct DecodeRequest {
     pub id: u64,
     pub prompt: Vec<i32>,
@@ -1992,6 +2183,21 @@ pub struct DecodeRequest {
     /// `DecodeSession::enable_replication_with`).
     pub replica_wire: WireFmt,
     pub respond: Sender<DecodeEvent>,
+}
+
+/// Internal decode unit of work: a tenant/class-tagged stream plus its
+/// event channel — what [`Request::decode`] lowers to at submission.
+pub(crate) struct DecodeJob {
+    pub(crate) id: u64,
+    pub(crate) class: RequestClass,
+    pub(crate) prompt: Vec<i32>,
+    pub(crate) steps: usize,
+    pub(crate) replicate: bool,
+    pub(crate) replica_wire: WireFmt,
+    pub(crate) respond: Sender<DecodeEvent>,
+    /// Admission order within the scheduler (FIFO tiebreak); assigned
+    /// by `DecodeCore::admit`.
+    pub(crate) seq: u64,
 }
 
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -2027,7 +2233,7 @@ pub(crate) enum SchedCtl {
 /// The engine-backed analogue slots in here once per-token AOT shapes
 /// exist (decode/mod.rs); the scheduling policy is backend-independent.
 pub struct DecodeScheduler {
-    pub requests: Sender<DecodeRequest>,
+    requests: Sender<DecodeJob>,
     control: Sender<SchedCtl>,
     p: usize,
     handle: std::thread::JoinHandle<Result<DecodeStats>>,
@@ -2039,12 +2245,37 @@ impl DecodeScheduler {
         // build (and thereby validate) the scheduling core up front, so
         // a bad (model, P, L) geometry errors here, not in the thread
         let core = DecodeCore::new(model, p, l, wire, prefill_chunk)?;
-        let (tx, rx) = channel::<DecodeRequest>();
+        let (tx, rx) = channel::<DecodeJob>();
         let (ctl_tx, ctl_rx) = channel::<SchedCtl>();
         let handle = std::thread::Builder::new()
             .name("prism-decode".into())
             .spawn(move || decode_loop(core, rx, ctl_rx))?;
         Ok(DecodeScheduler { requests: tx, control: ctl_tx, p, handle })
+    }
+
+    /// Submit one decode [`Request`] (built via [`Request::decode`]);
+    /// the stream's `DecodeEvent`s arrive on `respond`.
+    pub fn submit(&self, req: Request, respond: Sender<DecodeEvent>)
+                  -> Result<()> {
+        let job = req.into_decode_job(respond)?;
+        self.requests
+            .send(job)
+            .map_err(|_| anyhow!("decode scheduler is gone"))
+    }
+
+    /// Deprecated shim: lowers the old pub-field [`DecodeRequest`] onto
+    /// the unified [`Request`] submission path.
+    #[deprecated(note = "build a Request via Request::decode(...) and \
+                         use DecodeScheduler::submit")]
+    #[allow(deprecated)]
+    pub fn enqueue(&self, r: DecodeRequest) -> Result<()> {
+        let DecodeRequest { id, prompt, steps, replicate, replica_wire,
+                            respond } = r;
+        let mut b = Request::decode(prompt).id(id).steps(steps);
+        if replicate {
+            b = b.replicate(replica_wire);
+        }
+        self.submit(b.build(), respond)
     }
 
     /// Report device `dead` as lost. Applied between ticks, and before
@@ -2104,6 +2335,9 @@ struct ActiveStream {
     prefilled: usize,
     emitted: usize,
     steps: usize,
+    class: RequestClass,
+    /// Admission order (FIFO tiebreak within a class).
+    seq: u64,
     respond: Sender<DecodeEvent>,
 }
 
@@ -2139,9 +2373,9 @@ fn decode_tick(s: &mut ActiveStream, chunk: usize) -> Result<bool> {
 /// failover history to replay, so it starts directly on the re-planned
 /// (P', L') geometry — Eq. 16's re-picked L over the live devices.
 fn admit_stream(model: &Arc<RefGpt>, wire: WireFmt, view: &ClusterView,
-                req: DecodeRequest, active: &mut VecDeque<ActiveStream>) {
-    let DecodeRequest { id, prompt, steps, replicate, replica_wire,
-                        respond } = req;
+                job: DecodeJob, active: &mut VecDeque<ActiveStream>) {
+    let DecodeJob { id, class, prompt, steps, replicate, replica_wire,
+                    respond, seq } = job;
     let built = (|| -> Result<(DecodeSession, Vec<usize>)> {
         let (p_eff, l_eff) = view.geometry()?;
         let mut s = DecodeSession::new(model.clone(), p_eff, l_eff,
@@ -2160,6 +2394,8 @@ fn admit_stream(model: &Arc<RefGpt>, wire: WireFmt, view: &ClusterView,
             prefilled: 0,
             emitted: 0,
             steps,
+            class,
+            seq,
             respond,
         }),
         Err(_) => {
@@ -2282,12 +2518,43 @@ pub(crate) struct DecodeProfiling {
     profiles: Vec<DeviceProfile>,
 }
 
+/// Decode scheduling policy (ISSUE 9 tentpole). The default is the
+/// legacy continuous batch: admit immediately, advance every stream
+/// each tick. Setting `max_running`/`tick_quanta` turns on the
+/// class-aware mode: admitted streams wait in per-class queues until a
+/// running slot frees up, and each tick spends at most `tick_quanta`
+/// stream-quanta — in priority order (Interactive first, decode-phase
+/// before prefill, FIFO within a class) when `classful`, or in plain
+/// admission order when not (the unprioritized baseline the SLO tests
+/// compare against). Backpressure above this layer is the `Admission`
+/// gate; this knob decides who *runs* among the admitted.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub(crate) struct SchedPolicy {
+    pub(crate) classful: bool,
+    /// Max stream-quanta advanced per tick; 0 = advance everything.
+    pub(crate) tick_quanta: usize,
+    /// Max concurrently-running sessions; 0 = admit immediately.
+    pub(crate) max_running: usize,
+}
+
+impl Default for SchedPolicy {
+    fn default() -> SchedPolicy {
+        SchedPolicy { classful: false, tick_quanta: 0, max_running: 0 }
+    }
+}
+
 pub(crate) struct DecodeCore {
     model: Arc<RefGpt>,
     wire: WireFmt,
     chunk: usize,
     view: ClusterView,
     active: VecDeque<ActiveStream>,
+    /// Admitted-but-not-yet-running streams, one queue per class
+    /// (index = `RequestClass::index`). Only populated when
+    /// `policy.max_running > 0`.
+    pending: [VecDeque<DecodeJob>; 3],
+    next_seq: u64,
+    policy: SchedPolicy,
     total: DecodeStats,
     profiling: Option<DecodeProfiling>,
 }
@@ -2306,9 +2573,16 @@ impl DecodeCore {
             chunk: prefill_chunk.max(1),
             view,
             active: VecDeque::new(),
+            pending: Default::default(),
+            next_seq: 0,
+            policy: SchedPolicy::default(),
             total: DecodeStats::default(),
             profiling: None,
         })
+    }
+
+    pub(crate) fn set_policy(&mut self, policy: SchedPolicy) {
+        self.policy = policy;
     }
 
     /// Arm decode-path profiling: model per-token compute at
@@ -2364,10 +2638,42 @@ impl DecodeCore {
         }
     }
 
-    /// Admit one stream on the current membership's (P', L').
-    pub(crate) fn admit(&mut self, req: DecodeRequest) {
-        admit_stream(&self.model, self.wire, &self.view, req,
-                     &mut self.active);
+    /// Admit one stream. With the legacy policy the session is built
+    /// immediately on the current membership's (P', L'); with
+    /// `max_running > 0` the job waits in its class queue until a
+    /// running slot frees up (its session is then built on the
+    /// membership current *at promotion*, like any late admission).
+    pub(crate) fn admit(&mut self, mut job: DecodeJob) {
+        job.seq = self.next_seq;
+        self.next_seq += 1;
+        if self.policy.max_running == 0 {
+            admit_stream(&self.model, self.wire, &self.view, job,
+                         &mut self.active);
+        } else {
+            self.pending[job.class.index()].push_back(job);
+            self.promote();
+        }
+    }
+
+    /// Fill free running slots from the pending queues — highest class
+    /// first when classful, global admission order otherwise.
+    fn promote(&mut self) {
+        if self.policy.max_running == 0 {
+            return;
+        }
+        while self.active.len() < self.policy.max_running {
+            let qi = if self.policy.classful {
+                (0..3).rev().find(|&i| !self.pending[i].is_empty())
+            } else {
+                (0..3)
+                    .filter(|&i| !self.pending[i].is_empty())
+                    .min_by_key(|&i| self.pending[i].front().unwrap().seq)
+            };
+            let Some(qi) = qi else { return };
+            let job = self.pending[qi].pop_front().unwrap();
+            admit_stream(&self.model, self.wire, &self.view, job,
+                         &mut self.active);
+        }
     }
 
     /// Apply one membership verb to the view and every in-flight
@@ -2376,18 +2682,65 @@ impl DecodeCore {
         apply_ctl(c, &mut self.view, &mut self.active, &mut self.total);
     }
 
-    /// One scheduling tick: advance every active stream by one quantum.
+    /// One scheduling tick. Legacy policy: advance every running
+    /// stream by one quantum. Budgeted policy (`tick_quanta > 0`):
+    /// spend at most `tick_quanta` quanta on the highest-priority
+    /// streams (decode-phase before prefill, FIFO within a class) —
+    /// or on the overall-oldest streams when not classful.
     pub(crate) fn tick(&mut self) {
+        self.promote();
         let d_model = self.model.cfg.d;
-        let mut still = VecDeque::with_capacity(self.active.len());
-        while let Some(mut s) = self.active.pop_front() {
+        let budget = self.policy.tick_quanta;
+        if budget == 0 {
+            let mut still = VecDeque::with_capacity(self.active.len());
+            while let Some(mut s) = self.active.pop_front() {
+                let before = s.prefilled + s.emitted;
+                let end = decode_tick(&mut s, self.chunk);
+                Self::observe_decode_work(&mut self.profiling, d_model,
+                                          &s, before);
+                match end {
+                    Ok(false) => still.push_back(s),
+                    Ok(true) => self.total.merge(&s.session.stats()),
+                    Err(_) => {
+                        let _ = s.respond.send(DecodeEvent {
+                            id: s.id,
+                            index: s.emitted,
+                            token: -1,
+                            done: true,
+                        });
+                        self.total.merge(&s.session.stats());
+                    }
+                }
+            }
+            self.active = still;
+            self.promote();
+            return;
+        }
+        let mut order: Vec<usize> = (0..self.active.len()).collect();
+        if self.policy.classful {
+            order.sort_by_key(|&i| {
+                let s = &self.active[i];
+                (std::cmp::Reverse(s.class),
+                 s.prefilled < s.prompt.len(), // decoders before prefills
+                 s.seq)
+            });
+        } else {
+            order.sort_by_key(|&i| self.active[i].seq);
+        }
+        order.truncate(budget);
+        let mut finished: Vec<usize> = Vec::new();
+        let DecodeCore { active, profiling, total, chunk, .. } = self;
+        for &i in &order {
+            let s = &mut active[i];
             let before = s.prefilled + s.emitted;
-            let end = decode_tick(&mut s, self.chunk);
-            Self::observe_decode_work(&mut self.profiling, d_model, &s,
-                                      before);
+            let end = decode_tick(s, *chunk);
+            Self::observe_decode_work(profiling, d_model, s, before);
             match end {
-                Ok(false) => still.push_back(s),
-                Ok(true) => self.total.merge(&s.session.stats()),
+                Ok(false) => {}
+                Ok(true) => {
+                    total.merge(&s.session.stats());
+                    finished.push(i);
+                }
                 Err(_) => {
                     let _ = s.respond.send(DecodeEvent {
                         id: s.id,
@@ -2395,25 +2748,40 @@ impl DecodeCore {
                         token: -1,
                         done: true,
                     });
-                    self.total.merge(&s.session.stats());
+                    total.merge(&s.session.stats());
+                    finished.push(i);
                 }
             }
         }
-        self.active = still;
+        finished.sort_unstable_by(|a, b| b.cmp(a));
+        for i in finished {
+            self.active.remove(i);
+        }
+        self.promote();
     }
 
+    /// Streams in the system: running plus queued-for-promotion.
     pub(crate) fn active(&self) -> usize {
         self.active.len()
+            + self.pending.iter().map(|q| q.len()).sum::<usize>()
     }
 
-    pub(crate) fn finish(self) -> DecodeStats {
+    pub(crate) fn finish(mut self) -> DecodeStats {
+        // close any never-promoted streams visibly (intake closed)
+        for q in &mut self.pending {
+            while let Some(j) = q.pop_front() {
+                let _ = j.respond.send(DecodeEvent {
+                    id: j.id, index: 0, token: -1, done: true,
+                });
+            }
+        }
         self.total
     }
 }
 
-fn decode_loop(mut core: DecodeCore, rx: Receiver<DecodeRequest>,
+fn decode_loop(mut core: DecodeCore, rx: Receiver<DecodeJob>,
                ctl: Receiver<SchedCtl>) -> Result<DecodeStats> {
-    let mut pending: VecDeque<DecodeRequest> = VecDeque::new();
+    let mut pending: VecDeque<DecodeJob> = VecDeque::new();
     let mut open = true;
     loop {
         if open && core.active() == 0 && pending.is_empty() {
@@ -2459,12 +2827,13 @@ pub fn cmd_decode(args: &Args) -> Result<()> {
     let l = args.usize_or("l", 4)?;
     let steps = args.usize_or("steps", 32)?;
     let sessions = args.usize_or("sessions", 4)?;
-    let wire = WireFmt::parse(&args.str_or("wire", "f32"))?;
-    let replicate = args.bool("replicate");
-    // replication cost knob: f16 replicas halve replica_bytes (lossy on
-    // failover; f32 keeps failover bit-identical)
-    let replica_wire = WireFmt::parse(&args.str_or("replica-wire",
-                                                   "f32"))?;
+    // shared serving flags: --wire, --replicate, --replica-wire (f16
+    // replicas halve replica_bytes; f32 keeps failover bit-identical),
+    // --class / --tenants tag the generated streams
+    let opts = ServeOpts::parse(args)?;
+    let wire = opts.wire;
+    let replicate = opts.replicate;
+    let replica_wire = opts.replica_wire;
     // chaos demo: report this device dead once the stream pool has
     // emitted --fail-after tokens; replicated streams fail over. With
     // --rejoin-after N the device re-joins N tokens later and later
@@ -2498,10 +2867,20 @@ pub fn cmd_decode(args: &Args) -> Result<()> {
     for id in 0..sessions as u64 {
         let prompt: Vec<i32> =
             (0..8).map(|_| rng.range(1, cfg.vocab) as i32).collect();
-        sched.requests.send(DecodeRequest {
-            id, prompt, steps, replicate, replica_wire,
-            respond: tx.clone(),
-        })?;
+        let tenant = if opts.tenants > 0 {
+            (id % opts.tenants as u64) as u32
+        } else {
+            0
+        };
+        let mut b = Request::decode(prompt)
+            .id(id)
+            .tenant(tenant)
+            .class(opts.class)
+            .steps(steps);
+        if replicate {
+            b = b.replicate(replica_wire);
+        }
+        sched.submit(b.build(), tx.clone())?;
     }
     // every live sender now belongs to the scheduler: if its thread dies,
     // recv() errors instead of hanging this loop forever.
@@ -2592,26 +2971,57 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
         .map(|b| LinkModel::new(b.parse().unwrap_or(200.0), 1.0));
 
     let ds = Dataset::load(&root, &dataset)?;
+    let opts = ServeOpts::parse(args)?;
     let serve_cfg = ServeConfig {
         model: model.clone(),
         task,
         weights,
         mode,
-        flavor: args.str_or("kernel", "xla"),
-        flush_after: Duration::from_millis(
-            args.usize_or("flush-ms", 4)? as u64),
+        flavor: opts.kernel.clone(),
+        flush_after: opts.flush_after,
         pace,
     };
     println!("serving {model}/{dataset} mode={mode:?} \
               requests={n_requests} rate={rate}/s");
-    let faults = fault_policy_from_args(args)?;
+    let faults = FaultPolicy::from_opts(&opts);
     let server = Server::start_with(manifest.clone(), serve_cfg, faults)?;
+
+    // multi-tenant front door (--tenants N --quota R): offered
+    // requests pass the admission gate before entering the batcher;
+    // sheds are counted, not queued.
+    let mut admission = opts.tenancy().map(Admission::new).transpose()?;
+    let mut tenancy = TenancyReport::new(opts.tenants);
 
     let (resp_tx, resp_rx) = channel::<Response>();
     let mut rng = Rng::new(7);
     let t0 = Instant::now();
     let n1 = ds.x.shape[1];
+    let mut hist = Histogram::new();
+    let mut submitted = 0usize;
+    let mut received = 0usize;
     for id in 0..n_requests {
+        // drain finished responses opportunistically so the admission
+        // gate sees the true in-system load
+        while let Ok(resp) = resp_rx.try_recv() {
+            hist.record(resp.latency.as_secs_f64());
+            tenancy.record_done(opts.class, resp.latency.as_secs_f64());
+            received += 1;
+        }
+        let tenant = (id % opts.tenants.max(1)) as u32;
+        if let Some(adm) = admission.as_mut() {
+            let verdict = adm.offer(tenant, opts.class,
+                                    t0.elapsed().as_secs_f64(),
+                                    submitted - received);
+            match verdict {
+                Verdict::Admit => tenancy.record_admit(tenant, opts.class),
+                Verdict::Shed(r) => {
+                    tenancy.record_shed(tenant, opts.class, r);
+                    std::thread::sleep(Duration::from_secs_f64(
+                        rng.exponential(rate)));
+                    continue;
+                }
+            }
+        }
         let i = rng.below(ds.count());
         let raw = match ds.kind {
             DatasetKind::Vision => ds.x.slice0(i, i + 1)?,
@@ -2623,25 +3033,31 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
                 Tensor::from_i32(vec![1, cfgm.n], v)?
             }
         };
-        server.requests.send(Request {
-            id: id as u64,
-            raw,
-            enqueued: Instant::now(),
-            respond: resp_tx.clone(),
-        })?;
+        server.submit(Request::eval(raw)
+                          .id(id as u64)
+                          .tenant(tenant)
+                          .class(opts.class)
+                          .build(),
+                      resp_tx.clone())?;
+        submitted += 1;
         std::thread::sleep(Duration::from_secs_f64(
             rng.exponential(rate)));
     }
-    let mut hist = Histogram::new();
-    for _ in 0..n_requests {
+    while received < submitted {
         let resp = resp_rx.recv()?;
         hist.record(resp.latency.as_secs_f64());
+        tenancy.record_done(opts.class, resp.latency.as_secs_f64());
+        received += 1;
     }
     let wall = t0.elapsed().as_secs_f64();
     server.shutdown()?;
     println!("throughput : {:.1} req/s ({} requests in {:.2}s)",
-             n_requests as f64 / wall, n_requests, wall);
+             submitted as f64 / wall, submitted, wall);
     println!("latency    : {}", hist.summary_ms());
+    if tenancy.enabled() {
+        println!("tenancy    : {} tenants | {}", opts.tenants,
+                 tenancy.summary());
+    }
     Ok(())
 }
 
@@ -2752,15 +3168,12 @@ mod tests {
             DecodeScheduler::start(m.clone(), p, l, wire, 2).unwrap();
         let (tx, rx) = channel::<DecodeEvent>();
         for (id, prompt, steps) in &cases {
-            sched.requests.send(DecodeRequest {
-                id: *id,
-                prompt: prompt.clone(),
-                steps: *steps,
-                replicate: false,
-                replica_wire: WireFmt::F32,
-                respond: tx.clone(),
-            })
-            .unwrap();
+            sched.submit(Request::decode(prompt.clone())
+                             .id(*id)
+                             .steps(*steps)
+                             .build(),
+                         tx.clone())
+                .unwrap();
         }
         let mut got: BTreeMap<u64, Vec<i32>> = BTreeMap::new();
         let mut done = 0;
@@ -2799,28 +3212,18 @@ mod tests {
             DecodeScheduler::start(m.clone(), 2, 4, WireFmt::F32, 4)
                 .unwrap();
         let (tx, rx) = channel::<DecodeEvent>();
-        sched.requests.send(DecodeRequest {
-            id: 7,
-            prompt: vec![1, 2, 3],
-            steps: 10,
-            replicate: false,
-            replica_wire: WireFmt::F32,
-            respond: tx.clone(),
-        })
-        .unwrap();
+        sched.submit(Request::decode(vec![1, 2, 3]).id(7).steps(10)
+                         .build(),
+                     tx.clone())
+            .unwrap();
         // wait until stream 7 starts emitting, then admit stream 8 whose
         // prompt + steps overflow the N=32 window -> must abort cleanly.
         let first = rx.recv_timeout(Duration::from_secs(60)).unwrap();
         assert_eq!(first.id, 7);
-        sched.requests.send(DecodeRequest {
-            id: 8,
-            prompt: vec![4; 30],
-            steps: 10,
-            replicate: false,
-            replica_wire: WireFmt::F32,
-            respond: tx.clone(),
-        })
-        .unwrap();
+        sched.submit(Request::decode(vec![4; 30]).id(8).steps(10)
+                         .build(),
+                     tx.clone())
+            .unwrap();
         let mut aborted = false;
         let mut done7 = false;
         let mut toks7 = 1;
@@ -2876,15 +3279,11 @@ mod tests {
             (0u64, vec![3i32, 7, 1, 12, 5], true),
             (1, vec![2, 2, 9], false),
         ] {
-            sched.requests.send(DecodeRequest {
-                id,
-                prompt,
-                steps,
-                replicate,
-                replica_wire: WireFmt::F32,
-                respond: tx.clone(),
-            })
-            .unwrap();
+            let mut b = Request::decode(prompt).id(id).steps(steps);
+            if replicate {
+                b = b.replicate(WireFmt::F32);
+            }
+            sched.submit(b.build(), tx.clone()).unwrap();
         }
         let mut events: Vec<DecodeEvent> = Vec::new();
         let mut done = 0;
@@ -2896,15 +3295,11 @@ mod tests {
         // the mesh is down to its last device: losing it is fatal for
         // the next stream, which must abort, not hang
         sched.fail_device(1).unwrap();
-        sched.requests.send(DecodeRequest {
-            id: 2,
-            prompt: vec![6, 6],
-            steps,
-            replicate: true,
-            replica_wire: WireFmt::F32,
-            respond: tx.clone(),
-        })
-        .unwrap();
+        sched.submit(Request::decode(vec![6, 6]).id(2).steps(steps)
+                         .replicate(WireFmt::F32)
+                         .build(),
+                     tx.clone())
+            .unwrap();
         drop(tx);
         loop {
             let Ok(ev) = rx.recv_timeout(Duration::from_secs(60)) else {
@@ -2957,15 +3352,10 @@ mod tests {
         let steps = 6;
         let prompt = vec![3i32, 9, 1];
         sched.fail_device(1).unwrap();
-        sched.requests.send(DecodeRequest {
-            id: 0,
-            prompt: prompt.clone(),
-            steps,
-            replicate: false,
-            replica_wire: WireFmt::F32,
-            respond: tx.clone(),
-        })
-        .unwrap();
+        sched.submit(Request::decode(prompt.clone()).id(0).steps(steps)
+                         .build(),
+                     tx.clone())
+            .unwrap();
         let mut events: Vec<DecodeEvent> = Vec::new();
         while events.iter().filter(|e| e.done).count() < 1 {
             events.push(
@@ -2973,15 +3363,10 @@ mod tests {
         }
         // restore device 1: the next admitted stream is full-strength
         sched.add_device(1).unwrap();
-        sched.requests.send(DecodeRequest {
-            id: 1,
-            prompt: prompt.clone(),
-            steps,
-            replicate: false,
-            replica_wire: WireFmt::F32,
-            respond: tx.clone(),
-        })
-        .unwrap();
+        sched.submit(Request::decode(prompt.clone()).id(1).steps(steps)
+                         .build(),
+                     tx.clone())
+            .unwrap();
         drop(tx);
         while let Ok(ev) = rx.recv_timeout(Duration::from_secs(60)) {
             let last = ev.done && ev.id == 1;
@@ -3011,5 +3396,128 @@ mod tests {
             .collect();
         assert_eq!(stream(1), expect1,
                    "restored-geometry stream diverged");
+    }
+
+    /// The unified builder (ISSUE 9 API redesign) carries every field
+    /// to the decode job, and an eval row cannot enter the decode path.
+    #[test]
+    fn request_builder_round_trip() {
+        let r = Request::decode(vec![1, 2])
+            .id(9)
+            .tenant(3)
+            .class(RequestClass::Interactive)
+            .steps(5)
+            .replicate(WireFmt::F16)
+            .build();
+        assert_eq!(r.id(), 9);
+        assert_eq!(r.tenant(), 3);
+        assert_eq!(r.class(), RequestClass::Interactive);
+        let (tx, _rx) = channel::<DecodeEvent>();
+        let job = r.into_decode_job(tx).unwrap();
+        assert_eq!(job.prompt, vec![1, 2]);
+        assert_eq!(job.steps, 5);
+        assert!(job.replicate);
+        assert_eq!(job.replica_wire, WireFmt::F16);
+        assert_eq!(job.class, RequestClass::Interactive);
+        let (tx2, _rx2) = channel::<DecodeEvent>();
+        let eval = Request::eval(
+            Tensor::from_f32(vec![1, 2], vec![0.0, 1.0]).unwrap())
+            .id(1)
+            .build();
+        assert!(eval.into_decode_job(tx2).is_err());
+        let (rtx, _rrx) = channel::<Response>();
+        let dec = Request::decode(vec![5]).build();
+        assert!(dec.into_eval_job(rtx).is_err());
+    }
+
+    /// Class-aware scheduling (ISSUE 9 tentpole): with a quanta budget
+    /// of 1 per tick, the classful policy completes Interactive >
+    /// Batch > BestEffort even though they were admitted in the
+    /// opposite order; the unprioritized baseline completes them in
+    /// admission order. Both drain everything.
+    #[test]
+    fn decode_core_classful_runs_high_class_first() {
+        let m = tiny_model();
+        let run = |classful: bool| -> Vec<u64> {
+            let mut core =
+                DecodeCore::new(m.clone(), 2, 4, WireFmt::F32, 8)
+                    .unwrap();
+            core.set_policy(SchedPolicy {
+                classful,
+                tick_quanta: 1,
+                max_running: 8,
+            });
+            let (tx, rx) = channel::<DecodeEvent>();
+            // lowest class admitted first, so FIFO and priority differ
+            for (id, class) in [
+                (0u64, RequestClass::BestEffort),
+                (1, RequestClass::Batch),
+                (2, RequestClass::Interactive),
+            ] {
+                core.admit(Request::decode(vec![3])
+                    .id(id)
+                    .class(class)
+                    .steps(1)
+                    .build()
+                    .into_decode_job(tx.clone())
+                    .unwrap());
+            }
+            drop(tx);
+            let mut guard = 0;
+            while core.active() > 0 {
+                core.tick();
+                guard += 1;
+                assert!(guard < 100, "scheduler failed to drain");
+            }
+            core.finish();
+            let mut order = Vec::new();
+            while let Ok(ev) = rx.try_recv() {
+                assert!(ev.token >= 0);
+                if ev.done {
+                    order.push(ev.id);
+                }
+            }
+            order
+        };
+        assert_eq!(run(true), vec![2, 1, 0]);
+        assert_eq!(run(false), vec![0, 1, 2]);
+    }
+
+    /// `max_running` bounds the concurrently-built sessions: queued
+    /// streams stay pending (no session, no geometry) until a slot
+    /// frees, and `active()` still counts them so callers keep ticking.
+    #[test]
+    fn decode_core_max_running_queues_admissions() {
+        let m = tiny_model();
+        let mut core =
+            DecodeCore::new(m.clone(), 2, 4, WireFmt::F32, 8).unwrap();
+        core.set_policy(SchedPolicy {
+            classful: true,
+            tick_quanta: 0, // advance all running per tick
+            max_running: 1,
+        });
+        let (tx, rx) = channel::<DecodeEvent>();
+        for id in 0..3u64 {
+            core.admit(Request::decode(vec![2])
+                .id(id)
+                .steps(1)
+                .build()
+                .into_decode_job(tx.clone())
+                .unwrap());
+        }
+        drop(tx);
+        assert_eq!(core.active(), 3); // 1 running + 2 pending
+        let mut guard = 0;
+        while core.active() > 0 {
+            core.tick();
+            guard += 1;
+            assert!(guard < 100);
+        }
+        core.finish();
+        let done: Vec<u64> = std::iter::from_fn(|| rx.try_recv().ok())
+            .filter(|e| e.done)
+            .map(|e| e.id)
+            .collect();
+        assert_eq!(done, vec![0, 1, 2]); // same class -> FIFO
     }
 }

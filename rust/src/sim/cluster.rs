@@ -33,6 +33,7 @@ use crate::coordinator::cluster::{ClusterView, EpochPlan};
 use crate::coordinator::segmeans::segment_means;
 use crate::coordinator::Mode;
 use crate::decode::{RefCfg, RefGpt};
+use crate::metrics::tenancy::TenancyReport;
 use crate::metrics::Histogram;
 use crate::net::message::Msg;
 use crate::net::simnet::{MtEndpoint, SimNetMt};
@@ -43,12 +44,34 @@ use crate::runtime::{ModelCfg, Tensor};
 use crate::server::{adaptive_replan, broadcast_reconfig, elastic_plan,
                     probe_dead, reconfigure, run_distributed,
                     stack_rows, BatcherCore, BlockRunner, DecodeCore,
-                    DecodeEvent, DecodeRequest, FaultPolicy,
-                    PassOutcome, SchedCtl, worker_loop_with};
+                    DecodeEvent, FaultPolicy, PassOutcome, Request,
+                    SchedCtl, SchedPolicy, worker_loop_with};
+use crate::tenant::{Admission, RequestClass, TenancyCfg, Verdict};
 use crate::util::rng::Rng;
 
 use super::churn::{ChurnEvent, ChurnSchedule};
 use super::workload::{Arrival, WorkloadCfg, WorkloadGen};
+
+/// Multi-tenant serving knobs for the soak: the admission gate's
+/// [`TenancyCfg`] plus the decode scheduler policy driven by it.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SimTenancy {
+    /// Admission gate: per-tenant quotas and per-class shed caps.
+    pub cfg: TenancyCfg,
+    /// Class-aware decode scheduling (Interactive first). With this
+    /// off the same load runs under the class-blind FIFO baseline —
+    /// the run the prioritized one must beat on Interactive p99.
+    pub classful: bool,
+    /// Decode quanta spent per tick (0 = advance every running
+    /// stream, the legacy sweep).
+    pub tick_quanta: usize,
+    /// Concurrently-running decode session bound; admissions beyond
+    /// it queue per class (0 = unbounded, legacy).
+    pub max_running: usize,
+    /// The Interactive-class p99 completion-latency SLO (virtual
+    /// seconds) the tenants suite asserts.
+    pub interactive_slo: f64,
+}
 
 /// Soak configuration; [`SoakCfg::small`] is the suite preset.
 #[derive(Clone)]
@@ -101,39 +124,132 @@ pub struct SoakCfg {
     /// fleet profile (and run the adaptive trigger at decode ticks), so
     /// a decode-only workload can reach `should_replan` too.
     pub decode_profile: bool,
+    /// Multi-tenant serving: admission gate + class-aware decode
+    /// scheduling (None = untenanted legacy soak, exactly the
+    /// pre-tenancy behaviour).
+    pub tenancy: Option<SimTenancy>,
+    /// Shape of the decode-side reference model (its `vocab` is
+    /// overridden from the workload at run time). The tenants preset
+    /// shrinks it so 10k+ streams fit the suite's wall budget.
+    pub decode_model: RefCfg,
+}
+
+/// Named-constructor builder for [`SoakCfg`]: every preset starts from
+/// [`SoakCfg::builder`]'s defaults (the `small` suite shape) and
+/// overrides only what it is about. The default churn schedule is
+/// derived from the *final* workload at [`SoakBuilder::build`] time —
+/// kill/revive cycles spread over ~80% of the expected workload span —
+/// so presets that resize the workload keep a well-placed schedule
+/// without restating it.
+pub struct SoakBuilder {
+    cfg: SoakCfg,
+    churn: Option<ChurnSchedule>,
+}
+
+impl SoakBuilder {
+    pub fn workload(mut self, workload: WorkloadCfg) -> Self {
+        self.cfg.workload = workload;
+        self
+    }
+
+    /// Explicit churn schedule (replaces the derived default).
+    pub fn churn(mut self, churn: ChurnSchedule) -> Self {
+        self.churn = Some(churn);
+        self
+    }
+
+    pub fn cost_per_elem(mut self, cost: f64) -> Self {
+        self.cfg.cost_per_elem = cost;
+        self
+    }
+
+    pub fn speeds(mut self, speeds: Vec<f64>) -> Self {
+        self.cfg.speeds = speeds;
+        self
+    }
+
+    pub fn replan_deadband(mut self, deadband: Option<f64>) -> Self {
+        self.cfg.replan_deadband = deadband;
+        self
+    }
+
+    pub fn link_factor(mut self, factor: Option<f64>) -> Self {
+        self.cfg.link_factor = factor;
+        self
+    }
+
+    pub fn decode_profile(mut self, on: bool) -> Self {
+        self.cfg.decode_profile = on;
+        self
+    }
+
+    pub fn tenancy(mut self, tenancy: Option<SimTenancy>) -> Self {
+        self.cfg.tenancy = tenancy;
+        self
+    }
+
+    pub fn decode_model(mut self, model: RefCfg) -> Self {
+        self.cfg.decode_model = model;
+        self
+    }
+
+    pub fn build(self) -> SoakCfg {
+        let SoakBuilder { mut cfg, churn } = self;
+        cfg.churn = churn.unwrap_or_else(|| {
+            // churn spread over ~80% of the expected workload span, so
+            // the last revive lands while traffic still flows
+            let horizon = cfg.workload.mean_interarrival
+                * cfg.workload.requests as f64
+                * 0.8;
+            ChurnSchedule::cycles(cfg.seed ^ 0xC0FFEE, 4, horizon, 2)
+        });
+        cfg
+    }
 }
 
 impl SoakCfg {
-    /// The suite preset: P=4 PRISM over a 1 Gbps / 50 µs mesh, tiny
-    /// synthetic shapes (the soak stresses the protocol, not FLOPs).
-    pub fn small(seed: u64) -> SoakCfg {
-        let workload = WorkloadCfg::default();
-        // churn spread over ~80% of the expected workload span, so the
-        // last revive lands while traffic still flows
-        let horizon = workload.mean_interarrival
-            * workload.requests as f64
-            * 0.8;
-        SoakCfg {
-            seed,
-            p: 4,
-            l: 4,
-            batch: 4,
-            n: 32,
-            d: 8,
-            layers: 3,
-            link: LinkModel::new(1000.0, 0.05),
-            workload,
-            churn: ChurnSchedule::cycles(seed ^ 0xC0FFEE, 4, horizon, 2),
-            deadline: Duration::from_millis(500),
-            flush_after: Duration::from_millis(4),
-            decode_tick: 0.002,
-            cost_per_elem: 0.0,
-            speeds: Vec::new(),
-            replan_deadband: None,
-            heartbeat_every: Duration::from_millis(100),
-            link_factor: None,
-            decode_profile: false,
+    /// Start a builder at the suite defaults: P=4 PRISM over a
+    /// 1 Gbps / 50 µs mesh, tiny synthetic shapes (the soak stresses
+    /// the protocol, not FLOPs), default workload, derived churn.
+    pub fn builder(seed: u64) -> SoakBuilder {
+        SoakBuilder {
+            cfg: SoakCfg {
+                seed,
+                p: 4,
+                l: 4,
+                batch: 4,
+                n: 32,
+                d: 8,
+                layers: 3,
+                link: LinkModel::new(1000.0, 0.05),
+                workload: WorkloadCfg::default(),
+                churn: ChurnSchedule::none(),
+                deadline: Duration::from_millis(500),
+                flush_after: Duration::from_millis(4),
+                decode_tick: 0.002,
+                cost_per_elem: 0.0,
+                speeds: Vec::new(),
+                replan_deadband: None,
+                heartbeat_every: Duration::from_millis(100),
+                link_factor: None,
+                decode_profile: false,
+                tenancy: None,
+                decode_model: RefCfg {
+                    vocab: 0, // overridden from the workload at run time
+                    n: 64,
+                    d: 16,
+                    heads: 2,
+                    layers: 2,
+                    ffn: 32,
+                },
+            },
+            churn: None,
         }
+    }
+
+    /// The suite preset: the builder defaults, unchanged.
+    pub fn small(seed: u64) -> SoakCfg {
+        SoakCfg::builder(seed).build()
     }
 
     /// The heterogeneous-fleet preset: modeled per-block compute time
@@ -144,17 +260,18 @@ impl SoakCfg {
     /// runs the fleet under the static equal split: the baseline the
     /// adaptive run must beat on p99.
     pub fn hetero(seed: u64) -> SoakCfg {
-        let mut cfg = SoakCfg::small(seed);
-        let horizon = cfg.workload.mean_interarrival
-            * cfg.workload.requests as f64;
-        cfg.churn = ChurnSchedule::new(vec![(
-            horizon * 0.5,
-            ChurnEvent::throttle(1, 0.5),
-        )]);
-        cfg.cost_per_elem = 1e-5;
-        cfg.speeds = vec![1.0, 1.0, 1.0, 0.25];
-        cfg.replan_deadband = Some(0.35);
-        cfg
+        let workload = WorkloadCfg::default();
+        let horizon =
+            workload.mean_interarrival * workload.requests as f64;
+        SoakCfg::builder(seed)
+            .churn(ChurnSchedule::new(vec![(
+                horizon * 0.5,
+                ChurnEvent::throttle(1, 0.5),
+            )]))
+            .cost_per_elem(1e-5)
+            .speeds(vec![1.0, 1.0, 1.0, 0.25])
+            .replan_deadband(Some(0.35))
+            .build()
     }
 
     /// Virtual timestamp of the hetero preset's throttle event.
@@ -172,25 +289,95 @@ impl SoakCfg {
     /// cleared the same config is the direct baseline the relayed plan
     /// must beat on eval p99.
     pub fn linkplan(seed: u64) -> SoakCfg {
-        let mut cfg = SoakCfg::small(seed);
-        let horizon = cfg.workload.mean_interarrival
-            * cfg.workload.requests as f64;
+        let workload = WorkloadCfg::default();
+        let horizon =
+            workload.mean_interarrival * workload.requests as f64;
         // two-step ramp on the same edge: the profiler's EWMA sees a
         // worsening crawl, not a single cliff — the deadband still has
         // to fold both into ONE re-plan (hysteresis, not ping-pong)
-        cfg.churn = ChurnSchedule::new(vec![
-            (horizon * 0.35, ChurnEvent::link_delay(0, 1, 0.05)),
-            (horizon * 0.45, ChurnEvent::link_delay(0, 1, 0.15)),
-        ]);
-        cfg.cost_per_elem = 1e-5;
-        cfg.replan_deadband = Some(0.35);
-        cfg.link_factor = Some(0.5);
-        cfg
+        SoakCfg::builder(seed)
+            .churn(ChurnSchedule::new(vec![
+                (horizon * 0.35, ChurnEvent::link_delay(0, 1, 0.05)),
+                (horizon * 0.45, ChurnEvent::link_delay(0, 1, 0.15)),
+            ]))
+            .cost_per_elem(1e-5)
+            .replan_deadband(Some(0.35))
+            .link_factor(Some(0.5))
+            .build()
     }
 
     /// Virtual timestamp of the linkplan preset's first delay step.
     pub fn linkplan_degrade_at(&self) -> Option<f64> {
         self.churn.next_at()
+    }
+
+    /// The multi-tenant preset (ISSUE 9): tens of thousands of mostly
+    /// decode streams from 40 Zipf-skewed tenants in a 15/45/40
+    /// interactive/batch/best-effort mix, pushed through the admission
+    /// gate (ascending per-class shed caps, per-tenant quotas hot
+    /// tenant 0 must hit) and a classful bounded decode scheduler —
+    /// under the default kill/revive churn, on a decode model shrunk
+    /// so 10k+ streams stay inside the suite's wall budget.
+    pub fn tenants(seed: u64) -> SoakCfg {
+        // Offered load vs service capacity, on the virtual clock: 500
+        // arrivals/s (mean_interarrival 2 ms), 97% decode. A stream
+        // needs ceil(prompt/2) prefill quanta + `steps` token quanta —
+        // 5.17 on average for prompt 2-4 / steps 2-5 — and the
+        // scheduler spends tick_quanta=4 per 2 ms tick, i.e. ~387
+        // streams/s. Demand above BestEffort's cap (700), demand of
+        // the two upper classes (~60% of offers, ~290/s) below it:
+        // the backlog climbs to ~700 and parks there, shedding
+        // best-effort, while batch (cap 1400) and interactive (2800)
+        // stay clear. Tenant 0 draws ~27% of offers under Zipf(1.1),
+        // ~110/s against a 60/s quota — the greedy client the
+        // per-tenant buckets must throttle; every other tenant fits.
+        let workload = WorkloadCfg {
+            requests: 16_000,
+            mean_interarrival: 0.002,
+            tail_alpha: 1.5,
+            decode_fraction: 0.97,
+            vocab: 20,
+            prompt_len: (2, 4),
+            steps: (2, 5),
+            tenants: 40,
+            tenant_skew: 1.1,
+            class_mix: (0.15, 0.45),
+        };
+        SoakCfg::builder(seed)
+            .workload(workload)
+            .decode_model(RefCfg {
+                vocab: 0,
+                n: 32,
+                d: 8,
+                heads: 1,
+                layers: 1,
+                ffn: 16,
+            })
+            .tenancy(Some(SimTenancy {
+                cfg: TenancyCfg {
+                    tenants: 40,
+                    quota_rate: 60.0,
+                    quota_burst: 120.0,
+                    shed_caps: [700, 1400, 2800],
+                },
+                classful: true,
+                tick_quanta: 4,
+                max_running: 48,
+                interactive_slo: 0.25,
+            }))
+            .build()
+    }
+
+    /// The class-blind baseline of [`SoakCfg::tenants`]: identical
+    /// load, identical admission gate, identical scheduler bounds —
+    /// but FIFO across classes. The prioritized run must meet the
+    /// Interactive p99 SLO this one misses.
+    pub fn tenants_unprioritized(seed: u64) -> SoakCfg {
+        let mut cfg = SoakCfg::tenants(seed);
+        if let Some(t) = cfg.tenancy.as_mut() {
+            t.classful = false;
+        }
+        cfg
     }
 }
 
@@ -232,18 +419,31 @@ pub struct SoakReport {
     /// the direct-vs-relay evidence — a relayed edge's direct bytes
     /// stop growing while its via legs carry the traffic.
     pub edge_bytes: Vec<Vec<usize>>,
+    /// Multi-tenant telemetry: per-class admission/shed counters and
+    /// completion-latency histograms, per-tenant counters, and the
+    /// admission gate's load watermarks. Default (all-zero) when the
+    /// run had no tenancy configured.
+    pub tenancy: TenancyReport,
 }
 
 impl SoakReport {
     /// Requests that went unanswered — the zero-drops acceptance is
-    /// `dropped() == 0`.
+    /// `dropped() == 0`. Shed requests never entered the system, so
+    /// they are not counted here: with tenancy on, "no drops" means
+    /// *every admitted request* completed.
     pub fn dropped(&self) -> usize {
         (self.eval_requests - self.eval_responses)
             + (self.decode_streams - self.decode_completed)
     }
 
+    /// Admitted requests (what entered the serving system).
     pub fn requests(&self) -> usize {
         self.eval_requests + self.decode_streams
+    }
+
+    /// Everything the workload offered, admitted or shed.
+    pub fn offered(&self) -> usize {
+        self.requests() + self.tenancy.shed() as usize
     }
 }
 
@@ -510,11 +710,13 @@ fn run_eval_batch(cfg: &SoakCfg, net: &SimNetMt, ep: &mut MtEndpoint,
 }
 
 /// Drain decode events after a scheduler tick, recording completion
-/// latencies on the virtual clock.
+/// latencies on the virtual clock — both in the aggregate histogram
+/// and in the completed stream's class bucket of the tenancy report.
 #[allow(clippy::too_many_arguments)]
 fn drain_decode_events(rx: &Receiver<DecodeEvent>, now: f64,
-                       meta: &mut BTreeMap<u64, f64>,
+                       meta: &mut BTreeMap<u64, (f64, RequestClass)>,
                        decode_latency: &mut Histogram,
+                       tenancy: &mut TenancyReport,
                        tokens: &mut usize, completed: &mut usize,
                        aborted: &mut usize) {
     while let Ok(ev) = rx.try_recv() {
@@ -522,10 +724,14 @@ fn drain_decode_events(rx: &Receiver<DecodeEvent>, now: f64,
             *tokens += 1;
         }
         if ev.done {
-            let arrived = meta.remove(&ev.id).unwrap_or(now);
-            decode_latency.record((now - arrived).max(0.0));
+            let (arrived, class) = meta
+                .remove(&ev.id)
+                .unwrap_or((now, RequestClass::Batch));
+            let latency = (now - arrived).max(0.0);
+            decode_latency.record(latency);
             if ev.token >= 0 {
                 *completed += 1;
+                tenancy.record_done(class, latency);
             } else {
                 *aborted += 1;
             }
@@ -590,14 +796,8 @@ pub fn run_soak(cfg: &SoakCfg) -> Result<SoakReport> {
 
     // decode side: the shared scheduling core on the reference model,
     // ticked at the configured virtual cadence
-    let dec_cfg = RefCfg {
-        vocab: cfg.workload.vocab,
-        n: 64,
-        d: 16,
-        heads: 2,
-        layers: 2,
-        ffn: 32,
-    };
+    let dec_cfg =
+        RefCfg { vocab: cfg.workload.vocab, ..cfg.decode_model };
     let dec_model = Arc::new(RefGpt::tiny(cfg.seed ^ 0xD0, dec_cfg)?);
     let mut decode = DecodeCore::new(dec_model, cfg.p, 4,
                                      crate::util::quant::WireFmt::F32,
@@ -606,8 +806,23 @@ pub fn run_soak(cfg: &SoakCfg) -> Result<SoakReport> {
         decode.enable_profiling(cfg.cost_per_elem.max(1e-9),
                                 speeds.clone());
     }
+    // multi-tenant front door: the admission gate on the virtual
+    // clock, plus the class-aware bounded decode scheduling policy
+    let mut admission = cfg
+        .tenancy
+        .as_ref()
+        .map(|t| Admission::new(t.cfg.clone()))
+        .transpose()?;
+    if let Some(t) = &cfg.tenancy {
+        decode.set_policy(SchedPolicy {
+            classful: t.classful,
+            tick_quanta: t.tick_quanta,
+            max_running: t.max_running,
+        });
+    }
     let (dec_tx, dec_rx) = channel::<DecodeEvent>();
-    let mut dec_meta: BTreeMap<u64, f64> = BTreeMap::new();
+    let mut dec_meta: BTreeMap<u64, (f64, RequestClass)> =
+        BTreeMap::new();
 
     let mut batcher: BatcherCore<EvalReq> =
         BatcherCore::new(cfg.batch, cfg.flush_after);
@@ -635,6 +850,8 @@ pub fn run_soak(cfg: &SoakCfg) -> Result<SoakReport> {
         replans: Vec::new(),
         relay_plans: Vec::new(),
         edge_bytes: Vec::new(),
+        tenancy: TenancyReport::new(
+            cfg.tenancy.as_ref().map_or(0, |t| t.cfg.tenants)),
     };
     let mut next_decode_tick: Option<f64> = None;
     let mut job_id = 0u64;
@@ -781,6 +998,7 @@ pub fn run_soak(cfg: &SoakCfg) -> Result<SoakReport> {
                 drain_decode_events(&dec_rx, net.now_secs(),
                                     &mut dec_meta,
                                     &mut report.decode_latency,
+                                    &mut report.tenancy,
                                     &mut report.decode_tokens,
                                     &mut report.decode_completed,
                                     &mut report.decode_aborted);
@@ -793,6 +1011,30 @@ pub fn run_soak(cfg: &SoakCfg) -> Result<SoakReport> {
             _ => {
                 let item = next_arrival.take().unwrap();
                 next_arrival = gen.next();
+                // the multi-tenant front door: per-class overload caps
+                // against the current in-system load, then the
+                // tenant's token bucket — a shed request never reaches
+                // the batcher or the decode scheduler
+                if let Some(adm) = admission.as_mut() {
+                    let load = (report.eval_requests
+                        - report.eval_responses)
+                        + (report.decode_streams
+                            - report.decode_completed
+                            - report.decode_aborted);
+                    match adm.offer(item.tenant, item.class, item.at,
+                                    load)
+                    {
+                        Verdict::Admit => report
+                            .tenancy
+                            .record_admit(item.tenant, item.class),
+                        Verdict::Shed(reason) => {
+                            report.tenancy.record_shed(item.tenant,
+                                                       item.class,
+                                                       reason);
+                            continue;
+                        }
+                    }
+                }
                 match item.kind {
                     Arrival::Eval => {
                         report.eval_requests += 1;
@@ -818,15 +1060,16 @@ pub fn run_soak(cfg: &SoakCfg) -> Result<SoakReport> {
                     Arrival::Decode { prompt, steps, replica_wire } => {
                         let id = report.decode_streams as u64;
                         report.decode_streams += 1;
-                        dec_meta.insert(id, item.at);
-                        decode.admit(DecodeRequest {
-                            id,
-                            prompt,
-                            steps,
-                            replicate: true,
-                            replica_wire,
-                            respond: dec_tx.clone(),
-                        });
+                        dec_meta.insert(id, (item.at, item.class));
+                        let req = Request::decode(prompt)
+                            .id(id)
+                            .tenant(item.tenant)
+                            .class(item.class)
+                            .steps(steps)
+                            .replicate(replica_wire)
+                            .build();
+                        decode.admit(
+                            req.into_decode_job(dec_tx.clone())?);
                         if next_decode_tick.is_none() {
                             next_decode_tick =
                                 Some(item.at + cfg.decode_tick);
@@ -839,9 +1082,14 @@ pub fn run_soak(cfg: &SoakCfg) -> Result<SoakReport> {
     // stragglers: ctl-driven abort events can land between ticks
     drain_decode_events(&dec_rx, net.now_secs(), &mut dec_meta,
                         &mut report.decode_latency,
+                        &mut report.tenancy,
                         &mut report.decode_tokens,
                         &mut report.decode_completed,
                         &mut report.decode_aborted);
+    if let Some(adm) = &admission {
+        report.tenancy.admit_load_max = adm.max_admit_load();
+        report.tenancy.shed_load_min = adm.min_shed_load();
+    }
 
     report.final_epoch = view.epoch();
     report.final_p = view.live();
@@ -947,6 +1195,84 @@ mod tests {
                 slow.virtual_secs, base.virtual_secs);
         assert!(slow.replans.is_empty(), "adaptive trigger was off");
         assert_eq!(slow.final_epoch, 0);
+    }
+
+    /// The builder's derived default churn matches what the flat
+    /// `small` preset always carried, and explicit churn replaces it.
+    #[test]
+    fn builder_derives_default_churn_from_the_final_workload() {
+        let small = SoakCfg::small(9);
+        let w = WorkloadCfg::default();
+        let horizon = w.mean_interarrival * w.requests as f64 * 0.8;
+        let expect = ChurnSchedule::cycles(9 ^ 0xC0FFEE, 4, horizon, 2);
+        assert_eq!(small.churn.remaining(), expect.remaining());
+        assert_eq!(small.churn.next_at(), expect.next_at());
+        assert!(small.tenancy.is_none());
+        // a resized workload moves the derived schedule with it
+        let big = SoakCfg::builder(9)
+            .workload(WorkloadCfg { requests: 4000,
+                                    ..WorkloadCfg::default() })
+            .build();
+        assert!(big.churn.next_at().unwrap()
+                > small.churn.next_at().unwrap());
+        // explicit churn wins over the derived default
+        let none = SoakCfg::builder(9)
+            .churn(ChurnSchedule::none())
+            .build();
+        assert_eq!(none.churn.remaining(), 0);
+    }
+
+    /// The tenants preset carries the admission gate, the classful
+    /// bounded scheduler, and a 10k+-stream Zipf workload; the
+    /// unprioritized twin differs ONLY in `classful`.
+    #[test]
+    fn tenants_preset_is_wellformed() {
+        let cfg = SoakCfg::tenants(11);
+        let t = cfg.tenancy.as_ref().unwrap();
+        assert!(t.classful && t.max_running > 0 && t.tick_quanta > 0);
+        assert!(t.interactive_slo > 0.0);
+        t.cfg.validate().unwrap();
+        assert_eq!(t.cfg.tenants, cfg.workload.tenants);
+        assert!(cfg.workload.requests >= 10_000);
+        assert!(cfg.workload.decode_fraction > 0.9);
+        let (fi, fb) = cfg.workload.class_mix;
+        assert!(fi > 0.0 && fb > 0.0 && fi + fb < 1.0,
+                "all three classes must occur");
+        assert!(cfg.churn.remaining() > 0, "churn interplay stays on");
+        let base = SoakCfg::tenants_unprioritized(11);
+        let bt = base.tenancy.as_ref().unwrap();
+        assert!(!bt.classful);
+        assert_eq!(bt.cfg, t.cfg);
+        assert_eq!((bt.tick_quanta, bt.max_running, bt.interactive_slo),
+                   (t.tick_quanta, t.max_running, t.interactive_slo));
+    }
+
+    /// A downsized tenancy soak balances its books: everything offered
+    /// is either admitted or shed, every admitted request completes,
+    /// and per-class completions land in the class histograms.
+    #[test]
+    fn mini_soak_with_tenancy_accounts_everything() {
+        let mut cfg = SoakCfg::tenants(13);
+        cfg.workload.requests = 400;
+        cfg.churn = ChurnSchedule::none();
+        let r = run_soak(&cfg).unwrap();
+        assert_eq!(r.offered(), 400, "{:?}", r.tenancy);
+        assert_eq!(r.tenancy.admitted() as usize, r.requests());
+        assert_eq!(r.dropped(), 0, "{r:?}");
+        assert_eq!(r.decode_aborted, 0);
+        assert!(r.tenancy.enabled());
+        let done: u64 = r.tenancy.classes.iter()
+            .map(|c| c.completed)
+            .sum();
+        assert_eq!(done as usize, r.decode_completed);
+        // untenanted runs keep an all-zero (Default) tenancy section
+        let mut legacy = SoakCfg::small(13);
+        legacy.workload.requests = 40;
+        legacy.churn = ChurnSchedule::none();
+        let lr = run_soak(&legacy).unwrap();
+        assert!(!lr.tenancy.enabled());
+        assert_eq!(lr.tenancy.shed(), 0);
+        assert_eq!(lr.offered(), lr.requests());
     }
 
     /// The reference pass equals the single-partition closed form on a

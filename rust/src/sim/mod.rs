@@ -31,5 +31,6 @@ pub mod cluster;
 pub mod workload;
 
 pub use churn::{ChurnEvent, ChurnSchedule};
-pub use cluster::{run_soak, SoakCfg, SoakReport};
+pub use cluster::{run_soak, SimTenancy, SoakBuilder, SoakCfg,
+                  SoakReport};
 pub use workload::{Arrival, WorkloadCfg, WorkloadGen, WorkloadItem};

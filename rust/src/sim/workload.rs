@@ -7,7 +7,14 @@
 //! quiet stretches punctuated by packed arrivals), and each arrival is
 //! either one eval row for the batcher or a decode stream with seeded
 //! prompt length, generation length, and replica wire format.
+//!
+//! Multi-tenancy (ISSUE 9): with `tenants > 0` every arrival is also
+//! tagged with a Zipf-skewed tenant id (tenant 0 hottest — the greedy
+//! client the quota layer exists for) and a seeded [`RequestClass`]
+//! drawn from `class_mix`. With `tenants == 0` the extra draws are
+//! skipped entirely, so legacy seeds reproduce bit-identical streams.
 
+use crate::tenant::RequestClass;
 use crate::util::quant::WireFmt;
 use crate::util::rng::Rng;
 
@@ -31,6 +38,10 @@ pub enum Arrival {
 pub struct WorkloadItem {
     pub at: f64,
     pub kind: Arrival,
+    /// Originating tenant (always 0 when `tenants == 0`).
+    pub tenant: u32,
+    /// Priority class (always `Batch` when `tenants == 0`).
+    pub class: RequestClass,
 }
 
 /// Workload shape knobs.
@@ -51,6 +62,15 @@ pub struct WorkloadCfg {
     /// Inclusive generated-token range (min >= 1: a zero-step stream
     /// closes with an abort event by contract).
     pub steps: (usize, usize),
+    /// Tenants sharing the deployment; 0 = untagged legacy workload
+    /// (tenant 0, class Batch, no extra RNG draws).
+    pub tenants: usize,
+    /// Zipf skew exponent for the tenant draw (> 0): tenant `i` gets
+    /// weight `1 / (i + 1)^skew`, so tenant 0 is the hot one.
+    pub tenant_skew: f64,
+    /// Class mix as (interactive fraction, batch fraction); the
+    /// remainder is best-effort.
+    pub class_mix: (f64, f64),
 }
 
 impl Default for WorkloadCfg {
@@ -63,6 +83,9 @@ impl Default for WorkloadCfg {
             vocab: 20,
             prompt_len: (3, 8),
             steps: (4, 12),
+            tenants: 0,
+            tenant_skew: 1.0,
+            class_mix: (0.0, 1.0),
         }
     }
 }
@@ -74,11 +97,21 @@ pub struct WorkloadGen {
     cfg: WorkloadCfg,
     now: f64,
     emitted: usize,
+    /// Cumulative (unnormalized) Zipf weights, one per tenant; empty
+    /// when tenancy is off.
+    zipf_cum: Vec<f64>,
 }
 
 impl WorkloadGen {
     pub fn new(seed: u64, cfg: WorkloadCfg) -> WorkloadGen {
-        WorkloadGen { rng: Rng::new(seed), cfg, now: 0.0, emitted: 0 }
+        let mut zipf_cum = Vec::with_capacity(cfg.tenants);
+        let mut acc = 0.0;
+        for i in 0..cfg.tenants {
+            acc += 1.0 / ((i + 1) as f64).powf(cfg.tenant_skew.max(0.0));
+            zipf_cum.push(acc);
+        }
+        WorkloadGen { rng: Rng::new(seed), cfg, now: 0.0, emitted: 0,
+                      zipf_cum }
     }
 
     /// Pareto interarrival with the configured mean, capped at 50x so
@@ -89,6 +122,25 @@ impl WorkloadGen {
         let xm = self.cfg.mean_interarrival * (a - 1.0) / a;
         let u = self.rng.f64().max(1e-12);
         (xm / u.powf(1.0 / a)).min(self.cfg.mean_interarrival * 50.0)
+    }
+
+    fn draw_tenant(&mut self) -> u32 {
+        let total = *self.zipf_cum.last().unwrap();
+        let x = self.rng.f64() * total;
+        self.zipf_cum.iter().position(|&c| x < c)
+            .unwrap_or(self.cfg.tenants - 1) as u32
+    }
+
+    fn draw_class(&mut self) -> RequestClass {
+        let (fi, fb) = self.cfg.class_mix;
+        let x = self.rng.f64();
+        if x < fi {
+            RequestClass::Interactive
+        } else if x < fi + fb {
+            RequestClass::Batch
+        } else {
+            RequestClass::BestEffort
+        }
     }
 }
 
@@ -120,7 +172,14 @@ impl Iterator for WorkloadGen {
         } else {
             Arrival::Eval
         };
-        Some(WorkloadItem { at: self.now, kind })
+        // tenancy draws come last and only when enabled, so legacy
+        // (tenants == 0) RNG streams stay bit-identical to pre-tenancy
+        let (tenant, class) = if self.cfg.tenants > 0 {
+            (self.draw_tenant(), self.draw_class())
+        } else {
+            (0, RequestClass::Batch)
+        };
+        Some(WorkloadItem { at: self.now, kind, tenant, class })
     }
 }
 
@@ -139,6 +198,10 @@ mod tests {
         let c: Vec<WorkloadItem> = WorkloadGen::new(8, cfg).collect();
         assert_ne!(a, c, "different seeds must differ");
         assert_eq!(a.len(), 200);
+        // legacy workloads are untagged
+        assert!(a.iter().all(|it| {
+            it.tenant == 0 && it.class == RequestClass::Batch
+        }));
     }
 
     #[test]
@@ -185,5 +248,52 @@ mod tests {
         // fractions in the right ballpark (seeded, not flaky)
         assert!(decodes > 450 && decodes < 750, "decodes {decodes}");
         assert!(f16 > 0 && f16 < decodes, "f16 replica mix missing");
+    }
+
+    #[test]
+    fn tenancy_off_leaves_legacy_streams_bit_identical() {
+        // the same seed with tenancy knobs present-but-off must yield
+        // exactly the legacy arrival sequence (times, kinds, shapes)
+        let legacy: Vec<WorkloadItem> =
+            WorkloadGen::new(13, WorkloadCfg::default()).collect();
+        let off = WorkloadCfg { tenant_skew: 2.0, class_mix: (0.5, 0.3),
+                                ..Default::default() }; // tenants: 0
+        let tagged: Vec<WorkloadItem> =
+            WorkloadGen::new(13, off).collect();
+        assert_eq!(legacy, tagged);
+    }
+
+    #[test]
+    fn zipf_tenants_are_skewed_and_classes_mixed() {
+        let cfg = WorkloadCfg {
+            requests: 4000,
+            tenants: 10,
+            tenant_skew: 1.2,
+            class_mix: (0.2, 0.5),
+            ..Default::default()
+        };
+        let items: Vec<WorkloadItem> =
+            WorkloadGen::new(5, cfg.clone()).collect();
+        let mut per_tenant = vec![0usize; cfg.tenants];
+        let mut per_class = [0usize; 3];
+        for it in &items {
+            per_tenant[it.tenant as usize] += 1;
+            per_class[it.class.index()] += 1;
+        }
+        // Zipf skew: the hot tenant dominates, everyone shows up
+        assert!(per_tenant[0] > 2 * per_tenant[4],
+                "tenant skew missing: {per_tenant:?}");
+        assert!(per_tenant.iter().all(|&n| n > 0), "{per_tenant:?}");
+        // class mix lands near the configured fractions
+        let frac = |n: usize| n as f64 / items.len() as f64;
+        assert!((frac(per_class[RequestClass::Interactive.index()])
+                 - 0.2).abs() < 0.05);
+        assert!((frac(per_class[RequestClass::Batch.index()])
+                 - 0.5).abs() < 0.05);
+        assert!(per_class[RequestClass::BestEffort.index()] > 0);
+        // deterministic under tenancy too
+        let again: Vec<WorkloadItem> =
+            WorkloadGen::new(5, cfg).collect();
+        assert_eq!(items, again);
     }
 }

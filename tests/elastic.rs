@@ -28,7 +28,7 @@ use prism::net::mesh::{channel_edge, hub_exchange_bytes,
 use prism::net::message::Msg;
 use prism::net::{FaultCfg, Transport, TransportError};
 use prism::runtime::Tensor;
-use prism::server::{DecodeEvent, DecodeRequest, DecodeScheduler};
+use prism::server::{DecodeEvent, DecodeScheduler, Request};
 use prism::util::quant::WireFmt;
 use prism::util::rng::Rng;
 
@@ -156,15 +156,13 @@ fn scheduler_repartitions_then_restores_over_seeds() {
             DecodeScheduler::start(m.clone(), 4, 4, WireFmt::F32, 2)
                 .unwrap();
         let (tx, rx) = channel::<DecodeEvent>();
-        sched.requests.send(DecodeRequest {
-            id: 0,
-            prompt: prompt_a.clone(),
-            steps: steps_a,
-            replicate: true,
-            replica_wire: WireFmt::F32,
-            respond: tx.clone(),
-        })
-        .unwrap();
+        sched.submit(Request::decode(prompt_a.clone())
+                         .id(0)
+                         .steps(steps_a)
+                         .replicate(WireFmt::F32)
+                         .build(),
+                     tx.clone())
+            .unwrap();
         // let stream A get moving, then kill device 1 under it
         let mut events: Vec<DecodeEvent> = Vec::new();
         while events.len() < 2 {
@@ -173,15 +171,12 @@ fn scheduler_repartitions_then_restores_over_seeds() {
         }
         sched.fail_device(1).unwrap();
         // admitted after the loss: must run on (P'=3, L'=5)
-        sched.requests.send(DecodeRequest {
-            id: 1,
-            prompt: prompt_b.clone(),
-            steps: steps_b,
-            replicate: false,
-            replica_wire: WireFmt::F32,
-            respond: tx.clone(),
-        })
-        .unwrap();
+        sched.submit(Request::decode(prompt_b.clone())
+                         .id(1)
+                         .steps(steps_b)
+                         .build(),
+                     tx.clone())
+            .unwrap();
         let done = |evs: &[DecodeEvent], id: u64| {
             evs.iter().any(|e| e.id == id && e.done)
         };
@@ -191,15 +186,12 @@ fn scheduler_repartitions_then_restores_over_seeds() {
         }
         // the device returns: the next admitted stream is full-strength
         sched.add_device(1).unwrap();
-        sched.requests.send(DecodeRequest {
-            id: 2,
-            prompt: prompt_c.clone(),
-            steps: steps_c,
-            replicate: false,
-            replica_wire: WireFmt::F32,
-            respond: tx.clone(),
-        })
-        .unwrap();
+        sched.submit(Request::decode(prompt_c.clone())
+                         .id(2)
+                         .steps(steps_c)
+                         .build(),
+                     tx.clone())
+            .unwrap();
         drop(tx);
         while !done(&events, 2) {
             events.push(
@@ -374,15 +366,13 @@ fn scheduler_f16_replicas_survive_failover() {
             .unwrap();
     let (tx, rx) = channel::<DecodeEvent>();
     let steps = 10;
-    sched.requests.send(DecodeRequest {
-        id: 0,
-        prompt: vec![3, 7, 1, 12],
-        steps,
-        replicate: true,
-        replica_wire: WireFmt::F16,
-        respond: tx.clone(),
-    })
-    .unwrap();
+    sched.submit(Request::decode(vec![3, 7, 1, 12])
+                     .id(0)
+                     .steps(steps)
+                     .replicate(WireFmt::F16)
+                     .build(),
+                 tx.clone())
+        .unwrap();
     // let it get moving, then kill device 0 under it
     let first = rx.recv_timeout(Duration::from_secs(60)).unwrap();
     assert!(first.token >= 0);

@@ -193,7 +193,7 @@ fn server_matches_runner() {
     let Some(m) = manifest() else { return };
     use prism::server::{Request, Response, ServeConfig, Server};
     use std::sync::mpsc::channel;
-    use std::time::{Duration, Instant};
+    use std::time::Duration;
 
     let ds = Dataset::load(&m.root, "synth10").unwrap();
     let ws = WeightSet::load(&m, "vit_synth10").unwrap();
@@ -213,13 +213,10 @@ fn server_matches_runner() {
     let (tx, rx) = channel::<Response>();
     for i in 0..batch {
         server
-            .requests
-            .send(Request {
-                id: i as u64,
-                raw: ds.x.slice0(i, i + 1).unwrap(),
-                enqueued: Instant::now(),
-                respond: tx.clone(),
-            })
+            .submit(Request::eval(ds.x.slice0(i, i + 1).unwrap())
+                        .id(i as u64)
+                        .build(),
+                    tx.clone())
             .unwrap();
     }
     let mut got: Vec<Option<Tensor>> = vec![None; batch];
@@ -261,7 +258,7 @@ fn server_degrades_to_single_device_on_worker_loss() {
     use prism::server::{FaultPolicy, Request, Response, ServeConfig,
                         Server};
     use std::sync::mpsc::channel;
-    use std::time::{Duration, Instant};
+    use std::time::Duration;
 
     let ds = Dataset::load(&m.root, "synth10").unwrap();
     let ws = WeightSet::load(&m, "vit_synth10").unwrap();
@@ -291,13 +288,10 @@ fn server_degrades_to_single_device_on_worker_loss() {
     for round in 0..2u64 {
         for i in 0..batch {
             server
-                .requests
-                .send(Request {
-                    id: round * batch as u64 + i as u64,
-                    raw: ds.x.slice0(i, i + 1).unwrap(),
-                    enqueued: Instant::now(),
-                    respond: tx.clone(),
-                })
+                .submit(Request::eval(ds.x.slice0(i, i + 1).unwrap())
+                            .id(round * batch as u64 + i as u64)
+                            .build(),
+                        tx.clone())
                 .unwrap();
         }
         let mut got: Vec<Option<Tensor>> = vec![None; batch];
@@ -344,7 +338,7 @@ fn server_repartitions_to_p2_on_one_of_three_worker_loss() {
     use prism::server::{FaultPolicy, Request, Response, ServeConfig,
                         Server};
     use std::sync::mpsc::channel;
-    use std::time::{Duration, Instant};
+    use std::time::Duration;
 
     let ds = Dataset::load(&m.root, "synth10").unwrap();
     let ws = WeightSet::load(&m, "vit_synth10").unwrap();
@@ -374,13 +368,10 @@ fn server_repartitions_to_p2_on_one_of_three_worker_loss() {
     for round in 0..2u64 {
         for i in 0..batch {
             server
-                .requests
-                .send(Request {
-                    id: round * batch as u64 + i as u64,
-                    raw: ds.x.slice0(i, i + 1).unwrap(),
-                    enqueued: Instant::now(),
-                    respond: tx.clone(),
-                })
+                .submit(Request::eval(ds.x.slice0(i, i + 1).unwrap())
+                            .id(round * batch as u64 + i as u64)
+                            .build(),
+                        tx.clone())
                 .unwrap();
         }
         let mut got: Vec<Option<Tensor>> = vec![None; batch];
@@ -428,7 +419,7 @@ fn server_rejoins_respawned_worker_thread_to_full_p() {
     use prism::server::{FaultPolicy, Request, Response, ServeConfig,
                         Server};
     use std::sync::mpsc::channel;
-    use std::time::{Duration, Instant};
+    use std::time::Duration;
 
     let ds = Dataset::load(&m.root, "synth10").unwrap();
     let ws = WeightSet::load(&m, "vit_synth10").unwrap();
@@ -455,18 +446,17 @@ fn server_rejoins_respawned_worker_thread_to_full_p() {
     .unwrap();
     assert_eq!(server.geometry(), (0, 3));
     let (tx, rx) = channel::<Response>();
-    // clone the intake: the closure must not hold a field borrow of
-    // `server` across the `&mut self` rejoin_worker call below
-    let requests = server.requests.clone();
+    // grab a cloneable submission handle: the closure must not hold a
+    // field borrow of `server` across the `&mut self` rejoin_worker
+    // call below
+    let submitter = server.submitter();
     let mut send_round = |round: u64| {
         for i in 0..batch {
-            requests
-                .send(Request {
-                    id: round * batch as u64 + i as u64,
-                    raw: ds.x.slice0(i, i + 1).unwrap(),
-                    enqueued: Instant::now(),
-                    respond: tx.clone(),
-                })
+            submitter
+                .submit(Request::eval(ds.x.slice0(i, i + 1).unwrap())
+                            .id(round * batch as u64 + i as u64)
+                            .build(),
+                        tx.clone())
                 .unwrap();
         }
         let mut got: Vec<Option<Tensor>> = vec![None; batch];
@@ -515,12 +505,12 @@ fn server_rejoins_respawned_worker_thread_to_full_p() {
     let (epoch_restored, p_restored) = server.geometry();
     assert_eq!(p_restored, 3, "re-join did not restore full P");
     assert!(epoch_restored > epoch_after_loss);
-    // the closure borrows tx and requests: release it first, then
+    // the closure borrows tx and the submitter: release it first, then
     // every clone of the intake — the batcher keeps serving any live
     // sender, and shutdown's join would never return
     drop(send_round);
     drop(tx);
-    drop(requests);
+    drop(submitter);
     server.shutdown().unwrap();
 }
 

@@ -100,6 +100,11 @@ fn soak_slos_hold_at_the_pinned_seed() {
             "eval max {}s", eval.max());
     assert!(report.decode_latency.p50() < 0.25,
             "decode p50 {}s", report.decode_latency.p50());
+    // tenancy off (ISSUE 9): the legacy preset carries no admission
+    // gate — nothing shed, every offered request counted as admitted
+    assert!(!report.tenancy.enabled(), "legacy soak grew a tenant gate");
+    assert_eq!(report.tenancy.shed(), 0);
+    assert_eq!(report.offered(), report.requests());
 }
 
 /// Satellite (ISSUE 5): the mesh re-join backoff pinned on a *virtual*
