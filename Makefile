@@ -10,10 +10,10 @@ PYTHON ?= python3
 CHAOS_SEEDS ?= 11,23,37,41,53,67,79,97,101,113
 
 .PHONY: all build test verify chaos elastic soak soak-hetero \
-        soak-linkplan soak-tenants chaos-mesh mesh-smoke bench-decode \
-        bench-mesh bench-soak bench-hetero bench-linkplan \
-        bench-tenants bench-hotpath ratchet ratchet-update artifacts \
-        lint fmt clean
+        soak-linkplan soak-tenants soak-ha chaos-mesh mesh-smoke \
+        bench-decode bench-mesh bench-soak bench-hetero bench-linkplan \
+        bench-tenants bench-ha bench-hotpath ratchet ratchet-update \
+        artifacts lint fmt clean
 
 all: build
 
@@ -64,6 +64,15 @@ soak-linkplan:
 soak-tenants:
 	CHAOS_SEEDS=$(CHAOS_SEEDS) $(CARGO) test --test tenants
 
+# Master-HA soak: the master itself killed mid-run — gossip liveness
+# detects the death by quorum, the standby promotes from shadowed
+# StateSync state within the suspicion deadband, zero requests drop,
+# and decode streams stay bit-identical to the no-kill twin run,
+# deterministically, per seed. Plus the gossip-convergence and
+# promotion-race property tests.
+soak-ha:
+	CHAOS_SEEDS=$(CHAOS_SEEDS) $(CARGO) test --test ha
+
 # The chaos suite over the worker-to-worker mesh transport (FaultNet
 # wraps every per-peer edge; `tests/common::mesh_transport`). The
 # elastic suite's mesh tests run unconditionally under `make elastic`.
@@ -107,6 +116,12 @@ bench-linkplan:
 bench-tenants:
 	$(CARGO) bench --bench tenants_soak
 
+# HA bench (artifact-free): master-kill soak vs no-kill twin at a
+# fixed seed — virtual promotion latency, zero drops, stream digest
+# parity; writes BENCH_ha.json.
+bench-ha:
+	$(CARGO) bench --bench ha_soak
+
 # Hot-path micro-benches (L3 section is artifact-free): oracle-vs-new
 # kernel/codec speedups + decode wire bytes; writes BENCH_hotpath.json.
 bench-hotpath:
@@ -115,12 +130,12 @@ bench-hotpath:
 # Perf ratchet: run the gated benches, then compare BENCH_*.json against
 # the committed bench_baseline.json (fails on any regression — same
 # check as the CI bench-gate job).
-ratchet: bench-decode bench-hotpath bench-tenants
+ratchet: bench-decode bench-hotpath bench-tenants bench-ha
 	$(PYTHON) scripts/bench_gate
 
 # Intentional perf change? Re-run the gated benches and rewrite the
 # baseline values in place (tolerances kept); commit the result.
-ratchet-update: bench-decode bench-hotpath bench-tenants
+ratchet-update: bench-decode bench-hotpath bench-tenants bench-ha
 	$(PYTHON) scripts/bench_gate --update
 
 # Layer-1/2 AOT lowering: produces artifacts/ (HLO text, weights,

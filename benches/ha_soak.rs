@@ -1,0 +1,104 @@
+//! §Perf HA bench: the master-kill soak (`SoakCfg::ha`) against its
+//! no-kill twin — promotion latency in *virtual* milliseconds (paced by
+//! the gossip suspicion deadband, so it is a protocol number, not a
+//! machine number), zero dropped requests across the failover, stream
+//! digest parity with the twin, and the decode/eval latency tails the
+//! failover costs.
+//!
+//! Everything runs on the virtual clock, so every reported number is
+//! deterministic for the pinned seed and machine-independent — which is
+//! what lets `scripts/bench_gate` hard-gate them in
+//! `bench_baseline.json`.
+//!
+//! Artifact-free (the sim's stand-in blocks need no AOT artifacts), so
+//! this runs on any checkout:
+//!
+//!     cargo bench --bench ha_soak
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+use anyhow::Result;
+use prism::sim::{run_soak, SoakCfg};
+use prism::util::json::Json;
+
+fn main() -> Result<()> {
+    let cfg = SoakCfg::ha(11);
+    let ha = cfg.ha.expect("HA preset arms gossip + state-sync");
+    println!("== HA soak (virtual clock, {} requests, master killed \
+              mid-run, gossip every {:?} x {} deadband) ==",
+             cfg.workload.requests, ha.gossip_every, ha.suspect_after);
+
+    let t0 = Instant::now();
+    let kill = run_soak(&cfg)?;
+    let twin = run_soak(&SoakCfg::ha_no_kill(11))?;
+    let wall = t0.elapsed().as_secs_f64();
+
+    // contract: exactly one kill and one promotion, nothing dropped,
+    // streams bit-identical to the twin, no false promotion twin-side
+    assert_eq!(kill.master_kills, 1, "preset must kill the master");
+    assert_eq!(kill.promotions, 1, "standby must promote exactly once");
+    assert_eq!(kill.dropped(), 0, "requests dropped across failover");
+    assert_eq!(twin.promotions, 0, "no-kill twin promoted (deadband \
+                                    false positive)");
+    assert_eq!(twin.dropped(), 0, "twin dropped requests");
+    let digest_mismatches = kill
+        .stream_digests
+        .iter()
+        .filter(|(id, d)| twin.stream_digests.get(id) != Some(d))
+        .count()
+        + twin
+            .stream_digests
+            .keys()
+            .filter(|id| !kill.stream_digests.contains_key(id))
+            .count();
+    assert_eq!(digest_mismatches, 0,
+               "decode streams diverged across the failover");
+    let promotion_ms = kill.promotion_latency[0] * 1e3;
+    let window_ms = ha.gossip_every.as_secs_f64()
+        * ha.suspect_after as f64 * 1e3;
+    assert!(wall < 120.0, "HA bench too slow: {wall:.1}s wall");
+
+    println!("promotion   : {promotion_ms:8.1}ms virtual (suspicion \
+              window {window_ms:.0}ms)");
+    println!("dropped     : {:8} of {} admitted requests",
+             kill.dropped(), kill.requests());
+    println!("streams     : {:8} digests, {digest_mismatches} \
+              mismatches vs no-kill twin",
+             kill.stream_digests.len());
+    println!("carryover   : {:8} re-admitted from snapshot, {} \
+              client re-sends",
+             kill.readmitted_streams, kill.resubmitted_streams);
+    println!("decode p99  : {:8.2}ms (kill) vs {:8.2}ms (twin)",
+             kill.decode_latency.p99() * 1e3,
+             twin.decode_latency.p99() * 1e3);
+    println!("eval p99    : {:8.2}ms (kill) vs {:8.2}ms (twin)",
+             kill.eval_latency.p99() * 1e3,
+             twin.eval_latency.p99() * 1e3);
+    println!("wall        : {wall:.2}s to simulate both runs");
+
+    let mut obj: BTreeMap<String, Json> = BTreeMap::new();
+    obj.insert("bench".into(), Json::Str("ha_soak".into()));
+    obj.insert("seed".into(), Json::Num(cfg.seed as f64));
+    obj.insert("requests".into(), Json::Num(kill.requests() as f64));
+    obj.insert("promotion_ms".into(), Json::Num(promotion_ms));
+    obj.insert("suspicion_window_ms".into(), Json::Num(window_ms));
+    obj.insert("dropped".into(), Json::Num(kill.dropped() as f64));
+    obj.insert("digest_mismatches".into(),
+               Json::Num(digest_mismatches as f64));
+    obj.insert("readmitted_streams".into(),
+               Json::Num(kill.readmitted_streams as f64));
+    obj.insert("resubmitted_streams".into(),
+               Json::Num(kill.resubmitted_streams as f64));
+    obj.insert("decode_p99_ms".into(),
+               Json::Num(kill.decode_latency.p99() * 1e3));
+    obj.insert("twin_decode_p99_ms".into(),
+               Json::Num(twin.decode_latency.p99() * 1e3));
+    obj.insert("eval_p99_ms".into(),
+               Json::Num(kill.eval_latency.p99() * 1e3));
+    obj.insert("wall_secs".into(), Json::Num(wall));
+    let path = "BENCH_ha.json";
+    std::fs::write(path, Json::Obj(obj).dump())?;
+    println!("json        : {path}");
+    Ok(())
+}

@@ -148,6 +148,14 @@ pub struct ServeOpts {
     pub shed_cap: usize,
     /// Class tag for generated traffic (`--class`).
     pub class: crate::tenant::RequestClass,
+    /// `Some(d)` turns on master HA (`--gossip-ms`, present flag,
+    /// default 100 ms): worker-to-worker liveness gossip plus the
+    /// master's StateSync replication beats; `None` leaves the pre-HA
+    /// protocol unchanged.
+    pub gossip_every: Option<std::time::Duration>,
+    /// Designated standby worker id (`--standby`); `None` designates
+    /// the lowest-ranked live worker.
+    pub standby: Option<usize>,
 }
 
 impl ServeOpts {
@@ -193,6 +201,20 @@ impl ServeOpts {
         if shed_cap == 0 {
             bail!("--shed-cap wants a positive load cap");
         }
+        let gossip_every = match args.flags.get("gossip-ms") {
+            Some(_) => {
+                let d = args.duration_ms_or("gossip-ms", 100)?;
+                if d.is_zero() {
+                    bail!("--gossip-ms wants a positive cadence");
+                }
+                Some(d)
+            }
+            None => None,
+        };
+        let standby = match args.flags.get("standby") {
+            Some(_) => Some(args.usize_or("standby", 0)?),
+            None => None,
+        };
         Ok(ServeOpts {
             gather_deadline: deadline,
             heartbeat_every: args.duration_ms_or("heartbeat-ms", 100)?,
@@ -212,6 +234,8 @@ impl ServeOpts {
             shed_cap,
             class: crate::tenant::RequestClass::parse(
                 &args.str_or("class", "batch"))?,
+            gossip_every,
+            standby,
         })
     }
 
@@ -285,8 +309,12 @@ mod tests {
     fn serve_opts_parses_shared_and_tenancy_flags() {
         let a = parse("serve --replan-deadband 0.35 --link-factor 0.4 \
                        --tenants 8 --quota 50 --class interactive \
-                       --replica-wire f16 --replicate --flush-ms 7");
+                       --replica-wire f16 --replicate --flush-ms 7 \
+                       --gossip-ms 50 --standby 2");
         let o = ServeOpts::parse(&a).unwrap();
+        assert_eq!(o.gossip_every,
+                   Some(std::time::Duration::from_millis(50)));
+        assert_eq!(o.standby, Some(2));
         assert_eq!(o.replan_deadband, Some(0.35));
         assert_eq!(o.link_factor, Some(0.4));
         assert_eq!(o.tenants, 8);
@@ -312,6 +340,10 @@ mod tests {
                    std::time::Duration::from_secs(30));
         assert_eq!(d.class, crate::tenant::RequestClass::Batch);
         assert!(!d.replicate);
+        // HA is opt-in: absent flags leave the pre-HA protocol alone
+        assert_eq!(d.gossip_every, None);
+        assert_eq!(d.standby, None);
+        assert!(ServeOpts::parse(&parse("serve --gossip-ms 0")).is_err());
         assert!(ServeOpts::parse(&parse("serve --quota -3")).is_err());
         assert!(ServeOpts::parse(&parse("serve --link-factor 1.5"))
                     .is_err());

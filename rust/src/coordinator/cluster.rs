@@ -111,6 +111,29 @@ impl ClusterView {
         Ok(view)
     }
 
+    /// Rebuild a view from replicated HA state (`coordinator::ha`): the
+    /// promoted standby resumes mastering at the shadowed epoch with
+    /// the shadowed live set instead of restarting at full strength /
+    /// epoch 0 — so its very next membership change broadcasts an epoch
+    /// strictly above anything the dead master ever issued, and the
+    /// workers' fail-closed epoch validation makes it win any race
+    /// against stale frames.
+    pub fn resume(base: Mode, n: usize, causal: bool, epoch: u64,
+                  live: &[usize]) -> Result<ClusterView> {
+        let mut view = ClusterView::new(base, n, causal)?;
+        for d in 0..base.p() {
+            if !live.contains(&d) {
+                view.alive[d] = false;
+            }
+        }
+        if view.live() == 0 {
+            bail!("resumed view has no live devices");
+        }
+        view.epoch = epoch;
+        view.current()?; // validate + warm the resumed geometry's plan
+        Ok(view)
+    }
+
     pub fn epoch(&self) -> u64 {
         self.epoch
     }

@@ -1,0 +1,370 @@
+//! Master high availability: standby shadowing + decentralized
+//! liveness.
+//!
+//! The master replicates its serving state to a designated standby —
+//! the lowest-ranked live worker by default, `--standby` to override —
+//! as full self-contained [`Msg::StateSync`] snapshots on the
+//! heartbeat cadence ([`Shadow`] absorbs them with a monotone
+//! `(epoch, seq)` guard, so reordered frames can never roll the shadow
+//! backwards). Master-death detection is *quorum-based rather than
+//! master-mediated*: workers gossip per-peer last-seen virtual
+//! timestamps over the existing mesh edges ([`Msg::Gossip`], merged
+//! pointwise-max into [`Liveness`]), and the standby only promotes
+//! when the merged view says the master is stale across the fleet
+//! *and* a majority of live workers are still reachable — a worker on
+//! the minority side of a partition stays put instead of forking the
+//! cluster. Promotion itself lives in `server::worker_loop_with`: the
+//! standby bumps the epoch, broadcasts `Msg::Reconfig` from its
+//! shadowed view, and re-admits the replicated decode directory.
+
+use std::time::Duration;
+
+use crate::net::message::{Msg, StreamSnap};
+
+/// Gossip / failure-detection knobs. `suspect_after` is the deadband in
+/// gossip rounds: a peer is only suspected once its merged last-seen
+/// timestamp is more than `suspect_after * every` stale, so a
+/// slow-but-alive peer that beats at the cadence (however jittered
+/// within it) is never falsely accused.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct GossipCfg {
+    /// Gossip emission cadence (also the master's StateSync cadence).
+    pub every: Duration,
+    /// Rounds of silence before a peer is suspected dead.
+    pub suspect_after: u32,
+}
+
+impl Default for GossipCfg {
+    fn default() -> Self {
+        GossipCfg { every: Duration::from_millis(100), suspect_after: 3 }
+    }
+}
+
+impl GossipCfg {
+    /// The suspicion deadband in microseconds.
+    pub fn window_us(&self) -> u64 {
+        self.every.as_micros() as u64 * self.suspect_after as u64
+    }
+}
+
+/// Per-device last-seen bookkeeping, merged across the mesh.
+///
+/// `seen[d]` is the latest virtual timestamp at which *anyone in the
+/// gossip mesh* observed a frame from device `d` (pointwise max over
+/// direct observations and received gossip). `heard[d]` is the latest
+/// timestamp at which *this* worker received any frame directly from
+/// `d` — the partition signal: merged `seen` says who the fleet thinks
+/// is alive, local `heard` says who we can actually reach.
+#[derive(Debug, Clone)]
+pub struct Liveness {
+    self_id: usize,
+    seen: Vec<u64>,
+    heard: Vec<u64>,
+}
+
+impl Liveness {
+    /// `slots` covers every device id that can appear in gossip
+    /// (workers `0..p` and the master at id `p`, so `p + 1`). All
+    /// entries start at `now_us`: a fresh worker grants the whole
+    /// fleet one full deadband before suspecting anyone.
+    pub fn new(slots: usize, self_id: usize, now_us: u64) -> Self {
+        Liveness {
+            self_id,
+            seen: vec![now_us; slots],
+            heard: vec![now_us; slots],
+        }
+    }
+
+    /// Record a frame received directly from `from` at `now_us`.
+    pub fn observe(&mut self, from: usize, now_us: u64) {
+        if let Some(s) = self.seen.get_mut(from) {
+            *s = (*s).max(now_us);
+        }
+        if let Some(h) = self.heard.get_mut(from) {
+            *h = (*h).max(now_us);
+        }
+    }
+
+    /// Merge a received gossip table, pointwise max. Out-of-range ids
+    /// are ignored — a hostile table must not grow the fleet.
+    pub fn merge(&mut self, seen: &[(u32, u64)]) {
+        for &(peer, at) in seen {
+            if let Some(s) = self.seen.get_mut(peer as usize) {
+                *s = (*s).max(at);
+            }
+        }
+    }
+
+    /// The table this worker gossips: its merged per-device view, with
+    /// its own slot stamped fresh.
+    pub fn snapshot(&mut self, now_us: u64) -> Vec<(u32, u64)> {
+        self.observe(self.self_id, now_us);
+        self.seen
+            .iter()
+            .enumerate()
+            .map(|(d, &at)| (d as u32, at))
+            .collect()
+    }
+
+    /// Live peers (self excluded) whose merged last-seen timestamp is
+    /// stale beyond the deadband.
+    pub fn suspects(&self, now_us: u64, window_us: u64,
+                    live: &[usize]) -> Vec<usize> {
+        live.iter()
+            .copied()
+            .filter(|&d| {
+                d != self.self_id
+                    && d < self.seen.len()
+                    && now_us.saturating_sub(self.seen[d]) > window_us
+            })
+            .collect()
+    }
+
+    /// Quorum rule for master death: the merged fleet view must agree
+    /// the master is stale (no one anywhere has seen it inside the
+    /// deadband), *and* this worker must have directly heard from a
+    /// strict majority of the live workers (itself included) within
+    /// the deadband — otherwise it may merely be partitioned off and
+    /// must not fork the cluster by promoting.
+    pub fn master_dead(&self, master: usize, now_us: u64, window_us: u64,
+                       live_workers: &[usize]) -> bool {
+        let stale = match self.seen.get(master) {
+            Some(&at) => now_us.saturating_sub(at) > window_us,
+            None => false,
+        };
+        if !stale {
+            return false;
+        }
+        let reachable = live_workers
+            .iter()
+            .filter(|&&w| {
+                w == self.self_id
+                    || (w < self.heard.len()
+                        && now_us.saturating_sub(self.heard[w])
+                            <= window_us)
+            })
+            .count();
+        reachable * 2 > live_workers.len()
+    }
+}
+
+/// The standby's shadowed master state: the last absorbed
+/// [`Msg::StateSync`] snapshot, guarded monotone on `(epoch, seq)` so
+/// a delayed or replayed frame can never roll it backwards. Every
+/// frame is a full snapshot, so a freshly (re)selected standby is
+/// complete after absorbing a single beat.
+#[derive(Debug, Clone, Default)]
+pub struct Shadow {
+    pub epoch: u32,
+    pub seq: u64,
+    pub mode: u8,
+    pub p: u32,
+    pub l: u32,
+    pub live: Vec<u32>,
+    pub next_seq: u64,
+    pub buckets: Vec<(u64, u64)>,
+    pub streams: Vec<StreamSnap>,
+    absorbed: bool,
+}
+
+impl Shadow {
+    /// True once at least one snapshot has been absorbed (a standby
+    /// with no shadow has nothing to promote from).
+    pub fn ready(&self) -> bool {
+        self.absorbed
+    }
+
+    /// Absorb a `StateSync` frame if it is strictly newer than the
+    /// current shadow (lexicographic on `(epoch, seq)`); returns
+    /// whether it was absorbed. Non-StateSync frames are ignored.
+    pub fn absorb(&mut self, m: &Msg) -> bool {
+        let Msg::StateSync { epoch, seq, mode, p, l, live, next_seq,
+                             buckets, streams } = m
+        else {
+            return false;
+        };
+        if self.absorbed && (*epoch, *seq) <= (self.epoch, self.seq) {
+            return false;
+        }
+        self.epoch = *epoch;
+        self.seq = *seq;
+        self.mode = *mode;
+        self.p = *p;
+        self.l = *l;
+        self.live = live.clone();
+        self.next_seq = *next_seq;
+        self.buckets = buckets.clone();
+        self.streams = streams.clone();
+        self.absorbed = true;
+        true
+    }
+
+    /// Re-encode the shadow as a `StateSync` frame at `epoch` (the
+    /// promotion announcement re-uses the wire format with the bumped
+    /// epoch). `None` until a snapshot has been absorbed.
+    pub fn to_msg(&self, epoch: u32) -> Option<Msg> {
+        if !self.absorbed {
+            return None;
+        }
+        Some(Msg::StateSync {
+            epoch,
+            seq: self.seq,
+            mode: self.mode,
+            p: self.p,
+            l: self.l,
+            live: self.live.clone(),
+            next_seq: self.next_seq,
+            buckets: self.buckets.clone(),
+            streams: self.streams.clone(),
+        })
+    }
+}
+
+/// Which live worker is the designated standby: the override if it is
+/// still alive, else the lowest-ranked live worker. `None` on an empty
+/// live set.
+pub fn standby_of(live_workers: &[usize],
+                  override_id: Option<usize>) -> Option<usize> {
+    if let Some(id) = override_id {
+        if live_workers.contains(&id) {
+            return Some(id);
+        }
+    }
+    live_workers.iter().copied().min()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const MS: u64 = 1_000;
+
+    #[test]
+    fn standby_is_lowest_live_unless_overridden() {
+        assert_eq!(standby_of(&[2, 0, 3], None), Some(0));
+        assert_eq!(standby_of(&[2, 3], None), Some(2));
+        assert_eq!(standby_of(&[2, 0, 3], Some(3)), Some(3));
+        // a dead override falls back to the lowest live worker
+        assert_eq!(standby_of(&[2, 0, 3], Some(1)), Some(0));
+        assert_eq!(standby_of(&[], None), None);
+        assert_eq!(standby_of(&[], Some(0)), None);
+    }
+
+    #[test]
+    fn gossip_window_is_cadence_times_deadband() {
+        let cfg = GossipCfg::default();
+        assert_eq!(cfg.every, Duration::from_millis(100));
+        assert_eq!(cfg.suspect_after, 3);
+        assert_eq!(cfg.window_us(), 300 * MS);
+    }
+
+    #[test]
+    fn observe_and_merge_are_pointwise_max() {
+        let mut lv = Liveness::new(4, 0, 0);
+        lv.observe(2, 50 * MS);
+        lv.observe(2, 10 * MS); // stale direct receipt cannot regress
+        assert_eq!(lv.snapshot(60 * MS)[2], (2, 50 * MS));
+        lv.merge(&[(2, 80 * MS), (1, 30 * MS), (99, 500 * MS)]);
+        let snap = lv.snapshot(60 * MS);
+        assert_eq!(snap[1], (1, 30 * MS));
+        assert_eq!(snap[2], (2, 80 * MS));
+        // snapshot stamps our own slot fresh
+        assert_eq!(snap[0], (0, 60 * MS));
+        // hostile out-of-range id was ignored, table stays 4 wide
+        assert_eq!(snap.len(), 4);
+        lv.merge(&[(2, 40 * MS)]); // stale gossip cannot regress either
+        assert_eq!(lv.snapshot(60 * MS)[2], (2, 80 * MS));
+    }
+
+    #[test]
+    fn suspects_respect_the_deadband() {
+        let cfg = GossipCfg::default();
+        let w = cfg.window_us();
+        let mut lv = Liveness::new(4, 0, 0);
+        // peer 1 beats mid-window (slow but alive), peer 2 went silent
+        // at t=0
+        lv.observe(1, w);
+        let live = [0usize, 1, 2];
+        assert_eq!(lv.suspects(2 * w, w, &live), vec![2]);
+        // at exactly the deadband boundary no one is suspected yet
+        assert!(lv.suspects(w, w, &live).is_empty());
+        // self is never in its own suspicion set
+        assert!(!lv.suspects(10 * w, w, &live).contains(&0));
+    }
+
+    #[test]
+    fn master_death_needs_staleness_and_quorum() {
+        let w = 300 * MS;
+        let master = 3usize;
+        let workers = [0usize, 1, 2];
+        let mut lv = Liveness::new(4, 0, 0);
+        let now = 2 * w;
+        // master stale, but we have heard from no other worker: a
+        // 1-of-3 island must not promote
+        assert!(!lv.master_dead(master, now, w, &workers));
+        // hearing one peer makes it 2-of-3: quorum
+        lv.observe(1, now - w);
+        assert!(lv.master_dead(master, now, w, &workers));
+        // a fresh master beat (even one merged via gossip) clears it
+        lv.merge(&[(master as u32, now)]);
+        assert!(!lv.master_dead(master, now, w, &workers));
+    }
+
+    #[test]
+    fn slow_but_alive_master_is_not_declared_dead() {
+        let w = 300 * MS;
+        let mut lv = Liveness::new(4, 0, 0);
+        lv.observe(1, 500 * MS);
+        lv.observe(2, 500 * MS);
+        // master last seen at t=250ms: inside the deadband at t=500ms
+        lv.observe(3, 250 * MS);
+        assert!(!lv.master_dead(3, 500 * MS, w, &[0, 1, 2]));
+        // ... and stale once the window truly elapses with no beat
+        assert!(lv.master_dead(3, 600 * MS, w, &[0, 1, 2]));
+    }
+
+    fn sync(epoch: u32, seq: u64) -> Msg {
+        Msg::StateSync {
+            epoch,
+            seq,
+            mode: 2,
+            p: 3,
+            l: 4,
+            live: vec![0, 1, 2],
+            next_seq: seq + 10,
+            buckets: vec![(1.0f64.to_bits(), 0.5f64.to_bits())],
+            streams: vec![],
+        }
+    }
+
+    #[test]
+    fn shadow_absorbs_monotone_on_epoch_then_seq() {
+        let mut sh = Shadow::default();
+        assert!(!sh.ready());
+        assert!(sh.to_msg(0).is_none());
+        assert!(sh.absorb(&sync(1, 5)));
+        assert!(sh.ready());
+        // same (epoch, seq) replay and older seq are inert
+        assert!(!sh.absorb(&sync(1, 5)));
+        assert!(!sh.absorb(&sync(1, 4)));
+        // newer seq within the epoch advances
+        assert!(sh.absorb(&sync(1, 6)));
+        // an older epoch is inert even with a huge seq
+        assert!(!sh.absorb(&sync(0, u64::MAX)));
+        // a newer epoch wins even with a smaller seq
+        assert!(sh.absorb(&sync(2, 0)));
+        assert_eq!((sh.epoch, sh.seq), (2, 0));
+        // non-StateSync frames are ignored
+        assert!(!sh.absorb(&Msg::Shutdown));
+        // re-encoding at a bumped epoch preserves the payload
+        match sh.to_msg(3).unwrap() {
+            Msg::StateSync { epoch, seq, live, next_seq, .. } => {
+                assert_eq!(epoch, 3);
+                assert_eq!(seq, 0);
+                assert_eq!(live, vec![0, 1, 2]);
+                assert_eq!(next_seq, 10);
+            }
+            other => panic!("expected StateSync, got {other:?}"),
+        }
+    }
+}

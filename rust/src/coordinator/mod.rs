@@ -3,6 +3,7 @@
 //! threaded serving runtime.
 pub mod cluster;
 pub mod compressor;
+pub mod ha;
 pub mod plan;
 pub mod remote;
 pub mod runner;
@@ -10,6 +11,7 @@ pub mod segmeans;
 
 pub use cluster::{ClusterView, EpochPlan};
 pub use compressor::Compressor;
+pub use ha::{standby_of, GossipCfg, Liveness, Shadow};
 pub use remote::RemoteCoordinator;
 pub use plan::{clamp_sizes_min, plans, plans_with_sizes, single_plan,
                weighted_partition_sizes, PartitionPlan};

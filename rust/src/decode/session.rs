@@ -311,6 +311,13 @@ impl DecodeSession {
         self.replicate
     }
 
+    /// The replica wire format (meaningful when `replicated()`); the
+    /// HA snapshot records it so a promoted master re-admits the
+    /// stream with the same replication contract.
+    pub fn replica_wire(&self) -> WireFmt {
+        self.replica_wire
+    }
+
     /// Live physical devices.
     pub fn live_devices(&self) -> usize {
         self.alive.iter().filter(|a| **a).count()

@@ -113,6 +113,146 @@ pub enum Msg {
         mode_p: u32,
         mode_l: u32,
     },
+    /// Master -> standby replicated-state snapshot (`coordinator::ha`):
+    /// everything the standby needs to promote if the master dies —
+    /// the epoch-tagged membership/plan (`mode`/`p`/`l` are
+    /// `Mode::to_wire`, `live` the surviving device ids in rank order),
+    /// the admission token buckets (`(tokens, last)` as f64 bits per
+    /// tenant, `tenant::Admission::export_buckets`), and the decode
+    /// directory (`StreamSnap` per live/pending stream plus the next
+    /// admission sequence number). Each frame is a full self-contained
+    /// snapshot, not an incremental delta: a freshly (re)selected
+    /// standby absorbs the very next beat from scratch, and `seq`
+    /// orders beats within an epoch so a late frame can never roll the
+    /// shadow backwards. Promotion announcements reuse the same frame
+    /// (the standby sends its shadow, epoch-bumped, to the master role
+    /// address).
+    StateSync {
+        epoch: u32,
+        seq: u64,
+        mode: u8,
+        p: u32,
+        l: u32,
+        live: Vec<u32>,
+        next_seq: u64,
+        /// Per-tenant token-bucket state: `(tokens.to_bits(),
+        /// last.to_bits())` in tenant order.
+        buckets: Vec<(u64, u64)>,
+        streams: Vec<StreamSnap>,
+    },
+    /// Worker <-> worker liveness gossip (`coordinator::ha`): `seen`
+    /// carries the sender's per-peer last-seen virtual timestamps in
+    /// microseconds (pointwise-max merged by receivers), so
+    /// master-death detection is a quorum decision over the mesh
+    /// edges instead of a master-mediated one.
+    Gossip { from: u32, seen: Vec<(u32, u64)> },
+}
+
+/// One decode stream's replicated directory entry inside a
+/// [`Msg::StateSync`] frame: identity + admission metadata
+/// (`class`/`seq` restore scheduling order, `steps` the remaining
+/// budget contract) and the full token log (`prompt`, `prefilled`
+/// prompt tokens absorbed so far, `generated` emitted tokens). Because
+/// decode is greedy and deterministic, replaying
+/// `prompt[..prefilled] ++ generated` through a fresh session rebuilds
+/// the exact f32 state — the promoted master re-admits the stream
+/// bit-identically (`resync_from_log`'s replay invariant).
+#[derive(Debug, Clone, PartialEq)]
+pub struct StreamSnap {
+    pub id: u64,
+    pub seq: u64,
+    pub class: u8,
+    pub steps: u32,
+    pub p: u32,
+    pub l: u32,
+    pub replicate: bool,
+    pub replica_wire: u8,
+    /// True for running streams (re-admitted mid-flight); false for
+    /// still-pending ones (re-queued in class/seq order).
+    pub running: bool,
+    pub prompt: Vec<i32>,
+    pub prefilled: u32,
+    pub generated: Vec<i32>,
+}
+
+/// Minimum wire bytes of one `StreamSnap` (empty token logs) — the
+/// per-entry floor that lets hostile stream counts fail closed before
+/// any allocation.
+const STREAM_SNAP_MIN_BYTES: usize = 43;
+
+impl StreamSnap {
+    fn encode_into(&self, out: &mut Vec<u8>) {
+        put_u64(out, self.id);
+        put_u64(out, self.seq);
+        out.push(self.class);
+        put_u32(out, self.steps);
+        put_u32(out, self.p);
+        put_u32(out, self.l);
+        out.push(u8::from(self.replicate) | (u8::from(self.running) << 1));
+        out.push(self.replica_wire);
+        put_u32(out, self.prompt.len() as u32);
+        for t in &self.prompt {
+            put_u32(out, *t as u32);
+        }
+        put_u32(out, self.prefilled);
+        put_u32(out, self.generated.len() as u32);
+        for t in &self.generated {
+            put_u32(out, *t as u32);
+        }
+    }
+
+    fn decode(c: &mut Cursor) -> Result<StreamSnap> {
+        let id = c.u64()?;
+        let seq = c.u64()?;
+        let class = c.u8()?;
+        let steps = c.u32()?;
+        let p = c.u32()?;
+        let l = c.u32()?;
+        let flags = c.u8()?;
+        if flags & !0b11 != 0 {
+            bail!("bad StreamSnap flags {flags:#x}");
+        }
+        let replica_wire = c.u8()?;
+        let np = c.u32()? as usize;
+        // each token costs 4 bytes: hostile counts fail closed before
+        // any allocation (division form cannot overflow)
+        if np > c.remaining() / 4 {
+            bail!("StreamSnap declares {np} prompt tokens, {} bytes \
+                   left", c.remaining());
+        }
+        let mut prompt = Vec::with_capacity(np);
+        for _ in 0..np {
+            prompt.push(c.u32()? as i32);
+        }
+        let prefilled = c.u32()?;
+        if prefilled as usize > prompt.len() {
+            bail!("StreamSnap prefilled {prefilled} > prompt {}",
+                  prompt.len());
+        }
+        let ng = c.u32()? as usize;
+        if ng > c.remaining() / 4 {
+            bail!("StreamSnap declares {ng} generated tokens, {} bytes \
+                   left", c.remaining());
+        }
+        let mut generated = Vec::with_capacity(ng);
+        for _ in 0..ng {
+            generated.push(c.u32()? as i32);
+        }
+        Ok(StreamSnap {
+            id,
+            seq,
+            class,
+            steps,
+            p,
+            l,
+            replicate: flags & 1 != 0,
+            replica_wire,
+            running: flags & 2 != 0,
+            prompt,
+            prefilled,
+            generated,
+        })
+    }
 }
 
 impl Msg {
@@ -136,6 +276,8 @@ impl Msg {
                 profile.as_ref().map_or(0, |s| s.wire_bytes())
             }
             Msg::MeshInfo { .. } => 0,
+            Msg::StateSync { .. } => 0,
+            Msg::Gossip { .. } => 0,
         }
     }
 
@@ -468,6 +610,38 @@ impl Msg {
                 put_u32(out, *mode_p);
                 put_u32(out, *mode_l);
             }
+            Msg::StateSync { epoch, seq, mode, p, l, live, next_seq,
+                             buckets, streams } => {
+                out.push(10);
+                put_u32(out, *epoch);
+                put_u64(out, *seq);
+                out.push(*mode);
+                put_u32(out, *p);
+                put_u32(out, *l);
+                put_u32(out, live.len() as u32);
+                for d in live {
+                    put_u32(out, *d);
+                }
+                put_u64(out, *next_seq);
+                put_u32(out, buckets.len() as u32);
+                for (tokens, last) in buckets {
+                    put_u64(out, *tokens);
+                    put_u64(out, *last);
+                }
+                put_u32(out, streams.len() as u32);
+                for s in streams {
+                    s.encode_into(out);
+                }
+            }
+            Msg::Gossip { from, seen } => {
+                out.push(11);
+                put_u32(out, *from);
+                put_u32(out, seen.len() as u32);
+                for (peer, at) in seen {
+                    put_u32(out, *peer);
+                    put_u64(out, *at);
+                }
+            }
         }
     }
 
@@ -661,6 +835,63 @@ impl Msg {
                     mode_l: c.u32()?,
                 }
             }
+            10 => {
+                let epoch = c.u32()?;
+                let seq = c.u64()?;
+                let mode = c.u8()?;
+                let p = c.u32()?;
+                let l = c.u32()?;
+                let n = c.u32()? as usize;
+                // each live entry costs 4 bytes: hostile counts fail
+                // closed before any allocation
+                if n > c.remaining() / 4 {
+                    bail!("StateSync declares {n} live devices, {} bytes \
+                           left", c.remaining());
+                }
+                let mut live = Vec::with_capacity(n);
+                for _ in 0..n {
+                    live.push(c.u32()?);
+                }
+                let next_seq = c.u64()?;
+                let nb = c.u32()? as usize;
+                // each bucket costs 16 bytes (tokens, last)
+                if nb > c.remaining() / 16 {
+                    bail!("StateSync declares {nb} buckets, {} bytes \
+                           left", c.remaining());
+                }
+                let mut buckets = Vec::with_capacity(nb);
+                for _ in 0..nb {
+                    let tokens = c.u64()?;
+                    buckets.push((tokens, c.u64()?));
+                }
+                let ns = c.u32()? as usize;
+                // each stream snapshot costs >= STREAM_SNAP_MIN_BYTES
+                if ns > c.remaining() / STREAM_SNAP_MIN_BYTES {
+                    bail!("StateSync declares {ns} streams, {} bytes \
+                           left", c.remaining());
+                }
+                let mut streams = Vec::with_capacity(ns);
+                for _ in 0..ns {
+                    streams.push(StreamSnap::decode(&mut c)?);
+                }
+                Msg::StateSync { epoch, seq, mode, p, l, live, next_seq,
+                                 buckets, streams }
+            }
+            11 => {
+                let from = c.u32()?;
+                let n = c.u32()? as usize;
+                // each seen entry costs 12 bytes (peer, timestamp)
+                if n > c.remaining() / 12 {
+                    bail!("Gossip declares {n} seen entries, {} bytes \
+                           left", c.remaining());
+                }
+                let mut seen = Vec::with_capacity(n);
+                for _ in 0..n {
+                    let peer = c.u32()?;
+                    seen.push((peer, c.u64()?));
+                }
+                Msg::Gossip { from, seen }
+            }
             other => bail!("unknown message tag {other}"),
         };
         if c.pos != buf.len() {
@@ -759,6 +990,64 @@ mod tests {
                 mode_p: 1,
                 mode_l: 0,
             },
+            // HA state-sync snapshot with a full decode directory
+            Msg::StateSync {
+                epoch: 3,
+                seq: 42,
+                mode: 2,
+                p: 3,
+                l: 4,
+                live: vec![0, 1, 3],
+                next_seq: 17,
+                buckets: vec![(1.5f64.to_bits(), 0.25f64.to_bits()),
+                              (0.0f64.to_bits(), 0.0f64.to_bits())],
+                streams: vec![
+                    StreamSnap {
+                        id: 9,
+                        seq: 2,
+                        class: 1,
+                        steps: 8,
+                        p: 3,
+                        l: 4,
+                        replicate: true,
+                        replica_wire: 1,
+                        running: true,
+                        prompt: vec![4, 7, -1],
+                        prefilled: 3,
+                        generated: vec![12, 5],
+                    },
+                    StreamSnap {
+                        id: 11,
+                        seq: 5,
+                        class: 0,
+                        steps: 6,
+                        p: 3,
+                        l: 4,
+                        replicate: false,
+                        replica_wire: 0,
+                        running: false,
+                        prompt: vec![2],
+                        prefilled: 0,
+                        generated: vec![],
+                    },
+                ],
+            },
+            Msg::StateSync {
+                epoch: 0,
+                seq: 0,
+                mode: 0,
+                p: 1,
+                l: 0,
+                live: vec![],
+                next_seq: 0,
+                buckets: vec![],
+                streams: vec![],
+            },
+            // liveness gossip with per-peer last-seen timestamps
+            Msg::Gossip { from: 2,
+                          seen: vec![(0, 1_000_000), (1, 0),
+                                     (3, u64::MAX)] },
+            Msg::Gossip { from: 0, seen: vec![] },
         ];
         for m in msgs {
             let buf = m.encode();
@@ -1059,6 +1348,116 @@ mod tests {
         bad.extend_from_slice(&u32::MAX.to_le_bytes());
         assert!(Msg::decode(&bad).is_err());
     }
+
+    /// Hostile `StateSync` frames fail closed: 4-billion live/bucket/
+    /// stream counts, inconsistent stream snapshots (prefilled beyond
+    /// the prompt, unknown flag bits), and every strict prefix must
+    /// error without panicking or allocating.
+    #[test]
+    fn hostile_state_sync_fails_closed() {
+        let good = Msg::StateSync {
+            epoch: 2,
+            seq: 7,
+            mode: 2,
+            p: 2,
+            l: 4,
+            live: vec![0, 1],
+            next_seq: 3,
+            buckets: vec![(1.0f64.to_bits(), 0.5f64.to_bits())],
+            streams: vec![StreamSnap {
+                id: 1,
+                seq: 0,
+                class: 2,
+                steps: 4,
+                p: 2,
+                l: 4,
+                replicate: true,
+                replica_wire: 0,
+                running: true,
+                prompt: vec![3, 1],
+                prefilled: 2,
+                generated: vec![8],
+            }],
+        };
+        let buf = good.encode();
+        assert_eq!(Msg::decode(&buf).unwrap(), good);
+        for cut in 0..buf.len() {
+            assert!(Msg::decode(&buf[..cut]).is_err(), "prefix {cut}");
+        }
+        // live count claims 4 billion devices with no bytes behind it
+        let mut bad = vec![10u8];
+        bad.extend_from_slice(&2u32.to_le_bytes()); // epoch
+        bad.extend_from_slice(&7u64.to_le_bytes()); // seq
+        bad.push(2); // mode
+        bad.extend_from_slice(&2u32.to_le_bytes()); // p
+        bad.extend_from_slice(&4u32.to_le_bytes()); // l
+        bad.extend_from_slice(&u32::MAX.to_le_bytes()); // live count
+        assert!(Msg::decode(&bad).is_err());
+        // bucket count claims 4 billion tenants, zero bytes left
+        let mut bad = vec![10u8];
+        bad.extend_from_slice(&2u32.to_le_bytes());
+        bad.extend_from_slice(&7u64.to_le_bytes());
+        bad.push(2);
+        bad.extend_from_slice(&2u32.to_le_bytes());
+        bad.extend_from_slice(&4u32.to_le_bytes());
+        bad.extend_from_slice(&0u32.to_le_bytes()); // 0 live
+        bad.extend_from_slice(&3u64.to_le_bytes()); // next_seq
+        bad.extend_from_slice(&u32::MAX.to_le_bytes()); // bucket count
+        assert!(Msg::decode(&bad).is_err());
+        // stream count claims 4 billion snapshots, zero bytes left
+        let mut bad = vec![10u8];
+        bad.extend_from_slice(&2u32.to_le_bytes());
+        bad.extend_from_slice(&7u64.to_le_bytes());
+        bad.push(2);
+        bad.extend_from_slice(&2u32.to_le_bytes());
+        bad.extend_from_slice(&4u32.to_le_bytes());
+        bad.extend_from_slice(&0u32.to_le_bytes()); // 0 live
+        bad.extend_from_slice(&3u64.to_le_bytes()); // next_seq
+        bad.extend_from_slice(&0u32.to_le_bytes()); // 0 buckets
+        bad.extend_from_slice(&u32::MAX.to_le_bytes()); // stream count
+        assert!(Msg::decode(&bad).is_err());
+        // prefilled beyond the prompt log is an inconsistent snapshot
+        let mut snap_good = match &good {
+            Msg::StateSync { streams, .. } => streams[0].clone(),
+            _ => unreachable!(),
+        };
+        snap_good.prefilled = 99;
+        let bad = Msg::StateSync {
+            streams: vec![snap_good],
+            ..good.clone()
+        };
+        assert!(Msg::decode(&bad.encode()).is_err());
+        // unknown flag bits on the stream snapshot fail closed; flags
+        // byte sits right after id/seq/class/steps/p/l of the first
+        // (only) snapshot
+        let flags_at = buf.len() - (1 + 1 + 4 + 2 * 4 + 4 + 4 + 1 * 4);
+        assert_eq!(buf[flags_at], 0b11); // replicate | running
+        let mut bad = buf.clone();
+        bad[flags_at] = 0b101;
+        assert!(Msg::decode(&bad).is_err());
+    }
+
+    /// Hostile `Gossip` frames fail closed: 4-billion seen counts and
+    /// every strict prefix must error without panicking or allocating.
+    #[test]
+    fn hostile_gossip_fails_closed() {
+        let good = Msg::Gossip { from: 1,
+                                 seen: vec![(0, 5), (2, 1_000_000)] };
+        let buf = good.encode();
+        assert_eq!(Msg::decode(&buf).unwrap(), good);
+        for cut in 0..buf.len() {
+            assert!(Msg::decode(&buf[..cut]).is_err(), "prefix {cut}");
+        }
+        // seen count claims 4 billion peers with no bytes behind it
+        let mut bad = vec![11u8];
+        bad.extend_from_slice(&1u32.to_le_bytes()); // from
+        bad.extend_from_slice(&u32::MAX.to_le_bytes()); // seen count
+        assert!(Msg::decode(&bad).is_err());
+        // trailing bytes after a valid gossip frame are rejected
+        let mut bad = buf.clone();
+        bad.push(0);
+        assert!(Msg::decode(&bad).is_err());
+    }
 }
 
 #[cfg(test)]
@@ -1095,7 +1494,7 @@ mod property_tests {
     /// One random instance of every wire variant per call index, so the
     /// property loop covers the full enum many times over.
     fn rand_msg(rng: &mut Rng) -> Msg {
-        match rng.below(10) {
+        match rng.below(12) {
             0 => Msg::Exchange {
                 epoch: rng.next_u64() as u32,
                 layer: rng.next_u64() as u32,
@@ -1193,6 +1592,30 @@ mod property_tests {
                 mode_p: rng.next_u64() as u32,
                 mode_l: rng.next_u64() as u32,
             },
+            10 => Msg::StateSync {
+                epoch: rng.next_u64() as u32,
+                seq: rng.next_u64(),
+                mode: rng.next_u64() as u8,
+                p: rng.next_u64() as u32,
+                l: rng.next_u64() as u32,
+                live: (0..rng.below(6))
+                    .map(|_| rng.next_u64() as u32)
+                    .collect(),
+                next_seq: rng.next_u64(),
+                buckets: (0..rng.below(5))
+                    .map(|_| ((rng.f64() * 8.0).to_bits(),
+                              (rng.f64() * 4.0).to_bits()))
+                    .collect(),
+                streams: (0..rng.below(4))
+                    .map(|_| rand_stream_snap(rng))
+                    .collect(),
+            },
+            11 => Msg::Gossip {
+                from: rng.next_u64() as u32,
+                seen: (0..rng.below(6))
+                    .map(|_| (rng.next_u64() as u32, rng.next_u64()))
+                    .collect(),
+            },
             _ => Msg::Heartbeat {
                 from: rng.next_u64() as u32,
                 seq: rng.next_u64(),
@@ -1202,6 +1625,32 @@ mod property_tests {
                     None
                 },
             },
+        }
+    }
+
+    /// Random valid decode-directory entry: `prefilled` never exceeds
+    /// the prompt log (the codec rejects inconsistent snapshots by
+    /// design).
+    fn rand_stream_snap(rng: &mut Rng) -> StreamSnap {
+        let prompt: Vec<i32> = (0..rng.range(1, 6))
+            .map(|_| rng.next_u64() as i32)
+            .collect();
+        let prefilled = rng.below(prompt.len() + 1) as u32;
+        StreamSnap {
+            id: rng.next_u64(),
+            seq: rng.next_u64(),
+            class: rng.below(3) as u8,
+            steps: rng.next_u64() as u32,
+            p: rng.next_u64() as u32,
+            l: rng.next_u64() as u32,
+            replicate: rng.chance(0.5),
+            replica_wire: rng.below(3) as u8,
+            running: rng.chance(0.5),
+            prompt,
+            prefilled,
+            generated: (0..rng.below(5))
+                .map(|_| rng.next_u64() as i32)
+                .collect(),
         }
     }
 

@@ -43,6 +43,7 @@ use crate::coordinator::cluster::{ClusterView, EpochPlan};
 use crate::coordinator::plan::{plans, plans_with_sizes, PartitionPlan};
 use crate::coordinator::runner::bias_for;
 use crate::coordinator::segmeans::segment_means;
+use crate::coordinator::{standby_of, GossipCfg, Liveness, Shadow};
 use crate::coordinator::Mode;
 use crate::data::{Dataset, DatasetKind};
 use crate::decode::{DecodeSession, DecodeStats, RefCfg, RefGpt};
@@ -51,7 +52,7 @@ use crate::metrics::Histogram;
 use crate::net::inproc::{mesh_with_handle, MeshHandle};
 use crate::tenant::{Admission, Verdict};
 use crate::net::mesh::{worker_mesh, MeshEdge, MeshTransport};
-use crate::net::message::Msg;
+use crate::net::message::{Msg, StreamSnap};
 use crate::net::transport::{RejoinBackoff, Transport, TransportError};
 use crate::profile::{DeviceProfile, FleetProfile, ProfileSample};
 use crate::net::LinkModel;
@@ -293,6 +294,22 @@ pub struct FaultPolicy {
     /// per-device link factors fold into the weighted split. `None`
     /// (the default) keeps planning purely compute-driven.
     pub link_factor: Option<f64>,
+    /// Test hook (the coordinator-side twin of `chaos_exit_worker`):
+    /// the master exits silently before issuing the batch with this
+    /// 1-based index, modeling a coordinator crash mid-run.
+    pub chaos_exit_master: Option<u64>,
+    /// Master high availability (`coordinator::ha`): `Some(d)` turns on
+    /// worker-to-worker liveness gossip at cadence `d` (and the
+    /// master's `StateSync` replication beats to the standby on the
+    /// same cadence); `None` (the default) leaves the pre-HA protocol
+    /// byte-identical.
+    pub gossip_every: Option<Duration>,
+    /// Gossip rounds of silence before a peer is suspected dead (the
+    /// false-positive deadband; see `ha::GossipCfg`).
+    pub suspect_after: u32,
+    /// Standby override (`--standby`): the designated standby worker
+    /// id. `None` designates the lowest-ranked live worker.
+    pub standby: Option<usize>,
 }
 
 impl Default for FaultPolicy {
@@ -305,6 +322,10 @@ impl Default for FaultPolicy {
             replan_deadband: None,
             static_speeds: Vec::new(),
             link_factor: None,
+            chaos_exit_master: None,
+            gossip_every: None,
+            suspect_after: 3,
+            standby: None,
         }
     }
 }
@@ -708,10 +729,15 @@ pub(crate) fn run_distributed<T: Transport>(current: &EpochPlan,
                 // the mesh re-join path can deliver a late bring-up
                 // beat; liveness bookkeeping is not a gather error
                 Msg::Heartbeat { .. } => continue,
-                // stale FinalParts and beats are the only traffic ever
-                // addressed to the master mid-gather; anything else is
-                // a protocol bug worth hearing about, not a silent
-                // deadline
+                // HA control traffic can straddle a gather: a worker's
+                // gossip table, or a racing promotion announcement
+                // addressed to the master role. Both are inert here —
+                // epoch validation settles any race at the workers.
+                Msg::Gossip { .. } | Msg::StateSync { .. } => continue,
+                // stale FinalParts and beats are the only other traffic
+                // ever addressed to the master mid-gather; anything
+                // else is a protocol bug worth hearing about, not a
+                // silent deadline
                 other => bail!("master expected FinalPart, got {other:?}"),
             },
             Err(TransportError::Timeout { .. }) => {
@@ -968,7 +994,14 @@ fn master_loop<T: Transport>(manifest: Arc<Manifest>, cfg: ServeConfig,
     }
 
     let mut job_id = 0u64;
+    let mut sync_seq = 0u64;
     while let Ok(reqs) = batches.recv() {
+        if faults.chaos_exit_master == Some(job_id + 1) {
+            // test hook: the coordinator dies silently before issuing
+            // this batch — workers see its endpoint go dark, and with
+            // HA on the gossip quorum elects the standby
+            return Ok(());
+        }
         // the thread re-join point: respawned worker slots are
         // re-admitted on batch boundaries, symmetric to the mesh
         // path's `rejoin_workers`. A respawned slot whose device the
@@ -1005,6 +1038,35 @@ fn master_loop<T: Transport>(manifest: Arc<Manifest>, cfg: ServeConfig,
         }
         *geometry.lock().unwrap() =
             (current.epoch, current.p().max(1));
+        // HA: one thin replication beat per batch — the batch-eval
+        // master has no decode directory or tenancy ledger to ship, so
+        // the snapshot carries membership + plan only; light
+        // Heartbeats keep every worker's gossip view of the master
+        // fresh between jobs
+        if faults.gossip_every.is_some() && current.p() > 1 {
+            sync_seq += 1;
+            let (tag, mp, ml) = current.mode.to_wire();
+            if let Some(sb) = standby_of(&current.devices,
+                                         faults.standby) {
+                let _ = ep.send(sb, Msg::StateSync {
+                    epoch: current.epoch as u32,
+                    seq: sync_seq,
+                    mode: tag,
+                    p: mp,
+                    l: ml,
+                    live: current.devices.iter()
+                                 .map(|&d| d as u32)
+                                 .collect(),
+                    next_seq: 0,
+                    buckets: Vec::new(),
+                    streams: Vec::new(),
+                });
+            }
+            for &wid in &current.devices {
+                let _ = ep.send(wid, Msg::Heartbeat {
+                    from: p as u32, seq: 0, profile: None });
+            }
+        }
         let rows: Vec<&Tensor> = reqs.iter().map(|r| &r.raw).collect();
         let raw = stack_rows(&rows, batch)?;
         let x0 = engine.run(&embed_name, &ws, 0, &[&raw])?.remove(0);
@@ -1441,8 +1503,14 @@ fn run_job<T: Transport>(runner: &mut dyn BlockRunner,
                         // anything older is a stale duplicate: drop
                     }
                     Msg::Shutdown => return Ok(JobEnd::Shutdown),
+                    // fail-closed epoch validation: only a *newer* epoch
+                    // may interrupt a barrier. During an HA promotion
+                    // race both the standby (epoch+1) and a wedged old
+                    // master (stale epoch) can emit Reconfig; the stale
+                    // frame must be inert or the loser could roll the
+                    // cluster back onto a dead plan.
                     Msg::Reconfig { epoch, mode, p, l, live, sizes,
-                                    relays } => {
+                                    relays } if epoch > st.epoch => {
                         return Ok(JobEnd::Reconfig { epoch, mode, p, l,
                                                      live, sizes,
                                                      relays });
@@ -1526,6 +1594,31 @@ fn apply_reconfig(runner: &mut dyn BlockRunner, model: &ModelCfg,
         .map(Some)
 }
 
+/// The standby's takeover (`coordinator::ha`): resume the shadowed
+/// view at the shadowed epoch, leave the compute set — the promoted
+/// node is the coordinator now, and leaving bumps the epoch strictly
+/// past anything the dead master ever issued, so the workers'
+/// fail-closed validation makes this plan beat any stale frame —
+/// broadcast the bumped-epoch `Reconfig`, announce the promoted
+/// snapshot to the master's role address (id `p`, where the harness /
+/// supervisor resumes mastering from it), and exit the worker loop.
+fn promote_standby<T: Transport>(model: &ModelCfg, base: Mode,
+                                 ep: &mut T, wid: usize,
+                                 shadow: &Shadow, live: &[usize])
+                                 -> Result<()> {
+    let mut view = ClusterView::resume(base, model.n, model.causal,
+                                       shadow.epoch as u64, live)?;
+    view.fail_device(wid)?;
+    let plan = elastic_plan(&|_| true, model.n, &mut view)?;
+    broadcast_reconfig(ep, &plan, &[]);
+    if let Some(m) = shadow.to_msg(view.epoch() as u32) {
+        let _ = ep.send(base.p(), m);
+    }
+    eprintln!("[worker {wid}] promoted to master at epoch {}",
+              view.epoch());
+    Ok(())
+}
+
 /// The engine-backed worker loop: load weights, build the AOT runner,
 /// and run the transport-generic protocol (`worker_loop_with`).
 fn worker_loop<T: Transport>(manifest: Arc<Manifest>, cfg: ServeConfig,
@@ -1583,12 +1676,67 @@ where
     // drop would wedge that barrier and cascade into writing off live
     // workers. Stale-epoch entries are discarded at the same points.
     let mut pre: Vec<(u32, u32, Tensor)> = Vec::new();
+    // --- master HA (None = off; the pre-HA loop is then unchanged) ---
+    // Liveness covers workers 0..p plus the master at id p; the shadow
+    // holds the last absorbed StateSync snapshot (the master only sends
+    // them to the designated standby, so absorbing unconditionally is
+    // both cheap and makes a standby re-selection instantly complete).
+    let ha = faults.gossip_every.map(|every| GossipCfg {
+        every,
+        suspect_after: faults.suspect_after,
+    });
+    let mut lv = Liveness::new(p + 1, wid, ep.now().as_micros() as u64);
+    let mut shadow = Shadow::default();
+    let idle = Duration::from_secs(3600);
+    let mut next_gossip = ep.now() + ha.map_or(idle, |c| c.every);
     loop {
-        let env = match ep.recv_deadline(Duration::from_secs(3600)) {
+        let wait = match ha {
+            Some(_) => next_gossip.saturating_sub(ep.now()),
+            None => idle,
+        };
+        let env = match ep.recv_deadline(wait) {
             Ok(env) => env,
-            Err(TransportError::Timeout { .. }) => continue, // idle
-            // master gone == server over; so is a fully torn mesh
-            Err(TransportError::PeerDown { peer }) if peer == p => {
+            Err(TransportError::Timeout { .. }) => {
+                let Some(cfg) = ha else { continue }; // idle
+                // gossip tick: emit the merged table to live worker
+                // peers (never the master — detection must survive its
+                // death), then run the quorum check; only the
+                // designated standby with a complete shadow promotes
+                let now_us = ep.now().as_micros() as u64;
+                next_gossip = ep.now() + cfg.every;
+                let table = lv.snapshot(now_us);
+                let live_workers: Vec<usize> = if shadow.ready() {
+                    shadow.live.iter().map(|&d| d as usize).collect()
+                } else if let Some(s) = st.as_ref() {
+                    s.live.clone()
+                } else {
+                    (0..p).collect()
+                };
+                for &peer in &live_workers {
+                    if peer != wid {
+                        let _ = ep.send(peer, Msg::Gossip {
+                            from: wid as u32,
+                            seen: table.clone(),
+                        });
+                    }
+                }
+                if shadow.ready()
+                    && standby_of(&live_workers, faults.standby)
+                        == Some(wid)
+                    && lv.master_dead(p, now_us, cfg.window_us(),
+                                      &live_workers)
+                {
+                    return promote_standby(&model, base, &mut ep, wid,
+                                           &shadow, &live_workers);
+                }
+                continue;
+            }
+            // master gone == server over; so is a fully torn mesh.
+            // With HA on the same signal is *not* terminal: whether a
+            // dark master is dead is the gossip quorum's call.
+            Err(TransportError::PeerDown { peer })
+                if peer == p && ha.is_none() =>
+            {
                 return Ok(());
             }
             Err(TransportError::Closed) => return Ok(()),
@@ -1597,13 +1745,29 @@ where
             Err(TransportError::PeerDown { .. }) => continue,
             Err(e) => bail!("worker transport failed: {e}"),
         };
+        lv.observe(env.from, ep.now().as_micros() as u64);
         // funnel both arrival paths — between jobs and mid-barrier —
         // into one adoption site so they can never diverge
         let reconfig = match env.msg {
             Msg::Shutdown => return Ok(()),
+            // fail-closed epoch validation: a frame at or below the
+            // installed epoch is inert (a late joiner, st == None,
+            // accepts any) — in a promotion race between the standby
+            // and a wedged-but-alive old master, exactly one Reconfig
+            // survives, deterministically
             Msg::Reconfig { epoch, mode, p: rp, l: rl, live, sizes,
-                            relays } => {
+                            relays }
+                if st.as_ref().map_or(true, |s| epoch > s.epoch) =>
+            {
                 Some((epoch, mode, rp, rl, live, sizes, relays))
+            }
+            Msg::Gossip { seen, .. } => {
+                lv.merge(&seen);
+                None
+            }
+            m @ Msg::StateSync { .. } => {
+                shadow.absorb(&m);
+                None
             }
             // (for a 1-layer model the only layer-0 frames reaching the
             // main loop are the *previous* job's unused final-layer
@@ -1989,7 +2153,39 @@ fn mesh_master(manifest: Arc<Manifest>, cfg: &ServeConfig,
     let mut rejoin_backoff = RejoinBackoff::new(REJOIN_BACKOFF);
     let serve_t0 = Instant::now();
     let mut job_id = 0u64;
+    let mut sync_seq = 0u64;
     for chunk in rows.chunks(batch) {
+        if faults.chaos_exit_master == Some(job_id + 1) {
+            // test hook: the coordinator dies silently before issuing
+            // this batch (its edges drop with the transport)
+            return Ok(latencies);
+        }
+        // HA: thin replication beat + master-freshness heartbeats, as
+        // in the threaded master
+        if faults.gossip_every.is_some() && current.p() > 1 {
+            sync_seq += 1;
+            let (tag, mp, ml) = current.mode.to_wire();
+            if let Some(sb) = standby_of(&current.devices,
+                                         faults.standby) {
+                let _ = ep.send(sb, Msg::StateSync {
+                    epoch: current.epoch as u32,
+                    seq: sync_seq,
+                    mode: tag,
+                    p: mp,
+                    l: ml,
+                    live: current.devices.iter()
+                                 .map(|&d| d as u32)
+                                 .collect(),
+                    next_seq: 0,
+                    buckets: Vec::new(),
+                    streams: Vec::new(),
+                });
+            }
+            for &wid in &current.devices {
+                let _ = ep.send(wid, Msg::Heartbeat {
+                    from: p as u32, seq: 0, profile: None });
+            }
+        }
         // the cross-process re-join point: restarted workers are
         // re-admitted on batch boundaries
         if let Some(next) = rejoin_workers(&manifest, cfg, &model,
@@ -2072,10 +2268,14 @@ impl FaultPolicy {
             gather_deadline: opts.gather_deadline,
             exchange_deadline: opts.gather_deadline,
             chaos_exit_worker: None,
+            chaos_exit_master: None,
             heartbeat_every: opts.heartbeat_every,
             replan_deadband: opts.replan_deadband,
             static_speeds: opts.static_speeds.clone(),
             link_factor: opts.link_factor,
+            gossip_every: opts.gossip_every,
+            suspect_after: 3,
+            standby: opts.standby,
         }
     }
 }
@@ -2680,6 +2880,147 @@ impl DecodeCore {
     /// session.
     pub(crate) fn ctl(&mut self, c: SchedCtl) {
         apply_ctl(c, &mut self.view, &mut self.active, &mut self.total);
+    }
+
+    /// HA replication snapshot (`coordinator::ha`): the decode
+    /// directory as self-contained [`StreamSnap`]s — running sessions
+    /// with their ground-truth token logs, plus class-queued jobs that
+    /// have no session yet — and the admission counter. Everything a
+    /// promoted master needs to continue every stream bit-identically.
+    pub(crate) fn ha_snapshot(&self) -> (u64, Vec<StreamSnap>) {
+        let (p_eff, l_eff) = self.view.geometry().unwrap_or((0, 0));
+        let mut snaps = Vec::with_capacity(self.active.len());
+        for s in &self.active {
+            snaps.push(StreamSnap {
+                id: s.id,
+                seq: s.seq,
+                class: s.class.index() as u8,
+                steps: s.steps as u32,
+                p: p_eff as u32,
+                l: l_eff as u32,
+                replicate: s.session.replicated(),
+                replica_wire: s.session.replica_wire().tag(),
+                running: true,
+                prompt: s.prompt.clone(),
+                prefilled: s.prefilled as u32,
+                generated: s.session.ids()[s.prefilled..].to_vec(),
+            });
+        }
+        for q in &self.pending {
+            for job in q {
+                snaps.push(StreamSnap {
+                    id: job.id,
+                    seq: job.seq,
+                    class: job.class.index() as u8,
+                    steps: job.steps as u32,
+                    p: p_eff as u32,
+                    l: l_eff as u32,
+                    replicate: job.replicate,
+                    replica_wire: job.replica_wire.tag(),
+                    running: false,
+                    prompt: job.prompt.clone(),
+                    prefilled: 0,
+                    generated: Vec::new(),
+                });
+            }
+        }
+        (self.next_seq, snaps)
+    }
+
+    /// Rebuild the decode directory from a replicated snapshot on the
+    /// *current* (post-promotion) membership. Running streams re-enter
+    /// with their exact context re-prefilled from the ground-truth
+    /// token log — the full-recompute continuation of a stream's own
+    /// log is geometry-independent (the same property
+    /// `resync_from_log` relies on), so re-admitted streams keep
+    /// emitting bit-identical tokens. Queued jobs return to their
+    /// class queues with admission order intact. Returns the number of
+    /// streams restored; a snap that fails to rebuild (hostile class /
+    /// wire tag, geometry it cannot fit) ends visibly through
+    /// `respond`, like any failed admission.
+    pub(crate) fn ha_restore(&mut self, next_seq: u64,
+                             snaps: &[StreamSnap],
+                             respond: &Sender<DecodeEvent>) -> usize {
+        self.next_seq = self.next_seq.max(next_seq);
+        let mut restored = 0usize;
+        for snap in snaps {
+            let parsed = RequestClass::from_index(snap.class as usize)
+                .and_then(|class| {
+                    WireFmt::from_tag(snap.replica_wire)
+                        .map(|wire| (class, wire))
+                });
+            let Ok((class, wire)) = parsed else {
+                let _ = respond.send(DecodeEvent {
+                    id: snap.id,
+                    index: snap.generated.len(),
+                    token: -1,
+                    done: true,
+                });
+                continue;
+            };
+            if !snap.running {
+                let job = DecodeJob {
+                    id: snap.id,
+                    class,
+                    prompt: snap.prompt.clone(),
+                    steps: snap.steps as usize,
+                    replicate: snap.replicate,
+                    replica_wire: wire,
+                    respond: respond.clone(),
+                    seq: snap.seq,
+                };
+                if self.policy.max_running == 0 {
+                    admit_stream(&self.model, self.wire, &self.view,
+                                 job, &mut self.active);
+                } else {
+                    self.pending[class.index()].push_back(job);
+                }
+                restored += 1;
+                continue;
+            }
+            let built = (|| -> Result<DecodeSession> {
+                let (p_eff, l_eff) = self.view.geometry()?;
+                let mut s = DecodeSession::new(self.model.clone(),
+                                               p_eff, l_eff,
+                                               self.wire)?;
+                if snap.replicate {
+                    s.enable_replication_with(wire)?;
+                }
+                let prefilled = snap.prefilled as usize;
+                let mut log = snap.prompt[..prefilled].to_vec();
+                log.extend_from_slice(&snap.generated);
+                if !log.is_empty() {
+                    s.prefill(&log)?;
+                }
+                Ok(s)
+            })();
+            match built {
+                Ok(session) => {
+                    self.active.push_back(ActiveStream {
+                        id: snap.id,
+                        session,
+                        devices: self.view.live_devices(),
+                        prompt: snap.prompt.clone(),
+                        prefilled: snap.prefilled as usize,
+                        emitted: snap.generated.len(),
+                        steps: snap.steps as usize,
+                        class,
+                        seq: snap.seq,
+                        respond: respond.clone(),
+                    });
+                    restored += 1;
+                }
+                Err(_) => {
+                    let _ = respond.send(DecodeEvent {
+                        id: snap.id,
+                        index: snap.generated.len(),
+                        token: -1,
+                        done: true,
+                    });
+                }
+            }
+        }
+        restored
     }
 
     /// One scheduling tick. Legacy policy: advance every running

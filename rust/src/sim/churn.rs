@@ -20,6 +20,11 @@ pub enum ChurnEvent {
     /// Models a congested / flaky last-hop radio between two edge
     /// devices while the rest of the fleet stays healthy.
     LinkDelay(usize, usize, u64),
+    /// The master itself dies (its endpoint goes dark, every byte of
+    /// coordinator state is discarded). The HA soak's headline event:
+    /// the standby must detect it via gossip quorum and promote — no
+    /// worker slot is named because the victim is the coordinator.
+    KillMaster,
 }
 
 impl ChurnEvent {
@@ -161,7 +166,8 @@ mod tests {
                     assert_eq!(dead, Some(w), "revive mismatch");
                     dead = None;
                 }
-                ChurnEvent::Throttle(..) | ChurnEvent::LinkDelay(..) => {
+                ChurnEvent::Throttle(..) | ChurnEvent::LinkDelay(..)
+                | ChurnEvent::KillMaster => {
                     panic!("cycles() only emits kill/revive")
                 }
             }

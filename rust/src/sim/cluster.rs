@@ -20,7 +20,7 @@
 //! pure function of the [`SoakCfg`] seed. Two runs must compare equal,
 //! and the suite asserts they do.
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver};
 use std::sync::Arc;
@@ -32,6 +32,7 @@ use anyhow::{anyhow, bail, Context, Result};
 use crate::coordinator::cluster::{ClusterView, EpochPlan};
 use crate::coordinator::segmeans::segment_means;
 use crate::coordinator::Mode;
+use crate::coordinator::{standby_of, Shadow};
 use crate::decode::{RefCfg, RefGpt};
 use crate::metrics::tenancy::TenancyReport;
 use crate::metrics::Histogram;
@@ -47,6 +48,7 @@ use crate::server::{adaptive_replan, broadcast_reconfig, elastic_plan,
                     DecodeEvent, FaultPolicy, PassOutcome, Request,
                     SchedCtl, SchedPolicy, worker_loop_with};
 use crate::tenant::{Admission, RequestClass, TenancyCfg, Verdict};
+use crate::util::quant::WireFmt;
 use crate::util::rng::Rng;
 
 use super::churn::{ChurnEvent, ChurnSchedule};
@@ -71,6 +73,40 @@ pub struct SimTenancy {
     /// The Interactive-class p99 completion-latency SLO (virtual
     /// seconds) the tenants suite asserts.
     pub interactive_slo: f64,
+}
+
+/// Master high-availability knobs for the soak (ISSUE 10): the worker
+/// gossip/suspicion parameters handed to every worker's `FaultPolicy`,
+/// plus the master's state-sync replication cadence.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SimHa {
+    /// Worker-to-worker liveness gossip cadence (virtual).
+    pub gossip_every: Duration,
+    /// Gossip windows of master silence before the quorum may declare
+    /// it dead. The window (`gossip_every * suspect_after`) must
+    /// comfortably outlast the gather/exchange deadlines: workers do
+    /// not gossip mid-barrier, so a full reconfigure cycle is the
+    /// longest master silence an idle, healthy standby ever observes —
+    /// the deadband is what makes a slow master different from a dead
+    /// one.
+    pub suspect_after: u32,
+    /// Pinned standby (`None` = lowest-ranked live worker).
+    pub standby: Option<usize>,
+    /// Master -> standby state-sync cadence (virtual seconds); the
+    /// same beat stamps every live worker's liveness view of the
+    /// master, independent of workload gaps.
+    pub sync_every: f64,
+}
+
+impl Default for SimHa {
+    fn default() -> SimHa {
+        SimHa {
+            gossip_every: Duration::from_millis(100),
+            suspect_after: 12,
+            standby: Some(0),
+            sync_every: 0.05,
+        }
+    }
 }
 
 /// Soak configuration; [`SoakCfg::small`] is the suite preset.
@@ -132,6 +168,10 @@ pub struct SoakCfg {
     /// overridden from the workload at run time). The tenants preset
     /// shrinks it so 10k+ streams fit the suite's wall budget.
     pub decode_model: RefCfg,
+    /// Master high availability: gossip liveness on the workers plus
+    /// standby state-sync from the master (`None` = HA off, exactly
+    /// the pre-HA soak).
+    pub ha: Option<SimHa>,
 }
 
 /// Named-constructor builder for [`SoakCfg`]: every preset starts from
@@ -193,6 +233,13 @@ impl SoakBuilder {
         self
     }
 
+    /// Arm master high availability (gossip liveness + standby
+    /// state-sync).
+    pub fn ha(mut self, ha: Option<SimHa>) -> Self {
+        self.cfg.ha = ha;
+        self
+    }
+
     pub fn build(self) -> SoakCfg {
         let SoakBuilder { mut cfg, churn } = self;
         cfg.churn = churn.unwrap_or_else(|| {
@@ -242,6 +289,7 @@ impl SoakCfg {
                     layers: 2,
                     ffn: 32,
                 },
+                ha: None,
             },
             churn: None,
         }
@@ -379,6 +427,48 @@ impl SoakCfg {
         }
         cfg
     }
+
+    /// The master-HA preset (ISSUE 10): the default mixed workload
+    /// with gossip liveness and standby state-sync armed, one worker
+    /// kill/revive cycle as background churn, and the headline event —
+    /// the master itself killed at half the horizon. The pinned
+    /// standby (worker 0) must detect the death by gossip quorum,
+    /// promote from its shadowed state, and hand the cluster back to
+    /// the role address; the freed slot re-joins as a worker at 3/4
+    /// horizon (the old master's machine coming back demoted).
+    pub fn ha(seed: u64) -> SoakCfg {
+        let workload = WorkloadCfg::default();
+        let horizon =
+            workload.mean_interarrival * workload.requests as f64;
+        SoakCfg::builder(seed)
+            .churn(ChurnSchedule::new(vec![
+                (horizon * 0.2, ChurnEvent::Kill(2)),
+                (horizon * 0.35, ChurnEvent::Revive(2)),
+                (horizon * 0.5, ChurnEvent::KillMaster),
+                (horizon * 0.75, ChurnEvent::Revive(0)),
+            ]))
+            .ha(Some(SimHa::default()))
+            .build()
+    }
+
+    /// The no-kill twin of [`SoakCfg::ha`]: identical seed, workload,
+    /// and worker churn, gossip and state-sync still armed — but the
+    /// master survives. Its per-stream digests are the ground truth
+    /// the HA run must reproduce bit-for-bit, and its
+    /// `promotions == 0` is the no-false-positive deadband check: a
+    /// slow-but-alive master must never be usurped.
+    pub fn ha_no_kill(seed: u64) -> SoakCfg {
+        let workload = WorkloadCfg::default();
+        let horizon =
+            workload.mean_interarrival * workload.requests as f64;
+        SoakCfg::builder(seed)
+            .churn(ChurnSchedule::new(vec![
+                (horizon * 0.2, ChurnEvent::Kill(2)),
+                (horizon * 0.35, ChurnEvent::Revive(2)),
+            ]))
+            .ha(Some(SimHa::default()))
+            .build()
+    }
 }
 
 /// What one soak run produced. `PartialEq` is the determinism check:
@@ -424,6 +514,22 @@ pub struct SoakReport {
     /// admission gate's load watermarks. Default (all-zero) when the
     /// run had no tenancy configured.
     pub tenancy: TenancyReport,
+    /// `ChurnEvent::KillMaster` events executed.
+    pub master_kills: usize,
+    /// Standby promotions the harness resumed mastering from.
+    pub promotions: usize,
+    /// Virtual seconds from each master kill to the promoted
+    /// standby's state handover landing at the role address.
+    pub promotion_latency: Vec<f64>,
+    /// Decode streams re-admitted from the replicated snapshot.
+    pub readmitted_streams: usize,
+    /// Decode streams the snapshot missed (admitted after the last
+    /// sync beat) and the clients re-sent after the takeover.
+    pub resubmitted_streams: usize,
+    /// Per-stream FNV-1a digest of the deduplicated token sequence
+    /// every client observed — the HA run must match its no-kill
+    /// twin's map exactly (bit-identical replay across the failover).
+    pub stream_digests: BTreeMap<u64, u64>,
 }
 
 impl SoakReport {
@@ -612,6 +718,36 @@ struct EvalReq {
     arrived: f64,
 }
 
+/// The client's view of one decode stream: what it sent (enough to
+/// re-send the request verbatim after a master failover) and every
+/// token it has accepted so far. The token list is the dedup ledger —
+/// a promoted master replays the tail of a re-admitted stream, and a
+/// fully re-sent stream replays from its first token, so the client
+/// drops duplicate `(id, index)` events after asserting they match
+/// the original bit-for-bit.
+struct StreamLedger {
+    prompt: Vec<i32>,
+    steps: usize,
+    tenant: u32,
+    class: RequestClass,
+    replica_wire: WireFmt,
+    tokens: Vec<i32>,
+    done: bool,
+}
+
+/// FNV-1a over a token sequence: the per-stream digest the HA suite
+/// compares against the no-kill twin's.
+fn fnv1a64(tokens: &[i32]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &t in tokens {
+        for b in t.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x1_0000_0000_01b3);
+        }
+    }
+    h
+}
+
 fn spawn_sim_worker(net: &SimNetMt, wid: usize, model: &ModelCfg,
                     mode: Mode, faults: &FaultPolicy, join_epoch: u32,
                     blocks: SimBlocks)
@@ -712,18 +848,37 @@ fn run_eval_batch(cfg: &SoakCfg, net: &SimNetMt, ep: &mut MtEndpoint,
 /// Drain decode events after a scheduler tick, recording completion
 /// latencies on the virtual clock — both in the aggregate histogram
 /// and in the completed stream's class bucket of the tenancy report.
+/// The ledger dedups master-failover replays: a token event whose
+/// index the client already holds must match bit-for-bit and is not
+/// re-counted.
 #[allow(clippy::too_many_arguments)]
 fn drain_decode_events(rx: &Receiver<DecodeEvent>, now: f64,
                        meta: &mut BTreeMap<u64, (f64, RequestClass)>,
+                       ledger: &mut BTreeMap<u64, StreamLedger>,
                        decode_latency: &mut Histogram,
                        tenancy: &mut TenancyReport,
                        tokens: &mut usize, completed: &mut usize,
                        aborted: &mut usize) {
     while let Ok(ev) = rx.try_recv() {
         if ev.token >= 0 {
+            if let Some(st) = ledger.get_mut(&ev.id) {
+                if ev.index < st.tokens.len() {
+                    // a replayed token is the full-recompute
+                    // continuation of the same log: divergence here
+                    // means the replicated state was wrong
+                    assert_eq!(st.tokens[ev.index], ev.token,
+                               "stream {} replayed a diverging token \
+                                at index {}", ev.id, ev.index);
+                    continue; // duplicate: counted the first time
+                }
+                st.tokens.push(ev.token);
+            }
             *tokens += 1;
         }
         if ev.done {
+            if let Some(st) = ledger.get_mut(&ev.id) {
+                st.done = true;
+            }
             let (arrived, class) = meta
                 .remove(&ev.id)
                 .unwrap_or((now, RequestClass::Batch));
@@ -765,6 +920,9 @@ pub fn run_soak(cfg: &SoakCfg) -> Result<SoakReport> {
         heartbeat_every: cfg.heartbeat_every,
         replan_deadband: cfg.replan_deadband,
         link_factor: cfg.link_factor,
+        gossip_every: cfg.ha.as_ref().map(|h| h.gossip_every),
+        suspect_after: cfg.ha.as_ref().map_or(3, |h| h.suspect_after),
+        standby: cfg.ha.as_ref().and_then(|h| h.standby),
         ..FaultPolicy::default()
     };
     // per-device speed multipliers as f64 bits: shared with every
@@ -799,9 +957,8 @@ pub fn run_soak(cfg: &SoakCfg) -> Result<SoakReport> {
     let dec_cfg =
         RefCfg { vocab: cfg.workload.vocab, ..cfg.decode_model };
     let dec_model = Arc::new(RefGpt::tiny(cfg.seed ^ 0xD0, dec_cfg)?);
-    let mut decode = DecodeCore::new(dec_model, cfg.p, 4,
-                                     crate::util::quant::WireFmt::F32,
-                                     2)?;
+    let mut decode = DecodeCore::new(dec_model.clone(), cfg.p, 4,
+                                     WireFmt::F32, 2)?;
     if cfg.decode_profile {
         decode.enable_profiling(cfg.cost_per_elem.max(1e-9),
                                 speeds.clone());
@@ -823,6 +980,10 @@ pub fn run_soak(cfg: &SoakCfg) -> Result<SoakReport> {
     let (dec_tx, dec_rx) = channel::<DecodeEvent>();
     let mut dec_meta: BTreeMap<u64, (f64, RequestClass)> =
         BTreeMap::new();
+    // the clients' side of the decode wire: request payloads for
+    // re-sending across a master failover, plus the accepted-token
+    // dedup ledger the per-stream digests are computed from
+    let mut ledger: BTreeMap<u64, StreamLedger> = BTreeMap::new();
 
     let mut batcher: BatcherCore<EvalReq> =
         BatcherCore::new(cfg.batch, cfg.flush_after);
@@ -852,13 +1013,25 @@ pub fn run_soak(cfg: &SoakCfg) -> Result<SoakReport> {
         edge_bytes: Vec::new(),
         tenancy: TenancyReport::new(
             cfg.tenancy.as_ref().map_or(0, |t| t.cfg.tenants)),
+        master_kills: 0,
+        promotions: 0,
+        promotion_latency: Vec::new(),
+        readmitted_streams: 0,
+        resubmitted_streams: 0,
+        stream_digests: BTreeMap::new(),
     };
     let mut next_decode_tick: Option<f64> = None;
     let mut job_id = 0u64;
+    // HA state-sync pacing: seq stamps make stale frames inert at the
+    // standby, and the beat timer only rides while something else
+    // still drives the run (it must not keep the loop alive forever)
+    let mut sync_seq = 0u64;
+    let mut next_sync: Option<f64> =
+        cfg.ha.as_ref().map(|h| h.sync_every);
 
     loop {
         // the next event, in deterministic tie order:
-        // churn < batch flush < decode tick < arrival
+        // churn < batch flush < decode tick < arrival < sync beat
         let mut cands: Vec<(f64, u8)> = Vec::new();
         if let Some(t) = churn.next_at() {
             cands.push((t, 0));
@@ -871,6 +1044,11 @@ pub fn run_soak(cfg: &SoakCfg) -> Result<SoakReport> {
         }
         if let Some(item) = &next_arrival {
             cands.push((item.at, 3));
+        }
+        if !cands.is_empty() {
+            if let Some(ts) = next_sync {
+                cands.push((ts, 4));
+            }
         }
         let Some(&(t, kind)) = cands
             .iter()
@@ -946,6 +1124,203 @@ pub fn run_soak(cfg: &SoakCfg) -> Result<SoakReport> {
                             net.set_edge_delay(f, t2,
                                                f64::from_bits(bits));
                         }
+                        ChurnEvent::KillMaster => {
+                            let Some(ha) = cfg.ha.as_ref() else {
+                                continue; // HA off: nobody can promote
+                            };
+                            report.master_kills += 1;
+                            let killed_at = net.now_secs();
+                            // The coordinator dies: every byte of its
+                            // state is discarded, in-flight mail to it
+                            // is lost. The role address itself stays
+                            // routable (a supervisor VIP), so the
+                            // promoted standby's handover frame can
+                            // land here — on an empty inbox.
+                            net.kill(cfg.p);
+                            net.revive(cfg.p);
+                            // client side of the eval wire: requests
+                            // the dead batcher never flushed are
+                            // unacknowledged, and their callers
+                            // re-send them after the outage
+                            let orphans =
+                                batcher.drain().unwrap_or_default();
+                            batcher = BatcherCore::new(cfg.batch,
+                                                       cfg.flush_after);
+                            // go silent and wait for the gossip quorum
+                            // to detect the death and the standby to
+                            // promote; its handover is the shadowed
+                            // snapshot re-stamped at the bumped epoch
+                            let mut shadow = Shadow::default();
+                            loop {
+                                let env = match ep.recv_deadline(
+                                    Duration::from_secs(60))
+                                {
+                                    Ok(env) => env,
+                                    Err(e) => bail!(
+                                        "no promotion handover \
+                                         reached the master role \
+                                         address: {e}"),
+                                };
+                                if shadow.absorb(&env.msg) {
+                                    break;
+                                }
+                                // anything else addressed to the dead
+                                // master is stale and inert
+                            }
+                            let live: Vec<usize> = shadow
+                                .live
+                                .iter()
+                                .map(|&d| d as usize)
+                                .collect();
+                            let sb = standby_of(&live, ha.standby)
+                                .context("promoted handover names no \
+                                          live standby")?;
+                            // reproduce the promoted master's exact
+                            // post-takeover plan: resume the shadowed
+                            // view one epoch back, write the promoted
+                            // standby out of the compute set (the
+                            // bump that made its Reconfig beat any
+                            // stale frame), and re-plan
+                            view = ClusterView::resume(
+                                mode, cfg.n, true,
+                                (shadow.epoch as u64)
+                                    .saturating_sub(1),
+                                &live)?;
+                            view.fail_device(sb)?;
+                            current = elastic_plan(&sim_avail, cfg.n,
+                                                   &mut view)?;
+                            // the promoted worker's thread exited into
+                            // mastering; mark its slot dark until the
+                            // old master's machine re-joins demoted
+                            // (a later Revive on the freed slot)
+                            if let Some(h) = workers[sb].take() {
+                                h.join().map_err(|_| {
+                                    anyhow!("promoted standby {sb} \
+                                             panicked")
+                                })??;
+                            }
+                            net.kill(sb);
+                            // rebuild the serving state from the
+                            // replicated snapshot: fresh profiler and
+                            // admission gate (watermarks reset; the
+                            // token buckets restore, so a throttled
+                            // tenant stays throttled), fresh decode
+                            // core re-admitting the replicated
+                            // directory on the post-promotion
+                            // membership
+                            fleet = cfg.replan_deadband.map(|db| {
+                                FleetProfile::new(cfg.p, db)
+                            });
+                            admission = cfg
+                                .tenancy
+                                .as_ref()
+                                .map(|tn| Admission::new(tn.cfg.clone()))
+                                .transpose()?;
+                            if let Some(adm) = admission.as_mut() {
+                                let pairs: Vec<(f64, f64)> = shadow
+                                    .buckets
+                                    .iter()
+                                    .map(|&(tk, ls)| {
+                                        (f64::from_bits(tk),
+                                         f64::from_bits(ls))
+                                    })
+                                    .collect();
+                                adm.restore_buckets(&pairs);
+                            }
+                            decode = DecodeCore::new(
+                                dec_model.clone(), cfg.p, 4,
+                                WireFmt::F32, 2)?;
+                            if cfg.decode_profile {
+                                decode.enable_profiling(
+                                    cfg.cost_per_elem.max(1e-9),
+                                    speeds.clone());
+                            }
+                            if let Some(tn) = &cfg.tenancy {
+                                decode.set_policy(SchedPolicy {
+                                    classful: tn.classful,
+                                    tick_quanta: tn.tick_quanta,
+                                    max_running: tn.max_running,
+                                });
+                            }
+                            for w in 0..cfg.p {
+                                if !net.is_alive(w) {
+                                    decode.ctl(SchedCtl::Fail(w));
+                                }
+                            }
+                            // events the clients already hold land
+                            // first, then the replicated directory
+                            // re-admits, then the clients re-send the
+                            // streams the snapshot missed (admitted
+                            // after the last sync beat): zero drops is
+                            // replication + client re-send + dedup,
+                            // not lossless state transfer
+                            drain_decode_events(
+                                &dec_rx, net.now_secs(), &mut dec_meta,
+                                &mut ledger,
+                                &mut report.decode_latency,
+                                &mut report.tenancy,
+                                &mut report.decode_tokens,
+                                &mut report.decode_completed,
+                                &mut report.decode_aborted);
+                            report.readmitted_streams += decode
+                                .ha_restore(shadow.next_seq,
+                                            &shadow.streams, &dec_tx);
+                            let restored: BTreeSet<u64> = shadow
+                                .streams
+                                .iter()
+                                .map(|s| s.id)
+                                .collect();
+                            let resend: Vec<u64> = ledger
+                                .iter()
+                                .filter(|(id, st)| {
+                                    !st.done && !restored.contains(id)
+                                })
+                                .map(|(&id, _)| id)
+                                .collect();
+                            for id in resend {
+                                let st = &ledger[&id];
+                                let req =
+                                    Request::decode(st.prompt.clone())
+                                        .id(id)
+                                        .tenant(st.tenant)
+                                        .class(st.class)
+                                        .steps(st.steps)
+                                        .replicate(st.replica_wire)
+                                        .build();
+                                decode.admit(req.into_decode_job(
+                                    dec_tx.clone())?);
+                                report.resubmitted_streams += 1;
+                            }
+                            if decode.active() > 0
+                                && next_decode_tick.is_none()
+                            {
+                                next_decode_tick = Some(
+                                    net.now_secs() + cfg.decode_tick);
+                            }
+                            // re-sent eval requests open a fresh batch
+                            // window now (their arrival stamps keep
+                            // the outage inside their latency)
+                            let resumed = Duration::from_secs_f64(
+                                net.now_secs());
+                            for r in orphans {
+                                if let Some(batch) =
+                                    batcher.push(r, resumed)
+                                {
+                                    report.eval_batches += 1;
+                                    run_eval_batch(
+                                        cfg, &net, &mut ep, &mut view,
+                                        &mut current, &faults, batch,
+                                        &mut job_id, fleet.as_mut(),
+                                        &mut report.replans,
+                                        &mut report.relay_plans,
+                                        &mut report.eval_latency,
+                                        &mut report.eval_responses)?;
+                                }
+                            }
+                            report.promotions += 1;
+                            report.promotion_latency
+                                .push(net.now_secs() - killed_at);
+                        }
                     }
                 }
             }
@@ -996,7 +1371,7 @@ pub fn run_soak(cfg: &SoakCfg) -> Result<SoakReport> {
                     }
                 }
                 drain_decode_events(&dec_rx, net.now_secs(),
-                                    &mut dec_meta,
+                                    &mut dec_meta, &mut ledger,
                                     &mut report.decode_latency,
                                     &mut report.tenancy,
                                     &mut report.decode_tokens,
@@ -1008,7 +1383,7 @@ pub fn run_soak(cfg: &SoakCfg) -> Result<SoakReport> {
                     None
                 };
             }
-            _ => {
+            3 => {
                 let item = next_arrival.take().unwrap();
                 next_arrival = gen.next();
                 // the multi-tenant front door: per-class overload caps
@@ -1061,6 +1436,19 @@ pub fn run_soak(cfg: &SoakCfg) -> Result<SoakReport> {
                         let id = report.decode_streams as u64;
                         report.decode_streams += 1;
                         dec_meta.insert(id, (item.at, item.class));
+                        // the client's own copy of the request: if the
+                        // master dies before this stream lands in a
+                        // replicated snapshot, the client re-sends it
+                        // verbatim after promotion
+                        ledger.insert(id, StreamLedger {
+                            prompt: prompt.clone(),
+                            steps,
+                            tenant: item.tenant,
+                            class: item.class,
+                            replica_wire,
+                            tokens: Vec::new(),
+                            done: false,
+                        });
                         let req = Request::decode(prompt)
                             .id(id)
                             .tenant(item.tenant)
@@ -1077,15 +1465,63 @@ pub fn run_soak(cfg: &SoakCfg) -> Result<SoakReport> {
                     }
                 }
             }
+            _ => {
+                // HA replication beat: ship the full master state to
+                // the designated standby — epoch-tagged membership +
+                // plan shape, admission token buckets, and the decode
+                // session directory (replicated streams carry their
+                // token logs) — and a light Heartbeat to every worker
+                // so gossip keeps seeing a live master through arrival
+                // gaps
+                let Some(ha) = cfg.ha.as_ref() else { continue };
+                sync_seq += 1;
+                let (tag, mp, ml) = current.mode.to_wire();
+                if let Some(sb) = standby_of(&current.devices,
+                                             ha.standby) {
+                    let (next_seq, streams) = decode.ha_snapshot();
+                    let buckets: Vec<(u64, u64)> = admission
+                        .as_ref()
+                        .map(|adm| adm.export_buckets())
+                        .unwrap_or_default()
+                        .iter()
+                        .map(|&(tk, ls)| (tk.to_bits(), ls.to_bits()))
+                        .collect();
+                    let _ = ep.send(sb, Msg::StateSync {
+                        epoch: current.epoch as u32,
+                        seq: sync_seq,
+                        mode: tag,
+                        p: mp,
+                        l: ml,
+                        live: current.devices.iter()
+                                     .map(|&d| d as u32)
+                                     .collect(),
+                        next_seq,
+                        buckets,
+                        streams,
+                    });
+                }
+                for &wid in &current.devices {
+                    let _ = ep.send(wid, Msg::Heartbeat {
+                        from: cfg.p as u32, seq: 0, profile: None });
+                }
+                next_sync = Some(t + ha.sync_every);
+            }
         }
     }
     // stragglers: ctl-driven abort events can land between ticks
     drain_decode_events(&dec_rx, net.now_secs(), &mut dec_meta,
+                        &mut ledger,
                         &mut report.decode_latency,
                         &mut report.tenancy,
                         &mut report.decode_tokens,
                         &mut report.decode_completed,
                         &mut report.decode_aborted);
+    // per-stream token digests over the deduped client-side logs:
+    // churn-invariant (decode is deterministic in prompt + model), so
+    // a kill run and its no-kill twin must agree bit-for-bit
+    for (&id, st) in &ledger {
+        report.stream_digests.insert(id, fnv1a64(&st.tokens));
+    }
     if let Some(adm) = &admission {
         report.tenancy.admit_load_max = adm.max_admit_load();
         report.tenancy.shed_load_min = adm.min_shed_load();
@@ -1297,5 +1733,64 @@ mod tests {
         let r2 = reference_pass(&plan, &x, 3).unwrap();
         assert_eq!(r1, r2);
         assert_eq!(r1.shape, x.shape);
+    }
+
+    /// The HA preset's suspicion window must outlast the longest
+    /// legitimate master silence (a full reconfigure cycle), its sync
+    /// beat must land several times per window, the master kill must
+    /// sit mid-run, and its no-kill twin must differ ONLY in the
+    /// master's fate.
+    #[test]
+    fn ha_preset_is_wellformed() {
+        let cfg = SoakCfg::ha(19);
+        let ha = cfg.ha.expect("HA armed");
+        let window = ha.gossip_every.as_secs_f64()
+            * ha.suspect_after as f64;
+        assert!(window > cfg.deadline.as_secs_f64(),
+                "suspicion window {window} must outlast the gather \
+                 deadline {:?}: workers do not gossip mid-barrier",
+                cfg.deadline);
+        assert!(ha.sync_every > 0.0 && ha.sync_every < window / 2.0);
+        assert_eq!(ha.standby, Some(0));
+        let mut churn = cfg.churn.clone();
+        let evs = churn.pop_due(f64::INFINITY);
+        assert!(evs.contains(&ChurnEvent::KillMaster));
+        assert_eq!(*evs.last().unwrap(), ChurnEvent::Revive(0),
+                   "the freed slot re-joins demoted");
+        let twin = SoakCfg::ha_no_kill(19);
+        assert_eq!(twin.ha, cfg.ha);
+        assert_eq!(twin.workload.requests, cfg.workload.requests);
+        assert_eq!(twin.workload.mean_interarrival,
+                   cfg.workload.mean_interarrival);
+        let mut tc = twin.churn.clone();
+        assert!(!tc.pop_due(f64::INFINITY)
+                    .contains(&ChurnEvent::KillMaster));
+    }
+
+    /// A downsized master-kill soak: the standby detects the death by
+    /// gossip quorum, promotes from its shadowed state, hands the
+    /// cluster back to the role address, and no admitted request is
+    /// dropped across the failover.
+    #[test]
+    fn mini_soak_survives_a_master_kill() {
+        let mut cfg = SoakCfg::ha(17);
+        // keep the wall budget small: the preset's churn stays at its
+        // full-horizon positions, so this kill lands on an idle (but
+        // gossiping) cluster — detection, promotion, and handover all
+        // run; in-flight carryover is the full-size acceptance
+        // suite's job (tests/ha.rs)
+        cfg.workload.requests = 80;
+        let r = run_soak(&cfg).unwrap();
+        assert_eq!(r.master_kills, 1);
+        assert_eq!(r.promotions, 1, "{r:?}");
+        assert_eq!(r.dropped(), 0, "{r:?}");
+        assert_eq!(r.promotion_latency.len(), 1);
+        let lat = r.promotion_latency[0];
+        assert!(lat > 0.0 && lat < 5.0,
+                "promotion should take a few suspicion windows, \
+                 got {lat}");
+        assert!(r.full_strength, "slot 0 re-joined demoted");
+        assert!(!r.stream_digests.is_empty());
+        assert_eq!(r.stream_digests.len(), r.decode_streams);
     }
 }

@@ -31,6 +31,6 @@ pub mod cluster;
 pub mod workload;
 
 pub use churn::{ChurnEvent, ChurnSchedule};
-pub use cluster::{run_soak, SimTenancy, SoakBuilder, SoakCfg,
+pub use cluster::{run_soak, SimHa, SimTenancy, SoakBuilder, SoakCfg,
                   SoakReport};
 pub use workload::{Arrival, WorkloadCfg, WorkloadGen, WorkloadItem};

@@ -64,6 +64,16 @@ impl RequestClass {
         }
     }
 
+    /// Inverse of [`index`](Self::index) — decodes the class byte a
+    /// `StateSync` stream snapshot carries across the HA handoff.
+    pub fn from_index(i: usize) -> Result<RequestClass> {
+        RequestClass::ALL
+            .get(i)
+            .copied()
+            .ok_or_else(|| anyhow::anyhow!(
+                "request class index {i} out of range (< {CLASSES})"))
+    }
+
     /// Parse a `--class` flag value.
     pub fn parse(s: &str) -> Result<RequestClass> {
         match s {
@@ -221,6 +231,31 @@ impl Admission {
         Verdict::Admit
     }
 
+    /// Export the per-tenant bucket state for HA replication: one
+    /// `(tokens, last)` pair per tenant in index order. Watermarks are
+    /// deliberately not exported — they are observability, and reset on
+    /// failover.
+    pub fn export_buckets(&self) -> Vec<(f64, f64)> {
+        self.buckets.iter().map(|b| (b.tokens, b.last)).collect()
+    }
+
+    /// Restore replicated bucket state (the promoted standby's
+    /// admission gate continues the dead master's quota ledger instead
+    /// of re-granting every tenant a full burst). Entries are clamped
+    /// to the configured capacity and non-finite values ignored, so a
+    /// stale or hostile snapshot can only under-grant, never mint
+    /// tokens. Extra entries beyond the tenant count are ignored.
+    pub fn restore_buckets(&mut self, state: &[(f64, f64)]) {
+        for (b, &(tokens, last)) in self.buckets.iter_mut().zip(state) {
+            if tokens.is_finite() && tokens >= 0.0 {
+                b.tokens = tokens.min(b.capacity);
+            }
+            if last.is_finite() && last >= 0.0 {
+                b.last = b.last.max(last);
+            }
+        }
+    }
+
     /// Highest load at which each class was admitted (watermark).
     pub fn max_admit_load(&self) -> [Option<usize>; CLASSES] {
         self.max_admit_load
@@ -245,6 +280,52 @@ mod tests {
             assert_eq!(RequestClass::parse(c.name()).unwrap(), *c);
         }
         assert!(RequestClass::parse("gold").is_err());
+    }
+
+    #[test]
+    fn from_index_inverts_index() {
+        for c in RequestClass::ALL {
+            assert_eq!(RequestClass::from_index(c.index()).unwrap(), c);
+        }
+        assert!(RequestClass::from_index(CLASSES).is_err());
+    }
+
+    /// The HA handoff: a promoted standby restoring exported bucket
+    /// state continues the quota ledger exactly — and hostile or stale
+    /// snapshots can only under-grant, never mint tokens.
+    #[test]
+    fn bucket_export_restore_continues_the_ledger() {
+        let mut cfg = TenancyCfg::new(2, 1000);
+        cfg.quota_rate = 2.0;
+        cfg.quota_burst = 3.0;
+        let mut adm = Admission::new(cfg.clone()).unwrap();
+        // tenant 0 burns its burst; tenant 1 spends one token
+        for _ in 0..3 {
+            assert_eq!(adm.offer(0, RequestClass::Batch, 1.0, 0),
+                       Verdict::Admit);
+        }
+        assert_eq!(adm.offer(1, RequestClass::Batch, 1.0, 0),
+                   Verdict::Admit);
+        let state = adm.export_buckets();
+        assert_eq!(state.len(), 2);
+
+        // the standby restores and the ledger continues: tenant 0 is
+        // still dry at t=1, refills one token by t=1.5
+        let mut next = Admission::new(cfg.clone()).unwrap();
+        next.restore_buckets(&state);
+        assert_eq!(next.offer(0, RequestClass::Batch, 1.0, 0),
+                   Verdict::Shed(ShedReason::Quota));
+        assert_eq!(next.offer(0, RequestClass::Batch, 1.5, 0),
+                   Verdict::Admit);
+        assert_eq!(next.offer(1, RequestClass::Batch, 1.0, 0),
+                   Verdict::Admit);
+
+        // hostile snapshots cannot mint tokens or rewind the clock
+        let mut adm = Admission::new(cfg).unwrap();
+        adm.restore_buckets(&[(1e9, f64::NAN), (f64::INFINITY, -5.0)]);
+        let state = adm.export_buckets();
+        assert!(state[0].0 <= 3.0 && state[1].0 <= 3.0);
+        assert!(state.iter().all(|&(t, l)| t.is_finite() && l >= 0.0));
     }
 
     #[test]

@@ -15,10 +15,20 @@
 //! duplicate, disconnect — a decode session that survives failover
 //! emits a greedy token stream bit-identical to (single-device) full
 //! recompute, deterministically, with zero wall-clock sleeps.
+//!
+//! ISSUE 10 extends the matrix with the *coordinator as victim*: the
+//! same fault classes, but the process that dies mid-run is the master
+//! itself, and a standby resumes from a `Msg::StateSync`-replicated
+//! watermark (see `run_master_victim`). The server-level twin of that
+//! scenario is `FaultPolicy::chaos_exit_master` — the real master loop
+//! exiting silently before a chosen batch — which the `tests/ha.rs`
+//! soak suite drives end-to-end.
 
+use std::collections::BTreeSet;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
+use prism::coordinator::Shadow;
 use prism::decode::{DecodeSession, RefCfg, RefGpt};
 use prism::net::mesh::MeshTransport;
 use prism::net::message::Msg;
@@ -640,6 +650,227 @@ fn decode_failover_bit_identical_over_mesh() {
     }
     assert!(t0.elapsed() < Duration::from_secs(120),
             "mesh chaos flavor must stay fast: {:?}", t0.elapsed());
+}
+
+// ---------------- the coordinator as victim ----------------------------
+//
+// Every fault class above re-run with the *master* as the casualty
+// (ISSUE 10). The master drives jobs while replicating a real
+// `Msg::StateSync` watermark to a standby over the same faulty links,
+// absorbed by a real `coordinator::ha::Shadow` — whose monotone
+// `(epoch, seq)` guard means reordered or replayed frames can never
+// roll the watermark back. A few jobs in, the master process dies
+// outright (`SimNet::disconnect`), and the standby resumes issuing
+// from its shadowed watermark. Fail-closed: a dropped frame makes the
+// watermark *lag* truth (duplicated, idempotent re-issues), but it can
+// never *lead* it (which would silently skip work).
+
+/// Issue `seqs` to the echo workers from `ep`, retrying on deadline,
+/// deduping responses by sequence, re-routing around dead peers;
+/// completions are appended to `transcript` as `(seq, worker, reign)`.
+/// `after_each` runs once per completed job (the master reign uses it
+/// to replicate its watermark and let the standby shadow it).
+fn drive_echo_jobs(ep: &mut FaultNet<SimEndpoint>,
+                   workers: &mut [FaultNet<SimEndpoint>],
+                   seqs: std::ops::Range<u64>, reign: u8, seed: u64,
+                   fault: Fault,
+                   transcript: &mut Vec<(u64, usize, u8)>,
+                   mut after_each: impl FnMut(&mut FaultNet<SimEndpoint>,
+                                              u64)) {
+    // each reign discovers dead workers on its own, via typed PeerDown
+    let mut dead = [false; 2];
+    for seq in seqs {
+        let mut target = (seq % 2) as usize;
+        if dead[target] {
+            target = 1 - target;
+        }
+        let job = || Msg::Job {
+            epoch: 0,
+            request: seq,
+            x_p: Tensor::from_f32(vec![2], vec![0.5, -0.5]).unwrap(),
+            ctx: vec![],
+        };
+        if let Err(TransportError::PeerDown { .. }) =
+            ep.send(target, job())
+        {
+            dead[target] = true;
+            target = 1 - target;
+            ep.send(target, job()).unwrap();
+        }
+        let mut attempts = 0;
+        loop {
+            // pump the echo workers: answer whoever sent the job, so
+            // both reigns are served identically (idempotent echoes)
+            for w in workers.iter_mut() {
+                loop {
+                    match w.recv_deadline(ms(5)) {
+                        Ok(env) => {
+                            if let Msg::Job { request, .. } = env.msg {
+                                let from = w.local_id() as u32;
+                                let _ = w.send(env.from, Msg::Exchange {
+                                    epoch: 0,
+                                    layer: request as u32,
+                                    from,
+                                    data: Tensor::from_f32(vec![1],
+                                                           vec![1.0])
+                                        .unwrap(),
+                                });
+                            }
+                        }
+                        Err(_) => break,
+                    }
+                }
+            }
+            match ep.recv_deadline(ms(50)) {
+                Ok(env) => match env.msg {
+                    Msg::Exchange { layer, from, .. }
+                        if layer as u64 == seq =>
+                    {
+                        transcript.push((seq, from as usize, reign));
+                        break;
+                    }
+                    _ => {} // stale or duplicated response: ignore
+                },
+                Err(TransportError::Timeout { .. }) => {
+                    attempts += 1;
+                    assert!(attempts < 100,
+                            "seq {seq} starved under {fault:?} seed \
+                             {seed} (reign {reign})");
+                    if let Err(TransportError::PeerDown { .. }) =
+                        ep.send(target, job())
+                    {
+                        dead[target] = true;
+                        target = 1 - target;
+                    }
+                }
+                Err(e) => panic!("unexpected transport error: {e}"),
+            }
+        }
+        after_each(ep, seq);
+    }
+}
+
+/// One master-victim run. Returns the `(seq, worker, reign)` completion
+/// transcript (reign 0 = original master, 1 = promoted standby), the
+/// standby's resume watermark, and the final virtual time.
+fn run_master_victim(seed: u64, fault: Fault)
+                     -> (Vec<(u64, usize, u8)>, u64, f64) {
+    const MASTER: usize = 3;
+    const STANDBY: usize = 2;
+    let net = SimNet::new(4, LinkModel::new(1000.0, 0.05));
+    let mut master =
+        FaultNet::new(net.endpoint(MASTER), seed ^ 0xDEAD, fault.cfg());
+    let mut standby =
+        FaultNet::new(net.endpoint(STANDBY), seed ^ 0x57B, fault.cfg());
+    let mut workers: Vec<FaultNet<SimEndpoint>> = (0..2)
+        .map(|w| {
+            FaultNet::new(net.endpoint(w), seed ^ (w as u64 + 1),
+                          fault.cfg())
+        })
+        .collect();
+    if fault == Fault::Disconnect {
+        // compound failure: a worker is already gone when the master
+        // dies, and the standby must rediscover that on its own
+        net.disconnect(0);
+    }
+
+    let n_requests = 20u64;
+    let exit_at = 8 + (seed % 4); // jobs the master completes, then dies
+    let mut shadow = Shadow::default();
+    let mut transcript: Vec<(u64, usize, u8)> = Vec::new();
+
+    // reign 0: after every completed job the master replicates its
+    // watermark to the standby over the faulty link (the frame may be
+    // dropped, delayed, reordered, or duplicated — the shadow's
+    // monotone guard sorts out whatever arrives)
+    drive_echo_jobs(&mut master, &mut workers, 0..exit_at, 0, seed,
+                    fault, &mut transcript, |m, seq| {
+        let _ = m.send(STANDBY, Msg::StateSync {
+            epoch: 0,
+            seq: seq + 1,
+            mode: 2,
+            p: 2,
+            l: 4,
+            live: vec![0, 1],
+            next_seq: seq + 1,
+            buckets: vec![],
+            streams: vec![],
+        });
+        loop {
+            match standby.recv_deadline(ms(5)) {
+                Ok(env) => {
+                    shadow.absorb(&env.msg);
+                }
+                Err(_) => break,
+            }
+        }
+    });
+
+    // the master process dies outright
+    net.disconnect(MASTER);
+    // the standby drains straggling (delayed) frames, then resumes
+    // from whatever watermark it actually shadowed
+    loop {
+        match standby.recv_deadline(ms(20)) {
+            Ok(env) => {
+                shadow.absorb(&env.msg);
+            }
+            Err(_) => break,
+        }
+    }
+    let resume_from = shadow.next_seq;
+    drive_echo_jobs(&mut standby, &mut workers, resume_from..n_requests,
+                    1, seed, fault, &mut transcript, |_, _| {});
+    (transcript, resume_from, net.now_secs())
+}
+
+/// Every fault class completes the full request sequence across a
+/// master death: no seq is lost, the shadowed watermark never runs
+/// ahead of the truth, both reigns serve, and the whole thing replays
+/// bit-for-bit.
+#[test]
+fn master_death_is_survived_under_every_fault_class() {
+    let t0 = Instant::now();
+    for &seed in &seeds() {
+        for fault in FAULTS {
+            let (transcript, resume_from, now) =
+                run_master_victim(seed, fault);
+            let exit_at = 8 + (seed % 4);
+            // fail-closed: the watermark may lag the master's last
+            // completed job (dropped frames), never lead it
+            assert!(resume_from <= exit_at,
+                    "{fault:?} seed {seed}: shadow watermark \
+                     {resume_from} ran ahead of the master's last \
+                     completed job {exit_at}");
+            // nothing lost: every seq completed by someone
+            let seqs: BTreeSet<u64> =
+                transcript.iter().map(|&(s, _, _)| s).collect();
+            assert_eq!(seqs, (0..20).collect::<BTreeSet<u64>>(),
+                       "{fault:?} seed {seed}: lost seqs");
+            // both reigns served, and each exactly its own share (the
+            // overlap resume_from..exit_at is re-done idempotently)
+            let r0 = transcript.iter().filter(|t| t.2 == 0).count();
+            let r1 = transcript.iter().filter(|t| t.2 == 1).count();
+            assert_eq!(r0 as u64, exit_at, "{fault:?} seed {seed}");
+            assert_eq!(r1 as u64, 20 - resume_from,
+                       "{fault:?} seed {seed}");
+            assert!(r1 > 0, "{fault:?} seed {seed}: standby never \
+                             served");
+            if fault == Fault::Disconnect {
+                // dead worker answered nothing, in either reign
+                assert!(transcript.iter().all(|&(_, w, _)| w == 1),
+                        "{fault:?} seed {seed}: dead worker answered");
+            }
+            // determinism: identical transcript and virtual clock
+            let (again, resume2, now2) = run_master_victim(seed, fault);
+            assert_eq!(transcript, again,
+                       "{fault:?} seed {seed} not deterministic");
+            assert_eq!(resume_from, resume2);
+            assert_eq!(now, now2);
+        }
+    }
+    assert!(t0.elapsed() < Duration::from_secs(90),
+            "master-victim chaos must stay fast: {:?}", t0.elapsed());
 }
 
 /// Transport-level disconnect semantics: sends fail typed, peers lists

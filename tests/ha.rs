@@ -1,0 +1,379 @@
+//! Master high-availability acceptance suite (ISSUE 10): the
+//! coordinator is no longer a single point of failure.
+//!
+//! The headline scenario is `SoakCfg::ha` — the full soak workload with
+//! worker-to-worker gossip liveness and standby state-sync armed, one
+//! kill/revive cycle of background worker churn, and the master itself
+//! killed mid-run at a virtual timestamp. The designated standby must
+//! detect the death by gossip quorum (no master-mediated heartbeats),
+//! promote from its shadowed `StateSync` state, and hand the cluster
+//! back to the master role address — with **zero dropped requests** and
+//! decode token streams bit-identical to the no-kill twin run.
+//!
+//! Everything runs on the conductor-scheduled virtual clock
+//! (`net::SimNetMt`): detection windows cost virtual seconds, never
+//! wall seconds, and a seed replays bit-for-bit — histograms and
+//! promotion latencies included.
+//!
+//! `CHAOS_SEEDS` (comma-separated) overrides the built-in seed matrix,
+//! which is how each CI `ha` leg pins a single seed.
+
+use std::collections::BTreeSet;
+use std::time::{Duration, Instant};
+
+use prism::coordinator::{standby_of, GossipCfg, Liveness, Shadow};
+use prism::net::message::Msg;
+use prism::sim::{run_soak, Arrival, SoakCfg, WorkloadGen};
+use prism::util::rng::Rng;
+
+mod common;
+use common::seeds;
+
+/// The headline master-kill soak: per seed, >= 1000 mixed requests,
+/// one mid-run master kill; promotion within a bounded number of
+/// gossip rounds, zero drops, the freed slot re-joined demoted, and
+/// bit-identical double runs.
+#[test]
+fn ha_soak_master_kill_promotes_with_zero_drops() {
+    let t0 = Instant::now();
+    for &seed in &seeds() {
+        let cfg = SoakCfg::ha(seed);
+        let ha = cfg.ha.expect("HA preset arms gossip + state-sync");
+        let report = run_soak(&cfg).unwrap();
+        assert!(report.requests() >= 1000,
+                "seed {seed}: only {} requests", report.requests());
+        assert_eq!(report.master_kills, 1, "seed {seed}");
+        assert_eq!(report.promotions, 1,
+                   "seed {seed}: the standby must promote exactly \
+                    once\n{report:?}");
+        assert_eq!(report.dropped(), 0,
+                   "seed {seed}: requests dropped across the \
+                    failover\n{report:?}");
+        // promotion is paced by the gossip deadband: the standby can
+        // only declare death after a full suspicion window of master
+        // silence, and must get there within a few more gossip rounds
+        // (detection + quorum + handover delivery)
+        let window = ha.gossip_every.as_secs_f64()
+            * ha.suspect_after as f64;
+        assert_eq!(report.promotion_latency.len(), 1);
+        let lat = report.promotion_latency[0];
+        assert!(lat > 0.9 * window,
+                "seed {seed}: promotion at {lat}s beat the {window}s \
+                 suspicion deadband — false-positive-prone detection");
+        assert!(lat < window + 10.0 * ha.gossip_every.as_secs_f64(),
+                "seed {seed}: promotion took {lat}s, bound is the \
+                 {window}s window plus a few gossip rounds");
+        // the old master's machine re-joined as a worker: the final
+        // geometry is the full P again
+        assert_eq!(report.final_p, cfg.p, "seed {seed}");
+        assert!(report.full_strength,
+                "seed {seed}: the freed slot never re-joined");
+        assert!(!report.stream_digests.is_empty(), "seed {seed}");
+        // determinism: bit-identical double run, promotion latency and
+        // digest map included (SoakReport::PartialEq covers every
+        // field)
+        let again = run_soak(&cfg).unwrap();
+        assert_eq!(report, again,
+                   "seed {seed}: HA soak not deterministic");
+    }
+    assert!(t0.elapsed() < Duration::from_secs(300),
+            "ha suite must stay fast: {:?}", t0.elapsed());
+}
+
+/// Replicated decode streams are bit-identical to the no-kill run:
+/// every client's deduplicated token log digests to exactly what the
+/// twin run (same seed, same workload, same worker churn, master
+/// alive) produces — the failover is invisible in stream content. The
+/// twin also pins the no-false-positive deadband: with gossip armed
+/// and the master merely quiet between beats, nobody promotes.
+#[test]
+fn ha_streams_match_the_no_kill_twin_bitwise() {
+    for &seed in &seeds() {
+        let kill = run_soak(&SoakCfg::ha(seed)).unwrap();
+        let twin = run_soak(&SoakCfg::ha_no_kill(seed)).unwrap();
+        assert_eq!(twin.master_kills, 0);
+        assert_eq!(twin.promotions, 0,
+                   "seed {seed}: a live master was usurped (deadband \
+                    false positive)");
+        assert_eq!(twin.dropped(), 0, "seed {seed}");
+        assert_eq!(kill.decode_streams, twin.decode_streams,
+                   "seed {seed}: workloads diverged");
+        assert_eq!(kill.stream_digests, twin.stream_digests,
+                   "seed {seed}: decode streams are not bit-identical \
+                    across the master failover");
+    }
+}
+
+/// In-flight carryover, pinned deterministically: the master is killed
+/// a few virtual milliseconds after a decode stream is admitted, so at
+/// least one stream is mid-generation at the kill. The stream must
+/// survive — re-admitted from the replicated snapshot or re-sent by
+/// its client — and still digest identically to the untouched twin.
+#[test]
+fn ha_carries_in_flight_decode_streams_across_the_kill() {
+    use prism::sim::{ChurnEvent, ChurnSchedule};
+    let seed = 11;
+    let mut cfg = SoakCfg::ha(seed);
+    // replay the seeded workload to find the 5th decode admission, and
+    // kill the master two ticks into that stream (>= 4 steps at a 2ms
+    // tick, so it cannot have finished)
+    let mut wl = WorkloadGen::new(cfg.seed, cfg.workload.clone());
+    let mut decode_seen = 0;
+    let kill_at = loop {
+        let item = wl.next().expect("workload has decode arrivals");
+        if let Arrival::Decode { .. } = item.kind {
+            decode_seen += 1;
+            if decode_seen == 5 {
+                break item.at + 0.0045;
+            }
+        }
+    };
+    cfg.churn = ChurnSchedule::new(vec![
+        (kill_at, ChurnEvent::KillMaster),
+        (kill_at + 3.0, ChurnEvent::Revive(0)),
+    ]);
+    let report = run_soak(&cfg).unwrap();
+    assert_eq!(report.promotions, 1, "{report:?}");
+    assert_eq!(report.dropped(), 0, "{report:?}");
+    assert!(report.readmitted_streams + report.resubmitted_streams > 0,
+            "a stream admitted 4.5ms before the kill was neither \
+             replicated nor re-sent\n{report:?}");
+    let mut twin = cfg.clone();
+    twin.churn = ChurnSchedule::none();
+    let twin = run_soak(&twin).unwrap();
+    assert_eq!(report.stream_digests, twin.stream_digests,
+               "in-flight streams diverged across the failover");
+}
+
+/// Seeded property test for gossip convergence: six workers gossip
+/// their merged last-seen tables over a round-rotating ring edge plus
+/// one seeded random partner, with seeded per-frame delivery delay, a
+/// seeded mid-run partition, one slow-but-alive worker beating at a
+/// third of the cadence, and one victim dying mid-run. Every live
+/// worker's suspicion set must converge to exactly the dead set within
+/// a bounded round count, with no false positive on the slow peer —
+/// and the whole thing runs on arithmetic timestamps, zero wall
+/// sleeps.
+#[test]
+fn gossip_suspicion_converges_to_exactly_the_dead_set() {
+    let t0 = Instant::now();
+    const W: usize = 6; // workers 0..6, master at id 6
+    const MASTER: usize = W;
+    const ROUND_US: u64 = 100_000;
+    for &seed in &seeds() {
+        let cfg = GossipCfg {
+            every: Duration::from_micros(ROUND_US),
+            // the deadband must strictly exceed the worst compound
+            // staleness a live peer can accrue: the slow peer's
+            // emission gap (3) + the partition (5) + relay spread
+            // through the mesh (<= W-1) + max delivery delay (2) = 15
+            suspect_after: 18,
+        };
+        let window = cfg.window_us();
+        let mut rng = Rng::new(seed ^ 0x6055);
+        let victim = rng.below(W);
+        let slow = (victim + 1 + rng.below(W - 1)) % W;
+        assert_ne!(victim, slow);
+        // seeded partition: a random half of the workers is cut off
+        // from the other half for 5 rounds (shorter than the deadband,
+        // so it must cause no false suspicion)
+        let mut ids: Vec<usize> = (0..W).collect();
+        for i in (1..W).rev() {
+            ids.swap(i, rng.below(i + 1));
+        }
+        let island: BTreeSet<usize> =
+            ids[..W / 2].iter().copied().collect();
+        let died_round = 15u64;
+        let partition = 20u64..25u64;
+        let all: Vec<usize> = (0..W).collect();
+
+        let mut lv: Vec<Liveness> =
+            (0..W).map(|i| Liveness::new(W + 1, i, 0)).collect();
+        // in-flight gossip frames: (deliver_round, to, from, sent_us,
+        // table)
+        let mut wire: Vec<(u64, usize, usize, u64, Vec<(u32, u64)>)> =
+            Vec::new();
+        let mut converged_at: Option<u64> = None;
+        for round in 1..=45u64 {
+            let now = round * ROUND_US;
+            // deliveries due this round (sender-timestamped tables:
+            // delay postpones receipt, it cannot forge freshness)
+            let due: Vec<_> = wire
+                .iter()
+                .filter(|f| f.0 == round)
+                .cloned()
+                .collect();
+            wire.retain(|f| f.0 > round);
+            for (_, to, from, sent, table) in due {
+                if to == victim && round > died_round {
+                    continue; // mail to the dead is dropped
+                }
+                lv[to].observe(from, sent);
+                lv[to].merge(&table);
+            }
+            // the master beats every worker every round while alive
+            for l in lv.iter_mut() {
+                l.observe(MASTER, now);
+            }
+            // emissions: ring edge rotates each round, plus one seeded
+            // random partner — connectivity is deterministic, spread
+            // is still randomized
+            for from in 0..W {
+                if from == victim && round > died_round {
+                    continue; // dead workers emit nothing
+                }
+                if from == slow && round % 3 != 0 {
+                    continue; // slow-but-alive: a third of the cadence
+                }
+                let ring = (from + 1 + (round as usize % (W - 1))) % W;
+                let rand = (from + 1 + rng.below(W - 1)) % W;
+                let table = lv[from].snapshot(now);
+                for to in [ring, rand] {
+                    if to == from {
+                        continue;
+                    }
+                    if partition.contains(&round)
+                        && island.contains(&from) != island.contains(&to)
+                    {
+                        continue; // partitioned: frame lost
+                    }
+                    let delay = rng.below(3) as u64; // 0..=2 rounds
+                    wire.push((round + 1 + delay, to, from, now,
+                               table.clone()));
+                }
+            }
+            // convergence probe: every live worker suspects exactly
+            // the dead set (and never the master, who keeps beating).
+            // Suspicion of the victim starts once its last emission
+            // (round 15) is a full deadband stale, i.e. around round
+            // died + suspect_after, then spreads with the gossip.
+            let done = (0..W).filter(|&i| i != victim).all(|i| {
+                lv[i].suspects(now, window, &all)
+                    == if round > died_round { vec![victim] }
+                       else { vec![] }
+            });
+            if round > died_round && done && converged_at.is_none() {
+                converged_at = Some(round);
+            }
+            for i in (0..W).filter(|&i| i != victim) {
+                assert!(!lv[i].suspects(now, window, &all)
+                             .contains(&slow),
+                        "seed {seed} round {round}: slow-but-alive \
+                         worker {slow} falsely suspected by {i}");
+                assert!(!lv[i].master_dead(MASTER, now, window, &all),
+                        "seed {seed} round {round}: beating master \
+                         declared dead by {i}");
+            }
+        }
+        // bounded convergence: the deadband, plus ring propagation,
+        // plus the max delivery delay
+        let bound = died_round + cfg.suspect_after as u64
+            + (W as u64 - 1) + 2;
+        let at = converged_at.unwrap_or_else(|| {
+            panic!("seed {seed}: suspicion never converged to the \
+                    dead set")
+        });
+        assert!(at <= bound,
+                "seed {seed}: converged at round {at}, bound {bound}");
+    }
+    assert!(t0.elapsed() < Duration::from_secs(5),
+            "gossip property test slept on the wall clock: {:?}",
+            t0.elapsed());
+}
+
+/// Promotion-race property test: however a promotion race unfolds,
+/// exactly one contender wins, deterministically per seed. Standby
+/// selection is a pure function every worker evaluates identically;
+/// the shadow absorbs reordered/replayed `StateSync` frames monotone,
+/// so at promotion time it holds the *maximum* epoch the dead master
+/// ever issued; and the promoted plan leaves the compute set, which
+/// bumps the epoch strictly past that maximum — the workers'
+/// fail-closed `epoch >` validation then makes every stale frame
+/// (wedged old master included) inert.
+#[test]
+fn promotion_race_has_exactly_one_deterministic_winner() {
+    use prism::coordinator::{ClusterView, Mode};
+    for &seed in &seeds() {
+        let mut rng = Rng::new(seed ^ 0x9ACE);
+        for _ in 0..50 {
+            // random live set over 8 workers, random (possibly dead)
+            // standby override
+            let mut live: Vec<usize> =
+                (0..8).filter(|_| rng.below(2) == 1).collect();
+            if live.is_empty() {
+                live.push(rng.below(8));
+            }
+            let override_id = match rng.below(3) {
+                0 => None,
+                _ => Some(rng.below(8)),
+            };
+            // every worker evaluates the same pure function: one
+            // winner, and it is live
+            let winners: BTreeSet<Option<usize>> = (0..8)
+                .map(|_| standby_of(&live, override_id))
+                .collect();
+            assert_eq!(winners.len(), 1, "seed {seed}: split brain");
+            let sb = standby_of(&live, override_id).unwrap();
+            assert!(live.contains(&sb));
+        }
+
+        // the shadow's view of the dead master: absorb a seeded
+        // shuffle of (epoch, seq) frames — duplicates and stale
+        // replays included — and land on the maximum
+        let mut frames: Vec<(u32, u64)> = Vec::new();
+        for e in 0..4u32 {
+            for s in 0..5u64 {
+                frames.push((e, s));
+                if rng.below(3) == 0 {
+                    frames.push((e, s)); // duplicated frame
+                }
+            }
+        }
+        for i in (1..frames.len()).rev() {
+            frames.swap(i, rng.below(i + 1));
+        }
+        let mut shadow = Shadow::default();
+        for &(e, s) in &frames {
+            shadow.absorb(&Msg::StateSync {
+                epoch: e,
+                seq: s,
+                mode: 2,
+                p: 4,
+                l: 4,
+                live: vec![0, 1, 2, 3],
+                next_seq: 0,
+                buckets: vec![],
+                streams: vec![],
+            });
+        }
+        assert_eq!((shadow.epoch, shadow.seq), (3, 4),
+                   "seed {seed}: shadow did not converge to the max");
+
+        // promotion from the shadowed state: the standby leaves the
+        // compute set, so its broadcast epoch is strictly above every
+        // epoch the old master ever issued — the `epoch >` guard
+        // adopts it and rejects every stale frame of the race
+        let live: Vec<usize> =
+            shadow.live.iter().map(|&d| d as usize).collect();
+        let sb = standby_of(&live, None).unwrap();
+        let mode = Mode::Prism { p: 4, l: 4, duplicated: true };
+        let mut view = ClusterView::resume(mode, 32, true,
+                                           shadow.epoch as u64, &live)
+            .unwrap();
+        view.fail_device(sb).unwrap();
+        let promoted = view.epoch();
+        assert_eq!(promoted, shadow.epoch as u64 + 1);
+        for &(e, _) in &frames {
+            assert!((e as u64) < promoted,
+                    "seed {seed}: a stale master frame (epoch {e}) \
+                     would beat the promoted epoch {promoted}");
+        }
+        // and the handover announcement carries the bumped epoch
+        match shadow.to_msg(promoted as u32).unwrap() {
+            Msg::StateSync { epoch, .. } => {
+                assert_eq!(epoch as u64, promoted);
+            }
+            other => panic!("expected StateSync, got {other:?}"),
+        }
+    }
+}
